@@ -1,0 +1,86 @@
+//! Design-space exploration walkthrough (paper §III-B, Tables II/III).
+//!
+//! Prints the full v·N^m candidate space at several (α, S_L) operating
+//! points — every mapping with its cost coefficient, feasibility verdict,
+//! chosen γ and predicted speedup — then the per-variant decisions.
+//!
+//! ```bash
+//! cargo run --release --example dse_explore -- [alpha] [seq_len]
+//! ```
+
+use specedge::dse::{self, PairConfig};
+use specedge::hetero::{LatencyModel, Platform};
+use specedge::models::{Scheme, VariantKey};
+use specedge::runtime::Manifest;
+use std::path::Path;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let alpha: f64 = args.first().and_then(|a| a.parse().ok()).unwrap_or(0.90);
+    let seq: usize = args.get(1).and_then(|a| a.parse().ok()).unwrap_or(63);
+
+    let manifest = Manifest::load(Path::new("artifacts"))?;
+    let lat = LatencyModel::new(Platform::imx95());
+    let pair = PairConfig {
+        target: manifest.model_for(VariantKey::parse("target_w8a8")?)?.clone(),
+        target_scheme: Scheme::W8a8,
+        drafter: manifest.model_for(VariantKey::parse("drafter_fp")?)?.clone(),
+        drafter_scheme: Scheme::Fp,
+    };
+
+    let v = lat.platform.design_variants();
+    println!(
+        "design space: v = {} variants x N^m = 2^2 assignments = {} mappings",
+        v,
+        dse::design_space_size(v, 2, 2)
+    );
+    println!("operating point: alpha = {alpha}, S_L = {seq}\n");
+
+    println!("{:<8} {:<38} {:>8} {:>6} {:>9} {}",
+             "variant", "mapping", "c", "gamma", "speedup", "verdict");
+    let decisions = dse::explore_all(&lat, &pair, alpha, seq);
+    for d in &decisions {
+        for cand in &d.all {
+            let verdict = match cand.infeasible {
+                Some(i) => format!("{i:?}"),
+                None if cand.gamma > 0 => "speculate".to_string(),
+                None => "no gain".to_string(),
+            };
+            println!(
+                "{:<8} {:<38} {:>8} {:>6} {:>9.3} {}",
+                cand.variant,
+                cand.mapping.label(),
+                if cand.c.is_nan() { "-".into() } else { format!("{:.3}", cand.c) },
+                cand.gamma,
+                cand.speedup,
+                verdict
+            );
+        }
+    }
+
+    println!("\nper-variant decisions (Table II/III layout):");
+    for d in &decisions {
+        let b = &d.best;
+        println!(
+            "variant {}: {:<24} heterogeneous={:<5} S={:.2}",
+            b.variant,
+            if b.gamma > 0 { format!("speculate (gamma={})", b.gamma) }
+            else { "no speculation".into() },
+            if b.gamma > 0 { b.mapping.is_heterogeneous().to_string() }
+            else { "n/a".into() },
+            b.speedup
+        );
+    }
+
+    // Bonus: how the decision shifts across the α range (the Fig. 7 story).
+    println!("\nvariant-1 decision vs alpha:");
+    for i in 0..=10 {
+        let a = i as f64 / 10.0;
+        let d = dse::explore_variant(&lat, &pair, 1, a, seq);
+        println!(
+            "  alpha {:.1}: gamma={} S={:.2} [{}]",
+            a, d.best.gamma, d.best.speedup, d.best.mapping.label()
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,182 @@
+//! E2E serving driver (the validation workload recorded in EXPERIMENTS.md).
+//!
+//! Starts the full serving stack (coordinator + engine workers + TCP
+//! front-end), replays the Spec-Bench-shaped translation workload with
+//! Poisson arrivals through a real TCP client, and reports
+//! latency/throughput for three configurations:
+//!
+//!   1. baseline         — autoregressive decode, variant-1 CPU
+//!   2. spec-homo        — speculative sampling, homogeneous 1-core mapping
+//!   3. spec-hetero      — speculative sampling, drafter on the GPU
+//!                         (the paper's deployed configuration)
+//!
+//! ```bash
+//! cargo run --release --example serve_translate -- [n_requests] [rate_hz]
+//! ```
+
+use specedge::config::RunConfig;
+use specedge::coordinator::Coordinator;
+use specedge::hetero::Platform;
+use specedge::runtime::Manifest;
+use specedge::server::{Client, Server};
+use specedge::tokenizer::Tokenizer;
+use specedge::util::json::Json;
+use specedge::util::stats::Summary;
+use specedge::workload::Workload;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+struct RunResult {
+    name: &'static str,
+    wall_s: f64,
+    tokens: u64,
+    sim_p50_ms: f64,
+    sim_p90_ms: f64,
+    real_p50_ms: f64,
+    mean_alpha: f64,
+}
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let n_requests: usize = args.first().and_then(|a| a.parse().ok()).unwrap_or(12);
+    let rate: f64 = args.get(1).and_then(|a| a.parse().ok()).unwrap_or(2.0);
+
+    let manifest = Manifest::load(Path::new("artifacts"))?;
+    let tokenizer = Tokenizer::from_manifest(&manifest.tokenizer_spec)?;
+    let workload = Workload::from_manifest(&manifest, &tokenizer, Some("translate"),
+                                           Some(n_requests))?
+        .with_poisson_arrivals(rate, 42);
+    println!(
+        "workload: {} translate requests, Poisson {rate}/s, avg prompt {:.1} tokens",
+        workload.requests.len(),
+        workload.avg_prompt_len()
+    );
+
+    let configs: Vec<(&'static str, RunConfig)> = vec![
+        ("baseline", {
+            let mut c = base_cfg();
+            c.speculative = false;
+            c
+        }),
+        ("spec-homo", {
+            let mut c = base_cfg();
+            c.heterogeneous = false;
+            c.gamma = Some(1); // homo mapping: cost model says γ small
+            c
+        }),
+        ("spec-hetero", {
+            let mut c = base_cfg();
+            c.gamma = Some(5); // the paper's deployed config
+            c
+        }),
+    ];
+
+    let mut results = Vec::new();
+    for (name, cfg) in configs {
+        println!("\n=== {name} ===");
+        results.push(run_one(name, cfg, &workload)?);
+    }
+
+    println!("\n{:<12} {:>8} {:>9} {:>12} {:>12} {:>12} {:>7}",
+             "config", "wall s", "tokens/s", "sim p50 ms", "sim p90 ms",
+             "real p50 ms", "alpha");
+    let mut baseline_p50 = f64::NAN;
+    for r in &results {
+        if r.name == "baseline" {
+            baseline_p50 = r.sim_p50_ms;
+        }
+        println!(
+            "{:<12} {:>8.1} {:>9.1} {:>12.1} {:>12.1} {:>12.1} {:>7.2}",
+            r.name,
+            r.wall_s,
+            r.tokens as f64 / r.wall_s,
+            r.sim_p50_ms,
+            r.sim_p90_ms,
+            r.real_p50_ms,
+            r.mean_alpha
+        );
+    }
+    for r in &results {
+        if r.name != "baseline" {
+            println!(
+                "{}: simulated per-request speedup vs baseline = {:.2}x",
+                r.name,
+                baseline_p50 / r.sim_p50_ms
+            );
+        }
+    }
+    Ok(())
+}
+
+fn base_cfg() -> RunConfig {
+    let mut c = RunConfig::default();
+    c.artifacts_dir = PathBuf::from("artifacts");
+    c.design_variant = 1;
+    c.heterogeneous = true;
+    c.max_new_tokens = 64;
+    c.workers = 1;
+    c
+}
+
+fn run_one(
+    name: &'static str,
+    cfg: RunConfig,
+    workload: &Workload,
+) -> anyhow::Result<RunResult> {
+    let coord = Arc::new(Coordinator::start(cfg, Platform::imx95())?);
+    let server = Server::start(Arc::clone(&coord), Tokenizer::builtin(), 0)?;
+    let mut client = Client::connect(server.port)?;
+
+    let t0 = std::time::Instant::now();
+    let mut sim = Summary::new();
+    let mut real = Summary::new();
+    let mut alphas = Summary::new();
+    let mut tokens = 0u64;
+    for req in &workload.requests {
+        // Open-loop arrivals: wait until this request's arrival time.
+        let due = req.arrival_s;
+        let now = t0.elapsed().as_secs_f64();
+        if due > now {
+            std::thread::sleep(std::time::Duration::from_secs_f64(due - now));
+        }
+        // Strip BOS and trailing SEP: the server re-encodes the raw text.
+        let text: String = Tokenizer::builtin().decode(&req.prompt);
+        let text = text.trim_end_matches('=').to_string();
+        let reply = client.generate(&text, &req.task)?;
+        anyhow::ensure!(
+            reply.get("ok") == Some(&Json::Bool(true)),
+            "{name}: server error: {reply}"
+        );
+        sim.push(reply.req_f64("sim_ms")?);
+        real.push(reply.req_f64("real_ms")?);
+        tokens += reply.req_usize("tokens")? as u64;
+        if let Some(a) = reply.get("alpha").and_then(Json::as_f64) {
+            if a.is_finite() {
+                alphas.push(a);
+            }
+        }
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+
+    let mut sd = Json::obj();
+    sd.set("cmd", "shutdown".into());
+    let _ = client.call(&sd);
+    server.stop();
+    Arc::try_unwrap(coord).ok().unwrap().shutdown();
+
+    println!(
+        "{name}: {} requests in {:.1}s wall, {:.1} tok/s",
+        workload.requests.len(),
+        wall_s,
+        tokens as f64 / wall_s
+    );
+    Ok(RunResult {
+        name,
+        wall_s,
+        tokens,
+        sim_p50_ms: sim.median(),
+        sim_p90_ms: sim.percentile(90.0),
+        real_p50_ms: real.median(),
+        mean_alpha: if alphas.is_empty() { f64::NAN } else { alphas.mean() },
+    })
+}

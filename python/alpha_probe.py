@@ -1,0 +1,99 @@
+"""Quick α probe with padded, jitted forwards (dev tool, not part of build).
+
+Usage: python alpha_probe.py [n_samples] [qmax_target] [qmax_drafter]
+"""
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import data as D
+from compile import model as M
+from compile import quantize as Q
+from compile import tokenizer as tok
+from compile import train as T
+
+PAD_TO = 128
+
+
+def quantize_params_bits(params, qmax):
+    out = {"embed": params["embed"], "head": params["head"],
+           "final_norm": params["final_norm"], "layers": []}
+    for layer in params["layers"]:
+        ql = {}
+        for name, w in layer.items():
+            if name in M.LINEARS:
+                w = np.asarray(w, np.float32)
+                amax = np.max(np.abs(w), axis=0)
+                scale = np.where(amax > 0, amax / qmax, 1.0).astype(np.float32)
+                w8 = np.clip(np.round(w / scale[None, :]), -qmax, qmax).astype(np.int8)
+                ql[name] = {"w8": jnp.asarray(w8), "scale": jnp.asarray(scale)}
+            else:
+                ql[name] = w
+        out["layers"].append(ql)
+    return out
+
+
+def make_stepper(cfg, params, **kw):
+    @jax.jit
+    def step(toks, pos):
+        logits = M.forward(cfg, params, toks, use_pallas=False, **kw)
+        return jnp.argmax(logits[pos])
+    return step
+
+
+def alpha_for(sample, tstep, dstep, max_new=40):
+    ids = sample.prompt_ids()
+    toks = np.zeros(PAD_TO, np.int32)
+    toks[:len(ids)] = ids
+    pos = len(ids) - 1
+    agree = tot = 0
+    t = jnp.asarray(toks)
+    for _ in range(max_new):
+        nt = int(tstep(t, pos))
+        nd = int(dstep(t, pos))
+        agree += int(nt == nd)
+        tot += 1
+        pos += 1
+        if nt == tok.EOS_ID or pos >= PAD_TO - 1:
+            break
+        t = t.at[pos].set(nt)
+    return agree / tot
+
+
+def main():
+    n = int(sys.argv[1]) if len(sys.argv) > 1 else 12
+    qt = int(sys.argv[2]) if len(sys.argv) > 2 else 7
+    qd = int(sys.argv[3]) if len(sys.argv) > 3 else 7
+    tp = T.load_checkpoint("../artifacts/target_ckpt.npz", M.TARGET)
+    dp = T.load_checkpoint("../artifacts/drafter_ckpt.npz", M.DRAFTER)
+    lex = D.build_lexicon()
+    ev = D.eval_set(lex)
+    tr = [s for s in ev if s.task == "translate"][:n]
+    calib = [s.full_ids()[:128] + [0] * (128 - len(s.full_ids()[:128])) for s in ev[:8]]
+    t_scales = Q.calibrate_act_scales(M.TARGET, tp, [calib])
+    d_scales = Q.calibrate_act_scales(M.DRAFTER, dp, [calib])
+    tq = quantize_params_bits(tp, qt)
+    dq = quantize_params_bits(dp, qd)
+
+    configs = [
+        ("fp/fp", make_stepper(M.TARGET, tp), make_stepper(M.DRAFTER, dp)),
+        (f"semi qmax{qt} T",
+         make_stepper(M.TARGET, tq, quant=True, act_scales=t_scales),
+         make_stepper(M.DRAFTER, dp)),
+        (f"full qmax{qt}/{qd}",
+         make_stepper(M.TARGET, tq, quant=True, act_scales=t_scales),
+         make_stepper(M.DRAFTER, dq, quant=True, act_scales=d_scales)),
+    ]
+    for name, ts, ds in configs:
+        t0 = time.time()
+        vals = [alpha_for(s, ts, ds) for s in tr]
+        print(f"{name}: median={np.median(vals):.2f} p90={np.percentile(vals,90):.2f} "
+              f"({time.time()-t0:.0f}s) vals=" + " ".join(f"{v:.2f}" for v in vals),
+              flush=True)
+
+
+if __name__ == "__main__":
+    main()

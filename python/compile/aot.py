@@ -1,0 +1,248 @@
+"""AOT build orchestrator: train → quantize → lower → artifacts/.
+
+Runs ONCE at build time (``make artifacts``); the Rust runtime is
+self-contained afterwards. Emits:
+
+* ``artifacts/<role>_<scheme>[_ref]_b<batch>_s<bucket>.hlo.txt`` — one HLO
+  TEXT module per (model variant × kernel path × batch × seq bucket);
+* ``artifacts/mono_g<γ>_s<bucket>.hlo.txt``   — fused monolithic spec-step
+  graphs (semi-quantized pair, the paper's deployment point), γ = 1..5;
+* ``artifacts/weights_<role>_<scheme>.bin``   — flat binary weight files
+  (f32 / int8 tensors in manifest order, custom SEWB format);
+* ``artifacts/manifest.json``                 — everything the Rust side
+  needs: tokenizer spec, model configs, artifact & weights index, the fixed
+  480-sample eval set, act scales, training/quantization metadata.
+
+HLO *text* is the interchange format (NOT ``.serialize()``): jax ≥ 0.5 emits
+protos with 64-bit instruction ids that xla_extension 0.5.1 rejects; the
+text parser reassigns ids. See /opt/xla-example/README.md.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import struct
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import data as D
+from . import model as M
+from . import monolithic as MONO
+from . import quantize as Q
+from . import tokenizer as tok
+from . import train as T
+
+SEQ_BUCKETS = [16, 32, 48, 64, 96, 128]
+BATCH_SIZES = [1, 4]
+MONO_GAMMAS = [1, 2, 3, 4, 5]
+MONO_BUCKET = 128
+
+TARGET_STEPS = int(os.environ.get("SPECEDGE_TARGET_STEPS", "1200"))
+DRAFTER_STEPS = int(os.environ.get("SPECEDGE_DRAFTER_STEPS", "800"))
+TRAIN_BATCH = 16
+QMAX = int(os.environ.get("SPECEDGE_QMAX", "0")) or None  # None -> quantize.DEFAULT_QMAX
+
+DTYPE_TAGS = {np.dtype(np.float32): 0, np.dtype(np.int8): 1, np.dtype(np.int32): 2}
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def write_weights_bin(path: str, flat: list) -> list:
+    """SEWB v1: magic, count, then per tensor: name, dtype tag, dims, bytes.
+    Everything little-endian. Returns the manifest index entries."""
+    index = []
+    with open(path, "wb") as f:
+        f.write(b"SEWB")
+        f.write(struct.pack("<II", 1, len(flat)))
+        for name, arr in flat:
+            a = np.ascontiguousarray(np.asarray(arr))
+            tag = DTYPE_TAGS[a.dtype]
+            nb = name.encode()
+            f.write(struct.pack("<H", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<BB", tag, a.ndim))
+            for d in a.shape:
+                f.write(struct.pack("<I", d))
+            raw = a.tobytes()
+            f.write(struct.pack("<Q", len(raw)))
+            f.write(raw)
+            index.append({"name": name, "dtype": ["f32", "i8", "i32"][tag],
+                          "shape": list(a.shape)})
+    return index
+
+
+def lower_forward(cfg, params, bucket: int, batch: int, use_pallas: bool,
+                  quant: bool, act_scales):
+    """Lower one forward pass with weights as runtime parameters."""
+    flat = M.flatten_params(params)
+    names = [n for n, _ in flat]
+
+    def wrapped(*args):
+        vals, tokens = args[:-1], args[-1]
+        p = M.unflatten_params(cfg, dict(zip(names, vals)))
+        kw = dict(use_pallas=use_pallas, quant=quant, act_scales=act_scales)
+        if batch == 1:
+            return M.forward(cfg, p, tokens, **kw)
+        return M.forward_batch(cfg, p, tokens, **kw)
+
+    tok_shape = (bucket,) if batch == 1 else (batch, bucket)
+    example = [jax.ShapeDtypeStruct(v.shape, v.dtype) for _, v in flat]
+    example.append(jax.ShapeDtypeStruct(tok_shape, jnp.int32))
+    return jax.jit(wrapped).lower(*example), names
+
+
+def get_or_train(out_dir: str):
+    """Train (or reuse cached checkpoints for) the target + drafter pair."""
+    tpath = os.path.join(out_dir, "target_ckpt.npz")
+    dpath = os.path.join(out_dir, "drafter_ckpt.npz")
+    meta = {}
+    if os.path.exists(tpath):
+        print(f"[aot] reusing cached target checkpoint {tpath}")
+        tparams = T.load_checkpoint(tpath, M.TARGET)
+    else:
+        tparams, hist = T.train_model(M.TARGET, TARGET_STEPS, TRAIN_BATCH, 3e-3)
+        T.save_checkpoint(tpath, tparams)
+        meta["target_final_loss"] = hist[-1]
+    if os.path.exists(dpath):
+        print(f"[aot] reusing cached drafter checkpoint {dpath}")
+        dparams = T.load_checkpoint(dpath, M.DRAFTER)
+    else:
+        dparams, hist = T.train_model(
+            M.DRAFTER, DRAFTER_STEPS, TRAIN_BATCH, 3e-3,
+            distill_from=(M.TARGET, tparams), distill_weight=0.5)
+        T.save_checkpoint(dpath, dparams)
+        meta["drafter_final_loss"] = hist[-1]
+    return tparams, dparams, meta
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--fast", action="store_true",
+                    help="tiny build for CI: fewer buckets/gammas")
+    args = ap.parse_args()
+    out = os.path.abspath(args.out)
+    os.makedirs(out, exist_ok=True)
+    t_start = time.time()
+
+    buckets = [16, 64, 128] if args.fast else SEQ_BUCKETS
+    gammas = [2] if args.fast else MONO_GAMMAS
+
+    # ---- 1. models ------------------------------------------------------
+    tparams, dparams, train_meta = get_or_train(out)
+
+    # ---- 2. quantization -------------------------------------------------
+    lex = D.build_lexicon()
+    ev = D.eval_set(lex)
+    calib = [s.full_ids()[:T.MAXLEN] for s in ev[:16]]
+    calib = [ids + [tok.PAD_ID] * (T.MAXLEN - len(ids)) for ids in calib]
+    print("[aot] calibrating activation scales ...")
+    t_scales = Q.calibrate_act_scales(M.TARGET, tparams, [calib[:8]])
+    d_scales = Q.calibrate_act_scales(M.DRAFTER, dparams, [calib[:8]])
+    qmax = QMAX or Q.DEFAULT_QMAX
+    tq = Q.quantize_params(tparams, qmax)
+    dq = Q.quantize_params(dparams, qmax)
+    qerr_t = Q.quantization_error(tparams, tq)
+    qerr_d = Q.quantization_error(dparams, dq)
+    print(f"[aot] weight quant rel-err: target {qerr_t:.4f} drafter {qerr_d:.4f}")
+
+    # (role, scheme) -> (cfg, params, quant?, act_scales)
+    variants = {
+        ("target", "fp"): (M.TARGET, tparams, False, None),
+        ("target", "w8a8"): (M.TARGET, tq, True, t_scales),
+        ("drafter", "fp"): (M.DRAFTER, dparams, False, None),
+        ("drafter", "w8a8"): (M.DRAFTER, dq, True, d_scales),
+    }
+
+    manifest = {
+        "version": 1,
+        "created_unix": int(time.time()),
+        "tokenizer": tok.SPEC.to_json(),
+        "seq_buckets": buckets,
+        "batch_sizes": BATCH_SIZES,
+        "models": {"target": M.TARGET.to_json(), "drafter": M.DRAFTER.to_json()},
+        "train": train_meta,
+        "quant": {"qmax": qmax, "target_rel_err": qerr_t, "drafter_rel_err": qerr_d,
+                  "act_scales": {"target": t_scales, "drafter": d_scales}},
+        "variants": {},
+        "monolithic": [],
+        "eval_samples": [
+            {"task": s.task, "prompt": s.prompt, "completion": s.completion}
+            for s in ev
+        ],
+    }
+
+    # ---- 3. weights ------------------------------------------------------
+    for (role, scheme), (cfg, params, quant, scales) in variants.items():
+        key = f"{role}_{scheme}"
+        wpath = os.path.join(out, f"weights_{key}.bin")
+        index = write_weights_bin(wpath, M.flatten_params(params))
+        manifest["variants"][key] = {
+            "role": role, "scheme": scheme, "model": cfg.name,
+            "weights": os.path.basename(wpath), "tensors": index,
+            "quant": quant, "artifacts": [],
+        }
+        print(f"[aot] wrote {wpath}")
+
+    # ---- 4. forward artifacts ---------------------------------------------
+    for (role, scheme), (cfg, params, quant, scales) in variants.items():
+        key = f"{role}_{scheme}"
+        for kernel in ("pallas", "ref"):
+            use_pallas = kernel == "pallas"
+            for batch in BATCH_SIZES:
+                if use_pallas and batch != 1:
+                    continue  # Pallas path is the batch-1 latency path
+                for bucket in buckets:
+                    t0 = time.time()
+                    lowered, _names = lower_forward(
+                        cfg, params, bucket, batch, use_pallas, quant, scales)
+                    text = to_hlo_text(lowered)
+                    suffix = "" if use_pallas else "_ref"
+                    fname = f"{key}{suffix}_b{batch}_s{bucket}.hlo.txt"
+                    with open(os.path.join(out, fname), "w") as f:
+                        f.write(text)
+                    manifest["variants"][key]["artifacts"].append({
+                        "file": fname, "kernel": kernel, "batch": batch,
+                        "seq": bucket,
+                    })
+                    print(f"[aot] {fname}  ({time.time() - t0:.1f}s, "
+                          f"{len(text) // 1024} KiB)")
+
+    # ---- 5. monolithic spec-step artifacts (semi pair: fp drafter + w8a8
+    #         target — the paper's deployed configuration) ------------------
+    for gamma in gammas:
+        t0 = time.time()
+        lowered, dn, tn = MONO.lower_spec_step(
+            M.DRAFTER, M.TARGET, gamma, MONO_BUCKET, dparams, tq,
+            use_pallas=True, draft_quant=False, target_quant=True,
+            draft_act_scales=None, target_act_scales=t_scales)
+        text = to_hlo_text(lowered)
+        fname = f"mono_g{gamma}_s{MONO_BUCKET}.hlo.txt"
+        with open(os.path.join(out, fname), "w") as f:
+            f.write(text)
+        manifest["monolithic"].append({
+            "file": fname, "gamma": gamma, "seq": MONO_BUCKET,
+            "drafter": "drafter_fp", "target": "target_w8a8",
+        })
+        print(f"[aot] {fname}  ({time.time() - t0:.1f}s, {len(text) // 1024} KiB)")
+
+    # ---- 6. manifest -------------------------------------------------------
+    with open(os.path.join(out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] done in {time.time() - t_start:.0f}s -> {out}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,109 @@
+"""L1 Pallas kernel: tiled causal attention with online softmax.
+
+TPU rethink of the attention hot spot (the paper targets a Mali GPU with
+workgroup tiling; on TPU the schedule is expressed with BlockSpecs):
+
+* the grid walks (head, q-block, k-block); q/k/v tiles are staged
+  HBM -> VMEM by the BlockSpec pipeline (the threadblock analogue);
+* softmax is *online*: a running row-max ``m`` and normalizer ``l`` are
+  carried across k-blocks, so scores never materialize at [S, S] in VMEM —
+  only [bq, bk] tiles;
+* causal masking skips whole k-blocks above the diagonal (their programs
+  early-out), and masks within the diagonal block;
+* the unnormalized accumulator lives in the output ref and is divided by
+  ``l`` once, in the final k-block — a single pass over HBM.
+
+VMEM per program instance (bq=bk=32, d<=32, f32):
+q/k/v tiles + scores + m/l ~ (3*32*32 + 32*32 + 2*32)*4B ~ 16.5 KiB.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BQ, BKV = 32, 32
+_NEG_INF = float(-1e30)
+
+
+def _attn_kernel(scale, bq, bkv, causal, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref):
+    qi, kj = pl.program_id(1), pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    # Causal: k-blocks strictly above the diagonal contribute nothing.
+    diag_ok = (not causal) or (kj * bkv <= qi * bq + bq - 1)
+
+    @pl.when(diag_ok)
+    def _block():
+        q = q_ref[0]                    # [bq, d]
+        k = k_ref[0]                    # [bkv, d]
+        v = v_ref[0]                    # [bkv, d]
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        if causal:
+            rows = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 0)
+            cols = kj * bkv + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 1)
+            s = jnp.where(rows >= cols, s, _NEG_INF)
+
+        m_prev = m_ref[0]               # [bq]
+        l_prev = l_ref[0]               # [bq]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = l_prev * alpha + jnp.sum(p, axis=-1)
+        o_ref[0] = o_ref[0] * alpha[:, None] + jnp.dot(
+            p, v, preferred_element_type=jnp.float32
+        )
+        m_ref[0] = m_new
+        l_ref[0] = l_new
+
+    # Final k-block: normalize the accumulator once.
+    @pl.when(kj == nk - 1)
+    def _final():
+        o_ref[0] = o_ref[0] / l_ref[0][:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "bq", "bkv"))
+def attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+              causal: bool = True, bq: int = BQ, bkv: int = BKV) -> jnp.ndarray:
+    """Multi-head attention; q, k, v: f32 [H, S, D] -> [H, S, D]."""
+    h, s, d = q.shape
+    assert k.shape == (h, s, d) and v.shape == (h, s, d)
+    bq = min(bq, s)
+    while s % bq:
+        bq -= 1
+    bkv = min(bkv, s)
+    while s % bkv:
+        bkv -= 1
+    grid = (h, s // bq, s // bkv)
+    scale = float(1.0 / float(d) ** 0.5)
+    kernel = functools.partial(_attn_kernel, scale, bq, bkv, causal)
+    out, _m, _l = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda hh, i, j: (hh, i, 0)),
+            pl.BlockSpec((1, bkv, d), lambda hh, i, j: (hh, j, 0)),
+            pl.BlockSpec((1, bkv, d), lambda hh, i, j: (hh, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bq, d), lambda hh, i, j: (hh, i, 0)),
+            pl.BlockSpec((1, bq), lambda hh, i, j: (hh, i)),
+            pl.BlockSpec((1, bq), lambda hh, i, j: (hh, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((h, s, d), jnp.float32),
+            jax.ShapeDtypeStruct((h, s), jnp.float32),
+            jax.ShapeDtypeStruct((h, s), jnp.float32),
+        ],
+        interpret=True,
+    )(q, k, v)
+    return out

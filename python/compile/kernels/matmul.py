@@ -1,0 +1,68 @@
+"""L1 Pallas kernel: tiled f32 matmul.
+
+TPU mapping of the paper's linear-layer hot spot. The paper's workload is the
+short-sequence regime (S_L << d, §II-A) where the *linear* layers dominate —
+so the GEMM tiles are what must keep the MXU fed. BlockSpecs stage
+(bm x bk) x (bk x bn) tiles through VMEM; the k-grid dimension accumulates
+into the output tile (revisiting semantics), which is the Pallas analogue of
+a k-loop with a VMEM-resident accumulator.
+
+Kernels are lowered with ``interpret=True``: the CPU PJRT client cannot run
+Mosaic custom-calls (see /opt/xla-example/README.md); structure — tiling,
+footprint, accumulation order — is what carries over to real TPU.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile sizes. Chosen so every model dimension in this repo
+# (d in {96, 128}, ffn in {256, 352}, vocab 48, seq buckets multiples of 16)
+# is tileable, while keeping the f32 VMEM footprint per program instance
+# (bm*bk + bk*bn + bm*bn) * 4B ~ 24 KiB — far under the ~16 MiB VMEM budget,
+# leaving room for double-buffering on real hardware.
+BM, BK, BN = 16, 32, 16
+
+
+def _mm_kernel(x_ref, w_ref, o_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _pick(block: int, dim: int) -> int:
+    """Largest tile <= block that divides dim (dims here are multiples of 8)."""
+    b = min(block, dim)
+    while dim % b:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "bn"))
+def matmul(x: jnp.ndarray, w: jnp.ndarray, bm: int = BM, bk: int = BK,
+           bn: int = BN) -> jnp.ndarray:
+    """f32 GEMM [S, K] @ [K, N] -> [S, N] as a tiled Pallas kernel."""
+    s, k = x.shape
+    k2, n = w.shape
+    assert k == k2, (x.shape, w.shape)
+    bm, bk, bn = _pick(bm, s), _pick(bk, k), _pick(bn, n)
+    grid = (s // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        _mm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((s, n), jnp.float32),
+        interpret=True,
+    )(x, w)

@@ -1,0 +1,66 @@
+"""Pure-jnp reference oracles for every Pallas kernel.
+
+These are the correctness ground truth: ``python/tests/test_kernels.py``
+sweeps shapes/dtypes with hypothesis and asserts the Pallas kernels
+(interpret=True) match these to tight tolerances. The L2 model can be built
+from either implementation (``use_pallas`` flag), which is also how training
+stays fast (pure-jnp fwd/bwd) while the AOT artifacts exercise the kernels.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def matmul_ref(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """f32 GEMM: [S, K] @ [K, N] -> [S, N]."""
+    return jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+
+def quant_matmul_ref(x: jnp.ndarray, w8: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    """w8a8-style GEMM with per-output-channel weight scales.
+
+    x: f32 [S, K] (already activation-fake-quantized by the caller),
+    w8: int8 [K, N], scale: f32 [N]. Dequantization happens in f32 before the
+    contraction — this mirrors the Mali behaviour the paper's footnote 3
+    describes (INT8 promoted to wider arithmetic) and the TPU mapping where
+    the MXU consumes bf16/f32 tiles.
+    """
+    return jnp.dot(x, w8.astype(jnp.float32) * scale[None, :],
+                   preferred_element_type=jnp.float32)
+
+
+def rmsnorm_ref(x: jnp.ndarray, gamma: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    """RMSNorm over the last axis: x * gamma / rms(x)."""
+    ms = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * (gamma / jnp.sqrt(ms + eps))
+
+
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                  causal: bool = True) -> jnp.ndarray:
+    """Multi-head scaled-dot-product attention.
+
+    q, k, v: f32 [H, S, D]; returns f32 [H, S, D]. Causal mask by default
+    (the models are decoder-only and run without a KV cache, per the paper's
+    Table I setup).
+    """
+    h, s, d = q.shape
+    scores = jnp.einsum("hqd,hkd->hqk", q, k) / jnp.sqrt(jnp.float32(d))
+    if causal:
+        mask = jnp.tril(jnp.ones((s, s), dtype=bool))
+        scores = jnp.where(mask[None, :, :], scores, jnp.float32(-1e30))
+    probs = jnp.exp(scores - jnp.max(scores, axis=-1, keepdims=True))
+    probs = probs / jnp.sum(probs, axis=-1, keepdims=True)
+    return jnp.einsum("hqk,hkd->hqd", probs, v)
+
+
+def silu(x: jnp.ndarray) -> jnp.ndarray:
+    return x * (1.0 / (1.0 + jnp.exp(-x)))
+
+
+def swiglu_ref(x: jnp.ndarray, w_gate: jnp.ndarray, w_up: jnp.ndarray,
+               w_down: jnp.ndarray) -> jnp.ndarray:
+    """SwiGLU MLP: silu(x @ w_gate) * (x @ w_up) @ w_down."""
+    g = matmul_ref(x, w_gate)
+    u = matmul_ref(x, w_up)
+    return matmul_ref(silu(g) * u, w_down)

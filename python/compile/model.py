@@ -1,0 +1,230 @@
+"""L2: Llama-style decoder-only transformer (target + drafter).
+
+The paper uses Llama 3.2 3B (target) and 1B (drafter); we substitute a
+structurally identical tiny pair (RMSNorm + RoPE + causal MHA + SwiGLU,
+pre-norm, untied head) trained on the synthetic corpus — see DESIGN.md §1.
+The drafter is the same architecture at roughly 1/3 the FLOPs, mirroring the
+paper's draft/target cost ratio.
+
+The forward pass is written once and can run in three modes:
+
+* ``use_pallas=True``  — linear/norm/attention hot spots go through the L1
+  Pallas kernels (this is what gets AOT-lowered into the HLO artifacts);
+* ``use_pallas=False`` — pure-jnp reference path (training, and the oracle
+  the Pallas path is tested against);
+* ``quant=True``       — static w8a8: int8 weights (per-output-channel
+  scales) through the quant_matmul kernel, activations fake-quantized with
+  static scales calibrated offline (compile/quantize.py).
+
+No KV cache (paper Table I): each call re-encodes the whole (padded)
+sequence; causal masking makes PAD positions inert, so the Rust runtime pads
+to a seq bucket and reads logits at live positions only.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref
+from .kernels.attention import attention as attention_pl
+from .kernels.matmul import matmul as matmul_pl
+from .kernels.quant_matmul import quant_matmul as quant_matmul_pl
+from .kernels.rmsnorm import rmsnorm as rmsnorm_pl
+from .tokenizer import VOCAB_SIZE
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    ffn_dim: int
+    vocab: int = VOCAB_SIZE
+    rope_theta: float = 10000.0
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    def param_count(self) -> int:
+        d, f, v, L = self.d_model, self.ffn_dim, self.vocab, self.n_layers
+        per_layer = 4 * d * d + 3 * d * f + 2 * d  # attn + mlp + 2 norms
+        return v * d + L * per_layer + d + d * v   # embed + layers + norm + head
+
+    def flops_per_token(self, seq_len: int) -> float:
+        """Forward FLOPs per *sequence* (all positions), the quantity the
+        analytic PU latency model consumes. 2*MACs convention."""
+        d, f, L, v = self.d_model, self.ffn_dim, self.n_layers, self.vocab
+        s = seq_len
+        linear = 2 * s * (4 * d * d + 3 * d * f) * L
+        attn = 2 * s * s * d * 2 * L  # QK^T and PV, both ~ s^2 * d per layer
+        head = 2 * s * d * v
+        return float(linear + attn + head)
+
+    def to_json(self) -> dict:
+        return {
+            "name": self.name,
+            "n_layers": self.n_layers,
+            "d_model": self.d_model,
+            "n_heads": self.n_heads,
+            "ffn_dim": self.ffn_dim,
+            "vocab": self.vocab,
+            "rope_theta": self.rope_theta,
+            "param_count": self.param_count(),
+        }
+
+
+# The pair mirrors Llama 3.2 3B/1B structurally; FLOP ratio ~ 3.2x.
+TARGET = ModelConfig("target", n_layers=4, d_model=128, n_heads=4, ffn_dim=352)
+DRAFTER = ModelConfig("drafter", n_layers=2, d_model=96, n_heads=4, ffn_dim=256)
+CONFIGS = {"target": TARGET, "drafter": DRAFTER}
+
+# Linear layer names inside one transformer block, in application order.
+LINEARS = ("wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down")
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    """Scaled-normal init; returns a nested dict pytree."""
+    k_embed, k_head, *k_layers = jax.random.split(key, cfg.n_layers + 2)
+    d, f, v = cfg.d_model, cfg.ffn_dim, cfg.vocab
+
+    def dense(k, shape):
+        fan_in = shape[0]
+        return jax.random.normal(k, shape, jnp.float32) / jnp.sqrt(jnp.float32(fan_in))
+
+    params = {
+        "embed": jax.random.normal(k_embed, (v, d), jnp.float32) * 0.02,
+        "head": dense(k_head, (d, v)),
+        "final_norm": jnp.ones((d,), jnp.float32),
+        "layers": [],
+    }
+    for kl in k_layers:
+        ks = jax.random.split(kl, len(LINEARS))
+        shapes = {
+            "wq": (d, d), "wk": (d, d), "wv": (d, d), "wo": (d, d),
+            "w_gate": (d, f), "w_up": (d, f), "w_down": (f, d),
+        }
+        layer = {n: dense(k, shapes[n]) for n, k in zip(LINEARS, ks)}
+        layer["attn_norm"] = jnp.ones((d,), jnp.float32)
+        layer["mlp_norm"] = jnp.ones((d,), jnp.float32)
+        params["layers"].append(layer)
+    return params
+
+
+def flatten_params(params: dict) -> list:
+    """Deterministic (name, array) flattening — the order the manifest
+    records and the Rust runtime feeds weights in."""
+    out = [("embed", params["embed"]), ("head", params["head"]),
+           ("final_norm", params["final_norm"])]
+    for i, layer in enumerate(params["layers"]):
+        for name in sorted(layer.keys()):
+            entry = layer[name]
+            if isinstance(entry, dict):  # quantized linear: w8 + scale
+                out.append((f"layers.{i}.{name}.w8", entry["w8"]))
+                out.append((f"layers.{i}.{name}.scale", entry["scale"]))
+            else:
+                out.append((f"layers.{i}.{name}", entry))
+    return out
+
+
+def unflatten_params(cfg: ModelConfig, named: dict) -> dict:
+    """Inverse of flatten_params (accepts a {name: array} mapping)."""
+    params = {"embed": named["embed"], "head": named["head"],
+              "final_norm": named["final_norm"], "layers": []}
+    for i in range(cfg.n_layers):
+        layer = {}
+        for name in LINEARS + ("attn_norm", "mlp_norm"):
+            k = f"layers.{i}.{name}"
+            if k in named:
+                layer[name] = named[k]
+            else:
+                layer[name] = {"w8": named[k + ".w8"], "scale": named[k + ".scale"]}
+        params["layers"].append(layer)
+    return params
+
+
+def _fake_quant_act(x: jnp.ndarray, scale: float) -> jnp.ndarray:
+    """Static per-tensor activation QDQ (the a8 half of w8a8)."""
+    q = jnp.clip(jnp.round(x / scale), -127.0, 127.0)
+    return q * scale
+
+
+def _rope(x: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """Rotary embedding; x: [H, S, D] with even D."""
+    h, s, d = x.shape
+    half = d // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    angles = jnp.arange(s, dtype=jnp.float32)[:, None] * freqs[None, :]  # [S, half]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate(
+        [x1 * cos[None] - x2 * sin[None], x2 * cos[None] + x1 * sin[None]], axis=-1
+    )
+
+
+def _linear(x, w, name, quant, act_scales, use_pallas, recorder=None, key=None):
+    if recorder is not None:
+        # Calibration mode (quantize.py): record the max |activation| feeding
+        # this linear; the static a8 scale is derived from it offline.
+        k = key or name
+        recorder[k] = max(recorder.get(k, 0.0), float(jnp.max(jnp.abs(x))))
+    if quant:
+        x = _fake_quant_act(x, act_scales[name])
+        w8, sc = w["w8"], w["scale"]
+        if use_pallas:
+            return quant_matmul_pl(x, w8, sc)
+        return ref.quant_matmul_ref(x, w8, sc)
+    if use_pallas:
+        return matmul_pl(x, w)
+    return ref.matmul_ref(x, w)
+
+
+def _norm(x, gamma, use_pallas):
+    return rmsnorm_pl(x, gamma) if use_pallas else ref.rmsnorm_ref(x, gamma)
+
+
+def forward(cfg: ModelConfig, params: dict, tokens: jnp.ndarray,
+            use_pallas: bool = True, quant: bool = False,
+            act_scales: dict = None, recorder: dict = None) -> jnp.ndarray:
+    """Full forward pass: tokens int32 [S] -> logits f32 [S, V]."""
+    h, hd = cfg.n_heads, cfg.head_dim
+    x = params["embed"][tokens]  # [S, d]
+    s = x.shape[0]
+    for li, layer in enumerate(params["layers"]):
+        sc = {k: act_scales[f"layers.{li}.{k}"] for k in LINEARS} if quant else None
+        # --- attention block (pre-norm) ---
+        xn = _norm(x, layer["attn_norm"], use_pallas)
+        q = _linear(xn, layer["wq"], "wq", quant, sc, use_pallas, recorder, f"layers.{li}.wq")
+        k = _linear(xn, layer["wk"], "wk", quant, sc, use_pallas, recorder, f"layers.{li}.wk")
+        v = _linear(xn, layer["wv"], "wv", quant, sc, use_pallas, recorder, f"layers.{li}.wv")
+        q = _rope(q.reshape(s, h, hd).transpose(1, 0, 2), cfg.rope_theta)
+        k = _rope(k.reshape(s, h, hd).transpose(1, 0, 2), cfg.rope_theta)
+        v = v.reshape(s, h, hd).transpose(1, 0, 2)
+        if use_pallas:
+            attn = attention_pl(q, k, v, causal=True)
+        else:
+            attn = ref.attention_ref(q, k, v, causal=True)
+        attn = attn.transpose(1, 0, 2).reshape(s, cfg.d_model)
+        x = x + _linear(attn, layer["wo"], "wo", quant, sc, use_pallas, recorder, f"layers.{li}.wo")
+        # --- MLP block (pre-norm, SwiGLU) ---
+        xn = _norm(x, layer["mlp_norm"], use_pallas)
+        g = _linear(xn, layer["w_gate"], "w_gate", quant, sc, use_pallas, recorder, f"layers.{li}.w_gate")
+        u = _linear(xn, layer["w_up"], "w_up", quant, sc, use_pallas, recorder, f"layers.{li}.w_up")
+        act = ref.silu(g) * u
+        x = x + _linear(act, layer["w_down"], "w_down", quant, sc, use_pallas, recorder, f"layers.{li}.w_down")
+    x = _norm(x, params["final_norm"], use_pallas)
+    # LM head stays fp32 in all variants (as in INC's default w8a8 recipes).
+    if use_pallas:
+        return matmul_pl(x, params["head"])
+    return ref.matmul_ref(x, params["head"])
+
+
+def forward_batch(cfg: ModelConfig, params: dict, tokens: jnp.ndarray,
+                  **kw) -> jnp.ndarray:
+    """Batched forward: tokens int32 [B, S] -> logits f32 [B, S, V]."""
+    return jax.vmap(lambda t: forward(cfg, params, t, **kw))(tokens)

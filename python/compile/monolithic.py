@@ -1,0 +1,101 @@
+"""Monolithic speculative-sampling step as a single fused graph (paper Fig. 3).
+
+The paper contrasts two compiler abstractions:
+
+* **modular** (their deployed path, Fig. 4): drafter and target compiled as
+  separate modules, the draft/verify control flow living in the serving
+  runtime, paying a runtime-API boundary cost per call;
+* **monolithic** (Fig. 3): one module containing drafter, target *and* the
+  speculation control flow, which IREE 3.6 could not deploy with mixed
+  device affinities (§IV-D) — they measured a 4% deviation they attribute
+  partly to the modular boundary overhead.
+
+We implement both. This file is the monolithic one: a single jitted function
+per draft length γ that (1) greedily drafts γ tokens with the drafter inside
+a ``fori_loop``, (2) runs one target verification pass, and (3) computes the
+accepted-token count in-graph. One HLO artifact per γ; the Rust side calls
+it once per speculation round instead of γ+1 times.
+
+Positions/lengths are runtime scalars so one artifact serves any prompt
+length up to the bucket size.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from . import model as M
+
+
+def spec_step_fn(draft_cfg: M.ModelConfig, target_cfg: M.ModelConfig,
+                 gamma: int, use_pallas: bool = True,
+                 draft_quant: bool = False, target_quant: bool = False,
+                 draft_act_scales: dict = None, target_act_scales: dict = None):
+    """Returns f(draft_params, target_params, tokens[S], cur_len) ->
+    (n_accepted i32, out_tokens i32[gamma+1], drafted i32[gamma]).
+
+    ``tokens`` is the PAD-padded sequence, ``cur_len`` the live length.
+    ``out_tokens`` are the target's greedy tokens at positions
+    cur_len-1 .. cur_len+gamma-1 — i.e. the corrected continuation: the Rust
+    coordinator appends out_tokens[:n_accepted+1] (speculative sampling's
+    "always at least one target token" guarantee).
+    """
+
+    def fn(draft_params, target_params, tokens, cur_len):
+        def draft_body(i, toks):
+            logits = M.forward(draft_cfg, draft_params, toks,
+                               use_pallas=use_pallas, quant=draft_quant,
+                               act_scales=draft_act_scales)
+            row = lax.dynamic_index_in_dim(logits, cur_len - 1 + i, axis=0,
+                                           keepdims=False)
+            nxt = jnp.argmax(row).astype(jnp.int32)
+            return lax.dynamic_update_index_in_dim(toks, nxt, cur_len + i, axis=0)
+
+        drafted_seq = lax.fori_loop(0, gamma, draft_body, tokens)
+        drafted = lax.dynamic_slice(drafted_seq, (cur_len,), (gamma,))
+
+        tlogits = M.forward(target_cfg, target_params, drafted_seq,
+                            use_pallas=use_pallas, quant=target_quant,
+                            act_scales=target_act_scales)
+        # Target greedy tokens for positions cur_len .. cur_len+gamma
+        # (predicted from rows cur_len-1 .. cur_len+gamma-1).
+        rows = lax.dynamic_slice(
+            tlogits, (cur_len - 1, 0), (gamma + 1, tlogits.shape[1]))
+        out_tokens = jnp.argmax(rows, axis=-1).astype(jnp.int32)
+
+        # Greedy acceptance: leading run where draft == target argmax.
+        matches = (drafted == out_tokens[:gamma]).astype(jnp.int32)
+        n_accepted = jnp.sum(jnp.cumprod(matches)).astype(jnp.int32)
+        return n_accepted, out_tokens, drafted
+
+    return fn
+
+
+def lower_spec_step(draft_cfg, target_cfg, gamma: int, seq_len: int,
+                    draft_params, target_params, **kw):
+    """Jit-lower the fused step for a fixed seq bucket; weights are runtime
+    parameters (flattened in manifest order) so artifacts stay small."""
+    dflat = M.flatten_params(draft_params)
+    tflat = M.flatten_params(target_params)
+    dnames = [n for n, _ in dflat]
+    tnames = [n for n, _ in tflat]
+    fn = spec_step_fn(draft_cfg, target_cfg, gamma, **kw)
+
+    def wrapped(*args):
+        nd = len(dnames)
+        dvals = args[:nd]
+        tvals = args[nd:nd + len(tnames)]
+        tokens, cur_len = args[-2], args[-1]
+        dp = M.unflatten_params(draft_cfg, dict(zip(dnames, dvals)))
+        tp = M.unflatten_params(target_cfg, dict(zip(tnames, tvals)))
+        return fn(dp, tp, tokens, cur_len)
+
+    example = (
+        [jax.ShapeDtypeStruct(v.shape, v.dtype) for _, v in dflat]
+        + [jax.ShapeDtypeStruct(v.shape, v.dtype) for _, v in tflat]
+        + [jax.ShapeDtypeStruct((seq_len,), jnp.int32),
+           jax.ShapeDtypeStruct((), jnp.int32)]
+    )
+    return jax.jit(wrapped).lower(*example), dnames, tnames

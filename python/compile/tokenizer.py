@@ -1,0 +1,88 @@
+"""Character-level tokenizer shared between the build path (Python) and the
+request path (Rust).
+
+The vocabulary is fixed and versioned: it is exported into
+``artifacts/manifest.json`` and the Rust ``tokenizer`` module rebuilds the
+exact same mapping from it, so token ids produced on either side agree.
+
+Special tokens:
+  PAD (0)  padding after the live sequence (causal masking makes it inert)
+  BOS (1)  start of sequence
+  EOS (2)  end of generation
+  SEP (3)  separates the task prompt from the completion ("=" in text form)
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+PAD_ID = 0
+BOS_ID = 1
+EOS_ID = 2
+SEP_ID = 3
+
+# Printable forms for the special ids (used when detokenizing for display).
+_SPECIAL = ["<pad>", "<bos>", "<eos>", "="]
+
+# Regular characters, in id order after the specials.
+_CHARS = " abcdefghijklmnopqrstuvwxyz.,?!-0123456789:'"
+
+VOCAB_SIZE = 48  # 4 specials + 44 chars = 48 exactly
+
+
+@dataclass(frozen=True)
+class TokenizerSpec:
+    """Serializable description of the vocabulary (goes into the manifest)."""
+
+    specials: tuple
+    chars: str
+    vocab_size: int
+
+    def to_json(self) -> dict:
+        return {
+            "specials": list(self.specials),
+            "chars": self.chars,
+            "vocab_size": self.vocab_size,
+        }
+
+
+SPEC = TokenizerSpec(specials=tuple(_SPECIAL), chars=_CHARS, vocab_size=VOCAB_SIZE)
+
+assert len(_SPECIAL) + len(_CHARS) == VOCAB_SIZE, (
+    len(_SPECIAL),
+    len(_CHARS),
+)
+
+_CHAR_TO_ID = {c: i + len(_SPECIAL) for i, c in enumerate(_CHARS)}
+_ID_TO_CHAR = {i + len(_SPECIAL): c for i, c in enumerate(_CHARS)}
+
+
+def encode(text: str, bos: bool = True) -> list:
+    """Encode ``text`` to token ids. Unknown characters are an error: the
+    synthetic corpus only ever emits characters from the fixed vocabulary."""
+    ids = [BOS_ID] if bos else []
+    for ch in text:
+        if ch not in _CHAR_TO_ID:
+            raise ValueError(f"character {ch!r} not in vocabulary")
+        ids.append(_CHAR_TO_ID[ch])
+    return ids
+
+
+def decode(ids, stop_at_eos: bool = True) -> str:
+    """Decode token ids back to text, skipping BOS/PAD and stopping at EOS."""
+    out = []
+    for i in ids:
+        i = int(i)
+        if i in (BOS_ID, PAD_ID):
+            continue
+        if i == EOS_ID:
+            if stop_at_eos:
+                break
+            continue
+        if i == SEP_ID:
+            out.append("=")
+            continue
+        if i not in _ID_TO_CHAR:
+            raise ValueError(f"id {i} not in vocabulary")
+        out.append(_ID_TO_CHAR[i])
+    return "".join(out)

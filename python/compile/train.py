@@ -1,0 +1,169 @@
+"""Build-time training of the tiny target/drafter pair.
+
+The paper uses pretrained Llama 3.2 3B/1B; our substitute pair must be
+*trained* to make speculative sampling meaningful (random models have no
+usable acceptance rate). Training is a one-time build step cached under
+``artifacts/`` — it never touches the request path.
+
+* Target: next-token cross-entropy on the multi-task synthetic corpus.
+* Drafter: the same objective mixed with a KL distillation term against the
+  frozen target's logits — the "structural similarity yields correlated
+  logits" mechanism that makes training-free speculative sampling work
+  (paper §II-B), condensed into an explicit distillation because our models
+  don't share a pretraining corpus of web scale.
+
+Pure-jnp forward (use_pallas=False) keeps fwd/bwd fast; the Pallas path is
+exercised by the AOT artifacts and the kernel test suite instead.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data as D
+from . import model as M
+from . import tokenizer as tok
+
+MAXLEN = 128          # largest seq bucket; samples are generated to fit
+TRAIN_SEED = 1234
+
+
+def make_batch(stream, batch_size: int):
+    """Pad/truncate full sample token ids to MAXLEN+1; returns int32
+    [B, MAXLEN+1] (inputs = [:, :-1], labels = [:, 1:])."""
+    rows = []
+    for _ in range(batch_size):
+        s = next(stream)
+        ids = s.full_ids()[: MAXLEN + 1]
+        ids = ids + [tok.PAD_ID] * (MAXLEN + 1 - len(ids))
+        rows.append(ids)
+    return np.asarray(rows, np.int32)
+
+
+def loss_fn(cfg, params, batch, teacher_logits=None, distill_weight=0.0):
+    inputs, labels = batch[:, :-1], batch[:, 1:]
+    logits = M.forward_batch(cfg, params, inputs, use_pallas=False)  # [B,S,V]
+    mask = (labels != tok.PAD_ID).astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    ce = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    if teacher_logits is None or distill_weight == 0.0:
+        return ce
+    tprob = jax.nn.softmax(teacher_logits, axis=-1)
+    kl = jnp.sum(tprob * (jax.nn.log_softmax(teacher_logits, -1) - logp), axis=-1)
+    kl = jnp.sum(kl * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return (1.0 - distill_weight) * ce + distill_weight * kl
+
+
+def adam_init(params):
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree_util.tree_map(jnp.zeros_like, params), "t": 0}
+
+
+def adam_update(params, grads, state, lr, b1=0.9, b2=0.99, eps=1e-8):
+    t = state["t"] + 1
+    m = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * g, state["m"], grads)
+    v = jax.tree_util.tree_map(lambda v, g: b2 * v + (1 - b2) * g * g, state["v"], grads)
+    mh = jax.tree_util.tree_map(lambda m: m / (1 - b1 ** t), m)
+    vh = jax.tree_util.tree_map(lambda v: v / (1 - b2 ** t), v)
+    new = jax.tree_util.tree_map(
+        lambda p, mh, vh: p - lr * mh / (jnp.sqrt(vh) + eps), params, mh, vh
+    )
+    return new, {"m": m, "v": v, "t": t}
+
+
+def cosine_lr(step, steps, peak, warmup=20):
+    if step < warmup:
+        return peak * (step + 1) / warmup
+    frac = (step - warmup) / max(1, steps - warmup)
+    return peak * 0.5 * (1.0 + float(np.cos(np.pi * frac)))
+
+
+def train_model(cfg, steps: int, batch_size: int, peak_lr: float,
+                distill_from=None, distill_weight: float = 0.5,
+                seed: int = TRAIN_SEED, log_every: int = 50,
+                stream_seed: int = None):
+    """Train ``cfg`` on the synthetic corpus; optionally distill from a frozen
+    teacher (params of the *target* model). Returns (params, loss_history)."""
+    lex = D.build_lexicon()
+    stream = D.train_stream(lex, seed=stream_seed or (seed + 7))
+    params = M.init_params(cfg, jax.random.PRNGKey(seed))
+    opt = adam_init(params)
+
+    teacher_cfg_params = distill_from  # (cfg, params) or None
+
+    if teacher_cfg_params is None:
+        @jax.jit
+        def step_fn(params, opt_m, opt_v, opt_t, batch, lr):
+            loss, grads = jax.value_and_grad(
+                lambda p: loss_fn(cfg, p, batch))(params)
+            new, st = adam_update(params, grads, {"m": opt_m, "v": opt_v, "t": opt_t}, lr)
+            return loss, new, st["m"], st["v"], st["t"]
+    else:
+        tcfg, tparams = teacher_cfg_params
+
+        @jax.jit
+        def step_fn(params, opt_m, opt_v, opt_t, batch, lr):
+            teacher_logits = M.forward_batch(tcfg, tparams, batch[:, :-1],
+                                             use_pallas=False)
+            loss, grads = jax.value_and_grad(
+                lambda p: loss_fn(cfg, p, batch, teacher_logits, distill_weight)
+            )(params)
+            new, st = adam_update(params, grads, {"m": opt_m, "v": opt_v, "t": opt_t}, lr)
+            return loss, new, st["m"], st["v"], st["t"]
+
+    history = []
+    t0 = time.time()
+    m, v, t = opt["m"], opt["v"], opt["t"]
+    for step in range(steps):
+        batch = jnp.asarray(make_batch(stream, batch_size))
+        lr = cosine_lr(step, steps, peak_lr)
+        loss, params, m, v, t = step_fn(params, m, v, t, batch, lr)
+        history.append(float(loss))
+        if step % log_every == 0 or step == steps - 1:
+            print(f"[train:{cfg.name}] step {step:4d}  loss {float(loss):.4f}  "
+                  f"lr {lr:.2e}  {time.time() - t0:.0f}s", flush=True)
+    return params, history
+
+
+def greedy_decode_ref(cfg, params, prompt_ids, max_new: int, **fwd_kw):
+    """Reference greedy decoding (Python-side, for tests/accuracy eval)."""
+    ids = list(prompt_ids)
+    for _ in range(max_new):
+        logits = M.forward(cfg, params, jnp.asarray(ids, jnp.int32),
+                           use_pallas=False, **fwd_kw)
+        nxt = int(jnp.argmax(logits[len(ids) - 1]))
+        ids.append(nxt)
+        if nxt == tok.EOS_ID or len(ids) >= MAXLEN:
+            break
+    return ids
+
+
+def task_accuracy(cfg, params, samples, max_samples: int = 30, **fwd_kw):
+    """Exact-match + token accuracy on eval samples (build-time sanity)."""
+    correct = total = exact = 0
+    for s in samples[:max_samples]:
+        pids = s.prompt_ids()
+        want = tok.encode(s.completion, bos=False) + [tok.EOS_ID]
+        out = greedy_decode_ref(cfg, params, pids, max_new=len(want) + 4, **fwd_kw)
+        got = out[len(pids):]
+        exact += int(got[: len(want)] == want)
+        n = min(len(got), len(want))
+        correct += sum(int(a == b) for a, b in zip(got[:n], want[:n]))
+        total += len(want)
+    return {"token_acc": correct / max(total, 1), "exact": exact / max_samples}
+
+
+def save_checkpoint(path: str, params: dict):
+    flat = dict(M.flatten_params(params))
+    np.savez(path, **{k: np.asarray(v) for k, v in flat.items()})
+
+
+def load_checkpoint(path: str, cfg) -> dict:
+    z = np.load(path)
+    named = {k: jnp.asarray(z[k]) for k in z.files}
+    return M.unflatten_params(cfg, named)

@@ -1,0 +1,188 @@
+"""Build-path tests: AOT lowering, SEWB weight files, the monolithic fused
+spec-step graph semantics, and train.py plumbing (smoke-scale)."""
+
+import os
+import struct
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot
+from compile import model as M
+from compile import monolithic as MONO
+from compile import quantize as Q
+from compile import tokenizer as tok
+from compile import train as T
+
+
+@pytest.fixture(scope="module")
+def params():
+    return {
+        "target": M.init_params(M.TARGET, jax.random.PRNGKey(0)),
+        "drafter": M.init_params(M.DRAFTER, jax.random.PRNGKey(1)),
+    }
+
+
+class TestSEWB:
+    def test_roundtrip_layout(self, tmp_path, params):
+        flat = M.flatten_params(params["drafter"])
+        path = tmp_path / "w.bin"
+        index = aot.write_weights_bin(str(path), flat)
+        assert len(index) == len(flat)
+        with open(path, "rb") as f:
+            assert f.read(4) == b"SEWB"
+            version, n = struct.unpack("<II", f.read(8))
+            assert version == 1 and n == len(flat)
+        # Index entries describe the same tensors in the same order.
+        for (name, arr), entry in zip(flat, index):
+            assert entry["name"] == name
+            assert entry["shape"] == list(np.asarray(arr).shape)
+
+    def test_quantized_variant_carries_int8(self, tmp_path, params):
+        qp = Q.quantize_params(params["drafter"])
+        index = aot.write_weights_bin(
+            str(tmp_path / "q.bin"), M.flatten_params(qp))
+        dtypes = {e["name"]: e["dtype"] for e in index}
+        assert dtypes["layers.0.wq.w8"] == "i8"
+        assert dtypes["layers.0.wq.scale"] == "f32"
+        assert dtypes["embed"] == "f32"
+
+
+class TestLowering:
+    def test_forward_hlo_has_params_and_entry(self, params):
+        lowered, names = aot.lower_forward(
+            M.DRAFTER, params["drafter"], 16, 1, False, False, None)
+        text = aot.to_hlo_text(lowered)
+        assert "ENTRY" in text
+        # weights + tokens = n params
+        assert f"parameter({len(names)})" in text  # tokens is the last param
+
+    def test_pallas_and_ref_lower_same_signature(self, params):
+        lp, names_p = aot.lower_forward(
+            M.DRAFTER, params["drafter"], 16, 1, True, False, None)
+        lr, names_r = aot.lower_forward(
+            M.DRAFTER, params["drafter"], 16, 1, False, False, None)
+        assert names_p == names_r
+
+
+class TestMonolithicSemantics:
+    def test_spec_step_matches_manual_loop(self, params):
+        """The fused graph must agree with a hand-rolled draft/verify loop."""
+        gamma, seq = 3, 32
+        fn = MONO.spec_step_fn(M.DRAFTER, M.TARGET, gamma, use_pallas=False)
+        prompt = [tok.BOS_ID] + list(range(5, 17)) + [tok.SEP_ID]
+        cur = len(prompt)
+        tokens = jnp.asarray(prompt + [tok.PAD_ID] * (seq - cur), jnp.int32)
+
+        n_acc, out_tokens, drafted = jax.jit(fn, static_argnums=())(
+            params["drafter"], params["target"], tokens, jnp.int32(cur))
+        n_acc, out_tokens, drafted = int(n_acc), np.asarray(out_tokens), np.asarray(drafted)
+
+        # Manual reference loop.
+        ids = list(prompt)
+        man_drafted = []
+        for i in range(gamma):
+            logits = M.forward(M.DRAFTER, params["drafter"],
+                               jnp.asarray(ids + [tok.PAD_ID] * (seq - len(ids)),
+                                           jnp.int32), use_pallas=False)
+            nxt = int(jnp.argmax(logits[len(ids) - 1]))
+            man_drafted.append(nxt)
+            ids.append(nxt)
+        tlogits = M.forward(M.TARGET, params["target"],
+                            jnp.asarray(ids + [tok.PAD_ID] * (seq - len(ids)),
+                                        jnp.int32), use_pallas=False)
+        man_out = [int(jnp.argmax(tlogits[cur - 1 + i])) for i in range(gamma + 1)]
+        man_acc = 0
+        for d, t in zip(man_drafted, man_out):
+            if d != t:
+                break
+            man_acc += 1
+
+        assert list(drafted) == man_drafted
+        assert list(out_tokens) == man_out
+        assert n_acc == man_acc
+
+    def test_accept_count_bounds(self, params):
+        gamma, seq = 4, 32
+        fn = MONO.spec_step_fn(M.DRAFTER, M.TARGET, gamma, use_pallas=False)
+        for seed in range(3):
+            rng = np.random.default_rng(seed)
+            cur = int(rng.integers(4, 20))
+            toks = np.zeros(seq, np.int32)
+            toks[:cur] = rng.integers(4, 44, cur)
+            toks[0] = tok.BOS_ID
+            n_acc, out_tokens, drafted = fn(
+                params["drafter"], params["target"],
+                jnp.asarray(toks), jnp.int32(cur))
+            assert 0 <= int(n_acc) <= gamma
+            assert out_tokens.shape == (gamma + 1,)
+            assert drafted.shape == (gamma,)
+
+
+class TestTrainPlumbing:
+    def test_two_steps_reduce_nothing_but_run(self):
+        p, hist = T.train_model(M.DRAFTER, steps=2, batch_size=2, peak_lr=1e-3,
+                                log_every=10)
+        assert len(hist) == 2
+        assert all(np.isfinite(hist))
+
+    def test_checkpoint_roundtrip(self, tmp_path, params):
+        path = str(tmp_path / "ckpt.npz")
+        T.save_checkpoint(path, params["drafter"])
+        loaded = T.load_checkpoint(path, M.DRAFTER)
+        t = jnp.arange(8, dtype=jnp.int32)
+        a = M.forward(M.DRAFTER, params["drafter"], t, use_pallas=False)
+        b = M.forward(M.DRAFTER, loaded, t, use_pallas=False)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_batch_shapes(self):
+        import compile.data as D
+        lex = D.build_lexicon()
+        stream = D.train_stream(lex, seed=1)
+        batch = T.make_batch(stream, 3)
+        assert batch.shape == (3, T.MAXLEN + 1)
+        assert batch.dtype == np.int32
+        assert (batch[:, 0] == tok.BOS_ID).all()
+
+    def test_greedy_decode_ref_stops_at_eos(self, params):
+        ids = T.greedy_decode_ref(M.DRAFTER, params["drafter"],
+                                  [tok.BOS_ID, 5, 6, tok.SEP_ID], max_new=8)
+        assert len(ids) <= 4 + 8 + 1
+
+
+class TestManifestOnDisk:
+    """Validates the real artifacts/ when present (post `make artifacts`)."""
+
+    @pytest.fixture(scope="class")
+    def manifest(self):
+        path = os.path.join(os.path.dirname(__file__), "../../artifacts/manifest.json")
+        if not os.path.exists(path):
+            pytest.skip("run `make artifacts` first")
+        import json
+        with open(path) as f:
+            return json.load(f), os.path.dirname(path)
+
+    def test_structure(self, manifest):
+        m, _ = manifest
+        assert m["tokenizer"]["vocab_size"] == tok.VOCAB_SIZE
+        assert len(m["eval_samples"]) == 480
+        assert set(m["variants"]) == {
+            "target_fp", "target_w8a8", "drafter_fp", "drafter_w8a8"}
+
+    def test_artifact_files_exist(self, manifest):
+        m, d = manifest
+        for v in m["variants"].values():
+            assert os.path.exists(os.path.join(d, v["weights"]))
+            for a in v["artifacts"]:
+                assert os.path.exists(os.path.join(d, a["file"])), a["file"]
+        for mono in m["monolithic"]:
+            assert os.path.exists(os.path.join(d, mono["file"]))
+
+    def test_eval_samples_encode(self, manifest):
+        m, _ = manifest
+        for s in m["eval_samples"][:50]:
+            ids = tok.encode(s["prompt"]) + [tok.SEP_ID] + \
+                tok.encode(s["completion"], bos=False)
+            assert all(0 <= i < tok.VOCAB_SIZE for i in ids)

@@ -1,0 +1,119 @@
+"""Corpus + tokenizer tests: round-trips, determinism, Spec-Bench shape."""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import data as D
+from compile import tokenizer as tok
+
+TEXT_ALPHABET = " abcdefghijklmnopqrstuvwxyz.,?!-0123456789:'"
+
+
+@pytest.fixture(scope="module")
+def lex():
+    return D.build_lexicon()
+
+
+class TestTokenizer:
+    @settings(max_examples=50, deadline=None)
+    @given(st.text(alphabet=TEXT_ALPHABET, max_size=200))
+    def test_roundtrip(self, text):
+        assert tok.decode(tok.encode(text)) == text
+
+    def test_vocab_size(self):
+        assert tok.VOCAB_SIZE == 48
+        assert len(tok.SPEC.specials) + len(tok.SPEC.chars) == 48
+
+    def test_specials(self):
+        ids = tok.encode("ab")
+        assert ids[0] == tok.BOS_ID
+        assert tok.decode([tok.BOS_ID, 5, tok.EOS_ID, 6]) == tok.decode([5])
+
+    def test_unknown_char_raises(self):
+        with pytest.raises(ValueError):
+            tok.encode("ABC")
+
+    def test_ids_in_range(self):
+        ids = tok.encode(TEXT_ALPHABET)
+        assert all(0 <= i < tok.VOCAB_SIZE for i in ids)
+
+
+class TestLexicon:
+    def test_size_and_uniqueness(self, lex):
+        assert len(lex.words) == D.LEXICON_SIZE
+        assert len(set(lex.words)) == D.LEXICON_SIZE
+
+    def test_deterministic(self, lex):
+        assert D.build_lexicon().words == lex.words
+
+    def test_irregular_fraction(self, lex):
+        frac = sum(lex.irregular) / len(lex.irregular)
+        assert 0.1 < frac < 0.3
+
+    def test_regular_words_follow_cipher(self, lex):
+        for w, t, irr in zip(lex.words, lex.translations, lex.irregular):
+            if not irr:
+                assert t == D.rotate_word(w)
+
+    def test_words_fit_vocab(self, lex):
+        for w in lex.words + lex.translations:
+            tok.encode(w)  # must not raise
+
+
+class TestEvalSet:
+    def test_spec_bench_shape(self, lex):
+        ev = D.eval_set(lex)
+        assert len(ev) == D.EVAL_SAMPLES_TOTAL == 480
+        assert len({s.task for s in ev}) == len(D.TASKS) == 13
+
+    def test_deterministic(self, lex):
+        a = D.eval_set(lex)
+        b = D.eval_set(lex)
+        assert [(s.prompt, s.completion) for s in a] == \
+               [(s.prompt, s.completion) for s in b]
+
+    def test_translate_avg_prompt_near_63(self, lex):
+        tr = [s for s in D.eval_set(lex) if s.task == "translate"]
+        avg = D.avg_prompt_len(tr)
+        assert 55 <= avg <= 70, avg  # paper's S_L = 63 operating point
+
+    def test_samples_fit_bucket(self, lex):
+        for s in D.eval_set(lex):
+            assert len(s.full_ids()) <= D.MAX_SAMPLE_LEN
+
+    def test_completions_are_ground_truth(self, lex):
+        for s in D.eval_set(lex)[:50]:
+            body = s.prompt.split(": ", 1)[1]
+            words = body.split(" ")
+            assert s.completion == D.apply_task(s.task, words, lex)
+
+    @settings(max_examples=30, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1),
+           task=st.sampled_from(D.TASKS))
+    def test_any_sample_valid(self, lex, seed, task):
+        s = D.make_sample(lex, task, seed)
+        ids = s.full_ids()
+        assert ids[0] == tok.BOS_ID and ids[-1] == tok.EOS_ID
+        assert tok.SEP_ID in ids
+        assert len(ids) <= D.MAX_SAMPLE_LEN
+
+
+class TestTasks:
+    def test_all_tasks_deterministic(self, lex):
+        words = list(lex.words[:10])
+        for t in D.TASKS:
+            assert D.apply_task(t, words, lex) == D.apply_task(t, words, lex)
+
+    def test_reverse_is_involution(self, lex):
+        words = list(lex.words[:8])
+        rev = D.apply_task("reverse-words", words, lex).split(" ")
+        assert D.apply_task("reverse-words", rev, lex) == " ".join(words)
+
+    def test_count_words(self, lex):
+        assert D.apply_task("count-words", list(lex.words[:7]), lex) == "7"
+
+    def test_translate_rev_consistent(self, lex):
+        words = list(lex.words[:6])
+        tr = D.apply_task("translate", words, lex).split(" ")
+        tv = D.apply_task("translate-rev", words, lex).split(" ")
+        assert tv == list(reversed(tr))

@@ -1,0 +1,167 @@
+"""L1 kernel correctness: Pallas (interpret=True) vs pure-jnp oracle.
+
+Hypothesis sweeps shapes and value ranges; every kernel must match ref.py to
+tight f32 tolerances. This is the core correctness signal for the AOT
+artifacts — the same kernels lower into the HLO the Rust runtime executes.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.attention import attention
+from compile.kernels.matmul import matmul
+from compile.kernels.quant_matmul import quant_matmul
+from compile.kernels.rmsnorm import rmsnorm
+
+DIMS = st.sampled_from([8, 16, 24, 32, 48, 96, 128, 352])
+SEQS = st.sampled_from([8, 16, 32, 48, 63, 64, 96, 128])
+
+
+def _rand(rng, *shape, scale=1.0):
+    return jnp.asarray(rng.normal(size=shape) * scale, jnp.float32)
+
+
+class TestMatmul:
+    @settings(max_examples=25, deadline=None)
+    @given(s=SEQS, k=DIMS, n=DIMS, seed=st.integers(0, 2**31 - 1))
+    def test_matches_ref(self, s, k, n, seed):
+        rng = np.random.default_rng(seed)
+        x, w = _rand(rng, s, k), _rand(rng, k, n)
+        got = matmul(x, w)
+        want = ref.matmul_ref(x, w)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)
+
+    def test_identity(self):
+        x = jnp.eye(32, dtype=jnp.float32)
+        np.testing.assert_allclose(matmul(x, x), x, atol=1e-6)
+
+    def test_zero(self):
+        x = jnp.zeros((16, 32), jnp.float32)
+        w = jnp.ones((32, 16), jnp.float32)
+        np.testing.assert_allclose(matmul(x, w), 0.0, atol=0)
+
+    def test_odd_dims_rejected_gracefully(self):
+        # _pick falls back to tile=1 for prime dims — still correct.
+        rng = np.random.default_rng(0)
+        x, w = _rand(rng, 7, 13), _rand(rng, 13, 5)
+        np.testing.assert_allclose(matmul(x, w), ref.matmul_ref(x, w),
+                                   rtol=1e-5, atol=1e-4)
+
+    @pytest.mark.parametrize("bm,bk,bn", [(8, 8, 8), (16, 32, 16), (32, 64, 32)])
+    def test_block_shape_sweep(self, bm, bk, bn):
+        rng = np.random.default_rng(1)
+        x, w = _rand(rng, 64, 128), _rand(rng, 128, 96)
+        got = matmul(x, w, bm=bm, bk=bk, bn=bn)
+        np.testing.assert_allclose(got, ref.matmul_ref(x, w), rtol=1e-5, atol=1e-4)
+
+
+class TestQuantMatmul:
+    @settings(max_examples=20, deadline=None)
+    @given(s=SEQS, k=DIMS, n=DIMS, seed=st.integers(0, 2**31 - 1))
+    def test_matches_ref(self, s, k, n, seed):
+        rng = np.random.default_rng(seed)
+        x = _rand(rng, s, k)
+        w8 = jnp.asarray(rng.integers(-127, 128, size=(k, n)), jnp.int8)
+        scale = jnp.asarray(rng.uniform(0.005, 0.05, size=n), jnp.float32)
+        got = quant_matmul(x, w8, scale)
+        want = ref.quant_matmul_ref(x, w8, scale)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)
+
+    def test_extreme_int8(self):
+        x = jnp.ones((16, 32), jnp.float32)
+        w8 = jnp.full((32, 16), -127, jnp.int8)
+        scale = jnp.full((16,), 0.01, jnp.float32)
+        want = ref.quant_matmul_ref(x, w8, scale)
+        np.testing.assert_allclose(quant_matmul(x, w8, scale), want, rtol=1e-6)
+
+    def test_roundtrip_vs_fp(self):
+        """Dequantized int8 matmul approximates the fp matmul it came from."""
+        from compile.quantize import quantize_weight
+        rng = np.random.default_rng(3)
+        x = _rand(rng, 32, 96)
+        w = np.asarray(_rand(rng, 96, 48))
+        w8, scale = quantize_weight(w, qmax=127)
+        got = quant_matmul(x, jnp.asarray(w8), jnp.asarray(scale))
+        want = ref.matmul_ref(x, jnp.asarray(w))
+        rel = float(jnp.linalg.norm(got - want) / jnp.linalg.norm(want))
+        assert rel < 0.02, rel
+
+
+class TestRmsnorm:
+    @settings(max_examples=20, deadline=None)
+    @given(s=SEQS, d=st.sampled_from([16, 24, 96, 128]),
+           seed=st.integers(0, 2**31 - 1))
+    def test_matches_ref(self, s, d, seed):
+        rng = np.random.default_rng(seed)
+        x, g = _rand(rng, s, d, scale=3.0), _rand(rng, d)
+        np.testing.assert_allclose(rmsnorm(x, g), ref.rmsnorm_ref(x, g),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_unit_norm_property(self):
+        """With gamma=1, output rows have RMS ~ 1."""
+        rng = np.random.default_rng(5)
+        x = _rand(rng, 32, 128, scale=10.0)
+        out = rmsnorm(x, jnp.ones(128, jnp.float32))
+        rms = jnp.sqrt(jnp.mean(out * out, axis=-1))
+        np.testing.assert_allclose(rms, 1.0, atol=1e-3)
+
+    def test_scale_invariance(self):
+        """rmsnorm(c*x) == rmsnorm(x) for c > 0 (up to eps)."""
+        rng = np.random.default_rng(6)
+        x = _rand(rng, 16, 96)
+        g = _rand(rng, 96)
+        a, b = rmsnorm(x, g), rmsnorm(100.0 * x, g)
+        np.testing.assert_allclose(a, b, atol=1e-3)
+
+
+class TestAttention:
+    @settings(max_examples=15, deadline=None)
+    @given(h=st.sampled_from([1, 2, 4]), s=st.sampled_from([16, 32, 64, 96]),
+           d=st.sampled_from([16, 24, 32]), causal=st.booleans(),
+           seed=st.integers(0, 2**31 - 1))
+    def test_matches_ref(self, h, s, d, causal, seed):
+        rng = np.random.default_rng(seed)
+        q, k, v = (_rand(rng, h, s, d) for _ in range(3))
+        got = attention(q, k, v, causal=causal)
+        want = ref.attention_ref(q, k, v, causal=causal)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_causality(self):
+        """Changing future K/V must not change past outputs."""
+        rng = np.random.default_rng(7)
+        q, k, v = (_rand(rng, 2, 64, 32) for _ in range(3))
+        base = attention(q, k, v, causal=True)
+        k2 = k.at[:, 40:, :].set(999.0)
+        v2 = v.at[:, 40:, :].set(-999.0)
+        pert = attention(q, k2, v2, causal=True)
+        np.testing.assert_allclose(base[:, :40], pert[:, :40], atol=1e-5)
+
+    def test_softmax_rows_are_convex(self):
+        """Each output row is a convex combination of V rows: with V == const
+        vector, output == that vector exactly."""
+        rng = np.random.default_rng(8)
+        q, k = _rand(rng, 2, 32, 16), _rand(rng, 2, 32, 16)
+        v = jnp.broadcast_to(jnp.arange(16, dtype=jnp.float32), (2, 32, 16))
+        out = attention(q, k, v, causal=True)
+        np.testing.assert_allclose(out, v, rtol=1e-5, atol=1e-4)
+
+    def test_block_shape_sweep(self):
+        rng = np.random.default_rng(9)
+        q, k, v = (_rand(rng, 2, 96, 24) for _ in range(3))
+        want = ref.attention_ref(q, k, v)
+        for bq, bkv in [(8, 8), (16, 32), (32, 16), (96, 96)]:
+            got = attention(q, k, v, bq=bq, bkv=bkv)
+            np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_large_scores_stable(self):
+        """Online softmax must be stable under large score magnitudes."""
+        rng = np.random.default_rng(10)
+        q = _rand(rng, 1, 32, 16, scale=30.0)
+        k = _rand(rng, 1, 32, 16, scale=30.0)
+        v = _rand(rng, 1, 32, 16)
+        out = attention(q, k, v, causal=True)
+        assert bool(jnp.all(jnp.isfinite(out)))

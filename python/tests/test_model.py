@@ -1,0 +1,160 @@
+"""L2 model tests: shapes, pallas-vs-ref equivalence, padding invariance,
+quantization behaviour, flatten/unflatten round-trip."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model as M
+from compile import quantize as Q
+from compile import tokenizer as tok
+
+
+@pytest.fixture(scope="module")
+def params():
+    return {
+        "target": M.init_params(M.TARGET, jax.random.PRNGKey(0)),
+        "drafter": M.init_params(M.DRAFTER, jax.random.PRNGKey(1)),
+    }
+
+
+def _toks(rng, n):
+    return jnp.asarray(rng.integers(4, tok.VOCAB_SIZE, size=n), jnp.int32)
+
+
+class TestForward:
+    @pytest.mark.parametrize("name", ["target", "drafter"])
+    @pytest.mark.parametrize("s", [16, 48, 128])
+    def test_shapes(self, params, name, s):
+        cfg = M.CONFIGS[name]
+        rng = np.random.default_rng(0)
+        logits = M.forward(cfg, params[name], _toks(rng, s), use_pallas=False)
+        assert logits.shape == (s, cfg.vocab)
+        assert bool(jnp.all(jnp.isfinite(logits)))
+
+    @pytest.mark.parametrize("name", ["target", "drafter"])
+    def test_pallas_matches_ref(self, params, name):
+        cfg = M.CONFIGS[name]
+        rng = np.random.default_rng(2)
+        t = _toks(rng, 32)
+        a = M.forward(cfg, params[name], t, use_pallas=True)
+        b = M.forward(cfg, params[name], t, use_pallas=False)
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+
+    @settings(max_examples=8, deadline=None)
+    @given(live=st.integers(4, 30), seed=st.integers(0, 2**31 - 1))
+    def test_padding_invariance(self, params, live, seed):
+        """Logits at live positions must be identical whatever PAD garbage
+        follows — this is what lets the Rust runtime use seq buckets."""
+        cfg = M.DRAFTER
+        rng = np.random.default_rng(seed)
+        t = _toks(rng, 32)
+        t_padded = t.at[live:].set(tok.PAD_ID)
+        t_junk = t.at[live:].set(_toks(rng, 32 - live))
+        a = M.forward(cfg, params["drafter"], t_padded, use_pallas=False)
+        b = M.forward(cfg, params["drafter"], t_junk, use_pallas=False)
+        np.testing.assert_allclose(a[:live], b[:live], atol=1e-6)
+
+    def test_bucket_consistency(self, params):
+        """Same prompt padded into two different buckets -> same live logits
+        (up to f32 reassociation)."""
+        cfg = M.DRAFTER
+        rng = np.random.default_rng(3)
+        t16 = _toks(rng, 16)
+        t64 = jnp.concatenate([t16, jnp.zeros(48, jnp.int32)])
+        a = M.forward(cfg, params["drafter"], t16, use_pallas=False)
+        b = M.forward(cfg, params["drafter"], t64, use_pallas=False)
+        np.testing.assert_allclose(a, b[:16], rtol=1e-4, atol=1e-4)
+
+    def test_batch_matches_single(self, params):
+        cfg = M.DRAFTER
+        rng = np.random.default_rng(4)
+        batch = jnp.stack([_toks(rng, 24) for _ in range(4)])
+        lb = M.forward_batch(cfg, params["drafter"], batch, use_pallas=False)
+        for i in range(4):
+            li = M.forward(cfg, params["drafter"], batch[i], use_pallas=False)
+            np.testing.assert_allclose(lb[i], li, atol=1e-5)
+
+    def test_flops_model_monotonic(self):
+        f = [M.TARGET.flops_per_token(s) for s in (16, 32, 64, 128)]
+        assert f == sorted(f)
+        assert M.TARGET.flops_per_token(63) > M.DRAFTER.flops_per_token(63)
+
+
+class TestParamsPlumbing:
+    @pytest.mark.parametrize("name", ["target", "drafter"])
+    def test_flatten_roundtrip(self, params, name):
+        cfg = M.CONFIGS[name]
+        flat = M.flatten_params(params[name])
+        rebuilt = M.unflatten_params(cfg, dict(flat))
+        t = jnp.arange(16, dtype=jnp.int32)
+        a = M.forward(cfg, params[name], t, use_pallas=False)
+        b = M.forward(cfg, rebuilt, t, use_pallas=False)
+        np.testing.assert_allclose(a, b, atol=0)
+
+    def test_flatten_deterministic_order(self, params):
+        f1 = [n for n, _ in M.flatten_params(params["target"])]
+        f2 = [n for n, _ in M.flatten_params(params["target"])]
+        assert f1 == f2
+        assert f1[0] == "embed" and f1[1] == "head"
+
+    def test_quantized_flatten_has_w8_and_scale(self, params):
+        qp = Q.quantize_params(params["drafter"])
+        names = [n for n, _ in M.flatten_params(qp)]
+        assert "layers.0.wq.w8" in names and "layers.0.wq.scale" in names
+
+    def test_param_count_matches(self, params):
+        flat = M.flatten_params(params["target"])
+        total = sum(int(np.prod(v.shape)) for _, v in flat)
+        assert total == M.TARGET.param_count()
+
+
+class TestQuantization:
+    def test_weight_roundtrip_error_small_int8(self, params):
+        qp = Q.quantize_params(params["target"], qmax=127)
+        err = Q.quantization_error(params["target"], qp)
+        assert err < 0.01, err
+
+    def test_narrow_grid_degrades_more(self, params):
+        """The reproduction scheme (qmax=2) must perturb weights far more
+        than true int8 — that's its purpose (see quantize.py docs)."""
+        e127 = Q.quantization_error(params["target"],
+                                    Q.quantize_params(params["target"], qmax=127))
+        e2 = Q.quantization_error(params["target"],
+                                  Q.quantize_params(params["target"], qmax=2))
+        assert e2 > 10 * e127
+
+    def test_quant_forward_close_but_not_equal(self, params):
+        """w8a8 must perturb logits (that's the entire Fig. 5 mechanism) but
+        keep them in the same ballpark."""
+        cfg = M.DRAFTER
+        p = params["drafter"]
+        scales = Q.calibrate_act_scales(
+            cfg, p, [np.arange(24, dtype=np.int32)[None, :] % 44 + 4])
+        qp = Q.quantize_params(p)
+        t = jnp.arange(24, dtype=jnp.int32) % 44 + 4
+        a = M.forward(cfg, p, t, use_pallas=False)
+        b = M.forward(cfg, qp, t, use_pallas=False, quant=True, act_scales=scales)
+        diff = float(jnp.max(jnp.abs(a - b)))
+        assert 1e-6 < diff < 5.0, diff
+
+    def test_quant_pallas_matches_quant_ref(self, params):
+        cfg = M.DRAFTER
+        p = params["drafter"]
+        scales = Q.calibrate_act_scales(
+            cfg, p, [np.arange(16, dtype=np.int32)[None, :] % 44 + 4])
+        qp = Q.quantize_params(p)
+        t = jnp.arange(16, dtype=jnp.int32) % 44 + 4
+        a = M.forward(cfg, qp, t, use_pallas=True, quant=True, act_scales=scales)
+        b = M.forward(cfg, qp, t, use_pallas=False, quant=True, act_scales=scales)
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+
+    def test_act_scales_positive_and_complete(self, params):
+        cfg = M.DRAFTER
+        scales = Q.calibrate_act_scales(
+            cfg, params["drafter"],
+            [np.arange(16, dtype=np.int32)[None, :] % 44 + 4])
+        assert len(scales) == cfg.n_layers * len(M.LINEARS)
+        assert all(v > 0 for v in scales.values())

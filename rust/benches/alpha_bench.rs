@@ -1,0 +1,47 @@
+//! Bench: per-sample α measurement cost (the Fig. 5 experiment's unit of
+//! work — 2 forwards per generated token). Requires `make artifacts`.
+
+use specedge::bench::{Bench, BenchOpts};
+use specedge::config::KernelPath;
+use specedge::experiments::alpha::measure_alpha;
+use specedge::models::VariantKey;
+use specedge::runtime::Engine;
+use specedge::tokenizer::Tokenizer;
+use std::time::Duration;
+
+fn main() {
+    let Ok(engine) = Engine::load(std::path::Path::new("artifacts")) else {
+        eprintln!("SKIP alpha_bench: run `make artifacts` first");
+        return;
+    };
+    let tokenizer = Tokenizer::from_manifest(&engine.manifest.tokenizer_spec).unwrap();
+    let sample = engine
+        .manifest
+        .eval_samples
+        .iter()
+        .find(|s| s.task == "translate")
+        .unwrap()
+        .clone();
+    let d = VariantKey::parse("drafter_fp").unwrap();
+    let t = VariantKey::parse("target_w8a8").unwrap();
+    // warm compiles
+    measure_alpha(&engine, &tokenizer, d, t, KernelPath::Pallas, &sample, 8).unwrap();
+
+    let opts = BenchOpts {
+        warmup: Duration::from_millis(100),
+        measure: Duration::from_secs(6),
+        max_iters: 10,
+        min_iters: 2,
+    };
+    let mut b = Bench::with_opts("alpha", opts);
+    for max_new in [8usize, 24] {
+        b.bench(&format!("measure_alpha_{max_new}tok"), || {
+            std::hint::black_box(
+                measure_alpha(&engine, &tokenizer, d, t, KernelPath::Pallas,
+                              &sample, max_new)
+                    .unwrap(),
+            );
+        });
+    }
+    b.finish();
+}

@@ -1,0 +1,50 @@
+//! Bench: analytical cost model + DSE (Tables II/III generation path).
+//! These run on the serving hot path (adaptive routing evaluates Eq. 1 per
+//! request), so they must be effectively free.
+
+use specedge::bench::Bench;
+use specedge::costmodel;
+use specedge::dse::{self, PairConfig};
+use specedge::hetero::{LatencyModel, Platform};
+use specedge::models::{ModelSpec, Scheme};
+
+fn pair() -> PairConfig {
+    PairConfig {
+        target: ModelSpec {
+            name: "target".into(), n_layers: 4, d_model: 128, n_heads: 4,
+            ffn_dim: 352, vocab: 48, param_count: 816_256,
+        },
+        target_scheme: Scheme::W8a8,
+        drafter: ModelSpec {
+            name: "drafter".into(), n_layers: 2, d_model: 96, n_heads: 4,
+            ffn_dim: 256, vocab: 48, param_count: 230_880,
+        },
+        drafter_scheme: Scheme::Fp,
+    }
+}
+
+fn main() {
+    let mut b = Bench::new("costmodel");
+    b.bench("speedup_eq1", || {
+        std::hint::black_box(costmodel::speedup(
+            std::hint::black_box(0.9),
+            std::hint::black_box(5),
+            std::hint::black_box(0.358),
+        ));
+    });
+    b.bench("optimal_gamma", || {
+        std::hint::black_box(costmodel::optimal_gamma(
+            std::hint::black_box(0.9),
+            std::hint::black_box(0.358),
+        ));
+    });
+    let lat = LatencyModel::new(Platform::imx95());
+    let p = pair();
+    b.bench("explore_variant", || {
+        std::hint::black_box(dse::explore_variant(&lat, &p, 1, 0.9, 63));
+    });
+    b.bench("explore_all_table2", || {
+        std::hint::black_box(dse::explore_all(&lat, &p, 0.9, 63));
+    });
+    b.finish();
+}

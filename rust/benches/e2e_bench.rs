@@ -1,0 +1,52 @@
+//! Bench: end-to-end request latency through the FULL serving stack
+//! (coordinator + worker + policy + engine), baseline vs speculative —
+//! the headline-number bench. Requires `make artifacts`.
+
+use specedge::bench::{Bench, BenchOpts};
+use specedge::config::RunConfig;
+use specedge::coordinator::Coordinator;
+use specedge::hetero::Platform;
+use specedge::tokenizer::{Tokenizer, SEP_ID};
+use specedge::workload::Request;
+use std::path::PathBuf;
+use std::time::Duration;
+
+fn request(id: u64) -> Request {
+    let t = Tokenizer::builtin();
+    let mut prompt = t
+        .encode("tr: mogdi mogdi peni ture buda ture hevboco curih", true)
+        .unwrap();
+    prompt.push(SEP_ID);
+    Request { id, task: "translate".into(), prompt, truth: String::new(), arrival_s: 0.0 }
+}
+
+fn main() {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("SKIP e2e_bench: run `make artifacts` first");
+        return;
+    }
+    let opts = BenchOpts {
+        warmup: Duration::from_millis(100),
+        measure: Duration::from_secs(10),
+        max_iters: 8,
+        min_iters: 2,
+    };
+    let mut b = Bench::with_opts("e2e_serving", opts);
+
+    for (name, speculative) in [("baseline", false), ("speculative_g5", true)] {
+        let mut cfg = RunConfig::default();
+        cfg.artifacts_dir = PathBuf::from("artifacts");
+        cfg.speculative = speculative;
+        cfg.gamma = if speculative { Some(5) } else { None };
+        cfg.max_new_tokens = 32;
+        let coord = Coordinator::start(cfg, Platform::imx95()).unwrap();
+        coord.submit_blocking(request(0)).unwrap(); // warm compiles
+        let mut id = 1;
+        b.bench(&format!("{name}_request_32tok"), || {
+            std::hint::black_box(coord.submit_blocking(request(id)).unwrap());
+            id += 1;
+        });
+        coord.shutdown();
+    }
+    b.finish();
+}

@@ -1,0 +1,45 @@
+//! Bench: single forward-pass latency per (variant, kernel path, bucket)
+//! on the real PJRT CPU client — the data behind Fig. 6's real-hardware
+//! validation column and the L1 pallas-vs-ref perf comparison.
+//!
+//! Requires `make artifacts`.
+
+use specedge::bench::{Bench, BenchOpts};
+use specedge::config::KernelPath;
+use specedge::models::VariantKey;
+use specedge::runtime::Engine;
+use std::time::Duration;
+
+fn main() {
+    let Ok(engine) = Engine::load(std::path::Path::new("artifacts")) else {
+        eprintln!("SKIP forward_bench: run `make artifacts` first");
+        return;
+    };
+    let opts = BenchOpts {
+        warmup: Duration::from_millis(500),
+        measure: Duration::from_secs(3),
+        max_iters: 500,
+        min_iters: 3,
+    };
+    let mut b = Bench::with_opts("forward", opts);
+    for key in ["drafter_fp", "target_w8a8"] {
+        let v = VariantKey::parse(key).unwrap();
+        for kernel in [KernelPath::Pallas, KernelPath::Ref] {
+            for bucket in [16usize, 64, 128] {
+                let tokens: Vec<u32> =
+                    (0..bucket - 2).map(|i| 4 + (i % 40) as u32).collect();
+                // warm: compile outside the timed region
+                engine.forward(v, kernel, &tokens, bucket).unwrap();
+                b.bench(
+                    &format!("{key}/{}/s{bucket}", kernel.as_str()),
+                    || {
+                        std::hint::black_box(
+                            engine.forward(v, kernel, &tokens, bucket).unwrap(),
+                        );
+                    },
+                );
+            }
+        }
+    }
+    b.finish();
+}

@@ -1,0 +1,59 @@
+//! Bench: modular vs monolithic executor (paper §IV-D / Figs. 3-4).
+//! Same prompt, same γ — the real-PJRT cost of the per-call runtime-API
+//! boundary the paper holds responsible for part of its 4% deviation.
+//! Requires `make artifacts`.
+
+use specedge::bench::{Bench, BenchOpts};
+use specedge::config::{ExecMode, KernelPath};
+use specedge::hetero::{LatencyModel, Mapping, Platform};
+use specedge::models::VariantKey;
+use specedge::runtime::Engine;
+use specedge::spec::{AcceptRule, Decoder, DecoderSetup};
+use specedge::tokenizer::{Tokenizer, SEP_ID};
+use std::time::Duration;
+
+fn main() {
+    let Ok(engine) = Engine::load(std::path::Path::new("artifacts")) else {
+        eprintln!("SKIP modular_vs_monolithic: run `make artifacts` first");
+        return;
+    };
+    let tokenizer = Tokenizer::from_manifest(&engine.manifest.tokenizer_spec).unwrap();
+    let sample = engine
+        .manifest
+        .eval_samples
+        .iter()
+        .find(|s| s.task == "translate")
+        .unwrap()
+        .clone();
+    let mut prompt = tokenizer.encode(&sample.prompt, true).unwrap();
+    prompt.push(SEP_ID);
+
+    let opts = BenchOpts {
+        warmup: Duration::from_millis(100),
+        measure: Duration::from_secs(8),
+        max_iters: 8,
+        min_iters: 2,
+    };
+    let mut b = Bench::with_opts("mod_vs_mono", opts);
+    let lat = LatencyModel::new(Platform::imx95());
+    for gamma in [2usize, 5] {
+        for exec in [ExecMode::Modular, ExecMode::Monolithic] {
+            let setup = DecoderSetup {
+                drafter: VariantKey::parse("drafter_fp").unwrap(),
+                target: VariantKey::parse("target_w8a8").unwrap(),
+                kernel: KernelPath::Pallas,
+                mapping: Mapping::heterogeneous(1),
+                gamma,
+                rule: AcceptRule::Greedy,
+                exec,
+                max_new: 24,
+            };
+            let decoder = Decoder::new(&engine, lat.clone(), setup);
+            decoder.speculative(&prompt).unwrap(); // warm compile
+            b.bench(&format!("{}_g{gamma}_24tok", exec.as_str()), || {
+                std::hint::black_box(decoder.speculative(&prompt).unwrap());
+            });
+        }
+    }
+    b.finish();
+}

@@ -1,0 +1,79 @@
+//! Bench: coordinator substrate hot paths that sit on EVERY request —
+//! routing policy (adaptive Eq.-1 evaluation), queue push/pop, JSON
+//! protocol encode/decode, tokenizer. None of these touch PJRT, so this
+//! bench runs without artifacts.
+
+use specedge::bench::Bench;
+use specedge::config::RunConfig;
+use specedge::coordinator::queue::{QueueItem, RequestQueue};
+use specedge::coordinator::Policy;
+use specedge::hetero::Platform;
+use specedge::models::ModelSpec;
+use specedge::tokenizer::Tokenizer;
+use specedge::util::json::Json;
+use specedge::workload::Request;
+
+fn main() {
+    let mut b = Bench::new("router");
+
+    let cfg = RunConfig::default();
+    let policy = Policy::new(&cfg, Platform::imx95());
+    let d = ModelSpec {
+        name: "drafter".into(), n_layers: 2, d_model: 96, n_heads: 4,
+        ffn_dim: 256, vocab: 48, param_count: 230_880,
+    };
+    let t = ModelSpec {
+        name: "target".into(), n_layers: 4, d_model: 128, n_heads: 4,
+        ffn_dim: 352, vocab: 48, param_count: 816_256,
+    };
+    b.bench("policy_route", || {
+        std::hint::black_box(policy.route("translate", &d, &t, 63));
+    });
+    b.bench("policy_observe_alpha", || {
+        policy.observe_alpha("translate", std::hint::black_box(0.8));
+    });
+
+    let q = RequestQueue::new(1024);
+    b.bench("queue_push_pop", || {
+        let (tx, _rx) = std::sync::mpsc::channel();
+        let item = QueueItem {
+            request: Request {
+                id: 0, task: "t".into(), prompt: vec![1, 2, 3],
+                truth: String::new(), arrival_s: 0.0,
+            },
+            enqueued: std::time::Instant::now(),
+            respond: tx,
+        };
+        q.push(item).ok();
+        std::hint::black_box(q.pop());
+    });
+
+    let tok = Tokenizer::builtin();
+    let text = "tr: mogdi mogdi peni ture buda ture hevboco curih ture milori";
+    b.bench("tokenizer_encode_63", || {
+        std::hint::black_box(tok.encode(text, true).unwrap());
+    });
+    let ids = tok.encode(text, true).unwrap();
+    b.bench("tokenizer_decode_63", || {
+        std::hint::black_box(tok.decode(&ids));
+    });
+
+    let req = format!(
+        r#"{{"prompt":"{text}","task":"translate","max_new":64}}"#
+    );
+    b.bench("json_parse_request", || {
+        std::hint::black_box(Json::parse(&req).unwrap());
+    });
+    let mut reply = Json::obj();
+    reply
+        .set("ok", true.into())
+        .set("completion", Json::Str(text.into()))
+        .set("tokens", 60usize.into())
+        .set("sim_ms", 1669.1.into())
+        .set("alpha", 0.55.into());
+    b.bench("json_serialize_reply", || {
+        std::hint::black_box(reply.to_string());
+    });
+
+    b.finish();
+}

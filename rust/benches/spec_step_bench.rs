@@ -1,0 +1,63 @@
+//! Bench: one speculative decode per γ (modular path) plus the baseline —
+//! the end-to-end data behind Fig. 7b and the headline speedup.
+//! Requires `make artifacts`.
+
+use specedge::bench::{Bench, BenchOpts};
+use specedge::config::{ExecMode, KernelPath};
+use specedge::hetero::{LatencyModel, Mapping, Platform};
+use specedge::models::VariantKey;
+use specedge::runtime::Engine;
+use specedge::spec::{AcceptRule, Decoder, DecoderSetup};
+use specedge::tokenizer::{Tokenizer, SEP_ID};
+use std::time::Duration;
+
+fn main() {
+    let Ok(engine) = Engine::load(std::path::Path::new("artifacts")) else {
+        eprintln!("SKIP spec_step_bench: run `make artifacts` first");
+        return;
+    };
+    let tokenizer = Tokenizer::from_manifest(&engine.manifest.tokenizer_spec).unwrap();
+    let sample = engine
+        .manifest
+        .eval_samples
+        .iter()
+        .find(|s| s.task == "translate")
+        .unwrap()
+        .clone();
+    let mut prompt = tokenizer.encode(&sample.prompt, true).unwrap();
+    prompt.push(SEP_ID);
+
+    let opts = BenchOpts {
+        warmup: Duration::from_millis(100),
+        measure: Duration::from_secs(8),
+        max_iters: 10,
+        min_iters: 2,
+    };
+    let mut b = Bench::with_opts("spec_decode", opts);
+    let lat = LatencyModel::new(Platform::imx95());
+
+    let mk = |gamma| DecoderSetup {
+        drafter: VariantKey::parse("drafter_fp").unwrap(),
+        target: VariantKey::parse("target_w8a8").unwrap(),
+        kernel: KernelPath::Pallas,
+        mapping: Mapping::heterogeneous(1),
+        gamma,
+        rule: AcceptRule::Greedy,
+        exec: ExecMode::Modular,
+        max_new: 32,
+    };
+
+    let decoder = Decoder::new(&engine, lat.clone(), mk(1));
+    decoder.baseline(&prompt).unwrap(); // warm compile
+    b.bench("baseline_32tok", || {
+        std::hint::black_box(decoder.baseline(&prompt).unwrap());
+    });
+    for gamma in [1usize, 3, 5] {
+        let decoder = Decoder::new(&engine, lat.clone(), mk(gamma));
+        decoder.speculative(&prompt).unwrap();
+        b.bench(&format!("speculative_g{gamma}_32tok"), || {
+            std::hint::black_box(decoder.speculative(&prompt).unwrap());
+        });
+    }
+    b.finish();
+}

@@ -1,0 +1,165 @@
+//! Mini-criterion: a small benchmark harness for the `cargo bench` targets
+//! (criterion itself is unavailable offline — DESIGN.md §1).
+//!
+//! Usage in a `harness = false` bench target:
+//!
+//! ```ignore
+//! let mut b = Bench::new("costmodel");
+//! b.bench("optimal_gamma", || { costmodel::optimal_gamma(0.9, 0.358); });
+//! b.finish();
+//! ```
+//!
+//! Each benchmark warms up, then runs timed batches until a time budget is
+//! spent, reporting mean / p50 / p95 per iteration and writing a CSV next to
+//! the results dir if `SPECEDGE_BENCH_OUT` is set.
+
+use crate::util::stats::Summary;
+use std::time::{Duration, Instant};
+
+pub struct BenchOpts {
+    pub warmup: Duration,
+    pub measure: Duration,
+    /// Upper bound on iterations (useful for very slow end-to-end benches).
+    pub max_iters: u64,
+    pub min_iters: u64,
+}
+
+impl Default for BenchOpts {
+    fn default() -> BenchOpts {
+        BenchOpts {
+            warmup: Duration::from_millis(300),
+            measure: Duration::from_secs(2),
+            max_iters: 1_000_000,
+            min_iters: 5,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub group: String,
+    pub name: String,
+    pub iters: u64,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+}
+
+pub struct Bench {
+    group: String,
+    opts: BenchOpts,
+    results: Vec<BenchResult>,
+}
+
+impl Bench {
+    pub fn new(group: &str) -> Bench {
+        Bench { group: group.to_string(), opts: BenchOpts::default(), results: Vec::new() }
+    }
+
+    pub fn with_opts(group: &str, opts: BenchOpts) -> Bench {
+        Bench { group: group.to_string(), opts, results: Vec::new() }
+    }
+
+    /// Time `f` (called once per iteration).
+    pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) -> &BenchResult {
+        // Warmup.
+        let w0 = Instant::now();
+        let mut warm_iters = 0u64;
+        while w0.elapsed() < self.opts.warmup && warm_iters < self.opts.max_iters {
+            f();
+            warm_iters += 1;
+        }
+        // Measure.
+        let mut lat = Summary::new();
+        let m0 = Instant::now();
+        let mut iters = 0u64;
+        while (m0.elapsed() < self.opts.measure && iters < self.opts.max_iters)
+            || iters < self.opts.min_iters
+        {
+            let t0 = Instant::now();
+            f();
+            lat.push(t0.elapsed().as_secs_f64());
+            iters += 1;
+        }
+        let r = BenchResult {
+            group: self.group.clone(),
+            name: name.to_string(),
+            iters,
+            mean_s: lat.mean(),
+            p50_s: lat.percentile(50.0),
+            p95_s: lat.percentile(95.0),
+        };
+        println!(
+            "{:<40} {:>10} iters  mean {:>12}  p50 {:>12}  p95 {:>12}",
+            format!("{}/{}", r.group, r.name),
+            r.iters,
+            fmt_time(r.mean_s),
+            fmt_time(r.p50_s),
+            fmt_time(r.p95_s),
+        );
+        self.results.push(r);
+        self.results.last().unwrap()
+    }
+
+    /// Print the footer and optionally dump CSV (SPECEDGE_BENCH_OUT=dir).
+    pub fn finish(self) {
+        if let Ok(dir) = std::env::var("SPECEDGE_BENCH_OUT") {
+            let path = std::path::Path::new(&dir)
+                .join(format!("bench_{}.csv", self.group.replace('/', "_")));
+            let mut csv = String::from("group,name,iters,mean_s,p50_s,p95_s\n");
+            for r in &self.results {
+                csv.push_str(&format!(
+                    "{},{},{},{:.9},{:.9},{:.9}\n",
+                    r.group, r.name, r.iters, r.mean_s, r.p50_s, r.p95_s
+                ));
+            }
+            let _ = std::fs::create_dir_all(&dir);
+            let _ = std::fs::write(path, csv);
+        }
+    }
+}
+
+pub fn fmt_time(s: f64) -> String {
+    if !s.is_finite() {
+        return "n/a".to_string();
+    }
+    if s < 1e-6 {
+        format!("{:.1} ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2} µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2} ms", s * 1e3)
+    } else {
+        format!("{:.3} s", s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_and_reports() {
+        let mut b = Bench::with_opts(
+            "test",
+            BenchOpts {
+                warmup: Duration::from_millis(1),
+                measure: Duration::from_millis(20),
+                max_iters: 10_000,
+                min_iters: 5,
+            },
+        );
+        let r = b.bench("noop", || { std::hint::black_box(1 + 1); }).clone();
+        assert!(r.iters >= 5);
+        assert!(r.mean_s >= 0.0);
+        b.finish();
+    }
+
+    #[test]
+    fn fmt_times() {
+        assert!(fmt_time(5e-9).contains("ns"));
+        assert!(fmt_time(5e-6).contains("µs"));
+        assert!(fmt_time(5e-3).contains("ms"));
+        assert!(fmt_time(5.0).contains(" s"));
+    }
+}

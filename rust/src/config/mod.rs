@@ -1,0 +1,255 @@
+//! Typed run configuration.
+//!
+//! Every binary (CLI subcommands, examples, benches) builds a [`RunConfig`]
+//! from defaults + an optional JSON config file + CLI overrides. The
+//! platform calibration (the simulated i.MX95) lives in its own file,
+//! `configs/imx95.json`, parsed by `hetero::platform`.
+
+use crate::util::json::Json;
+use std::path::{Path, PathBuf};
+
+/// How the engine composes drafter and target (paper Figs. 3 & 4).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExecMode {
+    /// Separate compiled modules; control flow in Rust; per-call boundary
+    /// overhead (the paper's deployed configuration).
+    Modular,
+    /// One fused spec-step HLO per γ; draft loop + verify in-graph.
+    Monolithic,
+}
+
+impl ExecMode {
+    pub fn parse(s: &str) -> anyhow::Result<ExecMode> {
+        match s {
+            "modular" => Ok(ExecMode::Modular),
+            "monolithic" => Ok(ExecMode::Monolithic),
+            _ => anyhow::bail!("exec mode must be modular|monolithic, got {s:?}"),
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ExecMode::Modular => "modular",
+            ExecMode::Monolithic => "monolithic",
+        }
+    }
+}
+
+/// Which clock drives reported latencies.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Timing {
+    /// Virtual clock from the calibrated PU latency model (paper-comparable;
+    /// the default — this is how we stand in for the i.MX95 silicon).
+    Simulated,
+    /// Real wall-clock of the PJRT CPU execution on this machine.
+    Real,
+}
+
+impl Timing {
+    pub fn parse(s: &str) -> anyhow::Result<Timing> {
+        match s {
+            "simulated" => Ok(Timing::Simulated),
+            "real" => Ok(Timing::Real),
+            _ => anyhow::bail!("timing must be simulated|real, got {s:?}"),
+        }
+    }
+}
+
+/// Kernel path baked into the artifacts the engine loads.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum KernelPath {
+    /// Pallas kernels (interpret=True lowering) — the L1 deliverable.
+    Pallas,
+    /// Pure-jnp reference lowering — ablation / fast path.
+    Ref,
+}
+
+impl KernelPath {
+    pub fn parse(s: &str) -> anyhow::Result<KernelPath> {
+        match s {
+            "pallas" => Ok(KernelPath::Pallas),
+            "ref" => Ok(KernelPath::Ref),
+            _ => anyhow::bail!("kernel path must be pallas|ref, got {s:?}"),
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            KernelPath::Pallas => "pallas",
+            KernelPath::Ref => "ref",
+        }
+    }
+}
+
+/// Complete engine + serving configuration.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    /// Directory with manifest.json, *.hlo.txt, weights_*.bin.
+    pub artifacts_dir: PathBuf,
+    /// Platform calibration file (None -> built-in i.MX95 defaults).
+    pub platform_file: Option<PathBuf>,
+    pub exec_mode: ExecMode,
+    pub timing: Timing,
+    pub kernel_path: KernelPath,
+    /// Draft length; None = let the cost model pick γ* per request.
+    pub gamma: Option<usize>,
+    /// Speculation on/off (off = plain autoregressive baseline).
+    pub speculative: bool,
+    /// Design variant (1-based: number of CPU cores available), paper §III-B.
+    pub design_variant: usize,
+    /// Heterogeneous mapping: drafter on GPU, target on CPU.
+    pub heterogeneous: bool,
+    /// Max new tokens per request.
+    pub max_new_tokens: usize,
+    /// Serving: number of engine workers.
+    pub workers: usize,
+    /// Serving: TCP port.
+    pub port: u16,
+    /// Serving: queue capacity before backpressure rejects.
+    pub queue_capacity: usize,
+    /// Batch limit for the dynamic batcher (1 = no batching).
+    pub max_batch: usize,
+    /// RNG seed (workload, stochastic sampling).
+    pub seed: u64,
+}
+
+impl Default for RunConfig {
+    fn default() -> RunConfig {
+        RunConfig {
+            artifacts_dir: PathBuf::from(crate::DEFAULT_ARTIFACTS_DIR),
+            platform_file: None,
+            exec_mode: ExecMode::Modular,
+            timing: Timing::Simulated,
+            kernel_path: KernelPath::Pallas,
+            gamma: None,
+            speculative: true,
+            design_variant: 1,
+            heterogeneous: true,
+            max_new_tokens: 64,
+            workers: 1,
+            port: 7643,
+            queue_capacity: 256,
+            max_batch: 1,
+            seed: 0xC0FFEE,
+        }
+    }
+}
+
+impl RunConfig {
+    /// Merge a JSON config file over the defaults.
+    pub fn from_file(path: &Path) -> anyhow::Result<RunConfig> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading {path:?}: {e}"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{path:?}: {e}"))?;
+        let mut c = RunConfig::default();
+        c.apply_json(&j)?;
+        Ok(c)
+    }
+
+    pub fn apply_json(&mut self, j: &Json) -> anyhow::Result<()> {
+        if let Some(v) = j.get("artifacts_dir").and_then(Json::as_str) {
+            self.artifacts_dir = PathBuf::from(v);
+        }
+        if let Some(v) = j.get("platform_file").and_then(Json::as_str) {
+            self.platform_file = Some(PathBuf::from(v));
+        }
+        if let Some(v) = j.get("exec_mode").and_then(Json::as_str) {
+            self.exec_mode = ExecMode::parse(v)?;
+        }
+        if let Some(v) = j.get("timing").and_then(Json::as_str) {
+            self.timing = Timing::parse(v)?;
+        }
+        if let Some(v) = j.get("kernel_path").and_then(Json::as_str) {
+            self.kernel_path = KernelPath::parse(v)?;
+        }
+        if let Some(v) = j.get("gamma").and_then(Json::as_usize) {
+            self.gamma = Some(v);
+        }
+        if let Some(v) = j.get("speculative").and_then(Json::as_bool) {
+            self.speculative = v;
+        }
+        if let Some(v) = j.get("design_variant").and_then(Json::as_usize) {
+            self.design_variant = v;
+        }
+        if let Some(v) = j.get("heterogeneous").and_then(Json::as_bool) {
+            self.heterogeneous = v;
+        }
+        if let Some(v) = j.get("max_new_tokens").and_then(Json::as_usize) {
+            self.max_new_tokens = v;
+        }
+        if let Some(v) = j.get("workers").and_then(Json::as_usize) {
+            self.workers = v;
+        }
+        if let Some(v) = j.get("port").and_then(Json::as_usize) {
+            self.port = v as u16;
+        }
+        if let Some(v) = j.get("queue_capacity").and_then(Json::as_usize) {
+            self.queue_capacity = v;
+        }
+        if let Some(v) = j.get("max_batch").and_then(Json::as_usize) {
+            self.max_batch = v;
+        }
+        if let Some(v) = j.get("seed").and_then(Json::as_f64) {
+            self.seed = v as u64;
+        }
+        self.validate()
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            (1..=6).contains(&self.design_variant),
+            "design_variant must be 1..=6 (CPU core count on the i.MX95)"
+        );
+        anyhow::ensure!(self.workers >= 1, "workers must be >= 1");
+        anyhow::ensure!(self.max_batch >= 1, "max_batch must be >= 1");
+        if let Some(g) = self.gamma {
+            anyhow::ensure!((1..=8).contains(&g), "gamma must be 1..=8");
+        }
+        Ok(())
+    }
+
+    pub fn manifest_path(&self) -> PathBuf {
+        self.artifacts_dir.join("manifest.json")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_valid() {
+        RunConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn json_overrides() {
+        let mut c = RunConfig::default();
+        let j = Json::parse(
+            r#"{"exec_mode":"monolithic","gamma":3,"design_variant":2,
+                "timing":"real","speculative":false,"max_batch":4}"#,
+        )
+        .unwrap();
+        c.apply_json(&j).unwrap();
+        assert_eq!(c.exec_mode, ExecMode::Monolithic);
+        assert_eq!(c.gamma, Some(3));
+        assert_eq!(c.design_variant, 2);
+        assert_eq!(c.timing, Timing::Real);
+        assert!(!c.speculative);
+        assert_eq!(c.max_batch, 4);
+    }
+
+    #[test]
+    fn invalid_variant_rejected() {
+        let mut c = RunConfig::default();
+        let j = Json::parse(r#"{"design_variant":9}"#).unwrap();
+        assert!(c.apply_json(&j).is_err());
+    }
+
+    #[test]
+    fn invalid_mode_rejected() {
+        let mut c = RunConfig::default();
+        let j = Json::parse(r#"{"exec_mode":"fused"}"#).unwrap();
+        assert!(c.apply_json(&j).is_err());
+    }
+}

@@ -1,0 +1,105 @@
+//! Dynamic batching for non-speculative (baseline) decode.
+//!
+//! Without a KV cache, batching is lockstep full-sequence re-encoding:
+//! requests grouped into one `forward_batch` call advance one token each
+//! per step, padded to a shared bucket. Finished sequences are carried as
+//! padding until the whole batch drains (classic static-batching tail —
+//! measured and reported, which is exactly why speculative decoding is the
+//! more interesting single-stream path on edge).
+//!
+//! Speculative requests are never batched (the paper is single-stream; the
+//! divergent accept lengths would force per-item recompute anyway).
+
+use crate::config::KernelPath;
+use crate::models::VariantKey;
+use crate::runtime::Engine;
+use crate::tokenizer::EOS_ID;
+
+/// Outcome for one batched request.
+#[derive(Debug, Clone)]
+pub struct BatchItemOutcome {
+    pub tokens: Vec<u32>,
+    pub target_calls: usize,
+    pub real_s: f64,
+    /// Simulated seconds attributed to this item (batch cost / batch size —
+    /// the standard per-request amortization).
+    pub sim_s: f64,
+}
+
+/// Lockstep batched greedy decode of up to `prompts.len()` requests.
+///
+/// `sim_forward(bucket, batch)` supplies the simulated cost of one batched
+/// forward (the latency model scales with batch externally).
+pub fn batched_baseline(
+    engine: &Engine,
+    target: VariantKey,
+    kernel: KernelPath,
+    prompts: &[Vec<u32>],
+    max_new: usize,
+    sim_forward: &dyn Fn(usize, usize) -> f64,
+) -> anyhow::Result<Vec<BatchItemOutcome>> {
+    let b = prompts.len();
+    anyhow::ensure!(b >= 1);
+    // Artifacts exist only for the manifest's batch sizes; pad a partial
+    // batch (e.g. 3 requests with {1,4} compiled) by replicating the first
+    // prompt — the filler lanes' outputs are discarded below.
+    let exec_b = engine
+        .manifest
+        .batch_sizes
+        .iter()
+        .copied()
+        .filter(|&n| n >= b)
+        .min()
+        .ok_or_else(|| anyhow::anyhow!(
+            "batch {b} exceeds the largest compiled batch size"))?;
+    let max_total = engine.manifest.largest_bucket();
+    let mut seqs: Vec<Vec<u32>> = prompts.to_vec();
+    while seqs.len() < exec_b {
+        seqs.push(prompts[0].clone());
+    }
+    let mut done = vec![false; b];
+    let mut out: Vec<BatchItemOutcome> = (0..b)
+        .map(|_| BatchItemOutcome { tokens: vec![], target_calls: 0, real_s: 0.0, sim_s: 0.0 })
+        .collect();
+
+    for _ in 0..max_new {
+        if done.iter().all(|&d| d) {
+            break;
+        }
+        let longest = seqs.iter().map(Vec::len).max().unwrap();
+        if longest + 1 > max_total {
+            break;
+        }
+        let bucket = engine.bucket_for(longest)?;
+        let views: Vec<&[u32]> = seqs.iter().map(|s| s.as_slice()).collect();
+        let fwd = engine.forward_batch(target, kernel, &views, bucket)?;
+        let sim = sim_forward(bucket, b);
+        // Filler lanes (i >= b) track lane 0 but produce no outcome.
+        for i in b..exec_b {
+            if !done[0] {
+                let pos = seqs[i].len() - 1;
+                let nxt = fwd.argmax(i, pos);
+                if nxt != EOS_ID && seqs[i].len() + 1 < max_total {
+                    seqs[i].push(nxt);
+                }
+            }
+        }
+        for i in 0..b {
+            out[i].real_s += fwd.elapsed_s / b as f64;
+            out[i].sim_s += sim / b as f64;
+            if done[i] {
+                continue;
+            }
+            out[i].target_calls += 1;
+            let pos = seqs[i].len() - 1;
+            let nxt = fwd.argmax(i, pos);
+            if nxt == EOS_ID || seqs[i].len() + 1 >= max_total {
+                done[i] = true;
+                continue;
+            }
+            seqs[i].push(nxt);
+            out[i].tokens.push(nxt);
+        }
+    }
+    Ok(out)
+}

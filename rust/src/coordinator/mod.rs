@@ -1,0 +1,128 @@
+//! The serving coordinator — Layer 3's vLLM-router-shaped core.
+//!
+//! * [`queue`] — bounded request queue with backpressure (reject-on-full)
+//! * [`policy`] — adaptive routing policy: per-task α estimates feed the
+//!   cost model, which picks speculation on/off and γ* per request
+//! * [`batcher`] — groups compatible requests for batched baseline decode
+//! * [`worker`] — engine worker threads (one PJRT engine each)
+//!
+//! Flow: client → [`Coordinator::submit`] → queue → worker (policy → decode)
+//! → response channel; metrics are recorded centrally.
+
+pub mod batcher;
+pub mod policy;
+pub mod queue;
+pub mod worker;
+
+use crate::config::RunConfig;
+use crate::hetero::Platform;
+use crate::metrics::Metrics;
+use crate::workload::Request;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+
+pub use policy::{Policy, RouteDecision};
+pub use queue::{QueueItem, RequestQueue};
+
+/// Response for one request.
+#[derive(Debug, Clone)]
+pub struct EngineResponse {
+    pub id: u64,
+    pub tokens: Vec<u32>,
+    pub completion: String,
+    pub sim_s: f64,
+    pub real_s: f64,
+    pub queue_s: f64,
+    pub alpha: f64,
+    pub speculative: bool,
+    pub gamma: usize,
+}
+
+/// Running coordinator: queue + worker pool + metrics.
+pub struct Coordinator {
+    queue: Arc<RequestQueue>,
+    pub metrics: Arc<Metrics>,
+    pub policy: Arc<Policy>,
+    shutdown: Arc<AtomicBool>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl Coordinator {
+    /// Spawn `cfg.workers` engine workers and return the running coordinator.
+    pub fn start(cfg: RunConfig, platform: Platform) -> anyhow::Result<Coordinator> {
+        let queue = Arc::new(RequestQueue::new(cfg.queue_capacity));
+        let metrics = Arc::new(Metrics::new());
+        let policy = Arc::new(Policy::new(&cfg, platform.clone()));
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let mut handles = Vec::new();
+        let (ready_tx, ready_rx) = mpsc::channel::<anyhow::Result<()>>();
+        for wid in 0..cfg.workers {
+            let queue = Arc::clone(&queue);
+            let metrics = Arc::clone(&metrics);
+            let policy = Arc::clone(&policy);
+            let shutdown = Arc::clone(&shutdown);
+            let cfg = cfg.clone();
+            let platform = platform.clone();
+            let ready = ready_tx.clone();
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("engine-worker-{wid}"))
+                    .spawn(move || {
+                        worker::run_worker(
+                            wid, cfg, platform, queue, metrics, policy, shutdown, ready,
+                        );
+                    })
+                    .expect("spawn worker"),
+            );
+        }
+        drop(ready_tx);
+        // Wait for every worker's engine to come up (or fail fast).
+        for _ in 0..cfg.workers {
+            ready_rx
+                .recv()
+                .map_err(|_| anyhow::anyhow!("worker died during startup"))??;
+        }
+        Ok(Coordinator { queue, metrics, policy, shutdown, handles })
+    }
+
+    /// Submit a request; returns the response receiver, or Err on
+    /// backpressure (queue full).
+    pub fn submit(
+        &self,
+        req: Request,
+    ) -> anyhow::Result<mpsc::Receiver<EngineResponse>> {
+        let (tx, rx) = mpsc::channel();
+        let item = QueueItem {
+            request: req,
+            enqueued: std::time::Instant::now(),
+            respond: tx,
+        };
+        match self.queue.push(item) {
+            Ok(()) => Ok(rx),
+            Err(_) => {
+                self.metrics.record_rejected();
+                anyhow::bail!("queue full (backpressure)")
+            }
+        }
+    }
+
+    /// Convenience: submit and block for the response.
+    pub fn submit_blocking(&self, req: Request) -> anyhow::Result<EngineResponse> {
+        let rx = self.submit(req)?;
+        rx.recv()
+            .map_err(|_| anyhow::anyhow!("worker dropped the request"))
+    }
+
+    /// Drain and stop all workers.
+    pub fn shutdown(mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        self.queue.close();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+
+    pub fn queue_len(&self) -> usize {
+        self.queue.len()
+    }
+}

@@ -1,0 +1,223 @@
+//! Adaptive routing policy: the cost model applied *online*.
+//!
+//! The paper's workflow decides (speculation?, mapping, γ) offline from
+//! profiled (α, c). A serving system can do better: the router keeps a
+//! per-task running estimate of α (EWMA over per-request acceptance rates)
+//! and re-evaluates Eq. (1) per request, so a task whose drafts keep getting
+//! rejected automatically falls back to plain autoregressive decoding —
+//! exactly the "naive adoption can increase latency" failure mode the paper
+//! warns about, handled at runtime. (Extension beyond the paper; ablated in
+//! the router bench.)
+
+use crate::config::RunConfig;
+use crate::costmodel;
+use crate::hetero::{LatencyModel, Mapping, Platform};
+use crate::models::{Scheme, VariantKey};
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+/// Per-request routing decision.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RouteDecision {
+    pub speculative: bool,
+    pub gamma: usize,
+    pub mapping: Mapping,
+    /// Predicted speedup at decision time (diagnostics).
+    pub predicted_speedup: f64,
+    /// The α estimate the decision used.
+    pub alpha_used: f64,
+}
+
+/// Shared routing policy.
+pub struct Policy {
+    lat: LatencyModel,
+    fixed_gamma: Option<usize>,
+    speculative_enabled: bool,
+    adaptive: bool,
+    mapping: Mapping,
+    drafter: VariantKey,
+    target: VariantKey,
+    /// Per-task EWMA of acceptance rate.
+    alpha: Mutex<HashMap<String, f64>>,
+    /// Optimistic prior before any observation (the paper's p90 α).
+    prior_alpha: f64,
+    ewma: f64,
+}
+
+impl Policy {
+    pub fn new(cfg: &RunConfig, platform: Platform) -> Policy {
+        let mapping = if cfg.heterogeneous {
+            Mapping::heterogeneous(cfg.design_variant)
+        } else {
+            Mapping::homogeneous(cfg.design_variant)
+        };
+        Policy {
+            lat: LatencyModel::new(platform),
+            fixed_gamma: cfg.gamma,
+            speculative_enabled: cfg.speculative,
+            adaptive: cfg.gamma.is_none(),
+            mapping,
+            drafter: VariantKey::parse("drafter_fp").unwrap(),
+            target: VariantKey::parse("target_w8a8").unwrap(),
+            alpha: Mutex::new(HashMap::new()),
+            prior_alpha: 0.90,
+            ewma: 0.2,
+        }
+    }
+
+    pub fn variants(&self) -> (VariantKey, VariantKey) {
+        (self.drafter, self.target)
+    }
+
+    pub fn latency_model(&self) -> &LatencyModel {
+        &self.lat
+    }
+
+    /// Current α estimate for a task.
+    pub fn alpha_estimate(&self, task: &str) -> f64 {
+        self.alpha
+            .lock()
+            .unwrap()
+            .get(task)
+            .copied()
+            .unwrap_or(self.prior_alpha)
+    }
+
+    /// Decide the execution plan for one request.
+    pub fn route(
+        &self,
+        task: &str,
+        d_spec: &crate::models::ModelSpec,
+        t_spec: &crate::models::ModelSpec,
+        seq_len: usize,
+    ) -> RouteDecision {
+        if !self.speculative_enabled {
+            return RouteDecision {
+                speculative: false,
+                gamma: 0,
+                mapping: self.mapping,
+                predicted_speedup: 1.0,
+                alpha_used: f64::NAN,
+            };
+        }
+        let alpha = self.alpha_estimate(task);
+        let c = self.lat.cost_coefficient(
+            (d_spec, Scheme::Fp),
+            (t_spec, Scheme::W8a8),
+            self.mapping,
+            seq_len,
+        );
+        if let Some(g) = self.fixed_gamma {
+            // Fixed-γ mode: still predict the speedup for diagnostics.
+            return RouteDecision {
+                speculative: true,
+                gamma: g,
+                mapping: self.mapping,
+                predicted_speedup: costmodel::speedup(alpha, g, c),
+                alpha_used: alpha,
+            };
+        }
+        let choice = costmodel::optimal_gamma(alpha, c);
+        RouteDecision {
+            speculative: choice.gamma > 0,
+            gamma: choice.gamma,
+            mapping: self.mapping,
+            predicted_speedup: choice.speedup,
+            alpha_used: alpha,
+        }
+    }
+
+    /// Feed back an observed per-request acceptance rate.
+    pub fn observe_alpha(&self, task: &str, observed: f64) {
+        if !observed.is_finite() || !self.adaptive {
+            return;
+        }
+        let mut m = self.alpha.lock().unwrap();
+        let e = m.entry(task.to_string()).or_insert(self.prior_alpha);
+        *e = (1.0 - self.ewma) * *e + self.ewma * observed;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::ModelSpec;
+
+    fn specs() -> (ModelSpec, ModelSpec) {
+        (
+            ModelSpec {
+                name: "drafter".into(), n_layers: 2, d_model: 96, n_heads: 4,
+                ffn_dim: 256, vocab: 48, param_count: 230_880,
+            },
+            ModelSpec {
+                name: "target".into(), n_layers: 4, d_model: 128, n_heads: 4,
+                ffn_dim: 352, vocab: 48, param_count: 816_256,
+            },
+        )
+    }
+
+    fn policy(cfg: &RunConfig) -> Policy {
+        Policy::new(cfg, Platform::imx95())
+    }
+
+    #[test]
+    fn optimistic_prior_speculates() {
+        let cfg = RunConfig::default();
+        let p = policy(&cfg);
+        let (d, t) = specs();
+        let dec = p.route("translate", &d, &t, 63);
+        assert!(dec.speculative);
+        assert!(dec.gamma >= 3, "{dec:?}");
+        assert!(dec.predicted_speedup > 1.3);
+    }
+
+    #[test]
+    fn low_alpha_task_falls_back_to_baseline() {
+        let cfg = RunConfig::default();
+        let p = policy(&cfg);
+        let (d, t) = specs();
+        // Hammer the estimate down with rejections.
+        for _ in 0..60 {
+            p.observe_alpha("hard-task", 0.05);
+        }
+        let dec = p.route("hard-task", &d, &t, 63);
+        assert!(!dec.speculative, "{dec:?}");
+        // Other tasks keep the optimistic prior.
+        assert!(p.route("translate", &d, &t, 63).speculative);
+    }
+
+    #[test]
+    fn fixed_gamma_respected() {
+        let mut cfg = RunConfig::default();
+        cfg.gamma = Some(2);
+        let p = policy(&cfg);
+        let (d, t) = specs();
+        let dec = p.route("translate", &d, &t, 63);
+        assert!(dec.speculative);
+        assert_eq!(dec.gamma, 2);
+        // Fixed γ also disables adaptation.
+        p.observe_alpha("translate", 0.0);
+        assert!((p.alpha_estimate("translate") - 0.90).abs() < 1e-12);
+    }
+
+    #[test]
+    fn speculation_disabled_routes_baseline() {
+        let mut cfg = RunConfig::default();
+        cfg.speculative = false;
+        let p = policy(&cfg);
+        let (d, t) = specs();
+        let dec = p.route("translate", &d, &t, 63);
+        assert!(!dec.speculative);
+        assert_eq!(dec.gamma, 0);
+    }
+
+    #[test]
+    fn ewma_converges() {
+        let cfg = RunConfig::default();
+        let p = policy(&cfg);
+        for _ in 0..100 {
+            p.observe_alpha("t", 0.5);
+        }
+        assert!((p.alpha_estimate("t") - 0.5).abs() < 0.01);
+    }
+}

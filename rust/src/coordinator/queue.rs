@@ -1,0 +1,166 @@
+//! Bounded MPMC request queue with blocking pop and reject-on-full push —
+//! the backpressure point of the serving pipeline.
+
+use crate::workload::Request;
+use std::collections::VecDeque;
+use std::sync::{mpsc, Condvar, Mutex};
+use std::time::Instant;
+
+/// A queued request plus its response channel.
+pub struct QueueItem {
+    pub request: Request,
+    pub enqueued: Instant,
+    pub respond: mpsc::Sender<super::EngineResponse>,
+}
+
+/// Bounded FIFO. `push` fails when full (callers surface 429-style
+/// rejection); `pop` blocks until an item arrives or the queue is closed.
+pub struct RequestQueue {
+    inner: Mutex<Inner>,
+    not_empty: Condvar,
+    capacity: usize,
+}
+
+struct Inner {
+    items: VecDeque<QueueItem>,
+    closed: bool,
+}
+
+impl RequestQueue {
+    pub fn new(capacity: usize) -> RequestQueue {
+        RequestQueue {
+            inner: Mutex::new(Inner { items: VecDeque::new(), closed: false }),
+            not_empty: Condvar::new(),
+            capacity,
+        }
+    }
+
+    /// Non-blocking push; Err(item) when full or closed.
+    pub fn push(&self, item: QueueItem) -> Result<(), QueueItem> {
+        let mut g = self.inner.lock().unwrap();
+        if g.closed || g.items.len() >= self.capacity {
+            return Err(item);
+        }
+        g.items.push_back(item);
+        drop(g);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Blocking pop; None when the queue is closed and drained.
+    pub fn pop(&self) -> Option<QueueItem> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(item) = g.items.pop_front() {
+                return Some(item);
+            }
+            if g.closed {
+                return None;
+            }
+            g = self.not_empty.wait(g).unwrap();
+        }
+    }
+
+    /// Pop up to `max` items without blocking beyond the first (dynamic
+    /// batching: take what's there, don't wait for stragglers).
+    pub fn pop_batch(&self, max: usize) -> Vec<QueueItem> {
+        let first = match self.pop() {
+            Some(f) => f,
+            None => return Vec::new(),
+        };
+        let mut batch = vec![first];
+        if max > 1 {
+            let mut g = self.inner.lock().unwrap();
+            while batch.len() < max {
+                match g.items.pop_front() {
+                    Some(i) => batch.push(i),
+                    None => break,
+                }
+            }
+        }
+        batch
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.not_empty.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn item(id: u64) -> QueueItem {
+        let (tx, _rx) = mpsc::channel();
+        QueueItem {
+            request: Request {
+                id,
+                task: "t".into(),
+                prompt: vec![1],
+                truth: String::new(),
+                arrival_s: 0.0,
+            },
+            enqueued: Instant::now(),
+            respond: tx,
+        }
+    }
+
+    #[test]
+    fn fifo_order() {
+        let q = RequestQueue::new(10);
+        q.push(item(1)).ok().unwrap();
+        q.push(item(2)).ok().unwrap();
+        assert_eq!(q.pop().unwrap().request.id, 1);
+        assert_eq!(q.pop().unwrap().request.id, 2);
+    }
+
+    #[test]
+    fn backpressure_rejects_when_full() {
+        let q = RequestQueue::new(2);
+        assert!(q.push(item(1)).is_ok());
+        assert!(q.push(item(2)).is_ok());
+        assert!(q.push(item(3)).is_err());
+        q.pop();
+        assert!(q.push(item(4)).is_ok());
+    }
+
+    #[test]
+    fn close_unblocks_poppers() {
+        let q = Arc::new(RequestQueue::new(4));
+        let q2 = Arc::clone(&q);
+        let h = std::thread::spawn(move || q2.pop().is_none());
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        q.close();
+        assert!(h.join().unwrap());
+    }
+
+    #[test]
+    fn pop_batch_takes_available() {
+        let q = RequestQueue::new(10);
+        for i in 0..5 {
+            q.push(item(i)).ok().unwrap();
+        }
+        let b = q.pop_batch(3);
+        assert_eq!(b.len(), 3);
+        assert_eq!(b[0].request.id, 0);
+        let b = q.pop_batch(10);
+        assert_eq!(b.len(), 2);
+    }
+
+    #[test]
+    fn push_after_close_rejected() {
+        let q = RequestQueue::new(4);
+        q.close();
+        assert!(q.push(item(1)).is_err());
+    }
+}

@@ -1,0 +1,205 @@
+//! Engine worker: owns one PJRT engine (the xla wrapper types are not
+//! `Send`, so the engine lives and dies inside this thread) and serves
+//! requests from the shared queue until shutdown.
+
+use crate::config::RunConfig;
+use crate::hetero::{LatencyModel, Platform};
+use crate::metrics::{Metrics, RequestRecord};
+use crate::runtime::Engine;
+use crate::spec::{AcceptRule, Decoder, DecoderSetup};
+use crate::tokenizer::Tokenizer;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+
+use super::batcher;
+use super::policy::Policy;
+use super::queue::{QueueItem, RequestQueue};
+use super::EngineResponse;
+
+/// Worker main loop (runs on its own thread).
+#[allow(clippy::too_many_arguments)]
+pub fn run_worker(
+    wid: usize,
+    cfg: RunConfig,
+    platform: Platform,
+    queue: Arc<RequestQueue>,
+    metrics: Arc<Metrics>,
+    policy: Arc<Policy>,
+    shutdown: Arc<AtomicBool>,
+    ready: mpsc::Sender<anyhow::Result<()>>,
+) {
+    // Build the engine inside the thread; report readiness (or the error).
+    let engine = match Engine::load(&cfg.artifacts_dir) {
+        Ok(e) => {
+            let _ = ready.send(Ok(()));
+            e
+        }
+        Err(e) => {
+            let _ = ready.send(Err(anyhow::anyhow!("worker {wid}: {e}")));
+            return;
+        }
+    };
+    let tokenizer = match Tokenizer::from_manifest(&engine.manifest.tokenizer_spec) {
+        Ok(t) => t,
+        Err(_) => Tokenizer::builtin(),
+    };
+    let (drafter, target) = policy.variants();
+    // Warm the executable cache so first requests don't pay compile time.
+    let buckets: Vec<usize> = engine.manifest.seq_buckets.clone();
+    let _ = engine.warmup(&[drafter, target], cfg.kernel_path, &buckets);
+
+    let lat = LatencyModel::new(platform);
+
+    while !shutdown.load(Ordering::SeqCst) {
+        // Batch only when configured AND speculation is globally off (the
+        // batcher handles baseline decode only — see batcher docs).
+        let batch = if cfg.max_batch > 1 && !cfg.speculative {
+            queue.pop_batch(cfg.max_batch)
+        } else {
+            match queue.pop() {
+                Some(i) => vec![i],
+                None => break,
+            }
+        };
+        if batch.is_empty() {
+            break; // queue closed
+        }
+        if batch.len() > 1 {
+            serve_batch(&cfg, &engine, &lat, &tokenizer, &metrics, batch, target);
+        } else {
+            let item = batch.into_iter().next().unwrap();
+            serve_one(&cfg, &engine, &lat, &tokenizer, &metrics, &policy, item,
+                      drafter, target);
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn serve_one(
+    cfg: &RunConfig,
+    engine: &Engine,
+    lat: &LatencyModel,
+    tokenizer: &Tokenizer,
+    metrics: &Metrics,
+    policy: &Policy,
+    item: QueueItem,
+    drafter: crate::models::VariantKey,
+    target: crate::models::VariantKey,
+) {
+    let queue_s = item.enqueued.elapsed().as_secs_f64();
+    let req = item.request;
+    let d_spec = engine.manifest.model_for(drafter).cloned();
+    let t_spec = engine.manifest.model_for(target).cloned();
+    let (d_spec, t_spec) = match (d_spec, t_spec) {
+        (Ok(d), Ok(t)) => (d, t),
+        _ => return,
+    };
+    let decision = policy.route(&req.task, &d_spec, &t_spec, req.prompt.len());
+
+    let setup = DecoderSetup {
+        drafter,
+        target,
+        kernel: cfg.kernel_path,
+        mapping: decision.mapping,
+        gamma: decision.gamma.max(1),
+        rule: AcceptRule::Greedy,
+        exec: cfg.exec_mode,
+        max_new: cfg.max_new_tokens,
+    };
+    let decoder = Decoder::new(engine, lat.clone(), setup);
+    let outcome = if decision.speculative {
+        decoder.speculative(&req.prompt)
+    } else {
+        decoder.baseline(&req.prompt)
+    };
+    let outcome = match outcome {
+        Ok(o) => o,
+        Err(_) => return, // dropped sender signals the error to the caller
+    };
+    policy.observe_alpha(&req.task, outcome.alpha());
+    metrics.record(RequestRecord {
+        sim_s: outcome.sim_s,
+        real_s: outcome.real_s,
+        queue_s,
+        tokens: outcome.tokens.len(),
+        drafted: outcome.n_drafted,
+        accepted: outcome.n_accepted,
+    });
+    let completion = tokenizer.decode(&outcome.tokens);
+    let alpha = outcome.alpha();
+    let _ = item.respond.send(EngineResponse {
+        id: req.id,
+        completion,
+        tokens: outcome.tokens,
+        sim_s: outcome.sim_s,
+        real_s: outcome.real_s,
+        queue_s,
+        alpha,
+        speculative: decision.speculative,
+        gamma: decision.gamma,
+    });
+}
+
+fn serve_batch(
+    cfg: &RunConfig,
+    engine: &Engine,
+    lat: &LatencyModel,
+    tokenizer: &Tokenizer,
+    metrics: &Metrics,
+    batch: Vec<QueueItem>,
+    target: crate::models::VariantKey,
+) {
+    let t_spec = match engine.manifest.model_for(target) {
+        Ok(s) => s.clone(),
+        Err(_) => return,
+    };
+    let mapping = if cfg.heterogeneous {
+        crate::hetero::Mapping::heterogeneous(cfg.design_variant)
+    } else {
+        crate::hetero::Mapping::homogeneous(cfg.design_variant)
+    };
+    let prompts: Vec<Vec<u32>> = batch.iter().map(|i| i.request.prompt.clone()).collect();
+    let lat = lat.clone();
+    let t_scheme = target.scheme;
+    let sim_forward = move |bucket: usize, b: usize| {
+        // Batched forward ~ b× the single-sequence FLOPs on the same PU
+        // (no batching win on a saturated edge CPU), one dispatch boundary.
+        let single = lat.forward_latency(&t_spec, t_scheme, mapping.target, bucket);
+        let oh = match mapping.target {
+            crate::hetero::PuAssignment::Cpu { .. } => lat.platform.cpu.dispatch_overhead_s,
+            crate::hetero::PuAssignment::Gpu => lat.platform.gpu.dispatch_overhead_s,
+        };
+        (single - oh) * b as f64 + oh
+    };
+    // Batched artifacts exist only for the ref lowering (the Pallas path is
+    // the batch-1 latency path; see aot.py) — batch decode always uses Ref.
+    let outcomes = match batcher::batched_baseline(
+        engine, target, crate::config::KernelPath::Ref, &prompts,
+        cfg.max_new_tokens, &sim_forward,
+    ) {
+        Ok(o) => o,
+        Err(_) => return,
+    };
+    for (item, o) in batch.into_iter().zip(outcomes) {
+        let queue_s = item.enqueued.elapsed().as_secs_f64();
+        metrics.record(RequestRecord {
+            sim_s: o.sim_s,
+            real_s: o.real_s,
+            queue_s,
+            tokens: o.tokens.len(),
+            drafted: 0,
+            accepted: 0,
+        });
+        let _ = item.respond.send(EngineResponse {
+            id: item.request.id,
+            completion: tokenizer.decode(&o.tokens),
+            tokens: o.tokens,
+            sim_s: o.sim_s,
+            real_s: o.real_s,
+            queue_s,
+            alpha: f64::NAN,
+            speculative: false,
+            gamma: 0,
+        });
+    }
+}

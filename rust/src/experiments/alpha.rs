@@ -1,0 +1,96 @@
+//! α measurement machinery (paper §III-C / §IV-A) shared by fig5 and fig7.
+//!
+//! α is measured exactly as Eq. (1) consumes it: the probability that the
+//! target accepts a drafter proposal. We walk the *target's* greedy path
+//! (teacher-forced, like the paper's server-side estimation on a 16-core
+//! Xeon — hardware-independence is the point of §III-C) and count
+//! drafter/target argmax agreement per step.
+
+use crate::config::KernelPath;
+use crate::models::VariantKey;
+use crate::runtime::manifest::EvalSample;
+use crate::runtime::Engine;
+use crate::tokenizer::{Tokenizer, EOS_ID};
+use crate::workload::prompt_ids;
+
+use super::Ctx;
+
+/// The three quantization pairings of the paper's Fig. 5 (left→right boxes).
+pub fn scheme_pairs() -> Vec<(&'static str, VariantKey, VariantKey)> {
+    vec![
+        ("fp-fp", VariantKey::parse("drafter_fp").unwrap(),
+         VariantKey::parse("target_fp").unwrap()),
+        ("semi(Tq)", VariantKey::parse("drafter_fp").unwrap(),
+         VariantKey::parse("target_w8a8").unwrap()),
+        ("full-q", VariantKey::parse("drafter_w8a8").unwrap(),
+         VariantKey::parse("target_w8a8").unwrap()),
+    ]
+}
+
+/// Teacher-forced per-sample acceptance rate.
+pub fn measure_alpha(
+    engine: &Engine,
+    tokenizer: &Tokenizer,
+    drafter: VariantKey,
+    target: VariantKey,
+    kernel: KernelPath,
+    sample: &EvalSample,
+    max_new: usize,
+) -> anyhow::Result<f64> {
+    let mut ids = prompt_ids(tokenizer, sample)?;
+    let max_total = engine.manifest.largest_bucket();
+    let mut agree = 0usize;
+    let mut total = 0usize;
+    for _ in 0..max_new {
+        if ids.len() + 1 >= max_total {
+            break;
+        }
+        let bucket = engine.bucket_for(ids.len())?;
+        let pos = ids.len() - 1;
+        let t_fwd = engine.forward(target, kernel, &ids, bucket)?;
+        let nt = t_fwd.argmax(0, pos);
+        let d_fwd = engine.forward(drafter, kernel, &ids, bucket)?;
+        let nd = d_fwd.argmax(0, pos);
+        agree += (nt == nd) as usize;
+        total += 1;
+        if nt == EOS_ID {
+            break;
+        }
+        ids.push(nt);
+    }
+    if total == 0 {
+        return Ok(f64::NAN);
+    }
+    Ok(agree as f64 / total as f64)
+}
+
+/// Standalone `specedge alpha` command: print per-task α summary for the
+/// semi-quantized pair (quick operational check).
+pub fn run(ctx: &Ctx) -> anyhow::Result<()> {
+    let (name, drafter, target) = scheme_pairs().remove(1);
+    let limit = ctx.limit.unwrap_or(4);
+    let mut by_task: std::collections::BTreeMap<String, crate::util::stats::Summary> =
+        Default::default();
+    for s in &ctx.engine.manifest.eval_samples.clone() {
+        let t = by_task.entry(s.task.clone()).or_default();
+        if t.len() >= limit {
+            continue;
+        }
+        let a = measure_alpha(
+            &ctx.engine, &ctx.tokenizer, drafter, target,
+            crate::config::KernelPath::Pallas, s, 48,
+        )?;
+        if a.is_finite() {
+            t.push(a);
+        }
+    }
+    println!("alpha ({name}), {limit} samples/task:");
+    println!("{:<16} {:>8} {:>8} {:>8}", "task", "median", "mean", "n");
+    for (task, mut s) in by_task {
+        println!(
+            "{:<16} {:>8.3} {:>8.3} {:>8}",
+            task, s.median(), s.mean(), s.len()
+        );
+    }
+    Ok(())
+}

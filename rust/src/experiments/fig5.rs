@@ -1,0 +1,80 @@
+//! Fig. 5 — acceptance-rate α distributions per quantization scheme.
+//! (a) translation task only; (b) the full 13-task suite.
+//!
+//! Paper's qualitative result: boxes shift *down* as quantization increases
+//! (FP/FP highest, fully-quantized collapses). Our reproduction measures the
+//! same ordering on the real numerics of the tiny pair (DESIGN.md §1 for the
+//! qmax substitution).
+
+use crate::config::KernelPath;
+use crate::util::stats::{BoxStats, Summary};
+
+use super::alpha::{measure_alpha, scheme_pairs};
+use super::Ctx;
+
+pub fn run(ctx: &Ctx, translate_only: bool) -> anyhow::Result<()> {
+    let which = if translate_only { "fig5a" } else { "fig5b" };
+    // Default sample budget: all 48 translate samples for (a); a slice per
+    // task for (b) to keep runtime sane (override with --limit).
+    let per_task_limit = ctx
+        .limit
+        .unwrap_or(if translate_only { 48 } else { 8 });
+
+    let mut csv = String::from("scheme,task_set,alpha\n");
+    let mut table: Vec<(String, BoxStats)> = Vec::new();
+    for (name, drafter, target) in scheme_pairs() {
+        let mut summary = Summary::new();
+        let mut per_task_counts: std::collections::HashMap<&str, usize> =
+            Default::default();
+        for s in &ctx.engine.manifest.eval_samples.clone() {
+            if translate_only && s.task != "translate" {
+                continue;
+            }
+            let c = per_task_counts.entry(Box::leak(s.task.clone().into_boxed_str()) as &str)
+                .or_insert(0);
+            if *c >= per_task_limit {
+                continue;
+            }
+            *c += 1;
+            let a = measure_alpha(
+                &ctx.engine, &ctx.tokenizer, drafter, target,
+                KernelPath::Pallas, s, 48,
+            )?;
+            if a.is_finite() {
+                summary.push(a);
+                csv.push_str(&format!("{},{},{:.4}\n",
+                    name, if translate_only { "translate" } else { "all" }, a));
+            }
+        }
+        let stats = summary.box_stats();
+        table.push((name.to_string(), stats));
+    }
+
+    println!(
+        "Fig. 5{} — alpha distribution vs quantization ({}):",
+        if translate_only { "a" } else { "b" },
+        if translate_only { "translation task" } else { "full suite" }
+    );
+    println!("{:<10} {:>7} {:>7} {:>7} {:>7} {:>7} {:>5}",
+             "scheme", "q1", "median", "q3", "p90", "mean", "n");
+    for (name, b) in &table {
+        println!(
+            "{:<10} {:>7.3} {:>7.3} {:>7.3} {:>7.3} {:>7.3} {:>5}",
+            name, b.q1, b.median, b.q3, b.p90, b.mean, b.n
+        );
+    }
+    // The paper's ordering check: median must fall with quantization level.
+    if table.len() == 3 && table[0].1.median < table[2].1.median {
+        println!("WARNING: expected fp-fp median >= full-q median; check build");
+    }
+    ctx.write_csv(&format!("{which}.csv"), &csv)?;
+
+    let mut summary_csv = String::from("scheme,");
+    summary_csv.push_str(BoxStats::csv_header());
+    summary_csv.push('\n');
+    for (name, b) in &table {
+        summary_csv.push_str(&format!("{},{}\n", name, b.to_csv()));
+    }
+    ctx.write_csv(&format!("{which}_summary.csv"), &summary_csv)?;
+    Ok(())
+}

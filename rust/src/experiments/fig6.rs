@@ -1,0 +1,68 @@
+//! Fig. 6 — cost coefficient c vs input sequence length, per design variant.
+//! (a) homogeneous CPU mappings; (b) heterogeneous (drafter on GPU).
+//!
+//! c > 1 regions are infeasible (paper's red shading). The black reference
+//! line in the paper is S_L = 63 (translation average) — our CSV includes
+//! that column and the console table prints the S_L = 63 row. A real-PJRT
+//! validation column (drafter/target wall-clock ratio on this machine's
+//! CPU) is appended for the homogeneous case.
+
+use crate::config::KernelPath;
+use crate::models::VariantKey;
+use crate::profiler;
+
+use super::Ctx;
+
+const SEQS: &[usize] = &[8, 16, 24, 32, 48, 63, 80, 96, 112, 128];
+
+pub fn run(ctx: &Ctx, heterogeneous: bool) -> anyhow::Result<()> {
+    let which = if heterogeneous { "fig6b" } else { "fig6a" };
+    let drafter = VariantKey::parse("drafter_fp").unwrap();
+    let target = VariantKey::parse("target_w8a8").unwrap();
+
+    let points = profiler::cost_curves(
+        &ctx.lat, &ctx.engine, drafter, target, SEQS, heterogeneous, None,
+    )?;
+
+    let mut csv = String::from("variant,seq,c_sim,infeasible\n");
+    for p in &points {
+        csv.push_str(&format!(
+            "{},{},{:.4},{}\n",
+            p.variant, p.seq, p.c_sim, (p.c_sim > 1.0) as u8
+        ));
+    }
+
+    println!(
+        "Fig. 6{} — cost coefficient c ({}) — S_L = 63 column:",
+        if heterogeneous { "b" } else { "a" },
+        if heterogeneous { "drafter on Mali-G310" } else { "homogeneous CPU" }
+    );
+    println!("{:<26} {:>8} {:>11}", "design variant", "c(63)", "feasible?");
+    for v in 1..=ctx.lat.platform.design_variants() {
+        let c63 = points
+            .iter()
+            .find(|p| p.variant == v && p.seq == 63)
+            .map(|p| p.c_sim)
+            .unwrap_or(f64::NAN);
+        println!(
+            "{:<26} {:>8.3} {:>11}",
+            format!("{} (C-A55 {v}C{})", v, if heterogeneous { " + GPU" } else { "" }),
+            c63,
+            if c63 < 1.0 { "yes" } else { "NO (red)" }
+        );
+    }
+
+    // Real-hardware validation (homogeneous only: no Mali on this machine):
+    // the measured drafter/target PJRT latency ratio at S_L = 63.
+    if !heterogeneous {
+        let c_real = profiler::real_cost_coefficient(
+            &ctx.engine, drafter, target, KernelPath::Pallas, 63, 5,
+        )?;
+        println!("real PJRT-CPU c(63) on this machine: {c_real:.3} \
+                  (shape check; absolute scale differs from the A55)");
+        csv.push_str(&format!("real_pjrt,63,{c_real:.4},{}\n", (c_real > 1.0) as u8));
+    }
+
+    ctx.write_csv(&format!("{which}.csv"), &csv)?;
+    Ok(())
+}

@@ -1,0 +1,167 @@
+//! Fig. 7 — acceleration S vs acceptance rate α for γ = 1..5, design
+//! variant 1 heterogeneous (quantized target on one CPU core, fp drafter on
+//! the GPU).
+//!
+//! (a) predicted: Eq. (1) curves at the variant-1 cost coefficient.
+//! (b) measured: real speculative decodes over eval samples; per sample we
+//!     record its empirical α and its acceleration (simulated baseline time
+//!     / simulated speculative time), then bin by α. The paper reports the
+//!     measured curve landing ≈4% right of the prediction — our §IV-D
+//!     equivalent (modular boundary overhead) is quantified by the
+//!     `deviation` experiment.
+
+use crate::config::{ExecMode, KernelPath};
+use crate::costmodel;
+use crate::hetero::Mapping;
+use crate::models::{Scheme, VariantKey};
+use crate::spec::{AcceptRule, Decoder, DecoderSetup};
+use crate::workload::prompt_ids;
+
+use super::Ctx;
+
+const GAMMAS: &[usize] = &[1, 2, 3, 4, 5];
+
+fn variant1_c(ctx: &Ctx) -> anyhow::Result<f64> {
+    let d = ctx.engine.manifest.model_for(VariantKey::parse("drafter_fp").unwrap())?;
+    let t = ctx.engine.manifest.model_for(VariantKey::parse("target_w8a8").unwrap())?;
+    Ok(ctx.lat.cost_coefficient(
+        (d, Scheme::Fp), (t, Scheme::W8a8), Mapping::heterogeneous(1), 63))
+}
+
+/// (a) predicted curves.
+pub fn run_predicted(ctx: &Ctx) -> anyhow::Result<()> {
+    let c = variant1_c(ctx)?;
+    println!("Fig. 7a — predicted S(alpha, gamma, c = {c:.3}):");
+    let mut csv = String::from("alpha,gamma,speedup\n");
+    print!("{:<7}", "alpha");
+    for g in GAMMAS {
+        print!(" {:>8}", format!("g={g}"));
+    }
+    println!();
+    for i in 0..=20 {
+        let alpha = i as f64 / 20.0;
+        print!("{:<7.2}", alpha);
+        for &g in GAMMAS {
+            let s = costmodel::speedup(alpha, g, c);
+            print!(" {:>8.3}", s);
+            csv.push_str(&format!("{alpha:.3},{g},{s:.4}\n"));
+        }
+        println!();
+    }
+    ctx.write_csv("fig7a.csv", &csv)?;
+    Ok(())
+}
+
+/// (b) measured acceleration via real speculative decodes.
+pub fn run_measured(ctx: &Ctx) -> anyhow::Result<()> {
+    let c = variant1_c(ctx)?;
+    let n_samples = ctx.limit.unwrap_or(16);
+    // Use translate samples first, then other tasks to widen the α range
+    // (our semi-quantized per-sample α spans a narrower band than the
+    // paper's 0..1 — see EXPERIMENTS.md).
+    let mut samples: Vec<_> = ctx
+        .engine
+        .manifest
+        .eval_samples
+        .iter()
+        .filter(|s| s.task == "translate")
+        .take(n_samples / 2)
+        .cloned()
+        .collect();
+    let per_other = 1.max(n_samples / 2 / 12);
+    let mut counts: std::collections::HashMap<String, usize> = Default::default();
+    for s in &ctx.engine.manifest.eval_samples.clone() {
+        if s.task == "translate" || samples.len() >= n_samples {
+            continue;
+        }
+        let c = counts.entry(s.task.clone()).or_insert(0);
+        if *c < per_other {
+            *c += 1;
+            samples.push(s.clone());
+        }
+    }
+
+    let mut csv = String::from("task,gamma,alpha,accel_sim,accel_real,predicted\n");
+    println!(
+        "Fig. 7b — measured acceleration (variant 1 hetero, semi pair, \
+         {} samples x gammas {:?}):",
+        samples.len(), GAMMAS
+    );
+
+    for s in &samples {
+        let prompt = prompt_ids(&ctx.tokenizer, s)?;
+        let base_setup = DecoderSetup {
+            drafter: VariantKey::parse("drafter_fp").unwrap(),
+            target: VariantKey::parse("target_w8a8").unwrap(),
+            kernel: KernelPath::Pallas,
+            mapping: Mapping::heterogeneous(1),
+            gamma: 1,
+            rule: AcceptRule::Greedy,
+            exec: ExecMode::Modular,
+            max_new: 64,
+        };
+        let decoder = Decoder::new(&ctx.engine, ctx.lat.clone(), base_setup.clone());
+        let baseline = decoder.baseline(&prompt)?;
+        if baseline.tokens.is_empty() {
+            continue;
+        }
+        for &g in GAMMAS {
+            let mut setup = base_setup.clone();
+            setup.gamma = g;
+            let decoder = Decoder::new(&ctx.engine, ctx.lat.clone(), setup);
+            let spec = decoder.speculative(&prompt)?;
+            if spec.n_drafted == 0 {
+                continue;
+            }
+            // Normalize per token: EOS position can differ slightly between
+            // paths when quant flips a borderline decision.
+            let base_per_tok = baseline.sim_s / baseline.tokens.len().max(1) as f64;
+            let spec_per_tok = spec.sim_s / spec.tokens.len().max(1) as f64;
+            let accel_sim = base_per_tok / spec_per_tok;
+            let base_real = baseline.real_s / baseline.tokens.len().max(1) as f64;
+            let spec_real = spec.real_s / spec.tokens.len().max(1) as f64;
+            let alpha = spec.alpha();
+            let predicted = costmodel::speedup(alpha, g, c);
+            csv.push_str(&format!(
+                "{},{},{:.4},{:.4},{:.4},{:.4}\n",
+                s.task, g, alpha, accel_sim, base_real / spec_real, predicted
+            ));
+        }
+    }
+
+    // Console: binned means per γ.
+    println!("{:<6} {:<12} {:>10} {:>12} {:>12}", "gamma", "alpha bin",
+             "n", "mean accel", "mean pred");
+    for &g in GAMMAS {
+        for bin in 0..5 {
+            let lo = bin as f64 * 0.2;
+            let hi = lo + 0.2;
+            let rows: Vec<(f64, f64)> = csv
+                .lines()
+                .skip(1)
+                .filter_map(|l| {
+                    let f: Vec<&str> = l.split(',').collect();
+                    let (gg, a, acc, pred): (usize, f64, f64, f64) = (
+                        f[1].parse().ok()?,
+                        f[2].parse().ok()?,
+                        f[3].parse().ok()?,
+                        f[5].parse().ok()?,
+                    );
+                    (gg == g && a >= lo && a < hi).then_some((acc, pred))
+                })
+                .collect();
+            if rows.is_empty() {
+                continue;
+            }
+            let n = rows.len();
+            let ma = rows.iter().map(|r| r.0).sum::<f64>() / n as f64;
+            let mp = rows.iter().map(|r| r.1).sum::<f64>() / n as f64;
+            println!(
+                "{:<6} [{:.1},{:.1}) {:>10} {:>12.3} {:>12.3}",
+                g, lo, hi, n, ma, mp
+            );
+        }
+    }
+    ctx.write_csv("fig7b.csv", &csv)?;
+    Ok(())
+}

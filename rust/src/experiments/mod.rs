@@ -1,0 +1,82 @@
+//! Experiment drivers — one per table/figure in the paper's evaluation
+//! (DESIGN.md §4 maps each to its module). Every driver prints a console
+//! table AND writes a CSV under the results dir, so the paper's plots can
+//! be regenerated from the CSVs.
+
+pub mod alpha;
+pub mod deviation;
+pub mod fig5;
+pub mod fig6;
+pub mod fig7;
+pub mod tables;
+
+use crate::config::RunConfig;
+use crate::hetero::{LatencyModel, Platform};
+use crate::runtime::Engine;
+use crate::tokenizer::Tokenizer;
+use std::path::PathBuf;
+
+/// Shared context for experiment drivers.
+pub struct Ctx {
+    pub engine: Engine,
+    pub tokenizer: Tokenizer,
+    pub lat: LatencyModel,
+    pub out_dir: PathBuf,
+    /// Per-task / total sample limits (trim for quick runs).
+    pub limit: Option<usize>,
+    pub seed: u64,
+}
+
+impl Ctx {
+    pub fn new(cfg: &RunConfig, platform: Platform, out_dir: PathBuf,
+               limit: Option<usize>) -> anyhow::Result<Ctx> {
+        let engine = Engine::load(&cfg.artifacts_dir)?;
+        let tokenizer = Tokenizer::from_manifest(&engine.manifest.tokenizer_spec)?;
+        std::fs::create_dir_all(&out_dir)?;
+        Ok(Ctx {
+            engine,
+            tokenizer,
+            lat: LatencyModel::new(platform),
+            out_dir,
+            limit,
+            seed: cfg.seed,
+        })
+    }
+
+    pub fn write_csv(&self, name: &str, content: &str) -> anyhow::Result<PathBuf> {
+        let path = self.out_dir.join(name);
+        std::fs::write(&path, content)?;
+        println!("  -> wrote {}", path.display());
+        Ok(path)
+    }
+}
+
+/// Run one experiment by id ("fig5a", "table2", ..., or "all").
+pub fn run(ctx: &Ctx, which: &str) -> anyhow::Result<()> {
+    match which {
+        "fig5a" => fig5::run(ctx, true),
+        "fig5b" => fig5::run(ctx, false),
+        "fig6a" => fig6::run(ctx, false),
+        "fig6b" => fig6::run(ctx, true),
+        "table2" => tables::run(ctx, 0.90),
+        "table3" => tables::run(ctx, 0.17),
+        "fig7a" => fig7::run_predicted(ctx),
+        "fig7b" => fig7::run_measured(ctx),
+        "deviation" => deviation::run(ctx),
+        "alpha" => alpha::run(ctx),
+        "all" => {
+            for id in [
+                "table2", "table3", "fig6a", "fig6b", "fig7a", "fig5a", "fig5b",
+                "fig7b", "deviation",
+            ] {
+                println!("\n=== experiment {id} ===");
+                run(ctx, id)?;
+            }
+            Ok(())
+        }
+        other => anyhow::bail!(
+            "unknown experiment {other:?} (fig5a fig5b fig6a fig6b table2 table3 \
+             fig7a fig7b deviation alpha all)"
+        ),
+    }
+}

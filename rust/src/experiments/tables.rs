@@ -1,0 +1,89 @@
+//! Tables II & III — estimated speedup per design variant at S_L = 63,
+//! for α = 0.90 (Table II) and α = 0.17 (Table III).
+//!
+//! Each row is the cost-model-guided decision for one design variant:
+//! whether to speculate, at which γ, with which mapping, and the predicted
+//! speedup. Paper reference rows (Table II): v1 → hetero γ=5 1.68×;
+//! v2 → hetero γ=2 1.10×; v5 → homo γ=1 1.02×; v3/v4/v6 → no speculation.
+
+use crate::dse::{self, PairConfig};
+use crate::models::{Scheme, VariantKey};
+
+use super::Ctx;
+
+pub fn run(ctx: &Ctx, alpha: f64) -> anyhow::Result<()> {
+    let which = if (alpha - 0.90).abs() < 0.1 { "table2" } else { "table3" };
+    let drafter = VariantKey::parse("drafter_fp").unwrap();
+    let target = VariantKey::parse("target_w8a8").unwrap();
+    let pair = PairConfig {
+        target: ctx.engine.manifest.model_for(target)?.clone(),
+        target_scheme: Scheme::W8a8,
+        drafter: ctx.engine.manifest.model_for(drafter)?.clone(),
+        drafter_scheme: Scheme::Fp,
+    };
+    let decisions = dse::explore_all(&ctx.lat, &pair, alpha, 63);
+
+    println!(
+        "Table {} — estimated speedup, alpha = {alpha}, S_L = 63 \
+         (design space: v·N^m = {}·2^2 = {}):",
+        if which == "table2" { "II" } else { "III" },
+        ctx.lat.platform.design_variants(),
+        dse::design_space_size(ctx.lat.platform.design_variants(), 2, 2),
+    );
+    println!(
+        "{:<8} {:<22} {:<14} {:>8} {:>9}",
+        "Variant", "Speculative Sampling", "Heterogeneous", "c", "Speedup"
+    );
+    let mut csv = String::from("variant,speculative,gamma,heterogeneous,c,speedup\n");
+    for d in &decisions {
+        let b = &d.best;
+        let spec_col = if b.gamma > 0 {
+            format!("Yes (gamma = {})", b.gamma)
+        } else {
+            "No".to_string()
+        };
+        let het_col = if b.gamma > 0 {
+            if b.mapping.is_heterogeneous() { "Yes" } else { "No" }
+        } else {
+            "NA"
+        };
+        println!(
+            "{:<8} {:<22} {:<14} {:>8} {:>9.2}",
+            b.variant,
+            spec_col,
+            het_col,
+            if b.c.is_nan() { "-".to_string() } else { format!("{:.3}", b.c) },
+            b.speedup
+        );
+        csv.push_str(&format!(
+            "{},{},{},{},{:.4},{:.4}\n",
+            b.variant,
+            (b.gamma > 0) as u8,
+            b.gamma,
+            b.mapping.is_heterogeneous() as u8,
+            if b.c.is_nan() { -1.0 } else { b.c },
+            b.speedup
+        ));
+    }
+    ctx.write_csv(&format!("{which}.csv"), &csv)?;
+
+    // Full per-mapping detail (all 4 assignments × variants) for the record.
+    let mut detail = String::from(
+        "variant,mapping,heterogeneous,c,gamma,speedup,infeasible\n");
+    for d in &decisions {
+        for c in &d.all {
+            detail.push_str(&format!(
+                "{},{},{},{},{},{:.4},{}\n",
+                c.variant,
+                c.mapping.label().replace(',', ";"),
+                c.mapping.is_heterogeneous() as u8,
+                if c.c.is_nan() { -1.0 } else { c.c },
+                c.gamma,
+                c.speedup,
+                c.infeasible.map(|i| format!("{i:?}")).unwrap_or_default()
+            ));
+        }
+    }
+    ctx.write_csv(&format!("{which}_detail.csv"), &detail)?;
+    Ok(())
+}

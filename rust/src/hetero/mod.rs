@@ -1,0 +1,18 @@
+//! The simulated heterogeneous edge platform (NXP i.MX95 stand-in).
+//!
+//! We do not have the paper's silicon (hexacore Cortex-A55 + Mali-G310), so
+//! per the substitution rule this module provides an *analytic latency
+//! model* calibrated to the paper's measured cost coefficients (DESIGN.md
+//! §5), while actual token computation executes on the PJRT CPU client.
+//! A virtual clock accrues simulated device time; all paper-facing numbers
+//! (Fig. 6, Tables II/III, Fig. 7) are read off that clock.
+
+pub mod clock;
+pub mod latency;
+pub mod platform;
+pub mod pu;
+
+pub use clock::VirtualClock;
+pub use latency::LatencyModel;
+pub use platform::Platform;
+pub use pu::{Mapping, PuAssignment};

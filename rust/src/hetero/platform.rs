@@ -1,0 +1,270 @@
+//! Platform description + calibration (the simulated i.MX95).
+//!
+//! Calibration strategy (DESIGN.md §5): per-(model, core-count) CPU
+//! efficiency tables + a GPU throughput/overhead pair, anchored so that the
+//! derived cost coefficients at S_L = 63 reproduce the paper's Fig. 6 /
+//! Table II operating points (c_hetero(1) ≈ 0.358 → S = 1.68,
+//! c_homo(1) ≈ 0.80, hetero infeasible for ≥ 3 cores, ...). Tables are
+//! deliberately *tables* — measured-on-silicon numbers are not smooth, and
+//! the paper's own values are non-monotonic in core count.
+//!
+//! The memory model uses *paper-scale* parameter counts (Llama 3.2 3B/1B)
+//! so the paper's memory-infeasibility footnotes reproduce: FP16 target
+//! does not fit, which forces the semi-quantized deployment.
+
+use crate::models::{ModelSpec, Role, Scheme};
+use crate::util::json::Json;
+
+/// CPU cluster calibration.
+#[derive(Debug, Clone)]
+pub struct CpuSpec {
+    pub name: String,
+    pub cores: usize,
+    /// Peak GFLOP/s of a single core.
+    pub peak_gflops_per_core: f64,
+    /// Effective utilization for the *target*-sized model, per core count
+    /// (index 0 = 1 core).
+    pub eff_target: Vec<f64>,
+    /// Same for the *drafter*-sized model (smaller GEMMs utilize worse).
+    pub eff_drafter: Vec<f64>,
+    /// Per-inference-call dispatch overhead (runtime API boundary), seconds.
+    pub dispatch_overhead_s: f64,
+    /// Throughput multiplier for int8 linears (A55 dot-product extensions).
+    pub int8_speedup: f64,
+}
+
+/// GPU calibration.
+#[derive(Debug, Clone)]
+pub struct GpuSpec {
+    pub name: String,
+    pub shaders: usize,
+    /// Effective GFLOP/s for fp models.
+    pub peak_gflops: f64,
+    /// Per-call dispatch overhead, seconds (queue submit + sync).
+    pub dispatch_overhead_s: f64,
+    /// INT8 is promoted to FP32 on Mali (paper footnote 3): quantized
+    /// linears pay this penalty instead of gaining.
+    pub int8_promotion_penalty: f64,
+    /// Whether native int8 is supported at all (false on this Mali).
+    pub supports_int8: bool,
+}
+
+/// Memory model at paper scale.
+#[derive(Debug, Clone)]
+pub struct MemoryModel {
+    /// Paper-scale parameter counts per role (Llama 3.2: 3B / 1B).
+    pub scaled_params_target: f64,
+    pub scaled_params_drafter: f64,
+    /// Bytes/param: fp16 = 2, w8a8 = 1.
+    pub bytes_fp: f64,
+    pub bytes_w8a8: f64,
+    /// Device memory budget for model weights + runtime, bytes.
+    pub budget_bytes: f64,
+}
+
+impl MemoryModel {
+    pub fn role_bytes(&self, role: Role, scheme: Scheme) -> f64 {
+        let params = match role {
+            Role::Target => self.scaled_params_target,
+            Role::Drafter => self.scaled_params_drafter,
+        };
+        let b = match scheme {
+            Scheme::Fp => self.bytes_fp,
+            Scheme::W8a8 => self.bytes_w8a8,
+        };
+        params * b
+    }
+
+    /// Can a (target scheme, drafter scheme) pair be resident together?
+    /// Reproduces the paper's exclusions: FP/FP and quantized-drafter-only
+    /// configurations exceed the budget (§IV-A footnote 2).
+    pub fn pair_fits(&self, target: Scheme, drafter: Scheme) -> bool {
+        self.role_bytes(Role::Target, target) + self.role_bytes(Role::Drafter, drafter)
+            <= self.budget_bytes
+    }
+}
+
+/// The full simulated platform.
+#[derive(Debug, Clone)]
+pub struct Platform {
+    pub name: String,
+    pub cpu: CpuSpec,
+    pub gpu: GpuSpec,
+    pub memory: MemoryModel,
+}
+
+impl Platform {
+    /// Built-in i.MX95 calibration (see module docs and DESIGN.md §5).
+    pub fn imx95() -> Platform {
+        Platform {
+            name: "imx95-sim".to_string(),
+            cpu: CpuSpec {
+                name: "Cortex-A55".to_string(),
+                cores: 6,
+                peak_gflops_per_core: 5.0,
+                eff_target: vec![0.850, 0.873, 0.840, 0.800, 0.740, 0.700],
+                eff_drafter: vec![0.3996, 0.4007, 0.3397, 0.3167, 0.3231, 0.2713],
+                dispatch_overhead_s: 80e-6,
+                int8_speedup: 1.35,
+            },
+            gpu: GpuSpec {
+                name: "Mali-G310".to_string(),
+                shaders: 1,
+                peak_gflops: 4.6731,
+                dispatch_overhead_s: 350e-6,
+                int8_promotion_penalty: 1.8,
+                supports_int8: false,
+            },
+            memory: MemoryModel {
+                scaled_params_target: 3.0e9,
+                scaled_params_drafter: 1.0e9,
+                bytes_fp: 2.0,   // fp16 at paper scale
+                bytes_w8a8: 1.0, // int8 weights
+                budget_bytes: 5.5e9,
+            },
+        }
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<Platform> {
+        let mut p = Platform::imx95();
+        if let Some(v) = j.get("name").and_then(Json::as_str) {
+            p.name = v.to_string();
+        }
+        if let Some(cpu) = j.get("cpu") {
+            let c = &mut p.cpu;
+            if let Some(v) = cpu.get("name").and_then(Json::as_str) {
+                c.name = v.into();
+            }
+            if let Some(v) = cpu.get("cores").and_then(Json::as_usize) {
+                c.cores = v;
+            }
+            if let Some(v) = cpu.get("peak_gflops_per_core").and_then(Json::as_f64) {
+                c.peak_gflops_per_core = v;
+            }
+            if let Some(v) = cpu.get("eff_target").and_then(Json::as_arr) {
+                c.eff_target = v.iter().filter_map(Json::as_f64).collect();
+            }
+            if let Some(v) = cpu.get("eff_drafter").and_then(Json::as_arr) {
+                c.eff_drafter = v.iter().filter_map(Json::as_f64).collect();
+            }
+            if let Some(v) = cpu.get("dispatch_overhead_us").and_then(Json::as_f64) {
+                c.dispatch_overhead_s = v * 1e-6;
+            }
+            if let Some(v) = cpu.get("int8_speedup").and_then(Json::as_f64) {
+                c.int8_speedup = v;
+            }
+        }
+        if let Some(gpu) = j.get("gpu") {
+            let g = &mut p.gpu;
+            if let Some(v) = gpu.get("name").and_then(Json::as_str) {
+                g.name = v.into();
+            }
+            if let Some(v) = gpu.get("peak_gflops").and_then(Json::as_f64) {
+                g.peak_gflops = v;
+            }
+            if let Some(v) = gpu.get("dispatch_overhead_us").and_then(Json::as_f64) {
+                g.dispatch_overhead_s = v * 1e-6;
+            }
+            if let Some(v) = gpu.get("int8_promotion_penalty").and_then(Json::as_f64) {
+                g.int8_promotion_penalty = v;
+            }
+            if let Some(v) = gpu.get("supports_int8").and_then(Json::as_bool) {
+                g.supports_int8 = v;
+            }
+        }
+        if let Some(mem) = j.get("memory") {
+            let m = &mut p.memory;
+            if let Some(v) = mem.get("scaled_params_target").and_then(Json::as_f64) {
+                m.scaled_params_target = v;
+            }
+            if let Some(v) = mem.get("scaled_params_drafter").and_then(Json::as_f64) {
+                m.scaled_params_drafter = v;
+            }
+            if let Some(v) = mem.get("budget_gb").and_then(Json::as_f64) {
+                m.budget_bytes = v * 1e9;
+            }
+        }
+        p.validate()?;
+        Ok(p)
+    }
+
+    pub fn from_file(path: &std::path::Path) -> anyhow::Result<Platform> {
+        let text = std::fs::read_to_string(path)?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{path:?}: {e}"))?;
+        Platform::from_json(&j)
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.cpu.cores >= 1 && self.cpu.cores <= 64);
+        anyhow::ensure!(
+            self.cpu.eff_target.len() >= self.cpu.cores
+                && self.cpu.eff_drafter.len() >= self.cpu.cores,
+            "efficiency tables must cover all {} cores",
+            self.cpu.cores
+        );
+        anyhow::ensure!(
+            self.cpu.eff_target.iter().chain(&self.cpu.eff_drafter).all(|&e| e > 0.0 && e <= 1.0),
+            "efficiencies must be in (0, 1]"
+        );
+        anyhow::ensure!(self.gpu.peak_gflops > 0.0 && self.cpu.peak_gflops_per_core > 0.0);
+        Ok(())
+    }
+
+    /// Design variants: v = Π nᵢ = cores × shaders (paper §III-B example:
+    /// 6 × 1 = 6). Variant k (1-based) = k CPU cores available.
+    pub fn design_variants(&self) -> usize {
+        self.cpu.cores * self.gpu.shaders
+    }
+
+    /// Efficiency lookup for a model role at a core count.
+    pub fn cpu_eff(&self, spec: &ModelSpec, cores: usize) -> f64 {
+        let table = if spec.name == "drafter" {
+            &self.cpu.eff_drafter
+        } else {
+            &self.cpu.eff_target
+        };
+        table[(cores - 1).min(table.len() - 1)]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtin_valid() {
+        Platform::imx95().validate().unwrap();
+        assert_eq!(Platform::imx95().design_variants(), 6);
+    }
+
+    #[test]
+    fn memory_reproduces_paper_exclusions() {
+        let m = Platform::imx95().memory;
+        // Paper §IV-A footnote 2: FP/FP and target-FP+drafter-quant don't fit.
+        assert!(!m.pair_fits(Scheme::Fp, Scheme::Fp));
+        assert!(!m.pair_fits(Scheme::Fp, Scheme::W8a8));
+        // Deployed configs fit: semi (target quant) and full quant.
+        assert!(m.pair_fits(Scheme::W8a8, Scheme::Fp));
+        assert!(m.pair_fits(Scheme::W8a8, Scheme::W8a8));
+    }
+
+    #[test]
+    fn json_overrides() {
+        let j = Json::parse(
+            r#"{"name":"x","cpu":{"peak_gflops_per_core":10.0},
+                "gpu":{"peak_gflops":7.0},"memory":{"budget_gb":16.0}}"#,
+        )
+        .unwrap();
+        let p = Platform::from_json(&j).unwrap();
+        assert_eq!(p.name, "x");
+        assert_eq!(p.cpu.peak_gflops_per_core, 10.0);
+        assert_eq!(p.gpu.peak_gflops, 7.0);
+        assert!(p.memory.pair_fits(Scheme::Fp, Scheme::Fp)); // 16 GB fits all
+    }
+
+    #[test]
+    fn bad_efficiency_rejected() {
+        let j = Json::parse(r#"{"cpu":{"eff_target":[2.0]}}"#).unwrap();
+        assert!(Platform::from_json(&j).is_err());
+    }
+}

@@ -1,0 +1,86 @@
+//! Processing-unit descriptors and spatial assignments (paper §III-B).
+//!
+//! The design space is spanned by *design variants* (how many CPU cores are
+//! available, v = Π nᵢ) × *assignments* of each graph partition (drafter |
+//! target, m = 2) to one of the N = 2 PUs.
+
+/// Where one graph partition (drafter or target) executes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PuAssignment {
+    /// CPU cluster with `cores` Cortex-A55 cores (1..=6).
+    Cpu { cores: usize },
+    /// The Mali-G310 GPU (single shader core).
+    Gpu,
+}
+
+impl PuAssignment {
+    pub fn is_gpu(&self) -> bool {
+        matches!(self, PuAssignment::Gpu)
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            PuAssignment::Cpu { cores } => format!("C-A55 {cores}C"),
+            PuAssignment::Gpu => "Mali-G310".to_string(),
+        }
+    }
+}
+
+/// A coarse-grained spatial mapping of the speculative pipeline: one PU per
+/// partition (the paper's m = 2 partitioning — drafter | target).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Mapping {
+    pub drafter: PuAssignment,
+    pub target: PuAssignment,
+}
+
+impl Mapping {
+    /// Homogeneous CPU mapping: both models on the same `cores`-core cluster.
+    pub fn homogeneous(cores: usize) -> Mapping {
+        Mapping {
+            drafter: PuAssignment::Cpu { cores },
+            target: PuAssignment::Cpu { cores },
+        }
+    }
+
+    /// The paper's heterogeneous mapping: drafter on GPU, target on CPU.
+    pub fn heterogeneous(cores: usize) -> Mapping {
+        Mapping {
+            drafter: PuAssignment::Gpu,
+            target: PuAssignment::Cpu { cores },
+        }
+    }
+
+    pub fn is_heterogeneous(&self) -> bool {
+        self.drafter != self.target
+    }
+
+    pub fn label(&self) -> String {
+        if self.is_heterogeneous() {
+            format!("drafter@{} / target@{}", self.drafter.label(), self.target.label())
+        } else {
+            format!("both@{}", self.target.label())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constructors() {
+        let h = Mapping::homogeneous(3);
+        assert!(!h.is_heterogeneous());
+        assert_eq!(h.target, PuAssignment::Cpu { cores: 3 });
+        let x = Mapping::heterogeneous(1);
+        assert!(x.is_heterogeneous());
+        assert!(x.drafter.is_gpu());
+    }
+
+    #[test]
+    fn labels() {
+        assert_eq!(PuAssignment::Cpu { cores: 2 }.label(), "C-A55 2C");
+        assert!(Mapping::heterogeneous(1).label().contains("Mali"));
+    }
+}

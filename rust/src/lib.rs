@@ -1,0 +1,53 @@
+//! # SpecEdge
+//!
+//! Reproduction of *Compiler-Assisted Speculative Sampling for Accelerated
+//! LLM Inference on Heterogeneous Edge Devices* as a three-layer
+//! Rust + JAX + Pallas stack (AOT via HLO text → PJRT).
+//!
+//! Layer 3 (this crate) owns the request path: a speculative-sampling
+//! serving coordinator with heterogeneous PU mapping, the analytical cost
+//! model (paper Eq. 1), design-space exploration and every experiment
+//! driver. Layers 1/2 (Pallas kernels + JAX models) run once at build time
+//! (`make artifacts`); Python is never on the request path.
+//!
+//! Module map (see DESIGN.md for the full inventory):
+//!
+//! * [`util`] — substrate: JSON codec, RNG, stats, CLI, thread pool
+//! * [`config`] — typed run configuration
+//! * [`tokenizer`] — char tokenizer mirroring the Python build side
+//! * [`runtime`] — PJRT engine: artifact registry, executable cache
+//! * [`models`] — model-variant metadata and the analytic FLOPs model
+//! * [`hetero`] — the simulated i.MX95 platform (PUs, latency model, clock)
+//! * [`costmodel`] — Eq. (1): speedup, feasibility, optimal draft length
+//! * [`dse`] — design-space encoding v·N^m and exploration
+//! * [`profiler`] — cost-coefficient measurement (paper Fig. 6)
+//! * [`spec`] — the speculative sampling engine (modular + monolithic)
+//! * [`workload`] — Spec-Bench-shaped workload and arrival processes
+//! * [`coordinator`] — router, batcher, queue, worker lifecycle
+//! * [`server`] — TCP line-JSON serving front-end
+//! * [`metrics`] — latency/acceptance recording
+//! * [`experiments`] — one driver per paper table/figure
+//! * [`bench`] — mini-criterion harness used by `cargo bench` targets
+
+pub mod bench;
+pub mod config;
+pub mod coordinator;
+pub mod costmodel;
+pub mod dse;
+pub mod experiments;
+pub mod hetero;
+pub mod metrics;
+pub mod models;
+pub mod profiler;
+pub mod runtime;
+pub mod server;
+pub mod spec;
+pub mod tokenizer;
+pub mod util;
+pub mod workload;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;
+
+/// Default artifacts directory (overridable via `--artifacts` / config).
+pub const DEFAULT_ARTIFACTS_DIR: &str = "artifacts";

@@ -1,0 +1,292 @@
+//! `specedge` CLI — the leader entrypoint.
+//!
+//! Subcommands:
+//!   serve       start the TCP serving front-end
+//!   decode      decode one prompt from the command line
+//!   profile     print per-variant forward latencies (sim + real)
+//!   explore     run the cost-model-guided DSE (Tables II/III style)
+//!   experiment  regenerate a paper table/figure (or `all`)
+//!   alpha       quick per-task acceptance-rate check
+//!   info        print manifest / platform summary
+
+use specedge::config::{ExecMode, KernelPath, RunConfig, Timing};
+use specedge::coordinator::Coordinator;
+use specedge::dse::{self, PairConfig};
+use specedge::experiments;
+use specedge::hetero::{LatencyModel, Mapping, Platform};
+use specedge::models::{Scheme, VariantKey};
+use specedge::profiler;
+use specedge::runtime::Engine;
+use specedge::server::Server;
+use specedge::spec::{AcceptRule, Decoder, DecoderSetup};
+use specedge::tokenizer::{Tokenizer, SEP_ID};
+use specedge::util::cli::Cli;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("{e}");
+        std::process::exit(1);
+    }
+}
+
+fn cli() -> Cli {
+    Cli::new("specedge", "speculative sampling on heterogeneous edge (paper repro)")
+        .opt("artifacts", "artifacts directory", Some("artifacts"))
+        .opt("platform", "platform calibration JSON (default: built-in i.MX95)", None)
+        .opt("config", "run-config JSON file", None)
+        .opt("gamma", "fixed draft length (default: cost-model-chosen)", None)
+        .opt("variant", "design variant = CPU cores 1..6", Some("1"))
+        .opt("exec", "modular|monolithic", Some("modular"))
+        .opt("kernel", "pallas|ref artifacts", Some("pallas"))
+        .opt("timing", "simulated|real", Some("simulated"))
+        .opt("alpha", "alpha for explore", Some("0.90"))
+        .opt("seq", "operating sequence length", Some("63"))
+        .opt("max-new", "max new tokens", Some("64"))
+        .opt("port", "serve: TCP port (0 = auto)", Some("7643"))
+        .opt("workers", "serve: engine workers", Some("1"))
+        .opt("limit", "experiments: sample limit", None)
+        .opt("out", "experiments: results dir", Some("results"))
+        .opt("prompt", "decode: prompt text (task-prefixed, e.g. 'tr: ...')", None)
+        .opt("task", "decode/serve: task label", Some("translate"))
+        .flag("homogeneous", "use the homogeneous CPU mapping")
+        .flag("no-spec", "disable speculation (baseline decode)")
+        .flag("stochastic", "stochastic accept rule instead of greedy")
+}
+
+fn build_config(args: &specedge::util::cli::Args) -> anyhow::Result<RunConfig> {
+    let mut cfg = match args.get("config") {
+        Some(p) => RunConfig::from_file(std::path::Path::new(p))?,
+        None => RunConfig::default(),
+    };
+    if let Some(a) = args.get("artifacts") {
+        cfg.artifacts_dir = PathBuf::from(a);
+    }
+    if let Some(p) = args.get("platform") {
+        cfg.platform_file = Some(PathBuf::from(p));
+    }
+    if let Some(g) = args.get_usize("gamma")? {
+        cfg.gamma = Some(g);
+    }
+    if let Some(v) = args.get_usize("variant")? {
+        cfg.design_variant = v;
+    }
+    if let Some(e) = args.get("exec") {
+        cfg.exec_mode = ExecMode::parse(e)?;
+    }
+    if let Some(k) = args.get("kernel") {
+        cfg.kernel_path = KernelPath::parse(k)?;
+    }
+    if let Some(t) = args.get("timing") {
+        cfg.timing = Timing::parse(t)?;
+    }
+    if let Some(m) = args.get_usize("max-new")? {
+        cfg.max_new_tokens = m;
+    }
+    if let Some(w) = args.get_usize("workers")? {
+        cfg.workers = w;
+    }
+    if let Some(p) = args.get_usize("port")? {
+        cfg.port = p as u16;
+    }
+    cfg.heterogeneous = !args.has_flag("homogeneous");
+    cfg.speculative = !args.has_flag("no-spec");
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn load_platform(cfg: &RunConfig) -> anyhow::Result<Platform> {
+    match &cfg.platform_file {
+        Some(p) => Platform::from_file(p),
+        None => Ok(Platform::imx95()),
+    }
+}
+
+fn run() -> anyhow::Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = cli().parse(&argv)?;
+    let cmd = args
+        .positional
+        .first()
+        .map(|s| s.as_str())
+        .unwrap_or("info");
+    let cfg = build_config(&args)?;
+    let platform = load_platform(&cfg)?;
+
+    match cmd {
+        "info" => cmd_info(&cfg, &platform),
+        "decode" => cmd_decode(&cfg, platform, &args),
+        "profile" => cmd_profile(&cfg, platform),
+        "explore" => cmd_explore(&cfg, platform, &args),
+        "experiment" => cmd_experiment(&cfg, platform, &args),
+        "alpha" => cmd_experiment_named(&cfg, platform, &args, "alpha"),
+        "serve" => cmd_serve(cfg, platform),
+        other => anyhow::bail!("unknown command {other:?}\n\n{}", cli().usage()),
+    }
+}
+
+fn cmd_info(cfg: &RunConfig, platform: &Platform) -> anyhow::Result<()> {
+    let engine = Engine::load(&cfg.artifacts_dir)?;
+    let m = &engine.manifest;
+    println!("specedge — PJRT platform: {}", engine.platform_name());
+    println!("artifacts: {}", cfg.artifacts_dir.display());
+    println!("  seq buckets: {:?}", m.seq_buckets);
+    println!("  variants:");
+    for (k, v) in &m.variants {
+        println!("    {:<14} {} artifacts, {} tensors",
+                 k.name(), v.artifacts.len(), v.tensors.len());
+    }
+    println!("  monolithic gammas: {:?}",
+             m.monolithic.iter().map(|x| x.gamma).collect::<Vec<_>>());
+    println!("  eval samples: {} over {} tasks",
+             m.eval_samples.len(),
+             m.eval_samples.iter().map(|s| s.task.as_str())
+                 .collect::<std::collections::BTreeSet<_>>().len());
+    println!("platform: {} ({} CPU cores + {})",
+             platform.name, platform.cpu.cores, platform.gpu.name);
+    Ok(())
+}
+
+fn cmd_decode(
+    cfg: &RunConfig,
+    platform: Platform,
+    args: &specedge::util::cli::Args,
+) -> anyhow::Result<()> {
+    let prompt_text = args.req("prompt")?;
+    let engine = Engine::load(&cfg.artifacts_dir)?;
+    let tokenizer = Tokenizer::from_manifest(&engine.manifest.tokenizer_spec)?;
+    let mut prompt = tokenizer.encode(prompt_text, true)?;
+    prompt.push(SEP_ID);
+
+    let mapping = if cfg.heterogeneous {
+        Mapping::heterogeneous(cfg.design_variant)
+    } else {
+        Mapping::homogeneous(cfg.design_variant)
+    };
+    let setup = DecoderSetup {
+        drafter: VariantKey::parse("drafter_fp")?,
+        target: VariantKey::parse("target_w8a8")?,
+        kernel: cfg.kernel_path,
+        mapping,
+        gamma: cfg.gamma.unwrap_or(5),
+        rule: if args.has_flag("stochastic") {
+            AcceptRule::Stochastic
+        } else {
+            AcceptRule::Greedy
+        },
+        exec: cfg.exec_mode,
+        max_new: cfg.max_new_tokens,
+    };
+    let lat = LatencyModel::new(platform);
+    let decoder = Decoder::new(&engine, lat, setup);
+    let out = if cfg.speculative {
+        decoder.speculative(&prompt)?
+    } else {
+        decoder.baseline(&prompt)?
+    };
+    println!("completion: {}", tokenizer.decode(&out.tokens));
+    println!(
+        "tokens={} rounds={} drafted={} accepted={} alpha={:.3}",
+        out.tokens.len(), out.n_rounds, out.n_drafted, out.n_accepted, out.alpha()
+    );
+    println!(
+        "simulated {:.1} ms | real {:.1} ms ({} drafter + {} target calls)",
+        out.sim_s * 1e3, out.real_s * 1e3, out.drafter_calls, out.target_calls
+    );
+    Ok(())
+}
+
+fn cmd_profile(cfg: &RunConfig, platform: Platform) -> anyhow::Result<()> {
+    let engine = Engine::load(&cfg.artifacts_dir)?;
+    let lat = LatencyModel::new(platform);
+    let seqs: Vec<usize> = engine.manifest.seq_buckets.clone();
+    println!("{:<16} {:<14} {:>6} {:>12} {:>12}",
+             "variant", "pu", "seq", "sim", "real(pjrt)");
+    for key in ["drafter_fp", "target_w8a8", "target_fp", "drafter_w8a8"] {
+        let variant = VariantKey::parse(key)?;
+        let pu = if variant.role == specedge::models::Role::Drafter && cfg.heterogeneous {
+            specedge::hetero::PuAssignment::Gpu
+        } else {
+            specedge::hetero::PuAssignment::Cpu { cores: cfg.design_variant }
+        };
+        let sim = profiler::profile_simulated(&lat, &engine, variant, pu, &seqs)?;
+        let real = profiler::profile_real(&engine, variant, cfg.kernel_path, &seqs, 3)?;
+        for (s, r) in sim.iter().zip(&real) {
+            println!(
+                "{:<16} {:<14} {:>6} {:>12} {:>12}",
+                key, s.pu_label, s.seq,
+                specedge::bench::fmt_time(s.sim_s),
+                specedge::bench::fmt_time(r.real_s.unwrap_or(f64::NAN)),
+            );
+        }
+    }
+    Ok(())
+}
+
+fn cmd_explore(
+    cfg: &RunConfig,
+    platform: Platform,
+    args: &specedge::util::cli::Args,
+) -> anyhow::Result<()> {
+    let alpha = args.get_f64("alpha")?.unwrap_or(0.90);
+    let seq = args.get_usize("seq")?.unwrap_or(63);
+    let engine = Engine::load(&cfg.artifacts_dir)?;
+    let lat = LatencyModel::new(platform);
+    let pair = PairConfig {
+        target: engine.manifest.model_for(VariantKey::parse("target_w8a8")?)?.clone(),
+        target_scheme: Scheme::W8a8,
+        drafter: engine.manifest.model_for(VariantKey::parse("drafter_fp")?)?.clone(),
+        drafter_scheme: Scheme::Fp,
+    };
+    println!("DSE at alpha={alpha} seq={seq}:");
+    for d in dse::explore_all(&lat, &pair, alpha, seq) {
+        let b = &d.best;
+        println!(
+            "variant {}: {} gamma={} S={:.3} [{}]",
+            b.variant,
+            if b.gamma > 0 { "SPECULATE" } else { "baseline " },
+            b.gamma,
+            b.speedup,
+            b.mapping.label()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_experiment(
+    cfg: &RunConfig,
+    platform: Platform,
+    args: &specedge::util::cli::Args,
+) -> anyhow::Result<()> {
+    let which = args
+        .positional
+        .get(1)
+        .map(|s| s.as_str())
+        .unwrap_or("all");
+    cmd_experiment_named(cfg, platform, args, which)
+}
+
+fn cmd_experiment_named(
+    cfg: &RunConfig,
+    platform: Platform,
+    args: &specedge::util::cli::Args,
+    which: &str,
+) -> anyhow::Result<()> {
+    let out = PathBuf::from(args.get("out").unwrap_or("results"));
+    let limit = args.get_usize("limit")?;
+    let ctx = experiments::Ctx::new(cfg, platform, out, limit)?;
+    experiments::run(&ctx, which)
+}
+
+fn cmd_serve(cfg: RunConfig, platform: Platform) -> anyhow::Result<()> {
+    let port = cfg.port;
+    let coordinator = Arc::new(Coordinator::start(cfg, platform)?);
+    let tokenizer = Tokenizer::builtin();
+    let server = Server::start(Arc::clone(&coordinator), tokenizer, port)?;
+    println!("specedge serving on 127.0.0.1:{}", server.port);
+    println!("protocol: one JSON per line; {{\"cmd\":\"shutdown\"}} to stop");
+    // Blocks until a shutdown command flips the stop flag.
+    server.stop();
+    Ok(())
+}

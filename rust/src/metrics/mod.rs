@@ -1,0 +1,152 @@
+//! Serving metrics: latency recording, acceptance accounting, throughput.
+
+use crate::util::stats::{BoxStats, Summary};
+use std::sync::Mutex;
+
+/// Thread-safe metrics sink shared by coordinator workers.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    inner: Mutex<Inner>,
+}
+
+#[derive(Debug, Default)]
+struct Inner {
+    /// Per-request simulated end-to-end latency (seconds).
+    sim_latency: Summary,
+    /// Per-request real wall latency (seconds).
+    real_latency: Summary,
+    /// Per-request queueing delay (seconds, real).
+    queue_delay: Summary,
+    /// Per-request acceptance rate (NaNs excluded).
+    alpha: Summary,
+    tokens_out: u64,
+    requests: u64,
+    rejected: u64,
+    drafted: u64,
+    accepted: u64,
+}
+
+/// One request's contribution.
+#[derive(Debug, Clone, Copy)]
+pub struct RequestRecord {
+    pub sim_s: f64,
+    pub real_s: f64,
+    pub queue_s: f64,
+    pub tokens: usize,
+    pub drafted: usize,
+    pub accepted: usize,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    pub fn record(&self, r: RequestRecord) {
+        let mut m = self.inner.lock().unwrap();
+        m.sim_latency.push(r.sim_s);
+        m.real_latency.push(r.real_s);
+        m.queue_delay.push(r.queue_s);
+        if r.drafted > 0 {
+            m.alpha.push(r.accepted as f64 / r.drafted as f64);
+        }
+        m.tokens_out += r.tokens as u64;
+        m.requests += 1;
+        m.drafted += r.drafted as u64;
+        m.accepted += r.accepted as u64;
+    }
+
+    pub fn record_rejected(&self) {
+        self.inner.lock().unwrap().rejected += 1;
+    }
+
+    pub fn snapshot(&self) -> Report {
+        let mut m = self.inner.lock().unwrap();
+        Report {
+            requests: m.requests,
+            rejected: m.rejected,
+            tokens_out: m.tokens_out,
+            mean_alpha: if m.drafted > 0 {
+                m.accepted as f64 / m.drafted as f64
+            } else {
+                f64::NAN
+            },
+            sim_latency: m.sim_latency.box_stats(),
+            real_latency: m.real_latency.box_stats(),
+            queue_delay: m.queue_delay.box_stats(),
+        }
+    }
+}
+
+/// Point-in-time metrics report.
+#[derive(Debug, Clone)]
+pub struct Report {
+    pub requests: u64,
+    pub rejected: u64,
+    pub tokens_out: u64,
+    pub mean_alpha: f64,
+    pub sim_latency: BoxStats,
+    pub real_latency: BoxStats,
+    pub queue_delay: BoxStats,
+}
+
+impl Report {
+    pub fn render(&self, wall_s: f64) -> String {
+        format!(
+            "requests={} rejected={} tokens={} tok/s={:.1} mean_alpha={:.3}\n\
+             sim latency  p50={:.1}ms p90={:.1}ms mean={:.1}ms\n\
+             real latency p50={:.1}ms p90={:.1}ms mean={:.1}ms\n\
+             queue delay  p50={:.1}ms p90={:.1}ms",
+            self.requests,
+            self.rejected,
+            self.tokens_out,
+            self.tokens_out as f64 / wall_s.max(1e-9),
+            self.mean_alpha,
+            self.sim_latency.median * 1e3,
+            self.sim_latency.p90 * 1e3,
+            self.sim_latency.mean * 1e3,
+            self.real_latency.median * 1e3,
+            self.real_latency.p90 * 1e3,
+            self.real_latency.mean * 1e3,
+            self.queue_delay.median * 1e3,
+            self.queue_delay.p90 * 1e3,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_reports() {
+        let m = Metrics::new();
+        for i in 0..10 {
+            m.record(RequestRecord {
+                sim_s: 0.1 * (i + 1) as f64,
+                real_s: 0.05,
+                queue_s: 0.01,
+                tokens: 20,
+                drafted: 10,
+                accepted: 5,
+            });
+        }
+        m.record_rejected();
+        let r = m.snapshot();
+        assert_eq!(r.requests, 10);
+        assert_eq!(r.rejected, 1);
+        assert_eq!(r.tokens_out, 200);
+        assert!((r.mean_alpha - 0.5).abs() < 1e-12);
+        assert!((r.sim_latency.median - 0.55).abs() < 1e-9);
+    }
+
+    #[test]
+    fn alpha_nan_when_no_drafts() {
+        let m = Metrics::new();
+        m.record(RequestRecord {
+            sim_s: 0.1, real_s: 0.1, queue_s: 0.0,
+            tokens: 5, drafted: 0, accepted: 0,
+        });
+        assert!(m.snapshot().mean_alpha.is_nan());
+    }
+}

@@ -1,0 +1,192 @@
+//! Model-variant metadata: identity, quantization scheme, and the analytic
+//! FLOPs model the heterogeneous latency simulator consumes (mirrors
+//! `ModelConfig.flops_per_token` on the Python side).
+
+use crate::util::json::Json;
+
+/// Which model of the speculative pair.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Role {
+    Target,
+    Drafter,
+}
+
+impl Role {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Role::Target => "target",
+            Role::Drafter => "drafter",
+        }
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<Role> {
+        match s {
+            "target" => Ok(Role::Target),
+            "drafter" => Ok(Role::Drafter),
+            _ => anyhow::bail!("unknown role {s:?}"),
+        }
+    }
+}
+
+/// Quantization scheme of a compiled variant (paper Fig. 5: FP, semi, full).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Scheme {
+    Fp,
+    W8a8,
+}
+
+impl Scheme {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Scheme::Fp => "fp",
+            Scheme::W8a8 => "w8a8",
+        }
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<Scheme> {
+        match s {
+            "fp" => Ok(Scheme::Fp),
+            "w8a8" => Ok(Scheme::W8a8),
+            _ => anyhow::bail!("unknown scheme {s:?}"),
+        }
+    }
+}
+
+/// A (role, scheme) pair — the unit the runtime loads and the DSE maps.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct VariantKey {
+    pub role: Role,
+    pub scheme: Scheme,
+}
+
+impl VariantKey {
+    pub fn new(role: Role, scheme: Scheme) -> VariantKey {
+        VariantKey { role, scheme }
+    }
+
+    pub fn name(&self) -> String {
+        format!("{}_{}", self.role.as_str(), self.scheme.as_str())
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<VariantKey> {
+        let (r, q) = s
+            .split_once('_')
+            .ok_or_else(|| anyhow::anyhow!("bad variant key {s:?}"))?;
+        Ok(VariantKey { role: Role::parse(r)?, scheme: Scheme::parse(q)? })
+    }
+}
+
+/// Architecture description (from the manifest's `models` section).
+#[derive(Debug, Clone)]
+pub struct ModelSpec {
+    pub name: String,
+    pub n_layers: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub ffn_dim: usize,
+    pub vocab: usize,
+    pub param_count: usize,
+}
+
+impl ModelSpec {
+    pub fn from_json(j: &Json) -> anyhow::Result<ModelSpec> {
+        Ok(ModelSpec {
+            name: j.req_str("name")?.to_string(),
+            n_layers: j.req_usize("n_layers")?,
+            d_model: j.req_usize("d_model")?,
+            n_heads: j.req_usize("n_heads")?,
+            ffn_dim: j.req_usize("ffn_dim")?,
+            vocab: j.req_usize("vocab")?,
+            param_count: j.req_usize("param_count")?,
+        })
+    }
+
+    /// Forward FLOPs for one full-sequence pass (no KV cache, 2·MAC
+    /// convention). Mirrors `ModelConfig.flops_per_token` in model.py —
+    /// the analytic latency model in `hetero` consumes this.
+    pub fn forward_flops(&self, seq_len: usize) -> f64 {
+        let (d, f, l, v, s) = (
+            self.d_model as f64,
+            self.ffn_dim as f64,
+            self.n_layers as f64,
+            self.vocab as f64,
+            seq_len as f64,
+        );
+        let linear = 2.0 * s * (4.0 * d * d + 3.0 * d * f) * l;
+        let attn = 2.0 * s * s * d * 2.0 * l;
+        let head = 2.0 * s * d * v;
+        linear + attn + head
+    }
+
+    /// Fraction of FLOPs in linear layers at this seq length — the paper's
+    /// §II-A observation (short sequences are linear-dominated) made
+    /// quantitative; used in DESIGN.md §8 and the kernel perf analysis.
+    pub fn linear_fraction(&self, seq_len: usize) -> f64 {
+        let (d, f, l, s) = (
+            self.d_model as f64,
+            self.ffn_dim as f64,
+            self.n_layers as f64,
+            seq_len as f64,
+        );
+        let linear = 2.0 * s * (4.0 * d * d + 3.0 * d * f) * l;
+        linear / self.forward_flops(seq_len)
+    }
+
+    /// Parameter bytes for a given scheme (w8a8 keeps norms/embeds fp32 but
+    /// linears drop to 1 byte + per-channel scales).
+    pub fn weight_bytes(&self, scheme: Scheme) -> usize {
+        let linears = self.n_layers
+            * (4 * self.d_model * self.d_model + 3 * self.d_model * self.ffn_dim);
+        let rest = self.param_count - linears;
+        match scheme {
+            Scheme::Fp => self.param_count * 4,
+            Scheme::W8a8 => linears + rest * 4,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn target() -> ModelSpec {
+        ModelSpec {
+            name: "target".into(),
+            n_layers: 4,
+            d_model: 128,
+            n_heads: 4,
+            ffn_dim: 352,
+            vocab: 48,
+            param_count: 816_256,
+        }
+    }
+
+    #[test]
+    fn variant_key_roundtrip() {
+        let k = VariantKey::new(Role::Target, Scheme::W8a8);
+        assert_eq!(k.name(), "target_w8a8");
+        assert_eq!(VariantKey::parse("target_w8a8").unwrap(), k);
+        assert!(VariantKey::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn flops_monotonic_in_seq() {
+        let m = target();
+        let f: Vec<f64> = [16, 32, 64, 128].iter().map(|&s| m.forward_flops(s)).collect();
+        assert!(f.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn short_sequences_are_linear_dominated() {
+        // Paper §II-A: S_L << d  =>  linear layers dominate.
+        let m = target();
+        assert!(m.linear_fraction(16) > 0.85);
+        assert!(m.linear_fraction(63) > m.linear_fraction(128));
+    }
+
+    #[test]
+    fn quant_weights_smaller() {
+        let m = target();
+        assert!(m.weight_bytes(Scheme::W8a8) < m.weight_bytes(Scheme::Fp) / 2);
+    }
+}

@@ -1,0 +1,144 @@
+//! Cost-coefficient profiler (paper §III-C, Fig. 6).
+//!
+//! Measures t_draft and t_target per (variant, PU assignment, sequence
+//! length) and derives c = t_draft / t_target. Two backends:
+//!
+//! * **simulated** — the calibrated i.MX95 latency model (paper-facing);
+//! * **real** — wall-clock of the PJRT CPU executions on this machine
+//!   (reported alongside in EXPERIMENTS.md; same *shape*, different scale).
+
+use crate::config::KernelPath;
+use crate::hetero::{LatencyModel, Mapping};
+use crate::models::VariantKey;
+use crate::runtime::Engine;
+use crate::util::stats::Summary;
+
+/// One profile row.
+#[derive(Debug, Clone)]
+pub struct ProfileRow {
+    pub variant: VariantKey,
+    pub pu_label: String,
+    pub seq: usize,
+    /// Simulated seconds per forward.
+    pub sim_s: f64,
+    /// Real seconds per forward (median over `reps`), if measured.
+    pub real_s: Option<f64>,
+}
+
+/// Cost-coefficient curve point (Fig. 6 series).
+#[derive(Debug, Clone)]
+pub struct CostPoint {
+    pub seq: usize,
+    /// Design variant (CPU cores available).
+    pub variant: usize,
+    pub heterogeneous: bool,
+    pub c_sim: f64,
+    pub c_real: Option<f64>,
+}
+
+/// Profile the simulated latency of one variant across seq lengths/PUs.
+pub fn profile_simulated(
+    lat: &LatencyModel,
+    engine: &Engine,
+    variant: VariantKey,
+    pu: crate::hetero::PuAssignment,
+    seqs: &[usize],
+) -> anyhow::Result<Vec<ProfileRow>> {
+    let spec = engine.manifest.model_for(variant)?;
+    Ok(seqs
+        .iter()
+        .map(|&s| ProfileRow {
+            variant,
+            pu_label: pu.label(),
+            seq: s,
+            sim_s: lat.forward_latency(spec, variant.scheme, pu, s),
+            real_s: None,
+        })
+        .collect())
+}
+
+/// Measure real PJRT wall-clock per forward (median of `reps`, after one
+/// warmup execution that also triggers compilation).
+pub fn profile_real(
+    engine: &Engine,
+    variant: VariantKey,
+    kernel: KernelPath,
+    seqs: &[usize],
+    reps: usize,
+) -> anyhow::Result<Vec<ProfileRow>> {
+    let mut rows = Vec::new();
+    for &s in seqs {
+        let bucket = engine.bucket_for(s)?;
+        let tokens: Vec<u32> = (0..s.min(bucket)).map(|i| 4 + (i % 40) as u32).collect();
+        engine.forward(variant, kernel, &tokens, bucket)?; // warmup/compile
+        let mut lat = Summary::new();
+        for _ in 0..reps {
+            let out = engine.forward(variant, kernel, &tokens, bucket)?;
+            lat.push(out.elapsed_s);
+        }
+        rows.push(ProfileRow {
+            variant,
+            pu_label: format!("pjrt-cpu/{}", kernel.as_str()),
+            seq: s,
+            sim_s: f64::NAN,
+            real_s: Some(lat.median()),
+        });
+    }
+    Ok(rows)
+}
+
+/// The Fig. 6 data: c vs sequence length for every design variant, in both
+/// homogeneous (a) and heterogeneous (b) mappings. Pair = (drafter, target)
+/// variants (the paper's semi-quantized deployment by default).
+pub fn cost_curves(
+    lat: &LatencyModel,
+    engine: &Engine,
+    drafter: VariantKey,
+    target: VariantKey,
+    seqs: &[usize],
+    heterogeneous: bool,
+    real_ratio: Option<f64>,
+) -> anyhow::Result<Vec<CostPoint>> {
+    let d_spec = engine.manifest.model_for(drafter)?;
+    let t_spec = engine.manifest.model_for(target)?;
+    let mut points = Vec::new();
+    for variant in 1..=lat.platform.design_variants() {
+        let mapping = if heterogeneous {
+            Mapping::heterogeneous(variant)
+        } else {
+            Mapping::homogeneous(variant)
+        };
+        for &s in seqs {
+            let c = lat.cost_coefficient(
+                (d_spec, drafter.scheme),
+                (t_spec, target.scheme),
+                mapping,
+                s,
+            );
+            points.push(CostPoint {
+                seq: s,
+                variant,
+                heterogeneous,
+                c_sim: c,
+                c_real: real_ratio,
+            });
+        }
+    }
+    Ok(points)
+}
+
+/// Real-hardware cost coefficient on this machine (PJRT CPU): the ratio of
+/// measured drafter/target forward latencies. There is no real GPU here, so
+/// this only validates the *homogeneous* shape.
+pub fn real_cost_coefficient(
+    engine: &Engine,
+    drafter: VariantKey,
+    target: VariantKey,
+    kernel: KernelPath,
+    seq: usize,
+    reps: usize,
+) -> anyhow::Result<f64> {
+    let d = profile_real(engine, drafter, kernel, &[seq], reps)?;
+    let t = profile_real(engine, target, kernel, &[seq], reps)?;
+    Ok(d[0].real_s.unwrap() / t[0].real_s.unwrap())
+}

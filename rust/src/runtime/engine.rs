@@ -1,0 +1,391 @@
+//! The PJRT execution engine: compiles AOT artifacts on first use (cached
+//! thereafter) and runs them with device-resident weights.
+//!
+//! One `Engine` per worker thread (the xla wrapper types hold raw pointers
+//! and are not `Send`); the PJRT *CPU* client underneath is cheap enough to
+//! instantiate per worker. The hot path per forward call is: pad tokens →
+//! upload one tiny i32 buffer → `execute_b` → download logits.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+use std::rc::Rc;
+use std::time::Instant;
+
+use crate::config::KernelPath;
+use crate::models::VariantKey;
+use crate::tokenizer::PAD_ID;
+
+use super::manifest::Manifest;
+use super::weights;
+
+/// Cache key for a compiled forward executable.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+struct ExeKey {
+    variant: VariantKey,
+    kernel: KernelPath,
+    batch: usize,
+    seq: usize,
+}
+
+/// Result of a forward pass.
+#[derive(Debug, Clone)]
+pub struct ForwardOut {
+    /// Row-major logits [batch * seq, vocab].
+    pub logits: Vec<f32>,
+    pub batch: usize,
+    pub seq: usize,
+    pub vocab: usize,
+    /// Real wall-clock of the PJRT execution (excludes compile).
+    pub elapsed_s: f64,
+}
+
+impl ForwardOut {
+    /// Logits row for (batch item, position).
+    pub fn row(&self, b: usize, pos: usize) -> &[f32] {
+        debug_assert!(b < self.batch && pos < self.seq);
+        let start = (b * self.seq + pos) * self.vocab;
+        &self.logits[start..start + self.vocab]
+    }
+
+    /// Greedy token at (batch item, position).
+    pub fn argmax(&self, b: usize, pos: usize) -> u32 {
+        let row = self.row(b, pos);
+        let mut best = 0usize;
+        let mut bv = f32::NEG_INFINITY;
+        for (i, &v) in row.iter().enumerate() {
+            if v > bv {
+                bv = v;
+                best = i;
+            }
+        }
+        best as u32
+    }
+
+    /// Softmax probabilities at (b, pos) — used by the stochastic accept rule.
+    pub fn probs(&self, b: usize, pos: usize) -> Vec<f32> {
+        let row = self.row(b, pos);
+        let m = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        let ex: Vec<f32> = row.iter().map(|&v| (v - m).exp()).collect();
+        let z: f32 = ex.iter().sum();
+        ex.iter().map(|&e| e / z).collect()
+    }
+}
+
+/// Result of one fused monolithic speculation step.
+#[derive(Debug, Clone)]
+pub struct MonoStepOut {
+    /// Leading drafted tokens accepted by the target (greedy rule).
+    pub n_accepted: usize,
+    /// Target greedy tokens at positions cur_len .. cur_len+γ (the corrected
+    /// continuation; append `out_tokens[..n_accepted + 1]`).
+    pub out_tokens: Vec<u32>,
+    /// The γ tokens the drafter proposed (diagnostics / α accounting).
+    pub drafted: Vec<u32>,
+    pub elapsed_s: f64,
+}
+
+/// The engine. Construct once per worker thread via [`Engine::load`].
+pub struct Engine {
+    client: xla::PjRtClient,
+    pub manifest: Rc<Manifest>,
+    /// Device-resident weights per variant (uploaded lazily, kept forever).
+    weights: RefCell<HashMap<VariantKey, Rc<Vec<xla::PjRtBuffer>>>>,
+    exes: RefCell<HashMap<ExeKey, Rc<xla::PjRtLoadedExecutable>>>,
+    mono_exes: RefCell<HashMap<usize, Rc<xla::PjRtLoadedExecutable>>>,
+    /// Scratch pad buffer reused across calls (perf: zero realloc).
+    pad_scratch: RefCell<Vec<i32>>,
+    /// Counters for the profiler / metrics.
+    pub n_forward_calls: std::cell::Cell<u64>,
+    pub n_compiles: std::cell::Cell<u64>,
+}
+
+impl Engine {
+    /// Load the manifest and create a PJRT CPU client.
+    pub fn load(artifacts_dir: &Path) -> anyhow::Result<Engine> {
+        let manifest = Rc::new(Manifest::load(artifacts_dir)?);
+        Self::with_manifest(manifest)
+    }
+
+    pub fn with_manifest(manifest: Rc<Manifest>) -> anyhow::Result<Engine> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Engine {
+            client,
+            manifest,
+            weights: RefCell::new(HashMap::new()),
+            exes: RefCell::new(HashMap::new()),
+            mono_exes: RefCell::new(HashMap::new()),
+            pad_scratch: RefCell::new(Vec::new()),
+            n_forward_calls: std::cell::Cell::new(0),
+            n_compiles: std::cell::Cell::new(0),
+        })
+    }
+
+    /// Device-resident weights for a variant (upload on first use).
+    fn weights_for(&self, key: VariantKey) -> anyhow::Result<Rc<Vec<xla::PjRtBuffer>>> {
+        if let Some(w) = self.weights.borrow().get(&key) {
+            return Ok(Rc::clone(w));
+        }
+        let entry = self.manifest.variant(key)?;
+        let path = self.manifest.path_of(&entry.weights_file);
+        let tensors = weights::read_sewb(&path)?;
+        anyhow::ensure!(
+            tensors.len() == entry.tensors.len(),
+            "{}: weights file has {} tensors, manifest says {}",
+            key.name(), tensors.len(), entry.tensors.len()
+        );
+        for (t, m) in tensors.iter().zip(&entry.tensors) {
+            anyhow::ensure!(
+                t.name == m.name && t.shape == m.shape,
+                "{}: tensor mismatch {} vs {}", key.name(), t.name, m.name
+            );
+        }
+        let bufs = Rc::new(weights::upload(&self.client, &tensors)?);
+        self.weights.borrow_mut().insert(key, Rc::clone(&bufs));
+        Ok(bufs)
+    }
+
+    fn compile(&self, file: &str) -> anyhow::Result<Rc<xla::PjRtLoadedExecutable>> {
+        let path = self.manifest.path_of(file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow::anyhow!("parsing {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling {path:?}: {e:?}"))?;
+        self.n_compiles.set(self.n_compiles.get() + 1);
+        Ok(Rc::new(exe))
+    }
+
+    fn forward_exe(
+        &self,
+        variant: VariantKey,
+        kernel: KernelPath,
+        batch: usize,
+        seq: usize,
+    ) -> anyhow::Result<Rc<xla::PjRtLoadedExecutable>> {
+        let key = ExeKey { variant, kernel, batch, seq };
+        if let Some(e) = self.exes.borrow().get(&key) {
+            return Ok(Rc::clone(e));
+        }
+        let entry = self.manifest.variant(variant)?;
+        let art = entry.artifact(kernel, batch, seq).ok_or_else(|| {
+            anyhow::anyhow!(
+                "no artifact for {} kernel={} batch={batch} seq={seq}",
+                variant.name(), kernel.as_str()
+            )
+        })?;
+        let exe = self.compile(&art.file)?;
+        self.exes.borrow_mut().insert(key, Rc::clone(&exe));
+        Ok(exe)
+    }
+
+    /// Pre-compile the executables a decode session will need (avoids
+    /// first-call compile latency on the serving path).
+    pub fn warmup(
+        &self,
+        variants: &[VariantKey],
+        kernel: KernelPath,
+        buckets: &[usize],
+    ) -> anyhow::Result<()> {
+        for &v in variants {
+            self.weights_for(v)?;
+            for &b in buckets {
+                self.forward_exe(v, kernel, 1, b)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Smallest compiled bucket that fits `len` tokens.
+    pub fn bucket_for(&self, len: usize) -> anyhow::Result<usize> {
+        self.manifest.bucket_for(len).ok_or_else(|| {
+            anyhow::anyhow!(
+                "sequence length {len} exceeds the largest bucket {}",
+                self.manifest.largest_bucket()
+            )
+        })
+    }
+
+    /// Single-sequence forward: pad to the bucket, run, return full logits.
+    pub fn forward(
+        &self,
+        variant: VariantKey,
+        kernel: KernelPath,
+        tokens: &[u32],
+        bucket: usize,
+    ) -> anyhow::Result<ForwardOut> {
+        anyhow::ensure!(tokens.len() <= bucket, "{} > bucket {bucket}", tokens.len());
+        let exe = self.forward_exe(variant, kernel, 1, bucket)?;
+        let w = self.weights_for(variant)?;
+
+        let mut scratch = self.pad_scratch.borrow_mut();
+        scratch.clear();
+        scratch.extend(tokens.iter().map(|&t| t as i32));
+        scratch.resize(bucket, PAD_ID as i32);
+        let tok_buf = self
+            .client
+            .buffer_from_host_buffer::<i32>(&scratch, &[bucket], None)
+            .map_err(|e| anyhow::anyhow!("token upload: {e:?}"))?;
+        drop(scratch);
+
+        let mut args: Vec<&xla::PjRtBuffer> = w.iter().collect();
+        args.push(&tok_buf);
+
+        let t0 = Instant::now();
+        let result = exe
+            .execute_b(&args)
+            .map_err(|e| anyhow::anyhow!("execute {}: {e:?}", variant.name()))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("download: {e:?}"))?;
+        let elapsed_s = t0.elapsed().as_secs_f64();
+        self.n_forward_calls.set(self.n_forward_calls.get() + 1);
+
+        let out = lit.to_tuple1().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+        let logits = out.to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+        let spec = self.manifest.model_for(variant)?;
+        anyhow::ensure!(
+            logits.len() == bucket * spec.vocab,
+            "logits size {} != {bucket} * {}", logits.len(), spec.vocab
+        );
+        Ok(ForwardOut {
+            logits,
+            batch: 1,
+            seq: bucket,
+            vocab: spec.vocab,
+            elapsed_s,
+        })
+    }
+
+    /// Batched forward over `batch` sequences padded to the same bucket.
+    pub fn forward_batch(
+        &self,
+        variant: VariantKey,
+        kernel: KernelPath,
+        seqs: &[&[u32]],
+        bucket: usize,
+    ) -> anyhow::Result<ForwardOut> {
+        let batch = seqs.len();
+        let exe = self.forward_exe(variant, kernel, batch, bucket)?;
+        let w = self.weights_for(variant)?;
+        let mut flat = Vec::with_capacity(batch * bucket);
+        for s in seqs {
+            anyhow::ensure!(s.len() <= bucket, "{} > bucket {bucket}", s.len());
+            flat.extend(s.iter().map(|&t| t as i32));
+            flat.resize(flat.len() + bucket - s.len(), PAD_ID as i32);
+        }
+        let tok_buf = self
+            .client
+            .buffer_from_host_buffer::<i32>(&flat, &[batch, bucket], None)
+            .map_err(|e| anyhow::anyhow!("token upload: {e:?}"))?;
+        let mut args: Vec<&xla::PjRtBuffer> = w.iter().collect();
+        args.push(&tok_buf);
+        let t0 = Instant::now();
+        let result = exe
+            .execute_b(&args)
+            .map_err(|e| anyhow::anyhow!("execute batch: {e:?}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("download: {e:?}"))?;
+        let elapsed_s = t0.elapsed().as_secs_f64();
+        self.n_forward_calls.set(self.n_forward_calls.get() + 1);
+        let out = lit.to_tuple1().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+        let logits = out.to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+        let spec = self.manifest.model_for(variant)?;
+        Ok(ForwardOut {
+            logits,
+            batch,
+            seq: bucket,
+            vocab: spec.vocab,
+            elapsed_s,
+        })
+    }
+
+    /// One fused monolithic speculation step (paper Fig. 3).
+    pub fn mono_step(
+        &self,
+        gamma: usize,
+        tokens: &[u32],
+        cur_len: usize,
+    ) -> anyhow::Result<MonoStepOut> {
+        let entry = self
+            .manifest
+            .mono(gamma)
+            .ok_or_else(|| anyhow::anyhow!("no monolithic artifact for gamma={gamma}"))?
+            .clone();
+        anyhow::ensure!(
+            cur_len >= 1 && cur_len + gamma <= entry.seq,
+            "cur_len {cur_len} + gamma {gamma} exceeds mono bucket {}", entry.seq
+        );
+        // NB: take the cached Rc out before the else-branch mutates the map
+        // (a single `if let Some(e) = .borrow().get(..)` would hold the
+        // shared borrow across the `borrow_mut`).
+        let cached = self.mono_exes.borrow().get(&gamma).map(Rc::clone);
+        let exe = match cached {
+            Some(e) => e,
+            None => {
+                let e = self.compile(&entry.file)?;
+                self.mono_exes.borrow_mut().insert(gamma, Rc::clone(&e));
+                e
+            }
+        };
+        let dw = self.weights_for(entry.drafter)?;
+        let tw = self.weights_for(entry.target)?;
+
+        let mut padded: Vec<i32> = tokens.iter().map(|&t| t as i32).collect();
+        padded.resize(entry.seq, PAD_ID as i32);
+        let tok_buf = self
+            .client
+            .buffer_from_host_buffer::<i32>(&padded, &[entry.seq], None)
+            .map_err(|e| anyhow::anyhow!("token upload: {e:?}"))?;
+        let len_buf = self
+            .client
+            .buffer_from_host_buffer::<i32>(&[cur_len as i32], &[], None)
+            .map_err(|e| anyhow::anyhow!("len upload: {e:?}"))?;
+
+        let mut args: Vec<&xla::PjRtBuffer> = dw.iter().collect();
+        args.extend(tw.iter());
+        args.push(&tok_buf);
+        args.push(&len_buf);
+
+        let t0 = Instant::now();
+        let result = exe
+            .execute_b(&args)
+            .map_err(|e| anyhow::anyhow!("mono execute: {e:?}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("download: {e:?}"))?;
+        let elapsed_s = t0.elapsed().as_secs_f64();
+        self.n_forward_calls.set(self.n_forward_calls.get() + 1);
+
+        let (acc, out_tok, drafted) =
+            lit.to_tuple3().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+        let n_accepted = acc.to_vec::<i32>().map_err(|e| anyhow::anyhow!("{e:?}"))?[0];
+        let out_tokens: Vec<u32> = out_tok
+            .to_vec::<i32>()
+            .map_err(|e| anyhow::anyhow!("{e:?}"))?
+            .into_iter()
+            .map(|t| t as u32)
+            .collect();
+        let drafted: Vec<u32> = drafted
+            .to_vec::<i32>()
+            .map_err(|e| anyhow::anyhow!("{e:?}"))?
+            .into_iter()
+            .map(|t| t as u32)
+            .collect();
+        anyhow::ensure!(out_tokens.len() == gamma + 1 && drafted.len() == gamma);
+        Ok(MonoStepOut {
+            n_accepted: n_accepted as usize,
+            out_tokens,
+            drafted,
+            elapsed_s,
+        })
+    }
+
+    pub fn platform_name(&self) -> String {
+        self.client.platform_name()
+    }
+}

@@ -1,0 +1,300 @@
+//! Typed view of `artifacts/manifest.json` (written by python/compile/aot.py).
+
+use crate::config::KernelPath;
+use crate::models::{ModelSpec, VariantKey};
+use crate::util::json::Json;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// One compiled forward-pass artifact.
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    pub file: String,
+    pub kernel: KernelPath,
+    pub batch: usize,
+    pub seq: usize,
+}
+
+/// One weight tensor in a SEWB file (order matters: it is the parameter
+/// order of the compiled executables).
+#[derive(Debug, Clone)]
+pub struct TensorEntry {
+    pub name: String,
+    pub dtype: String, // "f32" | "i8" | "i32"
+    pub shape: Vec<usize>,
+}
+
+/// One model variant (role × scheme): weights + its artifacts.
+#[derive(Debug, Clone)]
+pub struct VariantEntry {
+    pub key: VariantKey,
+    pub weights_file: String,
+    pub tensors: Vec<TensorEntry>,
+    pub artifacts: Vec<ArtifactEntry>,
+}
+
+impl VariantEntry {
+    /// Find the artifact for (kernel, batch, bucket).
+    pub fn artifact(&self, kernel: KernelPath, batch: usize, seq: usize)
+        -> Option<&ArtifactEntry> {
+        self.artifacts
+            .iter()
+            .find(|a| a.kernel == kernel && a.batch == batch && a.seq == seq)
+    }
+}
+
+/// One fused monolithic spec-step artifact.
+#[derive(Debug, Clone)]
+pub struct MonoEntry {
+    pub file: String,
+    pub gamma: usize,
+    pub seq: usize,
+    pub drafter: VariantKey,
+    pub target: VariantKey,
+}
+
+/// One evaluation sample (the fixed 480-sample Spec-Bench-shaped set).
+#[derive(Debug, Clone)]
+pub struct EvalSample {
+    pub task: String,
+    pub prompt: String,
+    pub completion: String,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub tokenizer_spec: Json,
+    pub seq_buckets: Vec<usize>,
+    pub batch_sizes: Vec<usize>,
+    pub models: HashMap<String, ModelSpec>,
+    pub variants: HashMap<VariantKey, VariantEntry>,
+    pub monolithic: Vec<MonoEntry>,
+    pub eval_samples: Vec<EvalSample>,
+    pub qmax: usize,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> anyhow::Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            anyhow::anyhow!(
+                "cannot read {path:?}: {e}\n(hint: run `make artifacts` first)"
+            )
+        })?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{path:?}: {e}"))?;
+        Manifest::from_json(dir, &j)
+    }
+
+    pub fn from_json(dir: &Path, j: &Json) -> anyhow::Result<Manifest> {
+        let seq_buckets: Vec<usize> = j
+            .req_arr("seq_buckets")?
+            .iter()
+            .filter_map(Json::as_usize)
+            .collect();
+        let batch_sizes: Vec<usize> = j
+            .req_arr("batch_sizes")?
+            .iter()
+            .filter_map(Json::as_usize)
+            .collect();
+        anyhow::ensure!(!seq_buckets.is_empty(), "manifest has no seq buckets");
+
+        let mut models = HashMap::new();
+        for (name, mj) in j
+            .get("models")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow::anyhow!("manifest missing models"))?
+        {
+            models.insert(name.clone(), ModelSpec::from_json(mj)?);
+        }
+
+        let mut variants = HashMap::new();
+        for (name, vj) in j
+            .get("variants")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow::anyhow!("manifest missing variants"))?
+        {
+            let key = VariantKey::parse(name)?;
+            let tensors = vj
+                .req_arr("tensors")?
+                .iter()
+                .map(|t| -> anyhow::Result<TensorEntry> {
+                    Ok(TensorEntry {
+                        name: t.req_str("name")?.to_string(),
+                        dtype: t.req_str("dtype")?.to_string(),
+                        shape: t
+                            .req_arr("shape")?
+                            .iter()
+                            .filter_map(Json::as_usize)
+                            .collect(),
+                    })
+                })
+                .collect::<anyhow::Result<Vec<_>>>()?;
+            let artifacts = vj
+                .req_arr("artifacts")?
+                .iter()
+                .map(|a| -> anyhow::Result<ArtifactEntry> {
+                    Ok(ArtifactEntry {
+                        file: a.req_str("file")?.to_string(),
+                        kernel: KernelPath::parse(a.req_str("kernel")?)?,
+                        batch: a.req_usize("batch")?,
+                        seq: a.req_usize("seq")?,
+                    })
+                })
+                .collect::<anyhow::Result<Vec<_>>>()?;
+            variants.insert(
+                key,
+                VariantEntry {
+                    key,
+                    weights_file: vj.req_str("weights")?.to_string(),
+                    tensors,
+                    artifacts,
+                },
+            );
+        }
+
+        let monolithic = j
+            .req_arr("monolithic")?
+            .iter()
+            .map(|m| -> anyhow::Result<MonoEntry> {
+                Ok(MonoEntry {
+                    file: m.req_str("file")?.to_string(),
+                    gamma: m.req_usize("gamma")?,
+                    seq: m.req_usize("seq")?,
+                    drafter: VariantKey::parse(m.req_str("drafter")?)?,
+                    target: VariantKey::parse(m.req_str("target")?)?,
+                })
+            })
+            .collect::<anyhow::Result<Vec<_>>>()?;
+
+        let eval_samples = j
+            .req_arr("eval_samples")?
+            .iter()
+            .map(|s| -> anyhow::Result<EvalSample> {
+                Ok(EvalSample {
+                    task: s.req_str("task")?.to_string(),
+                    prompt: s.req_str("prompt")?.to_string(),
+                    completion: s.req_str("completion")?.to_string(),
+                })
+            })
+            .collect::<anyhow::Result<Vec<_>>>()?;
+
+        let qmax = j
+            .at(&["quant", "qmax"])
+            .and_then(Json::as_usize)
+            .unwrap_or(127);
+
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            tokenizer_spec: j
+                .get("tokenizer")
+                .cloned()
+                .ok_or_else(|| anyhow::anyhow!("manifest missing tokenizer"))?,
+            seq_buckets,
+            batch_sizes,
+            models,
+            variants,
+            monolithic,
+            eval_samples,
+            qmax,
+        })
+    }
+
+    /// Smallest bucket that fits `len` live tokens (None if none fits).
+    pub fn bucket_for(&self, len: usize) -> Option<usize> {
+        self.seq_buckets.iter().copied().find(|&b| b >= len)
+    }
+
+    pub fn largest_bucket(&self) -> usize {
+        *self.seq_buckets.last().unwrap()
+    }
+
+    pub fn model_for(&self, key: VariantKey) -> anyhow::Result<&ModelSpec> {
+        self.models
+            .get(key.role.as_str())
+            .ok_or_else(|| anyhow::anyhow!("no model spec for {}", key.name()))
+    }
+
+    pub fn variant(&self, key: VariantKey) -> anyhow::Result<&VariantEntry> {
+        self.variants
+            .get(&key)
+            .ok_or_else(|| anyhow::anyhow!("no variant {} in manifest", key.name()))
+    }
+
+    pub fn mono(&self, gamma: usize) -> Option<&MonoEntry> {
+        self.monolithic.iter().find(|m| m.gamma == gamma)
+    }
+
+    pub fn path_of(&self, file: &str) -> PathBuf {
+        self.dir.join(file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Minimal manifest JSON for unit tests (no files on disk needed).
+    pub fn mini_manifest_json() -> String {
+        r#"{
+          "tokenizer": {"specials":["<pad>","<bos>","<eos>","="],
+                        "chars":" abcdefghijklmnopqrstuvwxyz.,?!-0123456789:'",
+                        "vocab_size":48},
+          "seq_buckets": [16, 64, 128],
+          "batch_sizes": [1, 4],
+          "models": {
+            "target": {"name":"target","n_layers":4,"d_model":128,"n_heads":4,
+                       "ffn_dim":352,"vocab":48,"rope_theta":10000.0,
+                       "param_count":816256},
+            "drafter": {"name":"drafter","n_layers":2,"d_model":96,"n_heads":4,
+                        "ffn_dim":256,"vocab":48,"rope_theta":10000.0,
+                        "param_count":230880}
+          },
+          "quant": {"qmax": 2},
+          "variants": {
+            "target_fp": {"role":"target","scheme":"fp","model":"target",
+              "weights":"weights_target_fp.bin",
+              "tensors":[{"name":"embed","dtype":"f32","shape":[48,128]}],
+              "artifacts":[{"file":"target_fp_b1_s64.hlo.txt","kernel":"pallas",
+                            "batch":1,"seq":64}]}
+          },
+          "monolithic": [{"file":"mono_g2_s128.hlo.txt","gamma":2,"seq":128,
+                          "drafter":"drafter_fp","target":"target_w8a8"}],
+          "eval_samples": [{"task":"translate","prompt":"tr: a","completion":"h"}]
+        }"#
+        .to_string()
+    }
+
+    #[test]
+    fn parses_mini() {
+        let j = Json::parse(&mini_manifest_json()).unwrap();
+        let m = Manifest::from_json(Path::new("/tmp/x"), &j).unwrap();
+        assert_eq!(m.seq_buckets, vec![16, 64, 128]);
+        assert_eq!(m.qmax, 2);
+        assert_eq!(m.eval_samples.len(), 1);
+        assert_eq!(m.monolithic[0].gamma, 2);
+        let v = m
+            .variant(VariantKey::parse("target_fp").unwrap())
+            .unwrap();
+        assert!(v.artifact(KernelPath::Pallas, 1, 64).is_some());
+        assert!(v.artifact(KernelPath::Ref, 1, 64).is_none());
+    }
+
+    #[test]
+    fn bucket_selection() {
+        let j = Json::parse(&mini_manifest_json()).unwrap();
+        let m = Manifest::from_json(Path::new("/tmp/x"), &j).unwrap();
+        assert_eq!(m.bucket_for(10), Some(16));
+        assert_eq!(m.bucket_for(16), Some(16));
+        assert_eq!(m.bucket_for(17), Some(64));
+        assert_eq!(m.bucket_for(129), None);
+        assert_eq!(m.largest_bucket(), 128);
+    }
+
+    #[test]
+    fn missing_fields_error() {
+        let j = Json::parse(r#"{"seq_buckets":[16]}"#).unwrap();
+        assert!(Manifest::from_json(Path::new("/tmp"), &j).is_err());
+    }
+}

@@ -1,0 +1,15 @@
+//! PJRT runtime: loads the AOT artifacts (HLO text) and executes them on the
+//! request path. Python is never involved here.
+//!
+//! * [`manifest`] — parses `artifacts/manifest.json` into typed structs
+//! * [`weights`] — reads the SEWB binary weight files, uploads them once as
+//!   device-resident `PjRtBuffer`s
+//! * [`engine`] — executable cache per (variant, kernel, batch, bucket) and
+//!   the `tokens → logits` / fused-spec-step execution entry points
+
+pub mod engine;
+pub mod manifest;
+pub mod weights;
+
+pub use engine::{Engine, ForwardOut, MonoStepOut};
+pub use manifest::{ArtifactEntry, Manifest, MonoEntry, VariantEntry};

@@ -1,0 +1,220 @@
+//! SEWB weight-file reader (format written by `python/compile/aot.py`):
+//!
+//! ```text
+//! magic "SEWB" | u32 version | u32 n_tensors
+//! per tensor: u16 name_len | name | u8 dtype(0=f32,1=i8,2=i32) | u8 ndim
+//!             | u32 dims[ndim] | u64 nbytes | raw little-endian bytes
+//! ```
+//!
+//! Tensors are uploaded once as device-resident `PjRtBuffer`s; the hot path
+//! only ever uploads the (tiny) token buffer per call.
+
+use std::io::Read;
+use std::path::Path;
+
+/// Dtype tag in a SEWB file.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I8,
+    I32,
+}
+
+impl Dtype {
+    fn from_tag(tag: u8) -> anyhow::Result<Dtype> {
+        match tag {
+            0 => Ok(Dtype::F32),
+            1 => Ok(Dtype::I8),
+            2 => Ok(Dtype::I32),
+            t => anyhow::bail!("unknown SEWB dtype tag {t}"),
+        }
+    }
+
+    pub fn size(&self) -> usize {
+        match self {
+            Dtype::F32 | Dtype::I32 => 4,
+            Dtype::I8 => 1,
+        }
+    }
+}
+
+/// One tensor read from a SEWB file.
+#[derive(Debug, Clone)]
+pub struct HostTensor {
+    pub name: String,
+    pub dtype: Dtype,
+    pub shape: Vec<usize>,
+    pub data: Vec<u8>,
+}
+
+impl HostTensor {
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn as_f32(&self) -> anyhow::Result<Vec<f32>> {
+        anyhow::ensure!(self.dtype == Dtype::F32, "{} is not f32", self.name);
+        Ok(self
+            .data
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect())
+    }
+}
+
+/// Read every tensor of a SEWB file, preserving file order (= the parameter
+/// order of the compiled executables).
+pub fn read_sewb(path: &Path) -> anyhow::Result<Vec<HostTensor>> {
+    let mut f = std::io::BufReader::new(
+        std::fs::File::open(path)
+            .map_err(|e| anyhow::anyhow!("cannot open weights {path:?}: {e}"))?,
+    );
+    let mut magic = [0u8; 4];
+    f.read_exact(&mut magic)?;
+    anyhow::ensure!(&magic == b"SEWB", "{path:?}: bad magic {magic:?}");
+    let version = read_u32(&mut f)?;
+    anyhow::ensure!(version == 1, "{path:?}: unsupported SEWB version {version}");
+    let n = read_u32(&mut f)? as usize;
+    anyhow::ensure!(n < 100_000, "{path:?}: implausible tensor count {n}");
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        let name_len = read_u16(&mut f)? as usize;
+        let mut name_bytes = vec![0u8; name_len];
+        f.read_exact(&mut name_bytes)?;
+        let name = String::from_utf8(name_bytes)
+            .map_err(|_| anyhow::anyhow!("{path:?}: non-utf8 tensor name"))?;
+        let mut hdr = [0u8; 2];
+        f.read_exact(&mut hdr)?;
+        let dtype = Dtype::from_tag(hdr[0])?;
+        let ndim = hdr[1] as usize;
+        let mut shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            shape.push(read_u32(&mut f)? as usize);
+        }
+        let nbytes = read_u64(&mut f)? as usize;
+        let expected = shape.iter().product::<usize>() * dtype.size();
+        anyhow::ensure!(
+            nbytes == expected,
+            "{path:?}: tensor {name}: {nbytes} bytes != shape {shape:?} * {}",
+            dtype.size()
+        );
+        let mut data = vec![0u8; nbytes];
+        f.read_exact(&mut data)?;
+        out.push(HostTensor { name, dtype, shape, data });
+    }
+    Ok(out)
+}
+
+/// Upload tensors as device-resident buffers, in order.
+///
+/// NOTE: we deliberately use the *typed* `buffer_from_host_buffer::<T>` —
+/// the crate's `buffer_from_host_raw_bytes` passes `ElementType as i32`
+/// where the C API expects `PrimitiveType` numbering (off by one: F32 → 10
+/// = F16), silently creating half-sized f16 buffers. The typed path goes
+/// through `T::TY.primitive_type()` and is correct.
+pub fn upload(
+    client: &xla::PjRtClient,
+    tensors: &[HostTensor],
+) -> anyhow::Result<Vec<xla::PjRtBuffer>> {
+    tensors
+        .iter()
+        .map(|t| {
+            let res = match t.dtype {
+                Dtype::F32 => {
+                    let v: Vec<f32> = t
+                        .data
+                        .chunks_exact(4)
+                        .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+                        .collect();
+                    client.buffer_from_host_buffer::<f32>(&v, &t.shape, None)
+                }
+                Dtype::I8 => {
+                    let v: Vec<i8> = t.data.iter().map(|&b| b as i8).collect();
+                    client.buffer_from_host_buffer::<i8>(&v, &t.shape, None)
+                }
+                Dtype::I32 => {
+                    let v: Vec<i32> = t
+                        .data
+                        .chunks_exact(4)
+                        .map(|b| i32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+                        .collect();
+                    client.buffer_from_host_buffer::<i32>(&v, &t.shape, None)
+                }
+            };
+            res.map_err(|e| anyhow::anyhow!("uploading {}: {e:?}", t.name))
+        })
+        .collect()
+}
+
+fn read_u16<R: Read>(r: &mut R) -> anyhow::Result<u16> {
+    let mut b = [0u8; 2];
+    r.read_exact(&mut b)?;
+    Ok(u16::from_le_bytes(b))
+}
+
+fn read_u32<R: Read>(r: &mut R) -> anyhow::Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64<R: Read>(r: &mut R) -> anyhow::Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn write_mini_sewb(path: &Path) {
+        let mut f = std::fs::File::create(path).unwrap();
+        f.write_all(b"SEWB").unwrap();
+        f.write_all(&1u32.to_le_bytes()).unwrap(); // version
+        f.write_all(&2u32.to_le_bytes()).unwrap(); // 2 tensors
+        // tensor 1: "a" f32 [2,2]
+        f.write_all(&1u16.to_le_bytes()).unwrap();
+        f.write_all(b"a").unwrap();
+        f.write_all(&[0u8, 2u8]).unwrap();
+        f.write_all(&2u32.to_le_bytes()).unwrap();
+        f.write_all(&2u32.to_le_bytes()).unwrap();
+        f.write_all(&16u64.to_le_bytes()).unwrap();
+        for v in [1.0f32, 2.0, 3.0, 4.0] {
+            f.write_all(&v.to_le_bytes()).unwrap();
+        }
+        // tensor 2: "b" i8 [3]
+        f.write_all(&1u16.to_le_bytes()).unwrap();
+        f.write_all(b"b").unwrap();
+        f.write_all(&[1u8, 1u8]).unwrap();
+        f.write_all(&3u32.to_le_bytes()).unwrap();
+        f.write_all(&3u64.to_le_bytes()).unwrap();
+        f.write_all(&[5u8, 250, 7]).unwrap();
+    }
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("specedge_sewb_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("w.bin");
+        write_mini_sewb(&p);
+        let ts = read_sewb(&p).unwrap();
+        assert_eq!(ts.len(), 2);
+        assert_eq!(ts[0].name, "a");
+        assert_eq!(ts[0].shape, vec![2, 2]);
+        assert_eq!(ts[0].as_f32().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(ts[1].dtype, Dtype::I8);
+        assert_eq!(ts[1].data, vec![5, 250, 7]);
+        assert!(ts[1].as_f32().is_err());
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let dir = std::env::temp_dir().join("specedge_sewb_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad.bin");
+        std::fs::write(&p, b"NOPE\x01\x00\x00\x00\x00\x00\x00\x00").unwrap();
+        assert!(read_sewb(&p).is_err());
+    }
+}

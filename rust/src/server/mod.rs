@@ -1,0 +1,214 @@
+//! TCP line-JSON serving front-end.
+//!
+//! Protocol: one JSON object per line.
+//!
+//! ```text
+//! → {"prompt": "tr: cela vodu", "task": "translate", "max_new": 64}
+//! ← {"ok": true, "completion": "...", "tokens": 12, "sim_ms": 31.2,
+//!    "real_ms": 8.4, "alpha": 0.83, "speculative": true, "gamma": 5}
+//! ```
+//!
+//! `{"cmd": "metrics"}` returns a metrics snapshot; `{"cmd": "shutdown"}`
+//! stops the listener (used by tests and the E2E example).
+
+use crate::coordinator::Coordinator;
+use crate::tokenizer::{Tokenizer, SEP_ID};
+use crate::util::json::Json;
+use crate::workload::Request;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Running server handle.
+pub struct Server {
+    pub port: u16,
+    stop: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind and serve on a background thread. Port 0 picks a free port.
+    pub fn start(
+        coordinator: Arc<Coordinator>,
+        tokenizer: Tokenizer,
+        port: u16,
+    ) -> anyhow::Result<Server> {
+        let listener = TcpListener::bind(("127.0.0.1", port))?;
+        let port = listener.local_addr()?.port();
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let start_wall = std::time::Instant::now();
+        let next_id = Arc::new(AtomicU64::new(1));
+        let handle = std::thread::Builder::new()
+            .name("specedge-server".into())
+            .spawn(move || {
+                let mut conns: Vec<std::thread::JoinHandle<()>> = Vec::new();
+                while !stop2.load(Ordering::SeqCst) {
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            let c = Arc::clone(&coordinator);
+                            let t = tokenizer.clone();
+                            let s = Arc::clone(&stop2);
+                            let ids = Arc::clone(&next_id);
+                            conns.push(std::thread::spawn(move || {
+                                let _ = handle_conn(stream, c, t, s, ids, start_wall);
+                            }));
+                        }
+                        Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(std::time::Duration::from_millis(5));
+                        }
+                        Err(_) => break,
+                    }
+                }
+                for c in conns {
+                    let _ = c.join();
+                }
+            })?;
+        Ok(Server { port, stop, handle: Some(handle) })
+    }
+
+    pub fn stop(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn handle_conn(
+    stream: TcpStream,
+    coordinator: Arc<Coordinator>,
+    tokenizer: Tokenizer,
+    stop: Arc<AtomicBool>,
+    next_id: Arc<AtomicU64>,
+    start_wall: std::time::Instant,
+) -> anyhow::Result<()> {
+    stream.set_nodelay(true).ok();
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut stream = stream;
+    let mut line = String::new();
+    loop {
+        line.clear();
+        if reader.read_line(&mut line)? == 0 {
+            return Ok(()); // client closed
+        }
+        let trimmed = line.trim();
+        if trimmed.is_empty() {
+            continue;
+        }
+        let reply = match Json::parse(trimmed) {
+            Err(e) => err_json(&format!("bad json: {e}")),
+            Ok(req) => {
+                if let Some(cmd) = req.get("cmd").and_then(Json::as_str) {
+                    match cmd {
+                        "metrics" => {
+                            let r = coordinator.metrics.snapshot();
+                            let mut j = Json::obj();
+                            j.set("ok", true.into())
+                                .set("requests", (r.requests as usize).into())
+                                .set("rejected", (r.rejected as usize).into())
+                                .set("tokens", (r.tokens_out as usize).into())
+                                .set("mean_alpha", r.mean_alpha.into())
+                                .set("sim_p50_ms", (r.sim_latency.median * 1e3).into())
+                                .set("sim_p90_ms", (r.sim_latency.p90 * 1e3).into())
+                                .set("wall_s", start_wall.elapsed().as_secs_f64().into());
+                            j
+                        }
+                        "shutdown" => {
+                            stop.store(true, Ordering::SeqCst);
+                            let mut j = Json::obj();
+                            j.set("ok", true.into());
+                            writeln!(stream, "{j}")?;
+                            return Ok(());
+                        }
+                        other => err_json(&format!("unknown cmd {other:?}")),
+                    }
+                } else {
+                    handle_generate(&req, &coordinator, &tokenizer, &next_id)
+                }
+            }
+        };
+        writeln!(stream, "{reply}")?;
+    }
+}
+
+fn handle_generate(
+    req: &Json,
+    coordinator: &Coordinator,
+    tokenizer: &Tokenizer,
+    next_id: &AtomicU64,
+) -> Json {
+    let prompt_text = match req.get("prompt").and_then(Json::as_str) {
+        Some(p) => p,
+        None => return err_json("missing `prompt`"),
+    };
+    let task = req
+        .get("task")
+        .and_then(Json::as_str)
+        .unwrap_or("unknown")
+        .to_string();
+    let mut prompt = match tokenizer.encode(prompt_text, true) {
+        Ok(p) => p,
+        Err(e) => return err_json(&format!("{e}")),
+    };
+    prompt.push(SEP_ID);
+    let request = Request {
+        id: next_id.fetch_add(1, Ordering::Relaxed),
+        task,
+        prompt,
+        truth: String::new(),
+        arrival_s: 0.0,
+    };
+    match coordinator.submit_blocking(request) {
+        Err(e) => err_json(&format!("{e}")),
+        Ok(r) => {
+            let mut j = Json::obj();
+            j.set("ok", true.into())
+                .set("completion", Json::Str(r.completion))
+                .set("tokens", r.tokens.len().into())
+                .set("sim_ms", (r.sim_s * 1e3).into())
+                .set("real_ms", (r.real_s * 1e3).into())
+                .set("queue_ms", (r.queue_s * 1e3).into())
+                .set("alpha", r.alpha.into())
+                .set("speculative", r.speculative.into())
+                .set("gamma", r.gamma.into());
+            j
+        }
+    }
+}
+
+fn err_json(msg: &str) -> Json {
+    let mut j = Json::obj();
+    j.set("ok", false.into()).set("error", Json::Str(msg.to_string()));
+    j
+}
+
+/// Minimal blocking client for tests, examples and the load generator.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    stream: TcpStream,
+}
+
+impl Client {
+    pub fn connect(port: u16) -> anyhow::Result<Client> {
+        let stream = TcpStream::connect(("127.0.0.1", port))?;
+        stream.set_nodelay(true).ok();
+        Ok(Client { reader: BufReader::new(stream.try_clone()?), stream })
+    }
+
+    pub fn call(&mut self, req: &Json) -> anyhow::Result<Json> {
+        writeln!(self.stream, "{req}")?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        Json::parse(line.trim()).map_err(|e| anyhow::anyhow!("bad reply: {e}"))
+    }
+
+    pub fn generate(&mut self, prompt: &str, task: &str) -> anyhow::Result<Json> {
+        let mut j = Json::obj();
+        j.set("prompt", Json::Str(prompt.into()))
+            .set("task", Json::Str(task.into()));
+        self.call(&j)
+    }
+}

@@ -1,0 +1,14 @@
+//! Speculative sampling (paper §II-B, Leviathan et al. [3]).
+//!
+//! * [`sampling`] — token-level accept rules: greedy (the paper's setting)
+//!   and the stochastic min(1, p_t/p_d) rule as an extension.
+//! * [`decoder`] — the decode loops: autoregressive baseline, **modular**
+//!   speculation (separate drafter/target executables, control flow in
+//!   Rust — paper Fig. 4) and **monolithic** speculation (one fused
+//!   spec-step HLO per γ — paper Fig. 3).
+
+pub mod decoder;
+pub mod sampling;
+
+pub use decoder::{DecodeOutcome, Decoder, DecoderSetup};
+pub use sampling::{greedy_accept_len, stochastic_accept, AcceptRule};

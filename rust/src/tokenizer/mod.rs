@@ -1,0 +1,125 @@
+//! Char-level tokenizer, rebuilt from the manifest's tokenizer spec so the
+//! Rust request path and the Python build path agree token-for-token (the
+//! Python side is `python/compile/tokenizer.py`).
+
+use crate::util::json::Json;
+use std::collections::HashMap;
+
+pub const PAD_ID: u32 = 0;
+pub const BOS_ID: u32 = 1;
+pub const EOS_ID: u32 = 2;
+pub const SEP_ID: u32 = 3;
+
+#[derive(Debug, Clone)]
+pub struct Tokenizer {
+    chars: Vec<char>,
+    char_to_id: HashMap<char, u32>,
+    pub vocab_size: usize,
+    n_specials: usize,
+}
+
+impl Tokenizer {
+    /// Build from the manifest's `tokenizer` object.
+    pub fn from_manifest(spec: &Json) -> anyhow::Result<Tokenizer> {
+        let chars: Vec<char> = spec.req_str("chars")?.chars().collect();
+        let vocab_size = spec.req_usize("vocab_size")?;
+        let n_specials = spec.req_arr("specials")?.len();
+        anyhow::ensure!(
+            n_specials + chars.len() == vocab_size,
+            "tokenizer spec inconsistent: {} specials + {} chars != {}",
+            n_specials, chars.len(), vocab_size
+        );
+        let char_to_id = chars
+            .iter()
+            .enumerate()
+            .map(|(i, &c)| (c, (i + n_specials) as u32))
+            .collect();
+        Ok(Tokenizer { chars, char_to_id, vocab_size, n_specials })
+    }
+
+    /// The default spec (mirrors tokenizer.py); used by unit tests and
+    /// tools that run without a manifest.
+    pub fn builtin() -> Tokenizer {
+        let spec = Json::parse(
+            r#"{"specials":["<pad>","<bos>","<eos>","="],
+                "chars":" abcdefghijklmnopqrstuvwxyz.,?!-0123456789:'",
+                "vocab_size":48}"#,
+        )
+        .unwrap();
+        Tokenizer::from_manifest(&spec).unwrap()
+    }
+
+    pub fn encode(&self, text: &str, bos: bool) -> anyhow::Result<Vec<u32>> {
+        let mut ids = Vec::with_capacity(text.len() + 1);
+        if bos {
+            ids.push(BOS_ID);
+        }
+        for ch in text.chars() {
+            match self.char_to_id.get(&ch) {
+                Some(&id) => ids.push(id),
+                None => anyhow::bail!("character {ch:?} not in vocabulary"),
+            }
+        }
+        Ok(ids)
+    }
+
+    /// Decode ids, skipping BOS/PAD, stopping at EOS, rendering SEP as '='.
+    pub fn decode(&self, ids: &[u32]) -> String {
+        let mut out = String::new();
+        for &id in ids {
+            match id {
+                BOS_ID | PAD_ID => continue,
+                EOS_ID => break,
+                SEP_ID => out.push('='),
+                id => {
+                    let idx = id as usize - self.n_specials;
+                    if let Some(&c) = self.chars.get(idx) {
+                        out.push(c);
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let t = Tokenizer::builtin();
+        let s = "tr: hello world 123?!";
+        let ids = t.encode(s, true).unwrap();
+        assert_eq!(ids[0], BOS_ID);
+        assert_eq!(t.decode(&ids), s);
+    }
+
+    #[test]
+    fn matches_python_ids() {
+        // "a" must be id 5 (4 specials + space=4, a=5) — pinned so both
+        // sides stay in sync.
+        let t = Tokenizer::builtin();
+        assert_eq!(t.encode(" a", false).unwrap(), vec![4, 5]);
+        assert_eq!(t.vocab_size, 48);
+    }
+
+    #[test]
+    fn eos_stops_decode() {
+        let t = Tokenizer::builtin();
+        assert_eq!(t.decode(&[5, EOS_ID, 6]), "a");
+    }
+
+    #[test]
+    fn unknown_char_errors() {
+        let t = Tokenizer::builtin();
+        assert!(t.encode("ABC", false).is_err());
+    }
+
+    #[test]
+    fn sep_renders_as_equals() {
+        let t = Tokenizer::builtin();
+        assert_eq!(t.decode(&[5, SEP_ID, 6]), "a=b");
+    }
+}

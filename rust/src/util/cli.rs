@@ -1,0 +1,189 @@
+//! Tiny declarative CLI parser (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional arguments.
+//! Each binary declares its options up-front so `--help` is generated.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub takes_value: bool,
+    pub default: Option<&'static str>,
+}
+
+/// Parsed command line.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub values: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+#[derive(Debug, Default)]
+pub struct Cli {
+    pub program: &'static str,
+    pub about: &'static str,
+    pub opts: Vec<OptSpec>,
+}
+
+impl Cli {
+    pub fn new(program: &'static str, about: &'static str) -> Cli {
+        Cli { program, about, opts: Vec::new() }
+    }
+
+    pub fn opt(mut self, name: &'static str, help: &'static str,
+               default: Option<&'static str>) -> Cli {
+        self.opts.push(OptSpec { name, help, takes_value: true, default });
+        self
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Cli {
+        self.opts.push(OptSpec { name, help, takes_value: false, default: None });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nOptions:\n", self.program, self.about);
+        for o in &self.opts {
+            let arg = if o.takes_value {
+                format!("--{} <value>", o.name)
+            } else {
+                format!("--{}", o.name)
+            };
+            let def = o
+                .default
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_default();
+            s.push_str(&format!("  {arg:<28} {}{}\n", o.help, def));
+        }
+        s
+    }
+
+    /// Parse an argv slice (excluding the program name).
+    pub fn parse(&self, argv: &[String]) -> anyhow::Result<Args> {
+        let mut args = Args::default();
+        for o in &self.opts {
+            if let (true, Some(d)) = (o.takes_value, o.default) {
+                args.values.insert(o.name.to_string(), d.to_string());
+            }
+        }
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if a == "--help" || a == "-h" {
+                anyhow::bail!("{}", self.usage());
+            }
+            if let Some(stripped) = a.strip_prefix("--") {
+                let (name, inline) = match stripped.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let spec = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == name)
+                    .ok_or_else(|| anyhow::anyhow!(
+                        "unknown option --{name}\n\n{}", self.usage()))?;
+                if spec.takes_value {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or_else(|| anyhow::anyhow!(
+                                    "option --{name} needs a value"))?
+                        }
+                    };
+                    args.values.insert(name, v);
+                } else {
+                    if inline.is_some() {
+                        anyhow::bail!("flag --{name} does not take a value");
+                    }
+                    args.flags.push(name);
+                }
+            } else {
+                args.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(args)
+    }
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn req(&self, name: &str) -> anyhow::Result<&str> {
+        self.get(name)
+            .ok_or_else(|| anyhow::anyhow!("missing required option --{name}"))
+    }
+
+    pub fn get_usize(&self, name: &str) -> anyhow::Result<Option<usize>> {
+        self.get(name)
+            .map(|v| v.parse().map_err(|_| anyhow::anyhow!("--{name}: not an integer: {v}")))
+            .transpose()
+    }
+
+    pub fn get_f64(&self, name: &str) -> anyhow::Result<Option<f64>> {
+        self.get(name)
+            .map(|v| v.parse().map_err(|_| anyhow::anyhow!("--{name}: not a number: {v}")))
+            .transpose()
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    fn cli() -> Cli {
+        Cli::new("t", "test")
+            .opt("alpha", "acceptance rate", Some("0.9"))
+            .opt("out", "output dir", None)
+            .flag("verbose", "chatty")
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let a = cli().parse(&argv(&["--out", "x"])).unwrap();
+        assert_eq!(a.get("alpha"), Some("0.9"));
+        assert_eq!(a.get("out"), Some("x"));
+        let a = cli().parse(&argv(&["--alpha=0.17"])).unwrap();
+        assert_eq!(a.get_f64("alpha").unwrap(), Some(0.17));
+    }
+
+    #[test]
+    fn flags_and_positional() {
+        let a = cli().parse(&argv(&["serve", "--verbose", "extra"])).unwrap();
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.positional, vec!["serve", "extra"]);
+    }
+
+    #[test]
+    fn unknown_option_fails() {
+        assert!(cli().parse(&argv(&["--nope"])).is_err());
+    }
+
+    #[test]
+    fn missing_value_fails() {
+        assert!(cli().parse(&argv(&["--out"])).is_err());
+    }
+
+    #[test]
+    fn bad_number_fails() {
+        let a = cli().parse(&argv(&["--alpha", "abc"])).unwrap();
+        assert!(a.get_f64("alpha").is_err());
+    }
+}

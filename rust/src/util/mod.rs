@@ -1,0 +1,17 @@
+//! Substrate utilities.
+//!
+//! The offline crate registry only carries the `xla` dependency closure, so
+//! the usual ecosystem crates (serde, clap, rand, criterion, proptest) are
+//! substituted by the small, tested implementations in this module tree —
+//! see DESIGN.md §1.
+
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;
+
+/// Monotonic wall-clock helper: seconds since an arbitrary start.
+pub fn now() -> std::time::Instant {
+    std::time::Instant::now()
+}

@@ -1,0 +1,174 @@
+//! Summary statistics used by the profiler, metrics and bench harness.
+
+/// Online + batch summary of a sample set (latencies, acceptance rates, ...).
+#[derive(Debug, Clone, Default)]
+pub struct Summary {
+    values: Vec<f64>,
+    sorted: bool,
+}
+
+impl Summary {
+    pub fn new() -> Summary {
+        Summary::default()
+    }
+
+    pub fn from_values(values: Vec<f64>) -> Summary {
+        Summary { values, sorted: false }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.values.push(x);
+        self.sorted = false;
+    }
+
+    pub fn len(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.values.is_empty() {
+            return f64::NAN;
+        }
+        self.values.iter().sum::<f64>() / self.values.len() as f64
+    }
+
+    pub fn std(&self) -> f64 {
+        let n = self.values.len();
+        if n < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        (self.values.iter().map(|x| (x - m) * (x - m)).sum::<f64>()
+            / (n as f64 - 1.0))
+            .sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.values.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.values.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    fn ensure_sorted(&mut self) {
+        if !self.sorted {
+            self.values
+                .sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+            self.sorted = true;
+        }
+    }
+
+    /// Linear-interpolated percentile, q in [0, 100].
+    pub fn percentile(&mut self, q: f64) -> f64 {
+        if self.values.is_empty() {
+            return f64::NAN;
+        }
+        self.ensure_sorted();
+        let n = self.values.len();
+        if n == 1 {
+            return self.values[0];
+        }
+        let rank = (q / 100.0) * (n - 1) as f64;
+        let lo = rank.floor() as usize;
+        let hi = rank.ceil() as usize;
+        let frac = rank - lo as f64;
+        self.values[lo] * (1.0 - frac) + self.values[hi] * frac
+    }
+
+    pub fn median(&mut self) -> f64 {
+        self.percentile(50.0)
+    }
+
+    /// Five-number box-plot summary (what the paper's Fig. 5 boxes show).
+    pub fn box_stats(&mut self) -> BoxStats {
+        BoxStats {
+            min: self.percentile(0.0),
+            q1: self.percentile(25.0),
+            median: self.percentile(50.0),
+            q3: self.percentile(75.0),
+            max: self.percentile(100.0),
+            p90: self.percentile(90.0),
+            mean: self.mean(),
+            n: self.len(),
+        }
+    }
+
+    pub fn values(&self) -> &[f64] {
+        &self.values
+    }
+}
+
+/// Box-plot summary row.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BoxStats {
+    pub min: f64,
+    pub q1: f64,
+    pub median: f64,
+    pub q3: f64,
+    pub max: f64,
+    pub p90: f64,
+    pub mean: f64,
+    pub n: usize,
+}
+
+impl BoxStats {
+    pub fn csv_header() -> &'static str {
+        "min,q1,median,q3,max,p90,mean,n"
+    }
+
+    pub fn to_csv(&self) -> String {
+        format!(
+            "{:.4},{:.4},{:.4},{:.4},{:.4},{:.4},{:.4},{}",
+            self.min, self.q1, self.median, self.q3, self.max, self.p90, self.mean, self.n
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_std() {
+        let s = Summary::from_values(vec![1.0, 2.0, 3.0, 4.0]);
+        assert!((s.mean() - 2.5).abs() < 1e-12);
+        assert!((s.std() - 1.2909944).abs() < 1e-6);
+    }
+
+    #[test]
+    fn percentiles() {
+        let mut s = Summary::from_values((1..=100).map(|x| x as f64).collect());
+        assert!((s.median() - 50.5).abs() < 1e-9);
+        assert!((s.percentile(0.0) - 1.0).abs() < 1e-12);
+        assert!((s.percentile(100.0) - 100.0).abs() < 1e-12);
+        assert!((s.percentile(90.0) - 90.1).abs() < 1e-9);
+    }
+
+    #[test]
+    fn single_value() {
+        let mut s = Summary::from_values(vec![7.0]);
+        assert_eq!(s.median(), 7.0);
+        assert_eq!(s.percentile(99.0), 7.0);
+        assert_eq!(s.std(), 0.0);
+    }
+
+    #[test]
+    fn empty_is_nan() {
+        let mut s = Summary::new();
+        assert!(s.mean().is_nan());
+        assert!(s.median().is_nan());
+    }
+
+    #[test]
+    fn box_stats_ordered() {
+        let mut s = Summary::from_values(vec![5.0, 1.0, 3.0, 2.0, 4.0]);
+        let b = s.box_stats();
+        assert!(b.min <= b.q1 && b.q1 <= b.median && b.median <= b.q3 && b.q3 <= b.max);
+        assert_eq!(b.n, 5);
+    }
+}

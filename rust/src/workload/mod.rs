@@ -1,0 +1,161 @@
+//! Workloads: the fixed Spec-Bench-shaped evaluation set (replayed from the
+//! manifest so Python and Rust agree sample-for-sample) plus open-loop
+//! arrival processes for the serving experiments.
+
+use crate::runtime::manifest::{EvalSample, Manifest};
+use crate::tokenizer::{Tokenizer, SEP_ID};
+use crate::util::rng::Rng;
+
+/// The paper's 13 Spec-Bench task names (ours are synthetic equivalents).
+pub const TRANSLATE_TASK: &str = "translate";
+
+/// One serving request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    pub task: String,
+    /// Prompt token ids (BOS ... SEP).
+    pub prompt: Vec<u32>,
+    /// Ground-truth completion text (accuracy accounting).
+    pub truth: String,
+    /// Arrival offset within the run, seconds (0 for closed-loop).
+    pub arrival_s: f64,
+}
+
+/// Workload built from the manifest's eval samples.
+#[derive(Debug, Clone)]
+pub struct Workload {
+    pub requests: Vec<Request>,
+}
+
+impl Workload {
+    /// All samples of one task (or all tasks if `task` is None), closed-loop.
+    pub fn from_manifest(
+        manifest: &Manifest,
+        tokenizer: &Tokenizer,
+        task: Option<&str>,
+        limit: Option<usize>,
+    ) -> anyhow::Result<Workload> {
+        let mut requests = Vec::new();
+        for (i, s) in manifest.eval_samples.iter().enumerate() {
+            if let Some(t) = task {
+                if s.task != t {
+                    continue;
+                }
+            }
+            requests.push(Request {
+                id: i as u64,
+                task: s.task.clone(),
+                prompt: prompt_ids(tokenizer, s)?,
+                truth: s.completion.clone(),
+                arrival_s: 0.0,
+            });
+            if let Some(l) = limit {
+                if requests.len() >= l {
+                    break;
+                }
+            }
+        }
+        anyhow::ensure!(!requests.is_empty(), "no samples matched task {task:?}");
+        Ok(Workload { requests })
+    }
+
+    /// Stamp Poisson (exponential inter-arrival) times at `rate` req/s —
+    /// the open-loop serving scenario for the E2E example.
+    pub fn with_poisson_arrivals(mut self, rate: f64, seed: u64) -> Workload {
+        let mut rng = Rng::new(seed);
+        let mut t = 0.0;
+        for r in &mut self.requests {
+            t += rng.exp(rate);
+            r.arrival_s = t;
+        }
+        self
+    }
+
+    /// Shuffle request order (keeps arrival stamps sorted if present).
+    pub fn shuffled(mut self, seed: u64) -> Workload {
+        let mut rng = Rng::new(seed);
+        let arrivals: Vec<f64> = self.requests.iter().map(|r| r.arrival_s).collect();
+        rng.shuffle(&mut self.requests);
+        for (r, a) in self.requests.iter_mut().zip(arrivals) {
+            r.arrival_s = a;
+        }
+        self
+    }
+
+    pub fn avg_prompt_len(&self) -> f64 {
+        self.requests.iter().map(|r| r.prompt.len()).sum::<usize>() as f64
+            / self.requests.len().max(1) as f64
+    }
+}
+
+/// Encode "<prompt>" + SEP exactly like `data.Sample.prompt_ids()`.
+pub fn prompt_ids(tokenizer: &Tokenizer, s: &EvalSample) -> anyhow::Result<Vec<u32>> {
+    let mut ids = tokenizer.encode(&s.prompt, true)?;
+    ids.push(SEP_ID);
+    Ok(ids)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+    use std::path::Path;
+
+    fn mini_manifest() -> Manifest {
+        let j = Json::parse(
+            r#"{
+          "tokenizer": {"specials":["<pad>","<bos>","<eos>","="],
+                        "chars":" abcdefghijklmnopqrstuvwxyz.,?!-0123456789:'",
+                        "vocab_size":48},
+          "seq_buckets": [128], "batch_sizes": [1],
+          "models": {}, "variants": {}, "monolithic": [],
+          "eval_samples": [
+            {"task":"translate","prompt":"tr: abc","completion":"hij"},
+            {"task":"copy","prompt":"cp: abc","completion":"abc"},
+            {"task":"translate","prompt":"tr: de","completion":"kl"}
+          ]}"#,
+        )
+        .unwrap();
+        Manifest::from_json(Path::new("/tmp"), &j).unwrap()
+    }
+
+    #[test]
+    fn filters_by_task() {
+        let m = mini_manifest();
+        let t = Tokenizer::builtin();
+        let w = Workload::from_manifest(&m, &t, Some("translate"), None).unwrap();
+        assert_eq!(w.requests.len(), 2);
+        assert!(w.requests.iter().all(|r| r.task == "translate"));
+        let all = Workload::from_manifest(&m, &t, None, None).unwrap();
+        assert_eq!(all.requests.len(), 3);
+    }
+
+    #[test]
+    fn prompt_ends_with_sep() {
+        let m = mini_manifest();
+        let t = Tokenizer::builtin();
+        let w = Workload::from_manifest(&m, &t, None, Some(1)).unwrap();
+        assert_eq!(*w.requests[0].prompt.last().unwrap(), SEP_ID);
+        assert_eq!(w.requests[0].prompt[0], crate::tokenizer::BOS_ID);
+    }
+
+    #[test]
+    fn poisson_arrivals_increase() {
+        let m = mini_manifest();
+        let t = Tokenizer::builtin();
+        let w = Workload::from_manifest(&m, &t, None, None)
+            .unwrap()
+            .with_poisson_arrivals(10.0, 7);
+        let a: Vec<f64> = w.requests.iter().map(|r| r.arrival_s).collect();
+        assert!(a.windows(2).all(|x| x[1] > x[0]));
+        assert!(a[0] > 0.0);
+    }
+
+    #[test]
+    fn unknown_task_errors() {
+        let m = mini_manifest();
+        let t = Tokenizer::builtin();
+        assert!(Workload::from_manifest(&m, &t, Some("nope"), None).is_err());
+    }
+}

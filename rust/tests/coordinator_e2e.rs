@@ -1,0 +1,160 @@
+//! Serving-stack end-to-end tests: coordinator + workers + server over the
+//! real artifacts (skipped when `make artifacts` hasn't run).
+
+use specedge::config::RunConfig;
+use specedge::coordinator::Coordinator;
+use specedge::hetero::Platform;
+use specedge::server::{Client, Server};
+use specedge::tokenizer::Tokenizer;
+use specedge::util::json::Json;
+use specedge::workload::{Request, Workload};
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+fn have_artifacts() -> bool {
+    if Path::new("artifacts/manifest.json").exists() {
+        true
+    } else {
+        eprintln!("SKIP: artifacts missing (run `make artifacts`)");
+        false
+    }
+}
+
+fn cfg() -> RunConfig {
+    let mut c = RunConfig::default();
+    c.artifacts_dir = PathBuf::from("artifacts");
+    c.max_new_tokens = 16;
+    c.gamma = Some(3);
+    c
+}
+
+fn sample_request(id: u64) -> Request {
+    let t = Tokenizer::builtin();
+    let mut prompt = t.encode("tr: nene caka", true).unwrap();
+    prompt.push(specedge::tokenizer::SEP_ID);
+    Request { id, task: "translate".into(), prompt, truth: String::new(), arrival_s: 0.0 }
+}
+
+#[test]
+fn coordinator_serves_requests() {
+    if !have_artifacts() {
+        return;
+    }
+    let coord = Coordinator::start(cfg(), Platform::imx95()).unwrap();
+    let r = coord.submit_blocking(sample_request(1)).unwrap();
+    assert!(!r.tokens.is_empty());
+    assert!(r.speculative);
+    assert!(r.sim_s > 0.0 && r.real_s > 0.0);
+    let report = coord.metrics.snapshot();
+    assert_eq!(report.requests, 1);
+    coord.shutdown();
+}
+
+#[test]
+fn coordinator_concurrent_submissions() {
+    if !have_artifacts() {
+        return;
+    }
+    let coord = Arc::new(Coordinator::start(cfg(), Platform::imx95()).unwrap());
+    let rxs: Vec<_> = (0..4)
+        .map(|i| coord.submit(sample_request(i)).unwrap())
+        .collect();
+    for rx in rxs {
+        let r = rx.recv().unwrap();
+        assert!(!r.completion.is_empty());
+    }
+    assert_eq!(coord.metrics.snapshot().requests, 4);
+    Arc::try_unwrap(coord).ok().unwrap().shutdown();
+}
+
+#[test]
+fn adaptive_policy_learns_from_served_traffic() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut c = cfg();
+    c.gamma = None; // adaptive mode
+    let coord = Coordinator::start(c, Platform::imx95()).unwrap();
+    let before = coord.policy.alpha_estimate("translate");
+    for i in 0..3 {
+        coord.submit_blocking(sample_request(i)).unwrap();
+    }
+    let after = coord.policy.alpha_estimate("translate");
+    assert!((before - 0.90).abs() < 1e-9, "prior should be 0.90");
+    assert_ne!(before, after, "EWMA must move after observations");
+    coord.shutdown();
+}
+
+#[test]
+fn baseline_batching_path() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut c = cfg();
+    c.speculative = false;
+    c.max_batch = 4;
+    let coord = Arc::new(Coordinator::start(c, Platform::imx95()).unwrap());
+    let rxs: Vec<_> = (0..4)
+        .map(|i| coord.submit(sample_request(i)).unwrap())
+        .collect();
+    let outs: Vec<_> = rxs.into_iter().map(|rx| rx.recv().unwrap()).collect();
+    // All four requests served, none speculative, identical prompts ⇒
+    // identical completions.
+    assert!(outs.iter().all(|o| !o.speculative));
+    assert!(outs.windows(2).all(|w| w[0].completion == w[1].completion));
+    Arc::try_unwrap(coord).ok().unwrap().shutdown();
+}
+
+#[test]
+fn server_roundtrip_and_metrics() {
+    if !have_artifacts() {
+        return;
+    }
+    let coord = Arc::new(Coordinator::start(cfg(), Platform::imx95()).unwrap());
+    let server = Server::start(Arc::clone(&coord), Tokenizer::builtin(), 0).unwrap();
+    let port = server.port;
+
+    let mut client = Client::connect(port).unwrap();
+    let reply = client.generate("tr: nene caka", "translate").unwrap();
+    assert_eq!(reply.get("ok"), Some(&Json::Bool(true)), "{reply}");
+    assert!(reply.get("completion").and_then(Json::as_str).is_some());
+    assert!(reply.req_f64("sim_ms").unwrap() > 0.0);
+
+    let mut m = Json::obj();
+    m.set("cmd", "metrics".into());
+    let metrics = client.call(&m).unwrap();
+    assert_eq!(metrics.get("requests").and_then(Json::as_usize), Some(1));
+
+    // Bad request surfaces an error, not a hang.
+    let mut bad = Json::obj();
+    bad.set("task", "x".into());
+    let err = client.call(&bad).unwrap();
+    assert_eq!(err.get("ok"), Some(&Json::Bool(false)));
+
+    let mut sd = Json::obj();
+    sd.set("cmd", "shutdown".into());
+    let _ = client.call(&sd);
+    server.stop();
+    Arc::try_unwrap(coord).ok().unwrap().shutdown();
+}
+
+#[test]
+fn workload_replay_through_coordinator() {
+    if !have_artifacts() {
+        return;
+    }
+    let coord = Coordinator::start(cfg(), Platform::imx95()).unwrap();
+    let engine_manifest =
+        specedge::runtime::Manifest::load(Path::new("artifacts")).unwrap();
+    let tok = Tokenizer::from_manifest(&engine_manifest.tokenizer_spec).unwrap();
+    let wl = Workload::from_manifest(&engine_manifest, &tok, Some("translate"), Some(3))
+        .unwrap();
+    for req in wl.requests {
+        let r = coord.submit_blocking(req).unwrap();
+        assert!(!r.completion.is_empty());
+    }
+    let report = coord.metrics.snapshot();
+    assert_eq!(report.requests, 3);
+    assert!(report.mean_alpha.is_finite());
+    coord.shutdown();
+}

@@ -1,0 +1,330 @@
+//! Property-based tests (hand-rolled driver — proptest is unavailable
+//! offline). Each property runs over a few hundred seeded random cases;
+//! failures print the offending seed for reproduction.
+
+use specedge::costmodel;
+use specedge::coordinator::queue::{QueueItem, RequestQueue};
+use specedge::hetero::{LatencyModel, Mapping, Platform, PuAssignment};
+use specedge::models::{ModelSpec, Scheme};
+use specedge::spec::sampling::{greedy_accept_len, stochastic_accept};
+use specedge::tokenizer::Tokenizer;
+use specedge::util::json::Json;
+use specedge::util::rng::Rng;
+use specedge::util::stats::Summary;
+use specedge::workload::Request;
+
+/// Tiny property-test driver: `cases` seeded runs of `f(rng, case_index)`.
+fn forall(name: &str, cases: u64, mut f: impl FnMut(&mut Rng, u64)) {
+    for i in 0..cases {
+        let seed = 0x9E37 ^ (i * 0x100001b3);
+        let mut rng = Rng::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            f(&mut rng, i)
+        }));
+        if let Err(e) = result {
+            eprintln!("property {name} failed at case {i} (seed {seed:#x})");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+fn rand_spec(rng: &mut Rng) -> ModelSpec {
+    ModelSpec {
+        name: if rng.f64() < 0.5 { "target" } else { "drafter" }.into(),
+        n_layers: rng.range(1, 8) as usize,
+        d_model: 32 * rng.range(1, 8) as usize,
+        n_heads: 4,
+        ffn_dim: 32 * rng.range(1, 12) as usize,
+        vocab: 48,
+        param_count: 100_000,
+    }
+}
+
+// ---------- cost model properties -------------------------------------
+
+#[test]
+fn prop_speedup_positive_and_bounded() {
+    forall("speedup bounds", 500, |rng, _| {
+        let alpha = rng.f64();
+        let c = rng.f64() * 3.0;
+        let gamma = rng.range(0, 8) as usize;
+        let s = costmodel::speedup(alpha, gamma, c);
+        assert!(s.is_finite() && s > 0.0, "S={s} a={alpha} g={gamma} c={c}");
+        // Hard upper bound: S <= (γ+1)/(γc+1) (the α→1 limit).
+        let ub = (gamma as f64 + 1.0) / (gamma as f64 * c + 1.0) + 1e-9;
+        assert!(gamma == 0 || s <= ub, "S={s} > ub={ub}");
+    });
+}
+
+#[test]
+fn prop_no_speedup_when_c_geq_alpha() {
+    // Paper §II-B: c < α is necessary for any speedup.
+    forall("c >= alpha => S <= 1", 500, |rng, _| {
+        let alpha = rng.f64() * 0.99;
+        let c = alpha + rng.f64() * 2.0; // c >= alpha
+        for gamma in 1..=8 {
+            let s = costmodel::speedup(alpha, gamma, c);
+            assert!(s <= 1.0 + 1e-9, "S={s} a={alpha} c={c} g={gamma}");
+        }
+    });
+}
+
+#[test]
+fn prop_optimal_gamma_is_argmax() {
+    forall("optimal gamma argmax", 300, |rng, _| {
+        let alpha = rng.f64();
+        let c = rng.f64() * 1.5;
+        let best = costmodel::optimal_gamma(alpha, c);
+        for g in 0..=costmodel::GAMMA_MAX {
+            assert!(
+                costmodel::speedup(alpha, g, c) <= best.speedup + 1e-12,
+                "gamma {g} beats reported optimum"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_expected_tokens_monotone_in_alpha() {
+    forall("E[tokens] monotone", 200, |rng, _| {
+        let gamma = rng.range(1, 8) as usize;
+        let a1 = rng.f64() * 0.9;
+        let a2 = a1 + rng.f64() * (1.0 - a1);
+        assert!(
+            costmodel::expected_tokens_per_round(a2, gamma) + 1e-12
+                >= costmodel::expected_tokens_per_round(a1, gamma)
+        );
+    });
+}
+
+// ---------- latency model properties -----------------------------------
+
+#[test]
+fn prop_latency_positive_monotone_seq() {
+    let lat = LatencyModel::new(Platform::imx95());
+    forall("latency monotone in seq", 200, |rng, _| {
+        let spec = rand_spec(rng);
+        let pu = if rng.f64() < 0.5 {
+            PuAssignment::Gpu
+        } else {
+            PuAssignment::Cpu { cores: rng.range(1, 6) as usize }
+        };
+        let scheme = if rng.f64() < 0.5 { Scheme::Fp } else { Scheme::W8a8 };
+        let mut prev = 0.0;
+        for s in [8, 16, 32, 64, 128] {
+            let t = lat.forward_latency(&spec, scheme, pu, s);
+            assert!(t > 0.0 && t.is_finite());
+            assert!(t >= prev, "latency decreased with seq_len");
+            prev = t;
+        }
+    });
+}
+
+#[test]
+fn prop_cost_coefficient_scale_invariant() {
+    // c must not depend on absolute CPU peak (ratio property) for
+    // homogeneous mappings of the same scheme.
+    forall("c scale invariance", 100, |rng, _| {
+        let mut p1 = Platform::imx95();
+        let scale = 0.5 + rng.f64() * 4.0;
+        p1.cpu.dispatch_overhead_s = 0.0; // overhead is not scale-free
+        let mut p2 = p1.clone();
+        p2.cpu.peak_gflops_per_core *= scale;
+        let l1 = LatencyModel::new(p1);
+        let l2 = LatencyModel::new(p2);
+        let d = ModelSpec {
+            name: "drafter".into(), n_layers: 2, d_model: 96, n_heads: 4,
+            ffn_dim: 256, vocab: 48, param_count: 0,
+        };
+        let t = ModelSpec {
+            name: "target".into(), n_layers: 4, d_model: 128, n_heads: 4,
+            ffn_dim: 352, vocab: 48, param_count: 0,
+        };
+        let cores = rng.range(1, 6) as usize;
+        let m = Mapping::homogeneous(cores);
+        let c1 = l1.cost_coefficient((&d, Scheme::Fp), (&t, Scheme::Fp), m, 63);
+        let c2 = l2.cost_coefficient((&d, Scheme::Fp), (&t, Scheme::Fp), m, 63);
+        assert!((c1 - c2).abs() < 1e-9, "{c1} vs {c2}");
+    });
+}
+
+// ---------- sampling properties -----------------------------------------
+
+#[test]
+fn prop_greedy_accept_len_is_longest_prefix() {
+    forall("greedy prefix", 300, |rng, _| {
+        let n = rng.range(0, 8) as usize;
+        let drafted: Vec<u32> = (0..n).map(|_| rng.below(4) as u32).collect();
+        let target: Vec<u32> = (0..n + 1).map(|_| rng.below(4) as u32).collect();
+        let k = greedy_accept_len(&drafted, &target);
+        assert!(k <= n);
+        for i in 0..k {
+            assert_eq!(drafted[i], target[i]);
+        }
+        if k < n {
+            assert_ne!(drafted[k], target[k]);
+        }
+    });
+}
+
+#[test]
+fn prop_stochastic_accept_count_in_range() {
+    forall("stochastic range", 200, |rng, _| {
+        let gamma = rng.range(1, 6) as usize;
+        let vocab = 8;
+        let mut mk_dist = |rng: &mut Rng| {
+            let mut v: Vec<f32> = (0..vocab).map(|_| rng.f64() as f32 + 0.01).collect();
+            let z: f32 = v.iter().sum();
+            v.iter_mut().for_each(|x| *x /= z);
+            v
+        };
+        let drafted: Vec<u32> = (0..gamma).map(|_| rng.below(vocab) as u32).collect();
+        let dp: Vec<Vec<f32>> = (0..gamma).map(|_| mk_dist(rng)).collect();
+        let tp: Vec<Vec<f32>> = (0..=gamma).map(|_| mk_dist(rng)).collect();
+        let out = stochastic_accept(&drafted, &dp, &tp, rng);
+        assert!(out.n_accepted <= gamma);
+        assert!((out.correction as usize) < vocab);
+    });
+}
+
+// ---------- substrate properties ----------------------------------------
+
+#[test]
+fn prop_json_roundtrip_random_values() {
+    fn rand_json(rng: &mut Rng, depth: usize) -> Json {
+        match if depth > 2 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.f64() < 0.5),
+            2 => Json::Num((rng.f64() * 2e6).round() / 1e3),
+            3 => {
+                let n = rng.below(8);
+                let s: String = (0..n)
+                    .map(|_| (b'a' + rng.below(26) as u8) as char)
+                    .collect();
+                Json::Str(format!("{s}\"\\\n✓"))
+            }
+            4 => Json::Arr((0..rng.below(5)).map(|_| rand_json(rng, depth + 1)).collect()),
+            _ => {
+                let mut o = Json::obj();
+                for i in 0..rng.below(5) {
+                    o.set(&format!("k{i}"), rand_json(rng, depth + 1));
+                }
+                o
+            }
+        }
+    }
+    forall("json roundtrip", 300, |rng, _| {
+        let j = rand_json(rng, 0);
+        let parsed = Json::parse(&j.to_string()).expect("parse own output");
+        assert_eq!(parsed, j);
+        let pretty = Json::parse(&j.to_string_pretty()).expect("parse pretty");
+        assert_eq!(pretty, j);
+    });
+}
+
+#[test]
+fn prop_tokenizer_roundtrip_random_text() {
+    let t = Tokenizer::builtin();
+    let alphabet: Vec<char> =
+        " abcdefghijklmnopqrstuvwxyz.,?!-0123456789:'".chars().collect();
+    forall("tokenizer roundtrip", 300, |rng, _| {
+        let n = rng.below(120);
+        let text: String = (0..n).map(|_| *rng.choose(&alphabet)).collect();
+        let ids = t.encode(&text, true).unwrap();
+        assert_eq!(t.decode(&ids), text);
+        assert!(ids.iter().all(|&i| (i as usize) < t.vocab_size));
+    });
+}
+
+#[test]
+fn prop_summary_percentiles_ordered() {
+    forall("percentiles ordered", 200, |rng, _| {
+        let n = 1 + rng.below(200);
+        let mut s = Summary::new();
+        for _ in 0..n {
+            s.push(rng.f64() * 100.0 - 50.0);
+        }
+        let b = s.box_stats();
+        assert!(b.min <= b.q1 && b.q1 <= b.median && b.median <= b.q3 && b.q3 <= b.max);
+        assert!(b.min <= b.mean && b.mean <= b.max);
+    });
+}
+
+#[test]
+fn prop_queue_never_exceeds_capacity() {
+    forall("queue capacity", 100, |rng, _| {
+        let cap = 1 + rng.below(16);
+        let q = RequestQueue::new(cap);
+        let mut pushed = 0usize;
+        for i in 0..40 {
+            let (tx, _rx) = std::sync::mpsc::channel();
+            let item = QueueItem {
+                request: Request {
+                    id: i,
+                    task: "t".into(),
+                    prompt: vec![1],
+                    truth: String::new(),
+                    arrival_s: 0.0,
+                },
+                enqueued: std::time::Instant::now(),
+                respond: tx,
+            };
+            if q.push(item).is_ok() {
+                pushed += 1;
+            }
+            assert!(q.len() <= cap);
+            if rng.f64() < 0.3 && !q.is_empty() {
+                q.pop();
+                pushed -= 1;
+            }
+            assert_eq!(q.len(), pushed);
+        }
+    });
+}
+
+#[test]
+fn prop_rng_shuffle_uniform_enough() {
+    // First element of a 5-shuffle should be ~uniform over the 5 values.
+    let mut counts = [0usize; 5];
+    let mut rng = Rng::new(42);
+    let n = 20_000;
+    for _ in 0..n {
+        let mut v = [0usize, 1, 2, 3, 4];
+        rng.shuffle(&mut v);
+        counts[v[0]] += 1;
+    }
+    for &c in &counts {
+        let frac = c as f64 / n as f64;
+        assert!((frac - 0.2).abs() < 0.02, "{counts:?}");
+    }
+}
+
+#[test]
+fn prop_dse_best_is_feasible_and_optimal() {
+    let lat = LatencyModel::new(Platform::imx95());
+    forall("dse best optimal", 100, |rng, _| {
+        let pair = specedge::dse::PairConfig {
+            target: ModelSpec {
+                name: "target".into(), n_layers: 4, d_model: 128, n_heads: 4,
+                ffn_dim: 352, vocab: 48, param_count: 816_256,
+            },
+            target_scheme: Scheme::W8a8,
+            drafter: ModelSpec {
+                name: "drafter".into(), n_layers: 2, d_model: 96, n_heads: 4,
+                ffn_dim: 256, vocab: 48, param_count: 230_880,
+            },
+            drafter_scheme: Scheme::Fp,
+        };
+        let alpha = rng.f64();
+        let seq = 8 + rng.below(120);
+        let variant = 1 + rng.below(6);
+        let d = specedge::dse::explore_variant(&lat, &pair, variant, alpha, seq);
+        assert!(d.best.infeasible.is_none());
+        assert!(d.best.speedup >= 1.0 - 1e-12);
+        for c in &d.all {
+            if c.infeasible.is_none() {
+                assert!(c.speedup <= d.best.speedup + 1e-12);
+            }
+        }
+    });
+}
