@@ -11,8 +11,12 @@
 //!                         (the paper's deployed configuration)
 //!
 //! ```bash
-//! cargo run --release --example serve_translate -- [n_requests] [rate_hz]
+//! cargo run --release --example serve_translate -- [n_requests] [rate_hz] [max_inflight]
 //! ```
+//!
+//! Each worker interleaves up to `max_inflight` (default 4) sessions
+//! round-by-round; the first request of each configuration is issued with
+//! `"stream": true` to demonstrate the incremental token frames.
 
 use specedge::config::RunConfig;
 use specedge::coordinator::Coordinator;
@@ -40,6 +44,7 @@ fn main() -> anyhow::Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let n_requests: usize = args.first().and_then(|a| a.parse().ok()).unwrap_or(12);
     let rate: f64 = args.get(1).and_then(|a| a.parse().ok()).unwrap_or(2.0);
+    let max_inflight: usize = args.get(2).and_then(|a| a.parse().ok()).unwrap_or(4);
 
     let manifest = Manifest::load(Path::new("artifacts"))?;
     let tokenizer = Tokenizer::from_manifest(&manifest.tokenizer_spec)?;
@@ -47,25 +52,26 @@ fn main() -> anyhow::Result<()> {
                                            Some(n_requests))?
         .with_poisson_arrivals(rate, 42);
     println!(
-        "workload: {} translate requests, Poisson {rate}/s, avg prompt {:.1} tokens",
+        "workload: {} translate requests, Poisson {rate}/s, avg prompt {:.1} tokens, \
+         {max_inflight} sessions in flight per worker",
         workload.requests.len(),
         workload.avg_prompt_len()
     );
 
     let configs: Vec<(&'static str, RunConfig)> = vec![
         ("baseline", {
-            let mut c = base_cfg();
+            let mut c = base_cfg(max_inflight);
             c.speculative = false;
             c
         }),
         ("spec-homo", {
-            let mut c = base_cfg();
+            let mut c = base_cfg(max_inflight);
             c.heterogeneous = false;
             c.gamma = Some(1); // homo mapping: cost model says γ small
             c
         }),
         ("spec-hetero", {
-            let mut c = base_cfg();
+            let mut c = base_cfg(max_inflight);
             c.gamma = Some(5); // the paper's deployed config
             c
         }),
@@ -108,13 +114,14 @@ fn main() -> anyhow::Result<()> {
     Ok(())
 }
 
-fn base_cfg() -> RunConfig {
+fn base_cfg(max_inflight: usize) -> RunConfig {
     let mut c = RunConfig::default();
     c.artifacts_dir = PathBuf::from("artifacts");
     c.design_variant = 1;
     c.heterogeneous = true;
     c.max_new_tokens = 64;
     c.workers = 1;
+    c.max_inflight = max_inflight;
     c
 }
 
@@ -132,6 +139,7 @@ fn run_one(
     let mut real = Summary::new();
     let mut alphas = Summary::new();
     let mut tokens = 0u64;
+    let mut streamed_demo = false;
     for req in &workload.requests {
         // Open-loop arrivals: wait until this request's arrival time.
         let due = req.arrival_s;
@@ -142,7 +150,24 @@ fn run_one(
         // Strip BOS and trailing SEP: the server re-encodes the raw text.
         let text: String = Tokenizer::builtin().decode(&req.prompt);
         let text = text.trim_end_matches('=').to_string();
-        let reply = client.generate(&text, &req.task)?;
+        let reply = if !streamed_demo {
+            // First request per config: exercise the streaming protocol and
+            // show the round-by-round frames.
+            streamed_demo = true;
+            let (frames, final_reply) = client.generate_stream(&text, &req.task)?;
+            println!(
+                "{name}: streamed {} round frame(s) for the first request \
+                 (draft windows: {:?})",
+                frames.len(),
+                frames
+                    .iter()
+                    .filter_map(|f| f.get("drafted").and_then(Json::as_usize))
+                    .collect::<Vec<_>>()
+            );
+            final_reply
+        } else {
+            client.generate(&text, &req.task)?
+        };
         anyhow::ensure!(
             reply.get("ok") == Some(&Json::Bool(true)),
             "{name}: server error: {reply}"
@@ -157,6 +182,19 @@ fn run_one(
         }
     }
     let wall_s = t0.elapsed().as_secs_f64();
+
+    let mut mj = Json::obj();
+    mj.set("cmd", "metrics".into());
+    if let Ok(m) = client.call(&mj) {
+        println!(
+            "{name}: {} scheduler rounds, mean per-round gamma {:.2}, \
+             sessions in flight mean {:.2} / max {}",
+            m.get("rounds").and_then(Json::as_usize).unwrap_or(0),
+            m.get("mean_round_gamma").and_then(Json::as_f64).unwrap_or(f64::NAN),
+            m.get("mean_inflight").and_then(Json::as_f64).unwrap_or(f64::NAN),
+            m.get("max_inflight").and_then(Json::as_usize).unwrap_or(0),
+        );
+    }
 
     let mut sd = Json::obj();
     sd.set("cmd", "shutdown".into());

@@ -43,6 +43,7 @@ fn main() {
             },
             enqueued: std::time::Instant::now(),
             respond: tx,
+            token_tx: None,
         };
         q.push(item).ok();
         std::hint::black_box(q.pop());

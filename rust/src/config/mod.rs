@@ -109,6 +109,9 @@ pub struct RunConfig {
     pub queue_capacity: usize,
     /// Batch limit for the dynamic batcher (1 = no batching).
     pub max_batch: usize,
+    /// Live decode sessions each worker interleaves round-by-round
+    /// (continuous scheduling; 1 = run-to-completion serving).
+    pub max_inflight: usize,
     /// RNG seed (workload, stochastic sampling).
     pub seed: u64,
 }
@@ -130,6 +133,7 @@ impl Default for RunConfig {
             port: 7643,
             queue_capacity: 256,
             max_batch: 1,
+            max_inflight: 4,
             seed: 0xC0FFEE,
         }
     }
@@ -189,6 +193,9 @@ impl RunConfig {
         if let Some(v) = j.get("max_batch").and_then(Json::as_usize) {
             self.max_batch = v;
         }
+        if let Some(v) = j.get("max_inflight").and_then(Json::as_usize) {
+            self.max_inflight = v;
+        }
         if let Some(v) = j.get("seed").and_then(Json::as_f64) {
             self.seed = v as u64;
         }
@@ -202,6 +209,7 @@ impl RunConfig {
         );
         anyhow::ensure!(self.workers >= 1, "workers must be >= 1");
         anyhow::ensure!(self.max_batch >= 1, "max_batch must be >= 1");
+        anyhow::ensure!(self.max_inflight >= 1, "max_inflight must be >= 1");
         if let Some(g) = self.gamma {
             anyhow::ensure!((1..=8).contains(&g), "gamma must be 1..=8");
         }
@@ -227,7 +235,8 @@ mod tests {
         let mut c = RunConfig::default();
         let j = Json::parse(
             r#"{"exec_mode":"monolithic","gamma":3,"design_variant":2,
-                "timing":"real","speculative":false,"max_batch":4}"#,
+                "timing":"real","speculative":false,"max_batch":4,
+                "max_inflight":8}"#,
         )
         .unwrap();
         c.apply_json(&j).unwrap();
@@ -237,6 +246,14 @@ mod tests {
         assert_eq!(c.timing, Timing::Real);
         assert!(!c.speculative);
         assert_eq!(c.max_batch, 4);
+        assert_eq!(c.max_inflight, 8);
+    }
+
+    #[test]
+    fn zero_inflight_rejected() {
+        let mut c = RunConfig::default();
+        let j = Json::parse(r#"{"max_inflight":0}"#).unwrap();
+        assert!(c.apply_json(&j).is_err());
     }
 
     #[test]

@@ -2,12 +2,16 @@
 //!
 //! * [`queue`] — bounded request queue with backpressure (reject-on-full)
 //! * [`policy`] — adaptive routing policy: per-task α estimates feed the
-//!   cost model, which picks speculation on/off and γ* per request
+//!   cost model, which picks speculation on/off and γ* — at admission
+//!   *and again between every speculation round* of a live session
 //! * [`batcher`] — groups compatible requests for batched baseline decode
-//! * [`worker`] — engine worker threads (one PJRT engine each)
+//! * [`worker`] — engine worker threads (one PJRT engine each), each
+//!   running a round-robin scheduler over up to `max_inflight` resumable
+//!   [`DecodeSession`](crate::spec::DecodeSession)s
 //!
-//! Flow: client → [`Coordinator::submit`] → queue → worker (policy → decode)
-//! → response channel; metrics are recorded centrally.
+//! Flow: client → [`Coordinator::submit`] / [`Coordinator::submit_streaming`]
+//! → queue → worker (policy → session rounds) → token frames + final
+//! response; metrics are recorded centrally per round and per request.
 
 pub mod batcher;
 pub mod policy;
@@ -35,7 +39,28 @@ pub struct EngineResponse {
     pub queue_s: f64,
     pub alpha: f64,
     pub speculative: bool,
+    /// γ decided at admission (per-round choices are in the metrics).
     pub gamma: usize,
+    /// Scheduler rounds this request took (0 on the batched path).
+    pub rounds: usize,
+}
+
+/// One round's incremental output for a streaming request.
+#[derive(Debug, Clone)]
+pub struct TokenFrame {
+    pub id: u64,
+    /// 1-based scheduler round within this request.
+    pub round: usize,
+    /// Tokens newly committed by this round (may be empty on the final
+    /// bookkeeping frame).
+    pub tokens: Vec<u32>,
+    /// Draft window this round ran and how much of it was accepted
+    /// (both 0 on baseline steps and on the batched path).
+    pub drafted: usize,
+    pub accepted: usize,
+    /// Last frame of the stream; the final [`EngineResponse`] follows on
+    /// the response channel.
+    pub done: bool,
 }
 
 /// Running coordinator: queue + worker pool + metrics.
@@ -91,11 +116,32 @@ impl Coordinator {
         &self,
         req: Request,
     ) -> anyhow::Result<mpsc::Receiver<EngineResponse>> {
+        self.enqueue(req, None)
+    }
+
+    /// Submit with incremental output: tokens arrive round-by-round on the
+    /// frame receiver as the scheduler commits them, then the final
+    /// [`EngineResponse`] on the response receiver.
+    pub fn submit_streaming(
+        &self,
+        req: Request,
+    ) -> anyhow::Result<(mpsc::Receiver<TokenFrame>, mpsc::Receiver<EngineResponse>)> {
+        let (ftx, frx) = mpsc::channel();
+        let rx = self.enqueue(req, Some(ftx))?;
+        Ok((frx, rx))
+    }
+
+    fn enqueue(
+        &self,
+        req: Request,
+        token_tx: Option<mpsc::Sender<TokenFrame>>,
+    ) -> anyhow::Result<mpsc::Receiver<EngineResponse>> {
         let (tx, rx) = mpsc::channel();
         let item = QueueItem {
             request: req,
             enqueued: std::time::Instant::now(),
             respond: tx,
+            token_tx,
         };
         match self.queue.push(item) {
             Ok(()) => Ok(rx),

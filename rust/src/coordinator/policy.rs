@@ -8,6 +8,12 @@
 //! exactly the "naive adoption can increase latency" failure mode the paper
 //! warns about, handled at runtime. (Extension beyond the paper; ablated in
 //! the router bench.)
+//!
+//! With resumable sessions the policy is additionally consulted *between
+//! speculation rounds* ([`Policy::route_round`]): the live session's own
+//! acceptance evidence is blended with the task EWMA, so γ can shrink —
+//! or speculation switch off entirely — midway through a request whose
+//! drafts turn out worse than the admission-time estimate.
 
 use crate::config::RunConfig;
 use crate::costmodel;
@@ -83,10 +89,47 @@ impl Policy {
             .unwrap_or(self.prior_alpha)
     }
 
-    /// Decide the execution plan for one request.
+    /// Decide the execution plan for one request at admission.
     pub fn route(
         &self,
         task: &str,
+        d_spec: &crate::models::ModelSpec,
+        t_spec: &crate::models::ModelSpec,
+        seq_len: usize,
+    ) -> RouteDecision {
+        self.decide(self.alpha_estimate(task), d_spec, t_spec, seq_len)
+    }
+
+    /// Re-decide the plan between speculation rounds of a live session.
+    ///
+    /// `session_drafted` / `session_alpha` are the session's own running
+    /// draft count and acceptance rate; once the session has real evidence
+    /// its α dominates the task-level EWMA (weight grows with the sample
+    /// count), so a request whose drafts collapse mid-flight falls back to
+    /// baseline within that request — not merely for the next one.
+    pub fn route_round(
+        &self,
+        task: &str,
+        d_spec: &crate::models::ModelSpec,
+        t_spec: &crate::models::ModelSpec,
+        seq_len: usize,
+        session_drafted: usize,
+        session_alpha: f64,
+    ) -> RouteDecision {
+        let task_alpha = self.alpha_estimate(task);
+        let alpha = if self.adaptive && session_drafted > 0 && session_alpha.is_finite() {
+            let n = session_drafted as f64;
+            let w = (n / (n + 8.0)).min(0.9);
+            w * session_alpha + (1.0 - w) * task_alpha
+        } else {
+            task_alpha
+        };
+        self.decide(alpha, d_spec, t_spec, seq_len)
+    }
+
+    fn decide(
+        &self,
+        alpha: f64,
         d_spec: &crate::models::ModelSpec,
         t_spec: &crate::models::ModelSpec,
         seq_len: usize,
@@ -100,7 +143,6 @@ impl Policy {
                 alpha_used: f64::NAN,
             };
         }
-        let alpha = self.alpha_estimate(task);
         let c = self.lat.cost_coefficient(
             (d_spec, Scheme::Fp),
             (t_spec, Scheme::W8a8),
@@ -207,6 +249,35 @@ mod tests {
         let p = policy(&cfg);
         let (d, t) = specs();
         let dec = p.route("translate", &d, &t, 63);
+        assert!(!dec.speculative);
+        assert_eq!(dec.gamma, 0);
+    }
+
+    #[test]
+    fn route_round_tracks_session_evidence() {
+        let cfg = RunConfig::default();
+        let p = policy(&cfg);
+        let (d, t) = specs();
+        // No evidence yet: identical to the admission decision.
+        let admit = p.route("translate", &d, &t, 63);
+        let r0 = p.route_round("translate", &d, &t, 63, 0, f64::NAN);
+        assert_eq!(admit, r0);
+        // A collapsing in-flight α must never pick a larger γ than a
+        // perfect one, and with heavy evidence it dominates the prior.
+        let bad = p.route_round("translate", &d, &t, 63, 64, 0.0);
+        let good = p.route_round("translate", &d, &t, 63, 64, 1.0);
+        assert!(bad.gamma <= good.gamma, "{bad:?} vs {good:?}");
+        assert!(bad.alpha_used < admit.alpha_used);
+        assert!(good.alpha_used > admit.alpha_used);
+    }
+
+    #[test]
+    fn route_round_respects_global_off_switch() {
+        let mut cfg = RunConfig::default();
+        cfg.speculative = false;
+        let p = policy(&cfg);
+        let (d, t) = specs();
+        let dec = p.route_round("translate", &d, &t, 63, 10, 1.0);
         assert!(!dec.speculative);
         assert_eq!(dec.gamma, 0);
     }

@@ -6,11 +6,16 @@ use std::collections::VecDeque;
 use std::sync::{mpsc, Condvar, Mutex};
 use std::time::Instant;
 
-/// A queued request plus its response channel.
+/// A queued request plus its response channel(s).
 pub struct QueueItem {
     pub request: Request,
     pub enqueued: Instant,
     pub respond: mpsc::Sender<super::EngineResponse>,
+    /// Optional incremental channel: the worker emits one [`TokenFrame`]
+    /// per round as tokens commit (streaming responses).
+    ///
+    /// [`TokenFrame`]: super::TokenFrame
+    pub token_tx: Option<mpsc::Sender<super::TokenFrame>>,
 }
 
 /// Bounded FIFO. `push` fails when full (callers surface 429-style
@@ -59,6 +64,13 @@ impl RequestQueue {
             }
             g = self.not_empty.wait(g).unwrap();
         }
+    }
+
+    /// Non-blocking pop; None when the queue is momentarily empty (the
+    /// round-level scheduler tops up in-flight sessions between rounds
+    /// without stalling the ones already live).
+    pub fn try_pop(&self) -> Option<QueueItem> {
+        self.inner.lock().unwrap().items.pop_front()
     }
 
     /// Pop up to `max` items without blocking beyond the first (dynamic
@@ -112,6 +124,7 @@ mod tests {
             },
             enqueued: Instant::now(),
             respond: tx,
+            token_tx: None,
         }
     }
 
@@ -155,6 +168,15 @@ mod tests {
         assert_eq!(b[0].request.id, 0);
         let b = q.pop_batch(10);
         assert_eq!(b.len(), 2);
+    }
+
+    #[test]
+    fn try_pop_never_blocks() {
+        let q = RequestQueue::new(4);
+        assert!(q.try_pop().is_none());
+        q.push(item(1)).ok().unwrap();
+        assert_eq!(q.try_pop().unwrap().request.id, 1);
+        assert!(q.try_pop().is_none());
     }
 
     #[test]

@@ -1,12 +1,29 @@
 //! Engine worker: owns one PJRT engine (the xla wrapper types are not
-//! `Send`, so the engine lives and dies inside this thread) and serves
-//! requests from the shared queue until shutdown.
+//! `Send`, so the engine lives and dies inside this thread) and runs a
+//! round-level continuous scheduler over the shared queue until shutdown.
+//!
+//! Instead of occupying the thread with one request until completion, the
+//! worker keeps up to `cfg.max_inflight` live [`DecodeSession`]s and steps
+//! each one speculation round at a time, round-robin:
+//!
+//! 1. **admit** — top the in-flight set up from the queue (blocking only
+//!    when nothing is live);
+//! 2. **consult** — re-run the routing [`Policy`] for every live session,
+//!    so γ and speculate-on/off are re-decided per round from the
+//!    session's running α (the cost model in the hot loop);
+//! 3. **step** — advance each session one round, stream newly committed
+//!    tokens to the request's `token_tx`, record per-round metrics;
+//! 4. **retire** — finished sessions emit their final [`EngineResponse`].
+//!
+//! The legacy lockstep batcher still handles the `max_batch > 1` baseline
+//! configuration (it decodes whole batches, so it bypasses the scheduler).
 
 use crate::config::RunConfig;
 use crate::hetero::{LatencyModel, Platform};
-use crate::metrics::{Metrics, RequestRecord};
+use crate::metrics::{Metrics, RequestRecord, RoundRecord};
+use crate::models::ModelSpec;
 use crate::runtime::Engine;
-use crate::spec::{AcceptRule, Decoder, DecoderSetup};
+use crate::spec::{AcceptRule, DecodeSession, DecoderSetup};
 use crate::tokenizer::Tokenizer;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc};
@@ -14,7 +31,22 @@ use std::sync::{mpsc, Arc};
 use super::batcher;
 use super::policy::Policy;
 use super::queue::{QueueItem, RequestQueue};
-use super::EngineResponse;
+use super::{EngineResponse, TokenFrame};
+
+/// One live request inside the worker's scheduler.
+struct LiveSession {
+    session: DecodeSession,
+    respond: mpsc::Sender<EngineResponse>,
+    token_tx: Option<mpsc::Sender<TokenFrame>>,
+    id: u64,
+    task: String,
+    /// Queue delay, measured at admission.
+    queue_s: f64,
+    /// Admission-time decision (reported in the final response).
+    admitted_speculative: bool,
+    admitted_gamma: usize,
+    rounds: usize,
+}
 
 /// Worker main loop (runs on its own thread).
 #[allow(clippy::too_many_arguments)]
@@ -49,53 +81,192 @@ pub fn run_worker(
     let _ = engine.warmup(&[drafter, target], cfg.kernel_path, &buckets);
 
     let lat = LatencyModel::new(platform);
-
-    while !shutdown.load(Ordering::SeqCst) {
-        // Batch only when configured AND speculation is globally off (the
-        // batcher handles baseline decode only — see batcher docs).
-        let batch = if cfg.max_batch > 1 && !cfg.speculative {
-            queue.pop_batch(cfg.max_batch)
-        } else {
-            match queue.pop() {
-                Some(i) => vec![i],
-                None => break,
-            }
-        };
-        if batch.is_empty() {
-            break; // queue closed
+    let (d_spec, t_spec) = match (
+        engine.manifest.model_for(drafter).cloned(),
+        engine.manifest.model_for(target).cloned(),
+    ) {
+        (Ok(d), Ok(t)) => (d, t),
+        _ => {
+            // Malformed manifest: drain the queue until shutdown so every
+            // waiting caller sees its response sender dropped (RecvError)
+            // instead of blocking forever on an unserved request.
+            while queue.pop().is_some() {}
+            return;
         }
-        if batch.len() > 1 {
-            serve_batch(&cfg, &engine, &lat, &tokenizer, &metrics, batch, target);
-        } else {
-            let item = batch.into_iter().next().unwrap();
-            serve_one(&cfg, &engine, &lat, &tokenizer, &metrics, &policy, item,
-                      drafter, target);
+    };
+
+    // The lockstep batcher owns the baseline-batching configuration; lone
+    // requests under low traffic still decode on the session path (the
+    // Pallas batch-1 artifacts), exactly as before batching kicked in.
+    if cfg.max_batch > 1 && !cfg.speculative {
+        while !shutdown.load(Ordering::SeqCst) {
+            let batch = queue.pop_batch(cfg.max_batch);
+            if batch.is_empty() {
+                break; // queue closed
+            }
+            if batch.len() == 1 {
+                let item = batch.into_iter().next().unwrap();
+                let ls = admit(&cfg, &engine, &lat, &policy, &d_spec, &t_spec,
+                               item, drafter, target);
+                serve_single(&engine, &policy, &metrics, &tokenizer,
+                             &d_spec, &t_spec, ls);
+            } else {
+                serve_batch(&cfg, &engine, &lat, &tokenizer, &metrics, batch, target);
+            }
+        }
+        return;
+    }
+
+    let max_inflight = cfg.max_inflight.max(1);
+    let mut live: Vec<LiveSession> = Vec::new();
+    let mut queue_open = true;
+
+    loop {
+        // ---- admit: top up the in-flight set -------------------------
+        // On shutdown, stop admitting but finish the (bounded) in-flight
+        // set — the old loop's "complete the current request" semantics.
+        while queue_open && !shutdown.load(Ordering::SeqCst) && live.len() < max_inflight {
+            let item = if live.is_empty() {
+                // Nothing to step: block until work arrives or close.
+                match queue.pop() {
+                    Some(i) => i,
+                    None => {
+                        queue_open = false;
+                        break;
+                    }
+                }
+            } else {
+                match queue.try_pop() {
+                    Some(i) => i,
+                    None => break,
+                }
+            };
+            live.push(admit(&cfg, &engine, &lat, &policy, &d_spec, &t_spec,
+                            item, drafter, target));
+        }
+        if live.is_empty() {
+            if !queue_open || shutdown.load(Ordering::SeqCst) {
+                break;
+            }
+            continue;
+        }
+
+        // ---- consult + step every live session one round -------------
+        let inflight_now = live.len();
+        let mut i = 0;
+        while i < live.len() {
+            match step_session(&engine, &policy, &metrics, &d_spec, &t_spec,
+                               &mut live[i], inflight_now) {
+                None => {
+                    // Dropping the sender(s) signals the error to the caller.
+                    live.remove(i);
+                }
+                Some(true) => {
+                    let ls = live.remove(i);
+                    retire(&tokenizer, &metrics, &policy, ls);
+                }
+                Some(false) => i += 1,
+            }
         }
     }
 }
 
+/// Drive one admitted session to completion — the scheduler path
+/// specialized to a single in-flight session (used by the batched config
+/// for lone requests, so low traffic keeps the normal kernel/streaming/
+/// metrics behavior).
+fn serve_single(
+    engine: &Engine,
+    policy: &Policy,
+    metrics: &Metrics,
+    tokenizer: &Tokenizer,
+    d_spec: &ModelSpec,
+    t_spec: &ModelSpec,
+    mut ls: LiveSession,
+) {
+    loop {
+        match step_session(engine, policy, metrics, d_spec, t_spec, &mut ls, 1) {
+            None => break, // dropped senders signal the error
+            Some(true) => {
+                retire(tokenizer, metrics, policy, ls);
+                break;
+            }
+            Some(false) => {}
+        }
+    }
+}
+
+/// Consult the policy, advance one round, record it, and stream any newly
+/// committed tokens. Returns `Some(done)`, or `None` when the step failed
+/// and the session should be dropped.
+fn step_session(
+    engine: &Engine,
+    policy: &Policy,
+    metrics: &Metrics,
+    d_spec: &ModelSpec,
+    t_spec: &ModelSpec,
+    ls: &mut LiveSession,
+    inflight_now: usize,
+) -> Option<bool> {
+    // Round-level policy: γ and speculate-on/off re-decided from the
+    // session's running α before every round.
+    let dec = policy.route_round(
+        &ls.task, d_spec, t_spec, ls.session.seq_len(),
+        ls.session.n_drafted(), ls.session.alpha_so_far(),
+    );
+    ls.session.set_speculative(dec.speculative);
+    if dec.speculative {
+        // Artifact-aware: monolithic fused graphs only exist for the γs
+        // the AOT build lowered, so the serving path clamps.
+        ls.session.set_gamma_checked(engine, dec.gamma);
+    }
+
+    let step = ls.session.step(engine).ok()?;
+    ls.rounds += 1;
+    // Bookkeeping steps that only discovered completion (born-finished
+    // cap==0 sessions, bucket-edge termination) ran no engine work and
+    // would dilute the per-round metrics.
+    let worked = step.drafted > 0 || !step.committed.is_empty() || step.sim_s > 0.0;
+    if worked {
+        metrics.record_round(RoundRecord {
+            drafted: step.drafted,
+            accepted: step.accepted,
+            sim_s: step.sim_s,
+            real_s: step.real_s,
+            inflight: inflight_now,
+        });
+    }
+    if let Some(tx) = &ls.token_tx {
+        if !step.committed.is_empty() || step.done {
+            let _ = tx.send(TokenFrame {
+                id: ls.id,
+                round: ls.rounds,
+                tokens: step.committed,
+                drafted: step.drafted,
+                accepted: step.accepted,
+                done: step.done,
+            });
+        }
+    }
+    Some(step.done)
+}
+
+/// Route one queue item and wrap it into a live session.
 #[allow(clippy::too_many_arguments)]
-fn serve_one(
+fn admit(
     cfg: &RunConfig,
     engine: &Engine,
     lat: &LatencyModel,
-    tokenizer: &Tokenizer,
-    metrics: &Metrics,
     policy: &Policy,
+    d_spec: &ModelSpec,
+    t_spec: &ModelSpec,
     item: QueueItem,
     drafter: crate::models::VariantKey,
     target: crate::models::VariantKey,
-) {
+) -> LiveSession {
     let queue_s = item.enqueued.elapsed().as_secs_f64();
     let req = item.request;
-    let d_spec = engine.manifest.model_for(drafter).cloned();
-    let t_spec = engine.manifest.model_for(target).cloned();
-    let (d_spec, t_spec) = match (d_spec, t_spec) {
-        (Ok(d), Ok(t)) => (d, t),
-        _ => return,
-    };
-    let decision = policy.route(&req.task, &d_spec, &t_spec, req.prompt.len());
-
+    let decision = policy.route(&req.task, d_spec, t_spec, req.prompt.len());
     let setup = DecoderSetup {
         drafter,
         target,
@@ -106,37 +277,46 @@ fn serve_one(
         exec: cfg.exec_mode,
         max_new: cfg.max_new_tokens,
     };
-    let decoder = Decoder::new(engine, lat.clone(), setup);
-    let outcome = if decision.speculative {
-        decoder.speculative(&req.prompt)
-    } else {
-        decoder.baseline(&req.prompt)
-    };
-    let outcome = match outcome {
-        Ok(o) => o,
-        Err(_) => return, // dropped sender signals the error to the caller
-    };
-    policy.observe_alpha(&req.task, outcome.alpha());
+    let session =
+        DecodeSession::new(engine, lat.clone(), setup, decision.speculative, &req.prompt);
+    LiveSession {
+        session,
+        respond: item.respond,
+        token_tx: item.token_tx,
+        id: req.id,
+        task: req.task,
+        queue_s,
+        admitted_speculative: decision.speculative,
+        admitted_gamma: decision.gamma,
+        rounds: 0,
+    }
+}
+
+/// Account for and answer one finished session.
+fn retire(tokenizer: &Tokenizer, metrics: &Metrics, policy: &Policy, ls: LiveSession) {
+    let outcome = ls.session.into_outcome();
+    policy.observe_alpha(&ls.task, outcome.alpha());
     metrics.record(RequestRecord {
         sim_s: outcome.sim_s,
         real_s: outcome.real_s,
-        queue_s,
+        queue_s: ls.queue_s,
         tokens: outcome.tokens.len(),
         drafted: outcome.n_drafted,
         accepted: outcome.n_accepted,
     });
     let completion = tokenizer.decode(&outcome.tokens);
     let alpha = outcome.alpha();
-    let _ = item.respond.send(EngineResponse {
-        id: req.id,
+    let _ = ls.respond.send(EngineResponse {
+        id: ls.id,
         completion,
         tokens: outcome.tokens,
         sim_s: outcome.sim_s,
         real_s: outcome.real_s,
-        queue_s,
+        queue_s: ls.queue_s,
         alpha,
-        speculative: decision.speculative,
-        gamma: decision.gamma,
+        speculative: ls.admitted_speculative,
+        gamma: ls.admitted_gamma,
+        rounds: ls.rounds,
     });
 }
 
@@ -190,6 +370,18 @@ fn serve_batch(
             drafted: 0,
             accepted: 0,
         });
+        // Lockstep batching has no per-round commits; streaming callers
+        // still get their terminating done-frame with the full output.
+        if let Some(tx) = &item.token_tx {
+            let _ = tx.send(TokenFrame {
+                id: item.request.id,
+                round: 1,
+                tokens: o.tokens.clone(),
+                drafted: 0,
+                accepted: 0,
+                done: true,
+            });
+        }
         let _ = item.respond.send(EngineResponse {
             id: item.request.id,
             completion: tokenizer.decode(&o.tokens),
@@ -200,6 +392,7 @@ fn serve_batch(
             alpha: f64::NAN,
             speculative: false,
             gamma: 0,
+            rounds: 0,
         });
     }
 }

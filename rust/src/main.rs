@@ -46,6 +46,7 @@ fn cli() -> Cli {
         .opt("max-new", "max new tokens", Some("64"))
         .opt("port", "serve: TCP port (0 = auto)", Some("7643"))
         .opt("workers", "serve: engine workers", Some("1"))
+        .opt("max-inflight", "serve: live sessions interleaved per worker", Some("4"))
         .opt("limit", "experiments: sample limit", None)
         .opt("out", "experiments: results dir", Some("results"))
         .opt("prompt", "decode: prompt text (task-prefixed, e.g. 'tr: ...')", None)
@@ -86,6 +87,9 @@ fn build_config(args: &specedge::util::cli::Args) -> anyhow::Result<RunConfig> {
     }
     if let Some(w) = args.get_usize("workers")? {
         cfg.workers = w;
+    }
+    if let Some(m) = args.get_usize("max-inflight")? {
+        cfg.max_inflight = m;
     }
     if let Some(p) = args.get_usize("port")? {
         cfg.port = p as u16;

@@ -1,4 +1,8 @@
-//! Serving metrics: latency recording, acceptance accounting, throughput.
+//! Serving metrics: latency recording, acceptance accounting, throughput —
+//! at two granularities. Requests contribute end-to-end latencies; the
+//! round-level scheduler additionally records every speculation round
+//! (γ chosen per round, per-round α trajectory, sessions in flight), which
+//! is how continuous scheduling is observed from the outside.
 
 use crate::util::stats::{BoxStats, Summary};
 use std::sync::Mutex;
@@ -24,6 +28,57 @@ struct Inner {
     rejected: u64,
     drafted: u64,
     accepted: u64,
+    /// Scheduler rounds (one per working `DecodeSession::step`).
+    rounds: u64,
+    /// Σ draft-window sizes (exact mean γ = sum / rounds; 0-valued
+    /// baseline steps included).
+    round_gamma_sum: f64,
+    /// Per-round acceptance rate (rounds that drafted only). Rounds fire
+    /// ~γ× more often than requests, so a bounded reservoir keeps the
+    /// hot-path sink O(1) memory over a server's lifetime.
+    round_alpha: Reservoir,
+    /// Σ live sessions on the recording worker at each round.
+    inflight_sum: f64,
+    max_inflight: usize,
+}
+
+/// Fixed-size uniform reservoir (Vitter's Algorithm R) for unbounded
+/// sample streams; percentiles come from the retained subset.
+#[derive(Debug)]
+struct Reservoir {
+    values: Vec<f64>,
+    seen: u64,
+    rng: crate::util::rng::Rng,
+}
+
+const RESERVOIR_CAP: usize = 4096;
+
+impl Default for Reservoir {
+    fn default() -> Reservoir {
+        Reservoir {
+            values: Vec::new(),
+            seen: 0,
+            rng: crate::util::rng::Rng::new(0x5EED5),
+        }
+    }
+}
+
+impl Reservoir {
+    fn push(&mut self, x: f64) {
+        self.seen += 1;
+        if self.values.len() < RESERVOIR_CAP {
+            self.values.push(x);
+        } else {
+            let j = (self.rng.next_u64() % self.seen) as usize;
+            if j < RESERVOIR_CAP {
+                self.values[j] = x;
+            }
+        }
+    }
+
+    fn box_stats(&self) -> BoxStats {
+        Summary::from_values(self.values.clone()).box_stats()
+    }
 }
 
 /// One request's contribution.
@@ -35,6 +90,18 @@ pub struct RequestRecord {
     pub tokens: usize,
     pub drafted: usize,
     pub accepted: usize,
+}
+
+/// One scheduler round's contribution. The draft window the round ran
+/// doubles as the per-round γ record (0 = baseline step).
+#[derive(Debug, Clone, Copy)]
+pub struct RoundRecord {
+    pub drafted: usize,
+    pub accepted: usize,
+    pub sim_s: f64,
+    pub real_s: f64,
+    /// Live sessions on this worker when the round ran.
+    pub inflight: usize,
 }
 
 impl Metrics {
@@ -60,6 +127,17 @@ impl Metrics {
         self.inner.lock().unwrap().rejected += 1;
     }
 
+    pub fn record_round(&self, r: RoundRecord) {
+        let mut m = self.inner.lock().unwrap();
+        m.rounds += 1;
+        m.round_gamma_sum += r.drafted as f64;
+        if r.drafted > 0 {
+            m.round_alpha.push(r.accepted as f64 / r.drafted as f64);
+        }
+        m.inflight_sum += r.inflight as f64;
+        m.max_inflight = m.max_inflight.max(r.inflight);
+    }
+
     pub fn snapshot(&self) -> Report {
         let mut m = self.inner.lock().unwrap();
         Report {
@@ -74,6 +152,11 @@ impl Metrics {
             sim_latency: m.sim_latency.box_stats(),
             real_latency: m.real_latency.box_stats(),
             queue_delay: m.queue_delay.box_stats(),
+            rounds: m.rounds,
+            mean_round_gamma: m.round_gamma_sum / m.rounds.max(1) as f64,
+            round_alpha: m.round_alpha.box_stats(),
+            mean_inflight: m.inflight_sum / m.rounds.max(1) as f64,
+            max_inflight: m.max_inflight,
         }
     }
 }
@@ -88,6 +171,15 @@ pub struct Report {
     pub sim_latency: BoxStats,
     pub real_latency: BoxStats,
     pub queue_delay: BoxStats,
+    /// Scheduler rounds across all workers.
+    pub rounds: u64,
+    /// Mean γ chosen per round (0-valued baseline steps included).
+    pub mean_round_gamma: f64,
+    /// Per-round α trajectory over drafting rounds.
+    pub round_alpha: BoxStats,
+    /// Mean / max sessions in flight per worker, sampled per round.
+    pub mean_inflight: f64,
+    pub max_inflight: usize,
 }
 
 impl Report {
@@ -96,7 +188,9 @@ impl Report {
             "requests={} rejected={} tokens={} tok/s={:.1} mean_alpha={:.3}\n\
              sim latency  p50={:.1}ms p90={:.1}ms mean={:.1}ms\n\
              real latency p50={:.1}ms p90={:.1}ms mean={:.1}ms\n\
-             queue delay  p50={:.1}ms p90={:.1}ms",
+             queue delay  p50={:.1}ms p90={:.1}ms\n\
+             rounds={} mean_gamma={:.2} round_alpha_p50={:.3} \
+             inflight mean={:.2} max={}",
             self.requests,
             self.rejected,
             self.tokens_out,
@@ -110,6 +204,11 @@ impl Report {
             self.real_latency.mean * 1e3,
             self.queue_delay.median * 1e3,
             self.queue_delay.p90 * 1e3,
+            self.rounds,
+            self.mean_round_gamma,
+            self.round_alpha.median,
+            self.mean_inflight,
+            self.max_inflight,
         )
     }
 }
@@ -138,6 +237,28 @@ mod tests {
         assert_eq!(r.tokens_out, 200);
         assert!((r.mean_alpha - 0.5).abs() < 1e-12);
         assert!((r.sim_latency.median - 0.55).abs() < 1e-9);
+    }
+
+    #[test]
+    fn round_records_aggregate() {
+        let m = Metrics::new();
+        m.record_round(RoundRecord {
+            drafted: 5, accepted: 4, sim_s: 0.01, real_s: 0.01, inflight: 3,
+        });
+        m.record_round(RoundRecord {
+            drafted: 3, accepted: 3, sim_s: 0.01, real_s: 0.01, inflight: 1,
+        });
+        m.record_round(RoundRecord {
+            drafted: 0, accepted: 0, sim_s: 0.01, real_s: 0.01, inflight: 2,
+        });
+        let r = m.snapshot();
+        assert_eq!(r.rounds, 3);
+        assert_eq!(r.max_inflight, 3);
+        assert!((r.mean_inflight - 2.0).abs() < 1e-12);
+        assert!((r.mean_round_gamma - 8.0 / 3.0).abs() < 1e-12);
+        // The baseline round (drafted=0) must not dilute the α trajectory.
+        assert_eq!(r.round_alpha.n, 2);
+        assert!((r.round_alpha.mean - (0.8 + 1.0) / 2.0).abs() < 1e-12);
     }
 
     #[test]

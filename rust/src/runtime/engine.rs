@@ -62,13 +62,25 @@ impl ForwardOut {
         best as u32
     }
 
-    /// Softmax probabilities at (b, pos) — used by the stochastic accept rule.
+    /// Softmax probabilities at (b, pos) — used by the stochastic accept
+    /// rule, which calls this γ+1 times per round. Exponentiates into a
+    /// single output buffer and normalizes in place (one allocation,
+    /// one multiply per element instead of a divide).
     pub fn probs(&self, b: usize, pos: usize) -> Vec<f32> {
         let row = self.row(b, pos);
         let m = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
-        let ex: Vec<f32> = row.iter().map(|&v| (v - m).exp()).collect();
-        let z: f32 = ex.iter().sum();
-        ex.iter().map(|&e| e / z).collect()
+        let mut out = Vec::with_capacity(row.len());
+        let mut z = 0.0f32;
+        for &v in row {
+            let e = (v - m).exp();
+            z += e;
+            out.push(e);
+        }
+        let inv = 1.0 / z;
+        for p in &mut out {
+            *p *= inv;
+        }
+        out
     }
 }
 

@@ -8,6 +8,13 @@
 //!    "real_ms": 8.4, "alpha": 0.83, "speculative": true, "gamma": 5}
 //! ```
 //!
+//! With `"stream": true` the reply is incremental: one
+//! `{"ok":true,"frame":"tokens","text":...,"round":r,"drafted":d,
+//! "accepted":a,"done":false}` line per speculation round as the scheduler
+//! commits tokens, terminated by the usual summary object tagged
+//! `"frame":"final"`. Clients that never ask for streaming see the
+//! single-line protocol unchanged.
+//!
 //! `{"cmd": "metrics"}` returns a metrics snapshot; `{"cmd": "shutdown"}`
 //! stops the listener (used by tests and the E2E example).
 
@@ -113,6 +120,10 @@ fn handle_conn(
                                 .set("mean_alpha", r.mean_alpha.into())
                                 .set("sim_p50_ms", (r.sim_latency.median * 1e3).into())
                                 .set("sim_p90_ms", (r.sim_latency.p90 * 1e3).into())
+                                .set("rounds", (r.rounds as usize).into())
+                                .set("mean_round_gamma", r.mean_round_gamma.into())
+                                .set("mean_inflight", r.mean_inflight.into())
+                                .set("max_inflight", r.max_inflight.into())
                                 .set("wall_s", start_wall.elapsed().as_secs_f64().into());
                             j
                         }
@@ -126,7 +137,7 @@ fn handle_conn(
                         other => err_json(&format!("unknown cmd {other:?}")),
                     }
                 } else {
-                    handle_generate(&req, &coordinator, &tokenizer, &next_id)
+                    handle_generate(&req, &coordinator, &tokenizer, &next_id, &mut stream)?
                 }
             }
         };
@@ -134,24 +145,29 @@ fn handle_conn(
     }
 }
 
+/// Serve one generate request. Streaming requests write their incremental
+/// frames to `stream` directly; the returned Json is the line the caller
+/// writes last (the final summary, or an error object).
 fn handle_generate(
     req: &Json,
     coordinator: &Coordinator,
     tokenizer: &Tokenizer,
     next_id: &AtomicU64,
-) -> Json {
+    stream: &mut TcpStream,
+) -> anyhow::Result<Json> {
     let prompt_text = match req.get("prompt").and_then(Json::as_str) {
         Some(p) => p,
-        None => return err_json("missing `prompt`"),
+        None => return Ok(err_json("missing `prompt`")),
     };
     let task = req
         .get("task")
         .and_then(Json::as_str)
         .unwrap_or("unknown")
         .to_string();
+    let streaming = req.get("stream").and_then(Json::as_bool).unwrap_or(false);
     let mut prompt = match tokenizer.encode(prompt_text, true) {
         Ok(p) => p,
-        Err(e) => return err_json(&format!("{e}")),
+        Err(e) => return Ok(err_json(&format!("{e}"))),
     };
     prompt.push(SEP_ID);
     let request = Request {
@@ -161,22 +177,52 @@ fn handle_generate(
         truth: String::new(),
         arrival_s: 0.0,
     };
-    match coordinator.submit_blocking(request) {
-        Err(e) => err_json(&format!("{e}")),
-        Ok(r) => {
-            let mut j = Json::obj();
-            j.set("ok", true.into())
-                .set("completion", Json::Str(r.completion))
-                .set("tokens", r.tokens.len().into())
-                .set("sim_ms", (r.sim_s * 1e3).into())
-                .set("real_ms", (r.real_s * 1e3).into())
-                .set("queue_ms", (r.queue_s * 1e3).into())
-                .set("alpha", r.alpha.into())
-                .set("speculative", r.speculative.into())
-                .set("gamma", r.gamma.into());
-            j
-        }
+    if !streaming {
+        return Ok(match coordinator.submit_blocking(request) {
+            Err(e) => err_json(&format!("{e}")),
+            Ok(r) => final_json(r, false),
+        });
     }
+    let (frames, final_rx) = match coordinator.submit_streaming(request) {
+        Ok(p) => p,
+        Err(e) => return Ok(err_json(&format!("{e}"))),
+    };
+    // Relay each round's frame as it commits; the iterator ends when the
+    // worker retires the session and drops the sender.
+    for f in frames.iter() {
+        let mut j = Json::obj();
+        j.set("ok", true.into())
+            .set("frame", Json::Str("tokens".into()))
+            .set("round", f.round.into())
+            .set("text", Json::Str(tokenizer.decode(&f.tokens)))
+            .set("n_tokens", f.tokens.len().into())
+            .set("drafted", f.drafted.into())
+            .set("accepted", f.accepted.into())
+            .set("done", f.done.into());
+        writeln!(stream, "{j}")?;
+    }
+    Ok(match final_rx.recv() {
+        Err(_) => err_json("worker dropped the request"),
+        Ok(r) => final_json(r, true),
+    })
+}
+
+fn final_json(r: crate::coordinator::EngineResponse, tagged: bool) -> Json {
+    let mut j = Json::obj();
+    if tagged {
+        j.set("frame", Json::Str("final".into()));
+    }
+    j.set("ok", true.into())
+        .set("completion", Json::Str(r.completion))
+        .set("tokens", r.tokens.len().into())
+        .set("sim_ms", (r.sim_s * 1e3).into())
+        .set("real_ms", (r.real_s * 1e3).into())
+        .set("queue_ms", (r.queue_s * 1e3).into())
+        .set("alpha", r.alpha.into())
+        .set("speculative", r.speculative.into())
+        .set("gamma", r.gamma.into())
+        .set("rounds", r.rounds.into());
+    j
 }
 
 fn err_json(msg: &str) -> Json {
@@ -210,5 +256,32 @@ impl Client {
         j.set("prompt", Json::Str(prompt.into()))
             .set("task", Json::Str(task.into()));
         self.call(&j)
+    }
+
+    /// Streaming generate: returns the per-round token frames and the final
+    /// summary object (which is also the only line for error replies).
+    pub fn generate_stream(
+        &mut self,
+        prompt: &str,
+        task: &str,
+    ) -> anyhow::Result<(Vec<Json>, Json)> {
+        let mut j = Json::obj();
+        j.set("prompt", Json::Str(prompt.into()))
+            .set("task", Json::Str(task.into()))
+            .set("stream", true.into());
+        writeln!(self.stream, "{j}")?;
+        let mut frames = Vec::new();
+        loop {
+            let mut line = String::new();
+            if self.reader.read_line(&mut line)? == 0 {
+                anyhow::bail!("server closed mid-stream");
+            }
+            let reply = Json::parse(line.trim())
+                .map_err(|e| anyhow::anyhow!("bad reply: {e}"))?;
+            match reply.get("frame").and_then(Json::as_str) {
+                Some("tokens") => frames.push(reply),
+                _ => return Ok((frames, reply)),
+            }
+        }
     }
 }

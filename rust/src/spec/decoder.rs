@@ -1,22 +1,21 @@
-//! Decode loops: autoregressive baseline + speculative sampling in both
-//! compiler abstractions (modular / monolithic).
+//! Decode configuration, outcome accounting, and the run-to-completion
+//! [`Decoder`] façade.
 //!
-//! Every loop advances two clocks:
-//! * **real** — wall-clock of the PJRT CPU executions on this machine;
-//! * **simulated** — the calibrated i.MX95 latency model (what the paper's
-//!   numbers correspond to; see `hetero`). The modular path charges one
-//!   dispatch boundary per call (γ+1 per round); the monolithic path charges
-//!   a single boundary per round — exactly the overhead trade-off the paper
-//!   discusses in §IV-D.
+//! The actual decode loops live in [`super::session`]: every path —
+//! autoregressive baseline, modular speculation (paper Fig. 4) and
+//! monolithic speculation (paper Fig. 3) — is a [`DecodeSession`] stepped
+//! one round at a time. `Decoder` keeps the historical one-shot API for
+//! experiments, benches and the CLI: construct a session, step it to
+//! completion, hand back the aggregate [`DecodeOutcome`].
 
 use crate::config::{ExecMode, KernelPath};
 use crate::hetero::{LatencyModel, Mapping};
-use crate::models::{Scheme, VariantKey};
+use crate::models::VariantKey;
 use crate::runtime::Engine;
-use crate::tokenizer::EOS_ID;
 use crate::util::rng::Rng;
 
-use super::sampling::{greedy_accept_len, stochastic_accept, AcceptRule};
+use super::sampling::AcceptRule;
+use super::session::DecodeSession;
 
 /// Static decode configuration (one per serving worker / experiment run).
 #[derive(Debug, Clone)]
@@ -49,7 +48,7 @@ impl DecoderSetup {
 }
 
 /// Result of decoding one request.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Default)]
 pub struct DecodeOutcome {
     /// Generated tokens (completion only, EOS excluded).
     pub tokens: Vec<u32>,
@@ -94,219 +93,34 @@ impl<'e> Decoder<'e> {
         *self.rng.borrow_mut() = Rng::new(seed);
     }
 
-    fn scheme_of(&self, key: VariantKey) -> Scheme {
-        key.scheme
-    }
-
-    /// Simulated seconds for one forward of `key` on its mapped PU at
-    /// `bucket` (bucketed deployment: padded shapes run at bucket cost).
-    fn sim_forward(&self, key: VariantKey, bucket: usize) -> anyhow::Result<f64> {
-        let spec = self.engine.manifest.model_for(key)?;
-        let pu = match key.role {
-            crate::models::Role::Drafter => self.setup.mapping.drafter,
-            crate::models::Role::Target => self.setup.mapping.target,
-        };
-        Ok(self
-            .lat
-            .forward_latency(spec, self.scheme_of(key), pu, bucket))
-    }
-
-    fn gen_cap(&self, prompt_len: usize) -> usize {
-        let max_total = self.engine.manifest.largest_bucket();
-        self.setup
-            .max_new
-            .min(max_total.saturating_sub(prompt_len + self.setup.gamma.max(1)))
-    }
-
     /// Plain autoregressive decoding with the target model only.
     pub fn baseline(&self, prompt: &[u32]) -> anyhow::Result<DecodeOutcome> {
-        let mut ids: Vec<u32> = prompt.to_vec();
-        let mut out = DecodeOutcome {
-            tokens: vec![], n_rounds: 0, n_drafted: 0, n_accepted: 0,
-            drafter_calls: 0, target_calls: 0, sim_s: 0.0, real_s: 0.0,
-        };
-        let cap = self.gen_cap(prompt.len());
-        for _ in 0..cap {
-            let bucket = self.engine.bucket_for(ids.len())?;
-            let fwd = self.engine.forward(
-                self.setup.target, self.setup.kernel, &ids, bucket)?;
-            out.real_s += fwd.elapsed_s;
-            out.sim_s += self.sim_forward(self.setup.target, bucket)?;
-            out.target_calls += 1;
-            let nxt = fwd.argmax(0, ids.len() - 1);
-            if nxt == EOS_ID {
-                break;
-            }
-            ids.push(nxt);
-            out.tokens.push(nxt);
-        }
-        Ok(out)
+        self.run_to_completion(prompt, false)
     }
 
     /// Speculative decoding; dispatches on the configured exec mode.
     pub fn speculative(&self, prompt: &[u32]) -> anyhow::Result<DecodeOutcome> {
-        match self.setup.exec {
-            ExecMode::Modular => self.speculative_modular(prompt),
-            ExecMode::Monolithic => self.speculative_monolithic(prompt),
-        }
+        self.run_to_completion(prompt, true)
     }
 
-    /// Modular speculation (paper Fig. 4): γ drafter calls + 1 target call
-    /// per round, control flow here in Rust, one runtime-API boundary per
-    /// call (charged by the latency model's dispatch overhead).
-    fn speculative_modular(&self, prompt: &[u32]) -> anyhow::Result<DecodeOutcome> {
-        let gamma = self.setup.gamma.max(1);
-        let mut ids: Vec<u32> = prompt.to_vec();
-        let mut out = DecodeOutcome {
-            tokens: vec![], n_rounds: 0, n_drafted: 0, n_accepted: 0,
-            drafter_calls: 0, target_calls: 0, sim_s: 0.0, real_s: 0.0,
-        };
-        let cap = self.gen_cap(prompt.len());
-        let max_total = self.engine.manifest.largest_bucket();
-
-        'outer: while out.tokens.len() < cap {
-            let base_len = ids.len();
-            let g = gamma.min(max_total - base_len - 1);
-            if g == 0 {
-                break;
-            }
-            // ---- draft phase -------------------------------------------
-            let mut drafted: Vec<u32> = Vec::with_capacity(g);
-            let mut draft_probs: Vec<Vec<f32>> = Vec::new();
-            for i in 0..g {
-                let cur = base_len + i;
-                let bucket = self.engine.bucket_for(cur)?;
-                let fwd = self.engine.forward(
-                    self.setup.drafter, self.setup.kernel, &ids[..], bucket)?;
-                out.real_s += fwd.elapsed_s;
-                out.sim_s += self.sim_forward(self.setup.drafter, bucket)?;
-                out.drafter_calls += 1;
-                let tok = fwd.argmax(0, cur - 1);
-                if self.setup.rule == AcceptRule::Stochastic {
-                    draft_probs.push(fwd.probs(0, cur - 1));
-                }
-                drafted.push(tok);
-                ids.push(tok);
-            }
-            // ---- verify phase ------------------------------------------
-            let ver_len = ids.len();
-            let bucket = self.engine.bucket_for(ver_len)?;
-            let fwd = self.engine.forward(
-                self.setup.target, self.setup.kernel, &ids, bucket)?;
-            out.real_s += fwd.elapsed_s;
-            out.sim_s += self.sim_forward(self.setup.target, bucket)?;
-            out.target_calls += 1;
-            out.n_rounds += 1;
-            out.n_drafted += drafted.len();
-
-            // Target decisions for positions base_len .. base_len+g.
-            let target_argmax: Vec<u32> = (0..=g)
-                .map(|i| fwd.argmax(0, base_len - 1 + i))
-                .collect();
-
-            let (n_acc, correction) = match self.setup.rule {
-                AcceptRule::Greedy => {
-                    let k = greedy_accept_len(&drafted, &target_argmax);
-                    (k, target_argmax[k])
-                }
-                AcceptRule::Stochastic => {
-                    let target_probs: Vec<Vec<f32>> = (0..=g)
-                        .map(|i| fwd.probs(0, base_len - 1 + i))
-                        .collect();
-                    let o = stochastic_accept(
-                        &drafted, &draft_probs, &target_probs,
-                        &mut self.rng.borrow_mut());
-                    (o.n_accepted, o.correction)
-                }
-            };
-            out.n_accepted += n_acc;
-
-            // Roll back unaccepted drafts, then append accepted + correction.
-            ids.truncate(base_len);
-            for &t in &drafted[..n_acc] {
-                if t == EOS_ID {
-                    break 'outer;
-                }
-                ids.push(t);
-                out.tokens.push(t);
-                if out.tokens.len() >= cap {
-                    break 'outer;
-                }
-            }
-            if correction == EOS_ID {
-                break;
-            }
-            ids.push(correction);
-            out.tokens.push(correction);
-        }
-        out.tokens.truncate(cap);
-        Ok(out)
+    /// Start a resumable session without driving it (round-level callers).
+    pub fn session(&self, prompt: &[u32], speculative: bool) -> DecodeSession {
+        DecodeSession::new(self.engine, self.lat.clone(), self.setup.clone(), speculative, prompt)
+            .with_rng(self.rng.borrow().clone())
     }
 
-    /// Monolithic speculation (paper Fig. 3): one fused graph per round.
-    /// Simulated time charges a *single* dispatch boundary per round — the
-    /// boundary saving the paper attributes to the monolithic design.
-    fn speculative_monolithic(&self, prompt: &[u32]) -> anyhow::Result<DecodeOutcome> {
-        let gamma = self.setup.gamma.max(1);
-        let mut ids: Vec<u32> = prompt.to_vec();
-        let mut out = DecodeOutcome {
-            tokens: vec![], n_rounds: 0, n_drafted: 0, n_accepted: 0,
-            drafter_calls: 0, target_calls: 0, sim_s: 0.0, real_s: 0.0,
-        };
-        let cap = self.gen_cap(prompt.len());
-        let mono_seq = self
-            .engine
-            .manifest
-            .mono(gamma)
-            .map(|m| m.seq)
-            .unwrap_or_else(|| self.engine.manifest.largest_bucket());
-
-        let oh_d = self.dispatch_overhead(self.setup.mapping.drafter);
-        let oh_t = self.dispatch_overhead(self.setup.mapping.target);
-
-        'outer: while out.tokens.len() < cap && ids.len() + gamma < mono_seq {
-            let base_len = ids.len();
-            let step = self.engine.mono_step(gamma, &ids, base_len)?;
-            out.real_s += step.elapsed_s;
-            // Simulated: γ drafter + 1 target forwards at the mono bucket,
-            // minus the per-call boundaries, plus ONE boundary for the round.
-            let sim_d = self.sim_forward(self.setup.drafter, mono_seq)? - oh_d;
-            let sim_t = self.sim_forward(self.setup.target, mono_seq)? - oh_t;
-            out.sim_s += gamma as f64 * sim_d + sim_t + oh_d.max(oh_t);
-            out.drafter_calls += gamma;
-            out.target_calls += 1;
-            out.n_rounds += 1;
-            out.n_drafted += gamma;
-            let n_acc = step.n_accepted.min(gamma);
-            out.n_accepted += n_acc;
-
-            for &t in &step.drafted[..n_acc] {
-                if t == EOS_ID {
-                    break 'outer;
-                }
-                ids.push(t);
-                out.tokens.push(t);
-                if out.tokens.len() >= cap {
-                    break 'outer;
-                }
-            }
-            let correction = step.out_tokens[n_acc];
-            if correction == EOS_ID {
-                break;
-            }
-            ids.push(correction);
-            out.tokens.push(correction);
+    fn run_to_completion(
+        &self,
+        prompt: &[u32],
+        speculative: bool,
+    ) -> anyhow::Result<DecodeOutcome> {
+        let mut session = self.session(prompt, speculative);
+        while !session.is_done() {
+            session.step(self.engine)?;
         }
-        out.tokens.truncate(cap);
-        Ok(out)
-    }
-
-    fn dispatch_overhead(&self, pu: crate::hetero::PuAssignment) -> f64 {
-        match pu {
-            crate::hetero::PuAssignment::Cpu { .. } => {
-                self.lat.platform.cpu.dispatch_overhead_s
-            }
-            crate::hetero::PuAssignment::Gpu => self.lat.platform.gpu.dispatch_overhead_s,
-        }
+        // Carry the advanced RNG stream back so repeated stochastic decodes
+        // through one Decoder keep their historical stream behavior.
+        *self.rng.borrow_mut() = session.rng_state();
+        Ok(session.into_outcome())
     }
 }

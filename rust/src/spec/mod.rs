@@ -2,13 +2,18 @@
 //!
 //! * [`sampling`] — token-level accept rules: greedy (the paper's setting)
 //!   and the stochastic min(1, p_t/p_d) rule as an extension.
-//! * [`decoder`] — the decode loops: autoregressive baseline, **modular**
-//!   speculation (separate drafter/target executables, control flow in
-//!   Rust — paper Fig. 4) and **monolithic** speculation (one fused
-//!   spec-step HLO per γ — paper Fig. 3).
+//! * [`session`] — the resumable [`DecodeSession`] state machine: one
+//!   speculation round (or one baseline token) per `step`, in both
+//!   compiler abstractions — **modular** (separate drafter/target
+//!   executables, control flow in Rust — paper Fig. 4) and **monolithic**
+//!   (one fused spec-step HLO per γ — paper Fig. 3).
+//! * [`decoder`] — setup/outcome types and the run-to-completion
+//!   [`Decoder`] façade over sessions.
 
 pub mod decoder;
 pub mod sampling;
+pub mod session;
 
 pub use decoder::{DecodeOutcome, Decoder, DecoderSetup};
 pub use sampling::{greedy_accept_len, stochastic_accept, AcceptRule};
+pub use session::{DecodeSession, SessionLimits, StepOutcome};

@@ -1,0 +1,461 @@
+//! Resumable decode sessions: the round-level state machine behind every
+//! decode path in the crate.
+//!
+//! A [`DecodeSession`] owns one request's token state, dual clocks
+//! (simulated i.MX95 / real PJRT wall-clock) and round counters, and
+//! advances one *speculation round* (or one baseline token) per
+//! [`DecodeSession::step`] call. Run-to-completion decoding is a trivial
+//! loop over `step` (see `Decoder::baseline` / `Decoder::speculative`);
+//! the serving coordinator instead interleaves many live sessions
+//! round-by-round and re-consults the routing policy between rounds, so
+//! γ and speculate-on/off can change *within* a request as the session's
+//! running α diverges from the admission-time estimate.
+//!
+//! Clock accounting is identical to the old run-to-completion loops: the
+//! modular path charges one dispatch boundary per forward call (γ+1 per
+//! round), the monolithic path a single boundary per round — the §IV-D
+//! trade-off the paper measures.
+
+use crate::config::ExecMode;
+use crate::hetero::{LatencyModel, PuAssignment};
+use crate::models::VariantKey;
+use crate::runtime::Engine;
+use crate::tokenizer::EOS_ID;
+use crate::util::rng::Rng;
+
+use super::decoder::{DecodeOutcome, DecoderSetup};
+use super::sampling::{greedy_accept_len, stochastic_accept, AcceptRule};
+
+/// Static bounds a session computes once at admission.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SessionLimits {
+    /// Generation cap (tokens) for this prompt length and admission-time γ.
+    pub cap: usize,
+    /// Largest compiled sequence bucket (total-length ceiling).
+    pub max_total: usize,
+}
+
+impl SessionLimits {
+    /// The bucketed-deployment generation cap: leave room for the prompt
+    /// plus one full draft window inside the largest compiled bucket.
+    /// Returns 0 for prompts near the largest bucket (nothing decodable).
+    pub fn compute(max_new: usize, prompt_len: usize, gamma: usize, max_total: usize) -> usize {
+        max_new.min(max_total.saturating_sub(prompt_len + gamma.max(1)))
+    }
+
+    pub fn from_engine(engine: &Engine, setup: &DecoderSetup, prompt_len: usize) -> SessionLimits {
+        let max_total = engine.manifest.largest_bucket();
+        SessionLimits {
+            cap: Self::compute(setup.max_new, prompt_len, setup.gamma, max_total),
+            max_total,
+        }
+    }
+}
+
+/// What one [`DecodeSession::step`] did.
+#[derive(Debug, Clone, Default)]
+pub struct StepOutcome {
+    /// Tokens committed to the output by this step (EOS excluded).
+    pub committed: Vec<u32>,
+    /// Draft window actually run this round — the configured γ clamped at
+    /// the bucket edge (0 = baseline step or no-work completion round) —
+    /// and how much of it the target accepted.
+    pub drafted: usize,
+    pub accepted: usize,
+    /// Clock increments for this step.
+    pub sim_s: f64,
+    pub real_s: f64,
+    /// The session finished (EOS, cap reached, or out of bucket space).
+    pub done: bool,
+}
+
+/// One request's resumable decode state machine.
+///
+/// Construct with [`DecodeSession::new`] (or [`DecodeSession::with_limits`]
+/// when no engine is at hand, e.g. in pure state-transition tests), then
+/// call [`step`](DecodeSession::step) until [`is_done`](DecodeSession::is_done)
+/// and harvest the aggregate [`DecodeOutcome`] via
+/// [`into_outcome`](DecodeSession::into_outcome).
+pub struct DecodeSession {
+    setup: DecoderSetup,
+    lat: LatencyModel,
+    /// Prompt + committed continuation (the model input).
+    ids: Vec<u32>,
+    /// Aggregate outcome accumulated across steps.
+    out: DecodeOutcome,
+    limits: SessionLimits,
+    rng: Rng,
+    /// Whether the *next* round speculates (re-decidable between rounds).
+    speculative: bool,
+    done: bool,
+}
+
+impl DecodeSession {
+    pub fn new(
+        engine: &Engine,
+        lat: LatencyModel,
+        setup: DecoderSetup,
+        speculative: bool,
+        prompt: &[u32],
+    ) -> DecodeSession {
+        let limits = SessionLimits::from_engine(engine, &setup, prompt.len());
+        Self::with_limits(lat, setup, speculative, prompt, limits)
+    }
+
+    /// Engine-free constructor with explicit limits (tests, custom drivers).
+    pub fn with_limits(
+        lat: LatencyModel,
+        setup: DecoderSetup,
+        speculative: bool,
+        prompt: &[u32],
+        limits: SessionLimits,
+    ) -> DecodeSession {
+        DecodeSession {
+            setup,
+            lat,
+            ids: prompt.to_vec(),
+            out: DecodeOutcome::default(),
+            done: limits.cap == 0,
+            limits,
+            rng: Rng::new(0x5EED),
+            speculative,
+        }
+    }
+
+    /// Replace the RNG stream (stochastic accept rule reproducibility).
+    pub fn with_rng(mut self, rng: Rng) -> DecodeSession {
+        self.rng = rng;
+        self
+    }
+
+    /// Snapshot of the current RNG state (to continue a stream elsewhere).
+    pub fn rng_state(&self) -> Rng {
+        self.rng.clone()
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.done
+    }
+
+    /// Current total sequence length (prompt + committed tokens).
+    pub fn seq_len(&self) -> usize {
+        self.ids.len()
+    }
+
+    pub fn limits(&self) -> SessionLimits {
+        self.limits
+    }
+
+    /// Peek at the running aggregate outcome.
+    pub fn outcome(&self) -> &DecodeOutcome {
+        &self.out
+    }
+
+    /// Running per-session acceptance rate (NaN before any draft).
+    pub fn alpha_so_far(&self) -> f64 {
+        self.out.alpha()
+    }
+
+    pub fn n_drafted(&self) -> usize {
+        self.out.n_drafted
+    }
+
+    pub fn n_rounds(&self) -> usize {
+        self.out.n_rounds
+    }
+
+    pub fn speculative(&self) -> bool {
+        self.speculative
+    }
+
+    pub fn gamma(&self) -> usize {
+        self.setup.gamma
+    }
+
+    /// Re-decide speculation for the next round (round-level policy hook).
+    pub fn set_speculative(&mut self, on: bool) {
+        self.speculative = on;
+    }
+
+    /// Re-decide γ for the next round (round-level policy hook). The
+    /// generation cap stays as computed at admission; γ only shapes the
+    /// next draft window.
+    pub fn set_gamma(&mut self, gamma: usize) {
+        self.setup.gamma = gamma.max(1);
+    }
+
+    /// [`set_gamma`](Self::set_gamma) that also respects the compiled
+    /// artifact set: monolithic fused graphs exist only for the γ values
+    /// the AOT build lowered, so clamp the request to the largest compiled
+    /// γ at or below it that still fits the mono bucket at the current
+    /// position. When nothing fits this falls back to the raw request and
+    /// the session ends (or errors loudly) exactly like the
+    /// run-to-completion paths — serving uses this hook, experiments keep
+    /// the strict `set_gamma` so a missing artifact is never papered over.
+    pub fn set_gamma_checked(&mut self, engine: &Engine, gamma: usize) {
+        let gamma = gamma.max(1);
+        if self.setup.exec == ExecMode::Monolithic {
+            if let Some(g) = (1..=gamma).rev().find(|&g| {
+                engine
+                    .manifest
+                    .mono(g)
+                    .map(|m| self.ids.len() + g < m.seq)
+                    .unwrap_or(false)
+            }) {
+                self.setup.gamma = g;
+                return;
+            }
+        }
+        self.setup.gamma = gamma;
+    }
+
+    /// Finish the session and produce the aggregate outcome.
+    pub fn into_outcome(mut self) -> DecodeOutcome {
+        self.out.tokens.truncate(self.limits.cap);
+        self.out
+    }
+
+    /// Advance the session by one unit of work: one speculation round
+    /// (draft γ + verify + commit) or one baseline token. Stepping a
+    /// finished session is a no-op that reports `done`.
+    pub fn step(&mut self, engine: &Engine) -> anyhow::Result<StepOutcome> {
+        if self.done {
+            return Ok(StepOutcome { done: true, ..StepOutcome::default() });
+        }
+        // Delta-track the aggregate counters so per-step reporting can't
+        // drift from the totals.
+        let (tok0, dr0, acc0, sim0, real0) = (
+            self.out.tokens.len(),
+            self.out.n_drafted,
+            self.out.n_accepted,
+            self.out.sim_s,
+            self.out.real_s,
+        );
+        if self.speculative {
+            match self.setup.exec {
+                ExecMode::Modular => self.round_modular(engine)?,
+                ExecMode::Monolithic => self.round_monolithic(engine)?,
+            }
+        } else {
+            self.round_baseline(engine)?;
+        }
+        Ok(StepOutcome {
+            committed: self.out.tokens[tok0..].to_vec(),
+            drafted: self.out.n_drafted - dr0,
+            accepted: self.out.n_accepted - acc0,
+            sim_s: self.out.sim_s - sim0,
+            real_s: self.out.real_s - real0,
+            done: self.done,
+        })
+    }
+
+    /// One plain autoregressive token with the target model.
+    fn round_baseline(&mut self, engine: &Engine) -> anyhow::Result<()> {
+        if self.out.tokens.len() >= self.limits.cap {
+            self.done = true;
+            return Ok(());
+        }
+        let bucket = engine.bucket_for(self.ids.len())?;
+        let fwd = engine.forward(self.setup.target, self.setup.kernel, &self.ids, bucket)?;
+        self.out.real_s += fwd.elapsed_s;
+        self.out.sim_s += self.sim_forward(engine, self.setup.target, bucket)?;
+        self.out.target_calls += 1;
+        let nxt = fwd.argmax(0, self.ids.len() - 1);
+        if nxt == EOS_ID {
+            self.done = true;
+            return Ok(());
+        }
+        self.ids.push(nxt);
+        self.out.tokens.push(nxt);
+        if self.out.tokens.len() >= self.limits.cap {
+            self.done = true;
+        }
+        Ok(())
+    }
+
+    /// Modular speculation round (paper Fig. 4): γ drafter calls + 1 target
+    /// call, control flow here in Rust, one runtime-API boundary per call.
+    fn round_modular(&mut self, engine: &Engine) -> anyhow::Result<()> {
+        if self.out.tokens.len() >= self.limits.cap {
+            self.done = true;
+            return Ok(());
+        }
+        let gamma = self.setup.gamma.max(1);
+        let base_len = self.ids.len();
+        let g = gamma.min(self.limits.max_total.saturating_sub(base_len + 1));
+        if g == 0 {
+            self.done = true;
+            return Ok(());
+        }
+        // ---- draft phase ---------------------------------------------
+        let mut drafted: Vec<u32> = Vec::with_capacity(g);
+        let mut draft_probs: Vec<Vec<f32>> = Vec::new();
+        for i in 0..g {
+            let cur = base_len + i;
+            let bucket = engine.bucket_for(cur)?;
+            let fwd =
+                engine.forward(self.setup.drafter, self.setup.kernel, &self.ids, bucket)?;
+            self.out.real_s += fwd.elapsed_s;
+            self.out.sim_s += self.sim_forward(engine, self.setup.drafter, bucket)?;
+            self.out.drafter_calls += 1;
+            let tok = fwd.argmax(0, cur - 1);
+            if self.setup.rule == AcceptRule::Stochastic {
+                draft_probs.push(fwd.probs(0, cur - 1));
+            }
+            drafted.push(tok);
+            self.ids.push(tok);
+        }
+        // ---- verify phase --------------------------------------------
+        let ver_len = self.ids.len();
+        let bucket = engine.bucket_for(ver_len)?;
+        let fwd = engine.forward(self.setup.target, self.setup.kernel, &self.ids, bucket)?;
+        self.out.real_s += fwd.elapsed_s;
+        self.out.sim_s += self.sim_forward(engine, self.setup.target, bucket)?;
+        self.out.target_calls += 1;
+        self.out.n_rounds += 1;
+        self.out.n_drafted += drafted.len();
+
+        // Target decisions for positions base_len .. base_len+g.
+        let target_argmax: Vec<u32> =
+            (0..=g).map(|i| fwd.argmax(0, base_len - 1 + i)).collect();
+        let (n_acc, correction) = match self.setup.rule {
+            AcceptRule::Greedy => {
+                let k = greedy_accept_len(&drafted, &target_argmax);
+                (k, target_argmax[k])
+            }
+            AcceptRule::Stochastic => {
+                let target_probs: Vec<Vec<f32>> =
+                    (0..=g).map(|i| fwd.probs(0, base_len - 1 + i)).collect();
+                let o = stochastic_accept(&drafted, &draft_probs, &target_probs, &mut self.rng);
+                (o.n_accepted, o.correction)
+            }
+        };
+        self.out.n_accepted += n_acc;
+
+        // Roll back unaccepted drafts, then commit accepted + correction.
+        self.ids.truncate(base_len);
+        self.done = self.commit_round(&drafted[..n_acc], correction);
+        Ok(())
+    }
+
+    /// Monolithic speculation round (paper Fig. 3): one fused graph charged
+    /// a *single* dispatch boundary — the saving the paper attributes to
+    /// the monolithic design.
+    fn round_monolithic(&mut self, engine: &Engine) -> anyhow::Result<()> {
+        let gamma = self.setup.gamma.max(1);
+        let mono_seq = engine
+            .manifest
+            .mono(gamma)
+            .map(|m| m.seq)
+            .unwrap_or(self.limits.max_total);
+        if self.out.tokens.len() >= self.limits.cap || self.ids.len() + gamma >= mono_seq {
+            self.done = true;
+            return Ok(());
+        }
+        let oh_d = self.dispatch_overhead(self.setup.mapping.drafter);
+        let oh_t = self.dispatch_overhead(self.setup.mapping.target);
+
+        let base_len = self.ids.len();
+        let step = engine.mono_step(gamma, &self.ids, base_len)?;
+        self.out.real_s += step.elapsed_s;
+        // Simulated: γ drafter + 1 target forwards at the mono bucket,
+        // minus the per-call boundaries, plus ONE boundary for the round.
+        let sim_d = self.sim_forward(engine, self.setup.drafter, mono_seq)? - oh_d;
+        let sim_t = self.sim_forward(engine, self.setup.target, mono_seq)? - oh_t;
+        self.out.sim_s += gamma as f64 * sim_d + sim_t + oh_d.max(oh_t);
+        self.out.drafter_calls += gamma;
+        self.out.target_calls += 1;
+        self.out.n_rounds += 1;
+        self.out.n_drafted += gamma;
+        let n_acc = step.n_accepted.min(gamma);
+        self.out.n_accepted += n_acc;
+
+        let correction = step.out_tokens[n_acc];
+        self.done = self.commit_round(&step.drafted[..n_acc], correction);
+        Ok(())
+    }
+
+    /// The round-commit state transition, shared by both speculative paths
+    /// (public so the edge-case tests can drive it without an engine):
+    /// append the accepted draft prefix then the correction token, stopping
+    /// at EOS or the generation cap. Marks and returns session completion.
+    pub fn commit_round(&mut self, accepted: &[u32], correction: u32) -> bool {
+        for &t in accepted {
+            if t == EOS_ID {
+                self.done = true;
+                return true;
+            }
+            self.ids.push(t);
+            self.out.tokens.push(t);
+            if self.out.tokens.len() >= self.limits.cap {
+                self.done = true;
+                return true;
+            }
+        }
+        if correction == EOS_ID {
+            self.done = true;
+            return true;
+        }
+        self.ids.push(correction);
+        self.out.tokens.push(correction);
+        if self.out.tokens.len() >= self.limits.cap {
+            self.done = true;
+        }
+        self.done
+    }
+
+    /// Simulated seconds for one forward of `key` on its mapped PU at
+    /// `bucket` (bucketed deployment: padded shapes run at bucket cost).
+    fn sim_forward(
+        &self,
+        engine: &Engine,
+        key: VariantKey,
+        bucket: usize,
+    ) -> anyhow::Result<f64> {
+        let spec = engine.manifest.model_for(key)?;
+        let pu = match key.role {
+            crate::models::Role::Drafter => self.setup.mapping.drafter,
+            crate::models::Role::Target => self.setup.mapping.target,
+        };
+        Ok(self.lat.forward_latency(spec, key.scheme, pu, bucket))
+    }
+
+    fn dispatch_overhead(&self, pu: PuAssignment) -> f64 {
+        match pu {
+            PuAssignment::Cpu { .. } => self.lat.platform.cpu.dispatch_overhead_s,
+            PuAssignment::Gpu => self.lat.platform.gpu.dispatch_overhead_s,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hetero::Platform;
+
+    fn session(cap: usize) -> DecodeSession {
+        let limits = SessionLimits { cap, max_total: 128 };
+        DecodeSession::with_limits(
+            LatencyModel::new(Platform::imx95()),
+            DecoderSetup::paper_default(),
+            true,
+            &[1, 5, 6],
+            limits,
+        )
+    }
+
+    // The commit/cap/EOS edge-case coverage lives in
+    // rust/tests/session_edge.rs (driven through the public surface).
+
+    #[test]
+    fn round_policy_hooks_update_next_round() {
+        let mut s = session(8);
+        assert!(s.speculative());
+        s.set_gamma(7);
+        assert_eq!(s.gamma(), 7);
+        s.set_gamma(0); // clamped: a speculative round drafts at least 1
+        assert_eq!(s.gamma(), 1);
+        s.set_speculative(false);
+        assert!(!s.speculative());
+    }
+}

@@ -268,6 +268,7 @@ fn prop_queue_never_exceeds_capacity() {
                 },
                 enqueued: std::time::Instant::now(),
                 respond: tx,
+                token_tx: None,
             };
             if q.push(item).is_ok() {
                 pushed += 1;

@@ -1,0 +1,211 @@
+//! Decode edge cases the old run-to-completion loops only handled
+//! implicitly, now pinned down against the resumable `DecodeSession`
+//! state machine: EOS landing inside the accepted draft prefix, the
+//! correction token filling `max_new` exactly, and `gen_cap` collapsing
+//! to 0 for prompts near the largest compiled bucket.
+//!
+//! The commit-transition tests are engine-free (they drive the public
+//! `commit_round` / `SessionLimits` surface); the `step`-driven tests run
+//! over the real AOT artifacts and skip when `make artifacts` hasn't run.
+
+use specedge::config::{ExecMode, KernelPath};
+use specedge::hetero::{LatencyModel, Mapping, Platform};
+use specedge::models::VariantKey;
+use specedge::runtime::Engine;
+use specedge::spec::{AcceptRule, DecodeSession, Decoder, DecoderSetup, SessionLimits};
+use specedge::tokenizer::{Tokenizer, EOS_ID, SEP_ID};
+use std::path::Path;
+
+fn setup(gamma: usize, max_new: usize) -> DecoderSetup {
+    DecoderSetup {
+        drafter: VariantKey::parse("drafter_fp").unwrap(),
+        target: VariantKey::parse("target_w8a8").unwrap(),
+        kernel: KernelPath::Pallas,
+        mapping: Mapping::heterogeneous(1),
+        gamma,
+        rule: AcceptRule::Greedy,
+        exec: ExecMode::Modular,
+        max_new,
+    }
+}
+
+fn session_with_cap(cap: usize) -> DecodeSession {
+    DecodeSession::with_limits(
+        LatencyModel::new(Platform::imx95()),
+        setup(5, cap),
+        true,
+        &[1, 9, 9],
+        SessionLimits { cap, max_total: 128 },
+    )
+}
+
+// ---- engine-free commit-transition edges --------------------------------
+
+#[test]
+fn eos_inside_accepted_prefix_ends_session_before_correction() {
+    let mut s = session_with_cap(16);
+    let done = s.commit_round(&[7, 8, EOS_ID, 10], 11);
+    assert!(done && s.is_done());
+    // Tokens before EOS commit; EOS itself, the rest of the prefix and the
+    // correction must all be discarded.
+    assert_eq!(s.into_outcome().tokens, vec![7, 8]);
+}
+
+#[test]
+fn correction_token_lands_exactly_at_max_new() {
+    // cap 4: three accepted drafts leave exactly one slot, which the
+    // correction fills — the session must finish with precisely max_new
+    // tokens, correction included.
+    let mut s = session_with_cap(4);
+    let done = s.commit_round(&[7, 8, 10], 11);
+    assert!(done && s.is_done(), "correction landed exactly on the cap");
+    let out = s.into_outcome();
+    assert_eq!(out.tokens, vec![7, 8, 10, 11]);
+
+    // One round earlier (cap 5) the same commit leaves a slot open.
+    let mut s = session_with_cap(5);
+    assert!(!s.commit_round(&[7, 8, 10], 11));
+    assert!(!s.is_done());
+}
+
+#[test]
+fn accepted_prefix_saturates_cap_and_drops_correction() {
+    let mut s = session_with_cap(2);
+    assert!(s.commit_round(&[7, 8, 10], 11));
+    assert_eq!(s.into_outcome().tokens, vec![7, 8]);
+}
+
+#[test]
+fn gen_cap_zero_for_prompt_near_largest_bucket() {
+    // γ=5 window: anything closer than prompt + γ to the bucket edge
+    // leaves no decodable room.
+    assert_eq!(SessionLimits::compute(64, 123, 5, 128), 0);
+    assert_eq!(SessionLimits::compute(64, 128, 5, 128), 0);
+    assert_eq!(SessionLimits::compute(64, 122, 5, 128), 1);
+    // Baseline counts a 1-token window even with γ=0 admission.
+    assert_eq!(SessionLimits::compute(64, 127, 0, 128), 0);
+    assert_eq!(SessionLimits::compute(64, 126, 0, 128), 1);
+    // A 0-cap session is born finished and yields an empty outcome.
+    let s = session_with_cap(0);
+    assert!(s.is_done());
+    assert!(s.into_outcome().tokens.is_empty());
+}
+
+// ---- step-driven edges over the real artifacts --------------------------
+
+fn engine() -> Option<Engine> {
+    let dir = Path::new("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts/manifest.json missing (run `make artifacts`)");
+        return None;
+    }
+    Some(Engine::load(dir).expect("engine"))
+}
+
+fn test_prompt(engine: &Engine) -> Vec<u32> {
+    let tokenizer = Tokenizer::from_manifest(&engine.manifest.tokenizer_spec).unwrap();
+    let s = engine
+        .manifest
+        .eval_samples
+        .iter()
+        .find(|s| s.task == "translate")
+        .expect("translate sample");
+    let mut ids = tokenizer.encode(&s.prompt, true).unwrap();
+    ids.push(SEP_ID);
+    ids
+}
+
+#[test]
+fn stepping_to_completion_matches_one_shot_decode() {
+    let Some(engine) = engine() else { return };
+    let prompt = test_prompt(&engine);
+    let lat = LatencyModel::new(Platform::imx95());
+    let decoder = Decoder::new(&engine, lat.clone(), setup(3, 24));
+
+    let mut session =
+        DecodeSession::new(&engine, lat, setup(3, 24), true, &prompt);
+    let mut steps = 0usize;
+    let mut streamed: Vec<u32> = Vec::new();
+    let mut sim_sum = 0.0;
+    while !session.is_done() {
+        let s = session.step(&engine).unwrap();
+        streamed.extend(&s.committed);
+        sim_sum += s.sim_s;
+        steps += 1;
+    }
+    let stepped = session.into_outcome();
+    let oneshot = decoder.speculative(&prompt).unwrap();
+
+    assert_eq!(stepped.tokens, oneshot.tokens);
+    assert_eq!(stepped.n_rounds, oneshot.n_rounds);
+    assert_eq!(stepped.n_drafted, oneshot.n_drafted);
+    assert_eq!(stepped.n_accepted, oneshot.n_accepted);
+    assert!((stepped.sim_s - oneshot.sim_s).abs() < 1e-12);
+    // Per-step deltas must tile the aggregate exactly.
+    assert_eq!(streamed, stepped.tokens);
+    assert!((sim_sum - stepped.sim_s).abs() < 1e-9);
+    assert_eq!(steps, stepped.n_rounds);
+}
+
+#[test]
+fn session_respects_exact_max_new_boundary() {
+    let Some(engine) = engine() else { return };
+    let prompt = test_prompt(&engine);
+    let lat = LatencyModel::new(Platform::imx95());
+    for max_new in [1usize, 2, 3, 5] {
+        let mut session =
+            DecodeSession::new(&engine, lat.clone(), setup(4, max_new), true, &prompt);
+        while !session.is_done() {
+            session.step(&engine).unwrap();
+        }
+        let out = session.into_outcome();
+        assert!(
+            out.tokens.len() <= max_new,
+            "max_new={max_new} produced {} tokens",
+            out.tokens.len()
+        );
+    }
+}
+
+#[test]
+fn gamma_change_between_rounds_keeps_greedy_exactness() {
+    let Some(engine) = engine() else { return };
+    let prompt = test_prompt(&engine);
+    let lat = LatencyModel::new(Platform::imx95());
+    let baseline = Decoder::new(&engine, lat.clone(), setup(1, 20))
+        .baseline(&prompt)
+        .unwrap();
+
+    let mut session =
+        DecodeSession::new(&engine, lat, setup(1, 20), true, &prompt);
+    let gammas = [1usize, 5, 2, 4, 3];
+    let mut round = 0usize;
+    while !session.is_done() {
+        session.set_gamma(gammas[round % gammas.len()]);
+        session.step(&engine).unwrap();
+        round += 1;
+    }
+    let out = session.into_outcome();
+    // Greedy speculative decoding is exact whatever γ schedule ran.
+    let n = out.tokens.len().min(baseline.tokens.len());
+    assert!(n > 0);
+    assert_eq!(out.tokens[..n], baseline.tokens[..n]);
+}
+
+#[test]
+fn stepping_a_finished_session_is_a_noop() {
+    let Some(engine) = engine() else { return };
+    let prompt = test_prompt(&engine);
+    let lat = LatencyModel::new(Platform::imx95());
+    let mut session =
+        DecodeSession::new(&engine, lat, setup(3, 4), true, &prompt);
+    while !session.is_done() {
+        session.step(&engine).unwrap();
+    }
+    let before = session.outcome().clone();
+    let s = session.step(&engine).unwrap();
+    assert!(s.done && s.committed.is_empty() && s.sim_s == 0.0);
+    let after = session.outcome();
+    assert_eq!(before.tokens, after.tokens);
+    assert_eq!(before.target_calls, after.target_calls);
+}
