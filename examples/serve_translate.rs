@@ -115,14 +115,15 @@ fn main() -> anyhow::Result<()> {
 }
 
 fn base_cfg(max_inflight: usize) -> RunConfig {
-    let mut c = RunConfig::default();
-    c.artifacts_dir = PathBuf::from("artifacts");
-    c.design_variant = 1;
-    c.heterogeneous = true;
-    c.max_new_tokens = 64;
-    c.workers = 1;
-    c.max_inflight = max_inflight;
-    c
+    RunConfig {
+        artifacts_dir: PathBuf::from("artifacts"),
+        design_variant: 1,
+        heterogeneous: true,
+        max_new_tokens: 64,
+        workers: 1,
+        max_inflight,
+        ..RunConfig::default()
+    }
 }
 
 fn run_one(

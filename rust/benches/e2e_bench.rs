@@ -34,11 +34,13 @@ fn main() {
     let mut b = Bench::with_opts("e2e_serving", opts);
 
     for (name, speculative) in [("baseline", false), ("speculative_g5", true)] {
-        let mut cfg = RunConfig::default();
-        cfg.artifacts_dir = PathBuf::from("artifacts");
-        cfg.speculative = speculative;
-        cfg.gamma = if speculative { Some(5) } else { None };
-        cfg.max_new_tokens = 32;
+        let cfg = RunConfig {
+            artifacts_dir: PathBuf::from("artifacts"),
+            speculative,
+            gamma: if speculative { Some(5) } else { None },
+            max_new_tokens: 32,
+            ..RunConfig::default()
+        };
         let coord = Coordinator::start(cfg, Platform::imx95()).unwrap();
         coord.submit_blocking(request(0)).unwrap(); // warm compiles
         let mut id = 1;

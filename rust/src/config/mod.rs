@@ -112,6 +112,13 @@ pub struct RunConfig {
     /// Live decode sessions each worker interleaves round-by-round
     /// (continuous scheduling; 1 = run-to-completion serving).
     pub max_inflight: usize,
+    /// Cross-session fused execution: co-scheduled sessions needing the
+    /// same (variant, kernel, bucket) forward share one batched dispatch
+    /// when a batched artifact exists. `false` reverts to the pre-fusion
+    /// behavior for A/B comparisons: per-session engine calls on the
+    /// scheduler path, and the legacy lockstep batcher for the
+    /// `max_batch > 1` baseline configuration.
+    pub fuse: bool,
     /// RNG seed (workload, stochastic sampling).
     pub seed: u64,
 }
@@ -134,6 +141,7 @@ impl Default for RunConfig {
             queue_capacity: 256,
             max_batch: 1,
             max_inflight: 4,
+            fuse: true,
             seed: 0xC0FFEE,
         }
     }
@@ -196,6 +204,9 @@ impl RunConfig {
         if let Some(v) = j.get("max_inflight").and_then(Json::as_usize) {
             self.max_inflight = v;
         }
+        if let Some(v) = j.get("fuse").and_then(Json::as_bool) {
+            self.fuse = v;
+        }
         if let Some(v) = j.get("seed").and_then(Json::as_f64) {
             self.seed = v as u64;
         }
@@ -236,7 +247,7 @@ mod tests {
         let j = Json::parse(
             r#"{"exec_mode":"monolithic","gamma":3,"design_variant":2,
                 "timing":"real","speculative":false,"max_batch":4,
-                "max_inflight":8}"#,
+                "max_inflight":8,"fuse":false}"#,
         )
         .unwrap();
         c.apply_json(&j).unwrap();
@@ -247,6 +258,12 @@ mod tests {
         assert!(!c.speculative);
         assert_eq!(c.max_batch, 4);
         assert_eq!(c.max_inflight, 8);
+        assert!(!c.fuse);
+    }
+
+    #[test]
+    fn fuse_defaults_on() {
+        assert!(RunConfig::default().fuse);
     }
 
     #[test]

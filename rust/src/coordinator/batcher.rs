@@ -1,4 +1,5 @@
-//! Dynamic batching for non-speculative (baseline) decode.
+//! Lockstep batched decode for non-speculative (baseline) requests — the
+//! *static*-batching reference implementation.
 //!
 //! Without a KV cache, batching is lockstep full-sequence re-encoding:
 //! requests grouped into one `forward_batch` call advance one token each
@@ -7,8 +8,19 @@
 //! measured and reported, which is exactly why speculative decoding is the
 //! more interesting single-stream path on edge).
 //!
-//! Speculative requests are never batched (the paper is single-stream; the
-//! divergent accept lengths would force per-item recompute anyway).
+//! The default serving path no longer uses this module: baseline
+//! batching is folded onto the coordinator's fused executor
+//! ([`crate::coordinator::fuser`]), which recovers the same shared
+//! dispatches *without* the lockstep tail (sessions retire at their own
+//! EOS). This stays as the measured static-batching baseline, served
+//! when the `fuse: false` A/B knob is set.
+//!
+//! **Amortization rule.** Artifacts exist only for the manifest's compiled
+//! batch sizes, so `b` real requests execute as `exec_b ≥ b` padded lanes.
+//! The *executed* cost (the full `exec_b`-lane dispatch, real wall-clock
+//! and simulated alike) is split evenly across the `b` real requests:
+//! filler lanes are pure padding overhead and their cost must land on
+//! someone, or total charged time would undercount total spent time.
 
 use crate::config::KernelPath;
 use crate::models::VariantKey;
@@ -21,15 +33,18 @@ pub struct BatchItemOutcome {
     pub tokens: Vec<u32>,
     pub target_calls: usize,
     pub real_s: f64,
-    /// Simulated seconds attributed to this item (batch cost / batch size —
-    /// the standard per-request amortization).
+    /// Simulated seconds attributed to this item: executed `exec_b`-lane
+    /// dispatch cost / `b` real requests (see the module-level
+    /// amortization rule).
     pub sim_s: f64,
 }
 
 /// Lockstep batched greedy decode of up to `prompts.len()` requests.
 ///
-/// `sim_forward(bucket, batch)` supplies the simulated cost of one batched
-/// forward (the latency model scales with batch externally).
+/// `sim_forward(bucket, exec_b)` supplies the simulated cost of one
+/// batched forward over the **executed** lane count `exec_b` (the compiled
+/// batch size actually dispatched, padding included) — typically
+/// [`crate::hetero::LatencyModel::batched_forward_latency`].
 pub fn batched_baseline(
     engine: &Engine,
     target: VariantKey,
@@ -73,7 +88,10 @@ pub fn batched_baseline(
         let bucket = engine.bucket_for(longest)?;
         let views: Vec<&[u32]> = seqs.iter().map(|s| s.as_slice()).collect();
         let fwd = engine.forward_batch(target, kernel, &views, bucket)?;
-        let sim = sim_forward(bucket, b);
+        // Charge what actually ran: the exec_b-lane dispatch, split over
+        // the b real requests (module-level amortization rule). The old
+        // code priced the dispatch at b lanes while executing exec_b.
+        let sim = sim_forward(bucket, exec_b);
         // Filler lanes (i >= b) track lane 0 but produce no outcome.
         for i in b..exec_b {
             if !done[0] {

@@ -4,16 +4,24 @@
 //! * [`policy`] — adaptive routing policy: per-task α estimates feed the
 //!   cost model, which picks speculation on/off and γ* — at admission
 //!   *and again between every speculation round* of a live session
-//! * [`batcher`] — groups compatible requests for batched baseline decode
+//! * [`fuser`] — the cross-session fused batch executor: every scheduler
+//!   tick collects all live sessions' pending
+//!   [`EngineRequest`](crate::spec::EngineRequest)s, dispatches each
+//!   (variant, kernel, bucket) group as one `Engine::forward_batch` call
+//!   and scatters the logits rows back through the sessions' `apply`
+//! * [`batcher`] — the legacy lockstep static-batching reference (the
+//!   serving path now batches through [`fuser`] instead)
 //! * [`worker`] — engine worker threads (one PJRT engine each), each
-//!   running a round-robin scheduler over up to `max_inflight` resumable
+//!   running a tick-level scheduler over up to `max_inflight` resumable
 //!   [`DecodeSession`](crate::spec::DecodeSession)s
 //!
 //! Flow: client → [`Coordinator::submit`] / [`Coordinator::submit_streaming`]
-//! → queue → worker (policy → session rounds) → token frames + final
-//! response; metrics are recorded centrally per round and per request.
+//! → queue → worker (policy → fused session ticks) → token frames + final
+//! response; metrics are recorded centrally per round, per dispatch and
+//! per request.
 
 pub mod batcher;
+pub mod fuser;
 pub mod policy;
 pub mod queue;
 pub mod worker;

@@ -230,8 +230,7 @@ mod tests {
 
     #[test]
     fn fixed_gamma_respected() {
-        let mut cfg = RunConfig::default();
-        cfg.gamma = Some(2);
+        let cfg = RunConfig { gamma: Some(2), ..RunConfig::default() };
         let p = policy(&cfg);
         let (d, t) = specs();
         let dec = p.route("translate", &d, &t, 63);
@@ -244,8 +243,7 @@ mod tests {
 
     #[test]
     fn speculation_disabled_routes_baseline() {
-        let mut cfg = RunConfig::default();
-        cfg.speculative = false;
+        let cfg = RunConfig { speculative: false, ..RunConfig::default() };
         let p = policy(&cfg);
         let (d, t) = specs();
         let dec = p.route("translate", &d, &t, 63);
@@ -273,8 +271,7 @@ mod tests {
 
     #[test]
     fn route_round_respects_global_off_switch() {
-        let mut cfg = RunConfig::default();
-        cfg.speculative = false;
+        let cfg = RunConfig { speculative: false, ..RunConfig::default() };
         let p = policy(&cfg);
         let (d, t) = specs();
         let dec = p.route_round("translate", &d, &t, 63, 10, 1.0);

@@ -1,34 +1,44 @@
 //! Engine worker: owns one PJRT engine (the xla wrapper types are not
 //! `Send`, so the engine lives and dies inside this thread) and runs a
-//! round-level continuous scheduler over the shared queue until shutdown.
+//! tick-level continuous scheduler over the shared queue until shutdown.
 //!
-//! Instead of occupying the thread with one request until completion, the
-//! worker keeps up to `cfg.max_inflight` live [`DecodeSession`]s and steps
-//! each one speculation round at a time, round-robin:
+//! The worker keeps up to `cfg.max_inflight` live [`DecodeSession`]s and
+//! advances all of them together through the fused batch executor
+//! ([`super::fuser`]), one engine call per session per tick:
 //!
 //! 1. **admit** — top the in-flight set up from the queue (blocking only
 //!    when nothing is live);
-//! 2. **consult** — re-run the routing [`Policy`] for every live session,
-//!    so γ and speculate-on/off are re-decided per round from the
-//!    session's running α (the cost model in the hot loop);
-//! 3. **step** — advance each session one round, stream newly committed
-//!    tokens to the request's `token_tx`, record per-round metrics;
-//! 4. **retire** — finished sessions emit their final [`EngineResponse`].
+//! 2. **consult** — re-run the routing [`Policy`] for every live session
+//!    *at a round boundary*, so γ and speculate-on/off are re-decided per
+//!    round from the session's running α (the cost model in the hot loop);
+//! 3. **tick** — every live session plans its next forward; the fuser
+//!    groups compatible requests into shared batched dispatches and
+//!    scatters the logits back (`cfg.fuse = false` reverts to per-session
+//!    stepping for A/B comparisons);
+//! 4. **retire** — sessions whose round completed stream their newly
+//!    committed tokens; finished sessions emit the final
+//!    [`EngineResponse`].
 //!
-//! The legacy lockstep batcher still handles the `max_batch > 1` baseline
-//! configuration (it decodes whole batches, so it bypasses the scheduler).
+//! The lockstep batcher configuration (`max_batch > 1`, baseline decode)
+//! is folded onto the same executor: those workers admit up to
+//! `max_batch` sessions on the ref lowering (the only kernel with batched
+//! artifacts), whose per-tick target forwards fuse into shared dispatches
+//! — recovering batched baseline decode without the lockstep drain tail.
+//! With `fuse: false` that configuration instead runs the legacy lockstep
+//! [`batcher`](super::batcher) loop, the true pre-fusion A/B baseline.
 
-use crate::config::RunConfig;
+use crate::config::{KernelPath, RunConfig};
 use crate::hetero::{LatencyModel, Platform};
 use crate::metrics::{Metrics, RequestRecord, RoundRecord};
 use crate::models::ModelSpec;
 use crate::runtime::Engine;
-use crate::spec::{AcceptRule, DecodeSession, DecoderSetup};
+use crate::spec::{AcceptRule, DecodeSession, DecoderSetup, StepOutcome};
 use crate::tokenizer::Tokenizer;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc};
 
 use super::batcher;
+use super::fuser::{self, TickEvent};
 use super::policy::Policy;
 use super::queue::{QueueItem, RequestQueue};
 use super::{EngineResponse, TokenFrame};
@@ -76,9 +86,23 @@ pub fn run_worker(
         Err(_) => Tokenizer::builtin(),
     };
     let (drafter, target) = policy.variants();
-    // Warm the executable cache so first requests don't pay compile time.
+    // Batched-baseline configs decode on the ref lowering — the only
+    // kernel path the AOT build lowers batch > 1 artifacts for (see
+    // aot.py) — so their per-tick forwards can actually fuse.
+    let serving_kernel = if cfg.max_batch > 1 && !cfg.speculative {
+        KernelPath::Ref
+    } else {
+        cfg.kernel_path
+    };
+    // Warm the executable cache (batch-1 plus any batched artifacts) so
+    // first requests don't pay compile time. Dual-kernel configs (the
+    // lockstep baseline decodes batches on ref but serves lone requests
+    // on the configured kernel) warm both.
     let buckets: Vec<usize> = engine.manifest.seq_buckets.clone();
-    let _ = engine.warmup(&[drafter, target], cfg.kernel_path, &buckets);
+    let _ = engine.warmup(&[drafter, target], serving_kernel, &buckets);
+    if !cfg.fuse && serving_kernel != cfg.kernel_path {
+        let _ = engine.warmup(&[drafter, target], cfg.kernel_path, &buckets);
+    }
 
     let lat = LatencyModel::new(platform);
     let (d_spec, t_spec) = match (
@@ -95,36 +119,46 @@ pub fn run_worker(
         }
     };
 
-    // The lockstep batcher owns the baseline-batching configuration; lone
-    // requests under low traffic still decode on the session path (the
-    // Pallas batch-1 artifacts), exactly as before batching kicked in.
-    if cfg.max_batch > 1 && !cfg.speculative {
+    // With fusion off, the batched-baseline configuration keeps the
+    // legacy lockstep batcher — the true pre-fusion A/B baseline (whole
+    // batches decode in lockstep, drained before the next admit).
+    if !cfg.fuse && cfg.max_batch > 1 && !cfg.speculative {
         while !shutdown.load(Ordering::SeqCst) {
             let batch = queue.pop_batch(cfg.max_batch);
             if batch.is_empty() {
                 break; // queue closed
             }
             if batch.len() == 1 {
+                // Lone request under low traffic: the session path on the
+                // configured kernel (batch-1 artifacts), with the normal
+                // streaming/metrics behavior — exactly as before batching
+                // kicks in.
                 let item = batch.into_iter().next().unwrap();
                 let ls = admit(&cfg, &engine, &lat, &policy, &d_spec, &t_spec,
-                               item, drafter, target);
+                               item, drafter, target, cfg.kernel_path);
                 serve_single(&engine, &policy, &metrics, &tokenizer,
                              &d_spec, &t_spec, ls);
             } else {
-                serve_batch(&cfg, &engine, &lat, &tokenizer, &metrics, batch, target);
+                serve_lockstep(&cfg, &engine, &lat, &tokenizer, &metrics, batch, target);
             }
         }
         return;
     }
 
-    let max_inflight = cfg.max_inflight.max(1);
+    // The fused lockstep-batching configuration rides the tick scheduler:
+    // admit enough baseline sessions that their per-tick target forwards
+    // fill the compiled batch sizes.
+    let max_inflight = cfg
+        .max_inflight
+        .max(if cfg.speculative { 1 } else { cfg.max_batch })
+        .max(1);
     let mut live: Vec<LiveSession> = Vec::new();
     let mut queue_open = true;
 
     loop {
         // ---- admit: top up the in-flight set -------------------------
         // On shutdown, stop admitting but finish the (bounded) in-flight
-        // set — the old loop's "complete the current request" semantics.
+        // set — "complete the current requests" semantics.
         while queue_open && !shutdown.load(Ordering::SeqCst) && live.len() < max_inflight {
             let item = if live.is_empty() {
                 // Nothing to step: block until work arrives or close.
@@ -142,7 +176,7 @@ pub fn run_worker(
                 }
             };
             live.push(admit(&cfg, &engine, &lat, &policy, &d_spec, &t_spec,
-                            item, drafter, target));
+                            item, drafter, target, serving_kernel));
         }
         if live.is_empty() {
             if !queue_open || shutdown.load(Ordering::SeqCst) {
@@ -151,77 +185,86 @@ pub fn run_worker(
             continue;
         }
 
-        // ---- consult + step every live session one round -------------
+        // ---- consult: round-level policy at round boundaries ----------
+        for ls in live.iter_mut() {
+            if ls.session.mid_round() || ls.session.is_done() {
+                continue;
+            }
+            let dec = policy.route_round(
+                &ls.task, &d_spec, &t_spec, ls.session.seq_len(),
+                ls.session.n_drafted(), ls.session.alpha_so_far(),
+            );
+            ls.session.set_speculative(dec.speculative);
+            if dec.speculative {
+                // Artifact-aware: monolithic fused graphs only exist for
+                // the γs the AOT build lowered, so the serving path clamps.
+                ls.session.set_gamma_checked(&engine, dec.gamma);
+            }
+        }
+
+        // ---- tick: advance every session one engine call --------------
         let inflight_now = live.len();
-        let mut i = 0;
-        while i < live.len() {
-            match step_session(&engine, &policy, &metrics, &d_spec, &t_spec,
-                               &mut live[i], inflight_now) {
-                None => {
+        let events = if cfg.fuse {
+            let mut refs: Vec<&mut DecodeSession> =
+                live.iter_mut().map(|ls| &mut ls.session).collect();
+            let (events, stats) = fuser::tick(&engine, &lat, &mut refs);
+            metrics.record_dispatches(
+                stats.dispatches as u64,
+                stats.fused_dispatches as u64,
+                stats.lanes_real as u64,
+                stats.lanes_executed as u64,
+            );
+            events
+        } else {
+            // Unfused A/B path: one full round per session per tick, each
+            // engine call its own dispatch.
+            let mut events = Vec::with_capacity(live.len());
+            let mut calls = 0u64;
+            for ls in live.iter_mut() {
+                let before = engine.n_forward_calls.get();
+                events.push(match ls.session.step(&engine) {
+                    Ok(out) => TickEvent::Round(out),
+                    Err(_) => TickEvent::Failed,
+                });
+                calls += engine.n_forward_calls.get() - before;
+            }
+            metrics.record_dispatches(calls, 0, calls, calls);
+            events
+        };
+
+        // ---- retire: stream, record, answer ---------------------------
+        // Walk backwards so removals keep earlier indices valid.
+        debug_assert_eq!(events.len(), live.len());
+        let mut idx = live.len();
+        for ev in events.into_iter().rev() {
+            idx -= 1;
+            match ev {
+                TickEvent::Pending => {}
+                TickEvent::Failed => {
                     // Dropping the sender(s) signals the error to the caller.
-                    live.remove(i);
+                    live.remove(idx);
                 }
-                Some(true) => {
-                    let ls = live.remove(i);
-                    retire(&tokenizer, &metrics, &policy, ls);
+                TickEvent::Round(out) => {
+                    let done =
+                        finish_round(&metrics, &mut live[idx], out, inflight_now);
+                    if done {
+                        let ls = live.remove(idx);
+                        retire(&tokenizer, &metrics, &policy, ls);
+                    }
                 }
-                Some(false) => i += 1,
             }
         }
     }
 }
 
-/// Drive one admitted session to completion — the scheduler path
-/// specialized to a single in-flight session (used by the batched config
-/// for lone requests, so low traffic keeps the normal kernel/streaming/
-/// metrics behavior).
-fn serve_single(
-    engine: &Engine,
-    policy: &Policy,
+/// Account one completed round: per-round metrics and streamed tokens.
+/// Returns whether the session finished.
+fn finish_round(
     metrics: &Metrics,
-    tokenizer: &Tokenizer,
-    d_spec: &ModelSpec,
-    t_spec: &ModelSpec,
-    mut ls: LiveSession,
-) {
-    loop {
-        match step_session(engine, policy, metrics, d_spec, t_spec, &mut ls, 1) {
-            None => break, // dropped senders signal the error
-            Some(true) => {
-                retire(tokenizer, metrics, policy, ls);
-                break;
-            }
-            Some(false) => {}
-        }
-    }
-}
-
-/// Consult the policy, advance one round, record it, and stream any newly
-/// committed tokens. Returns `Some(done)`, or `None` when the step failed
-/// and the session should be dropped.
-fn step_session(
-    engine: &Engine,
-    policy: &Policy,
-    metrics: &Metrics,
-    d_spec: &ModelSpec,
-    t_spec: &ModelSpec,
     ls: &mut LiveSession,
+    step: StepOutcome,
     inflight_now: usize,
-) -> Option<bool> {
-    // Round-level policy: γ and speculate-on/off re-decided from the
-    // session's running α before every round.
-    let dec = policy.route_round(
-        &ls.task, d_spec, t_spec, ls.session.seq_len(),
-        ls.session.n_drafted(), ls.session.alpha_so_far(),
-    );
-    ls.session.set_speculative(dec.speculative);
-    if dec.speculative {
-        // Artifact-aware: monolithic fused graphs only exist for the γs
-        // the AOT build lowered, so the serving path clamps.
-        ls.session.set_gamma_checked(engine, dec.gamma);
-    }
-
-    let step = ls.session.step(engine).ok()?;
+) -> bool {
     ls.rounds += 1;
     // Bookkeeping steps that only discovered completion (born-finished
     // cap==0 sessions, bucket-edge termination) ran no engine work and
@@ -248,7 +291,7 @@ fn step_session(
             });
         }
     }
-    Some(step.done)
+    step.done
 }
 
 /// Route one queue item and wrap it into a live session.
@@ -263,6 +306,7 @@ fn admit(
     item: QueueItem,
     drafter: crate::models::VariantKey,
     target: crate::models::VariantKey,
+    kernel: KernelPath,
 ) -> LiveSession {
     let queue_s = item.enqueued.elapsed().as_secs_f64();
     let req = item.request;
@@ -270,7 +314,7 @@ fn admit(
     let setup = DecoderSetup {
         drafter,
         target,
-        kernel: cfg.kernel_path,
+        kernel,
         mapping: decision.mapping,
         gamma: decision.gamma.max(1),
         rule: AcceptRule::Greedy,
@@ -292,35 +336,45 @@ fn admit(
     }
 }
 
-/// Account for and answer one finished session.
-fn retire(tokenizer: &Tokenizer, metrics: &Metrics, policy: &Policy, ls: LiveSession) {
-    let outcome = ls.session.into_outcome();
-    policy.observe_alpha(&ls.task, outcome.alpha());
-    metrics.record(RequestRecord {
-        sim_s: outcome.sim_s,
-        real_s: outcome.real_s,
-        queue_s: ls.queue_s,
-        tokens: outcome.tokens.len(),
-        drafted: outcome.n_drafted,
-        accepted: outcome.n_accepted,
-    });
-    let completion = tokenizer.decode(&outcome.tokens);
-    let alpha = outcome.alpha();
-    let _ = ls.respond.send(EngineResponse {
-        id: ls.id,
-        completion,
-        tokens: outcome.tokens,
-        sim_s: outcome.sim_s,
-        real_s: outcome.real_s,
-        queue_s: ls.queue_s,
-        alpha,
-        speculative: ls.admitted_speculative,
-        gamma: ls.admitted_gamma,
-        rounds: ls.rounds,
-    });
+/// Drive one admitted session to completion — the scheduler path
+/// specialized to a single in-flight session (the lockstep configuration
+/// uses it for lone requests, so low traffic keeps the normal
+/// kernel/streaming/metrics behavior).
+fn serve_single(
+    engine: &Engine,
+    policy: &Policy,
+    metrics: &Metrics,
+    tokenizer: &Tokenizer,
+    d_spec: &ModelSpec,
+    t_spec: &ModelSpec,
+    mut ls: LiveSession,
+) {
+    loop {
+        // Round-level policy, as in the tick scheduler.
+        let dec = policy.route_round(
+            &ls.task, d_spec, t_spec, ls.session.seq_len(),
+            ls.session.n_drafted(), ls.session.alpha_so_far(),
+        );
+        ls.session.set_speculative(dec.speculative);
+        if dec.speculative {
+            ls.session.set_gamma_checked(engine, dec.gamma);
+        }
+        match ls.session.step(engine) {
+            Err(_) => return, // dropped senders signal the error
+            Ok(out) => {
+                if finish_round(metrics, &mut ls, out, 1) {
+                    retire(tokenizer, metrics, policy, ls);
+                    return;
+                }
+            }
+        }
+    }
 }
 
-fn serve_batch(
+/// Legacy lockstep batched-baseline decode (`fuse: false` A/B path):
+/// whole batches advance one token per shared `forward_batch` call and
+/// drain together before the next batch is admitted.
+fn serve_lockstep(
     cfg: &RunConfig,
     engine: &Engine,
     lat: &LatencyModel,
@@ -341,21 +395,14 @@ fn serve_batch(
     let prompts: Vec<Vec<u32>> = batch.iter().map(|i| i.request.prompt.clone()).collect();
     let lat = lat.clone();
     let t_scheme = target.scheme;
-    let sim_forward = move |bucket: usize, b: usize| {
-        // Batched forward ~ b× the single-sequence FLOPs on the same PU
-        // (no batching win on a saturated edge CPU), one dispatch boundary.
-        let single = lat.forward_latency(&t_spec, t_scheme, mapping.target, bucket);
-        let oh = match mapping.target {
-            crate::hetero::PuAssignment::Cpu { .. } => lat.platform.cpu.dispatch_overhead_s,
-            crate::hetero::PuAssignment::Gpu => lat.platform.gpu.dispatch_overhead_s,
-        };
-        (single - oh) * b as f64 + oh
+    // Simulated cost of one batched forward at the *executed* lane count
+    // (the batcher's amortization rule splits it over the real requests).
+    let sim_forward = move |bucket: usize, exec_b: usize| {
+        lat.batched_forward_latency(&t_spec, t_scheme, mapping.target, bucket, exec_b)
     };
-    // Batched artifacts exist only for the ref lowering (the Pallas path is
-    // the batch-1 latency path; see aot.py) — batch decode always uses Ref.
+    // Batched artifacts exist only for the ref lowering (see aot.py).
     let outcomes = match batcher::batched_baseline(
-        engine, target, crate::config::KernelPath::Ref, &prompts,
-        cfg.max_new_tokens, &sim_forward,
+        engine, target, KernelPath::Ref, &prompts, cfg.max_new_tokens, &sim_forward,
     ) {
         Ok(o) => o,
         Err(_) => return,
@@ -395,4 +442,32 @@ fn serve_batch(
             rounds: 0,
         });
     }
+}
+
+/// Account for and answer one finished session.
+fn retire(tokenizer: &Tokenizer, metrics: &Metrics, policy: &Policy, ls: LiveSession) {
+    let outcome = ls.session.into_outcome();
+    policy.observe_alpha(&ls.task, outcome.alpha());
+    metrics.record(RequestRecord {
+        sim_s: outcome.sim_s,
+        real_s: outcome.real_s,
+        queue_s: ls.queue_s,
+        tokens: outcome.tokens.len(),
+        drafted: outcome.n_drafted,
+        accepted: outcome.n_accepted,
+    });
+    let completion = tokenizer.decode(&outcome.tokens);
+    let alpha = outcome.alpha();
+    let _ = ls.respond.send(EngineResponse {
+        id: ls.id,
+        completion,
+        tokens: outcome.tokens,
+        sim_s: outcome.sim_s,
+        real_s: outcome.real_s,
+        queue_s: ls.queue_s,
+        alpha,
+        speculative: ls.admitted_speculative,
+        gamma: ls.admitted_gamma,
+        rounds: ls.rounds,
+    });
 }

@@ -13,6 +13,16 @@
 //! Feasibility: any speedup > 1 requires `c < α` (paper §II-B). The DSE
 //! layer evaluates this model at each candidate mapping's measured (α, c)
 //! and picks the (mapping, γ*) with the highest predicted S.
+//!
+//! **Batched dispatches.** Eq. (1) prices a *single-stream* round: γ+1
+//! dispatch boundaries (modular) or one (monolithic). Under the serving
+//! fuser, co-scheduled sessions share batched forwards, priced by
+//! [`crate::hetero::LatencyModel::batched_forward_latency`]: a `b`-lane
+//! dispatch costs `b ×` the single-lane compute plus **one** boundary,
+//! split across the sharing sessions — so per-session dispatch overhead
+//! shrinks toward `1/b` of the single-stream figure while compute time is
+//! unchanged. The per-stream speedup model above is unaffected; only the
+//! overhead term the simulated clock accrues per call changes.
 
 /// Maximum draft length the search considers (the paper sweeps 0..=5; we
 /// allow a little headroom for the extension experiments).

@@ -3,6 +3,14 @@
 //!
 //! This is the quantity the profiler measures (Fig. 6 cost coefficients are
 //! ratios of these) and the virtual clock accrues during engine execution.
+//!
+//! **Batched dispatches** (the fused executor and the lockstep batcher)
+//! are charged [`LatencyModel::batched_forward_latency`]: `b` lanes cost
+//! `b ×` the single-lane compute (no batching win on a saturated edge PU —
+//! the GEMMs already occupy the whole cluster at batch 1) but only **one**
+//! runtime-API dispatch boundary, which is exactly the per-call overhead
+//! fusion amortizes. The total is split evenly across the *real* requests
+//! sharing the dispatch, so no simulated time vanishes into padding lanes.
 
 use crate::models::{ModelSpec, Scheme};
 use crate::util::json::Json;
@@ -59,6 +67,30 @@ impl LatencyModel {
                 flops * penalty / (g.peak_gflops * 1e9) + g.dispatch_overhead_s
             }
         }
+    }
+
+    /// Per-call runtime-API dispatch boundary for a PU assignment.
+    pub fn dispatch_overhead(&self, pu: PuAssignment) -> f64 {
+        match pu {
+            PuAssignment::Cpu { .. } => self.platform.cpu.dispatch_overhead_s,
+            PuAssignment::Gpu => self.platform.gpu.dispatch_overhead_s,
+        }
+    }
+
+    /// One *batched* forward over `batch` padded lanes at `seq_len`:
+    /// `batch ×` the single-lane FLOPs, one dispatch boundary for the
+    /// whole call. `batch = 1` degenerates to [`Self::forward_latency`].
+    pub fn batched_forward_latency(
+        &self,
+        spec: &ModelSpec,
+        scheme: Scheme,
+        pu: PuAssignment,
+        seq_len: usize,
+        batch: usize,
+    ) -> f64 {
+        let single = self.forward_latency(spec, scheme, pu, seq_len);
+        let oh = self.dispatch_overhead(pu);
+        (single - oh) * batch.max(1) as f64 + oh
     }
 
     /// Cost coefficient c = t_draft / t_target for a mapping at seq_len
@@ -174,6 +206,29 @@ mod tests {
             let l = m.forward_latency(&t, Scheme::Fp, PuAssignment::Cpu { cores: 2 }, s);
             assert!(l > prev);
             prev = l;
+        }
+    }
+
+    #[test]
+    fn batched_latency_amortizes_one_dispatch_boundary() {
+        let (t, _) = specs();
+        let m = model();
+        for pu in [PuAssignment::Cpu { cores: 2 }, PuAssignment::Gpu] {
+            let single = m.forward_latency(&t, Scheme::Fp, pu, 63);
+            let oh = m.dispatch_overhead(pu);
+            // batch = 1 degenerates exactly to the single-call model.
+            let b1 = m.batched_forward_latency(&t, Scheme::Fp, pu, 63, 1);
+            assert!((b1 - single).abs() < 1e-15, "{b1} vs {single}");
+            for b in [2usize, 4, 8] {
+                let tb = m.batched_forward_latency(&t, Scheme::Fp, pu, 63, b);
+                let expect = (single - oh) * b as f64 + oh;
+                assert!((tb - expect).abs() < 1e-15);
+                // The whole point of fusing: b lanes in one dispatch are
+                // cheaper than b separate dispatches ...
+                assert!(tb < single * b as f64);
+                // ... by exactly the b-1 saved boundaries.
+                assert!((single * b as f64 - tb - (b - 1) as f64 * oh).abs() < 1e-12);
+            }
         }
     }
 

@@ -159,6 +159,9 @@ impl Platform {
             if let Some(v) = gpu.get("name").and_then(Json::as_str) {
                 g.name = v.into();
             }
+            if let Some(v) = gpu.get("shaders").and_then(Json::as_usize) {
+                g.shaders = v;
+            }
             if let Some(v) = gpu.get("peak_gflops").and_then(Json::as_f64) {
                 g.peak_gflops = v;
             }
@@ -207,6 +210,10 @@ impl Platform {
             "efficiencies must be in (0, 1]"
         );
         anyhow::ensure!(self.gpu.peak_gflops > 0.0 && self.cpu.peak_gflops_per_core > 0.0);
+        anyhow::ensure!(
+            self.gpu.shaders >= 1,
+            "gpu.shaders must be >= 1 (it scales the design-variant count)"
+        );
         Ok(())
     }
 
@@ -265,6 +272,23 @@ mod tests {
     #[test]
     fn bad_efficiency_rejected() {
         let j = Json::parse(r#"{"cpu":{"eff_target":[2.0]}}"#).unwrap();
+        assert!(Platform::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn gpu_shaders_override_scales_design_variants() {
+        // Regression: `gpu.shaders` used to be silently dropped, so JSON
+        // platforms could never change the design-variant count (§III-B:
+        // v = cores × shaders).
+        let j = Json::parse(r#"{"gpu":{"shaders":2}}"#).unwrap();
+        let p = Platform::from_json(&j).unwrap();
+        assert_eq!(p.gpu.shaders, 2);
+        assert_eq!(p.design_variants(), 12);
+    }
+
+    #[test]
+    fn zero_gpu_shaders_rejected() {
+        let j = Json::parse(r#"{"gpu":{"shaders":0}}"#).unwrap();
         assert!(Platform::from_json(&j).is_err());
     }
 }

@@ -3,6 +3,12 @@
 //! round-level scheduler additionally records every speculation round
 //! (γ chosen per round, per-round α trajectory, sessions in flight), which
 //! is how continuous scheduling is observed from the outside.
+//!
+//! The fused executor additionally reports *dispatch* accounting: how many
+//! engine calls the scheduler issued, how many of them carried more than
+//! one session (fused), and the batch fill ratio (real lanes / executed
+//! lanes, padding included) — the observable for how well co-scheduled
+//! sessions share batched dispatches.
 
 use crate::util::stats::{BoxStats, Summary};
 use std::sync::Mutex;
@@ -40,6 +46,14 @@ struct Inner {
     /// Σ live sessions on the recording worker at each round.
     inflight_sum: f64,
     max_inflight: usize,
+    /// Engine calls issued by the schedulers (forward, batched forward or
+    /// mono step — compiles excluded).
+    dispatches: u64,
+    /// Dispatches that carried more than one session's forward.
+    fused_dispatches: u64,
+    /// Σ real session lanes / Σ executed (padded) lanes over dispatches.
+    lanes_real: u64,
+    lanes_executed: u64,
 }
 
 /// Fixed-size uniform reservoir (Vitter's Algorithm R) for unbounded
@@ -138,6 +152,25 @@ impl Metrics {
         m.max_inflight = m.max_inflight.max(r.inflight);
     }
 
+    /// Account one scheduler tick's engine-dispatch activity (fused
+    /// executor or per-session fallback).
+    pub fn record_dispatches(
+        &self,
+        dispatches: u64,
+        fused: u64,
+        lanes_real: u64,
+        lanes_executed: u64,
+    ) {
+        if dispatches == 0 {
+            return;
+        }
+        let mut m = self.inner.lock().unwrap();
+        m.dispatches += dispatches;
+        m.fused_dispatches += fused;
+        m.lanes_real += lanes_real;
+        m.lanes_executed += lanes_executed;
+    }
+
     pub fn snapshot(&self) -> Report {
         let mut m = self.inner.lock().unwrap();
         Report {
@@ -157,6 +190,13 @@ impl Metrics {
             round_alpha: m.round_alpha.box_stats(),
             mean_inflight: m.inflight_sum / m.rounds.max(1) as f64,
             max_inflight: m.max_inflight,
+            dispatches: m.dispatches,
+            fused_dispatches: m.fused_dispatches,
+            batch_fill: if m.lanes_executed > 0 {
+                m.lanes_real as f64 / m.lanes_executed as f64
+            } else {
+                f64::NAN
+            },
         }
     }
 }
@@ -180,6 +220,13 @@ pub struct Report {
     /// Mean / max sessions in flight per worker, sampled per round.
     pub mean_inflight: f64,
     pub max_inflight: usize,
+    /// Engine dispatches issued by the schedulers, and how many of them
+    /// were shared (fused) batched calls.
+    pub dispatches: u64,
+    pub fused_dispatches: u64,
+    /// Real lanes / executed lanes across all dispatches (1.0 = every
+    /// executed lane carried a live session; NaN before any dispatch).
+    pub batch_fill: f64,
 }
 
 impl Report {
@@ -190,7 +237,8 @@ impl Report {
              real latency p50={:.1}ms p90={:.1}ms mean={:.1}ms\n\
              queue delay  p50={:.1}ms p90={:.1}ms\n\
              rounds={} mean_gamma={:.2} round_alpha_p50={:.3} \
-             inflight mean={:.2} max={}",
+             inflight mean={:.2} max={}\n\
+             dispatches={} fused={} batch_fill={:.2}",
             self.requests,
             self.rejected,
             self.tokens_out,
@@ -209,6 +257,9 @@ impl Report {
             self.round_alpha.median,
             self.mean_inflight,
             self.max_inflight,
+            self.dispatches,
+            self.fused_dispatches,
+            self.batch_fill,
         )
     }
 }
@@ -259,6 +310,22 @@ mod tests {
         // The baseline round (drafted=0) must not dilute the α trajectory.
         assert_eq!(r.round_alpha.n, 2);
         assert!((r.round_alpha.mean - (0.8 + 1.0) / 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dispatch_records_aggregate_into_fill_ratio() {
+        let m = Metrics::new();
+        assert!(m.snapshot().batch_fill.is_nan(), "no dispatches yet");
+        // One fused 3-of-4 dispatch + two singleton dispatches.
+        m.record_dispatches(1, 1, 3, 4);
+        m.record_dispatches(2, 0, 2, 2);
+        let r = m.snapshot();
+        assert_eq!(r.dispatches, 3);
+        assert_eq!(r.fused_dispatches, 1);
+        assert!((r.batch_fill - 5.0 / 6.0).abs() < 1e-12);
+        // Empty ticks are ignored entirely.
+        m.record_dispatches(0, 0, 0, 0);
+        assert_eq!(m.snapshot().dispatches, 3);
     }
 
     #[test]

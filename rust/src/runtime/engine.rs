@@ -195,7 +195,9 @@ impl Engine {
     }
 
     /// Pre-compile the executables a decode session will need (avoids
-    /// first-call compile latency on the serving path).
+    /// first-call compile latency on the serving path). Warms every batch
+    /// size the manifest lowered for (variant, kernel, bucket), so the
+    /// fused executor's first shared dispatch doesn't pay compile time.
     pub fn warmup(
         &self,
         variants: &[VariantKey],
@@ -206,6 +208,13 @@ impl Engine {
             self.weights_for(v)?;
             for &b in buckets {
                 self.forward_exe(v, kernel, 1, b)?;
+                // Batched lowerings don't exist for every (kernel, bucket)
+                // — compile the ones the manifest actually has.
+                for n in self.manifest.batch_sizes_for(v, kernel, b) {
+                    if n > 1 {
+                        self.forward_exe(v, kernel, n, b)?;
+                    }
+                }
             }
         }
         Ok(())
@@ -273,6 +282,8 @@ impl Engine {
     }
 
     /// Batched forward over `batch` sequences padded to the same bucket.
+    /// `batch == 1` runs the rank-1 single-sequence artifact, so callers
+    /// can fall back to unbatched dispatch through the same entry point.
     pub fn forward_batch(
         &self,
         variant: VariantKey,
@@ -281,18 +292,27 @@ impl Engine {
         bucket: usize,
     ) -> anyhow::Result<ForwardOut> {
         let batch = seqs.len();
+        anyhow::ensure!(batch >= 1, "empty batch");
         let exe = self.forward_exe(variant, kernel, batch, bucket)?;
         let w = self.weights_for(variant)?;
-        let mut flat = Vec::with_capacity(batch * bucket);
+        let mut scratch = self.pad_scratch.borrow_mut();
+        scratch.clear();
+        scratch.reserve(batch * bucket);
         for s in seqs {
             anyhow::ensure!(s.len() <= bucket, "{} > bucket {bucket}", s.len());
-            flat.extend(s.iter().map(|&t| t as i32));
-            flat.resize(flat.len() + bucket - s.len(), PAD_ID as i32);
+            scratch.extend(s.iter().map(|&t| t as i32));
+            let padded = scratch.len() + (bucket - s.len());
+            scratch.resize(padded, PAD_ID as i32);
         }
+        // The batch-1 artifact takes rank-1 tokens (aot.py lowers
+        // `(bucket,)` for batch 1, `(batch, bucket)` otherwise).
+        let rank2 = [batch, bucket];
+        let shape: &[usize] = if batch == 1 { &rank2[1..] } else { &rank2 };
         let tok_buf = self
             .client
-            .buffer_from_host_buffer::<i32>(&flat, &[batch, bucket], None)
+            .buffer_from_host_buffer::<i32>(&scratch, shape, None)
             .map_err(|e| anyhow::anyhow!("token upload: {e:?}"))?;
+        drop(scratch);
         let mut args: Vec<&xla::PjRtBuffer> = w.iter().collect();
         args.push(&tok_buf);
         let t0 = Instant::now();

@@ -226,6 +226,30 @@ impl Manifest {
         self.monolithic.iter().find(|m| m.gamma == gamma)
     }
 
+    /// Batch sizes actually lowered for (variant, kernel, bucket),
+    /// ascending and deduplicated. Empty when the variant is unknown or
+    /// nothing was lowered for that shape — the single source of truth
+    /// for both executable warmup and the fused executor's chunk planner.
+    pub fn batch_sizes_for(
+        &self,
+        variant: VariantKey,
+        kernel: KernelPath,
+        seq: usize,
+    ) -> Vec<usize> {
+        let mut sizes: Vec<usize> = match self.variant(variant) {
+            Ok(entry) => entry
+                .artifacts
+                .iter()
+                .filter(|a| a.kernel == kernel && a.seq == seq)
+                .map(|a| a.batch)
+                .collect(),
+            Err(_) => Vec::new(),
+        };
+        sizes.sort_unstable();
+        sizes.dedup();
+        sizes
+    }
+
     pub fn path_of(&self, file: &str) -> PathBuf {
         self.dir.join(file)
     }
@@ -279,6 +303,19 @@ mod tests {
             .unwrap();
         assert!(v.artifact(KernelPath::Pallas, 1, 64).is_some());
         assert!(v.artifact(KernelPath::Ref, 1, 64).is_none());
+    }
+
+    #[test]
+    fn batch_sizes_for_reflects_lowered_artifacts() {
+        let j = Json::parse(&mini_manifest_json()).unwrap();
+        let m = Manifest::from_json(Path::new("/tmp/x"), &j).unwrap();
+        let v = VariantKey::parse("target_fp").unwrap();
+        // Only a pallas batch-1 seq-64 artifact is lowered in the mini set.
+        assert_eq!(m.batch_sizes_for(v, KernelPath::Pallas, 64), vec![1]);
+        assert!(m.batch_sizes_for(v, KernelPath::Ref, 64).is_empty());
+        assert!(m.batch_sizes_for(v, KernelPath::Pallas, 16).is_empty());
+        let missing = VariantKey::parse("drafter_w8a8").unwrap();
+        assert!(m.batch_sizes_for(missing, KernelPath::Pallas, 64).is_empty());
     }
 
     #[test]

@@ -124,6 +124,12 @@ fn handle_conn(
                                 .set("mean_round_gamma", r.mean_round_gamma.into())
                                 .set("mean_inflight", r.mean_inflight.into())
                                 .set("max_inflight", r.max_inflight.into())
+                                .set("dispatches", (r.dispatches as usize).into())
+                                .set(
+                                    "fused_dispatches",
+                                    (r.fused_dispatches as usize).into(),
+                                )
+                                .set("batch_fill", r.batch_fill.into())
                                 .set("wall_s", start_wall.elapsed().as_secs_f64().into());
                             j
                         }

@@ -2,11 +2,14 @@
 //!
 //! * [`sampling`] — token-level accept rules: greedy (the paper's setting)
 //!   and the stochastic min(1, p_t/p_d) rule as an extension.
-//! * [`session`] — the resumable [`DecodeSession`] state machine: one
-//!   speculation round (or one baseline token) per `step`, in both
-//!   compiler abstractions — **modular** (separate drafter/target
-//!   executables, control flow in Rust — paper Fig. 4) and **monolithic**
-//!   (one fused spec-step HLO per γ — paper Fig. 3).
+//! * [`session`] — the resumable [`DecodeSession`] state machine: a
+//!   two-phase `plan()`/`apply()` protocol (one engine call per cycle, so
+//!   an external executor can fuse compatible calls across sessions) with
+//!   a thin `step()` wrapper advancing one speculation round (or one
+//!   baseline token) at a time, in both compiler abstractions —
+//!   **modular** (separate drafter/target executables, control flow in
+//!   Rust — paper Fig. 4) and **monolithic** (one fused spec-step HLO per
+//!   γ — paper Fig. 3).
 //! * [`decoder`] — setup/outcome types and the run-to-completion
 //!   [`Decoder`] façade over sessions.
 
@@ -16,4 +19,7 @@ pub mod session;
 
 pub use decoder::{DecodeOutcome, Decoder, DecoderSetup};
 pub use sampling::{greedy_accept_len, stochastic_accept, AcceptRule};
-pub use session::{DecodeSession, SessionLimits, StepOutcome};
+pub use session::{
+    DecodeSession, EngineReply, EngineRequest, ForwardReply, RequestKind, SessionLimits,
+    SessionPlan, StepOutcome, StepProgress,
+};

@@ -2,24 +2,38 @@
 //! decode path in the crate.
 //!
 //! A [`DecodeSession`] owns one request's token state, dual clocks
-//! (simulated i.MX95 / real PJRT wall-clock) and round counters, and
-//! advances one *speculation round* (or one baseline token) per
-//! [`DecodeSession::step`] call. Run-to-completion decoding is a trivial
-//! loop over `step` (see `Decoder::baseline` / `Decoder::speculative`);
-//! the serving coordinator instead interleaves many live sessions
-//! round-by-round and re-consults the routing policy between rounds, so
-//! γ and speculate-on/off can change *within* a request as the session's
-//! running α diverges from the admission-time estimate.
+//! (simulated i.MX95 / real PJRT wall-clock) and round counters. Since the
+//! fused-execution refactor the session is a *two-phase* state machine: it
+//! never calls the engine itself. Instead [`DecodeSession::plan`] describes
+//! the one engine call it needs next as an [`EngineRequest`] (variant,
+//! kernel path, token prefix, padded bucket), and
+//! [`DecodeSession::apply`] consumes that call's result — a logits row of
+//! a possibly *shared* batched dispatch — and advances the state machine.
+//! An executor sits between the two: the thin [`DecodeSession::step`]
+//! wrapper (plan → execute batch=1 → apply) keeps the historical
+//! one-round-per-call API for `Decoder`, experiments and benches, while
+//! the serving scheduler's fused executor
+//! ([`crate::coordinator::fuser`]) collects many live sessions' pending
+//! requests per tick and dispatches each compatible group as one
+//! `Engine::forward_batch` call.
+//!
+//! Granularity: `plan`/`apply` advance one *engine call* at a time (a
+//! modular speculation round is γ drafter calls + 1 target call, each its
+//! own plan/apply cycle, because draft *i* depends on draft *i−1*'s
+//! output); `step` loops the cycle until a full round (or one baseline
+//! token) completes, exactly reproducing the historical semantics.
 //!
 //! Clock accounting is identical to the old run-to-completion loops: the
 //! modular path charges one dispatch boundary per forward call (γ+1 per
 //! round), the monolithic path a single boundary per round — the §IV-D
-//! trade-off the paper measures.
+//! trade-off the paper measures. Under fused execution the executor passes
+//! each session its *share* of the batched dispatch cost instead (see
+//! [`crate::hetero::LatencyModel::batched_forward_latency`]).
 
-use crate::config::ExecMode;
+use crate::config::{ExecMode, KernelPath};
 use crate::hetero::{LatencyModel, PuAssignment};
 use crate::models::VariantKey;
-use crate::runtime::Engine;
+use crate::runtime::{Engine, ForwardOut, MonoStepOut};
 use crate::tokenizer::EOS_ID;
 use crate::util::rng::Rng;
 
@@ -52,7 +66,8 @@ impl SessionLimits {
     }
 }
 
-/// What one [`DecodeSession::step`] did.
+/// What one decode round (one [`DecodeSession::step`], or one completed
+/// plan/apply round) did.
 #[derive(Debug, Clone, Default)]
 pub struct StepOutcome {
     /// Tokens committed to the output by this step (EOS excluded).
@@ -69,17 +84,153 @@ pub struct StepOutcome {
     pub done: bool,
 }
 
+/// The one engine call a session needs next, fully described so an
+/// external executor can run it — alone or fused with other sessions'
+/// identical-shape requests.
+#[derive(Debug, Clone)]
+pub struct EngineRequest {
+    pub kind: RequestKind,
+    /// The session's current token prefix (prompt + committed tokens +
+    /// in-flight drafts). Owned, so the executor can hold many sessions'
+    /// requests at once and build a batched upload without aliasing the
+    /// sessions themselves.
+    pub tokens: Vec<u32>,
+}
+
+impl EngineRequest {
+    /// Fusion key: requests with equal keys can share one batched
+    /// dispatch. `None` for monolithic spec-steps (never cross-fused).
+    pub fn fuse_key(&self) -> Option<(VariantKey, KernelPath, usize)> {
+        match self.kind {
+            RequestKind::Forward { variant, kernel, bucket, .. } => {
+                Some((variant, kernel, bucket))
+            }
+            RequestKind::MonoStep { .. } => None,
+        }
+    }
+}
+
+/// Shape of the engine call an [`EngineRequest`] asks for.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum RequestKind {
+    /// A plain forward over the request's token prefix, padded to
+    /// `bucket` — fusable across sessions into one batched dispatch.
+    Forward {
+        variant: VariantKey,
+        kernel: KernelPath,
+        bucket: usize,
+        /// PU the mapped role runs on (drives the simulated clock).
+        pu: PuAssignment,
+    },
+    /// One fused monolithic spec-step graph (paper Fig. 3); always a
+    /// singleton dispatch.
+    MonoStep { gamma: usize },
+}
+
+/// Result of [`DecodeSession::plan`].
+#[derive(Debug)]
+pub enum SessionPlan {
+    /// The session needs one engine call.
+    Need(EngineRequest),
+    /// The step completed without engine work: the session was already
+    /// finished, or this round only discovered completion (cap reached,
+    /// out of bucket space).
+    Done(StepOutcome),
+}
+
+/// One forward result handed back to [`DecodeSession::apply`]: a row of a
+/// (possibly shared) batched dispatch plus this session's share of the
+/// dispatch's clock cost.
+#[derive(Debug)]
+pub struct ForwardReply<'a> {
+    pub fwd: &'a ForwardOut,
+    /// Which batch row belongs to this session.
+    pub row: usize,
+    /// This session's share of the dispatch's simulated seconds. For a
+    /// batch=1 dispatch this is the full single-forward latency; a fused
+    /// executor splits the batched cost across the sharing sessions.
+    pub sim_s: f64,
+    /// This session's share of the dispatch's real wall-clock seconds.
+    pub real_s: f64,
+}
+
+/// Engine result for the session's pending [`EngineRequest`].
+#[derive(Debug)]
+pub enum EngineReply<'a> {
+    Forward(ForwardReply<'a>),
+    Mono(&'a MonoStepOut),
+}
+
+/// What applying one engine reply did.
+#[derive(Debug)]
+pub enum StepProgress {
+    /// Mid-round: the session immediately has another [`EngineRequest`]
+    /// (the next draft, or the verify after the last draft).
+    Pending,
+    /// A full speculation round (or one baseline token) completed.
+    Round(StepOutcome),
+}
+
+/// Internal [`SessionPlan`] without the owned token copy — what
+/// `advance_plan` produces; `plan` attaches the tokens for external
+/// executors, `step` executes in place off `self.ids`.
+#[derive(Debug)]
+enum PlannedKind {
+    Need(RequestKind),
+    Done(StepOutcome),
+}
+
+/// Where the session is inside the current round.
+#[derive(Debug)]
+enum RoundPhase {
+    /// Between rounds: the next `plan` decides baseline / draft / mono and
+    /// re-reads the (possibly policy-updated) γ and speculate flags.
+    Idle,
+    /// Awaiting the one target forward of a baseline step.
+    Baseline,
+    /// Modular drafting: `drafted.len()` of `g` draft forwards applied.
+    Drafting(DraftState),
+    /// All `g` drafts issued; awaiting the target verify forward.
+    Verifying(DraftState),
+    /// Awaiting the fused monolithic spec-step.
+    Mono { gamma: usize },
+}
+
+/// Modular-round scratch carried across the round's plan/apply cycles.
+#[derive(Debug)]
+struct DraftState {
+    base_len: usize,
+    g: usize,
+    drafted: Vec<u32>,
+    /// Per-draft distributions (stochastic accept rule only).
+    draft_probs: Vec<Vec<f32>>,
+}
+
+/// Counter snapshot taken at round start so per-round [`StepOutcome`]
+/// deltas can't drift from the aggregate totals.
+#[derive(Debug, Clone, Copy, Default)]
+struct RoundBase {
+    tok: usize,
+    drafted: usize,
+    accepted: usize,
+    sim_s: f64,
+    real_s: f64,
+}
+
 /// One request's resumable decode state machine.
 ///
 /// Construct with [`DecodeSession::new`] (or [`DecodeSession::with_limits`]
 /// when no engine is at hand, e.g. in pure state-transition tests), then
-/// call [`step`](DecodeSession::step) until [`is_done`](DecodeSession::is_done)
-/// and harvest the aggregate [`DecodeOutcome`] via
+/// either call [`step`](DecodeSession::step) until
+/// [`is_done`](DecodeSession::is_done), or drive the two-phase
+/// [`plan`](DecodeSession::plan) / [`apply`](DecodeSession::apply)
+/// protocol from an external (possibly fusing) executor. Harvest the
+/// aggregate [`DecodeOutcome`] via
 /// [`into_outcome`](DecodeSession::into_outcome).
 pub struct DecodeSession {
     setup: DecoderSetup,
     lat: LatencyModel,
-    /// Prompt + committed continuation (the model input).
+    /// Prompt + committed continuation + in-flight drafts (the model input).
     ids: Vec<u32>,
     /// Aggregate outcome accumulated across steps.
     out: DecodeOutcome,
@@ -87,6 +238,8 @@ pub struct DecodeSession {
     rng: Rng,
     /// Whether the *next* round speculates (re-decidable between rounds).
     speculative: bool,
+    phase: RoundPhase,
+    round_base: RoundBase,
     done: bool,
 }
 
@@ -119,6 +272,8 @@ impl DecodeSession {
             limits,
             rng: Rng::new(0x5EED),
             speculative,
+            phase: RoundPhase::Idle,
+            round_base: RoundBase::default(),
         }
     }
 
@@ -135,6 +290,13 @@ impl DecodeSession {
 
     pub fn is_done(&self) -> bool {
         self.done
+    }
+
+    /// Whether the session is mid-round (has planned engine work whose
+    /// round has not completed). Round-level policy hooks must only be
+    /// applied between rounds, i.e. when this is `false`.
+    pub fn mid_round(&self) -> bool {
+        !matches!(self.phase, RoundPhase::Idle)
     }
 
     /// Current total sequence length (prompt + committed tokens).
@@ -216,163 +378,260 @@ impl DecodeSession {
     }
 
     /// Advance the session by one unit of work: one speculation round
-    /// (draft γ + verify + commit) or one baseline token. Stepping a
-    /// finished session is a no-op that reports `done`.
+    /// (draft γ + verify + commit) or one baseline token, executing each
+    /// planned engine call unfused (batch = 1) straight off `self.ids` —
+    /// no token copies on the singleton path. Stepping a finished session
+    /// is a no-op that reports `done`.
     pub fn step(&mut self, engine: &Engine) -> anyhow::Result<StepOutcome> {
-        if self.done {
-            return Ok(StepOutcome { done: true, ..StepOutcome::default() });
-        }
-        // Delta-track the aggregate counters so per-step reporting can't
-        // drift from the totals.
-        let (tok0, dr0, acc0, sim0, real0) = (
-            self.out.tokens.len(),
-            self.out.n_drafted,
-            self.out.n_accepted,
-            self.out.sim_s,
-            self.out.real_s,
-        );
-        if self.speculative {
-            match self.setup.exec {
-                ExecMode::Modular => self.round_modular(engine)?,
-                ExecMode::Monolithic => self.round_monolithic(engine)?,
+        loop {
+            match self.advance_plan(engine)? {
+                PlannedKind::Done(out) => return Ok(out),
+                PlannedKind::Need(kind) => {
+                    if let StepProgress::Round(out) = self.execute_kind(engine, kind)? {
+                        return Ok(out);
+                    }
+                }
             }
-        } else {
-            self.round_baseline(engine)?;
         }
-        Ok(StepOutcome {
-            committed: self.out.tokens[tok0..].to_vec(),
-            drafted: self.out.n_drafted - dr0,
-            accepted: self.out.n_accepted - acc0,
-            sim_s: self.out.sim_s - sim0,
-            real_s: self.out.real_s - real0,
-            done: self.done,
+    }
+
+    /// Phase 1: describe the next engine call this session needs (or
+    /// report that the step completed without engine work). Calling `plan`
+    /// again before `apply` re-issues the same request. The returned
+    /// request owns a copy of the token prefix so a fusing executor can
+    /// hold many sessions' requests at once.
+    pub fn plan(&mut self, engine: &Engine) -> anyhow::Result<SessionPlan> {
+        Ok(match self.advance_plan(engine)? {
+            PlannedKind::Done(out) => SessionPlan::Done(out),
+            PlannedKind::Need(kind) => {
+                SessionPlan::Need(EngineRequest { kind, tokens: self.ids.clone() })
+            }
         })
     }
 
-    /// One plain autoregressive token with the target model.
-    fn round_baseline(&mut self, engine: &Engine) -> anyhow::Result<()> {
-        if self.out.tokens.len() >= self.limits.cap {
-            self.done = true;
-            return Ok(());
+    /// The planning state transition behind [`plan`](Self::plan) /
+    /// [`step`](Self::step): advance `Idle` into the next round's first
+    /// phase (or completion) and name the pending engine call.
+    fn advance_plan(&mut self, engine: &Engine) -> anyhow::Result<PlannedKind> {
+        if self.done {
+            return Ok(PlannedKind::Done(StepOutcome { done: true, ..StepOutcome::default() }));
         }
-        let bucket = engine.bucket_for(self.ids.len())?;
-        let fwd = engine.forward(self.setup.target, self.setup.kernel, &self.ids, bucket)?;
-        self.out.real_s += fwd.elapsed_s;
-        self.out.sim_s += self.sim_forward(engine, self.setup.target, bucket)?;
-        self.out.target_calls += 1;
-        let nxt = fwd.argmax(0, self.ids.len() - 1);
-        if nxt == EOS_ID {
-            self.done = true;
-            return Ok(());
-        }
-        self.ids.push(nxt);
-        self.out.tokens.push(nxt);
-        if self.out.tokens.len() >= self.limits.cap {
-            self.done = true;
-        }
-        Ok(())
-    }
-
-    /// Modular speculation round (paper Fig. 4): γ drafter calls + 1 target
-    /// call, control flow here in Rust, one runtime-API boundary per call.
-    fn round_modular(&mut self, engine: &Engine) -> anyhow::Result<()> {
-        if self.out.tokens.len() >= self.limits.cap {
-            self.done = true;
-            return Ok(());
-        }
-        let gamma = self.setup.gamma.max(1);
-        let base_len = self.ids.len();
-        let g = gamma.min(self.limits.max_total.saturating_sub(base_len + 1));
-        if g == 0 {
-            self.done = true;
-            return Ok(());
-        }
-        // ---- draft phase ---------------------------------------------
-        let mut drafted: Vec<u32> = Vec::with_capacity(g);
-        let mut draft_probs: Vec<Vec<f32>> = Vec::new();
-        for i in 0..g {
-            let cur = base_len + i;
-            let bucket = engine.bucket_for(cur)?;
-            let fwd =
-                engine.forward(self.setup.drafter, self.setup.kernel, &self.ids, bucket)?;
-            self.out.real_s += fwd.elapsed_s;
-            self.out.sim_s += self.sim_forward(engine, self.setup.drafter, bucket)?;
-            self.out.drafter_calls += 1;
-            let tok = fwd.argmax(0, cur - 1);
-            if self.setup.rule == AcceptRule::Stochastic {
-                draft_probs.push(fwd.probs(0, cur - 1));
+        if !self.mid_round() {
+            // Round start: snapshot the counters for per-round deltas and
+            // decide the round shape from the (policy-updatable) flags.
+            self.round_base = self.counters();
+            if self.out.tokens.len() >= self.limits.cap {
+                self.done = true;
+                return Ok(PlannedKind::Done(self.round_outcome()));
             }
-            drafted.push(tok);
-            self.ids.push(tok);
+            if !self.speculative {
+                self.phase = RoundPhase::Baseline;
+            } else {
+                match self.setup.exec {
+                    ExecMode::Modular => {
+                        let gamma = self.setup.gamma.max(1);
+                        let base_len = self.ids.len();
+                        let g = gamma.min(self.limits.max_total.saturating_sub(base_len + 1));
+                        if g == 0 {
+                            self.done = true;
+                            return Ok(PlannedKind::Done(self.round_outcome()));
+                        }
+                        self.phase = RoundPhase::Drafting(DraftState {
+                            base_len,
+                            g,
+                            drafted: Vec::with_capacity(g),
+                            draft_probs: Vec::new(),
+                        });
+                    }
+                    ExecMode::Monolithic => {
+                        let gamma = self.setup.gamma.max(1);
+                        let mono_seq = engine
+                            .manifest
+                            .mono(gamma)
+                            .map(|m| m.seq)
+                            .unwrap_or(self.limits.max_total);
+                        if self.ids.len() + gamma >= mono_seq {
+                            self.done = true;
+                            return Ok(PlannedKind::Done(self.round_outcome()));
+                        }
+                        self.phase = RoundPhase::Mono { gamma };
+                    }
+                }
+            }
         }
-        // ---- verify phase --------------------------------------------
-        let ver_len = self.ids.len();
-        let bucket = engine.bucket_for(ver_len)?;
-        let fwd = engine.forward(self.setup.target, self.setup.kernel, &self.ids, bucket)?;
-        self.out.real_s += fwd.elapsed_s;
-        self.out.sim_s += self.sim_forward(engine, self.setup.target, bucket)?;
-        self.out.target_calls += 1;
-        self.out.n_rounds += 1;
-        self.out.n_drafted += drafted.len();
-
-        // Target decisions for positions base_len .. base_len+g.
-        let target_argmax: Vec<u32> =
-            (0..=g).map(|i| fwd.argmax(0, base_len - 1 + i)).collect();
-        let (n_acc, correction) = match self.setup.rule {
-            AcceptRule::Greedy => {
-                let k = greedy_accept_len(&drafted, &target_argmax);
-                (k, target_argmax[k])
-            }
-            AcceptRule::Stochastic => {
-                let target_probs: Vec<Vec<f32>> =
-                    (0..=g).map(|i| fwd.probs(0, base_len - 1 + i)).collect();
-                let o = stochastic_accept(&drafted, &draft_probs, &target_probs, &mut self.rng);
-                (o.n_accepted, o.correction)
-            }
+        let kind = match &self.phase {
+            RoundPhase::Idle => unreachable!("round shape decided above"),
+            RoundPhase::Baseline | RoundPhase::Verifying(_) => RequestKind::Forward {
+                variant: self.setup.target,
+                kernel: self.setup.kernel,
+                bucket: engine.bucket_for(self.ids.len())?,
+                pu: self.setup.mapping.target,
+            },
+            RoundPhase::Drafting(_) => RequestKind::Forward {
+                variant: self.setup.drafter,
+                kernel: self.setup.kernel,
+                bucket: engine.bucket_for(self.ids.len())?,
+                pu: self.setup.mapping.drafter,
+            },
+            RoundPhase::Mono { gamma } => RequestKind::MonoStep { gamma: *gamma },
         };
-        self.out.n_accepted += n_acc;
-
-        // Roll back unaccepted drafts, then commit accepted + correction.
-        self.ids.truncate(base_len);
-        self.done = self.commit_round(&drafted[..n_acc], correction);
-        Ok(())
+        Ok(PlannedKind::Need(kind))
     }
 
-    /// Monolithic speculation round (paper Fig. 3): one fused graph charged
-    /// a *single* dispatch boundary — the saving the paper attributes to
-    /// the monolithic design.
-    fn round_monolithic(&mut self, engine: &Engine) -> anyhow::Result<()> {
-        let gamma = self.setup.gamma.max(1);
-        let mono_seq = engine
-            .manifest
-            .mono(gamma)
-            .map(|m| m.seq)
-            .unwrap_or(self.limits.max_total);
-        if self.out.tokens.len() >= self.limits.cap || self.ids.len() + gamma >= mono_seq {
-            self.done = true;
-            return Ok(());
+    /// Phase 2: consume the engine result for the pending plan and advance
+    /// the state machine one engine call's worth.
+    pub fn apply(&mut self, engine: &Engine, reply: EngineReply) -> anyhow::Result<StepProgress> {
+        anyhow::ensure!(
+            !self.done && self.mid_round(),
+            "apply without a pending plan"
+        );
+        let phase = std::mem::replace(&mut self.phase, RoundPhase::Idle);
+        match (phase, reply) {
+            // ---- baseline: one plain autoregressive target token -------
+            (RoundPhase::Baseline, EngineReply::Forward(r)) => {
+                self.out.real_s += r.real_s;
+                self.out.sim_s += r.sim_s;
+                self.out.target_calls += 1;
+                let nxt = r.fwd.argmax(r.row, self.ids.len() - 1);
+                if nxt == EOS_ID {
+                    self.done = true;
+                    return Ok(StepProgress::Round(self.round_outcome()));
+                }
+                self.ids.push(nxt);
+                self.out.tokens.push(nxt);
+                if self.out.tokens.len() >= self.limits.cap {
+                    self.done = true;
+                }
+                Ok(StepProgress::Round(self.round_outcome()))
+            }
+            // ---- modular draft phase (paper Fig. 4) --------------------
+            (RoundPhase::Drafting(mut st), EngineReply::Forward(r)) => {
+                self.out.real_s += r.real_s;
+                self.out.sim_s += r.sim_s;
+                self.out.drafter_calls += 1;
+                let cur = self.ids.len();
+                let tok = r.fwd.argmax(r.row, cur - 1);
+                if self.setup.rule == AcceptRule::Stochastic {
+                    st.draft_probs.push(r.fwd.probs(r.row, cur - 1));
+                }
+                st.drafted.push(tok);
+                self.ids.push(tok);
+                self.phase = if st.drafted.len() == st.g {
+                    RoundPhase::Verifying(st)
+                } else {
+                    RoundPhase::Drafting(st)
+                };
+                Ok(StepProgress::Pending)
+            }
+            // ---- modular verify phase ----------------------------------
+            (RoundPhase::Verifying(st), EngineReply::Forward(r)) => {
+                self.out.real_s += r.real_s;
+                self.out.sim_s += r.sim_s;
+                self.out.target_calls += 1;
+                self.out.n_rounds += 1;
+                self.out.n_drafted += st.drafted.len();
+
+                // Target decisions for positions base_len .. base_len+g.
+                let target_argmax: Vec<u32> = (0..=st.g)
+                    .map(|i| r.fwd.argmax(r.row, st.base_len - 1 + i))
+                    .collect();
+                let (n_acc, correction) = match self.setup.rule {
+                    AcceptRule::Greedy => {
+                        let k = greedy_accept_len(&st.drafted, &target_argmax);
+                        (k, target_argmax[k])
+                    }
+                    AcceptRule::Stochastic => {
+                        let target_probs: Vec<Vec<f32>> = (0..=st.g)
+                            .map(|i| r.fwd.probs(r.row, st.base_len - 1 + i))
+                            .collect();
+                        let o = stochastic_accept(
+                            &st.drafted,
+                            &st.draft_probs,
+                            &target_probs,
+                            &mut self.rng,
+                        );
+                        (o.n_accepted, o.correction)
+                    }
+                };
+                self.out.n_accepted += n_acc;
+
+                // Roll back unaccepted drafts, then commit accepted +
+                // correction.
+                self.ids.truncate(st.base_len);
+                self.done = self.commit_round(&st.drafted[..n_acc], correction);
+                Ok(StepProgress::Round(self.round_outcome()))
+            }
+            // ---- monolithic round (paper Fig. 3): one fused graph ------
+            (RoundPhase::Mono { gamma }, EngineReply::Mono(step)) => {
+                let mono_seq = engine
+                    .manifest
+                    .mono(gamma)
+                    .map(|m| m.seq)
+                    .unwrap_or(self.limits.max_total);
+                let oh_d = self.lat.dispatch_overhead(self.setup.mapping.drafter);
+                let oh_t = self.lat.dispatch_overhead(self.setup.mapping.target);
+                self.out.real_s += step.elapsed_s;
+                // Simulated: γ drafter + 1 target forwards at the mono
+                // bucket, minus the per-call boundaries, plus ONE boundary
+                // for the round — the saving the paper attributes to the
+                // monolithic design.
+                let sim_d = self.sim_forward(engine, self.setup.drafter, mono_seq)? - oh_d;
+                let sim_t = self.sim_forward(engine, self.setup.target, mono_seq)? - oh_t;
+                self.out.sim_s += gamma as f64 * sim_d + sim_t + oh_d.max(oh_t);
+                self.out.drafter_calls += gamma;
+                self.out.target_calls += 1;
+                self.out.n_rounds += 1;
+                self.out.n_drafted += gamma;
+                let n_acc = step.n_accepted.min(gamma);
+                self.out.n_accepted += n_acc;
+
+                let correction = step.out_tokens[n_acc];
+                self.done = self.commit_round(&step.drafted[..n_acc], correction);
+                Ok(StepProgress::Round(self.round_outcome()))
+            }
+            (phase, _) => {
+                self.phase = phase;
+                anyhow::bail!("engine reply does not match the pending plan")
+            }
         }
-        let oh_d = self.dispatch_overhead(self.setup.mapping.drafter);
-        let oh_t = self.dispatch_overhead(self.setup.mapping.target);
+    }
 
-        let base_len = self.ids.len();
-        let step = engine.mono_step(gamma, &self.ids, base_len)?;
-        self.out.real_s += step.elapsed_s;
-        // Simulated: γ drafter + 1 target forwards at the mono bucket,
-        // minus the per-call boundaries, plus ONE boundary for the round.
-        let sim_d = self.sim_forward(engine, self.setup.drafter, mono_seq)? - oh_d;
-        let sim_t = self.sim_forward(engine, self.setup.target, mono_seq)? - oh_t;
-        self.out.sim_s += gamma as f64 * sim_d + sim_t + oh_d.max(oh_t);
-        self.out.drafter_calls += gamma;
-        self.out.target_calls += 1;
-        self.out.n_rounds += 1;
-        self.out.n_drafted += gamma;
-        let n_acc = step.n_accepted.min(gamma);
-        self.out.n_accepted += n_acc;
+    /// Execute one planned request unfused (batch = 1) and apply its
+    /// result — the fused executor's no-batched-artifact fallback.
+    /// Precondition: `req` is this session's *current* pending plan (the
+    /// session's own token prefix is used for the engine call; it is
+    /// identical to `req.tokens` until `apply` runs).
+    pub fn execute(
+        &mut self,
+        engine: &Engine,
+        req: &EngineRequest,
+    ) -> anyhow::Result<StepProgress> {
+        self.execute_kind(engine, req.kind)
+    }
 
-        let correction = step.out_tokens[n_acc];
-        self.done = self.commit_round(&step.drafted[..n_acc], correction);
-        Ok(())
+    /// Singleton execution off the session's own token prefix (no copy).
+    fn execute_kind(
+        &mut self,
+        engine: &Engine,
+        kind: RequestKind,
+    ) -> anyhow::Result<StepProgress> {
+        match kind {
+            RequestKind::Forward { variant, kernel, bucket, pu } => {
+                let fwd = engine.forward(variant, kernel, &self.ids, bucket)?;
+                let spec = engine.manifest.model_for(variant)?;
+                let sim_s = self.lat.forward_latency(spec, variant.scheme, pu, bucket);
+                let real_s = fwd.elapsed_s;
+                self.apply(
+                    engine,
+                    EngineReply::Forward(ForwardReply { fwd: &fwd, row: 0, sim_s, real_s }),
+                )
+            }
+            RequestKind::MonoStep { gamma } => {
+                let cur_len = self.ids.len();
+                let step = engine.mono_step(gamma, &self.ids, cur_len)?;
+                self.apply(engine, EngineReply::Mono(&step))
+            }
+        }
     }
 
     /// The round-commit state transition, shared by both speculative paths
@@ -404,6 +663,28 @@ impl DecodeSession {
         self.done
     }
 
+    fn counters(&self) -> RoundBase {
+        RoundBase {
+            tok: self.out.tokens.len(),
+            drafted: self.out.n_drafted,
+            accepted: self.out.n_accepted,
+            sim_s: self.out.sim_s,
+            real_s: self.out.real_s,
+        }
+    }
+
+    /// Per-round delta against the snapshot taken at round start.
+    fn round_outcome(&self) -> StepOutcome {
+        StepOutcome {
+            committed: self.out.tokens[self.round_base.tok..].to_vec(),
+            drafted: self.out.n_drafted - self.round_base.drafted,
+            accepted: self.out.n_accepted - self.round_base.accepted,
+            sim_s: self.out.sim_s - self.round_base.sim_s,
+            real_s: self.out.real_s - self.round_base.real_s,
+            done: self.done,
+        }
+    }
+
     /// Simulated seconds for one forward of `key` on its mapped PU at
     /// `bucket` (bucketed deployment: padded shapes run at bucket cost).
     fn sim_forward(
@@ -418,13 +699,6 @@ impl DecodeSession {
             crate::models::Role::Target => self.setup.mapping.target,
         };
         Ok(self.lat.forward_latency(spec, key.scheme, pu, bucket))
-    }
-
-    fn dispatch_overhead(&self, pu: PuAssignment) -> f64 {
-        match pu {
-            PuAssignment::Cpu { .. } => self.lat.platform.cpu.dispatch_overhead_s,
-            PuAssignment::Gpu => self.lat.platform.gpu.dispatch_overhead_s,
-        }
     }
 }
 
@@ -445,7 +719,8 @@ mod tests {
     }
 
     // The commit/cap/EOS edge-case coverage lives in
-    // rust/tests/session_edge.rs (driven through the public surface).
+    // rust/tests/session_edge.rs (driven through the public surface);
+    // plan/apply round equivalence against step() in rust/tests/fused_e2e.rs.
 
     #[test]
     fn round_policy_hooks_update_next_round() {
@@ -457,5 +732,11 @@ mod tests {
         assert_eq!(s.gamma(), 1);
         s.set_speculative(false);
         assert!(!s.speculative());
+    }
+
+    #[test]
+    fn fresh_session_is_at_round_boundary() {
+        let s = session(8);
+        assert!(!s.mid_round());
     }
 }

@@ -21,11 +21,12 @@ fn have_artifacts() -> bool {
 }
 
 fn cfg() -> RunConfig {
-    let mut c = RunConfig::default();
-    c.artifacts_dir = PathBuf::from("artifacts");
-    c.max_new_tokens = 16;
-    c.gamma = Some(3);
-    c
+    RunConfig {
+        artifacts_dir: PathBuf::from("artifacts"),
+        max_new_tokens: 16,
+        gamma: Some(3),
+        ..RunConfig::default()
+    }
 }
 
 fn sample_request(id: u64) -> Request {
@@ -103,6 +104,37 @@ fn baseline_batching_path() {
     assert!(outs.iter().all(|o| !o.speculative));
     assert!(outs.windows(2).all(|w| w[0].completion == w[1].completion));
     Arc::try_unwrap(coord).ok().unwrap().shutdown();
+}
+
+#[test]
+fn legacy_lockstep_batching_matches_fused_baseline() {
+    if !have_artifacts() {
+        return;
+    }
+    // Same batched-baseline traffic through both executors: the fused
+    // scheduler (default) and the legacy lockstep batcher (fuse: false).
+    let run = |fuse: bool| -> Vec<specedge::coordinator::EngineResponse> {
+        let mut c = cfg();
+        c.speculative = false;
+        c.max_batch = 4;
+        c.fuse = fuse;
+        let coord = Arc::new(Coordinator::start(c, Platform::imx95()).unwrap());
+        let rxs: Vec<_> = (0..4)
+            .map(|i| coord.submit(sample_request(i)).unwrap())
+            .collect();
+        let mut outs: Vec<_> = rxs.into_iter().map(|rx| rx.recv().unwrap()).collect();
+        outs.sort_by_key(|o| o.id);
+        Arc::try_unwrap(coord).ok().unwrap().shutdown();
+        outs
+    };
+    let fused = run(true);
+    let legacy = run(false);
+    assert_eq!(fused.len(), 4);
+    for (a, b) in fused.iter().zip(&legacy) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.tokens, b.tokens, "request {} diverged across executors", a.id);
+        assert!(!a.speculative && !b.speculative);
+    }
 }
 
 #[test]
