@@ -12,6 +12,12 @@
 //! Each benchmark warms up, then runs timed batches until a time budget is
 //! spent, reporting mean / p50 / p95 per iteration and writing a CSV next to
 //! the results dir if `SPECEDGE_BENCH_OUT` is set.
+//!
+//! Two environment switches serve CI:
+//! * `SPECEDGE_BENCH_SMOKE=1` — clamp warmup/measure budgets so every
+//!   target finishes in seconds (the per-PR perf-trajectory smoke job);
+//! * `SPECEDGE_BENCH_JSON=path` — append one JSON object per result to
+//!   `path` (JSON lines; the CI job wraps them into `BENCH_pr.json`).
 
 use crate::util::stats::Summary;
 use std::time::{Duration, Instant};
@@ -35,6 +41,20 @@ impl Default for BenchOpts {
     }
 }
 
+impl BenchOpts {
+    /// Smoke mode (`SPECEDGE_BENCH_SMOKE=1`): clamp the budgets — numbers
+    /// stay directionally useful while the whole suite finishes fast.
+    fn clamp_for_smoke(mut self) -> BenchOpts {
+        if std::env::var_os("SPECEDGE_BENCH_SMOKE").is_some() {
+            self.warmup = self.warmup.min(Duration::from_millis(20));
+            self.measure = self.measure.min(Duration::from_millis(200));
+            self.max_iters = self.max_iters.min(10_000);
+            self.min_iters = self.min_iters.min(3);
+        }
+        self
+    }
+}
+
 #[derive(Debug, Clone)]
 pub struct BenchResult {
     pub group: String,
@@ -53,11 +73,15 @@ pub struct Bench {
 
 impl Bench {
     pub fn new(group: &str) -> Bench {
-        Bench { group: group.to_string(), opts: BenchOpts::default(), results: Vec::new() }
+        Bench::with_opts(group, BenchOpts::default())
     }
 
     pub fn with_opts(group: &str, opts: BenchOpts) -> Bench {
-        Bench { group: group.to_string(), opts, results: Vec::new() }
+        Bench {
+            group: group.to_string(),
+            opts: opts.clamp_for_smoke(),
+            results: Vec::new(),
+        }
     }
 
     /// Time `f` (called once per iteration).
@@ -101,8 +125,28 @@ impl Bench {
         self.results.last().unwrap()
     }
 
-    /// Print the footer and optionally dump CSV (SPECEDGE_BENCH_OUT=dir).
+    /// Print the footer and optionally dump CSV (SPECEDGE_BENCH_OUT=dir)
+    /// and/or JSON lines (SPECEDGE_BENCH_JSON=file, appended so the CI
+    /// smoke job can collect every bench target into one report).
     pub fn finish(self) {
+        if let Ok(path) = std::env::var("SPECEDGE_BENCH_JSON") {
+            use std::io::Write;
+            let mut lines = String::new();
+            for r in &self.results {
+                lines.push_str(&format!(
+                    r#"{{"group":"{}","name":"{}","iters":{},"mean_s":{:.9},"p50_s":{:.9},"p95_s":{:.9}}}"#,
+                    r.group, r.name, r.iters, r.mean_s, r.p50_s, r.p95_s
+                ));
+                lines.push('\n');
+            }
+            if let Ok(mut f) = std::fs::OpenOptions::new()
+                .create(true)
+                .append(true)
+                .open(&path)
+            {
+                let _ = f.write_all(lines.as_bytes());
+            }
+        }
         if let Ok(dir) = std::env::var("SPECEDGE_BENCH_OUT") {
             let path = std::path::Path::new(&dir)
                 .join(format!("bench_{}.csv", self.group.replace('/', "_")));

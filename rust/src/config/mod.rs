@@ -56,7 +56,7 @@ impl Timing {
 }
 
 /// Kernel path baked into the artifacts the engine loads.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub enum KernelPath {
     /// Pallas kernels (interpret=True lowering) — the L1 deliverable.
     Pallas,
@@ -119,6 +119,16 @@ pub struct RunConfig {
     /// scheduler path, and the legacy lockstep batcher for the
     /// `max_batch > 1` baseline configuration.
     pub fuse: bool,
+    /// Per-PU timeline simulation: dispatches routed to different PUs of
+    /// the heterogeneous mapping (draft forwards on one, verify forwards
+    /// on the other) proceed concurrently on the fused tick scheduler,
+    /// each starting at `max(pu_ready, inputs_ready)`; metrics gain
+    /// per-PU busy/idle/overlap and the merged makespan. `false` keeps
+    /// the single serialized virtual clock (every dispatch queues behind
+    /// every other), reproducing the pre-overlap timings bit-for-bit for
+    /// A/B parity. Per-session/-request `sim_s` charges are identical in
+    /// both modes; the knob changes only the timeline observables.
+    pub hetero_overlap: bool,
     /// RNG seed (workload, stochastic sampling).
     pub seed: u64,
 }
@@ -142,6 +152,7 @@ impl Default for RunConfig {
             max_batch: 1,
             max_inflight: 4,
             fuse: true,
+            hetero_overlap: true,
             seed: 0xC0FFEE,
         }
     }
@@ -207,6 +218,9 @@ impl RunConfig {
         if let Some(v) = j.get("fuse").and_then(Json::as_bool) {
             self.fuse = v;
         }
+        if let Some(v) = j.get("hetero_overlap").and_then(Json::as_bool) {
+            self.hetero_overlap = v;
+        }
         if let Some(v) = j.get("seed").and_then(Json::as_f64) {
             self.seed = v as u64;
         }
@@ -264,6 +278,15 @@ mod tests {
     #[test]
     fn fuse_defaults_on() {
         assert!(RunConfig::default().fuse);
+    }
+
+    #[test]
+    fn hetero_overlap_defaults_on_and_parses() {
+        assert!(RunConfig::default().hetero_overlap);
+        let mut c = RunConfig::default();
+        let j = Json::parse(r#"{"hetero_overlap":false}"#).unwrap();
+        c.apply_json(&j).unwrap();
+        assert!(!c.hetero_overlap);
     }
 
     #[test]

@@ -1,10 +1,10 @@
-//! Cross-session fused batch executor.
+//! Cross-session fused batch executor with per-PU timeline scheduling.
 //!
 //! One scheduler *tick* advances every live [`DecodeSession`] by exactly
 //! one engine call: each session [`plan`](DecodeSession::plan)s the
 //! forward it needs, the fuser groups the pending [`EngineRequest`]s by
-//! fusion key `(variant, kernel, bucket)`, dispatches each group as one
-//! `Engine::forward_batch` call — padding partial groups up to the
+//! fusion key `(variant, kernel, bucket, pu)`, dispatches each group as
+//! one `Engine::forward_batch` call — padding partial groups up to the
 //! manifest's compiled batch sizes, falling back to batch=1 dispatches
 //! when no batched artifact exists for the key — and scatters the logits
 //! rows back through [`apply`](DecodeSession::apply).
@@ -17,13 +17,31 @@
 //! round. Monolithic spec-steps are never cross-fused (the fused graph is
 //! already one dispatch per round).
 //!
+//! **Per-PU timelines.** When the caller supplies a
+//! [`PuTimelines`], every dispatch is additionally *scheduled* on the
+//! timeline of the PU its [`EngineRequest::route`] names (resolved from
+//! the policy-chosen mapping at plan time): the dispatch begins at
+//! `max(pu_ready, inputs_ready)`, where `inputs_ready` is the latest
+//! [`DecodeSession::ready_s`] among the sessions sharing it. Groups
+//! routed to *different* PUs of a heterogeneous mapping therefore proceed
+//! concurrently within the tick — one session's draft forwards on the GPU
+//! overlap co-scheduled sessions' verify forwards on the CPU cluster —
+//! while a serialized timeline ([`PuTimelines::serialized`], the
+//! `hetero_overlap: false` A/B baseline) queues every dispatch behind
+//! every other. Group dispatch order within a tick is made deterministic
+//! by sorting on the fusion key, so simulated makespans are reproducible.
+//! Per-session `sim_s` charges are identical with and without timelines;
+//! the timelines add makespan/busy/overlap observables, they do not
+//! change what each session pays.
+//!
 //! **Clock honesty.** A fused dispatch of `m` real sessions executed as
 //! `exec_b ≥ m` lanes is charged
 //! [`LatencyModel::batched_forward_latency`]`(…, exec_b)` — `exec_b ×` the
 //! single-lane compute plus **one** dispatch boundary — split evenly
 //! across the `m` real sessions (padding lanes are overhead the sharers
-//! absorb; no simulated time vanishes). Real wall-clock is split the same
-//! way. Singleton fallbacks charge the ordinary single-call latency, so
+//! absorb; no simulated time vanishes). The PU timeline is occupied for
+//! the *full* batched duration. Real wall-clock is split the same way.
+//! Singleton fallbacks charge the ordinary single-call latency, so
 //! `fuse = false` and batch-1-only kernels reproduce the pre-fusion clock
 //! exactly.
 //!
@@ -38,12 +56,10 @@
 
 use std::collections::HashMap;
 
-use crate::config::KernelPath;
-use crate::hetero::LatencyModel;
-use crate::models::VariantKey;
+use crate::hetero::{LatencyModel, PuId, PuTimelines};
 use crate::runtime::Engine;
 use crate::spec::{
-    DecodeSession, EngineReply, EngineRequest, ForwardReply, RequestKind, SessionPlan,
+    DecodeSession, EngineReply, EngineRequest, ForwardReply, FuseKey, SessionPlan,
     StepOutcome, StepProgress,
 };
 
@@ -76,12 +92,8 @@ pub struct TickStats {
 /// manifest is the single source of truth — same query warmup uses).
 /// Always non-empty: `[1]` when nothing is lowered, so the subsequent
 /// batch-1 dispatch surfaces the real error.
-fn compiled_batches(
-    engine: &Engine,
-    variant: VariantKey,
-    kernel: KernelPath,
-    bucket: usize,
-) -> Vec<usize> {
+fn compiled_batches(engine: &Engine, key: FuseKey) -> Vec<usize> {
+    let (variant, kernel, bucket, _pu) = key;
     let mut sizes = engine.manifest.batch_sizes_for(variant, kernel, bucket);
     if sizes.is_empty() {
         sizes.push(1);
@@ -110,7 +122,9 @@ fn plan_chunks(k: usize, sizes: &[usize]) -> Vec<(usize, usize)> {
     chunks
 }
 
-/// Advance every session one engine call: plan, fuse, dispatch, scatter.
+/// Advance every session one engine call: plan, fuse, dispatch, scatter —
+/// and, when `timelines` is supplied, schedule each dispatch on its routed
+/// PU's timeline (overlapped or serialized per the timelines' mode).
 ///
 /// Returns one [`TickEvent`] per session (same order as `sessions`) plus
 /// the tick's dispatch accounting. Sessions that are already done come
@@ -119,6 +133,7 @@ pub fn tick(
     engine: &Engine,
     lat: &LatencyModel,
     sessions: &mut [&mut DecodeSession],
+    mut timelines: Option<&mut PuTimelines>,
 ) -> (Vec<TickEvent>, TickStats) {
     let n = sessions.len();
     let mut events: Vec<Option<TickEvent>> = Vec::with_capacity(n);
@@ -126,7 +141,6 @@ pub fn tick(
     let mut stats = TickStats::default();
 
     // ---- phase 1: collect every session's pending request ------------
-    type FuseKey = (VariantKey, KernelPath, usize);
     let mut groups: HashMap<FuseKey, Vec<(usize, EngineRequest)>> = HashMap::new();
     let mut singles: Vec<(usize, EngineRequest)> = Vec::new();
     for (i, s) in sessions.iter_mut().enumerate() {
@@ -142,18 +156,26 @@ pub fn tick(
 
     // ---- phase 2: mono spec-steps run as singleton dispatches ---------
     for (i, req) in &singles {
-        events[*i] = Some(run_single(engine, &mut *sessions[*i], req, &mut stats));
+        events[*i] =
+            Some(run_single(engine, &mut *sessions[*i], req, &mut stats, &mut timelines));
     }
 
-    // ---- phase 3: fused groups ----------------------------------------
-    for ((variant, kernel, bucket), group) in groups {
-        let sizes = compiled_batches(engine, variant, kernel, bucket);
+    // ---- phase 3: fused groups, one dispatch sequence per PU ----------
+    // Sort groups on the fusion key so dispatch order — and with it the
+    // per-PU timeline placement — is deterministic run-to-run.
+    let mut groups: Vec<(FuseKey, Vec<(usize, EngineRequest)>)> = groups.into_iter().collect();
+    groups.sort_by_key(|(key, _)| *key);
+    for (key, group) in groups {
+        let (variant, kernel, bucket, pu) = key;
+        let sizes = compiled_batches(engine, key);
         let batched_possible = *sizes.last().unwrap() > 1;
         let spec = match engine.manifest.model_for(variant) {
             Ok(s) => s.clone(),
             Err(_) => {
                 for (i, req) in &group {
-                    events[*i] = Some(run_single(engine, &mut *sessions[*i], req, &mut stats));
+                    events[*i] = Some(run_single(
+                        engine, &mut *sessions[*i], req, &mut stats, &mut timelines,
+                    ));
                 }
                 continue;
             }
@@ -166,7 +188,9 @@ pub fn tick(
                 // No batched artifact for this key (e.g. the Pallas
                 // lowering is batch-1 only): unbatched fallback.
                 for (i, req) in chunk {
-                    events[*i] = Some(run_single(engine, &mut *sessions[*i], req, &mut stats));
+                    events[*i] = Some(run_single(
+                        engine, &mut *sessions[*i], req, &mut stats, &mut timelines,
+                    ));
                 }
                 continue;
             }
@@ -183,8 +207,9 @@ pub fn tick(
                     // Shared dispatch failed: retry each lane unbatched so
                     // one bad group member can't sink its co-batchees.
                     for (i, req) in chunk {
-                        events[*i] =
-                            Some(run_single(engine, &mut *sessions[*i], req, &mut stats));
+                        events[*i] = Some(run_single(
+                            engine, &mut *sessions[*i], req, &mut stats, &mut timelines,
+                        ));
                     }
                     continue;
                 }
@@ -195,30 +220,24 @@ pub fn tick(
             if m > 1 {
                 stats.fused_dispatches += 1;
             }
+            // The full exec_b-lane batched dispatch: the PU timeline is
+            // occupied for its entire duration; each of the m sharing
+            // sessions is charged an even share of it (padding lanes are
+            // overhead the sharers absorb; no simulated time vanishes).
+            let duration =
+                lat.batched_forward_latency(&spec, variant.scheme, pu, bucket, exec_b);
+            let sim_share = duration / m as f64;
             let real_share = fwd.elapsed_s / m as f64;
-            // Each session's share of the executed dispatch: the full
-            // exec_b-lane batched cost split across the m sharers. The PU
-            // is uniform across a chunk in practice (one Policy mapping
-            // per worker), so compute once and only recompute on the
-            // off-chance two sessions mapped the same role differently.
-            let chunk_pu = match chunk[0].1.kind {
-                RequestKind::Forward { pu, .. } => pu,
-                RequestKind::MonoStep { .. } => unreachable!("mono is never grouped"),
-            };
-            let chunk_sim =
-                lat.batched_forward_latency(&spec, variant.scheme, chunk_pu, bucket, exec_b)
-                    / m as f64;
-            for (row, (i, req)) in chunk.iter().enumerate() {
-                let pu = match req.kind {
-                    RequestKind::Forward { pu, .. } => pu,
-                    RequestKind::MonoStep { .. } => unreachable!("mono is never grouped"),
-                };
-                let sim_share = if pu == chunk_pu {
-                    chunk_sim
-                } else {
-                    lat.batched_forward_latency(&spec, variant.scheme, pu, bucket, exec_b)
-                        / m as f64
-                };
+            let span = timelines.as_deref_mut().map(|tl| {
+                // The shared dispatch can start only once every sharer's
+                // inputs exist (the readiness rule's `inputs_ready`).
+                let inputs_ready = chunk
+                    .iter()
+                    .map(|(i, _)| sessions[*i].ready_s())
+                    .fold(0.0, f64::max);
+                tl.dispatch(pu.id(), inputs_ready, duration)
+            });
+            for (row, (i, _req)) in chunk.iter().enumerate() {
                 let reply = EngineReply::Forward(ForwardReply {
                     fwd: &fwd,
                     row,
@@ -230,6 +249,9 @@ pub fn tick(
                     Ok(StepProgress::Pending) => TickEvent::Pending,
                     Err(_) => TickEvent::Failed,
                 });
+                if let Some(span) = span {
+                    sessions[*i].set_ready_s(span.end);
+                }
             }
         }
     }
@@ -241,18 +263,40 @@ pub fn tick(
     (events, stats)
 }
 
-/// Execute one request unbatched through the session's own singleton path.
+/// Execute one request unbatched through the session's own singleton path,
+/// scheduling it on the routed PU timeline when one is supplied (mono
+/// rounds occupy — block — the secondary mapped PU too).
 fn run_single(
     engine: &Engine,
     session: &mut DecodeSession,
     req: &EngineRequest,
     stats: &mut TickStats,
+    timelines: &mut Option<&mut PuTimelines>,
 ) -> TickEvent {
+    let sim_before = session.outcome().sim_s;
     match session.execute(engine, req) {
         Ok(progress) => {
             stats.dispatches += 1;
             stats.lanes_real += 1;
             stats.lanes_executed += 1;
+            if let Some(tl) = timelines.as_deref_mut() {
+                let duration = (session.outcome().sim_s - sim_before).max(0.0);
+                let blocked_buf;
+                let blocked: &[PuId] = match req.route.blocks {
+                    Some(b) => {
+                        blocked_buf = [b.id()];
+                        &blocked_buf
+                    }
+                    None => &[],
+                };
+                let span = tl.dispatch_blocking(
+                    req.route.primary.id(),
+                    blocked,
+                    session.ready_s(),
+                    duration,
+                );
+                session.set_ready_s(span.end);
+            }
             match progress {
                 StepProgress::Round(out) => TickEvent::Round(out),
                 StepProgress::Pending => TickEvent::Pending,

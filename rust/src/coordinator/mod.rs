@@ -7,8 +7,11 @@
 //! * [`fuser`] — the cross-session fused batch executor: every scheduler
 //!   tick collects all live sessions' pending
 //!   [`EngineRequest`](crate::spec::EngineRequest)s, dispatches each
-//!   (variant, kernel, bucket) group as one `Engine::forward_batch` call
-//!   and scatters the logits rows back through the sessions' `apply`
+//!   (variant, kernel, bucket, pu) group as one `Engine::forward_batch`
+//!   call, scatters the logits rows back through the sessions' `apply`,
+//!   and schedules every dispatch on the worker's per-PU timelines
+//!   ([`crate::hetero::PuTimelines`]) so heterogeneous draft/verify
+//!   dispatches overlap across co-scheduled sessions
 //! * [`batcher`] — the legacy lockstep static-batching reference (the
 //!   serving path now batches through [`fuser`] instead)
 //! * [`worker`] — engine worker threads (one PJRT engine each), each

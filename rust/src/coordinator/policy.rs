@@ -169,6 +169,33 @@ impl Policy {
         }
     }
 
+    /// Cost-model prediction of the cross-PU overlap fraction the per-PU
+    /// timelines should approach for a γ decided at `seq_len` under this
+    /// policy's *own* mapping (0 for homogeneous mappings — there is only
+    /// one timeline to occupy). Serving-side twin of the bound the
+    /// `overlap` experiment evaluates at its explicit mapping via
+    /// [`costmodel::predicted_overlap_frac`]: compare it against the live
+    /// `Report::overlap_frac` to see whether co-scheduling is dense
+    /// enough to realize the mapping's predicted concurrency.
+    pub fn predicted_overlap(
+        &self,
+        d_spec: &crate::models::ModelSpec,
+        t_spec: &crate::models::ModelSpec,
+        gamma: usize,
+        seq_len: usize,
+    ) -> f64 {
+        if !self.mapping.is_heterogeneous() {
+            return 0.0;
+        }
+        let c = self.lat.cost_coefficient(
+            (d_spec, Scheme::Fp),
+            (t_spec, Scheme::W8a8),
+            self.mapping,
+            seq_len,
+        );
+        costmodel::predicted_overlap_frac(gamma as f64, c)
+    }
+
     /// Feed back an observed per-request acceptance rate.
     pub fn observe_alpha(&self, task: &str, observed: f64) {
         if !observed.is_finite() || !self.adaptive {
@@ -277,6 +304,19 @@ mod tests {
         let dec = p.route_round("translate", &d, &t, 63, 10, 1.0);
         assert!(!dec.speculative);
         assert_eq!(dec.gamma, 0);
+    }
+
+    #[test]
+    fn predicted_overlap_heterogeneous_only() {
+        let (d, t) = specs();
+        let het = policy(&RunConfig::default());
+        let f = het.predicted_overlap(&d, &t, 5, 63);
+        assert!(f > 0.0 && f <= 1.0, "{f}");
+        // Homogeneous mapping: one timeline, nothing to overlap.
+        let hom = policy(&RunConfig { heterogeneous: false, ..RunConfig::default() });
+        assert_eq!(hom.predicted_overlap(&d, &t, 5, 63), 0.0);
+        // No speculation, no draft/verify split.
+        assert_eq!(het.predicted_overlap(&d, &t, 0, 63), 0.0);
     }
 
     #[test]

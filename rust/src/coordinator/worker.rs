@@ -12,9 +12,14 @@
 //!    *at a round boundary*, so γ and speculate-on/off are re-decided per
 //!    round from the session's running α (the cost model in the hot loop);
 //! 3. **tick** — every live session plans its next forward; the fuser
-//!    groups compatible requests into shared batched dispatches and
-//!    scatters the logits back (`cfg.fuse = false` reverts to per-session
-//!    stepping for A/B comparisons);
+//!    groups compatible requests into shared batched dispatches — one
+//!    dispatch group per routed PU — scatters the logits back, and
+//!    schedules each dispatch on the worker's per-PU timelines
+//!    ([`PuTimelines`]): with `cfg.hetero_overlap` on, draft forwards on
+//!    one PU of a heterogeneous mapping overlap co-scheduled sessions'
+//!    verify forwards on the other; off, a serialized single-clock
+//!    timeline reproduces the pre-overlap behavior (`cfg.fuse = false`
+//!    reverts to per-session stepping for A/B comparisons);
 //! 4. **retire** — sessions whose round completed stream their newly
 //!    committed tokens; finished sessions emit the final
 //!    [`EngineResponse`].
@@ -28,7 +33,7 @@
 //! [`batcher`](super::batcher) loop, the true pre-fusion A/B baseline.
 
 use crate::config::{KernelPath, RunConfig};
-use crate::hetero::{LatencyModel, Platform};
+use crate::hetero::{LatencyModel, Platform, PuTimelines, TimelineSnapshot};
 use crate::metrics::{Metrics, RequestRecord, RoundRecord};
 use crate::models::ModelSpec;
 use crate::runtime::Engine;
@@ -56,6 +61,9 @@ struct LiveSession {
     admitted_speculative: bool,
     admitted_gamma: usize,
     rounds: usize,
+    /// Simulated timeline position at admission (per-PU timeline mode):
+    /// per-request timeline latency = session finish − this.
+    tl_admit_s: f64,
 }
 
 /// Worker main loop (runs on its own thread).
@@ -155,6 +163,19 @@ pub fn run_worker(
     let mut live: Vec<LiveSession> = Vec::new();
     let mut queue_open = true;
 
+    // Per-PU timelines for the tick scheduler: overlapped when the knob is
+    // on (dispatches routed to different PUs of the mapping proceed
+    // concurrently), single-clock serialized otherwise — identical
+    // dispatches and per-session charges either way, so `hetero_overlap:
+    // false` reproduces the pre-overlap behavior bit-for-bit while still
+    // reporting the serialized makespan for A/B comparison.
+    let mut timelines = if cfg.hetero_overlap {
+        PuTimelines::new()
+    } else {
+        PuTimelines::serialized()
+    };
+    let mut tl_reported = TimelineSnapshot::default();
+
     loop {
         // ---- admit: top up the in-flight set -------------------------
         // On shutdown, stop admitting but finish the (bounded) in-flight
@@ -175,8 +196,16 @@ pub fn run_worker(
                     None => break,
                 }
             };
-            live.push(admit(&cfg, &engine, &lat, &policy, &d_spec, &t_spec,
-                            item, drafter, target, serving_kernel));
+            let mut ls = admit(&cfg, &engine, &lat, &policy, &d_spec, &t_spec,
+                               item, drafter, target, serving_kernel);
+            // A session admitted mid-stream starts at the worker's
+            // current simulated "now" (the earliest frontier among PUs
+            // the workload actually uses): its first dispatch cannot
+            // reach back before that, and its timeline latency is
+            // measured from here.
+            ls.tl_admit_s = timelines.now();
+            ls.session.set_ready_s(ls.tl_admit_s);
+            live.push(ls);
         }
         if live.is_empty() {
             if !queue_open || shutdown.load(Ordering::SeqCst) {
@@ -207,13 +236,18 @@ pub fn run_worker(
         let events = if cfg.fuse {
             let mut refs: Vec<&mut DecodeSession> =
                 live.iter_mut().map(|ls| &mut ls.session).collect();
-            let (events, stats) = fuser::tick(&engine, &lat, &mut refs);
+            let (events, stats) = fuser::tick(&engine, &lat, &mut refs, Some(&mut timelines));
             metrics.record_dispatches(
                 stats.dispatches as u64,
                 stats.fused_dispatches as u64,
                 stats.lanes_real as u64,
                 stats.lanes_executed as u64,
             );
+            // Push this tick's timeline growth (all deltas, makespan
+            // included, sum across workers' independent timelines).
+            let snap = timelines.snapshot();
+            metrics.record_timeline(&snap, &tl_reported);
+            tl_reported = snap;
             events
         } else {
             // Unfused A/B path: one full round per session per tick, each
@@ -249,7 +283,12 @@ pub fn run_worker(
                         finish_round(&metrics, &mut live[idx], out, inflight_now);
                     if done {
                         let ls = live.remove(idx);
-                        retire(&tokenizer, &metrics, &policy, ls);
+                        let tl_s = if cfg.fuse {
+                            Some((ls.session.ready_s() - ls.tl_admit_s).max(0.0))
+                        } else {
+                            None
+                        };
+                        retire(&tokenizer, &metrics, &policy, ls, tl_s);
                     }
                 }
             }
@@ -333,6 +372,7 @@ fn admit(
         admitted_speculative: decision.speculative,
         admitted_gamma: decision.gamma,
         rounds: 0,
+        tl_admit_s: 0.0,
     }
 }
 
@@ -363,7 +403,7 @@ fn serve_single(
             Err(_) => return, // dropped senders signal the error
             Ok(out) => {
                 if finish_round(metrics, &mut ls, out, 1) {
-                    retire(tokenizer, metrics, policy, ls);
+                    retire(tokenizer, metrics, policy, ls, None);
                     return;
                 }
             }
@@ -444,10 +484,21 @@ fn serve_lockstep(
     }
 }
 
-/// Account for and answer one finished session.
-fn retire(tokenizer: &Tokenizer, metrics: &Metrics, policy: &Policy, ls: LiveSession) {
+/// Account for and answer one finished session. `tl_latency` is the
+/// request's end-to-end latency on the per-PU timelines (admission →
+/// last dispatch end), when the worker tracked one.
+fn retire(
+    tokenizer: &Tokenizer,
+    metrics: &Metrics,
+    policy: &Policy,
+    ls: LiveSession,
+    tl_latency: Option<f64>,
+) {
     let outcome = ls.session.into_outcome();
     policy.observe_alpha(&ls.task, outcome.alpha());
+    if let Some(t) = tl_latency {
+        metrics.record_timeline_latency(t);
+    }
     metrics.record(RequestRecord {
         sim_s: outcome.sim_s,
         real_s: outcome.real_s,

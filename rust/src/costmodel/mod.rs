@@ -23,6 +23,21 @@
 //! shrinks toward `1/b` of the single-stream figure while compute time is
 //! unchanged. The per-stream speedup model above is unaffected; only the
 //! overhead term the simulated clock accrues per call changes.
+//!
+//! **Heterogeneous overlap.** Eq. (1) also prices draft and verify as if
+//! they serialized even across PUs. With per-PU timelines
+//! ([`crate::hetero::PuTimelines`]; `hetero_overlap` config knob) a
+//! heterogeneous mapping runs one session's drafts on one PU while
+//! co-scheduled sessions verify on the other, under the readiness rule
+//! `start = max(pu_ready, inputs_ready)`. In the steady-state pipeline
+//! bound, per round the drafter PU is busy `γc` and the target PU `1`
+//! (units of t_target), so the overlappable fraction is
+//! [`predicted_overlap_frac`] `= min(γc, 1) / max(γc, 1)` and the
+//! makespan contracts by [`predicted_pipeline_speedup`]
+//! `= (γc + 1) / max(γc, 1)` — a *multiplicative* throughput factor on
+//! top of Eq. (1) that exists only for heterogeneous mappings, which is
+//! precisely the paper's joint-benefit claim. The `overlap` experiment
+//! compares this bound against the simulated timelines.
 
 /// Maximum draft length the search considers (the paper sweeps 0..=5; we
 /// allow a little headroom for the extension experiments).
@@ -59,6 +74,45 @@ pub fn expected_tokens_per_round(alpha: f64, gamma: usize) -> f64 {
 /// Speculation is worth anything at all only if c < α (paper §II-B).
 pub fn feasible(alpha: f64, c: f64) -> bool {
     c < alpha
+}
+
+/// Predicted fraction of the heterogeneous makespan during which *both*
+/// PUs compute, in the steady-state pipeline bound: per round the drafter
+/// PU is busy `γ·c` and the target PU `1` (in units of t_target), so with
+/// enough co-scheduled sessions the smaller side hides entirely under the
+/// larger and the makespan contracts from `γc + 1` to `max(γc, 1)`:
+///
+/// ```text
+/// overlap_frac = min(γc, 1) / max(γc, 1)
+/// ```
+///
+/// This is what the per-PU timeline simulation should approach from below
+/// as in-flight sessions increase (pipeline fill/drain and fusion
+/// re-phasing keep it under the bound); the `overlap` experiment reports
+/// predicted vs simulated. γ ≤ 0 (no speculation: one PU only) is 0.
+///
+/// `gamma` is fractional so a *mixed* co-scheduled set prices correctly:
+/// sessions with draft lengths γ₁..γₙ put `Σγᵢ·c` draft time against `n`
+/// verify units per round, which is this bound at the mean γ.
+pub fn predicted_overlap_frac(gamma: f64, c: f64) -> f64 {
+    if gamma <= 0.0 || c <= 0.0 {
+        return 0.0;
+    }
+    let gc = gamma * c;
+    gc.min(1.0) / gc.max(1.0)
+}
+
+/// The matching pipeline-bound makespan contraction: serialized time
+/// `γc + 1` over overlapped time `max(γc, 1)` per round — the *additional*
+/// throughput factor heterogeneous overlap buys on top of Eq. (1)'s
+/// single-stream speedup (1.0 when γ ≤ 0). Fractional γ prices a mixed
+/// co-scheduled set, as in [`predicted_overlap_frac`].
+pub fn predicted_pipeline_speedup(gamma: f64, c: f64) -> f64 {
+    if gamma <= 0.0 || c <= 0.0 {
+        return 1.0;
+    }
+    let gc = gamma * c;
+    (gc + 1.0) / gc.max(1.0)
 }
 
 /// Result of the γ search for one (α, c) operating point.
@@ -183,6 +237,31 @@ mod tests {
         let c = c_for_speedup(0.9, 5, 1.68);
         assert!((speedup(0.9, 5, c) - 1.68).abs() < 1e-9);
         assert!((c - 0.358).abs() < 0.01, "{c}");
+    }
+
+    #[test]
+    fn predicted_overlap_bounds_and_balance_point() {
+        // No speculation → single-PU execution, nothing to overlap.
+        assert_eq!(predicted_overlap_frac(0.0, 0.5), 0.0);
+        assert_eq!(predicted_pipeline_speedup(0.0, 0.5), 1.0);
+        // Perfect balance (γc = 1): both PUs fully busy → overlap 1, and
+        // the pipeline bound halves the serialized makespan.
+        assert!((predicted_overlap_frac(2.0, 0.5) - 1.0).abs() < 1e-12);
+        assert!((predicted_pipeline_speedup(2.0, 0.5) - 2.0).abs() < 1e-12);
+        // Paper operating point (γ=5, c≈0.358): drafts dominate.
+        let f = predicted_overlap_frac(5.0, 0.358);
+        assert!((f - 1.0 / (5.0 * 0.358)).abs() < 1e-12);
+        // Fractional γ (a mixed set's mean, e.g. γ ∈ {2, 5} → 3.5).
+        assert!((predicted_overlap_frac(3.5, 0.2) - 0.7).abs() < 1e-12);
+        // Bounds: 0 ≤ frac ≤ 1, speedup ∈ (1, 2].
+        for g in 1..=8 {
+            for c in [0.1, 0.358, 0.73, 1.5] {
+                let f = predicted_overlap_frac(g as f64, c);
+                assert!((0.0..=1.0).contains(&f), "g={g} c={c} f={f}");
+                let s = predicted_pipeline_speedup(g as f64, c);
+                assert!(s > 1.0 && s <= 2.0 + 1e-12, "g={g} c={c} s={s}");
+            }
+        }
     }
 
     #[test]

@@ -8,6 +8,7 @@ pub mod deviation;
 pub mod fig5;
 pub mod fig6;
 pub mod fig7;
+pub mod overlap;
 pub mod tables;
 
 use crate::config::RunConfig;
@@ -64,10 +65,11 @@ pub fn run(ctx: &Ctx, which: &str) -> anyhow::Result<()> {
         "fig7b" => fig7::run_measured(ctx),
         "deviation" => deviation::run(ctx),
         "alpha" => alpha::run(ctx),
+        "overlap" => overlap::run(ctx),
         "all" => {
             for id in [
                 "table2", "table3", "fig6a", "fig6b", "fig7a", "fig5a", "fig5b",
-                "fig7b", "deviation",
+                "fig7b", "deviation", "overlap",
             ] {
                 println!("\n=== experiment {id} ===");
                 run(ctx, id)?;
@@ -76,7 +78,7 @@ pub fn run(ctx: &Ctx, which: &str) -> anyhow::Result<()> {
         }
         other => anyhow::bail!(
             "unknown experiment {other:?} (fig5a fig5b fig6a fig6b table2 table3 \
-             fig7a fig7b deviation alpha all)"
+             fig7a fig7b deviation alpha overlap all)"
         ),
     }
 }

@@ -1,0 +1,185 @@
+//! Heterogeneous draft/verify overlap — the per-PU timeline experiment.
+//!
+//! The paper's central claim is that speculative sampling and
+//! heterogeneous execution are *jointly* beneficial. A single serialized
+//! clock can never show the joint part: with the drafter mapped to the
+//! GPU and the target to the CPU cluster, one session's draft forwards
+//! can only overlap *co-scheduled* sessions' verify forwards if each PU
+//! has its own timeline. This driver runs the same co-scheduled session
+//! sets under both timeline modes and reports, per in-flight count:
+//!
+//! * the serialized makespan (`hetero_overlap: false` — equal to the
+//!   summed per-PU busy time, conservation-checked),
+//! * the overlapped makespan, the resulting measured makespan speedup
+//!   and the cost model's pipeline-bound prediction
+//!   ([`costmodel::predicted_pipeline_speedup`]),
+//! * the simulated overlap fraction vs the steady-state bound
+//!   ([`costmodel::predicted_overlap_frac`]), both evaluated at the mean
+//!   γ of the sessions *actually co-scheduled at that in-flight count*.
+//!
+//! Sessions are given *staggered* draft lengths (γ cycling over 2..=5) so
+//! their draft and verify phases de-phase: in any tick some sessions are
+//! drafting on the GPU while others verify on the CPU. Identically-phased
+//! sessions would instead fuse into one shared dispatch per tick —
+//! batching, the *other* axis of concurrency — and leave nothing to
+//! overlap.
+
+use crate::config::{ExecMode, KernelPath};
+use crate::coordinator::fuser::{self, TickEvent};
+use crate::costmodel;
+use crate::hetero::{LatencyModel, Mapping, PuId, PuTimelines};
+use crate::models::{Scheme, VariantKey};
+use crate::runtime::Engine;
+use crate::spec::{AcceptRule, DecodeSession, DecoderSetup};
+use crate::workload::prompt_ids;
+
+use super::Ctx;
+
+const GAMMAS: &[usize] = &[2, 3, 4, 5];
+const MAX_NEW: usize = 24;
+
+fn setup(gamma: usize) -> DecoderSetup {
+    DecoderSetup {
+        drafter: VariantKey::parse("drafter_fp").unwrap(),
+        target: VariantKey::parse("target_w8a8").unwrap(),
+        kernel: KernelPath::Ref,
+        mapping: Mapping::heterogeneous(1),
+        gamma,
+        rule: AcceptRule::Greedy,
+        exec: ExecMode::Modular,
+        max_new: MAX_NEW,
+    }
+}
+
+/// Tick `sessions` to completion on `tl` through the fused executor —
+/// the one timeline drive loop, shared with the overlap e2e tests.
+pub fn drive_to_completion(
+    engine: &Engine,
+    lat: &LatencyModel,
+    sessions: &mut [DecodeSession],
+    tl: &mut PuTimelines,
+) -> anyhow::Result<()> {
+    let mut ticks = 0usize;
+    loop {
+        let mut refs: Vec<&mut DecodeSession> =
+            sessions.iter_mut().filter(|s| !s.is_done()).collect();
+        if refs.is_empty() {
+            return Ok(());
+        }
+        let (events, _stats) = fuser::tick(engine, lat, &mut refs, Some(&mut *tl));
+        anyhow::ensure!(
+            !events.iter().any(|e| matches!(e, TickEvent::Failed)),
+            "session failed during timeline drive"
+        );
+        ticks += 1;
+        anyhow::ensure!(ticks < 100_000, "timeline drive failed to converge");
+    }
+}
+
+struct ModeResult {
+    makespan: f64,
+    busy_cpu: f64,
+    busy_gpu: f64,
+    overlap_s: f64,
+    tokens: Vec<Vec<u32>>,
+}
+
+/// Drive `n` staggered sessions to completion through the fused tick
+/// executor against the given timeline mode.
+fn run_mode(ctx: &Ctx, prompts: &[Vec<u32>], overlapped: bool) -> anyhow::Result<ModeResult> {
+    let mut tl = if overlapped {
+        PuTimelines::new()
+    } else {
+        PuTimelines::serialized()
+    };
+    let mut sessions: Vec<DecodeSession> = prompts
+        .iter()
+        .enumerate()
+        .map(|(i, p)| {
+            DecodeSession::new(&ctx.engine, ctx.lat.clone(), setup(GAMMAS[i % GAMMAS.len()]),
+                               true, p)
+        })
+        .collect();
+    drive_to_completion(&ctx.engine, &ctx.lat, &mut sessions, &mut tl)?;
+    Ok(ModeResult {
+        makespan: tl.makespan(),
+        busy_cpu: tl.busy(PuId::Cpu),
+        busy_gpu: tl.busy(PuId::Gpu),
+        overlap_s: tl.overlap_s(),
+        tokens: sessions.into_iter().map(|s| s.into_outcome().tokens).collect(),
+    })
+}
+
+/// Mean γ of the first `n` staggered sessions — the operating point the
+/// pipeline bound is evaluated at for that in-flight count.
+fn mean_gamma(n: usize) -> f64 {
+    (0..n).map(|i| GAMMAS[i % GAMMAS.len()] as f64).sum::<f64>() / n as f64
+}
+
+pub fn run(ctx: &Ctx) -> anyhow::Result<()> {
+    let d = ctx.engine.manifest.model_for(VariantKey::parse("drafter_fp").unwrap())?;
+    let t = ctx.engine.manifest.model_for(VariantKey::parse("target_w8a8").unwrap())?;
+    let c = ctx.lat.cost_coefficient(
+        (d, Scheme::Fp), (t, Scheme::W8a8), Mapping::heterogeneous(1), 63);
+
+    let samples: Vec<_> = ctx
+        .engine
+        .manifest
+        .eval_samples
+        .iter()
+        .filter(|s| s.task == "translate")
+        .cloned()
+        .collect();
+    anyhow::ensure!(!samples.is_empty(), "eval set has no translate samples");
+
+    let max_n = ctx.limit.unwrap_or(8).clamp(1, 16);
+    println!("Overlap — per-PU timelines, drafter@GPU / target@CPU (c = {c:.3}):");
+    println!(
+        "{:<10} {:>12} {:>12} {:>8} {:>9} {:>10} {:>10} {:>9} {:>9}",
+        "inflight", "serial_ms", "overlap_ms", "speedup", "pred_spd",
+        "busy_cpu", "busy_gpu", "sim_frac", "pred_frac"
+    );
+    let mut csv = String::from(
+        "inflight,serialized_makespan_s,overlapped_makespan_s,speedup,\
+         predicted_pipeline_speedup,busy_cpu_s,busy_gpu_s,overlap_s,\
+         sim_overlap_frac,predicted_overlap_frac\n",
+    );
+    for n in [1usize, 2, 4, 8] {
+        if n > max_n {
+            break;
+        }
+        let prompts: Vec<Vec<u32>> = (0..n)
+            .map(|i| prompt_ids(&ctx.tokenizer, &samples[i % samples.len()]))
+            .collect::<anyhow::Result<_>>()?;
+        let serial = run_mode(ctx, &prompts, false)?;
+        let over = run_mode(ctx, &prompts, true)?;
+        // The timeline mode must not change what is decoded…
+        anyhow::ensure!(over.tokens == serial.tokens, "timeline mode changed tokens");
+        // …and the serialized makespan must conserve the busy sum.
+        anyhow::ensure!(
+            (serial.makespan - (serial.busy_cpu + serial.busy_gpu)).abs()
+                < 1e-9 * serial.makespan.max(1.0),
+            "serialized makespan {} != busy sum {}",
+            serial.makespan,
+            serial.busy_cpu + serial.busy_gpu
+        );
+        // The bound at this row's actual γ mix (n=1 runs only γ=2, …).
+        let g = mean_gamma(n);
+        let pred_frac = costmodel::predicted_overlap_frac(g, c);
+        let pred_speedup = costmodel::predicted_pipeline_speedup(g, c);
+        let speedup = serial.makespan / over.makespan.max(1e-12);
+        let sim_frac = over.overlap_s / over.makespan.max(1e-12);
+        println!(
+            "{:<10} {:>12.2} {:>12.2} {:>8.3} {:>9.3} {:>10.2} {:>10.2} {:>9.3} {:>9.3}",
+            n, serial.makespan * 1e3, over.makespan * 1e3, speedup, pred_speedup,
+            over.busy_cpu * 1e3, over.busy_gpu * 1e3, sim_frac, pred_frac
+        );
+        csv.push_str(&format!(
+            "{n},{:.6},{:.6},{:.4},{:.4},{:.6},{:.6},{:.6},{:.4},{:.4}\n",
+            serial.makespan, over.makespan, speedup, pred_speedup,
+            over.busy_cpu, over.busy_gpu, over.overlap_s, sim_frac, pred_frac
+        ));
+    }
+    ctx.write_csv("overlap.csv", &csv)?;
+    Ok(())
+}

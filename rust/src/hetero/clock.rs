@@ -1,8 +1,30 @@
-//! Virtual clock: accrues simulated device-seconds while real execution
-//! happens on the PJRT CPU client. Thread-safe; one clock per request (and
-//! an aggregate per engine) so per-request simulated latency is exact.
+//! Simulated time.
+//!
+//! Two models live here:
+//!
+//! * [`VirtualClock`] — the original single accumulating clock: accrues
+//!   simulated device-seconds while real execution happens on the PJRT
+//!   CPU client. Thread-safe; one clock per request (and an aggregate per
+//!   engine) so per-request simulated latency is exact. A single clock
+//!   *serializes* everything charged to it — fine for one request's own
+//!   compute cost, blind to cross-PU parallelism.
+//!
+//! * [`PuTimelines`] — the per-PU timeline model behind heterogeneous
+//!   overlap: one ready-time per physical PU ([`PuId`]), each dispatch
+//!   charged to the timeline its [`PuRoute`](super::pu::PuRoute) names and
+//!   started at `max(pu_ready, inputs_ready)`. Dispatches routed to
+//!   *different* PUs with satisfied inputs proceed concurrently, so one
+//!   session's draft forwards on the GPU overlap co-scheduled sessions'
+//!   verify forwards on the CPU cluster — the joint benefit the paper's
+//!   cost model predicts for heterogeneous mappings. The timelines also
+//!   account per-PU busy time, exact cross-PU overlap seconds, and the
+//!   merged makespan, which is what the overlap experiments report
+//!   against the cost model's prediction.
 
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
+
+use super::pu::{PuId, NUM_PUS};
 
 /// Nanosecond-resolution virtual clock.
 #[derive(Debug, Default)]
@@ -15,11 +37,15 @@ impl VirtualClock {
         VirtualClock::default()
     }
 
-    /// Advance by `seconds` of simulated time.
-    pub fn advance(&self, seconds: f64) {
+    /// Advance by `seconds` of simulated time and return the new timestamp
+    /// (seconds), so callers don't have to re-read via [`Self::seconds`] —
+    /// under concurrent advancers a separate read could observe other
+    /// threads' increments interleaved between the add and the load.
+    pub fn advance(&self, seconds: f64) -> f64 {
         debug_assert!(seconds >= 0.0 && seconds.is_finite());
         let ns = (seconds * 1e9).round() as u64;
-        self.nanos.fetch_add(ns, Ordering::Relaxed);
+        let now = self.nanos.fetch_add(ns, Ordering::Relaxed) + ns;
+        now as f64 * 1e-9
     }
 
     /// Current simulated time in seconds.
@@ -32,15 +58,248 @@ impl VirtualClock {
     }
 }
 
+/// One scheduled dispatch's simulated interval.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Span {
+    pub start: f64,
+    pub end: f64,
+}
+
+/// Point-in-time accounting snapshot of a [`PuTimelines`] (used by the
+/// worker to push per-tick deltas into the shared metrics sink).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct TimelineSnapshot {
+    /// Σ dispatch durations charged to each PU.
+    pub busy: [f64; NUM_PUS],
+    /// Dispatches charged to each PU.
+    pub dispatches: [u64; NUM_PUS],
+    /// Seconds during which more than one PU was busy (exact).
+    pub overlap_s: f64,
+    /// Latest ready time across all PUs — the simulated makespan.
+    pub makespan: f64,
+}
+
+/// Per-PU simulated timelines with exact cross-PU overlap accounting.
+///
+/// The **readiness rule**: a dispatch routed to PU *p* with inputs
+/// available at `inputs_ready` starts at `max(ready[p], inputs_ready)`
+/// and occupies *p* until `start + duration`. Dispatches on one PU
+/// serialize; dispatches on different PUs overlap whenever their input
+/// dependencies allow.
+///
+/// In **serialized** mode ([`PuTimelines::serialized`]) every dispatch
+/// blocks *all* PUs — the single-`VirtualClock` behavior, where the
+/// makespan is exactly the sum of all dispatch durations. This is the
+/// `hetero_overlap: false` A/B baseline: identical dispatches, identical
+/// per-session charges, no cross-PU concurrency.
+#[derive(Debug, Clone)]
+pub struct PuTimelines {
+    /// Earliest time each PU can start its next dispatch.
+    ready: [f64; NUM_PUS],
+    busy: [f64; NUM_PUS],
+    dispatches: [u64; NUM_PUS],
+    overlap_s: f64,
+    /// Recent busy intervals per PU, ascending, pruned once no future
+    /// dispatch on another PU can reach back into them (every future start
+    /// on PU q is ≥ ready[q], so intervals ending at or before
+    /// `min_{q≠p} ready[q]` can never intersect a new dispatch again).
+    intervals: [VecDeque<(f64, f64)>; NUM_PUS],
+    /// Serialized (single-clock) mode: dispatches block every PU.
+    serialize: bool,
+}
+
+impl Default for PuTimelines {
+    fn default() -> PuTimelines {
+        PuTimelines::new()
+    }
+}
+
+impl PuTimelines {
+    /// Overlapped per-PU timelines (the heterogeneous-overlap model).
+    pub fn new() -> PuTimelines {
+        PuTimelines {
+            ready: [0.0; NUM_PUS],
+            busy: [0.0; NUM_PUS],
+            dispatches: [0; NUM_PUS],
+            overlap_s: 0.0,
+            intervals: std::array::from_fn(|_| VecDeque::new()),
+            serialize: false,
+        }
+    }
+
+    /// Single-clock A/B baseline: every dispatch blocks every PU, so the
+    /// makespan degenerates to the serialized sum of dispatch durations.
+    pub fn serialized() -> PuTimelines {
+        PuTimelines { serialize: true, ..PuTimelines::new() }
+    }
+
+    pub fn is_serialized(&self) -> bool {
+        self.serialize
+    }
+
+    /// Schedule one dispatch on `pu` whose inputs are available at
+    /// `inputs_ready`; returns the interval it occupies.
+    pub fn dispatch(&mut self, pu: PuId, inputs_ready: f64, duration: f64) -> Span {
+        self.dispatch_blocking(pu, &[], inputs_ready, duration)
+    }
+
+    /// Schedule one dispatch on `pu` that additionally *occupies* the
+    /// `blocked` PUs for its duration without charging them busy time —
+    /// the monolithic fused round, whose single graph spans both mapped
+    /// partitions (see [`super::pu::PuRoute::mono`]). Blocked PUs accrue
+    /// no busy seconds and no overlap (the fused graph's draft and verify
+    /// phases are internally sequential).
+    pub fn dispatch_blocking(
+        &mut self,
+        pu: PuId,
+        blocked: &[PuId],
+        inputs_ready: f64,
+        duration: f64,
+    ) -> Span {
+        debug_assert!(duration >= 0.0 && duration.is_finite());
+        debug_assert!(inputs_ready >= 0.0 && inputs_ready.is_finite());
+        let p = pu.index();
+        let mut start = self.ready[p].max(inputs_ready);
+        if self.serialize {
+            // Single-clock behavior: queue behind everything.
+            for r in self.ready {
+                start = start.max(r);
+            }
+        } else {
+            for b in blocked {
+                start = start.max(self.ready[b.index()]);
+            }
+        }
+        let end = start + duration;
+        self.busy[p] += duration;
+        self.dispatches[p] += 1;
+        if self.serialize {
+            for r in self.ready.iter_mut() {
+                *r = end;
+            }
+            return Span { start, end };
+        }
+        // Exact cross-PU overlap: intersect with the other PUs' recorded
+        // busy intervals (blocked occupancy is deliberately not recorded).
+        if duration > 0.0 {
+            for q in 0..NUM_PUS {
+                if q == p {
+                    continue;
+                }
+                for &(s, e) in &self.intervals[q] {
+                    let lo = s.max(start);
+                    let hi = e.min(end);
+                    if hi > lo {
+                        self.overlap_s += hi - lo;
+                    }
+                }
+            }
+            // Record, merging with the previous interval when contiguous
+            // (back-to-back dispatches are the common case).
+            match self.intervals[p].back_mut() {
+                Some(last) if start <= last.1 => last.1 = last.1.max(end),
+                _ => self.intervals[p].push_back((start, end)),
+            }
+        }
+        self.ready[p] = end;
+        for b in blocked {
+            let q = b.index();
+            self.ready[q] = self.ready[q].max(end);
+        }
+        self.prune();
+        Span { start, end }
+    }
+
+    /// Drop busy intervals no future dispatch can intersect.
+    fn prune(&mut self) {
+        for p in 0..NUM_PUS {
+            let mut horizon = f64::INFINITY;
+            for (q, &r) in self.ready.iter().enumerate() {
+                if q != p {
+                    horizon = horizon.min(r);
+                }
+            }
+            while let Some(&(_, e)) = self.intervals[p].front() {
+                if e <= horizon {
+                    self.intervals[p].pop_front();
+                } else {
+                    break;
+                }
+            }
+        }
+    }
+
+    /// Earliest ready time across PUs — the soonest any dispatch could
+    /// start (0 before any dispatch).
+    pub fn min_ready(&self) -> f64 {
+        let m = self.ready.iter().copied().fold(f64::INFINITY, f64::min);
+        if m.is_finite() {
+            m
+        } else {
+            0.0
+        }
+    }
+
+    /// Simulated "now" for newly admitted work: the earliest ready time
+    /// among PUs that have actually dispatched. A PU the workload never
+    /// touches (the GPU under a homogeneous mapping or baseline decode)
+    /// stays at 0 forever and must not pin admission time to 0 — that
+    /// would turn per-request timeline latencies into absolute finish
+    /// times. 0 before any dispatch at all.
+    pub fn now(&self) -> f64 {
+        let m = self
+            .ready
+            .iter()
+            .zip(&self.dispatches)
+            .filter(|(_, &d)| d > 0)
+            .map(|(&r, _)| r)
+            .fold(f64::INFINITY, f64::min);
+        if m.is_finite() {
+            m
+        } else {
+            0.0
+        }
+    }
+
+    /// Latest ready time across PUs — the simulated makespan so far.
+    pub fn makespan(&self) -> f64 {
+        self.ready.iter().copied().fold(0.0, f64::max)
+    }
+
+    /// Σ dispatch durations charged to `pu`.
+    pub fn busy(&self, pu: PuId) -> f64 {
+        self.busy[pu.index()]
+    }
+
+    /// Idle seconds on `pu` up to the current makespan.
+    pub fn idle(&self, pu: PuId) -> f64 {
+        (self.makespan() - self.busy(pu)).max(0.0)
+    }
+
+    /// Exact seconds during which ≥ 2 PUs were simultaneously busy.
+    pub fn overlap_s(&self) -> f64 {
+        self.overlap_s
+    }
+
+    pub fn snapshot(&self) -> TimelineSnapshot {
+        TimelineSnapshot {
+            busy: self.busy,
+            dispatches: self.dispatches,
+            overlap_s: self.overlap_s,
+            makespan: self.makespan(),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
 
     #[test]
-    fn accumulates() {
+    fn accumulates_and_returns_new_timestamp() {
         let c = VirtualClock::new();
-        c.advance(0.5);
-        c.advance(0.25);
+        assert!((c.advance(0.5) - 0.5).abs() < 1e-9);
+        assert!((c.advance(0.25) - 0.75).abs() < 1e-9);
         assert!((c.seconds() - 0.75).abs() < 1e-9);
         c.reset();
         assert_eq!(c.seconds(), 0.0);
@@ -63,5 +322,115 @@ mod tests {
             h.join().unwrap();
         }
         assert!((c.seconds() - 8.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn independent_pus_overlap() {
+        let mut tl = PuTimelines::new();
+        let a = tl.dispatch(PuId::Cpu, 0.0, 1.0);
+        let b = tl.dispatch(PuId::Gpu, 0.0, 0.6);
+        assert_eq!(a, Span { start: 0.0, end: 1.0 });
+        assert_eq!(b, Span { start: 0.0, end: 0.6 });
+        assert!((tl.makespan() - 1.0).abs() < 1e-12);
+        assert!((tl.overlap_s() - 0.6).abs() < 1e-12);
+        assert!((tl.busy(PuId::Cpu) - 1.0).abs() < 1e-12);
+        assert!((tl.idle(PuId::Gpu) - 0.4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn same_pu_serializes() {
+        let mut tl = PuTimelines::new();
+        tl.dispatch(PuId::Cpu, 0.0, 1.0);
+        let b = tl.dispatch(PuId::Cpu, 0.0, 0.5);
+        assert_eq!(b, Span { start: 1.0, end: 1.5 });
+        assert_eq!(tl.overlap_s(), 0.0);
+    }
+
+    #[test]
+    fn inputs_ready_delays_start() {
+        let mut tl = PuTimelines::new();
+        // GPU free at 0, but the inputs only materialize at 2.0.
+        let s = tl.dispatch(PuId::Gpu, 2.0, 0.5);
+        assert_eq!(s, Span { start: 2.0, end: 2.5 });
+        // CPU work during the gap overlaps only the busy part.
+        let c = tl.dispatch(PuId::Cpu, 0.0, 3.0);
+        assert_eq!(c, Span { start: 0.0, end: 3.0 });
+        assert!((tl.overlap_s() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn serialized_mode_sums_durations() {
+        let mut tl = PuTimelines::serialized();
+        tl.dispatch(PuId::Cpu, 0.0, 1.0);
+        tl.dispatch(PuId::Gpu, 0.0, 0.5);
+        let s = tl.dispatch(PuId::Cpu, 0.0, 0.25);
+        assert_eq!(s, Span { start: 1.5, end: 1.75 });
+        assert!((tl.makespan() - 1.75).abs() < 1e-12);
+        assert!((tl.makespan() - (tl.busy(PuId::Cpu) + tl.busy(PuId::Gpu))).abs() < 1e-12);
+        assert_eq!(tl.overlap_s(), 0.0);
+    }
+
+    #[test]
+    fn blocking_dispatch_occupies_without_busy_or_overlap() {
+        let mut tl = PuTimelines::new();
+        // A mono round on CPU that also blocks the GPU.
+        tl.dispatch_blocking(PuId::Cpu, &[PuId::Gpu], 0.0, 1.0);
+        // GPU work must queue behind the blocked window.
+        let g = tl.dispatch(PuId::Gpu, 0.0, 0.5);
+        assert_eq!(g, Span { start: 1.0, end: 1.5 });
+        assert_eq!(tl.busy(PuId::Gpu), 0.5);
+        assert_eq!(tl.overlap_s(), 0.0);
+    }
+
+    #[test]
+    fn overlap_is_exact_across_many_staggered_dispatches() {
+        let mut tl = PuTimelines::new();
+        // CPU: [0,1], [1,2], [2,3]; GPU: [0.5, 1.5], [1.5, 2.5].
+        for _ in 0..3 {
+            tl.dispatch(PuId::Cpu, 0.0, 1.0);
+        }
+        tl.dispatch(PuId::Gpu, 0.5, 1.0);
+        tl.dispatch(PuId::Gpu, 0.0, 1.0);
+        // GPU busy [0.5, 2.5] entirely inside CPU busy [0, 3].
+        assert!((tl.overlap_s() - 2.0).abs() < 1e-12, "{}", tl.overlap_s());
+        assert!((tl.makespan() - 3.0).abs() < 1e-12);
+        let snap = tl.snapshot();
+        assert_eq!(snap.dispatches, [3, 2]);
+        assert!((snap.busy[0] - 3.0).abs() < 1e-12);
+        assert!((snap.busy[1] - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn now_ignores_pus_the_workload_never_touches() {
+        let mut tl = PuTimelines::new();
+        assert_eq!(tl.now(), 0.0);
+        // CPU-only workload: "now" must track the CPU frontier, not the
+        // forever-idle GPU (which would pin admissions to t = 0).
+        tl.dispatch(PuId::Cpu, 0.0, 1.0);
+        tl.dispatch(PuId::Cpu, 0.0, 1.0);
+        assert!((tl.now() - 2.0).abs() < 1e-12);
+        assert_eq!(tl.min_ready(), 0.0);
+        // Once both PUs have dispatched, now is the earlier frontier.
+        tl.dispatch(PuId::Gpu, 0.0, 0.5);
+        assert!((tl.now() - 0.5).abs() < 1e-12);
+        // A blocked-only PU (mono occupancy, no dispatches charged) still
+        // doesn't count as touched.
+        let mut mono = PuTimelines::new();
+        mono.dispatch_blocking(PuId::Cpu, &[PuId::Gpu], 0.0, 1.0);
+        assert!((mono.now() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pruning_keeps_interval_lists_bounded() {
+        let mut tl = PuTimelines::new();
+        for _ in 0..1000 {
+            tl.dispatch(PuId::Cpu, 0.0, 0.001);
+            tl.dispatch(PuId::Gpu, 0.0, 0.001);
+        }
+        // Contiguous merging + pruning: O(1) retained state.
+        assert!(tl.intervals[0].len() <= 2, "{}", tl.intervals[0].len());
+        assert!(tl.intervals[1].len() <= 2, "{}", tl.intervals[1].len());
+        // Fully overlapped alternation: overlap ≈ each PU's busy time.
+        assert!((tl.overlap_s() - 1.0).abs() < 1e-9, "{}", tl.overlap_s());
     }
 }

@@ -24,6 +24,12 @@ pub struct LatencyModel {
     pub platform: Platform,
 }
 
+impl Default for LatencyModel {
+    fn default() -> LatencyModel {
+        LatencyModel::new(Platform::default())
+    }
+}
+
 impl LatencyModel {
     pub fn new(platform: Platform) -> LatencyModel {
         LatencyModel { platform }

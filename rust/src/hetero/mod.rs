@@ -12,7 +12,7 @@ pub mod latency;
 pub mod platform;
 pub mod pu;
 
-pub use clock::VirtualClock;
+pub use clock::{PuTimelines, Span, TimelineSnapshot, VirtualClock};
 pub use latency::LatencyModel;
 pub use platform::Platform;
-pub use pu::{Mapping, PuAssignment};
+pub use pu::{Mapping, PuAssignment, PuId, PuRoute, NUM_PUS};

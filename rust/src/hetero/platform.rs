@@ -93,6 +93,15 @@ pub struct Platform {
     pub memory: MemoryModel,
 }
 
+impl Default for Platform {
+    /// The built-in i.MX95 calibration (clippy `new_without_default`-style
+    /// tidy: the platform with a canonical zero-argument constructor now
+    /// also implements `Default`).
+    fn default() -> Platform {
+        Platform::imx95()
+    }
+}
+
 impl Platform {
     /// Built-in i.MX95 calibration (see module docs and DESIGN.md §5).
     pub fn imx95() -> Platform {

@@ -4,8 +4,45 @@
 //! available, v = Π nᵢ) × *assignments* of each graph partition (drafter |
 //! target, m = 2) to one of the N = 2 PUs.
 
+/// Physical processing-unit identity on the SoC — the granularity at which
+/// the per-PU timelines serialize dispatches. Two [`PuAssignment::Cpu`]
+/// values with different core counts still name the *same* physical CPU
+/// cluster, so they share one timeline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum PuId {
+    /// The hexacore Cortex-A55 cluster.
+    Cpu,
+    /// The Mali-G310 GPU.
+    Gpu,
+}
+
+/// Number of physical PUs on the modeled SoC (CPU cluster + GPU).
+pub const NUM_PUS: usize = 2;
+
+impl PuId {
+    /// Dense index into per-PU arrays (`0..NUM_PUS`).
+    pub fn index(self) -> usize {
+        match self {
+            PuId::Cpu => 0,
+            PuId::Gpu => 1,
+        }
+    }
+
+    /// All physical PUs, in index order.
+    pub fn all() -> [PuId; NUM_PUS] {
+        [PuId::Cpu, PuId::Gpu]
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            PuId::Cpu => "cpu",
+            PuId::Gpu => "gpu",
+        }
+    }
+}
+
 /// Where one graph partition (drafter or target) executes.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub enum PuAssignment {
     /// CPU cluster with `cores` Cortex-A55 cores (1..=6).
     Cpu { cores: usize },
@@ -18,10 +55,54 @@ impl PuAssignment {
         matches!(self, PuAssignment::Gpu)
     }
 
+    /// The physical PU this assignment occupies (core-count variants of the
+    /// CPU cluster all serialize on the one cluster timeline).
+    pub fn id(&self) -> PuId {
+        match self {
+            PuAssignment::Cpu { .. } => PuId::Cpu,
+            PuAssignment::Gpu => PuId::Gpu,
+        }
+    }
+
     pub fn label(&self) -> String {
         match self {
             PuAssignment::Cpu { cores } => format!("C-A55 {cores}C"),
             PuAssignment::Gpu => "Mali-G310".to_string(),
+        }
+    }
+}
+
+/// Timeline routing for one engine call, resolved from the policy-chosen
+/// [`Mapping`] when a session plans the call: which PU's timeline the
+/// dispatch is charged to, and which additional PU (if any) it occupies.
+///
+/// Plain forwards run on exactly one PU. A monolithic fused spec-step
+/// (paper Fig. 3) spans both mapped partitions inside one graph, so it
+/// *blocks* the secondary PU for its duration while its compute time is
+/// charged to the primary (target) timeline — co-scheduled sessions cannot
+/// overlap with either side of a mono round.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct PuRoute {
+    /// PU whose timeline is charged (busy time accrues here).
+    pub primary: PuAssignment,
+    /// Additional PU the dispatch occupies without accruing busy time
+    /// (monolithic rounds only; `None` for plain forwards and for mono
+    /// rounds whose mapping is homogeneous).
+    pub blocks: Option<PuAssignment>,
+}
+
+impl PuRoute {
+    /// Route for a plain forward on one PU.
+    pub fn single(pu: PuAssignment) -> PuRoute {
+        PuRoute { primary: pu, blocks: None }
+    }
+
+    /// Route for a monolithic fused round under `mapping`: charged to the
+    /// target PU, blocking the drafter PU when it is a different device.
+    pub fn mono(mapping: Mapping) -> PuRoute {
+        PuRoute {
+            primary: mapping.target,
+            blocks: (mapping.drafter.id() != mapping.target.id()).then_some(mapping.drafter),
         }
     }
 }
@@ -82,5 +163,23 @@ mod tests {
     fn labels() {
         assert_eq!(PuAssignment::Cpu { cores: 2 }.label(), "C-A55 2C");
         assert!(Mapping::heterogeneous(1).label().contains("Mali"));
+    }
+
+    #[test]
+    fn physical_identity_ignores_core_count() {
+        assert_eq!(PuAssignment::Cpu { cores: 1 }.id(), PuId::Cpu);
+        assert_eq!(PuAssignment::Cpu { cores: 6 }.id(), PuId::Cpu);
+        assert_eq!(PuAssignment::Gpu.id(), PuId::Gpu);
+        assert_eq!(PuId::all().map(PuId::index), [0, 1]);
+    }
+
+    #[test]
+    fn mono_route_blocks_the_other_pu_only_when_heterogeneous() {
+        let het = PuRoute::mono(Mapping::heterogeneous(2));
+        assert_eq!(het.primary, PuAssignment::Cpu { cores: 2 });
+        assert_eq!(het.blocks, Some(PuAssignment::Gpu));
+        let hom = PuRoute::mono(Mapping::homogeneous(3));
+        assert_eq!(hom.primary, PuAssignment::Cpu { cores: 3 });
+        assert_eq!(hom.blocks, None);
     }
 }

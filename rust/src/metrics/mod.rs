@@ -9,7 +9,20 @@
 //! one session (fused), and the batch fill ratio (real lanes / executed
 //! lanes, padding included) — the observable for how well co-scheduled
 //! sessions share batched dispatches.
+//!
+//! The per-PU timeline model contributes a third granularity: per-PU busy
+//! seconds and dispatch counts, exact cross-PU overlap seconds (time when
+//! both PUs of the heterogeneous mapping computed simultaneously), and
+//! the aggregate simulated makespan — busy/overlap deltas and per-worker
+//! makespan growth all sum across workers (each worker owns an
+//! independent timeline, so the aggregate is total timeline length, and
+//! the conservation law `makespan = Σ busy − overlap` holds for any
+//! worker count). `overlap_s > 0` is the direct observable for
+//! heterogeneous draft/verify overlap; with `hetero_overlap: false`
+//! (serialized timelines) it stays 0 and the makespan equals the summed
+//! busy time.
 
+use crate::hetero::{PuId, TimelineSnapshot, NUM_PUS};
 use crate::util::stats::{BoxStats, Summary};
 use std::sync::Mutex;
 
@@ -54,6 +67,17 @@ struct Inner {
     /// Σ real session lanes / Σ executed (padded) lanes over dispatches.
     lanes_real: u64,
     lanes_executed: u64,
+    /// Per-PU timeline accounting (indexed by [`PuId::index`]): Σ busy
+    /// seconds and dispatch counts across workers.
+    pu_busy: [f64; NUM_PUS],
+    pu_dispatches: [u64; NUM_PUS],
+    /// Σ exact cross-PU overlap seconds across workers.
+    overlap_s: f64,
+    /// Σ per-worker simulated makespans.
+    makespan_s: f64,
+    /// Per-request end-to-end latency on the per-PU timelines
+    /// (admission → last dispatch end).
+    tl_latency: Summary,
 }
 
 /// Fixed-size uniform reservoir (Vitter's Algorithm R) for unbounded
@@ -171,6 +195,32 @@ impl Metrics {
         m.lanes_executed += lanes_executed;
     }
 
+    /// Fold one worker's timeline growth since `prev` into the shared
+    /// sink. Everything — busy, overlap, dispatches *and* makespan — is a
+    /// summed delta: each worker owns an independent timeline starting at
+    /// 0, so the aggregate makespan is the total timeline length across
+    /// workers and `makespan = Σ busy − overlap` holds for any worker
+    /// count (a max-merge would break it and let overlap_frac exceed 1).
+    pub fn record_timeline(&self, snap: &TimelineSnapshot, prev: &TimelineSnapshot) {
+        if snap == prev {
+            return;
+        }
+        let mut m = self.inner.lock().unwrap();
+        for p in 0..NUM_PUS {
+            m.pu_busy[p] += snap.busy[p] - prev.busy[p];
+            m.pu_dispatches[p] += snap.dispatches[p] - prev.dispatches[p];
+        }
+        m.overlap_s += snap.overlap_s - prev.overlap_s;
+        m.makespan_s += snap.makespan - prev.makespan;
+    }
+
+    /// One request's simulated timeline latency (admission → finish).
+    pub fn record_timeline_latency(&self, seconds: f64) {
+        if seconds.is_finite() {
+            self.inner.lock().unwrap().tl_latency.push(seconds);
+        }
+    }
+
     pub fn snapshot(&self) -> Report {
         let mut m = self.inner.lock().unwrap();
         Report {
@@ -197,6 +247,11 @@ impl Metrics {
             } else {
                 f64::NAN
             },
+            pu_busy: m.pu_busy,
+            pu_dispatches: m.pu_dispatches,
+            overlap_s: m.overlap_s,
+            makespan_s: m.makespan_s,
+            tl_latency: m.tl_latency.box_stats(),
         }
     }
 }
@@ -227,9 +282,37 @@ pub struct Report {
     /// Real lanes / executed lanes across all dispatches (1.0 = every
     /// executed lane carried a live session; NaN before any dispatch).
     pub batch_fill: f64,
+    /// Per-PU timeline accounting (index 0 = CPU cluster, 1 = GPU; see
+    /// [`PuId::index`]): Σ busy seconds and dispatches across workers.
+    pub pu_busy: [f64; NUM_PUS],
+    pub pu_dispatches: [u64; NUM_PUS],
+    /// Exact seconds both PUs computed simultaneously (0 under serialized
+    /// `hetero_overlap: false` timelines, and before any dispatch).
+    pub overlap_s: f64,
+    /// Aggregate simulated makespan: Σ per-worker timeline lengths
+    /// (= one worker's makespan in single-worker runs; satisfies
+    /// `makespan = Σ busy − overlap` for any worker count).
+    pub makespan_s: f64,
+    /// Per-request simulated timeline latency (admission → finish).
+    pub tl_latency: BoxStats,
 }
 
 impl Report {
+    /// Idle seconds on one PU up to the makespan (clamped at 0).
+    pub fn pu_idle(&self, pu: PuId) -> f64 {
+        (self.makespan_s - self.pu_busy[pu.index()]).max(0.0)
+    }
+
+    /// Fraction of the makespan during which both PUs were busy (NaN
+    /// before any timeline activity).
+    pub fn overlap_frac(&self) -> f64 {
+        if self.makespan_s > 0.0 {
+            self.overlap_s / self.makespan_s
+        } else {
+            f64::NAN
+        }
+    }
+
     pub fn render(&self, wall_s: f64) -> String {
         format!(
             "requests={} rejected={} tokens={} tok/s={:.1} mean_alpha={:.3}\n\
@@ -238,7 +321,9 @@ impl Report {
              queue delay  p50={:.1}ms p90={:.1}ms\n\
              rounds={} mean_gamma={:.2} round_alpha_p50={:.3} \
              inflight mean={:.2} max={}\n\
-             dispatches={} fused={} batch_fill={:.2}",
+             dispatches={} fused={} batch_fill={:.2}\n\
+             pu: cpu busy={:.1}ms gpu busy={:.1}ms overlap={:.1}ms \
+             makespan={:.1}ms tl_latency_p50={:.1}ms",
             self.requests,
             self.rejected,
             self.tokens_out,
@@ -260,6 +345,11 @@ impl Report {
             self.dispatches,
             self.fused_dispatches,
             self.batch_fill,
+            self.pu_busy[PuId::Cpu.index()] * 1e3,
+            self.pu_busy[PuId::Gpu.index()] * 1e3,
+            self.overlap_s * 1e3,
+            self.makespan_s * 1e3,
+            self.tl_latency.median * 1e3,
         )
     }
 }
@@ -326,6 +416,53 @@ mod tests {
         // Empty ticks are ignored entirely.
         m.record_dispatches(0, 0, 0, 0);
         assert_eq!(m.snapshot().dispatches, 3);
+    }
+
+    #[test]
+    fn timeline_deltas_sum_across_workers() {
+        let m = Metrics::new();
+        let r0 = m.snapshot();
+        assert_eq!(r0.overlap_s, 0.0);
+        assert_eq!(r0.makespan_s, 0.0);
+        assert!(r0.overlap_frac().is_nan());
+        // Worker A ticks twice (cumulative snapshots), worker B once.
+        let a1 = TimelineSnapshot {
+            busy: [0.4, 0.2], dispatches: [2, 1], overlap_s: 0.1, makespan: 0.5,
+        };
+        m.record_timeline(&a1, &TimelineSnapshot::default());
+        let a2 = TimelineSnapshot {
+            busy: [0.9, 0.2], dispatches: [4, 1], overlap_s: 0.2, makespan: 1.0,
+        };
+        m.record_timeline(&a2, &a1);
+        let b1 = TimelineSnapshot {
+            busy: [0.1, 0.3], dispatches: [1, 2], overlap_s: 0.05, makespan: 0.4,
+        };
+        m.record_timeline(&b1, &TimelineSnapshot::default());
+        let r = m.snapshot();
+        assert!((r.pu_busy[0] - 1.0).abs() < 1e-12);
+        assert!((r.pu_busy[1] - 0.5).abs() < 1e-12);
+        assert_eq!(r.pu_dispatches, [5, 3]);
+        assert!((r.overlap_s - 0.25).abs() < 1e-12);
+        // Makespans sum: worker A reached 1.0, worker B 0.4 — the
+        // aggregate is total timeline length, not the max, so the
+        // conservation bound survives multi-worker aggregation.
+        assert!((r.makespan_s - 1.4).abs() < 1e-12);
+        assert!((r.pu_idle(PuId::Gpu) - 0.9).abs() < 1e-12);
+        assert!((r.overlap_frac() - 0.25 / 1.4).abs() < 1e-12);
+        // Unchanged snapshot is a no-op.
+        m.record_timeline(&b1, &b1);
+        assert_eq!(m.snapshot().pu_dispatches, [5, 3]);
+    }
+
+    #[test]
+    fn timeline_latency_summarized() {
+        let m = Metrics::new();
+        m.record_timeline_latency(0.2);
+        m.record_timeline_latency(0.4);
+        m.record_timeline_latency(f64::NAN); // ignored
+        let r = m.snapshot();
+        assert_eq!(r.tl_latency.n, 2);
+        assert!((r.tl_latency.mean - 0.3).abs() < 1e-12);
     }
 
     #[test]

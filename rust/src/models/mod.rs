@@ -5,7 +5,7 @@
 use crate::util::json::Json;
 
 /// Which model of the speculative pair.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub enum Role {
     Target,
     Drafter,
@@ -29,7 +29,7 @@ impl Role {
 }
 
 /// Quantization scheme of a compiled variant (paper Fig. 5: FP, semi, full).
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub enum Scheme {
     Fp,
     W8a8,
@@ -53,7 +53,7 @@ impl Scheme {
 }
 
 /// A (role, scheme) pair — the unit the runtime loads and the DSE maps.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct VariantKey {
     pub role: Role,
     pub scheme: Scheme,

@@ -130,6 +130,14 @@ fn handle_conn(
                                     (r.fused_dispatches as usize).into(),
                                 )
                                 .set("batch_fill", r.batch_fill.into())
+                                .set("cpu_busy_s", r.pu_busy[0].into())
+                                .set("gpu_busy_s", r.pu_busy[1].into())
+                                .set("overlap_s", r.overlap_s.into())
+                                .set("makespan_s", r.makespan_s.into())
+                                .set(
+                                    "tl_latency_p50_ms",
+                                    (r.tl_latency.median * 1e3).into(),
+                                )
                                 .set("wall_s", start_wall.elapsed().as_secs_f64().into());
                             j
                         }

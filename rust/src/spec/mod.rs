@@ -20,6 +20,6 @@ pub mod session;
 pub use decoder::{DecodeOutcome, Decoder, DecoderSetup};
 pub use sampling::{greedy_accept_len, stochastic_accept, AcceptRule};
 pub use session::{
-    DecodeSession, EngineReply, EngineRequest, ForwardReply, RequestKind, SessionLimits,
-    SessionPlan, StepOutcome, StepProgress,
+    DecodeSession, EngineReply, EngineRequest, ForwardReply, FuseKey, RequestKind,
+    SessionLimits, SessionPlan, StepOutcome, StepProgress,
 };

@@ -31,7 +31,7 @@
 //! [`crate::hetero::LatencyModel::batched_forward_latency`]).
 
 use crate::config::{ExecMode, KernelPath};
-use crate::hetero::{LatencyModel, PuAssignment};
+use crate::hetero::{LatencyModel, PuAssignment, PuRoute};
 use crate::models::VariantKey;
 use crate::runtime::{Engine, ForwardOut, MonoStepOut};
 use crate::tokenizer::EOS_ID;
@@ -95,22 +95,37 @@ pub struct EngineRequest {
     /// requests at once and build a batched upload without aliasing the
     /// sessions themselves.
     pub tokens: Vec<u32>,
+    /// Which PU timeline(s) the dispatch occupies, resolved from the
+    /// policy-chosen [`crate::hetero::Mapping`] at plan time. The per-PU
+    /// timeline executor charges the dispatch here; requests routed to
+    /// different PUs can proceed concurrently.
+    pub route: PuRoute,
 }
 
+/// Fusion key: requests with equal keys can share one batched dispatch.
+/// Includes the routed PU — two sessions mapping the same role to
+/// different PUs must not share a dispatch, since a dispatch occupies
+/// exactly one PU timeline.
+pub type FuseKey = (VariantKey, KernelPath, usize, PuAssignment);
+
 impl EngineRequest {
-    /// Fusion key: requests with equal keys can share one batched
-    /// dispatch. `None` for monolithic spec-steps (never cross-fused).
-    pub fn fuse_key(&self) -> Option<(VariantKey, KernelPath, usize)> {
+    /// See [`FuseKey`]. `None` for monolithic spec-steps (never
+    /// cross-fused). The PU component is the route's primary — the single
+    /// source of truth for where the dispatch runs, so grouping and
+    /// timeline charging can never disagree.
+    pub fn fuse_key(&self) -> Option<FuseKey> {
         match self.kind {
-            RequestKind::Forward { variant, kernel, bucket, .. } => {
-                Some((variant, kernel, bucket))
+            RequestKind::Forward { variant, kernel, bucket } => {
+                Some((variant, kernel, bucket, self.route.primary))
             }
             RequestKind::MonoStep { .. } => None,
         }
     }
 }
 
-/// Shape of the engine call an [`EngineRequest`] asks for.
+/// Shape of the engine call an [`EngineRequest`] asks for. The PU it runs
+/// on is not part of the shape — it lives in [`EngineRequest::route`],
+/// resolved from the mapping by the planned variant's role.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum RequestKind {
     /// A plain forward over the request's token prefix, padded to
@@ -119,8 +134,6 @@ pub enum RequestKind {
         variant: VariantKey,
         kernel: KernelPath,
         bucket: usize,
-        /// PU the mapped role runs on (drives the simulated clock).
-        pu: PuAssignment,
     },
     /// One fused monolithic spec-step graph (paper Fig. 3); always a
     /// singleton dispatch.
@@ -241,6 +254,11 @@ pub struct DecodeSession {
     phase: RoundPhase,
     round_base: RoundBase,
     done: bool,
+    /// Per-PU timeline position: the simulated time at which this
+    /// session's last scheduled dispatch finishes (its outputs — the next
+    /// call's inputs — become available). Maintained by the timeline-aware
+    /// executor; stays 0 on the serialized paths.
+    ready_s: f64,
 }
 
 impl DecodeSession {
@@ -274,6 +292,7 @@ impl DecodeSession {
             speculative,
             phase: RoundPhase::Idle,
             round_base: RoundBase::default(),
+            ready_s: 0.0,
         }
     }
 
@@ -302,6 +321,20 @@ impl DecodeSession {
     /// Current total sequence length (prompt + committed tokens).
     pub fn seq_len(&self) -> usize {
         self.ids.len()
+    }
+
+    /// Simulated time at which this session's inputs are next available
+    /// (the end of its last timeline-scheduled dispatch — the readiness
+    /// rule's `inputs_ready`).
+    pub fn ready_s(&self) -> f64 {
+        self.ready_s
+    }
+
+    /// Move the session's timeline position (set by the per-PU timeline
+    /// executor after scheduling a dispatch, and at admission to the
+    /// worker's current simulated "now").
+    pub fn set_ready_s(&mut self, t: f64) {
+        self.ready_s = t;
     }
 
     pub fn limits(&self) -> SessionLimits {
@@ -404,7 +437,13 @@ impl DecodeSession {
         Ok(match self.advance_plan(engine)? {
             PlannedKind::Done(out) => SessionPlan::Done(out),
             PlannedKind::Need(kind) => {
-                SessionPlan::Need(EngineRequest { kind, tokens: self.ids.clone() })
+                let route = match kind {
+                    RequestKind::Forward { variant, .. } => {
+                        PuRoute::single(self.role_pu(variant.role))
+                    }
+                    RequestKind::MonoStep { .. } => PuRoute::mono(self.setup.mapping),
+                };
+                SessionPlan::Need(EngineRequest { kind, tokens: self.ids.clone(), route })
             }
         })
     }
@@ -465,13 +504,11 @@ impl DecodeSession {
                 variant: self.setup.target,
                 kernel: self.setup.kernel,
                 bucket: engine.bucket_for(self.ids.len())?,
-                pu: self.setup.mapping.target,
             },
             RoundPhase::Drafting(_) => RequestKind::Forward {
                 variant: self.setup.drafter,
                 kernel: self.setup.kernel,
                 bucket: engine.bucket_for(self.ids.len())?,
-                pu: self.setup.mapping.drafter,
             },
             RoundPhase::Mono { gamma } => RequestKind::MonoStep { gamma: *gamma },
         };
@@ -616,9 +653,10 @@ impl DecodeSession {
         kind: RequestKind,
     ) -> anyhow::Result<StepProgress> {
         match kind {
-            RequestKind::Forward { variant, kernel, bucket, pu } => {
+            RequestKind::Forward { variant, kernel, bucket } => {
                 let fwd = engine.forward(variant, kernel, &self.ids, bucket)?;
                 let spec = engine.manifest.model_for(variant)?;
+                let pu = self.role_pu(variant.role);
                 let sim_s = self.lat.forward_latency(spec, variant.scheme, pu, bucket);
                 let real_s = fwd.elapsed_s;
                 self.apply(
@@ -685,6 +723,14 @@ impl DecodeSession {
         }
     }
 
+    /// The PU the mapping assigns to a model role.
+    fn role_pu(&self, role: crate::models::Role) -> PuAssignment {
+        match role {
+            crate::models::Role::Drafter => self.setup.mapping.drafter,
+            crate::models::Role::Target => self.setup.mapping.target,
+        }
+    }
+
     /// Simulated seconds for one forward of `key` on its mapped PU at
     /// `bucket` (bucketed deployment: padded shapes run at bucket cost).
     fn sim_forward(
@@ -694,11 +740,7 @@ impl DecodeSession {
         bucket: usize,
     ) -> anyhow::Result<f64> {
         let spec = engine.manifest.model_for(key)?;
-        let pu = match key.role {
-            crate::models::Role::Drafter => self.setup.mapping.drafter,
-            crate::models::Role::Target => self.setup.mapping.target,
-        };
-        Ok(self.lat.forward_latency(spec, key.scheme, pu, bucket))
+        Ok(self.lat.forward_latency(spec, key.scheme, self.role_pu(key.role), bucket))
     }
 }
 

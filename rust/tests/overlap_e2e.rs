@@ -1,0 +1,237 @@
+//! Per-PU timeline end-to-end tests (skipped when `make artifacts` hasn't
+//! run):
+//!
+//! * a deterministic two-session heterogeneous scenario — one session
+//!   drafting on the GPU while the other verifies on the CPU cluster —
+//!   where the overlapped makespan is strictly below the serialized sum,
+//!   with the exact conservation law `makespan = busy_cpu + busy_gpu −
+//!   overlap` holding;
+//! * `hetero_overlap: false` (serialized timelines) reproduces the
+//!   per-session simulated charges and token streams bit-identically —
+//!   the timelines are pure observation, the A/B knob changes only the
+//!   makespan model;
+//! * homogeneous mappings have a single timeline and can never report
+//!   overlap;
+//! * coordinator-level A/B parity of the `hetero_overlap` knob.
+
+use specedge::config::{ExecMode, KernelPath, RunConfig};
+use specedge::coordinator::Coordinator;
+use specedge::experiments::overlap::drive_to_completion;
+use specedge::hetero::{LatencyModel, Mapping, Platform, PuId, PuTimelines};
+use specedge::models::VariantKey;
+use specedge::runtime::Engine;
+use specedge::spec::{AcceptRule, DecodeOutcome, DecodeSession, DecoderSetup};
+use specedge::tokenizer::{Tokenizer, SEP_ID};
+use specedge::workload::Request;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+fn engine() -> Option<Engine> {
+    let dir = Path::new("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts/manifest.json missing (run `make artifacts`)");
+        return None;
+    }
+    Some(Engine::load(dir).expect("engine"))
+}
+
+fn setup(gamma: usize, mapping: Mapping) -> DecoderSetup {
+    DecoderSetup {
+        drafter: VariantKey::parse("drafter_fp").unwrap(),
+        target: VariantKey::parse("target_w8a8").unwrap(),
+        kernel: KernelPath::Ref,
+        mapping,
+        gamma,
+        rule: AcceptRule::Greedy,
+        exec: ExecMode::Modular,
+        max_new: 16,
+    }
+}
+
+fn prompts(engine: &Engine, n: usize) -> Vec<Vec<u32>> {
+    let tokenizer = Tokenizer::from_manifest(&engine.manifest.tokenizer_spec).unwrap();
+    let samples: Vec<_> = engine
+        .manifest
+        .eval_samples
+        .iter()
+        .filter(|s| s.task == "translate")
+        .collect();
+    assert!(!samples.is_empty(), "eval set has no translate samples");
+    (0..n)
+        .map(|i| {
+            let s = samples[i % samples.len()];
+            let mut ids = tokenizer.encode(&s.prompt, true).unwrap();
+            ids.push(SEP_ID);
+            ids
+        })
+        .collect()
+}
+
+/// Drive staggered-γ sessions to completion through the fused executor on
+/// the given timeline mode; returns the final timelines and outcomes.
+fn drive(
+    engine: &Engine,
+    ps: &[Vec<u32>],
+    gammas: &[usize],
+    mapping: Mapping,
+    overlapped: bool,
+) -> (PuTimelines, Vec<DecodeOutcome>) {
+    let lat = LatencyModel::new(Platform::imx95());
+    let mut tl = if overlapped {
+        PuTimelines::new()
+    } else {
+        PuTimelines::serialized()
+    };
+    let mut sessions: Vec<DecodeSession> = ps
+        .iter()
+        .zip(gammas)
+        .map(|(p, &g)| DecodeSession::new(engine, lat.clone(), setup(g, mapping), true, p))
+        .collect();
+    drive_to_completion(engine, &lat, &mut sessions, &mut tl).expect("no session may fail");
+    let outcomes = sessions.into_iter().map(DecodeSession::into_outcome).collect();
+    (tl, outcomes)
+}
+
+#[test]
+fn two_session_hetero_overlap_beats_serialized_sum() {
+    let Some(engine) = engine() else { return };
+    let ps = prompts(&engine, 2);
+    // Staggered draft windows de-phase the two sessions, so session A
+    // drafts on the GPU while session B verifies on the CPU cluster.
+    let gammas = [2usize, 5];
+    let mapping = Mapping::heterogeneous(1);
+
+    let (serial, serial_out) = drive(&engine, &ps, &gammas, mapping, false);
+    let (over, over_out) = drive(&engine, &ps, &gammas, mapping, true);
+
+    // The serialized baseline: single-clock behavior — makespan is the
+    // sum of every dispatch duration, nothing overlaps.
+    let serial_busy = serial.busy(PuId::Cpu) + serial.busy(PuId::Gpu);
+    assert!(
+        (serial.makespan() - serial_busy).abs() < 1e-9 * serial_busy.max(1.0),
+        "serialized makespan {} != busy sum {serial_busy}",
+        serial.makespan()
+    );
+    assert_eq!(serial.overlap_s(), 0.0);
+
+    // Identical dispatches on both timelines: per-PU busy conserved.
+    assert!((over.busy(PuId::Cpu) - serial.busy(PuId::Cpu)).abs() < 1e-12);
+    assert!((over.busy(PuId::Gpu) - serial.busy(PuId::Gpu)).abs() < 1e-12);
+
+    // The acceptance criterion: with a heterogeneous mapping and ≥ 2
+    // in-flight sessions, the overlapped makespan is strictly below the
+    // serialized one, by exactly the overlapped seconds (2-PU
+    // inclusion–exclusion: makespan = Σ busy − overlap).
+    assert!(over.overlap_s() > 0.0, "no draft/verify overlap materialized");
+    assert!(
+        over.makespan() < serial.makespan(),
+        "overlap {} !< serialized {}",
+        over.makespan(),
+        serial.makespan()
+    );
+    let expect = serial_busy - over.overlap_s();
+    assert!(
+        (over.makespan() - expect).abs() < 1e-9 * serial_busy.max(1.0),
+        "makespan {} != busy − overlap = {expect}",
+        over.makespan()
+    );
+
+    // The timelines are pure observation: token streams and per-session
+    // simulated charges are bit-identical across modes (`hetero_overlap:
+    // false` reproduces the pre-overlap timings exactly).
+    for (a, b) in serial_out.iter().zip(&over_out) {
+        assert_eq!(a.tokens, b.tokens, "timeline mode changed tokens");
+        assert_eq!(a.sim_s.to_bits(), b.sim_s.to_bits(), "sim_s not bit-identical");
+        assert_eq!(a.n_rounds, b.n_rounds);
+    }
+}
+
+#[test]
+fn homogeneous_mapping_never_overlaps() {
+    let Some(engine) = engine() else { return };
+    let ps = prompts(&engine, 2);
+    let (tl, _) = drive(&engine, &ps, &[2, 5], Mapping::homogeneous(2), true);
+    // One physical PU: its timeline serializes; overlap is impossible and
+    // the makespan equals the CPU busy time.
+    assert_eq!(tl.overlap_s(), 0.0);
+    assert_eq!(tl.busy(PuId::Gpu), 0.0);
+    assert!((tl.makespan() - tl.busy(PuId::Cpu)).abs() < 1e-9);
+}
+
+fn coord_cfg(hetero_overlap: bool) -> RunConfig {
+    RunConfig {
+        artifacts_dir: PathBuf::from("artifacts"),
+        max_new_tokens: 12,
+        gamma: Some(3),
+        kernel_path: KernelPath::Ref,
+        max_inflight: 4,
+        hetero_overlap,
+        ..RunConfig::default()
+    }
+}
+
+fn run_coord(hetero_overlap: bool, n: usize) -> (Vec<Vec<u32>>, specedge::metrics::Report) {
+    let coord =
+        Arc::new(Coordinator::start(coord_cfg(hetero_overlap), Platform::imx95()).unwrap());
+    let manifest = specedge::runtime::Manifest::load(Path::new("artifacts")).unwrap();
+    let tokenizer = Tokenizer::from_manifest(&manifest.tokenizer_spec).unwrap();
+    let samples: Vec<_> = manifest
+        .eval_samples
+        .iter()
+        .filter(|s| s.task == "translate")
+        .collect();
+    let rxs: Vec<_> = (0..n)
+        .map(|i| {
+            let s = samples[i % samples.len()];
+            let mut prompt = tokenizer.encode(&s.prompt, true).unwrap();
+            prompt.push(SEP_ID);
+            coord
+                .submit(Request {
+                    id: i as u64,
+                    task: "translate".into(),
+                    prompt,
+                    truth: String::new(),
+                    arrival_s: 0.0,
+                })
+                .unwrap()
+        })
+        .collect();
+    let mut outs: Vec<_> = rxs.into_iter().map(|rx| rx.recv().unwrap()).collect();
+    outs.sort_by_key(|o| o.id);
+    let report = coord.metrics.snapshot();
+    Arc::try_unwrap(coord).ok().unwrap().shutdown();
+    (outs.into_iter().map(|o| o.tokens).collect(), report)
+}
+
+#[test]
+fn coordinator_hetero_overlap_knob_is_pure_observation() {
+    if !Path::new("artifacts/manifest.json").exists() {
+        eprintln!("SKIP: artifacts missing (run `make artifacts`)");
+        return;
+    }
+    // (Bit-identical per-session sim_s parity across timeline modes is
+    // asserted at the fuser level above, where dispatch grouping is
+    // deterministic; the coordinator's admission timing can change which
+    // sessions share a dispatch run-to-run, which re-splits — without
+    // changing in total — the simulated charges.)
+    let (serialized, serial_report) = run_coord(false, 6);
+    let (overlapped, over_report) = run_coord(true, 6);
+    // A/B parity: the knob never changes what is decoded.
+    assert_eq!(serialized, overlapped, "hetero_overlap knob perturbed decoding");
+    // Both modes observe timelines and per-request timeline latencies.
+    assert!(serial_report.makespan_s > 0.0);
+    assert!(over_report.makespan_s > 0.0);
+    assert_eq!(serial_report.tl_latency.n, 6);
+    assert_eq!(over_report.tl_latency.n, 6);
+    // Serialized timelines never overlap, and conserve makespan = Σ busy.
+    assert_eq!(serial_report.overlap_s, 0.0);
+    let busy_sum: f64 = serial_report.pu_busy.iter().sum();
+    assert!(
+        (serial_report.makespan_s - busy_sum).abs() < 1e-9 * busy_sum.max(1.0),
+        "serialized makespan {} != busy sum {busy_sum}",
+        serial_report.makespan_s
+    );
+    // The overlapped mode can only hide time, never add it.
+    let over_busy: f64 = over_report.pu_busy.iter().sum();
+    assert!(over_report.makespan_s <= over_busy + 1e-9);
+}
