@@ -1,0 +1,93 @@
+//! Bench: the decision layer's hot paths — cost prediction through both
+//! CostModel impls, the calibration observe path (on every fused
+//! dispatch), and the DSE candidate search the online re-partitioner
+//! re-runs every K rounds. None of these touch PJRT, so this bench runs
+//! without artifacts.
+
+use specedge::bench::Bench;
+use specedge::config::KernelPath;
+use specedge::decision::{CalibratedModel, CostModel, DispatchObs};
+use specedge::dse::{self, PairConfig};
+use specedge::hetero::{LatencyModel, Mapping, Platform, PuAssignment};
+use specedge::models::{ModelSpec, Scheme, VariantKey};
+
+fn main() {
+    let mut b = Bench::new("decision");
+
+    let d = ModelSpec {
+        name: "drafter".into(), n_layers: 2, d_model: 96, n_heads: 4,
+        ffn_dim: 256, vocab: 48, param_count: 230_880,
+    };
+    let t = ModelSpec {
+        name: "target".into(), n_layers: 4, d_model: 128, n_heads: 4,
+        ffn_dim: 352, vocab: 48, param_count: 816_256,
+    };
+    let pair = PairConfig {
+        target: t.clone(),
+        target_scheme: Scheme::W8a8,
+        drafter: d.clone(),
+        drafter_scheme: Scheme::Fp,
+    };
+    let lat = LatencyModel::new(Platform::imx95());
+    let mapping = Mapping::heterogeneous(1);
+
+    b.bench("analytic_cost_coefficient", || {
+        std::hint::black_box(CostModel::cost_coefficient(
+            &lat,
+            (&d, Scheme::Fp),
+            (&t, Scheme::W8a8),
+            mapping,
+            63,
+        ));
+    });
+
+    // Warm calibrated model: a fitted key per (variant, PU).
+    let calib = CalibratedModel::new(lat.clone());
+    let obs = DispatchObs {
+        variant: VariantKey::parse("drafter_fp").unwrap(),
+        kernel: KernelPath::Ref,
+        bucket: 64,
+        pu: PuAssignment::Gpu,
+        lanes: 4,
+        flops: d.forward_flops(64),
+        duration_s: lat.batched_forward_latency(&d, Scheme::Fp, PuAssignment::Gpu, 64, 4),
+    };
+    for bucket in [16usize, 64, 128] {
+        for lanes in [1usize, 4] {
+            for (key, spec, scheme, pu) in [
+                ("drafter_fp", &d, Scheme::Fp, PuAssignment::Gpu),
+                ("target_w8a8", &t, Scheme::W8a8, PuAssignment::Cpu { cores: 1 }),
+            ] {
+                calib.observe(&DispatchObs {
+                    variant: VariantKey::parse(key).unwrap(),
+                    kernel: KernelPath::Ref,
+                    bucket,
+                    pu,
+                    lanes,
+                    flops: spec.forward_flops(bucket),
+                    duration_s: lat.batched_forward_latency(spec, scheme, pu, bucket, lanes),
+                });
+            }
+        }
+    }
+    b.bench("calibrated_cost_coefficient", || {
+        std::hint::black_box(calib.cost_coefficient(
+            (&d, Scheme::Fp),
+            (&t, Scheme::W8a8),
+            mapping,
+            63,
+        ));
+    });
+    b.bench("calibrated_observe", || {
+        calib.observe(std::hint::black_box(&obs));
+    });
+
+    b.bench("explore_variant_analytic", || {
+        std::hint::black_box(dse::explore_variant(&lat, &pair, 1, 0.9, 63));
+    });
+    b.bench("explore_variant_calibrated", || {
+        std::hint::black_box(dse::explore_variant(&calib, &pair, 1, 0.9, 63));
+    });
+
+    b.finish();
+}

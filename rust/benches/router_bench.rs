@@ -17,7 +17,7 @@ fn main() {
     let mut b = Bench::new("router");
 
     let cfg = RunConfig::default();
-    let policy = Policy::new(&cfg, Platform::imx95());
+    let policy = Policy::new(&cfg, Platform::imx95()).expect("policy");
     let d = ModelSpec {
         name: "drafter".into(), n_layers: 2, d_model: 96, n_heads: 4,
         ffn_dim: 256, vocab: 48, param_count: 230_880,

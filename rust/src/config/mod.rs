@@ -81,6 +81,37 @@ impl KernelPath {
     }
 }
 
+/// Which cost model drives the routing/partitioning decision layer
+/// ([`crate::decision`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DecisionMode {
+    /// The analytic latency model exactly as calibrated offline — the
+    /// paper's workflow, and bit-identical to the pre-decision-layer
+    /// behavior (the default).
+    Analytic,
+    /// The analytic model continuously refit from measured dispatch
+    /// durations; additionally enables online re-partitioning every
+    /// `repartition_every` rounds.
+    Calibrated,
+}
+
+impl DecisionMode {
+    pub fn parse(s: &str) -> anyhow::Result<DecisionMode> {
+        match s {
+            "analytic" => Ok(DecisionMode::Analytic),
+            "calibrated" => Ok(DecisionMode::Calibrated),
+            _ => anyhow::bail!("decision must be analytic|calibrated, got {s:?}"),
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            DecisionMode::Analytic => "analytic",
+            DecisionMode::Calibrated => "calibrated",
+        }
+    }
+}
+
 /// Complete engine + serving configuration.
 #[derive(Debug, Clone)]
 pub struct RunConfig {
@@ -97,7 +128,11 @@ pub struct RunConfig {
     pub speculative: bool,
     /// Design variant (1-based: number of CPU cores available), paper §III-B.
     pub design_variant: usize,
-    /// Heterogeneous mapping: drafter on GPU, target on CPU.
+    /// Heterogeneous mapping allowed (drafter on GPU, target on CPU):
+    /// selects the boot mapping, and under calibrated re-partitioning the
+    /// *permission* to adopt the heterogeneous mapping. `false` pins the
+    /// homogeneous mapping — online re-partitioning is then inert (there
+    /// is exactly one permitted mapping per design variant).
     pub heterogeneous: bool,
     /// Max new tokens per request.
     pub max_new_tokens: usize,
@@ -129,6 +164,20 @@ pub struct RunConfig {
     /// A/B parity. Per-session/-request `sim_s` charges are identical in
     /// both modes; the knob changes only the timeline observables.
     pub hetero_overlap: bool,
+    /// Cost model behind the decision layer: `analytic` (default; exact
+    /// pre-refactor behavior) or `calibrated` (refit online from measured
+    /// dispatch durations, with periodic re-partitioning).
+    pub decision: DecisionMode,
+    /// Calibrated mode: re-run the DSE mapping/γ search every K consulted
+    /// rounds and adopt the winner at the next session admission
+    /// (0 = never re-partition). Ignored under `decision: "analytic"`.
+    pub repartition_every: usize,
+    /// Variant key of the drafter model (must name a `drafter_*` variant
+    /// present in the artifact manifest).
+    pub drafter_variant: String,
+    /// Variant key of the target model (must name a `target_*` variant
+    /// present in the artifact manifest).
+    pub target_variant: String,
     /// RNG seed (workload, stochastic sampling).
     pub seed: u64,
 }
@@ -153,6 +202,10 @@ impl Default for RunConfig {
             max_inflight: 4,
             fuse: true,
             hetero_overlap: true,
+            decision: DecisionMode::Analytic,
+            repartition_every: 64,
+            drafter_variant: "drafter_fp".to_string(),
+            target_variant: "target_w8a8".to_string(),
             seed: 0xC0FFEE,
         }
     }
@@ -221,6 +274,18 @@ impl RunConfig {
         if let Some(v) = j.get("hetero_overlap").and_then(Json::as_bool) {
             self.hetero_overlap = v;
         }
+        if let Some(v) = j.get("decision").and_then(Json::as_str) {
+            self.decision = DecisionMode::parse(v)?;
+        }
+        if let Some(v) = j.get("repartition_every").and_then(Json::as_usize) {
+            self.repartition_every = v;
+        }
+        if let Some(v) = j.get("drafter_variant").and_then(Json::as_str) {
+            self.drafter_variant = v.to_string();
+        }
+        if let Some(v) = j.get("target_variant").and_then(Json::as_str) {
+            self.target_variant = v.to_string();
+        }
         if let Some(v) = j.get("seed").and_then(Json::as_f64) {
             self.seed = v as u64;
         }
@@ -238,7 +303,30 @@ impl RunConfig {
         if let Some(g) = self.gamma {
             anyhow::ensure!((1..=8).contains(&g), "gamma must be 1..=8");
         }
+        self.variant_keys()?;
         Ok(())
+    }
+
+    /// Parse and role-check the configured (drafter, target) variant keys
+    /// — the single validation the decision layer and `validate` share.
+    pub fn variant_keys(
+        &self,
+    ) -> anyhow::Result<(crate::models::VariantKey, crate::models::VariantKey)> {
+        let d = crate::models::VariantKey::parse(&self.drafter_variant)
+            .map_err(|e| anyhow::anyhow!("drafter_variant: {e}"))?;
+        anyhow::ensure!(
+            d.role == crate::models::Role::Drafter,
+            "drafter_variant must name a drafter_* variant, got {:?}",
+            self.drafter_variant
+        );
+        let t = crate::models::VariantKey::parse(&self.target_variant)
+            .map_err(|e| anyhow::anyhow!("target_variant: {e}"))?;
+        anyhow::ensure!(
+            t.role == crate::models::Role::Target,
+            "target_variant must name a target_* variant, got {:?}",
+            self.target_variant
+        );
+        Ok((d, t))
     }
 
     pub fn manifest_path(&self) -> PathBuf {
@@ -287,6 +375,41 @@ mod tests {
         let j = Json::parse(r#"{"hetero_overlap":false}"#).unwrap();
         c.apply_json(&j).unwrap();
         assert!(!c.hetero_overlap);
+    }
+
+    #[test]
+    fn decision_defaults_analytic_and_parses() {
+        let c = RunConfig::default();
+        assert_eq!(c.decision, DecisionMode::Analytic);
+        assert_eq!(c.drafter_variant, "drafter_fp");
+        assert_eq!(c.target_variant, "target_w8a8");
+        let mut c = RunConfig::default();
+        let j = Json::parse(
+            r#"{"decision":"calibrated","repartition_every":16,
+                "drafter_variant":"drafter_w8a8","target_variant":"target_fp"}"#,
+        )
+        .unwrap();
+        c.apply_json(&j).unwrap();
+        assert_eq!(c.decision, DecisionMode::Calibrated);
+        assert_eq!(c.repartition_every, 16);
+        assert_eq!(c.drafter_variant, "drafter_w8a8");
+        assert_eq!(c.target_variant, "target_fp");
+        assert!(DecisionMode::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn swapped_variant_roles_rejected() {
+        // A target_* key in the drafter slot (and vice versa) must fail
+        // loudly at config validation, not at decode time.
+        let mut c = RunConfig::default();
+        let j = Json::parse(r#"{"drafter_variant":"target_w8a8"}"#).unwrap();
+        assert!(c.apply_json(&j).is_err());
+        let mut c = RunConfig::default();
+        let j = Json::parse(r#"{"target_variant":"drafter_fp"}"#).unwrap();
+        assert!(c.apply_json(&j).is_err());
+        let mut c = RunConfig::default();
+        let j = Json::parse(r#"{"target_variant":"nonsense"}"#).unwrap();
+        assert!(c.apply_json(&j).is_err());
     }
 
     #[test]

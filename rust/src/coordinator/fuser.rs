@@ -45,6 +45,15 @@
 //! `fuse = false` and batch-1-only kernels reproduce the pre-fusion clock
 //! exactly.
 //!
+//! **Calibration feed.** When the caller opts in (`collect_obs` — the
+//! worker passes whether the decision layer runs the calibrated model),
+//! every executed forward dispatch — fused or singleton — is reported in
+//! [`TickStats::observations`] (variant, kernel, bucket, PU, executed
+//! lanes, duration), which the worker forwards to the decision layer so
+//! the calibrated cost model ([`crate::decision::CalibratedModel`]) can
+//! refit its latency coefficients from what actually ran. Analytic-mode
+//! serving collects nothing.
+//!
 //! Note the deliberate trade-off in partial fills: padding a 2-session
 //! group to a compiled batch of 4 buys one saved dispatch boundary for
 //! two lanes of extra simulated compute, which under the calibrated edge
@@ -56,11 +65,12 @@
 
 use std::collections::HashMap;
 
+use crate::decision::DispatchObs;
 use crate::hetero::{LatencyModel, PuId, PuTimelines};
 use crate::runtime::Engine;
 use crate::spec::{
-    DecodeSession, EngineReply, EngineRequest, ForwardReply, FuseKey, SessionPlan,
-    StepOutcome, StepProgress,
+    DecodeSession, EngineReply, EngineRequest, ForwardReply, FuseKey, RequestKind,
+    SessionPlan, StepOutcome, StepProgress,
 };
 
 /// What one tick did to one session (indexed like the `sessions` slice).
@@ -76,7 +86,7 @@ pub enum TickEvent {
 }
 
 /// Dispatch accounting for one tick.
-#[derive(Debug, Clone, Copy, Default)]
+#[derive(Debug, Clone, Default)]
 pub struct TickStats {
     /// Engine calls issued (fused, singleton and mono alike).
     pub dispatches: usize,
@@ -86,6 +96,14 @@ pub struct TickStats {
     pub lanes_real: usize,
     /// Executed lanes across all dispatches (padding included).
     pub lanes_executed: usize,
+    /// One record per executed forward dispatch — the calibration feed
+    /// ([`crate::decision::CalibratedModel`]): what ran where, over how
+    /// many lanes, and the observed duration. Collected only when the
+    /// caller asks ([`tick`]'s `collect_obs` — the worker passes the
+    /// decision mode, so analytic serving pays nothing). Mono spec-steps
+    /// are excluded (their fused graph has no single-forward shape to
+    /// fit).
+    pub observations: Vec<DispatchObs>,
 }
 
 /// Compiled batch sizes for (variant, kernel, bucket), ascending (the
@@ -125,6 +143,8 @@ fn plan_chunks(k: usize, sizes: &[usize]) -> Vec<(usize, usize)> {
 /// Advance every session one engine call: plan, fuse, dispatch, scatter —
 /// and, when `timelines` is supplied, schedule each dispatch on its routed
 /// PU's timeline (overlapped or serialized per the timelines' mode).
+/// With `collect_obs` set, every forward dispatch is additionally
+/// recorded in [`TickStats::observations`] for the calibration feed.
 ///
 /// Returns one [`TickEvent`] per session (same order as `sessions`) plus
 /// the tick's dispatch accounting. Sessions that are already done come
@@ -134,6 +154,7 @@ pub fn tick(
     lat: &LatencyModel,
     sessions: &mut [&mut DecodeSession],
     mut timelines: Option<&mut PuTimelines>,
+    collect_obs: bool,
 ) -> (Vec<TickEvent>, TickStats) {
     let n = sessions.len();
     let mut events: Vec<Option<TickEvent>> = Vec::with_capacity(n);
@@ -156,8 +177,9 @@ pub fn tick(
 
     // ---- phase 2: mono spec-steps run as singleton dispatches ---------
     for (i, req) in &singles {
-        events[*i] =
-            Some(run_single(engine, &mut *sessions[*i], req, &mut stats, &mut timelines));
+        events[*i] = Some(run_single(
+            engine, &mut *sessions[*i], req, &mut stats, &mut timelines, collect_obs,
+        ));
     }
 
     // ---- phase 3: fused groups, one dispatch sequence per PU ----------
@@ -175,6 +197,7 @@ pub fn tick(
                 for (i, req) in &group {
                     events[*i] = Some(run_single(
                         engine, &mut *sessions[*i], req, &mut stats, &mut timelines,
+                        collect_obs,
                     ));
                 }
                 continue;
@@ -190,6 +213,7 @@ pub fn tick(
                 for (i, req) in chunk {
                     events[*i] = Some(run_single(
                         engine, &mut *sessions[*i], req, &mut stats, &mut timelines,
+                        collect_obs,
                     ));
                 }
                 continue;
@@ -209,6 +233,7 @@ pub fn tick(
                     for (i, req) in chunk {
                         events[*i] = Some(run_single(
                             engine, &mut *sessions[*i], req, &mut stats, &mut timelines,
+                            collect_obs,
                         ));
                     }
                     continue;
@@ -226,6 +251,17 @@ pub fn tick(
             // overhead the sharers absorb; no simulated time vanishes).
             let duration =
                 lat.batched_forward_latency(&spec, variant.scheme, pu, bucket, exec_b);
+            if collect_obs {
+                stats.observations.push(DispatchObs {
+                    variant,
+                    kernel,
+                    bucket,
+                    pu,
+                    lanes: exec_b,
+                    flops: spec.forward_flops(bucket),
+                    duration_s: duration,
+                });
+            }
             let sim_share = duration / m as f64;
             let real_share = fwd.elapsed_s / m as f64;
             let span = timelines.as_deref_mut().map(|tl| {
@@ -272,6 +308,7 @@ fn run_single(
     req: &EngineRequest,
     stats: &mut TickStats,
     timelines: &mut Option<&mut PuTimelines>,
+    collect_obs: bool,
 ) -> TickEvent {
     let sim_before = session.outcome().sim_s;
     match session.execute(engine, req) {
@@ -279,8 +316,23 @@ fn run_single(
             stats.dispatches += 1;
             stats.lanes_real += 1;
             stats.lanes_executed += 1;
+            let duration = (session.outcome().sim_s - sim_before).max(0.0);
+            if collect_obs {
+                if let RequestKind::Forward { variant, kernel, bucket } = req.kind {
+                    if let Ok(spec) = engine.manifest.model_for(variant) {
+                        stats.observations.push(DispatchObs {
+                            variant,
+                            kernel,
+                            bucket,
+                            pu: req.route.primary,
+                            lanes: 1,
+                            flops: spec.forward_flops(bucket),
+                            duration_s: duration,
+                        });
+                    }
+                }
+            }
             if let Some(tl) = timelines.as_deref_mut() {
-                let duration = (session.outcome().sim_s - sim_before).max(0.0);
                 let blocked_buf;
                 let blocked: &[PuId] = match req.route.blocks {
                     Some(b) => {

@@ -1,9 +1,12 @@
 //! The serving coordinator — Layer 3's vLLM-router-shaped core.
 //!
 //! * [`queue`] — bounded request queue with backpressure (reject-on-full)
-//! * [`policy`] — adaptive routing policy: per-task α estimates feed the
-//!   cost model, which picks speculation on/off and γ* — at admission
-//!   *and again between every speculation round* of a live session
+//! * [`policy`] — the routing [`Policy`] (now the decision engine in
+//!   [`crate::decision`]): per-task α estimates feed the configured cost
+//!   model (analytic or calibrated), which picks speculation on/off and
+//!   γ* — at admission *and again between every speculation round* of a
+//!   live session — and, in calibrated mode, periodically re-partitions
+//!   the mapping for future admissions
 //! * [`fuser`] — the cross-session fused batch executor: every scheduler
 //!   tick collects all live sessions' pending
 //!   [`EngineRequest`](crate::spec::EngineRequest)s, dispatches each
@@ -88,7 +91,7 @@ impl Coordinator {
     pub fn start(cfg: RunConfig, platform: Platform) -> anyhow::Result<Coordinator> {
         let queue = Arc::new(RequestQueue::new(cfg.queue_capacity));
         let metrics = Arc::new(Metrics::new());
-        let policy = Arc::new(Policy::new(&cfg, platform.clone()));
+        let policy = Arc::new(Policy::new(&cfg, platform.clone())?);
         let shutdown = Arc::new(AtomicBool::new(false));
         let mut handles = Vec::new();
         let (ready_tx, ready_rx) = mpsc::channel::<anyhow::Result<()>>();

@@ -1,331 +1,6 @@
-//! Adaptive routing policy: the cost model applied *online*.
-//!
-//! The paper's workflow decides (speculation?, mapping, γ) offline from
-//! profiled (α, c). A serving system can do better: the router keeps a
-//! per-task running estimate of α (EWMA over per-request acceptance rates)
-//! and re-evaluates Eq. (1) per request, so a task whose drafts keep getting
-//! rejected automatically falls back to plain autoregressive decoding —
-//! exactly the "naive adoption can increase latency" failure mode the paper
-//! warns about, handled at runtime. (Extension beyond the paper; ablated in
-//! the router bench.)
-//!
-//! With resumable sessions the policy is additionally consulted *between
-//! speculation rounds* ([`Policy::route_round`]): the live session's own
-//! acceptance evidence is blended with the task EWMA, so γ can shrink —
-//! or speculation switch off entirely — midway through a request whose
-//! drafts turn out worse than the admission-time estimate.
+//! Routing policy — moved to [`crate::decision`], the unified decision
+//! layer (cost-model trait, calibrated estimator, online re-partitioning).
+//! Re-exported here so historical `coordinator::policy` paths keep
+//! working.
 
-use crate::config::RunConfig;
-use crate::costmodel;
-use crate::hetero::{LatencyModel, Mapping, Platform};
-use crate::models::{Scheme, VariantKey};
-use std::collections::HashMap;
-use std::sync::Mutex;
-
-/// Per-request routing decision.
-#[derive(Debug, Clone, Copy, PartialEq)]
-pub struct RouteDecision {
-    pub speculative: bool,
-    pub gamma: usize,
-    pub mapping: Mapping,
-    /// Predicted speedup at decision time (diagnostics).
-    pub predicted_speedup: f64,
-    /// The α estimate the decision used.
-    pub alpha_used: f64,
-}
-
-/// Shared routing policy.
-pub struct Policy {
-    lat: LatencyModel,
-    fixed_gamma: Option<usize>,
-    speculative_enabled: bool,
-    adaptive: bool,
-    mapping: Mapping,
-    drafter: VariantKey,
-    target: VariantKey,
-    /// Per-task EWMA of acceptance rate.
-    alpha: Mutex<HashMap<String, f64>>,
-    /// Optimistic prior before any observation (the paper's p90 α).
-    prior_alpha: f64,
-    ewma: f64,
-}
-
-impl Policy {
-    pub fn new(cfg: &RunConfig, platform: Platform) -> Policy {
-        let mapping = if cfg.heterogeneous {
-            Mapping::heterogeneous(cfg.design_variant)
-        } else {
-            Mapping::homogeneous(cfg.design_variant)
-        };
-        Policy {
-            lat: LatencyModel::new(platform),
-            fixed_gamma: cfg.gamma,
-            speculative_enabled: cfg.speculative,
-            adaptive: cfg.gamma.is_none(),
-            mapping,
-            drafter: VariantKey::parse("drafter_fp").unwrap(),
-            target: VariantKey::parse("target_w8a8").unwrap(),
-            alpha: Mutex::new(HashMap::new()),
-            prior_alpha: 0.90,
-            ewma: 0.2,
-        }
-    }
-
-    pub fn variants(&self) -> (VariantKey, VariantKey) {
-        (self.drafter, self.target)
-    }
-
-    pub fn latency_model(&self) -> &LatencyModel {
-        &self.lat
-    }
-
-    /// Current α estimate for a task.
-    pub fn alpha_estimate(&self, task: &str) -> f64 {
-        self.alpha
-            .lock()
-            .unwrap()
-            .get(task)
-            .copied()
-            .unwrap_or(self.prior_alpha)
-    }
-
-    /// Decide the execution plan for one request at admission.
-    pub fn route(
-        &self,
-        task: &str,
-        d_spec: &crate::models::ModelSpec,
-        t_spec: &crate::models::ModelSpec,
-        seq_len: usize,
-    ) -> RouteDecision {
-        self.decide(self.alpha_estimate(task), d_spec, t_spec, seq_len)
-    }
-
-    /// Re-decide the plan between speculation rounds of a live session.
-    ///
-    /// `session_drafted` / `session_alpha` are the session's own running
-    /// draft count and acceptance rate; once the session has real evidence
-    /// its α dominates the task-level EWMA (weight grows with the sample
-    /// count), so a request whose drafts collapse mid-flight falls back to
-    /// baseline within that request — not merely for the next one.
-    pub fn route_round(
-        &self,
-        task: &str,
-        d_spec: &crate::models::ModelSpec,
-        t_spec: &crate::models::ModelSpec,
-        seq_len: usize,
-        session_drafted: usize,
-        session_alpha: f64,
-    ) -> RouteDecision {
-        let task_alpha = self.alpha_estimate(task);
-        let alpha = if self.adaptive && session_drafted > 0 && session_alpha.is_finite() {
-            let n = session_drafted as f64;
-            let w = (n / (n + 8.0)).min(0.9);
-            w * session_alpha + (1.0 - w) * task_alpha
-        } else {
-            task_alpha
-        };
-        self.decide(alpha, d_spec, t_spec, seq_len)
-    }
-
-    fn decide(
-        &self,
-        alpha: f64,
-        d_spec: &crate::models::ModelSpec,
-        t_spec: &crate::models::ModelSpec,
-        seq_len: usize,
-    ) -> RouteDecision {
-        if !self.speculative_enabled {
-            return RouteDecision {
-                speculative: false,
-                gamma: 0,
-                mapping: self.mapping,
-                predicted_speedup: 1.0,
-                alpha_used: f64::NAN,
-            };
-        }
-        let c = self.lat.cost_coefficient(
-            (d_spec, Scheme::Fp),
-            (t_spec, Scheme::W8a8),
-            self.mapping,
-            seq_len,
-        );
-        if let Some(g) = self.fixed_gamma {
-            // Fixed-γ mode: still predict the speedup for diagnostics.
-            return RouteDecision {
-                speculative: true,
-                gamma: g,
-                mapping: self.mapping,
-                predicted_speedup: costmodel::speedup(alpha, g, c),
-                alpha_used: alpha,
-            };
-        }
-        let choice = costmodel::optimal_gamma(alpha, c);
-        RouteDecision {
-            speculative: choice.gamma > 0,
-            gamma: choice.gamma,
-            mapping: self.mapping,
-            predicted_speedup: choice.speedup,
-            alpha_used: alpha,
-        }
-    }
-
-    /// Cost-model prediction of the cross-PU overlap fraction the per-PU
-    /// timelines should approach for a γ decided at `seq_len` under this
-    /// policy's *own* mapping (0 for homogeneous mappings — there is only
-    /// one timeline to occupy). Serving-side twin of the bound the
-    /// `overlap` experiment evaluates at its explicit mapping via
-    /// [`costmodel::predicted_overlap_frac`]: compare it against the live
-    /// `Report::overlap_frac` to see whether co-scheduling is dense
-    /// enough to realize the mapping's predicted concurrency.
-    pub fn predicted_overlap(
-        &self,
-        d_spec: &crate::models::ModelSpec,
-        t_spec: &crate::models::ModelSpec,
-        gamma: usize,
-        seq_len: usize,
-    ) -> f64 {
-        if !self.mapping.is_heterogeneous() {
-            return 0.0;
-        }
-        let c = self.lat.cost_coefficient(
-            (d_spec, Scheme::Fp),
-            (t_spec, Scheme::W8a8),
-            self.mapping,
-            seq_len,
-        );
-        costmodel::predicted_overlap_frac(gamma as f64, c)
-    }
-
-    /// Feed back an observed per-request acceptance rate.
-    pub fn observe_alpha(&self, task: &str, observed: f64) {
-        if !observed.is_finite() || !self.adaptive {
-            return;
-        }
-        let mut m = self.alpha.lock().unwrap();
-        let e = m.entry(task.to_string()).or_insert(self.prior_alpha);
-        *e = (1.0 - self.ewma) * *e + self.ewma * observed;
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-    use crate::models::ModelSpec;
-
-    fn specs() -> (ModelSpec, ModelSpec) {
-        (
-            ModelSpec {
-                name: "drafter".into(), n_layers: 2, d_model: 96, n_heads: 4,
-                ffn_dim: 256, vocab: 48, param_count: 230_880,
-            },
-            ModelSpec {
-                name: "target".into(), n_layers: 4, d_model: 128, n_heads: 4,
-                ffn_dim: 352, vocab: 48, param_count: 816_256,
-            },
-        )
-    }
-
-    fn policy(cfg: &RunConfig) -> Policy {
-        Policy::new(cfg, Platform::imx95())
-    }
-
-    #[test]
-    fn optimistic_prior_speculates() {
-        let cfg = RunConfig::default();
-        let p = policy(&cfg);
-        let (d, t) = specs();
-        let dec = p.route("translate", &d, &t, 63);
-        assert!(dec.speculative);
-        assert!(dec.gamma >= 3, "{dec:?}");
-        assert!(dec.predicted_speedup > 1.3);
-    }
-
-    #[test]
-    fn low_alpha_task_falls_back_to_baseline() {
-        let cfg = RunConfig::default();
-        let p = policy(&cfg);
-        let (d, t) = specs();
-        // Hammer the estimate down with rejections.
-        for _ in 0..60 {
-            p.observe_alpha("hard-task", 0.05);
-        }
-        let dec = p.route("hard-task", &d, &t, 63);
-        assert!(!dec.speculative, "{dec:?}");
-        // Other tasks keep the optimistic prior.
-        assert!(p.route("translate", &d, &t, 63).speculative);
-    }
-
-    #[test]
-    fn fixed_gamma_respected() {
-        let cfg = RunConfig { gamma: Some(2), ..RunConfig::default() };
-        let p = policy(&cfg);
-        let (d, t) = specs();
-        let dec = p.route("translate", &d, &t, 63);
-        assert!(dec.speculative);
-        assert_eq!(dec.gamma, 2);
-        // Fixed γ also disables adaptation.
-        p.observe_alpha("translate", 0.0);
-        assert!((p.alpha_estimate("translate") - 0.90).abs() < 1e-12);
-    }
-
-    #[test]
-    fn speculation_disabled_routes_baseline() {
-        let cfg = RunConfig { speculative: false, ..RunConfig::default() };
-        let p = policy(&cfg);
-        let (d, t) = specs();
-        let dec = p.route("translate", &d, &t, 63);
-        assert!(!dec.speculative);
-        assert_eq!(dec.gamma, 0);
-    }
-
-    #[test]
-    fn route_round_tracks_session_evidence() {
-        let cfg = RunConfig::default();
-        let p = policy(&cfg);
-        let (d, t) = specs();
-        // No evidence yet: identical to the admission decision.
-        let admit = p.route("translate", &d, &t, 63);
-        let r0 = p.route_round("translate", &d, &t, 63, 0, f64::NAN);
-        assert_eq!(admit, r0);
-        // A collapsing in-flight α must never pick a larger γ than a
-        // perfect one, and with heavy evidence it dominates the prior.
-        let bad = p.route_round("translate", &d, &t, 63, 64, 0.0);
-        let good = p.route_round("translate", &d, &t, 63, 64, 1.0);
-        assert!(bad.gamma <= good.gamma, "{bad:?} vs {good:?}");
-        assert!(bad.alpha_used < admit.alpha_used);
-        assert!(good.alpha_used > admit.alpha_used);
-    }
-
-    #[test]
-    fn route_round_respects_global_off_switch() {
-        let cfg = RunConfig { speculative: false, ..RunConfig::default() };
-        let p = policy(&cfg);
-        let (d, t) = specs();
-        let dec = p.route_round("translate", &d, &t, 63, 10, 1.0);
-        assert!(!dec.speculative);
-        assert_eq!(dec.gamma, 0);
-    }
-
-    #[test]
-    fn predicted_overlap_heterogeneous_only() {
-        let (d, t) = specs();
-        let het = policy(&RunConfig::default());
-        let f = het.predicted_overlap(&d, &t, 5, 63);
-        assert!(f > 0.0 && f <= 1.0, "{f}");
-        // Homogeneous mapping: one timeline, nothing to overlap.
-        let hom = policy(&RunConfig { heterogeneous: false, ..RunConfig::default() });
-        assert_eq!(hom.predicted_overlap(&d, &t, 5, 63), 0.0);
-        // No speculation, no draft/verify split.
-        assert_eq!(het.predicted_overlap(&d, &t, 0, 63), 0.0);
-    }
-
-    #[test]
-    fn ewma_converges() {
-        let cfg = RunConfig::default();
-        let p = policy(&cfg);
-        for _ in 0..100 {
-            p.observe_alpha("t", 0.5);
-        }
-        assert!((p.alpha_estimate("t") - 0.5).abs() < 0.01);
-    }
-}
+pub use crate::decision::{Policy, RouteDecision};

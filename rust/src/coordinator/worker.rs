@@ -32,7 +32,7 @@
 //! With `fuse: false` that configuration instead runs the legacy lockstep
 //! [`batcher`](super::batcher) loop, the true pre-fusion A/B baseline.
 
-use crate::config::{KernelPath, RunConfig};
+use crate::config::{DecisionMode, KernelPath, RunConfig};
 use crate::hetero::{LatencyModel, Platform, PuTimelines, TimelineSnapshot};
 use crate::metrics::{Metrics, RequestRecord, RoundRecord};
 use crate::models::ModelSpec;
@@ -80,20 +80,43 @@ pub fn run_worker(
 ) {
     // Build the engine inside the thread; report readiness (or the error).
     let engine = match Engine::load(&cfg.artifacts_dir) {
-        Ok(e) => {
-            let _ = ready.send(Ok(()));
-            e
-        }
+        Ok(e) => e,
         Err(e) => {
             let _ = ready.send(Err(anyhow::anyhow!("worker {wid}: {e}")));
             return;
         }
     };
+    let (drafter, target) = policy.variants();
+    // Validate the configured variant keys against the manifest *before*
+    // reporting ready: a config/manifest mismatch fails Coordinator::start
+    // with a clear error instead of leaving callers waiting on a queue no
+    // worker will ever serve.
+    let (d_spec, t_spec) = match (
+        engine.manifest.model_for(drafter).cloned(),
+        engine.manifest.model_for(target).cloned(),
+    ) {
+        (Ok(d), Ok(t)) => (d, t),
+        (d, t) => {
+            let mut missing = Vec::new();
+            if d.is_err() {
+                missing.push(drafter.name());
+            }
+            if t.is_err() {
+                missing.push(target.name());
+            }
+            let _ = ready.send(Err(anyhow::anyhow!(
+                "worker {wid}: configured variant(s) [{}] not in the artifact \
+                 manifest (check drafter_variant/target_variant in the run config)",
+                missing.join(", ")
+            )));
+            return;
+        }
+    };
+    let _ = ready.send(Ok(()));
     let tokenizer = match Tokenizer::from_manifest(&engine.manifest.tokenizer_spec) {
         Ok(t) => t,
         Err(_) => Tokenizer::builtin(),
     };
-    let (drafter, target) = policy.variants();
     // Batched-baseline configs decode on the ref lowering — the only
     // kernel path the AOT build lowers batch > 1 artifacts for (see
     // aot.py) — so their per-tick forwards can actually fuse.
@@ -113,19 +136,6 @@ pub fn run_worker(
     }
 
     let lat = LatencyModel::new(platform);
-    let (d_spec, t_spec) = match (
-        engine.manifest.model_for(drafter).cloned(),
-        engine.manifest.model_for(target).cloned(),
-    ) {
-        (Ok(d), Ok(t)) => (d, t),
-        _ => {
-            // Malformed manifest: drain the queue until shutdown so every
-            // waiting caller sees its response sender dropped (RecvError)
-            // instead of blocking forever on an unserved request.
-            while queue.pop().is_some() {}
-            return;
-        }
-    };
 
     // With fusion off, the batched-baseline configuration keeps the
     // legacy lockstep batcher — the true pre-fusion A/B baseline (whole
@@ -142,7 +152,7 @@ pub fn run_worker(
                 // streaming/metrics behavior — exactly as before batching
                 // kicks in.
                 let item = batch.into_iter().next().unwrap();
-                let ls = admit(&cfg, &engine, &lat, &policy, &d_spec, &t_spec,
+                let ls = admit(&cfg, &engine, &lat, &policy, &metrics, &d_spec, &t_spec,
                                item, drafter, target, cfg.kernel_path);
                 serve_single(&engine, &policy, &metrics, &tokenizer,
                              &d_spec, &t_spec, ls);
@@ -175,6 +185,9 @@ pub fn run_worker(
         PuTimelines::serialized()
     };
     let mut tl_reported = TimelineSnapshot::default();
+    // Dispatch observations are only worth collecting when a calibrated
+    // model is there to consume them.
+    let calibrating = policy.decision_mode() == DecisionMode::Calibrated;
 
     loop {
         // ---- admit: top up the in-flight set -------------------------
@@ -196,7 +209,7 @@ pub fn run_worker(
                     None => break,
                 }
             };
-            let mut ls = admit(&cfg, &engine, &lat, &policy, &d_spec, &t_spec,
+            let mut ls = admit(&cfg, &engine, &lat, &policy, &metrics, &d_spec, &t_spec,
                                item, drafter, target, serving_kernel);
             // A session admitted mid-stream starts at the worker's
             // current simulated "now" (the earliest frontier among PUs
@@ -219,10 +232,16 @@ pub fn run_worker(
             if ls.session.mid_round() || ls.session.is_done() {
                 continue;
             }
+            // Priced at the session's admission-frozen mapping: an online
+            // re-partition must not re-score in-flight sessions against
+            // routes they are not running on.
             let dec = policy.route_round(
-                &ls.task, &d_spec, &t_spec, ls.session.seq_len(),
-                ls.session.n_drafted(), ls.session.alpha_so_far(),
+                &ls.task, &d_spec, &t_spec, ls.session.mapping(),
+                ls.session.seq_len(), ls.session.n_drafted(), ls.session.alpha_so_far(),
             );
+            if dec.used_prior {
+                metrics.record_prior_decision();
+            }
             ls.session.set_speculative(dec.speculative);
             if dec.speculative {
                 // Artifact-aware: monolithic fused graphs only exist for
@@ -236,13 +255,21 @@ pub fn run_worker(
         let events = if cfg.fuse {
             let mut refs: Vec<&mut DecodeSession> =
                 live.iter_mut().map(|ls| &mut ls.session).collect();
-            let (events, stats) = fuser::tick(&engine, &lat, &mut refs, Some(&mut timelines));
+            let (events, stats) =
+                fuser::tick(&engine, &lat, &mut refs, Some(&mut timelines), calibrating);
             metrics.record_dispatches(
                 stats.dispatches as u64,
                 stats.fused_dispatches as u64,
                 stats.lanes_real as u64,
                 stats.lanes_executed as u64,
             );
+            // Close the predict → measure → correct loop: the tick's
+            // observed dispatch durations feed the calibrated cost model
+            // (consumes nothing under `decision: "analytic"`).
+            if !stats.observations.is_empty() {
+                let fed = policy.observe_dispatches(&stats.observations);
+                metrics.record_calibration(fed as u64);
+            }
             // Push this tick's timeline growth (all deltas, makespan
             // included, sum across workers' independent timelines).
             let snap = timelines.snapshot();
@@ -333,13 +360,16 @@ fn finish_round(
     step.done
 }
 
-/// Route one queue item and wrap it into a live session.
+/// Route one queue item and wrap it into a live session. The mapping the
+/// decision carries is frozen into the session's setup here — an online
+/// re-partition switch therefore only affects *future* admissions.
 #[allow(clippy::too_many_arguments)]
 fn admit(
     cfg: &RunConfig,
     engine: &Engine,
     lat: &LatencyModel,
     policy: &Policy,
+    metrics: &Metrics,
     d_spec: &ModelSpec,
     t_spec: &ModelSpec,
     item: QueueItem,
@@ -350,6 +380,9 @@ fn admit(
     let queue_s = item.enqueued.elapsed().as_secs_f64();
     let req = item.request;
     let decision = policy.route(&req.task, d_spec, t_spec, req.prompt.len());
+    if decision.used_prior {
+        metrics.record_prior_decision();
+    }
     let setup = DecoderSetup {
         drafter,
         target,
@@ -379,7 +412,9 @@ fn admit(
 /// Drive one admitted session to completion — the scheduler path
 /// specialized to a single in-flight session (the lockstep configuration
 /// uses it for lone requests, so low traffic keeps the normal
-/// kernel/streaming/metrics behavior).
+/// kernel/streaming/metrics behavior). This legacy A/B path steps the
+/// session directly and does **not** feed the calibration loop — only
+/// the fused tick executor reports dispatch observations.
 fn serve_single(
     engine: &Engine,
     policy: &Policy,
@@ -392,9 +427,12 @@ fn serve_single(
     loop {
         // Round-level policy, as in the tick scheduler.
         let dec = policy.route_round(
-            &ls.task, d_spec, t_spec, ls.session.seq_len(),
-            ls.session.n_drafted(), ls.session.alpha_so_far(),
+            &ls.task, d_spec, t_spec, ls.session.mapping(),
+            ls.session.seq_len(), ls.session.n_drafted(), ls.session.alpha_so_far(),
         );
+        if dec.used_prior {
+            metrics.record_prior_decision();
+        }
         ls.session.set_speculative(dec.speculative);
         if dec.speculative {
             ls.session.set_gamma_checked(engine, dec.gamma);

@@ -14,6 +14,16 @@
 //! layer evaluates this model at each candidate mapping's measured (α, c)
 //! and picks the (mapping, γ*) with the highest predicted S.
 //!
+//! **Where (α, c) come from.** This module is pure Eq.-(1) arithmetic;
+//! the *operating point* it is evaluated at is owned by the unified
+//! decision layer ([`crate::decision`]): `c` comes from a
+//! [`crate::decision::CostModel`] — the offline-calibrated analytic
+//! [`crate::hetero::LatencyModel`], or the online-refit
+//! [`crate::decision::CalibratedModel`] — and `α` from the decision
+//! engine's per-task EWMAs. The `decision: "analytic" | "calibrated"`
+//! config knob selects between them (analytic is the default and is
+//! bit-identical to the historical behavior).
+//!
 //! **Batched dispatches.** Eq. (1) prices a *single-stream* round: γ+1
 //! dispatch boundaries (modular) or one (monolithic). Under the serving
 //! fuser, co-scheduled sessions share batched forwards, priced by

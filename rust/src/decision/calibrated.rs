@@ -1,0 +1,334 @@
+//! The calibrated cost model: the analytic prior, continuously refit from
+//! the dispatch durations the executor actually observes.
+//!
+//! **Estimator.** Every observed dispatch obeys the same two-coefficient
+//! law the analytic model assumes (see
+//! [`LatencyModel::batched_forward_latency`]): a dispatch of `b` executed
+//! lanes at bucket `s` costs
+//!
+//! ```text
+//! duration = a · (b × flops(s)) + oh
+//! ```
+//!
+//! where `a` is the variant's inverse effective throughput on that PU and
+//! `oh` the PU's runtime-API dispatch boundary. Both are unknowns the
+//! offline calibration may have gotten wrong (thermal throttling, DVFS,
+//! contention, a mis-profiled board) — so per (variant, kernel, physical
+//! PU) key the model keeps an *online least-squares fit* of observed
+//! duration against the feature `x = lanes × flops(bucket)`: five running
+//! sums (`n, Σx, Σy, Σx², Σxy`) give the closed-form slope/intercept at
+//! any moment, in O(1) memory and time per observation. Per-bucket
+//! observation counts are kept alongside for reporting.
+//!
+//! **Prediction.** A key predicts `a · flops(seq) + oh` once its fit is
+//! well-conditioned (enough observations *and* genuine spread in `x` —
+//! a single bucket at a single batch size cannot separate slope from
+//! intercept). Until then the model falls back to the analytic prior, so
+//! an empty or degenerate calibration state behaves exactly like
+//! `decision: "analytic"`. When serving itself runs on the simulated
+//! clock, the observed durations *are* analytic-model outputs and the fit
+//! converges back onto the prior — calibration only changes decisions
+//! when the measured platform genuinely deviates from the offline one.
+//!
+//! The store is keyed by [`PuId`] (the physical device), not the core
+//! count: serving runs at one fixed design variant, so the CPU-cluster
+//! coefficients it fits are those of the deployed core count.
+
+use std::collections::{BTreeMap, HashMap};
+use std::sync::Mutex;
+
+use crate::config::KernelPath;
+use crate::hetero::{LatencyModel, Platform, PuAssignment, PuId};
+use crate::models::{ModelSpec, Role, Scheme, VariantKey};
+
+use super::model::{CostModel, DispatchObs};
+
+/// Minimum observations before a fit may override the analytic prior.
+const MIN_OBS: usize = 6;
+
+/// Calibration store key: which compiled variant, through which kernel
+/// lowering, on which physical PU.
+type CalibKey = (VariantKey, KernelPath, PuId);
+
+/// Online least-squares accumulator for one calibration key.
+#[derive(Debug, Clone, Default)]
+struct LaneFit {
+    n: f64,
+    sx: f64,
+    sy: f64,
+    sxx: f64,
+    sxy: f64,
+    /// Observations per sequence bucket (reporting only).
+    buckets: BTreeMap<usize, u64>,
+}
+
+impl LaneFit {
+    fn push(&mut self, bucket: usize, x: f64, y: f64) {
+        self.n += 1.0;
+        self.sx += x;
+        self.sy += y;
+        self.sxx += x * x;
+        self.sxy += x * y;
+        *self.buckets.entry(bucket).or_insert(0) += 1;
+    }
+
+    /// Fitted `(slope, intercept)` — `None` while under-observed or
+    /// degenerate (all observations at one `x`, slope non-positive).
+    fn coefficients(&self) -> Option<(f64, f64)> {
+        if self.n < MIN_OBS as f64 {
+            return None;
+        }
+        let den = self.n * self.sxx - self.sx * self.sx;
+        // Relative conditioning check: with no spread in x the normal
+        // equations are singular and slope/intercept cannot be separated.
+        if den <= 1e-9 * self.n * self.sxx {
+            return None;
+        }
+        let a = (self.n * self.sxy - self.sx * self.sy) / den;
+        let b = (self.sy - a * self.sx) / self.n;
+        if !a.is_finite() || !b.is_finite() || a <= 0.0 {
+            return None;
+        }
+        Some((a, b.max(0.0)))
+    }
+}
+
+/// Point-in-time calibration state (metrics command / diagnostics).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CalibrationReport {
+    /// Keys with at least one observation.
+    pub tracked_keys: usize,
+    /// Keys whose fit is well-conditioned (actively overriding the prior).
+    pub fitted_keys: usize,
+    /// Total observations folded in.
+    pub observations: u64,
+}
+
+/// The calibrated [`CostModel`]: analytic prior + online refit.
+#[derive(Debug)]
+pub struct CalibratedModel {
+    analytic: LatencyModel,
+    fits: Mutex<HashMap<CalibKey, LaneFit>>,
+    observations: std::sync::atomic::AtomicU64,
+}
+
+impl CalibratedModel {
+    pub fn new(analytic: LatencyModel) -> CalibratedModel {
+        CalibratedModel {
+            analytic,
+            fits: Mutex::new(HashMap::new()),
+            observations: std::sync::atomic::AtomicU64::new(0),
+        }
+    }
+
+    /// Fold one observed dispatch into the fit for its key. Returns
+    /// whether the observation was accepted (malformed ones — zero lanes,
+    /// non-positive duration or FLOPs — are dropped, uncounted).
+    pub fn observe(&self, o: &DispatchObs) -> bool {
+        if !o.duration_s.is_finite() || o.duration_s <= 0.0 || o.flops <= 0.0 || o.lanes == 0 {
+            return false;
+        }
+        let x = o.lanes as f64 * o.flops;
+        let key = (o.variant, o.kernel, o.pu.id());
+        let mut fits = self.fits.lock().unwrap();
+        fits.entry(key).or_default().push(o.bucket, x, o.duration_s);
+        self.observations
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        true
+    }
+
+    pub fn report(&self) -> CalibrationReport {
+        let fits = self.fits.lock().unwrap();
+        CalibrationReport {
+            tracked_keys: fits.len(),
+            fitted_keys: fits.values().filter(|f| f.coefficients().is_some()).count(),
+            observations: self.observations.load(std::sync::atomic::Ordering::Relaxed),
+        }
+    }
+
+    /// Best well-conditioned fit for (variant, pu) across kernel lowerings
+    /// — most observations, ties broken on the kernel ordering so the
+    /// choice is deterministic — as `(slope, intercept)`.
+    fn best_fit(&self, variant: VariantKey, pu: PuId) -> Option<(f64, f64)> {
+        let fits = self.fits.lock().unwrap();
+        let mut best: Option<(f64, KernelPath, f64, f64)> = None; // (n, kernel, a, b)
+        for ((v, kernel, pid), fit) in fits.iter() {
+            if *v != variant || *pid != pu {
+                continue;
+            }
+            if let Some((a, b)) = fit.coefficients() {
+                let better = match &best {
+                    None => true,
+                    Some((bn, bk, _, _)) => {
+                        fit.n > *bn || (fit.n == *bn && *kernel < *bk)
+                    }
+                };
+                if better {
+                    best = Some((fit.n, *kernel, a, b));
+                }
+            }
+        }
+        best.map(|(_, _, a, b)| (a, b))
+    }
+}
+
+impl CostModel for CalibratedModel {
+    fn name(&self) -> &'static str {
+        "calibrated"
+    }
+
+    fn platform(&self) -> &Platform {
+        &self.analytic.platform
+    }
+
+    fn forward_latency(
+        &self,
+        spec: &ModelSpec,
+        scheme: Scheme,
+        pu: PuAssignment,
+        seq_len: usize,
+    ) -> f64 {
+        // The manifest names specs "drafter"/"target" — the same convention
+        // the platform efficiency tables key on.
+        let role = if spec.name == "drafter" {
+            Role::Drafter
+        } else {
+            Role::Target
+        };
+        match self.best_fit(VariantKey::new(role, scheme), pu.id()) {
+            Some((a, b)) => a * spec.forward_flops(seq_len) + b,
+            None => self.analytic.forward_latency(spec, scheme, pu, seq_len),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hetero::Mapping;
+
+    fn specs() -> (ModelSpec, ModelSpec) {
+        (
+            ModelSpec {
+                name: "drafter".into(), n_layers: 2, d_model: 96, n_heads: 4,
+                ffn_dim: 256, vocab: 48, param_count: 230_880,
+            },
+            ModelSpec {
+                name: "target".into(), n_layers: 4, d_model: 128, n_heads: 4,
+                ffn_dim: 352, vocab: 48, param_count: 816_256,
+            },
+        )
+    }
+
+    /// Feed observations of `truth`'s dispatch durations for one
+    /// (variant, spec, scheme, pu) across buckets and lane counts.
+    fn feed(
+        model: &CalibratedModel,
+        truth: &LatencyModel,
+        variant: &str,
+        spec: &ModelSpec,
+        scheme: Scheme,
+        pu: PuAssignment,
+    ) {
+        let v = VariantKey::parse(variant).unwrap();
+        for _rep in 0..2 {
+            for bucket in [16usize, 64, 128] {
+                for lanes in [1usize, 4] {
+                    model.observe(&DispatchObs {
+                        variant: v,
+                        kernel: KernelPath::Ref,
+                        bucket,
+                        pu,
+                        lanes,
+                        flops: spec.forward_flops(bucket),
+                        duration_s: truth
+                            .batched_forward_latency(spec, scheme, pu, bucket, lanes),
+                    });
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn empty_calibration_matches_analytic_exactly() {
+        let analytic = LatencyModel::new(Platform::imx95());
+        let m = CalibratedModel::new(analytic.clone());
+        let (d, t) = specs();
+        for seq in [16usize, 63, 128] {
+            let a = analytic.cost_coefficient(
+                (&d, Scheme::Fp), (&t, Scheme::W8a8), Mapping::heterogeneous(1), seq);
+            let b = m.cost_coefficient(
+                (&d, Scheme::Fp), (&t, Scheme::W8a8), Mapping::heterogeneous(1), seq);
+            assert_eq!(a.to_bits(), b.to_bits(), "fallback must be bit-exact");
+        }
+        let r = m.report();
+        assert_eq!(r.tracked_keys, 0);
+        assert_eq!(r.observations, 0);
+    }
+
+    #[test]
+    fn fit_recovers_a_perturbed_platform() {
+        let analytic = LatencyModel::new(Platform::imx95());
+        let mut p = Platform::imx95();
+        p.gpu.peak_gflops *= 0.7; // the board runs 30% slower than profiled
+        p.gpu.dispatch_overhead_s *= 1.3;
+        let truth = LatencyModel::new(p);
+        let m = CalibratedModel::new(analytic.clone());
+        let (d, _) = specs();
+        feed(&m, &truth, "drafter_fp", &d, Scheme::Fp, PuAssignment::Gpu);
+        let fitted = m.forward_latency(&d, Scheme::Fp, PuAssignment::Gpu, 64);
+        let want = truth.forward_latency(&d, Scheme::Fp, PuAssignment::Gpu, 64);
+        let got_prior = analytic.forward_latency(&d, Scheme::Fp, PuAssignment::Gpu, 64);
+        assert!(
+            (fitted - want).abs() / want < 0.01,
+            "fitted {fitted} vs true {want} (prior {got_prior})"
+        );
+        assert!(m.report().fitted_keys >= 1);
+    }
+
+    #[test]
+    fn degenerate_observations_never_override_the_prior() {
+        let analytic = LatencyModel::new(Platform::imx95());
+        let m = CalibratedModel::new(analytic.clone());
+        let (d, _) = specs();
+        // Plenty of observations, but all at one (bucket, lanes): slope and
+        // intercept are not separable — the fit must stay inert.
+        for _ in 0..50 {
+            m.observe(&DispatchObs {
+                variant: VariantKey::parse("drafter_fp").unwrap(),
+                kernel: KernelPath::Ref,
+                bucket: 64,
+                pu: PuAssignment::Gpu,
+                lanes: 1,
+                flops: d.forward_flops(64),
+                duration_s: 123.0,
+            });
+        }
+        let got = m.forward_latency(&d, Scheme::Fp, PuAssignment::Gpu, 64);
+        let prior = analytic.forward_latency(&d, Scheme::Fp, PuAssignment::Gpu, 64);
+        assert_eq!(got.to_bits(), prior.to_bits());
+        let r = m.report();
+        assert_eq!(r.tracked_keys, 1);
+        assert_eq!(r.fitted_keys, 0);
+        assert_eq!(r.observations, 50);
+    }
+
+    #[test]
+    fn garbage_observations_are_dropped() {
+        let analytic = LatencyModel::new(Platform::imx95());
+        let m = CalibratedModel::new(analytic);
+        let (d, _) = specs();
+        for (lanes, dur) in [(0usize, 1.0), (1, f64::NAN), (1, -1.0), (1, 0.0)] {
+            m.observe(&DispatchObs {
+                variant: VariantKey::parse("drafter_fp").unwrap(),
+                kernel: KernelPath::Ref,
+                bucket: 64,
+                pu: PuAssignment::Gpu,
+                lanes,
+                flops: d.forward_flops(64),
+                duration_s: dur,
+            });
+        }
+        assert_eq!(m.report().observations, 0);
+    }
+}

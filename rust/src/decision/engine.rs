@@ -1,0 +1,716 @@
+//! The online decision engine: the cost model applied *live*, per request
+//! and per round (formerly `coordinator::policy`, now the heart of the
+//! unified decision layer).
+//!
+//! The paper's workflow decides (speculation?, mapping, γ) offline from
+//! profiled (α, c). A serving system can do better: the engine keeps a
+//! per-task running estimate of α (EWMA over per-request acceptance rates)
+//! and re-evaluates Eq. (1) per request, so a task whose drafts keep getting
+//! rejected automatically falls back to plain autoregressive decoding —
+//! exactly the "naive adoption can increase latency" failure mode the paper
+//! warns about, handled at runtime. With resumable sessions the engine is
+//! additionally consulted *between speculation rounds*
+//! ([`Policy::route_round`]): the live session's own acceptance evidence is
+//! blended with the task EWMA, so γ can shrink — or speculation switch off
+//! entirely — midway through a request.
+//!
+//! **Cost-model choice** (`decision` config knob). All predictions go
+//! through the [`CostModel`] trait: `analytic` scores against the
+//! offline-calibrated [`LatencyModel`] (bit-identical to the historical
+//! policy), `calibrated` against a [`CalibratedModel`] that is continuously
+//! refit from the dispatch durations the executor feeds back via
+//! [`Policy::observe_dispatches`].
+//!
+//! **Online re-partitioning** (calibrated mode only, and only when the
+//! configuration permits the heterogeneous mapping — `heterogeneous:
+//! false` pins the homogeneous one). Every `repartition_every` consulted
+//! rounds the engine re-runs the DSE candidate search
+//! ([`crate::dse::explore_variant`]) for the deployed design variant, at
+//! the calibrated c and the EWMAs of recently consulted α estimates and
+//! sequence lengths (aggregates — one session's collapsing α cannot flip
+//! the fleet-wide mapping by itself), and adopts the winning mapping. The
+//! switch
+//! takes effect at the **next session admission** ([`Policy::route`] hands
+//! out the current mapping; in-flight sessions keep the mapping frozen
+//! into their `DecoderSetup` at admission), so per-session charges stay
+//! deterministic and no dispatch ever changes route mid-request. Under
+//! `decision: "analytic"` the mapping stays boot-frozen, reproducing the
+//! pre-decision-layer behavior exactly.
+//!
+//! **Prior transparency.** A routing decision taken with *zero* α
+//! observations for its task silently used the optimistic prior
+//! (`prior_alpha = 0.90`) in earlier revisions; it is now flagged on the
+//! returned [`RouteDecision`] (`used_prior`), logged once per task, and
+//! counted by the coordinator into the metrics report.
+
+use crate::config::{DecisionMode, RunConfig};
+use crate::costmodel;
+use crate::dse::{self, PairConfig};
+use crate::hetero::{LatencyModel, Mapping, Platform};
+use crate::models::VariantKey;
+use std::collections::{HashMap, HashSet};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use super::calibrated::{CalibratedModel, CalibrationReport};
+use super::model::{CostModel, DispatchObs};
+
+/// Per-request routing decision.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RouteDecision {
+    pub speculative: bool,
+    pub gamma: usize,
+    pub mapping: Mapping,
+    /// Predicted speedup at decision time (diagnostics).
+    pub predicted_speedup: f64,
+    /// The α estimate the decision used.
+    pub alpha_used: f64,
+    /// The α estimate was the optimistic prior: zero observations existed
+    /// for the task (and, for round-level consults, the session had no
+    /// evidence of its own yet).
+    pub used_prior: bool,
+}
+
+/// Which cost model backs the engine.
+enum ModelChoice {
+    Analytic,
+    Calibrated(CalibratedModel),
+}
+
+/// Shared decision engine (one per coordinator, consulted by all workers).
+pub struct Policy {
+    lat: LatencyModel,
+    model: ModelChoice,
+    fixed_gamma: Option<usize>,
+    speculative_enabled: bool,
+    adaptive: bool,
+    /// Current mapping — boot-frozen under analytic, re-partitioned online
+    /// under calibrated. Admission reads it; in-flight sessions keep the
+    /// copy frozen into their setup.
+    mapping: Mutex<Mapping>,
+    drafter: VariantKey,
+    target: VariantKey,
+    design_variant: usize,
+    /// Whether the heterogeneous mapping is permitted at all
+    /// (`cfg.heterogeneous`): false pins the homogeneous mapping, which
+    /// also makes re-partitioning inert (one permitted mapping).
+    allow_hetero: bool,
+    /// Per-task EWMA of acceptance rate.
+    alpha: Mutex<HashMap<String, f64>>,
+    /// Optimistic prior before any observation (the paper's p90 α).
+    prior_alpha: f64,
+    ewma: f64,
+    /// Tasks already warned about riding the prior (log-once state; the
+    /// serving-side *count* lives in the metrics report, recorded by the
+    /// worker from `RouteDecision::used_prior` — one source of truth).
+    prior_logged: Mutex<HashSet<String>>,
+    /// Re-partition cadence state (calibrated mode).
+    repartition_every: usize,
+    rounds_seen: AtomicU64,
+    repartitions: AtomicU64,
+    /// EWMA of consulted sequence lengths — the live operating point the
+    /// re-partition search is evaluated at (0 = nothing consulted yet).
+    seq_mix: Mutex<f64>,
+    /// EWMA of consulted α estimates (NaN = nothing consulted yet). The
+    /// re-partition search runs at this *aggregate*, never at one
+    /// consult's session-blended α — a single collapsing (or lucky)
+    /// session must not be able to flip the fleet-wide mapping by landing
+    /// on the cadence boundary.
+    alpha_mix: Mutex<f64>,
+}
+
+impl Policy {
+    /// Build the engine from the run configuration. The drafter/target
+    /// variant keys come from the config (`drafter_variant` /
+    /// `target_variant`) and are role-checked here; the worker validates
+    /// them against the artifact manifest before reporting ready.
+    pub fn new(cfg: &RunConfig, platform: Platform) -> anyhow::Result<Policy> {
+        let (drafter, target) = cfg.variant_keys()?;
+        let mapping = if cfg.heterogeneous {
+            Mapping::heterogeneous(cfg.design_variant)
+        } else {
+            Mapping::homogeneous(cfg.design_variant)
+        };
+        let lat = LatencyModel::new(platform);
+        let model = match cfg.decision {
+            DecisionMode::Analytic => ModelChoice::Analytic,
+            DecisionMode::Calibrated => ModelChoice::Calibrated(CalibratedModel::new(lat.clone())),
+        };
+        Ok(Policy {
+            lat,
+            model,
+            fixed_gamma: cfg.gamma,
+            speculative_enabled: cfg.speculative,
+            adaptive: cfg.gamma.is_none(),
+            mapping: Mutex::new(mapping),
+            drafter,
+            target,
+            design_variant: cfg.design_variant,
+            allow_hetero: cfg.heterogeneous,
+            alpha: Mutex::new(HashMap::new()),
+            prior_alpha: 0.90,
+            ewma: 0.2,
+            prior_logged: Mutex::new(HashSet::new()),
+            repartition_every: cfg.repartition_every,
+            rounds_seen: AtomicU64::new(0),
+            repartitions: AtomicU64::new(0),
+            seq_mix: Mutex::new(0.0),
+            alpha_mix: Mutex::new(f64::NAN),
+        })
+    }
+
+    pub fn variants(&self) -> (VariantKey, VariantKey) {
+        (self.drafter, self.target)
+    }
+
+    pub fn latency_model(&self) -> &LatencyModel {
+        &self.lat
+    }
+
+    /// The cost model decisions are scored against.
+    pub fn cost_model(&self) -> &dyn CostModel {
+        match &self.model {
+            ModelChoice::Analytic => &self.lat,
+            ModelChoice::Calibrated(m) => m,
+        }
+    }
+
+    pub fn decision_mode(&self) -> DecisionMode {
+        match self.model {
+            ModelChoice::Analytic => DecisionMode::Analytic,
+            ModelChoice::Calibrated(_) => DecisionMode::Calibrated,
+        }
+    }
+
+    /// The mapping new admissions receive right now.
+    pub fn current_mapping(&self) -> Mapping {
+        *self.mapping.lock().unwrap()
+    }
+
+    /// Completed online re-partition switches.
+    pub fn repartition_count(&self) -> u64 {
+        self.repartitions.load(Ordering::Relaxed)
+    }
+
+    /// Calibration state (zeroes under the analytic model).
+    pub fn calibration(&self) -> CalibrationReport {
+        match &self.model {
+            ModelChoice::Analytic => CalibrationReport::default(),
+            ModelChoice::Calibrated(m) => m.report(),
+        }
+    }
+
+    /// Feed the executor's observed dispatch durations back into the
+    /// calibrated model. Returns how many observations the estimator
+    /// actually accepted (0 under the analytic model, which has nothing
+    /// to refit; malformed observations are dropped by the estimator).
+    pub fn observe_dispatches(&self, obs: &[DispatchObs]) -> usize {
+        match &self.model {
+            ModelChoice::Analytic => 0,
+            ModelChoice::Calibrated(m) => obs.iter().filter(|o| m.observe(o)).count(),
+        }
+    }
+
+    /// Current α estimate for a task.
+    pub fn alpha_estimate(&self, task: &str) -> f64 {
+        self.alpha_lookup(task).0
+    }
+
+    /// α estimate plus whether it was the prior (no observations).
+    fn alpha_lookup(&self, task: &str) -> (f64, bool) {
+        match self.alpha.lock().unwrap().get(task) {
+            Some(&a) => (a, false),
+            None => (self.prior_alpha, true),
+        }
+    }
+
+    /// Log (once per task) that a decision rode the prior.
+    fn note_prior(&self, task: &str) {
+        let mut logged = self.prior_logged.lock().unwrap();
+        if logged.insert(task.to_string()) {
+            eprintln!(
+                "[decision] task {task:?}: routing with zero alpha observations \
+                 (optimistic prior_alpha = {:.2} stands in)",
+                self.prior_alpha
+            );
+        }
+    }
+
+    /// Decide the execution plan for one request at admission.
+    pub fn route(
+        &self,
+        task: &str,
+        d_spec: &crate::models::ModelSpec,
+        t_spec: &crate::models::ModelSpec,
+        seq_len: usize,
+    ) -> RouteDecision {
+        let (alpha, raw_prior) = self.alpha_lookup(task);
+        let used_prior = raw_prior && self.adaptive && self.speculative_enabled;
+        if used_prior {
+            self.note_prior(task);
+        }
+        self.decide(alpha, used_prior, d_spec, t_spec, self.current_mapping(), seq_len)
+    }
+
+    /// Re-decide the plan between speculation rounds of a live session.
+    ///
+    /// `mapping` is the mapping *frozen into the session at admission*
+    /// ([`crate::spec::DecodeSession::mapping`]) — the session's dispatches
+    /// run on those routes regardless of later re-partition switches, so
+    /// its γ/speculate choices must be priced there, not at the engine's
+    /// current mapping. `session_drafted` / `session_alpha` are the
+    /// session's own running draft count and acceptance rate; once the
+    /// session has real evidence its α dominates the task-level EWMA
+    /// (weight grows with the sample count), so a request whose drafts
+    /// collapse mid-flight falls back to baseline within that request —
+    /// not merely for the next one. Each consult also advances the
+    /// re-partition cadence (calibrated mode).
+    #[allow(clippy::too_many_arguments)]
+    pub fn route_round(
+        &self,
+        task: &str,
+        d_spec: &crate::models::ModelSpec,
+        t_spec: &crate::models::ModelSpec,
+        mapping: Mapping,
+        seq_len: usize,
+        session_drafted: usize,
+        session_alpha: f64,
+    ) -> RouteDecision {
+        let (task_alpha, raw_prior) = self.alpha_lookup(task);
+        let session_evidence =
+            self.adaptive && session_drafted > 0 && session_alpha.is_finite();
+        let alpha = if session_evidence {
+            let n = session_drafted as f64;
+            let w = (n / (n + 8.0)).min(0.9);
+            w * session_alpha + (1.0 - w) * task_alpha
+        } else {
+            task_alpha
+        };
+        let used_prior =
+            raw_prior && !session_evidence && self.adaptive && self.speculative_enabled;
+        if used_prior {
+            self.note_prior(task);
+        }
+        let dec = self.decide(alpha, used_prior, d_spec, t_spec, mapping, seq_len);
+        self.note_round(alpha, d_spec, t_spec, seq_len);
+        dec
+    }
+
+    fn decide(
+        &self,
+        alpha: f64,
+        used_prior: bool,
+        d_spec: &crate::models::ModelSpec,
+        t_spec: &crate::models::ModelSpec,
+        mapping: Mapping,
+        seq_len: usize,
+    ) -> RouteDecision {
+        if !self.speculative_enabled {
+            return RouteDecision {
+                speculative: false,
+                gamma: 0,
+                mapping,
+                predicted_speedup: 1.0,
+                alpha_used: f64::NAN,
+                used_prior: false,
+            };
+        }
+        let c = self.cost_model().cost_coefficient(
+            (d_spec, self.drafter.scheme),
+            (t_spec, self.target.scheme),
+            mapping,
+            seq_len,
+        );
+        if let Some(g) = self.fixed_gamma {
+            // Fixed-γ mode: still predict the speedup for diagnostics.
+            return RouteDecision {
+                speculative: true,
+                gamma: g,
+                mapping,
+                predicted_speedup: costmodel::speedup(alpha, g, c),
+                alpha_used: alpha,
+                used_prior,
+            };
+        }
+        let choice = costmodel::optimal_gamma(alpha, c);
+        RouteDecision {
+            speculative: choice.gamma > 0,
+            gamma: choice.gamma,
+            mapping,
+            predicted_speedup: choice.speedup,
+            alpha_used: alpha,
+            used_prior,
+        }
+    }
+
+    /// Whether online re-partitioning is active. Besides the calibrated
+    /// mode and cadence gates, `heterogeneous: false` pins the homogeneous
+    /// mapping: with exactly one permitted mapping per design variant
+    /// there is nothing to switch, and a configured A/B baseline must
+    /// never silently adopt the heterogeneous mapping.
+    fn repartition_enabled(&self) -> bool {
+        matches!(self.model, ModelChoice::Calibrated(_))
+            && self.repartition_every > 0
+            && self.speculative_enabled
+            && self.allow_hetero
+    }
+
+    /// Advance the re-partition cadence by one consulted round (folding
+    /// the consult's α and seq-length into the aggregate mixes); every
+    /// `repartition_every` rounds re-run the mapping search.
+    fn note_round(
+        &self,
+        alpha: f64,
+        d_spec: &crate::models::ModelSpec,
+        t_spec: &crate::models::ModelSpec,
+        seq_len: usize,
+    ) {
+        if !self.repartition_enabled() {
+            return;
+        }
+        {
+            let mut mix = self.seq_mix.lock().unwrap();
+            *mix = if *mix <= 0.0 {
+                seq_len as f64
+            } else {
+                0.9 * *mix + 0.1 * seq_len as f64
+            };
+        }
+        if alpha.is_finite() {
+            let mut mix = self.alpha_mix.lock().unwrap();
+            *mix = if mix.is_nan() {
+                alpha
+            } else {
+                0.8 * *mix + 0.2 * alpha
+            };
+        }
+        let n = self.rounds_seen.fetch_add(1, Ordering::Relaxed) + 1;
+        if n % self.repartition_every as u64 == 0 {
+            self.repartition(d_spec, t_spec);
+        }
+    }
+
+    /// Re-run the DSE candidate search at the calibrated (α, c) and the
+    /// live α / sequence-length mixes; adopt the winning mapping for
+    /// *future* admissions (in-flight sessions finish on their planned
+    /// routes).
+    fn repartition(
+        &self,
+        d_spec: &crate::models::ModelSpec,
+        t_spec: &crate::models::ModelSpec,
+    ) {
+        let seq = {
+            let mix = *self.seq_mix.lock().unwrap();
+            (mix.round() as usize).max(1)
+        };
+        let alpha = {
+            let mix = *self.alpha_mix.lock().unwrap();
+            if mix.is_nan() {
+                self.prior_alpha
+            } else {
+                mix
+            }
+        };
+        let pair = PairConfig {
+            target: t_spec.clone(),
+            target_scheme: self.target.scheme,
+            drafter: d_spec.clone(),
+            drafter_scheme: self.drafter.scheme,
+        };
+        let decision =
+            dse::explore_variant(self.cost_model(), &pair, self.design_variant, alpha, seq);
+        let new_mapping = decision.best.mapping;
+        let mut cur = self.mapping.lock().unwrap();
+        if new_mapping != *cur {
+            eprintln!(
+                "[decision] re-partitioned: {} -> {} (alpha = {alpha:.3}, seq = {seq}, \
+                 gamma* = {}, predicted S = {:.3}, model = {})",
+                cur.label(),
+                new_mapping.label(),
+                decision.best.gamma,
+                decision.best.speedup,
+                self.cost_model().name()
+            );
+            *cur = new_mapping;
+            self.repartitions.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Cost-model prediction of the cross-PU overlap fraction the per-PU
+    /// timelines should approach for a γ decided at `seq_len` under this
+    /// engine's *current* mapping (0 for homogeneous mappings — there is
+    /// only one timeline to occupy). Serving-side twin of the bound the
+    /// `overlap` experiment evaluates at its explicit mapping via
+    /// [`costmodel::predicted_overlap_frac`]: compare it against the live
+    /// `Report::overlap_frac` to see whether co-scheduling is dense
+    /// enough to realize the mapping's predicted concurrency.
+    pub fn predicted_overlap(
+        &self,
+        d_spec: &crate::models::ModelSpec,
+        t_spec: &crate::models::ModelSpec,
+        gamma: usize,
+        seq_len: usize,
+    ) -> f64 {
+        let mapping = self.current_mapping();
+        if !mapping.is_heterogeneous() {
+            return 0.0;
+        }
+        let c = self.cost_model().cost_coefficient(
+            (d_spec, self.drafter.scheme),
+            (t_spec, self.target.scheme),
+            mapping,
+            seq_len,
+        );
+        costmodel::predicted_overlap_frac(gamma as f64, c)
+    }
+
+    /// Feed back an observed per-request acceptance rate.
+    pub fn observe_alpha(&self, task: &str, observed: f64) {
+        if !observed.is_finite() || !self.adaptive {
+            return;
+        }
+        let mut m = self.alpha.lock().unwrap();
+        let e = m.entry(task.to_string()).or_insert(self.prior_alpha);
+        *e = (1.0 - self.ewma) * *e + self.ewma * observed;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::ModelSpec;
+
+    fn specs() -> (ModelSpec, ModelSpec) {
+        (
+            ModelSpec {
+                name: "drafter".into(), n_layers: 2, d_model: 96, n_heads: 4,
+                ffn_dim: 256, vocab: 48, param_count: 230_880,
+            },
+            ModelSpec {
+                name: "target".into(), n_layers: 4, d_model: 128, n_heads: 4,
+                ffn_dim: 352, vocab: 48, param_count: 816_256,
+            },
+        )
+    }
+
+    fn policy(cfg: &RunConfig) -> Policy {
+        Policy::new(cfg, Platform::imx95()).unwrap()
+    }
+
+    #[test]
+    fn optimistic_prior_speculates_and_is_flagged() {
+        let cfg = RunConfig::default();
+        let p = policy(&cfg);
+        let (d, t) = specs();
+        let dec = p.route("translate", &d, &t, 63);
+        assert!(dec.speculative);
+        assert!(dec.gamma >= 3, "{dec:?}");
+        assert!(dec.predicted_speedup > 1.3);
+        // Zero observations: the decision is flagged (the worker mirrors
+        // the flag into the metrics report).
+        assert!(dec.used_prior);
+        // After feedback the same task no longer rides the prior.
+        p.observe_alpha("translate", 0.8);
+        let dec = p.route("translate", &d, &t, 63);
+        assert!(!dec.used_prior);
+    }
+
+    #[test]
+    fn low_alpha_task_falls_back_to_baseline() {
+        let cfg = RunConfig::default();
+        let p = policy(&cfg);
+        let (d, t) = specs();
+        // Hammer the estimate down with rejections.
+        for _ in 0..60 {
+            p.observe_alpha("hard-task", 0.05);
+        }
+        let dec = p.route("hard-task", &d, &t, 63);
+        assert!(!dec.speculative, "{dec:?}");
+        // Other tasks keep the optimistic prior.
+        assert!(p.route("translate", &d, &t, 63).speculative);
+    }
+
+    #[test]
+    fn fixed_gamma_respected() {
+        let cfg = RunConfig { gamma: Some(2), ..RunConfig::default() };
+        let p = policy(&cfg);
+        let (d, t) = specs();
+        let dec = p.route("translate", &d, &t, 63);
+        assert!(dec.speculative);
+        assert_eq!(dec.gamma, 2);
+        // Fixed γ also disables adaptation (and prior flagging — the
+        // prior is the configuration, not a silent fallback).
+        assert!(!dec.used_prior);
+        p.observe_alpha("translate", 0.0);
+        assert!((p.alpha_estimate("translate") - 0.90).abs() < 1e-12);
+    }
+
+    #[test]
+    fn speculation_disabled_routes_baseline() {
+        let cfg = RunConfig { speculative: false, ..RunConfig::default() };
+        let p = policy(&cfg);
+        let (d, t) = specs();
+        let dec = p.route("translate", &d, &t, 63);
+        assert!(!dec.speculative);
+        assert_eq!(dec.gamma, 0);
+        assert!(!dec.used_prior);
+    }
+
+    #[test]
+    fn route_round_tracks_session_evidence() {
+        let cfg = RunConfig::default();
+        let p = policy(&cfg);
+        let (d, t) = specs();
+        // No evidence yet: identical to the admission decision.
+        let admit = p.route("translate", &d, &t, 63);
+        let m = p.current_mapping();
+        let r0 = p.route_round("translate", &d, &t, m, 63, 0, f64::NAN);
+        assert_eq!(admit, r0);
+        // A collapsing in-flight α must never pick a larger γ than a
+        // perfect one, and with heavy evidence it dominates the prior.
+        let bad = p.route_round("translate", &d, &t, m, 63, 64, 0.0);
+        let good = p.route_round("translate", &d, &t, m, 63, 64, 1.0);
+        assert!(bad.gamma <= good.gamma, "{bad:?} vs {good:?}");
+        assert!(bad.alpha_used < admit.alpha_used);
+        assert!(good.alpha_used > admit.alpha_used);
+        // Session evidence means the decision no longer rides the prior.
+        assert!(!bad.used_prior && !good.used_prior);
+    }
+
+    #[test]
+    fn route_round_respects_global_off_switch() {
+        let cfg = RunConfig { speculative: false, ..RunConfig::default() };
+        let p = policy(&cfg);
+        let (d, t) = specs();
+        let dec = p.route_round("translate", &d, &t, p.current_mapping(), 63, 10, 1.0);
+        assert!(!dec.speculative);
+        assert_eq!(dec.gamma, 0);
+    }
+
+    #[test]
+    fn predicted_overlap_heterogeneous_only() {
+        let (d, t) = specs();
+        let het = policy(&RunConfig::default());
+        let f = het.predicted_overlap(&d, &t, 5, 63);
+        assert!(f > 0.0 && f <= 1.0, "{f}");
+        // Homogeneous mapping: one timeline, nothing to overlap.
+        let hom = policy(&RunConfig { heterogeneous: false, ..RunConfig::default() });
+        assert_eq!(hom.predicted_overlap(&d, &t, 5, 63), 0.0);
+        // No speculation, no draft/verify split.
+        assert_eq!(het.predicted_overlap(&d, &t, 0, 63), 0.0);
+    }
+
+    #[test]
+    fn ewma_converges() {
+        let cfg = RunConfig::default();
+        let p = policy(&cfg);
+        for _ in 0..100 {
+            p.observe_alpha("t", 0.5);
+        }
+        assert!((p.alpha_estimate("t") - 0.5).abs() < 0.01);
+    }
+
+    #[test]
+    fn bad_variant_keys_rejected_at_construction() {
+        let cfg = RunConfig {
+            drafter_variant: "target_w8a8".into(),
+            ..RunConfig::default()
+        };
+        assert!(Policy::new(&cfg, Platform::imx95()).is_err());
+        let cfg = RunConfig {
+            target_variant: "not_a_key".into(),
+            ..RunConfig::default()
+        };
+        assert!(Policy::new(&cfg, Platform::imx95()).is_err());
+    }
+
+    #[test]
+    fn analytic_mode_never_repartitions() {
+        let cfg = RunConfig { repartition_every: 2, ..RunConfig::default() };
+        let p = policy(&cfg);
+        let (d, t) = specs();
+        let boot = p.current_mapping();
+        for _ in 0..40 {
+            p.observe_alpha("t", 0.05);
+            p.route_round("t", &d, &t, boot, 63, 0, f64::NAN);
+        }
+        assert_eq!(p.current_mapping(), boot);
+        assert_eq!(p.repartition_count(), 0);
+    }
+
+    #[test]
+    fn calibrated_mode_repartitions_on_alpha_drift() {
+        let cfg = RunConfig {
+            decision: crate::config::DecisionMode::Calibrated,
+            repartition_every: 4,
+            ..RunConfig::default()
+        };
+        let p = policy(&cfg);
+        let (d, t) = specs();
+        assert!(p.current_mapping().is_heterogeneous());
+        // Collapse α: speculation becomes infeasible at every candidate
+        // mapping, so the search settles on the homogeneous no-spec route.
+        // (Each consult passes the *current* mapping, as freshly admitted
+        // sessions would.)
+        for _ in 0..30 {
+            p.observe_alpha("t", 0.02);
+            p.route_round("t", &d, &t, p.current_mapping(), 63, 0, f64::NAN);
+        }
+        assert!(!p.current_mapping().is_heterogeneous(), "expected a mapping switch");
+        assert!(p.repartition_count() >= 1);
+        // New admissions get the switched mapping.
+        let dec = p.route("t", &d, &t, 63);
+        assert_eq!(dec.mapping, p.current_mapping());
+        // Recovery: α climbs back, the heterogeneous mapping returns.
+        for _ in 0..60 {
+            p.observe_alpha("t", 0.95);
+            p.route_round("t", &d, &t, p.current_mapping(), 63, 0, f64::NAN);
+        }
+        assert!(p.current_mapping().is_heterogeneous(), "expected a switch back");
+        assert!(p.repartition_count() >= 2);
+    }
+
+    #[test]
+    fn homogeneous_pin_disables_repartitioning() {
+        let cfg = RunConfig {
+            decision: crate::config::DecisionMode::Calibrated,
+            repartition_every: 2,
+            heterogeneous: false,
+            ..RunConfig::default()
+        };
+        let p = policy(&cfg);
+        let (d, t) = specs();
+        // Healthy α would make the DSE search prefer the heterogeneous
+        // mapping — but the operator pinned the homogeneous baseline.
+        for _ in 0..20 {
+            p.observe_alpha("t", 0.9);
+            p.route_round("t", &d, &t, p.current_mapping(), 63, 0, f64::NAN);
+        }
+        assert!(!p.current_mapping().is_heterogeneous());
+        assert_eq!(p.repartition_count(), 0);
+    }
+
+    #[test]
+    fn route_round_prices_the_frozen_mapping_not_the_current_one() {
+        let cfg = RunConfig {
+            decision: crate::config::DecisionMode::Calibrated,
+            repartition_every: 4,
+            ..RunConfig::default()
+        };
+        let p = policy(&cfg);
+        let (d, t) = specs();
+        let frozen = p.current_mapping(); // heterogeneous at boot
+        // Collapse α so the engine re-partitions away from the boot mapping.
+        for _ in 0..30 {
+            p.observe_alpha("t", 0.02);
+            p.route_round("t", &d, &t, p.current_mapping(), 63, 0, f64::NAN);
+        }
+        assert_ne!(p.current_mapping(), frozen);
+        // An in-flight session admitted on the old mapping is still priced
+        // there: its decision carries the frozen mapping, and with strong
+        // session evidence of a high α it keeps speculating on it.
+        let dec = p.route_round("t", &d, &t, frozen, 63, 256, 0.95);
+        assert_eq!(dec.mapping, frozen);
+        assert!(dec.speculative, "{dec:?}");
+    }
+}

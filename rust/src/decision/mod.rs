@@ -1,0 +1,47 @@
+//! The unified decision layer: **one** subsystem owns every cost-model
+//! question the runtime asks — how long will a forward take, which
+//! (mapping, γ, speculate?) wins, and when should that choice be revised.
+//!
+//! Historically this logic was scattered across three layers that never
+//! talked: `costmodel` (the Eq. (1) formulas), `dse` (an offline
+//! 24-candidate mapping search at fixed measured (α, c)) and
+//! `coordinator::policy` (an online α-EWMA with a boot-frozen mapping).
+//! The runtime *measures* per-PU dispatch durations but threw that
+//! evidence away instead of feeding it back into the model that made the
+//! prediction. This module closes the loop:
+//!
+//! * [`model`] — the [`CostModel`] trait: the latency-prediction contract
+//!   every decision is scored against, implemented by the analytic
+//!   [`crate::hetero::LatencyModel`]; plus [`resolve_route`], the single
+//!   mapping → PU-route rule sessions use at plan time, and
+//!   [`DispatchObs`], one executed dispatch as the executor observed it.
+//! * [`calibrated`] — the [`CalibratedModel`]: the analytic prior
+//!   continuously refit (online least squares per (variant, kernel, PU))
+//!   from observed dispatch durations.
+//! * [`engine`] — the [`Policy`] decision engine: per-task α EWMAs,
+//!   per-request and per-round Eq. (1) routing, prior-usage transparency,
+//!   and — under `decision: "calibrated"` — periodic online
+//!   re-partitioning through the DSE candidate search, adopted at the
+//!   next session-admission boundary.
+//!
+//! The Eq. (1) primitives stay in [`crate::costmodel`] and the candidate
+//! search in [`crate::dse`] (now generic over [`CostModel`]); both are
+//! re-exported here so the decision layer is the one-stop API.
+//!
+//! **A/B knob.** `decision: "analytic"` (default) scores against the
+//! offline calibration with a boot-frozen mapping — bit-identical charges,
+//! token streams and dispatch counts to the pre-decision-layer code.
+//! `decision: "calibrated"` turns on the feedback loop and online
+//! re-partitioning (`repartition_every` rounds between searches).
+
+pub mod calibrated;
+pub mod engine;
+pub mod model;
+
+pub use calibrated::{CalibratedModel, CalibrationReport};
+pub use engine::{Policy, RouteDecision};
+pub use model::{resolve_route, CostModel, DispatchObs};
+
+// The decision layer's other two pillars, re-exported for one-stop use.
+pub use crate::costmodel::{expected_tokens_per_round, optimal_gamma, speedup};
+pub use crate::dse::{explore_all, explore_variant, Candidate, PairConfig, VariantDecision};

@@ -1,0 +1,191 @@
+//! The [`CostModel`] abstraction: what the decision layer needs from a
+//! latency predictor, decoupled from *where the numbers come from*.
+//!
+//! Two implementations exist:
+//!
+//! * the **analytic** model — [`crate::hetero::LatencyModel`], the
+//!   offline-calibrated FLOPs ÷ throughput + dispatch-boundary model the
+//!   paper profiles once and then trusts (`decision: "analytic"`, the
+//!   default);
+//! * the **calibrated** model — [`super::CalibratedModel`], which starts
+//!   from the analytic prior and continuously refits its per-(variant,
+//!   kernel, PU) latency coefficients from the dispatch durations the
+//!   executor actually observes (`decision: "calibrated"`), closing the
+//!   predict → measure → correct loop the paper only runs offline.
+//!
+//! Everything downstream of the trait — Eq. (1) γ* search
+//! ([`crate::costmodel`]), the DSE candidate enumeration ([`crate::dse`]),
+//! and the online routing policy ([`super::Policy`]) — is generic over it,
+//! so the same search code scores candidates against either model.
+
+use crate::config::KernelPath;
+use crate::hetero::{LatencyModel, Mapping, Platform, PuAssignment, PuRoute};
+use crate::models::{ModelSpec, Role, Scheme, VariantKey};
+use crate::spec::RequestKind;
+
+/// A latency predictor the decision layer can score candidates against.
+///
+/// The contract mirrors the analytic [`LatencyModel`]: seconds for one
+/// forward pass of a model on a PU at a padded sequence bucket, plus
+/// access to the platform description (memory budget, INT8 support —
+/// the DSE feasibility filters). The provided [`cost_coefficient`]
+/// derives the paper's Fig. 6 quantity `c = t_draft / t_target` from two
+/// forward predictions, so every implementation prices mappings the same
+/// way it prices forwards.
+///
+/// Implementations that key state by model *role* identify it by the
+/// crate-wide manifest convention `spec.name == "drafter"` / `"target"` —
+/// the same convention [`Platform::cpu_eff`] dispatches its efficiency
+/// tables on.
+///
+/// [`cost_coefficient`]: CostModel::cost_coefficient
+pub trait CostModel: Send + Sync {
+    /// Short identifier for logs and the metrics command.
+    fn name(&self) -> &'static str;
+
+    /// The platform this model predicts for (feasibility filters only;
+    /// the *latencies* come from `forward_latency`).
+    fn platform(&self) -> &Platform;
+
+    /// Predicted seconds for one forward of `spec` (scheme-quantized) on
+    /// `pu` at `seq_len`, including one runtime-API dispatch boundary.
+    fn forward_latency(
+        &self,
+        spec: &ModelSpec,
+        scheme: Scheme,
+        pu: PuAssignment,
+        seq_len: usize,
+    ) -> f64;
+
+    /// Cost coefficient c = t_draft / t_target for a mapping at `seq_len`
+    /// (paper Fig. 6), derived from two forward predictions.
+    fn cost_coefficient(
+        &self,
+        drafter: (&ModelSpec, Scheme),
+        target: (&ModelSpec, Scheme),
+        mapping: Mapping,
+        seq_len: usize,
+    ) -> f64 {
+        let td = self.forward_latency(drafter.0, drafter.1, mapping.drafter, seq_len);
+        let tt = self.forward_latency(target.0, target.1, mapping.target, seq_len);
+        td / tt
+    }
+}
+
+/// The analytic model is the canonical implementation: the trait methods
+/// delegate to the inherent ones, so scoring through `dyn CostModel` is
+/// bit-identical to calling [`LatencyModel`] directly.
+impl CostModel for LatencyModel {
+    fn name(&self) -> &'static str {
+        "analytic"
+    }
+
+    fn platform(&self) -> &Platform {
+        &self.platform
+    }
+
+    fn forward_latency(
+        &self,
+        spec: &ModelSpec,
+        scheme: Scheme,
+        pu: PuAssignment,
+        seq_len: usize,
+    ) -> f64 {
+        LatencyModel::forward_latency(self, spec, scheme, pu, seq_len)
+    }
+}
+
+/// One executed dispatch, as observed by the executor — the calibration
+/// feed. `duration_s` is the full dispatch duration (all `lanes` executed
+/// lanes, one boundary), `flops` the single-lane FLOPs at `bucket`, so the
+/// estimator's regression feature is `lanes × flops`.
+#[derive(Debug, Clone, Copy)]
+pub struct DispatchObs {
+    pub variant: VariantKey,
+    pub kernel: KernelPath,
+    /// Padded sequence bucket the dispatch ran at.
+    pub bucket: usize,
+    /// PU assignment the dispatch was routed to.
+    pub pu: PuAssignment,
+    /// Executed lanes (batch size, padding included).
+    pub lanes: usize,
+    /// Single-lane forward FLOPs at `bucket` (the model-side feature).
+    pub flops: f64,
+    /// Observed duration of the whole dispatch, seconds.
+    pub duration_s: f64,
+}
+
+/// Resolve which PU timeline(s) a planned engine call occupies under
+/// `mapping` — the single route-resolution rule, shared by every session
+/// (`DecodeSession::plan` calls this): plain forwards run on the PU the
+/// mapping assigns to the planned variant's role; a monolithic fused
+/// spec-step is charged to the target PU and blocks the drafter PU when
+/// that is a different device.
+pub fn resolve_route(mapping: Mapping, kind: &RequestKind) -> PuRoute {
+    match kind {
+        RequestKind::Forward { variant, .. } => PuRoute::single(match variant.role {
+            Role::Drafter => mapping.drafter,
+            Role::Target => mapping.target,
+        }),
+        RequestKind::MonoStep { .. } => PuRoute::mono(mapping),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn specs() -> (ModelSpec, ModelSpec) {
+        (
+            ModelSpec {
+                name: "drafter".into(), n_layers: 2, d_model: 96, n_heads: 4,
+                ffn_dim: 256, vocab: 48, param_count: 230_880,
+            },
+            ModelSpec {
+                name: "target".into(), n_layers: 4, d_model: 128, n_heads: 4,
+                ffn_dim: 352, vocab: 48, param_count: 816_256,
+            },
+        )
+    }
+
+    #[test]
+    fn analytic_trait_is_bit_identical_to_inherent() {
+        let lat = LatencyModel::new(Platform::imx95());
+        let (d, t) = specs();
+        let as_trait: &dyn CostModel = &lat;
+        for seq in [16usize, 63, 128] {
+            for pu in [PuAssignment::Gpu, PuAssignment::Cpu { cores: 2 }] {
+                let a = lat.forward_latency(&d, Scheme::Fp, pu, seq);
+                let b = as_trait.forward_latency(&d, Scheme::Fp, pu, seq);
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+            let m = Mapping::heterogeneous(1);
+            let a = lat.cost_coefficient((&d, Scheme::Fp), (&t, Scheme::W8a8), m, seq);
+            let b = as_trait.cost_coefficient((&d, Scheme::Fp), (&t, Scheme::W8a8), m, seq);
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(as_trait.name(), "analytic");
+        assert_eq!(as_trait.platform().name, "imx95-sim");
+    }
+
+    #[test]
+    fn route_resolution_follows_the_mapping() {
+        let m = Mapping::heterogeneous(2);
+        let fwd_d = RequestKind::Forward {
+            variant: VariantKey::parse("drafter_fp").unwrap(),
+            kernel: KernelPath::Ref,
+            bucket: 64,
+        };
+        let fwd_t = RequestKind::Forward {
+            variant: VariantKey::parse("target_w8a8").unwrap(),
+            kernel: KernelPath::Ref,
+            bucket: 64,
+        };
+        assert_eq!(resolve_route(m, &fwd_d), PuRoute::single(PuAssignment::Gpu));
+        assert_eq!(
+            resolve_route(m, &fwd_t),
+            PuRoute::single(PuAssignment::Cpu { cores: 2 })
+        );
+        assert_eq!(resolve_route(m, &RequestKind::MonoStep { gamma: 3 }), PuRoute::mono(m));
+    }
+}

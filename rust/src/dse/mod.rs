@@ -1,14 +1,24 @@
-//! Design-space exploration (paper §III-B).
+//! Design-space exploration (paper §III-B) — the decision layer's
+//! candidate search.
 //!
 //! The space is v·N^m static spatial mappings: v = Π nᵢ hardware design
 //! variants (6 CPU-core counts × 1 GPU shader = 6 on the i.MX95), N = 2 PUs,
 //! m = 2 graph partitions (drafter | target) → 24 candidate mappings.
 //! Each is filtered by feasibility rules that mirror the paper's
-//! constraints and scored with the analytical cost model at the measured
-//! (α, c); the search also picks γ* per mapping.
+//! constraints and scored at the given (α, c); the search also picks γ*
+//! per mapping.
+//!
+//! Every entry point is generic over the [`CostModel`] trait, so the same
+//! search runs offline against the analytic
+//! [`LatencyModel`](crate::hetero::LatencyModel) (Tables II/III, the
+//! `explore` CLI) *and* online against the continuously refit
+//! [`CalibratedModel`](crate::decision::CalibratedModel) — which is how
+//! the decision engine re-partitions a live deployment
+//! ([`crate::decision::Policy`]).
 
 use crate::costmodel;
-use crate::hetero::{LatencyModel, Mapping, PuAssignment};
+use crate::decision::CostModel;
+use crate::hetero::{Mapping, PuAssignment};
 use crate::models::{ModelSpec, Scheme};
 use crate::util::json::Json;
 
@@ -81,8 +91,8 @@ pub struct VariantDecision {
 /// With N = 2 PUs and m = 2 partitions there are 4 assignments per variant;
 /// GPU-target assignments are filtered per the paper (quantized target
 /// unsupported; fp target doesn't fit GPU memory at paper scale).
-pub fn explore_variant(
-    lat: &LatencyModel,
+pub fn explore_variant<M: CostModel + ?Sized>(
+    model: &M,
     pair: &PairConfig,
     variant: usize,
     alpha: f64,
@@ -96,7 +106,7 @@ pub fn explore_variant(
     for d_pu in assignments {
         for t_pu in assignments {
             let mapping = Mapping { drafter: d_pu, target: t_pu };
-            all.push(score_mapping(lat, pair, variant, mapping, alpha, seq_len));
+            all.push(score_mapping(model, pair, variant, mapping, alpha, seq_len));
         }
     }
     // Best = highest predicted speedup among feasible candidates; ties break
@@ -131,15 +141,15 @@ fn no_speculation(variant: usize) -> Candidate {
 }
 
 /// Score one mapping: feasibility filters, then Eq. (1) with γ* search.
-pub fn score_mapping(
-    lat: &LatencyModel,
+pub fn score_mapping<M: CostModel + ?Sized>(
+    model: &M,
     pair: &PairConfig,
     variant: usize,
     mapping: Mapping,
     alpha: f64,
     seq_len: usize,
 ) -> Candidate {
-    let mem = &lat.platform.memory;
+    let mem = &model.platform().memory;
     // Memory feasibility at paper scale (CPU+GPU share the SoC DRAM).
     if !mem.pair_fits(pair.target_scheme, pair.drafter_scheme) {
         return Candidate {
@@ -151,13 +161,13 @@ pub fn score_mapping(
     // quantized target there (footnote 3); we filter it the same way.
     let quant_on_gpu = (mapping.target.is_gpu() && pair.target_scheme == Scheme::W8a8)
         || (mapping.drafter.is_gpu() && pair.drafter_scheme == Scheme::W8a8);
-    if quant_on_gpu && !lat.platform.gpu.supports_int8 {
+    if quant_on_gpu && !model.platform().gpu.supports_int8 {
         return Candidate {
             variant, mapping, c: f64::NAN, gamma: 0, speedup: 1.0,
             infeasible: Some(Infeasibility::QuantOnGpu),
         };
     }
-    let c = lat.cost_coefficient(
+    let c = model.cost_coefficient(
         (&pair.drafter, pair.drafter_scheme),
         (&pair.target, pair.target_scheme),
         mapping,
@@ -179,14 +189,14 @@ pub fn score_mapping(
 }
 
 /// Full exploration across all design variants (Tables II/III generator).
-pub fn explore_all(
-    lat: &LatencyModel,
+pub fn explore_all<M: CostModel + ?Sized>(
+    model: &M,
     pair: &PairConfig,
     alpha: f64,
     seq_len: usize,
 ) -> Vec<VariantDecision> {
-    (1..=lat.platform.design_variants())
-        .map(|v| explore_variant(lat, pair, v, alpha, seq_len))
+    (1..=model.platform().design_variants())
+        .map(|v| explore_variant(model, pair, v, alpha, seq_len))
         .collect()
 }
 
@@ -198,7 +208,7 @@ pub fn design_space_size(v: usize, n_pus: usize, m_partitions: usize) -> usize {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::hetero::Platform;
+    use crate::hetero::{LatencyModel, Platform};
 
     fn pair() -> PairConfig {
         PairConfig {

@@ -9,6 +9,7 @@ pub mod fig5;
 pub mod fig6;
 pub mod fig7;
 pub mod overlap;
+pub mod repartition;
 pub mod tables;
 
 use crate::config::RunConfig;
@@ -66,10 +67,11 @@ pub fn run(ctx: &Ctx, which: &str) -> anyhow::Result<()> {
         "deviation" => deviation::run(ctx),
         "alpha" => alpha::run(ctx),
         "overlap" => overlap::run(ctx),
+        "repartition" => repartition::run(ctx),
         "all" => {
             for id in [
                 "table2", "table3", "fig6a", "fig6b", "fig7a", "fig5a", "fig5b",
-                "fig7b", "deviation", "overlap",
+                "fig7b", "deviation", "overlap", "repartition",
             ] {
                 println!("\n=== experiment {id} ===");
                 run(ctx, id)?;
@@ -78,7 +80,7 @@ pub fn run(ctx: &Ctx, which: &str) -> anyhow::Result<()> {
         }
         other => anyhow::bail!(
             "unknown experiment {other:?} (fig5a fig5b fig6a fig6b table2 table3 \
-             fig7a fig7b deviation alpha overlap all)"
+             fig7a fig7b deviation alpha overlap repartition all)"
         ),
     }
 }

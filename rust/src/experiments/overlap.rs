@@ -66,7 +66,7 @@ pub fn drive_to_completion(
         if refs.is_empty() {
             return Ok(());
         }
-        let (events, _stats) = fuser::tick(engine, lat, &mut refs, Some(&mut *tl));
+        let (events, _stats) = fuser::tick(engine, lat, &mut refs, Some(&mut *tl), false);
         anyhow::ensure!(
             !events.iter().any(|e| matches!(e, TickEvent::Failed)),
             "session failed during timeline drive"

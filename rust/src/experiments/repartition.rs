@@ -1,0 +1,251 @@
+//! Online re-partitioning under drift — the decision-layer experiment.
+//!
+//! The paper decides (mapping, γ, speculate?) **once**, offline, from
+//! profiled (α, c). This driver measures what that costs when the
+//! operating point drifts, by simulating the same workload under two
+//! policies:
+//!
+//! * **frozen** — the admission-time decision (analytic model, prior
+//!   α = 0.90) held for the whole run, exactly the paper's deployment;
+//! * **online** — the decision engine's calibrated loop: per-round α
+//!   feedback (EWMA) plus dispatch-duration observations refit the
+//!   [`CalibratedModel`], and every K rounds the DSE candidate search
+//!   re-evaluates (mapping, γ, speculate?) at the calibrated (α, c).
+//!
+//! Drift comes from two directions at once, mirroring reality on an edge
+//! board: the **workload** α collapses mid-run (0.92 → 0.25 → 0.85, the
+//! Table II ↔ Table III swing), and the **silicon** deviates from the
+//! offline profile (GPU 22% slower, CPU dispatch boundary 50% higher —
+//! thermals/DVFS). Every round is *charged* against the true platform, so
+//! the comparison is honest: the online policy only wins by making better
+//! decisions, not by being priced differently.
+//!
+//! Output: one CSV row per online round — true vs estimated α, the
+//! analytic / calibrated / true cost coefficients (predicted-vs-calibrated
+//! convergence), the current (γ, mapping) and the switch count — plus an
+//! aggregate makespan comparison. The run fails loudly if the online
+//! policy never switches or does not strictly beat the frozen one.
+
+use crate::config::KernelPath;
+use crate::costmodel;
+use crate::decision::{CalibratedModel, CostModel, DispatchObs};
+use crate::dse::{self, PairConfig};
+use crate::hetero::{LatencyModel, Mapping};
+use crate::models::{Scheme, VariantKey};
+
+use super::Ctx;
+
+/// Re-evaluate the candidate search every K simulated rounds.
+const REEVAL_EVERY: usize = 8;
+/// EWMA rate for the per-round α feedback.
+const ALPHA_EWMA: f64 = 0.3;
+/// Operating sequence length (the paper's S_L = 63 point).
+const SEQ: usize = 63;
+
+/// The drifting workload: acceptance by progress fraction through the
+/// token budget — Table II conditions, a hard-task collapse, recovery.
+fn true_alpha(progress: f64) -> f64 {
+    if progress < 0.4 {
+        0.92
+    } else if progress < 0.7 {
+        0.25
+    } else {
+        0.85
+    }
+}
+
+/// True cost of one round of a (mapping, γ) choice: γ drafter forwards
+/// plus the verify/baseline target forward, priced on the true platform.
+fn round_cost(truth: &LatencyModel, pair: &PairConfig, mapping: Mapping, gamma: usize) -> f64 {
+    let t_target =
+        truth.forward_latency(&pair.target, pair.target_scheme, mapping.target, SEQ);
+    if gamma == 0 {
+        return t_target;
+    }
+    let t_draft =
+        truth.forward_latency(&pair.drafter, pair.drafter_scheme, mapping.drafter, SEQ);
+    gamma as f64 * t_draft + t_target
+}
+
+/// Expected tokens one round commits at the true α.
+fn round_tokens(alpha: f64, gamma: usize) -> f64 {
+    if gamma == 0 {
+        1.0
+    } else {
+        costmodel::expected_tokens_per_round(alpha, gamma)
+    }
+}
+
+/// Run one policy to the token budget. `reeval` is called before each
+/// round with (round index, EWMA α estimate, progress) and may change the
+/// (mapping, γ) choice; the frozen policy passes a no-op.
+fn simulate(
+    truth: &LatencyModel,
+    pair: &PairConfig,
+    budget: f64,
+    mut choice: (Mapping, usize),
+    mut reeval: impl FnMut(usize, f64, &(Mapping, usize)) -> Option<(Mapping, usize)>,
+    mut per_round: impl FnMut(usize, f64, f64, &(Mapping, usize), f64),
+) -> (f64, usize) {
+    let mut tokens = 0.0;
+    let mut elapsed = 0.0;
+    let mut alpha_est = 0.90;
+    let mut round = 0usize;
+    while tokens < budget && round < 100_000 {
+        let progress = tokens / budget;
+        let a_true = true_alpha(progress);
+        if let Some(next) = reeval(round, alpha_est, &choice) {
+            choice = next;
+        }
+        elapsed += round_cost(truth, pair, choice.0, choice.1);
+        tokens += round_tokens(a_true, choice.1);
+        // Per-request α feedback, as `observe_alpha` would see it.
+        alpha_est = (1.0 - ALPHA_EWMA) * alpha_est + ALPHA_EWMA * a_true;
+        per_round(round, a_true, alpha_est, &choice, elapsed);
+        round += 1;
+    }
+    (elapsed, round)
+}
+
+pub fn run(ctx: &Ctx) -> anyhow::Result<()> {
+    let drafter = VariantKey::parse("drafter_fp").unwrap();
+    let target = VariantKey::parse("target_w8a8").unwrap();
+    let pair = PairConfig {
+        target: ctx.engine.manifest.model_for(target)?.clone(),
+        target_scheme: Scheme::W8a8,
+        drafter: ctx.engine.manifest.model_for(drafter)?.clone(),
+        drafter_scheme: Scheme::Fp,
+    };
+
+    // The true silicon has drifted from the offline profile.
+    let mut p = ctx.lat.platform.clone();
+    p.gpu.peak_gflops *= 0.78;
+    p.cpu.dispatch_overhead_s *= 1.5;
+    let truth = LatencyModel::new(p);
+
+    let budget = ctx.limit.unwrap_or(600).max(60) as f64;
+    let het = Mapping::heterogeneous(1);
+
+    // Frozen-at-admission: the analytic decision at the prior α, held.
+    let frozen = dse::explore_variant(&ctx.lat, &pair, 1, 0.90, SEQ).best;
+    let frozen_choice = (frozen.mapping, frozen.gamma);
+    let (frozen_time, frozen_rounds) = simulate(
+        &truth,
+        &pair,
+        budget,
+        frozen_choice,
+        |_, _, _| None,
+        |_, _, _, _, _| {},
+    );
+
+    // Online: calibrated model + periodic re-partitioning.
+    let calib = CalibratedModel::new(ctx.lat.clone());
+    let buckets: Vec<usize> = if ctx.engine.manifest.seq_buckets.is_empty() {
+        vec![SEQ]
+    } else {
+        ctx.engine.manifest.seq_buckets.clone()
+    };
+    // Shared by the two simulate() closures (Cell: one mutates, one reads).
+    let switches = std::cell::Cell::new(0usize);
+    let mut csv = String::from(
+        "round,alpha_true,alpha_est,c_analytic,c_calibrated,c_true,gamma,mapping,\
+         heterogeneous,switches,elapsed_s\n",
+    );
+    let c_analytic = ctx
+        .lat
+        .cost_coefficient((&pair.drafter, pair.drafter_scheme),
+                          (&pair.target, pair.target_scheme), het, SEQ);
+    let c_true = truth
+        .cost_coefficient((&pair.drafter, pair.drafter_scheme),
+                          (&pair.target, pair.target_scheme), het, SEQ);
+    let (online_time, online_rounds) = simulate(
+        &truth,
+        &pair,
+        budget,
+        frozen_choice, // same admission decision; divergence is earned online
+        |round, alpha_est, cur| {
+            if round == 0 || round % REEVAL_EVERY != 0 {
+                return None;
+            }
+            let best = dse::explore_variant(&calib, &pair, 1, alpha_est, SEQ).best;
+            let next = (best.mapping, best.gamma);
+            if next != *cur {
+                switches.set(switches.get() + 1);
+                println!(
+                    "  round {round}: re-partitioned {} gamma={} -> {} gamma={} \
+                     (alpha_est = {alpha_est:.3})",
+                    cur.0.label(), cur.1, next.0.label(), next.1
+                );
+                return Some(next);
+            }
+            None
+        },
+        |round, a_true, alpha_est, cur, elapsed| {
+            // The executor's observation feed: this round's dispatches on
+            // the true platform, cycled across the compiled buckets so the
+            // estimator sees genuine x-spread.
+            let bucket = buckets[round % buckets.len()];
+            for (key, spec, scheme, pu) in [
+                (drafter, &pair.drafter, pair.drafter_scheme, cur.0.drafter),
+                (target, &pair.target, pair.target_scheme, cur.0.target),
+            ] {
+                calib.observe(&DispatchObs {
+                    variant: key,
+                    kernel: KernelPath::Ref,
+                    bucket,
+                    pu,
+                    lanes: 1,
+                    flops: spec.forward_flops(bucket),
+                    duration_s: truth.forward_latency(spec, scheme, pu, bucket),
+                });
+            }
+            let c_cal = calib.cost_coefficient(
+                (&pair.drafter, pair.drafter_scheme),
+                (&pair.target, pair.target_scheme), het, SEQ);
+            csv.push_str(&format!(
+                "{round},{a_true:.4},{alpha_est:.4},{c_analytic:.4},{c_cal:.4},\
+                 {c_true:.4},{},{},{},{},{elapsed:.6}\n",
+                cur.1,
+                cur.0.label().replace(',', ";"),
+                cur.0.is_heterogeneous() as u8,
+                switches.get(),
+            ));
+        },
+    );
+
+    let c_cal_final = calib.cost_coefficient(
+        (&pair.drafter, pair.drafter_scheme),
+        (&pair.target, pair.target_scheme), het, SEQ);
+    let n_switches = switches.get();
+    println!(
+        "Repartition — drifting α, perturbed silicon, token budget {budget}:\n\
+         frozen-at-admission: {} gamma={} -> makespan {:.2} ms over {frozen_rounds} rounds\n\
+         online (K={REEVAL_EVERY}):  {n_switches} switch(es) -> makespan {:.2} ms over \
+         {online_rounds} rounds ({:.2}x)\n\
+         cost coefficient at S_L={SEQ}: analytic {c_analytic:.3} | calibrated \
+         {c_cal_final:.3} | true {c_true:.3}",
+        frozen_choice.0.label(),
+        frozen_choice.1,
+        frozen_time * 1e3,
+        online_time * 1e3,
+        frozen_time / online_time.max(1e-12),
+    );
+    ctx.write_csv("repartition.csv", &csv)?;
+
+    // The acceptance criteria, enforced at run time.
+    anyhow::ensure!(
+        n_switches >= 1,
+        "online policy never switched mapping/γ under drift"
+    );
+    anyhow::ensure!(
+        online_time < frozen_time,
+        "online makespan {online_time} not strictly better than frozen {frozen_time}"
+    );
+    // And the calibrated c must sit nearer the truth than the stale
+    // analytic prediction does.
+    anyhow::ensure!(
+        (c_cal_final - c_true).abs() < (c_analytic - c_true).abs(),
+        "calibration did not move c toward the truth"
+    );
+    Ok(())
+}

@@ -20,6 +20,9 @@
 //! * [`hetero`] — the simulated i.MX95 platform (PUs, latency model, clock)
 //! * [`costmodel`] — Eq. (1): speedup, feasibility, optimal draft length
 //! * [`dse`] — design-space encoding v·N^m and exploration
+//! * [`decision`] — the unified decision layer: [`decision::CostModel`]
+//!   trait (analytic + calibrated impls), online routing engine,
+//!   calibration feed and online re-partitioning
 //! * [`profiler`] — cost-coefficient measurement (paper Fig. 6)
 //! * [`spec`] — the speculative sampling engine (modular + monolithic)
 //! * [`workload`] — Spec-Bench-shaped workload and arrival processes
@@ -33,6 +36,7 @@ pub mod bench;
 pub mod config;
 pub mod coordinator;
 pub mod costmodel;
+pub mod decision;
 pub mod dse;
 pub mod experiments;
 pub mod hetero;

@@ -9,12 +9,12 @@
 //!   alpha       quick per-task acceptance-rate check
 //!   info        print manifest / platform summary
 
-use specedge::config::{ExecMode, KernelPath, RunConfig, Timing};
+use specedge::config::{DecisionMode, ExecMode, KernelPath, RunConfig, Timing};
 use specedge::coordinator::Coordinator;
 use specedge::dse::{self, PairConfig};
 use specedge::experiments;
 use specedge::hetero::{LatencyModel, Mapping, Platform};
-use specedge::models::{Scheme, VariantKey};
+use specedge::models::VariantKey;
 use specedge::profiler;
 use specedge::runtime::Engine;
 use specedge::server::Server;
@@ -41,6 +41,8 @@ fn cli() -> Cli {
         .opt("exec", "modular|monolithic", Some("modular"))
         .opt("kernel", "pallas|ref artifacts", Some("pallas"))
         .opt("timing", "simulated|real", Some("simulated"))
+        .opt("decision", "decision cost model: analytic|calibrated", None)
+        .opt("repartition-every", "calibrated: re-run mapping search every K rounds", None)
         .opt("alpha", "alpha for explore", Some("0.90"))
         .opt("seq", "operating sequence length", Some("63"))
         .opt("max-new", "max new tokens", Some("64"))
@@ -81,6 +83,12 @@ fn build_config(args: &specedge::util::cli::Args) -> anyhow::Result<RunConfig> {
     }
     if let Some(t) = args.get("timing") {
         cfg.timing = Timing::parse(t)?;
+    }
+    if let Some(d) = args.get("decision") {
+        cfg.decision = DecisionMode::parse(d)?;
+    }
+    if let Some(k) = args.get_usize("repartition-every")? {
+        cfg.repartition_every = k;
     }
     if let Some(m) = args.get_usize("max-new")? {
         cfg.max_new_tokens = m;
@@ -169,8 +177,8 @@ fn cmd_decode(
         Mapping::homogeneous(cfg.design_variant)
     };
     let setup = DecoderSetup {
-        drafter: VariantKey::parse("drafter_fp")?,
-        target: VariantKey::parse("target_w8a8")?,
+        drafter: VariantKey::parse(&cfg.drafter_variant)?,
+        target: VariantKey::parse(&cfg.target_variant)?,
         kernel: cfg.kernel_path,
         mapping,
         gamma: cfg.gamma.unwrap_or(5),
@@ -237,11 +245,13 @@ fn cmd_explore(
     let seq = args.get_usize("seq")?.unwrap_or(63);
     let engine = Engine::load(&cfg.artifacts_dir)?;
     let lat = LatencyModel::new(platform);
+    let d_key = VariantKey::parse(&cfg.drafter_variant)?;
+    let t_key = VariantKey::parse(&cfg.target_variant)?;
     let pair = PairConfig {
-        target: engine.manifest.model_for(VariantKey::parse("target_w8a8")?)?.clone(),
-        target_scheme: Scheme::W8a8,
-        drafter: engine.manifest.model_for(VariantKey::parse("drafter_fp")?)?.clone(),
-        drafter_scheme: Scheme::Fp,
+        target: engine.manifest.model_for(t_key)?.clone(),
+        target_scheme: t_key.scheme,
+        drafter: engine.manifest.model_for(d_key)?.clone(),
+        drafter_scheme: d_key.scheme,
     };
     println!("DSE at alpha={alpha} seq={seq}:");
     for d in dse::explore_all(&lat, &pair, alpha, seq) {

@@ -78,6 +78,12 @@ struct Inner {
     /// Per-request end-to-end latency on the per-PU timelines
     /// (admission → last dispatch end).
     tl_latency: Summary,
+    /// Routing decisions taken with zero α observations for their task
+    /// (the optimistic prior stood in — see the decision layer).
+    prior_decisions: u64,
+    /// Dispatch-duration observations accepted by the calibration
+    /// estimator.
+    calibration_obs: u64,
 }
 
 /// Fixed-size uniform reservoir (Vitter's Algorithm R) for unbounded
@@ -214,6 +220,21 @@ impl Metrics {
         m.makespan_s += snap.makespan - prev.makespan;
     }
 
+    /// One routing decision that had zero α observations for its task and
+    /// fell back to the optimistic prior (counted so "the prior stood in"
+    /// is observable instead of silent).
+    pub fn record_prior_decision(&self) {
+        self.inner.lock().unwrap().prior_decisions += 1;
+    }
+
+    /// `n` dispatch-duration observations were accepted by the decision
+    /// layer's calibration estimator.
+    pub fn record_calibration(&self, n: u64) {
+        if n > 0 {
+            self.inner.lock().unwrap().calibration_obs += n;
+        }
+    }
+
     /// One request's simulated timeline latency (admission → finish).
     pub fn record_timeline_latency(&self, seconds: f64) {
         if seconds.is_finite() {
@@ -252,6 +273,8 @@ impl Metrics {
             overlap_s: m.overlap_s,
             makespan_s: m.makespan_s,
             tl_latency: m.tl_latency.box_stats(),
+            prior_decisions: m.prior_decisions,
+            calibration_obs: m.calibration_obs,
         }
     }
 }
@@ -295,6 +318,12 @@ pub struct Report {
     pub makespan_s: f64,
     /// Per-request simulated timeline latency (admission → finish).
     pub tl_latency: BoxStats,
+    /// Routing decisions that fell back to the optimistic prior (zero α
+    /// observations for the task at decision time).
+    pub prior_decisions: u64,
+    /// Dispatch-duration observations accepted by the calibration
+    /// estimator (0 under `decision: "analytic"`).
+    pub calibration_obs: u64,
 }
 
 impl Report {
@@ -323,7 +352,8 @@ impl Report {
              inflight mean={:.2} max={}\n\
              dispatches={} fused={} batch_fill={:.2}\n\
              pu: cpu busy={:.1}ms gpu busy={:.1}ms overlap={:.1}ms \
-             makespan={:.1}ms tl_latency_p50={:.1}ms",
+             makespan={:.1}ms tl_latency_p50={:.1}ms\n\
+             decision: prior_decisions={} calibration_obs={}",
             self.requests,
             self.rejected,
             self.tokens_out,
@@ -350,6 +380,8 @@ impl Report {
             self.overlap_s * 1e3,
             self.makespan_s * 1e3,
             self.tl_latency.median * 1e3,
+            self.prior_decisions,
+            self.calibration_obs,
         )
     }
 }
@@ -463,6 +495,21 @@ mod tests {
         let r = m.snapshot();
         assert_eq!(r.tl_latency.n, 2);
         assert!((r.tl_latency.mean - 0.3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn decision_counters_aggregate() {
+        let m = Metrics::new();
+        let r = m.snapshot();
+        assert_eq!(r.prior_decisions, 0);
+        assert_eq!(r.calibration_obs, 0);
+        m.record_prior_decision();
+        m.record_prior_decision();
+        m.record_calibration(3);
+        m.record_calibration(0); // no-op
+        let r = m.snapshot();
+        assert_eq!(r.prior_decisions, 2);
+        assert_eq!(r.calibration_obs, 3);
     }
 
     #[test]

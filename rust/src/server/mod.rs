@@ -139,6 +139,34 @@ fn handle_conn(
                                     (r.tl_latency.median * 1e3).into(),
                                 )
                                 .set("wall_s", start_wall.elapsed().as_secs_f64().into());
+                            // Decision-layer state: which cost model is
+                            // live, the mapping new admissions receive,
+                            // and the calibration/prior counters.
+                            let calib = coordinator.policy.calibration();
+                            j.set(
+                                "decision",
+                                Json::Str(
+                                    coordinator.policy.decision_mode().as_str().into(),
+                                ),
+                            )
+                            .set(
+                                "mapping",
+                                Json::Str(coordinator.policy.current_mapping().label()),
+                            )
+                            .set(
+                                "repartitions",
+                                (coordinator.policy.repartition_count() as usize).into(),
+                            )
+                            .set(
+                                "prior_decisions",
+                                (r.prior_decisions as usize).into(),
+                            )
+                            .set(
+                                "calibration_obs",
+                                (r.calibration_obs as usize).into(),
+                            )
+                            .set("calibration_tracked_keys", calib.tracked_keys.into())
+                            .set("calibration_fitted_keys", calib.fitted_keys.into());
                             j
                         }
                         "shutdown" => {

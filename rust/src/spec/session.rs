@@ -31,7 +31,7 @@
 //! [`crate::hetero::LatencyModel::batched_forward_latency`]).
 
 use crate::config::{ExecMode, KernelPath};
-use crate::hetero::{LatencyModel, PuAssignment, PuRoute};
+use crate::hetero::{LatencyModel, Mapping, PuAssignment, PuRoute};
 use crate::models::VariantKey;
 use crate::runtime::{Engine, ForwardOut, MonoStepOut};
 use crate::tokenizer::EOS_ID;
@@ -367,6 +367,14 @@ impl DecodeSession {
         self.setup.gamma
     }
 
+    /// The PU mapping frozen into this session at admission — every
+    /// dispatch it plans routes on this, regardless of later online
+    /// re-partition switches (round-level policy consults must price the
+    /// session at *this* mapping).
+    pub fn mapping(&self) -> Mapping {
+        self.setup.mapping
+    }
+
     /// Re-decide speculation for the next round (round-level policy hook).
     pub fn set_speculative(&mut self, on: bool) {
         self.speculative = on;
@@ -437,12 +445,9 @@ impl DecodeSession {
         Ok(match self.advance_plan(engine)? {
             PlannedKind::Done(out) => SessionPlan::Done(out),
             PlannedKind::Need(kind) => {
-                let route = match kind {
-                    RequestKind::Forward { variant, .. } => {
-                        PuRoute::single(self.role_pu(variant.role))
-                    }
-                    RequestKind::MonoStep { .. } => PuRoute::mono(self.setup.mapping),
-                };
+                // Route resolution lives behind the decision API: the one
+                // mapping → PU-route rule shared by every session.
+                let route = crate::decision::resolve_route(self.setup.mapping, &kind);
                 SessionPlan::Need(EngineRequest { kind, tokens: self.ids.clone(), route })
             }
         })

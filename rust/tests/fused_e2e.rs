@@ -150,7 +150,7 @@ fn fused_scheduler_matches_stepping_with_fewer_dispatches_per_token() {
         if refs.is_empty() {
             break;
         }
-        let (events, stats) = fuser::tick(&engine, &lat, &mut refs, None);
+        let (events, stats) = fuser::tick(&engine, &lat, &mut refs, None, false);
         assert!(
             !events.iter().any(|e| matches!(e, TickEvent::Failed)),
             "no session may fail"
@@ -211,7 +211,7 @@ fn monolithic_sessions_tick_through_the_singleton_path() {
         if refs.is_empty() {
             break;
         }
-        let (events, stats) = fuser::tick(&engine, &lat, &mut refs, None);
+        let (events, stats) = fuser::tick(&engine, &lat, &mut refs, None, false);
         assert!(!events.iter().any(|e| matches!(e, TickEvent::Failed)));
         // Mono spec-steps are never cross-fused.
         assert_eq!(stats.fused_dispatches, 0);
