@@ -1,30 +1,33 @@
-//! Quickstart: load the AOT artifacts and speculatively decode one prompt.
+//! Quickstart: load the AOT artifacts and serve one prompt through the
+//! request-lifecycle API.
 //!
 //! ```bash
 //! make artifacts && cargo build --release
 //! cargo run --release --example quickstart
 //! ```
 //!
-//! Shows the whole three-layer story in ~40 lines: the Pallas/JAX-built HLO
-//! artifacts load into a Rust PJRT engine, a drafter+target pair runs the
-//! paper's speculative-sampling loop on the paper's deployed mapping
-//! (variant 1: fp drafter on the GPU, quantized target on one CPU core),
-//! and both the simulated-i.MX95 and real wall-clock latencies come back.
+//! Shows the whole three-layer story in ~60 lines: the Pallas/JAX-built
+//! HLO artifacts load into a Rust PJRT engine behind a serving
+//! `Coordinator`, one `submit` returns a `RequestHandle` that streams
+//! speculation rounds as they commit, typed `GenOptions` flip the same
+//! request to baseline decoding for an A/B comparison, and both the
+//! simulated-i.MX95 and real wall-clock latencies come back with a typed
+//! finish reason.
 
-use specedge::config::{ExecMode, KernelPath};
-use specedge::hetero::{LatencyModel, Mapping, Platform};
-use specedge::models::VariantKey;
-use specedge::runtime::Engine;
-use specedge::spec::{AcceptRule, Decoder, DecoderSetup};
+use specedge::api::{GenOptions, GenerationRequest};
+use specedge::config::RunConfig;
+use specedge::coordinator::Coordinator;
+use specedge::hetero::Platform;
+use specedge::runtime::Manifest;
 use specedge::tokenizer::{Tokenizer, SEP_ID};
+use std::path::{Path, PathBuf};
 
 fn main() -> anyhow::Result<()> {
-    let engine = Engine::load(std::path::Path::new("artifacts"))?;
-    let tokenizer = Tokenizer::from_manifest(&engine.manifest.tokenizer_spec)?;
+    let manifest = Manifest::load(Path::new("artifacts"))?;
+    let tokenizer = Tokenizer::from_manifest(&manifest.tokenizer_spec)?;
 
     // Pick a real translation sample from the benchmark set.
-    let sample = engine
-        .manifest
+    let sample = manifest
         .eval_samples
         .iter()
         .find(|s| s.task == "translate")
@@ -35,30 +38,45 @@ fn main() -> anyhow::Result<()> {
     let mut prompt = tokenizer.encode(&sample.prompt, true)?;
     prompt.push(SEP_ID);
 
-    let setup = DecoderSetup {
-        drafter: VariantKey::parse("drafter_fp")?,
-        target: VariantKey::parse("target_w8a8")?,
-        kernel: KernelPath::Pallas,
-        mapping: Mapping::heterogeneous(1), // paper's best variant
-        gamma: 5,
-        rule: AcceptRule::Greedy,
-        exec: ExecMode::Modular,
-        max_new: 64,
+    // The paper's deployed configuration: γ=5 speculation on the
+    // variant-1 heterogeneous mapping (fp drafter on the GPU, quantized
+    // target on one CPU core).
+    let cfg = RunConfig {
+        artifacts_dir: PathBuf::from("artifacts"),
+        gamma: Some(5),
+        ..RunConfig::default()
     };
-    let decoder = Decoder::new(&engine, LatencyModel::new(Platform::imx95()), setup);
+    let coord = Coordinator::start(cfg, Platform::imx95())?;
 
-    let base = decoder.baseline(&prompt)?;
-    let spec = decoder.speculative(&prompt)?;
+    // Speculative request: stream each round's committed tokens live.
+    let handle = coord.submit(GenerationRequest::new(1, "translate", prompt.clone()));
+    print!("generated: ");
+    for frame in handle.frames() {
+        print!("{}", tokenizer.decode(&frame.tokens));
+    }
+    println!();
+    let spec = handle.wait()?;
 
-    println!("generated:  {}", tokenizer.decode(&spec.tokens));
+    // Same prompt, forced to plain autoregressive decoding via the
+    // per-request speculation hint — the A/B baseline.
+    let baseline_req = GenerationRequest::new(2, "translate", prompt)
+        .with_options(GenOptions { no_spec: true, ..GenOptions::default() });
+    let base = coord.submit(baseline_req).wait()?;
+    coord.shutdown();
+
     println!();
     println!(
-        "baseline:    {:6.1} ms simulated ({} target calls)",
-        base.sim_s * 1e3, base.target_calls
+        "baseline:    {:6.1} ms simulated ({} tokens, finish = {})",
+        base.sim_s * 1e3,
+        base.tokens.len(),
+        base.finish.as_str()
     );
     println!(
-        "speculative: {:6.1} ms simulated ({} rounds, alpha = {:.2})",
-        spec.sim_s * 1e3, spec.n_rounds, spec.alpha()
+        "speculative: {:6.1} ms simulated ({} rounds, alpha = {:.2}, finish = {})",
+        spec.sim_s * 1e3,
+        spec.rounds,
+        spec.alpha,
+        spec.finish.as_str()
     );
     println!("speedup:     {:.2}x", base.sim_s / spec.sim_s);
     Ok(())

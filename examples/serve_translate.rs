@@ -2,8 +2,9 @@
 //!
 //! Starts the full serving stack (coordinator + engine workers + TCP
 //! front-end), replays the Spec-Bench-shaped translation workload with
-//! Poisson arrivals through a real TCP client, and reports
-//! latency/throughput for three configurations:
+//! Poisson arrivals through a real TCP client speaking the v2 wire
+//! protocol (typed options, client-chosen req_ids, typed finish
+//! reasons), and reports latency/throughput for three configurations:
 //!
 //!   1. baseline         — autoregressive decode, variant-1 CPU
 //!   2. spec-homo        — speculative sampling, homogeneous 1-core mapping
@@ -15,9 +16,13 @@
 //! ```
 //!
 //! Each worker interleaves up to `max_inflight` (default 4) sessions
-//! round-by-round; the first request of each configuration is issued with
-//! `"stream": true` to demonstrate the incremental token frames.
+//! round-by-round; the first request of each configuration streams its
+//! incremental token frames, and the run ends with a
+//! streaming-with-cancel demonstration: a second connection cancels a
+//! live streamed request by req_id, which aborts at the next round
+//! boundary with a typed `finish:"cancelled"`.
 
+use specedge::api::GenOptions;
 use specedge::config::RunConfig;
 use specedge::coordinator::Coordinator;
 use specedge::hetero::Platform;
@@ -29,6 +34,7 @@ use specedge::util::stats::Summary;
 use specedge::workload::Workload;
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
+use std::time::Duration;
 
 struct RunResult {
     name: &'static str,
@@ -111,6 +117,8 @@ fn main() -> anyhow::Result<()> {
             );
         }
     }
+
+    streaming_cancel_demo(max_inflight, &workload)?;
     Ok(())
 }
 
@@ -134,6 +142,9 @@ fn run_one(
     let coord = Arc::new(Coordinator::start(cfg, Platform::imx95())?);
     let server = Server::start(Arc::clone(&coord), Tokenizer::builtin(), 0)?;
     let mut client = Client::connect(server.port)?;
+    // Client hardening: a dead server surfaces as a typed error instead
+    // of hanging the load generator forever.
+    client.set_read_timeout(Some(Duration::from_secs(120)))?;
 
     let t0 = std::time::Instant::now();
     let mut sim = Summary::new();
@@ -151,11 +162,13 @@ fn run_one(
         // Strip BOS and trailing SEP: the server re-encodes the raw text.
         let text: String = Tokenizer::builtin().decode(&req.prompt);
         let text = text.trim_end_matches('=').to_string();
+        let req_id = req.id + 1;
         let reply = if !streamed_demo {
-            // First request per config: exercise the streaming protocol and
-            // show the round-by-round frames.
+            // First request per config: exercise the v2 streaming
+            // protocol and show the round-by-round frames.
             streamed_demo = true;
-            let (frames, final_reply) = client.generate_stream(&text, &req.task)?;
+            let (frames, final_reply) =
+                client.generate_stream_with(&text, &req.task, req_id, &GenOptions::default())?;
             println!(
                 "{name}: streamed {} round frame(s) for the first request \
                  (draft windows: {:?})",
@@ -167,7 +180,7 @@ fn run_one(
             );
             final_reply
         } else {
-            client.generate(&text, &req.task)?
+            client.generate_with(&text, &req.task, req_id, &GenOptions::default())?
         };
         anyhow::ensure!(
             reply.get("ok") == Some(&Json::Bool(true)),
@@ -189,11 +202,13 @@ fn run_one(
     if let Ok(m) = client.call(&mj) {
         println!(
             "{name}: {} scheduler rounds, mean per-round gamma {:.2}, \
-             sessions in flight mean {:.2} / max {}",
+             sessions in flight mean {:.2} / max {}, finish: stop={} length={}",
             m.get("rounds").and_then(Json::as_usize).unwrap_or(0),
             m.get("mean_round_gamma").and_then(Json::as_f64).unwrap_or(f64::NAN),
             m.get("mean_inflight").and_then(Json::as_f64).unwrap_or(f64::NAN),
             m.get("max_inflight").and_then(Json::as_usize).unwrap_or(0),
+            m.get("finish_stop").and_then(Json::as_usize).unwrap_or(0),
+            m.get("finish_length").and_then(Json::as_usize).unwrap_or(0),
         );
     }
 
@@ -218,4 +233,69 @@ fn run_one(
         real_p50_ms: real.median(),
         mean_alpha: if alphas.is_empty() { f64::NAN } else { alphas.mean() },
     })
+}
+
+/// Lifecycle demo: connection A streams a request; connection B cancels
+/// it by req_id mid-stream. The session aborts at its next round
+/// boundary, the slot frees, and the final frame reports the typed
+/// finish reason with the tokens committed so far.
+fn streaming_cancel_demo(max_inflight: usize, workload: &Workload) -> anyhow::Result<()> {
+    println!("\n=== streaming-with-cancel demo ===");
+    let mut cfg = base_cfg(max_inflight);
+    cfg.gamma = Some(1); // small rounds: many boundaries for the abort
+    let coord = Arc::new(Coordinator::start(cfg, Platform::imx95())?);
+    let server = Server::start(Arc::clone(&coord), Tokenizer::builtin(), 0)?;
+    let mut a = Client::connect(server.port)?;
+    let mut b = Client::connect(server.port)?;
+    a.set_read_timeout(Some(Duration::from_secs(60)))?;
+    b.set_read_timeout(Some(Duration::from_secs(60)))?;
+
+    let text: String = Tokenizer::builtin().decode(&workload.requests[0].prompt);
+    let text = text.trim_end_matches('=').to_string();
+    let req_id = 9001u64;
+    let mut line = Json::obj();
+    line.set("v", 2usize.into())
+        .set("req_id", (req_id as usize).into())
+        .set("prompt", Json::Str(text))
+        .set("task", Json::Str("translate".into()))
+        .set("stream", true.into());
+    a.send(&line)?;
+    let first = a.read_reply()?;
+    let fin = if first.get("frame").and_then(Json::as_str) != Some("tokens") {
+        // The request errored (or finished) in a single line — nothing
+        // left to cancel or drain.
+        first
+    } else {
+        println!(
+            "A: first frame round={} text={:?}",
+            first.get("round").and_then(Json::as_usize).unwrap_or(0),
+            first.get("text").and_then(Json::as_str).unwrap_or(""),
+        );
+        let cancel_reply = b.cancel(req_id)?;
+        println!("B: cancel(req_id={req_id}) -> {cancel_reply}");
+        // Drain A's stream to the terminating line.
+        loop {
+            let l = a.read_reply()?;
+            if l.get("frame").and_then(Json::as_str) != Some("tokens") {
+                break l;
+            }
+        }
+    };
+    println!(
+        "A: final finish={:?} tokens={} ({})",
+        fin.get("finish").and_then(Json::as_str).unwrap_or("<error reply>"),
+        fin.get("tokens").and_then(Json::as_usize).unwrap_or(0),
+        if fin.get("finish").and_then(Json::as_str) == Some("cancelled") {
+            "aborted at a round boundary, partial output returned"
+        } else {
+            "the decode finished before the cancel landed"
+        }
+    );
+
+    let mut sd = Json::obj();
+    sd.set("cmd", "shutdown".into());
+    let _ = a.call(&sd);
+    server.stop();
+    Arc::try_unwrap(coord).ok().unwrap().shutdown();
+    Ok(())
 }

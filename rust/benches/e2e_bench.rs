@@ -42,10 +42,10 @@ fn main() {
             ..RunConfig::default()
         };
         let coord = Coordinator::start(cfg, Platform::imx95()).unwrap();
-        coord.submit_blocking(request(0)).unwrap(); // warm compiles
+        coord.submit(request(0)).wait().unwrap(); // warm compiles
         let mut id = 1;
         b.bench(&format!("{name}_request_32tok"), || {
-            std::hint::black_box(coord.submit_blocking(request(id)).unwrap());
+            std::hint::black_box(coord.submit(request(id)).wait().unwrap());
             id += 1;
         });
         coord.shutdown();

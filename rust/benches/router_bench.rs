@@ -36,15 +36,15 @@ fn main() {
     let q = RequestQueue::new(1024);
     b.bench("queue_push_pop", || {
         let (tx, _rx) = std::sync::mpsc::channel();
-        let item = QueueItem {
-            request: Request {
+        let item = QueueItem::new(
+            Request {
                 id: 0, task: "t".into(), prompt: vec![1, 2, 3],
                 truth: String::new(), arrival_s: 0.0,
-            },
-            enqueued: std::time::Instant::now(),
-            respond: tx,
-            token_tx: None,
-        };
+            }
+            .into(),
+            tx,
+            None,
+        );
         q.push(item).ok();
         std::hint::black_box(q.pop());
     });

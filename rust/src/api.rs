@@ -1,0 +1,552 @@
+//! Request-lifecycle API v2: the typed client-facing request surface.
+//!
+//! Everything a caller can say about one generation request lives here:
+//!
+//! * [`GenOptions`] — per-request knobs: token budget (`max_new`),
+//!   sampling mode ([`SamplingMode`]: greedy, or stochastic with
+//!   temperature + seed), stop sequences / stop token ids, a latency
+//!   deadline + [`SloClass`] + integer priority (consumed by the
+//!   coordinator queue for priority ordering and deadline-based
+//!   admission shedding), and advisory speculation hints (γ cap,
+//!   force-spec-off) the decision engine clamps its per-round choice
+//!   against.
+//! * [`GenerationRequest`] — a [`Request`](crate::workload::Request)
+//!   plus its options; the one submission type
+//!   [`Coordinator::submit`](crate::coordinator::Coordinator::submit)
+//!   accepts (a bare `Request` converts with default options).
+//! * [`FinishReason`] — why a request ended, carried on every
+//!   [`EngineResponse`](crate::coordinator::EngineResponse) and in the
+//!   v2 wire protocol's `finish` field.
+//!
+//! **Defaults reproduce the seed behavior exactly**: `GenOptions::default()`
+//! is greedy sampling, the server-configured `max_new_tokens`, no stops,
+//! no deadline, `Interactive` at priority 0, and no speculation hints —
+//! bit-for-bit the token streams the pre-options code produced.
+//!
+//! **Deadline clock.** `deadline_s` is accounted against the *serving
+//! clock*: real queueing delay plus simulated decode seconds (the
+//! paper-comparable latency this repo reports). Expiry before admission
+//! sheds the request from the queue; expiry mid-decode aborts the live
+//! session at the next round boundary, returning the tokens committed so
+//! far with [`FinishReason::DeadlineExceeded`].
+//!
+//! The JSON codecs in this module double as the v2 wire `options` object
+//! (`GenOptions::from_json` / `to_json`) — see the protocol table in
+//! [`crate::server`].
+
+use crate::util::json::Json;
+use crate::workload::Request;
+
+/// Strict wire integer: the JSON codec is f64-backed, so "integer" means
+/// a finite number with no fractional part (31.5 must not silently
+/// become 31).
+fn wire_int(v: &Json) -> Option<i64> {
+    v.as_f64()
+        .filter(|x| x.is_finite() && x.fract() == 0.0)
+        .map(|x| x as i64)
+}
+
+/// Strict non-negative wire integer (shared with the server's `req_id`
+/// parsing, so the whole protocol agrees on what an integer is).
+pub(crate) fn wire_uint(v: &Json) -> Option<u64> {
+    wire_int(v).filter(|x| *x >= 0).map(|x| x as u64)
+}
+
+/// How tokens are sampled/accepted for one request.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub enum SamplingMode {
+    /// Deterministic argmax decoding with the greedy accept rule (the
+    /// paper's setting, and the default).
+    #[default]
+    Greedy,
+    /// The stochastic speculative-sampling accept rule at `temperature`,
+    /// seeded per request for reproducibility.
+    Stochastic { temperature: f64, seed: u64 },
+}
+
+impl SamplingMode {
+    /// Parse the wire `sampling` object:
+    /// `{"mode":"greedy"}` or
+    /// `{"mode":"stochastic","temperature":0.8,"seed":7}` (temperature
+    /// defaults to 1.0, seed to the crate's historical 0x5EED stream).
+    pub fn from_json(j: &Json) -> anyhow::Result<SamplingMode> {
+        let mode = j.req_str("mode")?;
+        match mode {
+            "greedy" => Ok(SamplingMode::Greedy),
+            "stochastic" => {
+                let temperature = match j.get("temperature") {
+                    None => 1.0,
+                    Some(v) => v
+                        .as_f64()
+                        .ok_or_else(|| anyhow::anyhow!("sampling.temperature must be a number"))?,
+                };
+                let seed = match j.get("seed") {
+                    None => 0x5EED,
+                    Some(v) => wire_uint(v)
+                        .ok_or_else(|| anyhow::anyhow!("sampling.seed must be a non-negative integer"))?,
+                };
+                Ok(SamplingMode::Stochastic { temperature, seed })
+            }
+            other => anyhow::bail!("sampling.mode must be greedy|stochastic, got {other:?}"),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        match *self {
+            SamplingMode::Greedy => {
+                j.set("mode", "greedy".into());
+            }
+            SamplingMode::Stochastic { temperature, seed } => {
+                j.set("mode", "stochastic".into())
+                    .set("temperature", temperature.into())
+                    .set("seed", (seed as usize).into());
+            }
+        }
+        j
+    }
+}
+
+/// Service-level class of one request, consumed by the coordinator queue:
+/// `Interactive` requests are always admitted ahead of `Batch` ones,
+/// regardless of numeric priority.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum SloClass {
+    #[default]
+    Interactive,
+    Batch,
+}
+
+/// Number of [`SloClass`] variants (metrics arrays).
+pub const NUM_SLO_CLASSES: usize = 2;
+
+impl SloClass {
+    pub fn parse(s: &str) -> anyhow::Result<SloClass> {
+        match s {
+            "interactive" => Ok(SloClass::Interactive),
+            "batch" => Ok(SloClass::Batch),
+            _ => anyhow::bail!("slo must be interactive|batch, got {s:?}"),
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            SloClass::Interactive => "interactive",
+            SloClass::Batch => "batch",
+        }
+    }
+
+    /// Dense index (metrics arrays; admission rank — lower admits first).
+    pub fn index(&self) -> usize {
+        match self {
+            SloClass::Interactive => 0,
+            SloClass::Batch => 1,
+        }
+    }
+}
+
+/// Why a request finished — carried on every
+/// [`EngineResponse`](crate::coordinator::EngineResponse) and, for v2
+/// wire requests, in the final reply's `finish` field.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum FinishReason {
+    /// A natural stop: EOS, or one of the request's stop token ids.
+    Stop,
+    /// The token budget (`max_new` or the bucket-space cap) was reached.
+    #[default]
+    Length,
+    /// The output ended with one of the request's stop sequences (which
+    /// is truncated from the returned tokens).
+    StopSequence,
+    /// The caller cancelled; tokens committed before the abort are
+    /// returned.
+    Cancelled,
+    /// The request's deadline expired (in the queue, or mid-decode at a
+    /// round boundary); tokens committed before expiry are returned.
+    DeadlineExceeded,
+    /// The coordinator rejected the submission (queue full, or shutting
+    /// down); no decode ever ran.
+    Rejected,
+}
+
+/// Number of [`FinishReason`] variants (metrics arrays).
+pub const NUM_FINISH_REASONS: usize = 6;
+
+impl FinishReason {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            FinishReason::Stop => "stop",
+            FinishReason::Length => "length",
+            FinishReason::StopSequence => "stop_sequence",
+            FinishReason::Cancelled => "cancelled",
+            FinishReason::DeadlineExceeded => "deadline_exceeded",
+            FinishReason::Rejected => "rejected",
+        }
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<FinishReason> {
+        Ok(match s {
+            "stop" => FinishReason::Stop,
+            "length" => FinishReason::Length,
+            "stop_sequence" => FinishReason::StopSequence,
+            "cancelled" => FinishReason::Cancelled,
+            "deadline_exceeded" => FinishReason::DeadlineExceeded,
+            "rejected" => FinishReason::Rejected,
+            _ => anyhow::bail!("unknown finish reason {s:?}"),
+        })
+    }
+
+    /// Dense index for metrics arrays (declaration order).
+    pub fn index(&self) -> usize {
+        match self {
+            FinishReason::Stop => 0,
+            FinishReason::Length => 1,
+            FinishReason::StopSequence => 2,
+            FinishReason::Cancelled => 3,
+            FinishReason::DeadlineExceeded => 4,
+            FinishReason::Rejected => 5,
+        }
+    }
+
+    /// All variants, in [`index`](Self::index) order (report rendering).
+    pub fn all() -> [FinishReason; NUM_FINISH_REASONS] {
+        [
+            FinishReason::Stop,
+            FinishReason::Length,
+            FinishReason::StopSequence,
+            FinishReason::Cancelled,
+            FinishReason::DeadlineExceeded,
+            FinishReason::Rejected,
+        ]
+    }
+}
+
+/// Typed per-request generation options. `Default` reproduces the
+/// pre-options serving behavior exactly (see the module docs).
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct GenOptions {
+    /// Token budget override (`None` = the server's `max_new_tokens`;
+    /// overrides are clamped to the server's `max_new_limit`).
+    pub max_new: Option<usize>,
+    pub sampling: SamplingMode,
+    /// Generation stops (and the matched suffix is truncated) when the
+    /// output ends with any of these strings.
+    pub stop_sequences: Vec<String>,
+    /// Token ids treated like EOS (never emitted).
+    pub stop_tokens: Vec<u32>,
+    /// Serving-clock deadline in seconds (see the module docs for the
+    /// clock definition). `None` = no deadline.
+    pub deadline_s: Option<f64>,
+    pub slo: SloClass,
+    /// Higher admits first within an SLO class; 0 is the default.
+    pub priority: i32,
+    /// Advisory upper bound on the speculation draft length γ
+    /// (0 ⇒ baseline decode). The decision engine clamps against it but
+    /// never widens its own choice.
+    pub gamma_cap: Option<usize>,
+    /// Force speculation off for this request.
+    pub no_spec: bool,
+}
+
+impl GenOptions {
+    /// Parse the v2 wire `options` object. Strict: unknown keys and
+    /// wrongly-typed values are errors (surfaced as `bad_request`), so
+    /// misspelled knobs fail loudly instead of silently doing nothing.
+    pub fn from_json(j: &Json) -> anyhow::Result<GenOptions> {
+        let obj = j
+            .as_obj()
+            .ok_or_else(|| anyhow::anyhow!("options must be an object"))?;
+        let mut o = GenOptions::default();
+        for (k, v) in obj {
+            match k.as_str() {
+                "max_new" => {
+                    o.max_new = Some(
+                        wire_uint(v)
+                            .ok_or_else(|| anyhow::anyhow!("max_new must be a non-negative integer"))?
+                            as usize,
+                    );
+                }
+                "sampling" => o.sampling = SamplingMode::from_json(v)?,
+                "stop" => {
+                    let arr = v
+                        .as_arr()
+                        .ok_or_else(|| anyhow::anyhow!("stop must be an array of strings"))?;
+                    o.stop_sequences = arr
+                        .iter()
+                        .map(|s| {
+                            s.as_str()
+                                .map(str::to_string)
+                                .ok_or_else(|| anyhow::anyhow!("stop must be an array of strings"))
+                        })
+                        .collect::<anyhow::Result<Vec<String>>>()?;
+                }
+                "stop_tokens" => {
+                    let arr = v
+                        .as_arr()
+                        .ok_or_else(|| anyhow::anyhow!("stop_tokens must be an array of token ids"))?;
+                    o.stop_tokens = arr
+                        .iter()
+                        .map(|t| {
+                            wire_uint(t)
+                                .map(|x| x as u32)
+                                .ok_or_else(|| anyhow::anyhow!("stop_tokens must be an array of token ids"))
+                        })
+                        .collect::<anyhow::Result<Vec<u32>>>()?;
+                }
+                "deadline_ms" => {
+                    let ms = v
+                        .as_f64()
+                        .ok_or_else(|| anyhow::anyhow!("deadline_ms must be a number"))?;
+                    o.deadline_s = Some(ms / 1e3);
+                }
+                "slo" => {
+                    o.slo = SloClass::parse(
+                        v.as_str()
+                            .ok_or_else(|| anyhow::anyhow!("slo must be a string"))?,
+                    )?;
+                }
+                "priority" => {
+                    o.priority = wire_int(v)
+                        .ok_or_else(|| anyhow::anyhow!("priority must be an integer"))?
+                        as i32;
+                }
+                "gamma_cap" => {
+                    o.gamma_cap = Some(
+                        wire_uint(v)
+                            .ok_or_else(|| anyhow::anyhow!("gamma_cap must be a non-negative integer"))?
+                            as usize,
+                    );
+                }
+                "no_spec" => {
+                    o.no_spec = v
+                        .as_bool()
+                        .ok_or_else(|| anyhow::anyhow!("no_spec must be a boolean"))?;
+                }
+                other => anyhow::bail!("unknown option {other:?}"),
+            }
+        }
+        o.validate()?;
+        Ok(o)
+    }
+
+    /// Serialize as a v2 wire `options` object, omitting fields at their
+    /// defaults (so the default options serialize to `{}`).
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        if let Some(m) = self.max_new {
+            j.set("max_new", m.into());
+        }
+        if self.sampling != SamplingMode::Greedy {
+            j.set("sampling", self.sampling.to_json());
+        }
+        if !self.stop_sequences.is_empty() {
+            j.set(
+                "stop",
+                Json::Arr(self.stop_sequences.iter().map(|s| Json::Str(s.clone())).collect()),
+            );
+        }
+        if !self.stop_tokens.is_empty() {
+            j.set(
+                "stop_tokens",
+                Json::Arr(self.stop_tokens.iter().map(|&t| (t as usize).into()).collect()),
+            );
+        }
+        if let Some(d) = self.deadline_s {
+            j.set("deadline_ms", (d * 1e3).into());
+        }
+        if self.slo != SloClass::Interactive {
+            j.set("slo", self.slo.as_str().into());
+        }
+        if self.priority != 0 {
+            j.set("priority", (self.priority as i64).into());
+        }
+        if let Some(g) = self.gamma_cap {
+            j.set("gamma_cap", g.into());
+        }
+        if self.no_spec {
+            j.set("no_spec", true.into());
+        }
+        j
+    }
+
+    /// Range checks shared by the wire parser and the Rust API.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        if let Some(m) = self.max_new {
+            anyhow::ensure!(m >= 1, "max_new must be >= 1");
+        }
+        if let SamplingMode::Stochastic { temperature, .. } = self.sampling {
+            anyhow::ensure!(
+                temperature.is_finite() && temperature > 0.0,
+                "temperature must be finite and > 0"
+            );
+        }
+        if let Some(d) = self.deadline_s {
+            anyhow::ensure!(d.is_finite() && d >= 0.0, "deadline must be finite and >= 0");
+        }
+        Ok(())
+    }
+}
+
+/// One submission: a workload [`Request`] plus its [`GenOptions`]. A bare
+/// `Request` converts with default options, so seed-era call sites keep
+/// working through the handle API unchanged.
+#[derive(Debug, Clone)]
+pub struct GenerationRequest {
+    pub id: u64,
+    pub task: String,
+    /// Prompt token ids (BOS ... SEP).
+    pub prompt: Vec<u32>,
+    /// Ground-truth completion text (accuracy accounting; may be empty).
+    pub truth: String,
+    /// Arrival offset within the run, seconds (0 for closed-loop).
+    pub arrival_s: f64,
+    pub options: GenOptions,
+}
+
+impl GenerationRequest {
+    pub fn new(id: u64, task: impl Into<String>, prompt: Vec<u32>) -> GenerationRequest {
+        GenerationRequest {
+            id,
+            task: task.into(),
+            prompt,
+            truth: String::new(),
+            arrival_s: 0.0,
+            options: GenOptions::default(),
+        }
+    }
+
+    pub fn with_options(mut self, options: GenOptions) -> GenerationRequest {
+        self.options = options;
+        self
+    }
+}
+
+impl From<Request> for GenerationRequest {
+    fn from(r: Request) -> GenerationRequest {
+        GenerationRequest {
+            id: r.id,
+            task: r.task,
+            prompt: r.prompt,
+            truth: r.truth,
+            arrival_s: r.arrival_s,
+            options: GenOptions::default(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_seed_equivalent() {
+        let o = GenOptions::default();
+        assert_eq!(o.max_new, None);
+        assert_eq!(o.sampling, SamplingMode::Greedy);
+        assert!(o.stop_sequences.is_empty() && o.stop_tokens.is_empty());
+        assert_eq!(o.deadline_s, None);
+        assert_eq!(o.slo, SloClass::Interactive);
+        assert_eq!(o.priority, 0);
+        assert_eq!(o.gamma_cap, None);
+        assert!(!o.no_spec);
+        o.validate().unwrap();
+        // Default options serialize to the empty object.
+        assert_eq!(o.to_json().to_string(), "{}");
+    }
+
+    #[test]
+    fn options_json_roundtrip() {
+        let o = GenOptions {
+            max_new: Some(32),
+            sampling: SamplingMode::Stochastic { temperature: 0.8, seed: 7 },
+            stop_sequences: vec!["ab".into()],
+            stop_tokens: vec![9],
+            deadline_s: Some(0.25),
+            slo: SloClass::Batch,
+            priority: -3,
+            gamma_cap: Some(2),
+            no_spec: true,
+        };
+        let j = o.to_json();
+        let back = GenOptions::from_json(&j).unwrap();
+        assert_eq!(back, o);
+    }
+
+    #[test]
+    fn unknown_and_mistyped_options_rejected() {
+        let j = Json::parse(r#"{"max_mew": 3}"#).unwrap();
+        assert!(GenOptions::from_json(&j).is_err(), "typo must fail loudly");
+        let j = Json::parse(r#"{"max_new": "three"}"#).unwrap();
+        assert!(GenOptions::from_json(&j).is_err());
+        // Non-integer numbers must fail loudly, not silently truncate.
+        let j = Json::parse(r#"{"max_new": 31.5}"#).unwrap();
+        assert!(GenOptions::from_json(&j).is_err());
+        let j = Json::parse(r#"{"priority": 1.9}"#).unwrap();
+        assert!(GenOptions::from_json(&j).is_err());
+        let j = Json::parse(r#"{"stop_tokens": [4.2]}"#).unwrap();
+        assert!(GenOptions::from_json(&j).is_err());
+        let j = Json::parse(r#"{"gamma_cap": -1}"#).unwrap();
+        assert!(GenOptions::from_json(&j).is_err());
+        let j = Json::parse(r#"{"stop": "notanarray"}"#).unwrap();
+        assert!(GenOptions::from_json(&j).is_err());
+        let j = Json::parse(r#"{"slo": "gold"}"#).unwrap();
+        assert!(GenOptions::from_json(&j).is_err());
+        let j = Json::parse(r#"{"sampling": {"mode":"fast"}}"#).unwrap();
+        assert!(GenOptions::from_json(&j).is_err());
+        assert!(GenOptions::from_json(&Json::parse("3").unwrap()).is_err());
+    }
+
+    #[test]
+    fn validation_ranges() {
+        let bad_temp = GenOptions {
+            sampling: SamplingMode::Stochastic { temperature: 0.0, seed: 1 },
+            ..GenOptions::default()
+        };
+        assert!(bad_temp.validate().is_err());
+        let bad_max = GenOptions { max_new: Some(0), ..GenOptions::default() };
+        assert!(bad_max.validate().is_err());
+        let bad_deadline = GenOptions { deadline_s: Some(-1.0), ..GenOptions::default() };
+        assert!(bad_deadline.validate().is_err());
+        let j = Json::parse(r#"{"deadline_ms": 250}"#).unwrap();
+        let o = GenOptions::from_json(&j).unwrap();
+        assert!((o.deadline_s.unwrap() - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sampling_defaults_fill_in() {
+        let j = Json::parse(r#"{"mode":"stochastic"}"#).unwrap();
+        let s = SamplingMode::from_json(&j).unwrap();
+        assert_eq!(s, SamplingMode::Stochastic { temperature: 1.0, seed: 0x5EED });
+    }
+
+    #[test]
+    fn finish_reason_strings_roundtrip() {
+        for r in FinishReason::all() {
+            assert_eq!(FinishReason::parse(r.as_str()).unwrap(), r);
+        }
+        assert!(FinishReason::parse("nope").is_err());
+        assert_eq!(FinishReason::default(), FinishReason::Length);
+        // Indices are dense and unique.
+        let mut seen = [false; NUM_FINISH_REASONS];
+        for r in FinishReason::all() {
+            assert!(!seen[r.index()]);
+            seen[r.index()] = true;
+        }
+    }
+
+    #[test]
+    fn request_conversion_keeps_fields() {
+        let r = Request {
+            id: 7,
+            task: "translate".into(),
+            prompt: vec![1, 2, 3],
+            truth: "x".into(),
+            arrival_s: 1.5,
+        };
+        let g: GenerationRequest = r.into();
+        assert_eq!(g.id, 7);
+        assert_eq!(g.task, "translate");
+        assert_eq!(g.prompt, vec![1, 2, 3]);
+        assert_eq!(g.options, GenOptions::default());
+    }
+}

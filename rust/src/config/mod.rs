@@ -134,8 +134,14 @@ pub struct RunConfig {
     /// homogeneous mapping — online re-partitioning is then inert (there
     /// is exactly one permitted mapping per design variant).
     pub heterogeneous: bool,
-    /// Max new tokens per request.
+    /// Max new tokens per request (the default when a request's
+    /// `GenOptions` carries no `max_new` override).
     pub max_new_tokens: usize,
+    /// Server-side ceiling on a request's `max_new` *override* (API v2):
+    /// client-requested budgets are clamped into `1..=max_new_limit`, so
+    /// one request can't monopolize a worker. Does not constrain
+    /// `max_new_tokens` itself.
+    pub max_new_limit: usize,
     /// Serving: number of engine workers.
     pub workers: usize,
     /// Serving: TCP port.
@@ -195,6 +201,7 @@ impl Default for RunConfig {
             design_variant: 1,
             heterogeneous: true,
             max_new_tokens: 64,
+            max_new_limit: 1024,
             workers: 1,
             port: 7643,
             queue_capacity: 256,
@@ -253,6 +260,9 @@ impl RunConfig {
         if let Some(v) = j.get("max_new_tokens").and_then(Json::as_usize) {
             self.max_new_tokens = v;
         }
+        if let Some(v) = j.get("max_new_limit").and_then(Json::as_usize) {
+            self.max_new_limit = v;
+        }
         if let Some(v) = j.get("workers").and_then(Json::as_usize) {
             self.workers = v;
         }
@@ -298,6 +308,7 @@ impl RunConfig {
             "design_variant must be 1..=6 (CPU core count on the i.MX95)"
         );
         anyhow::ensure!(self.workers >= 1, "workers must be >= 1");
+        anyhow::ensure!(self.max_new_limit >= 1, "max_new_limit must be >= 1");
         anyhow::ensure!(self.max_batch >= 1, "max_batch must be >= 1");
         anyhow::ensure!(self.max_inflight >= 1, "max_inflight must be >= 1");
         if let Some(g) = self.gamma {
@@ -366,6 +377,16 @@ mod tests {
     #[test]
     fn fuse_defaults_on() {
         assert!(RunConfig::default().fuse);
+    }
+
+    #[test]
+    fn max_new_limit_parses_and_validates() {
+        assert_eq!(RunConfig::default().max_new_limit, 1024);
+        let mut c = RunConfig::default();
+        c.apply_json(&Json::parse(r#"{"max_new_limit":128}"#).unwrap()).unwrap();
+        assert_eq!(c.max_new_limit, 128);
+        let mut c = RunConfig::default();
+        assert!(c.apply_json(&Json::parse(r#"{"max_new_limit":0}"#).unwrap()).is_err());
     }
 
     #[test]

@@ -31,7 +31,11 @@ use crate::tokenizer::EOS_ID;
 #[derive(Debug, Clone)]
 pub struct BatchItemOutcome {
     pub tokens: Vec<u32>,
+    /// Shared decode steps this request was live for (its lockstep
+    /// "rounds" — one token attempt per step).
     pub target_calls: usize,
+    /// The sequence ended on EOS (vs running out of budget/bucket).
+    pub eos: bool,
     pub real_s: f64,
     /// Simulated seconds attributed to this item: executed `exec_b`-lane
     /// dispatch cost / `b` real requests (see the module-level
@@ -74,7 +78,13 @@ pub fn batched_baseline(
     }
     let mut done = vec![false; b];
     let mut out: Vec<BatchItemOutcome> = (0..b)
-        .map(|_| BatchItemOutcome { tokens: vec![], target_calls: 0, real_s: 0.0, sim_s: 0.0 })
+        .map(|_| BatchItemOutcome {
+            tokens: vec![],
+            target_calls: 0,
+            eos: false,
+            real_s: 0.0,
+            sim_s: 0.0,
+        })
         .collect();
 
     for _ in 0..max_new {
@@ -112,6 +122,7 @@ pub fn batched_baseline(
             let pos = seqs[i].len() - 1;
             let nxt = fwd.argmax(i, pos);
             if nxt == EOS_ID || seqs[i].len() + 1 >= max_total {
+                out[i].eos = nxt == EOS_ID;
                 done[i] = true;
                 continue;
             }

@@ -1,12 +1,16 @@
 //! The serving coordinator — Layer 3's vLLM-router-shaped core.
 //!
-//! * [`queue`] — bounded request queue with backpressure (reject-on-full)
+//! * [`queue`] — bounded priority queue with backpressure (reject-on-full):
+//!   `Interactive` before `Batch`, higher priority first, FIFO within a
+//!   level; queued items carry cancel/deadline state so the worker sheds
+//!   dead requests at admission
 //! * [`policy`] — the routing [`Policy`] (now the decision engine in
 //!   [`crate::decision`]): per-task α estimates feed the configured cost
 //!   model (analytic or calibrated), which picks speculation on/off and
 //!   γ* — at admission *and again between every speculation round* of a
-//!   live session — and, in calibrated mode, periodically re-partitions
-//!   the mapping for future admissions
+//!   live session, clamped against the request's advisory
+//!   [`SpecHints`](crate::decision::SpecHints) — and, in calibrated mode,
+//!   periodically re-partitions the mapping for future admissions
 //! * [`fuser`] — the cross-session fused batch executor: every scheduler
 //!   tick collects all live sessions' pending
 //!   [`EngineRequest`](crate::spec::EngineRequest)s, dispatches each
@@ -21,10 +25,22 @@
 //!   running a tick-level scheduler over up to `max_inflight` resumable
 //!   [`DecodeSession`](crate::spec::DecodeSession)s
 //!
-//! Flow: client → [`Coordinator::submit`] / [`Coordinator::submit_streaming`]
-//! → queue → worker (policy → fused session ticks) → token frames + final
-//! response; metrics are recorded centrally per round, per dispatch and
-//! per request.
+//! Flow: client → [`Coordinator::submit`] → [`RequestHandle`] → queue →
+//! worker (policy → fused session ticks) → token frames + final response;
+//! metrics are recorded centrally per round, per dispatch and per request.
+//!
+//! **Request lifecycle (API v2).** `submit` takes one
+//! [`GenerationRequest`] (a bare workload `Request` converts with default
+//! options) and returns a [`RequestHandle`]: [`wait`](RequestHandle::wait)
+//! for the final [`EngineResponse`], [`frames`](RequestHandle::frames) /
+//! [`try_frame`](RequestHandle::try_frame) for round-by-round streaming,
+//! [`cancel`](RequestHandle::cancel) to abort. Cancellation and deadline
+//! expiry take effect at the next *round boundary* of the live session:
+//! the scheduler slot frees immediately for queued work and the response
+//! carries the tokens committed so far with a typed
+//! [`FinishReason`](crate::api::FinishReason). Submission never blocks
+//! and never errors: backpressure comes back through the handle as a
+//! `Rejected` response.
 
 pub mod batcher;
 pub mod fuser;
@@ -32,14 +48,15 @@ pub mod policy;
 pub mod queue;
 pub mod worker;
 
+use crate::api::{FinishReason, GenerationRequest};
 use crate::config::RunConfig;
 use crate::hetero::Platform;
 use crate::metrics::Metrics;
-use crate::workload::Request;
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{mpsc, Arc};
+use std::sync::{mpsc, Arc, Mutex};
 
-pub use policy::{Policy, RouteDecision};
+pub use policy::{Policy, RouteDecision, SpecHints};
 pub use queue::{QueueItem, RequestQueue};
 
 /// Response for one request.
@@ -55,8 +72,33 @@ pub struct EngineResponse {
     pub speculative: bool,
     /// γ decided at admission (per-round choices are in the metrics).
     pub gamma: usize,
-    /// Scheduler rounds this request took (0 on the batched path).
+    /// Scheduler rounds this request took (lockstep-batched baseline
+    /// requests count one round per shared decode step).
     pub rounds: usize,
+    /// Why the request ended (typed; `Rejected` responses carry no
+    /// tokens, `Cancelled`/`DeadlineExceeded` carry the tokens committed
+    /// before the round-boundary abort).
+    pub finish: FinishReason,
+}
+
+impl EngineResponse {
+    /// Response for a request that never decoded (rejection at submit,
+    /// or shedding at admission).
+    pub(crate) fn shed(id: u64, queue_s: f64, finish: FinishReason) -> EngineResponse {
+        EngineResponse {
+            id,
+            tokens: Vec::new(),
+            completion: String::new(),
+            sim_s: 0.0,
+            real_s: 0.0,
+            queue_s,
+            alpha: f64::NAN,
+            speculative: false,
+            gamma: 0,
+            rounds: 0,
+            finish,
+        }
+    }
 }
 
 /// One round's incremental output for a streaming request.
@@ -77,11 +119,151 @@ pub struct TokenFrame {
     pub done: bool,
 }
 
+/// Live-request cancellation flags, keyed by request id, so cancellation
+/// can reach a request from *any* context (another connection's
+/// `{"cmd":"cancel"}`, a different thread holding only the id). Entries
+/// are removed by the [`CancelGuard`] when the request's queue item /
+/// live session is dropped. Ids are a shared namespace and *should* be
+/// unique; if a caller reuses a live id anyway, the entry holds every
+/// matching flag and a cancel fires all of them (best-effort — no
+/// request is ever left silently uncancellable).
+#[derive(Default)]
+pub struct CancelRegistry {
+    inner: Mutex<HashMap<u64, Vec<Arc<AtomicBool>>>>,
+}
+
+impl CancelRegistry {
+    fn register(&self, id: u64, flag: &Arc<AtomicBool>) {
+        self.inner
+            .lock()
+            .unwrap()
+            .entry(id)
+            .or_default()
+            .push(Arc::clone(flag));
+    }
+
+    /// Flag the request(s) under `id` cancelled; false when the id is
+    /// unknown (never submitted, or already finished).
+    pub fn cancel(&self, id: u64) -> bool {
+        match self.inner.lock().unwrap().get(&id) {
+            Some(flags) => {
+                for f in flags {
+                    f.store(true, Ordering::SeqCst);
+                }
+                !flags.is_empty()
+            }
+            None => false,
+        }
+    }
+
+    /// Remove exactly this request's `flag` from `id`'s entry (a re-used
+    /// id must not evict another live request's flag).
+    fn remove(&self, id: u64, flag: &Arc<AtomicBool>) {
+        let mut m = self.inner.lock().unwrap();
+        if let Some(flags) = m.get_mut(&id) {
+            flags.retain(|f| !Arc::ptr_eq(f, flag));
+            if flags.is_empty() {
+                m.remove(&id);
+            }
+        }
+    }
+}
+
+/// A request's cancellation flag plus registry cleanup-on-drop. Travels
+/// with the request through the queue into the worker's live set; when it
+/// drops (request answered, or its channels torn down), the registry
+/// entry goes with it.
+pub struct CancelGuard {
+    id: u64,
+    flag: Arc<AtomicBool>,
+    registry: Option<Arc<CancelRegistry>>,
+}
+
+impl CancelGuard {
+    /// A flag registered with a coordinator's registry.
+    fn registered(id: u64, flag: Arc<AtomicBool>, registry: Arc<CancelRegistry>) -> CancelGuard {
+        registry.register(id, &flag);
+        CancelGuard { id, flag, registry: Some(registry) }
+    }
+
+    /// A free-standing flag (tests, benches, drivers that never cancel).
+    pub fn detached() -> CancelGuard {
+        CancelGuard { id: 0, flag: Arc::new(AtomicBool::new(false)), registry: None }
+    }
+
+    pub fn cancelled(&self) -> bool {
+        self.flag.load(Ordering::SeqCst)
+    }
+
+    /// The underlying flag (shared with the request's [`RequestHandle`]).
+    pub fn flag(&self) -> &Arc<AtomicBool> {
+        &self.flag
+    }
+}
+
+impl Drop for CancelGuard {
+    fn drop(&mut self) {
+        if let Some(reg) = &self.registry {
+            reg.remove(self.id, &self.flag);
+        }
+    }
+}
+
+/// Caller-side handle for one submitted request: streaming frames, the
+/// final response, and cancellation.
+pub struct RequestHandle {
+    id: u64,
+    cancel: Arc<AtomicBool>,
+    frames: mpsc::Receiver<TokenFrame>,
+    response: mpsc::Receiver<EngineResponse>,
+}
+
+impl RequestHandle {
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Request cancellation. Takes effect at the next round boundary of
+    /// the live session (or at admission if still queued); the final
+    /// response arrives with [`FinishReason::Cancelled`] and the tokens
+    /// committed so far. Idempotent; a no-op after completion.
+    pub fn cancel(&self) {
+        self.cancel.store(true, Ordering::SeqCst);
+    }
+
+    /// Block for the final [`EngineResponse`]. Errors only if the worker
+    /// died without answering (dropped channel).
+    pub fn wait(&self) -> anyhow::Result<EngineResponse> {
+        self.response
+            .recv()
+            .map_err(|_| anyhow::anyhow!("worker dropped the request"))
+    }
+
+    /// Non-blocking check for the final response.
+    pub fn try_wait(&self) -> Option<EngineResponse> {
+        self.response.try_recv().ok()
+    }
+
+    /// Non-blocking poll for the next streamed [`TokenFrame`].
+    pub fn try_frame(&self) -> Option<TokenFrame> {
+        self.frames.try_recv().ok()
+    }
+
+    /// Blocking iterator over streamed frames; ends when the request
+    /// retires (after a frame with `done: true`, or immediately for
+    /// requests that never decoded). [`wait`](Self::wait) afterwards for
+    /// the final response.
+    pub fn frames(&self) -> mpsc::Iter<'_, TokenFrame> {
+        self.frames.iter()
+    }
+}
+
 /// Running coordinator: queue + worker pool + metrics.
 pub struct Coordinator {
     queue: Arc<RequestQueue>,
     pub metrics: Arc<Metrics>,
     pub policy: Arc<Policy>,
+    cancels: Arc<CancelRegistry>,
     shutdown: Arc<AtomicBool>,
     handles: Vec<std::thread::JoinHandle<()>>,
 }
@@ -121,56 +303,66 @@ impl Coordinator {
                 .recv()
                 .map_err(|_| anyhow::anyhow!("worker died during startup"))??;
         }
-        Ok(Coordinator { queue, metrics, policy, shutdown, handles })
+        Ok(Coordinator {
+            queue,
+            metrics,
+            policy,
+            cancels: Arc::new(CancelRegistry::default()),
+            shutdown,
+            handles,
+        })
     }
 
-    /// Submit a request; returns the response receiver, or Err on
-    /// backpressure (queue full).
-    pub fn submit(
-        &self,
-        req: Request,
-    ) -> anyhow::Result<mpsc::Receiver<EngineResponse>> {
-        self.enqueue(req, None)
-    }
-
-    /// Submit with incremental output: tokens arrive round-by-round on the
-    /// frame receiver as the scheduler commits them, then the final
-    /// [`EngineResponse`] on the response receiver.
-    pub fn submit_streaming(
-        &self,
-        req: Request,
-    ) -> anyhow::Result<(mpsc::Receiver<TokenFrame>, mpsc::Receiver<EngineResponse>)> {
+    /// Submit one request (a bare workload `Request` converts with
+    /// default [`GenOptions`](crate::api::GenOptions)) and get its
+    /// [`RequestHandle`]. Never blocks, never errors: on backpressure
+    /// (queue full or shutting down) the handle resolves immediately to
+    /// a [`FinishReason::Rejected`] response with no tokens.
+    pub fn submit(&self, req: impl Into<GenerationRequest>) -> RequestHandle {
+        let req: GenerationRequest = req.into();
+        let id = req.id;
         let (ftx, frx) = mpsc::channel();
-        let rx = self.enqueue(req, Some(ftx))?;
-        Ok((frx, rx))
-    }
-
-    fn enqueue(
-        &self,
-        req: Request,
-        token_tx: Option<mpsc::Sender<TokenFrame>>,
-    ) -> anyhow::Result<mpsc::Receiver<EngineResponse>> {
         let (tx, rx) = mpsc::channel();
-        let item = QueueItem {
-            request: req,
-            enqueued: std::time::Instant::now(),
-            respond: tx,
-            token_tx,
+        let guard = CancelGuard::registered(
+            id,
+            Arc::new(AtomicBool::new(false)),
+            Arc::clone(&self.cancels),
+        );
+        let handle = RequestHandle {
+            id,
+            cancel: Arc::clone(guard.flag()),
+            frames: frx,
+            response: rx,
         };
-        match self.queue.push(item) {
-            Ok(()) => Ok(rx),
-            Err(_) => {
-                self.metrics.record_rejected();
-                anyhow::bail!("queue full (backpressure)")
+        let slo = req.options.slo;
+        let had_deadline = req.options.deadline_s.is_some();
+        let item = QueueItem::with_cancel(req, tx, Some(ftx), guard);
+        if let Err(item) = self.queue.push(item) {
+            // Backpressure (or closed): answer through the handle so every
+            // submission resolves to a typed FinishReason. Dropping the
+            // item's frame sender ends the (empty) frame stream.
+            self.metrics.record_rejected();
+            self.metrics.record_finish(FinishReason::Rejected);
+            self.metrics.record_slo(slo);
+            if had_deadline {
+                // A deadline-carrying request bounced by backpressure
+                // missed its deadline — overload is exactly when the
+                // miss rate must not read low.
+                self.metrics.record_deadline(true);
             }
+            let _ = item
+                .respond
+                .send(EngineResponse::shed(id, 0.0, FinishReason::Rejected));
         }
+        handle
     }
 
-    /// Convenience: submit and block for the response.
-    pub fn submit_blocking(&self, req: Request) -> anyhow::Result<EngineResponse> {
-        let rx = self.submit(req)?;
-        rx.recv()
-            .map_err(|_| anyhow::anyhow!("worker dropped the request"))
+    /// Cancel a request by id (the cross-context path — the v2 wire
+    /// protocol's `{"cmd":"cancel"}` lands here). Returns false for
+    /// unknown/already-finished ids. Same round-boundary semantics as
+    /// [`RequestHandle::cancel`].
+    pub fn cancel(&self, id: u64) -> bool {
+        self.cancels.cancel(id)
     }
 
     /// Drain and stop all workers.
@@ -184,5 +376,9 @@ impl Coordinator {
 
     pub fn queue_len(&self) -> usize {
         self.queue.len()
+    }
+
+    pub fn queue_capacity(&self) -> usize {
+        self.queue.capacity()
     }
 }

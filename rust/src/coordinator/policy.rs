@@ -3,4 +3,4 @@
 //! Re-exported here so historical `coordinator::policy` paths keep
 //! working.
 
-pub use crate::decision::{Policy, RouteDecision};
+pub use crate::decision::{Policy, RouteDecision, SpecHints};

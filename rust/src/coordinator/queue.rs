@@ -1,25 +1,90 @@
 //! Bounded MPMC request queue with blocking pop and reject-on-full push —
 //! the backpressure point of the serving pipeline.
+//!
+//! Since the request-lifecycle API v2 the queue is *priority-ordered*:
+//! items are admitted `Interactive` before `Batch`
+//! ([`SloClass`](crate::api::SloClass)), higher
+//! [`priority`](crate::api::GenOptions::priority) first within a class,
+//! FIFO within equal keys — so default-option traffic (everything
+//! `Interactive` at priority 0) pops in exactly the seed FIFO order.
+//! Queued items also carry their request's lifecycle state: the worker
+//! consults [`QueueItem::cancelled`] and [`QueueItem::deadline_expired`]
+//! at admission and sheds dead items instead of decoding for nobody
+//! (deadline-based admission shedding).
 
-use crate::workload::Request;
-use std::collections::VecDeque;
+use crate::api::GenerationRequest;
 use std::sync::{mpsc, Condvar, Mutex};
 use std::time::Instant;
 
-/// A queued request plus its response channel(s).
+use super::CancelGuard;
+
+/// A queued request plus its response channel(s) and lifecycle state.
 pub struct QueueItem {
-    pub request: Request,
+    pub request: GenerationRequest,
     pub enqueued: Instant,
+    /// FIFO tiebreak within an (SLO class, priority) level, assigned by
+    /// the queue at push time.
+    seq: u64,
     pub respond: mpsc::Sender<super::EngineResponse>,
-    /// Optional incremental channel: the worker emits one [`TokenFrame`]
-    /// per round as tokens commit (streaming responses).
+    /// Incremental channel: the worker emits one [`TokenFrame`] per round
+    /// as tokens commit (every handle gets one; `None` only for callers
+    /// that explicitly opt out).
     ///
     /// [`TokenFrame`]: super::TokenFrame
     pub token_tx: Option<mpsc::Sender<super::TokenFrame>>,
+    /// Cancellation flag + registry cleanup guard.
+    pub cancel: CancelGuard,
 }
 
-/// Bounded FIFO. `push` fails when full (callers surface 429-style
-/// rejection); `pop` blocks until an item arrives or the queue is closed.
+impl QueueItem {
+    /// Item with a detached (un-registered) cancellation flag — tests,
+    /// benches and drivers that never cancel.
+    pub fn new(
+        request: GenerationRequest,
+        respond: mpsc::Sender<super::EngineResponse>,
+        token_tx: Option<mpsc::Sender<super::TokenFrame>>,
+    ) -> QueueItem {
+        Self::with_cancel(request, respond, token_tx, CancelGuard::detached())
+    }
+
+    /// Item wired to a coordinator-registered cancellation guard.
+    pub fn with_cancel(
+        request: GenerationRequest,
+        respond: mpsc::Sender<super::EngineResponse>,
+        token_tx: Option<mpsc::Sender<super::TokenFrame>>,
+        cancel: CancelGuard,
+    ) -> QueueItem {
+        QueueItem { request, enqueued: Instant::now(), seq: 0, respond, token_tx, cancel }
+    }
+
+    /// The request was cancelled while queued.
+    pub fn cancelled(&self) -> bool {
+        self.cancel.cancelled()
+    }
+
+    /// The request's deadline expired before admission (queueing delay
+    /// alone already exceeds the budget — nothing decodable remains).
+    pub fn deadline_expired(&self) -> bool {
+        match self.request.options.deadline_s {
+            Some(d) => self.enqueued.elapsed().as_secs_f64() >= d,
+            None => false,
+        }
+    }
+
+    /// Admission order: SLO class first (`Interactive` before `Batch`),
+    /// then descending priority, then FIFO.
+    fn order_key(&self) -> (u8, i64, u64) {
+        (
+            self.request.options.slo.index() as u8,
+            -(self.request.options.priority as i64),
+            self.seq,
+        )
+    }
+}
+
+/// Bounded priority queue. `push` fails when full (callers surface
+/// 429-style rejection); `pop` blocks until an item arrives or the queue
+/// is closed.
 pub struct RequestQueue {
     inner: Mutex<Inner>,
     not_empty: Condvar,
@@ -27,26 +92,50 @@ pub struct RequestQueue {
 }
 
 struct Inner {
-    items: VecDeque<QueueItem>,
+    /// Sorted *descending* by [`QueueItem::order_key`], so the next item
+    /// to admit (the minimum key) sits at the back: `Vec::pop` keeps
+    /// every pop O(1) while inserts pay the O(n) shift — the right trade
+    /// for a pop-heavy serving queue.
+    items: Vec<QueueItem>,
+    next_seq: u64,
     closed: bool,
+}
+
+impl Inner {
+    /// Next item in admission order (the minimum key, kept at the back).
+    fn take_next(&mut self) -> Option<QueueItem> {
+        self.items.pop()
+    }
 }
 
 impl RequestQueue {
     pub fn new(capacity: usize) -> RequestQueue {
         RequestQueue {
-            inner: Mutex::new(Inner { items: VecDeque::new(), closed: false }),
+            inner: Mutex::new(Inner { items: Vec::new(), next_seq: 0, closed: false }),
             not_empty: Condvar::new(),
             capacity,
         }
     }
 
-    /// Non-blocking push; Err(item) when full or closed.
-    pub fn push(&self, item: QueueItem) -> Result<(), QueueItem> {
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Non-blocking push; Err(item) when full or closed. The item is
+    /// inserted at its priority position (FIFO within equal keys).
+    pub fn push(&self, mut item: QueueItem) -> Result<(), QueueItem> {
         let mut g = self.inner.lock().unwrap();
         if g.closed || g.items.len() >= self.capacity {
             return Err(item);
         }
-        g.items.push_back(item);
+        item.seq = g.next_seq;
+        g.next_seq += 1;
+        let key = item.order_key();
+        // Descending order, FIFO within a level: the fresh item's seq
+        // makes its key strictly larger than equal-level incumbents', so
+        // it lands in front of them and pops after them.
+        let pos = g.items.partition_point(|it| it.order_key() > key);
+        g.items.insert(pos, item);
         drop(g);
         self.not_empty.notify_one();
         Ok(())
@@ -56,7 +145,7 @@ impl RequestQueue {
     pub fn pop(&self) -> Option<QueueItem> {
         let mut g = self.inner.lock().unwrap();
         loop {
-            if let Some(item) = g.items.pop_front() {
+            if let Some(item) = g.take_next() {
                 return Some(item);
             }
             if g.closed {
@@ -70,7 +159,7 @@ impl RequestQueue {
     /// round-level scheduler tops up in-flight sessions between rounds
     /// without stalling the ones already live).
     pub fn try_pop(&self) -> Option<QueueItem> {
-        self.inner.lock().unwrap().items.pop_front()
+        self.inner.lock().unwrap().take_next()
     }
 
     /// Pop up to `max` items without blocking beyond the first (dynamic
@@ -84,7 +173,7 @@ impl RequestQueue {
         if max > 1 {
             let mut g = self.inner.lock().unwrap();
             while batch.len() < max {
-                match g.items.pop_front() {
+                match g.take_next() {
                     Some(i) => batch.push(i),
                     None => break,
                 }
@@ -110,22 +199,32 @@ impl RequestQueue {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::api::{GenOptions, SloClass};
+    use crate::workload::Request;
     use std::sync::Arc;
+
+    fn request(id: u64) -> Request {
+        Request {
+            id,
+            task: "t".into(),
+            prompt: vec![1],
+            truth: String::new(),
+            arrival_s: 0.0,
+        }
+    }
 
     fn item(id: u64) -> QueueItem {
         let (tx, _rx) = mpsc::channel();
-        QueueItem {
-            request: Request {
-                id,
-                task: "t".into(),
-                prompt: vec![1],
-                truth: String::new(),
-                arrival_s: 0.0,
-            },
-            enqueued: Instant::now(),
-            respond: tx,
-            token_tx: None,
-        }
+        QueueItem::new(request(id).into(), tx, None)
+    }
+
+    fn item_with(id: u64, options: GenOptions) -> QueueItem {
+        let (tx, _rx) = mpsc::channel();
+        QueueItem::new(
+            crate::api::GenerationRequest::from(request(id)).with_options(options),
+            tx,
+            None,
+        )
     }
 
     #[test]
@@ -135,6 +234,58 @@ mod tests {
         q.push(item(2)).ok().unwrap();
         assert_eq!(q.pop().unwrap().request.id, 1);
         assert_eq!(q.pop().unwrap().request.id, 2);
+    }
+
+    #[test]
+    fn priority_admits_high_before_earlier_low() {
+        let q = RequestQueue::new(10);
+        q.push(item_with(1, GenOptions { priority: -1, ..GenOptions::default() }))
+            .ok()
+            .unwrap();
+        q.push(item_with(2, GenOptions { priority: -1, ..GenOptions::default() }))
+            .ok()
+            .unwrap();
+        // A later high-priority arrival jumps both earlier ones.
+        q.push(item_with(3, GenOptions { priority: 5, ..GenOptions::default() }))
+            .ok()
+            .unwrap();
+        // Default priority (0) sits between.
+        q.push(item(4)).ok().unwrap();
+        let order: Vec<u64> = (0..4).map(|_| q.pop().unwrap().request.id).collect();
+        assert_eq!(order, vec![3, 4, 1, 2]);
+    }
+
+    #[test]
+    fn interactive_class_outranks_batch_priority() {
+        let q = RequestQueue::new(10);
+        q.push(item_with(
+            1,
+            GenOptions { slo: SloClass::Batch, priority: 100, ..GenOptions::default() },
+        ))
+        .ok()
+        .unwrap();
+        q.push(item_with(
+            2,
+            GenOptions { slo: SloClass::Interactive, priority: -100, ..GenOptions::default() },
+        ))
+        .ok()
+        .unwrap();
+        // Interactive admits first regardless of numeric priority.
+        assert_eq!(q.pop().unwrap().request.id, 2);
+        assert_eq!(q.pop().unwrap().request.id, 1);
+    }
+
+    #[test]
+    fn lifecycle_helpers() {
+        let it = item_with(1, GenOptions { deadline_s: Some(0.0), ..GenOptions::default() });
+        assert!(it.deadline_expired(), "zero deadline expires immediately");
+        let it = item_with(2, GenOptions { deadline_s: Some(1e9), ..GenOptions::default() });
+        assert!(!it.deadline_expired());
+        let it = item(3);
+        assert!(!it.deadline_expired(), "no deadline never expires");
+        assert!(!it.cancelled());
+        it.cancel.flag().store(true, std::sync::atomic::Ordering::SeqCst);
+        assert!(it.cancelled());
     }
 
     #[test]

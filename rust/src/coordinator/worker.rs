@@ -6,12 +6,21 @@
 //! advances all of them together through the fused batch executor
 //! ([`super::fuser`]), one engine call per session per tick:
 //!
-//! 1. **admit** — top the in-flight set up from the queue (blocking only
-//!    when nothing is live);
-//! 2. **consult** — re-run the routing [`Policy`] for every live session
-//!    *at a round boundary*, so γ and speculate-on/off are re-decided per
-//!    round from the session's running α (the cost model in the hot loop);
-//! 3. **tick** — every live session plans its next forward; the fuser
+//! 1. **reap** — at round boundaries, abort sessions whose request was
+//!    cancelled or whose deadline expired: the scheduler slot frees for
+//!    queued work and the response carries the tokens committed so far
+//!    with a typed [`FinishReason`];
+//! 2. **admit** — top the in-flight set up from the priority queue
+//!    (blocking only when nothing is live), shedding items already
+//!    cancelled or past deadline instead of decoding for nobody, and
+//!    applying the request's [`GenOptions`] (per-request `max_new`,
+//!    sampling mode/temperature/seed, stop conditions, speculation
+//!    hints) to the new session;
+//! 3. **consult** — re-run the routing [`Policy`] for every live session
+//!    *at a round boundary*, clamped against the request's advisory
+//!    [`SpecHints`], so γ and speculate-on/off are re-decided per round
+//!    from the session's running α (the cost model in the hot loop);
+//! 4. **tick** — every live session plans its next forward; the fuser
 //!    groups compatible requests into shared batched dispatches — one
 //!    dispatch group per routed PU — scatters the logits back, and
 //!    schedules each dispatch on the worker's per-PU timelines
@@ -20,9 +29,13 @@
 //!    verify forwards on the other; off, a serialized single-clock
 //!    timeline reproduces the pre-overlap behavior (`cfg.fuse = false`
 //!    reverts to per-session stepping for A/B comparisons);
-//! 4. **retire** — sessions whose round completed stream their newly
+//! 5. **retire** — sessions whose round completed stream their newly
 //!    committed tokens; finished sessions emit the final
-//!    [`EngineResponse`].
+//!    [`EngineResponse`] with its [`FinishReason`].
+//!
+//! **Deadline clock.** A request's `deadline_s` is charged real queueing
+//! delay plus *simulated* decode seconds (the paper-comparable latency),
+//! so deadline behavior is deterministic under the simulated platform.
 //!
 //! The lockstep batcher configuration (`max_batch > 1`, baseline decode)
 //! is folded onto the same executor: those workers admit up to
@@ -31,14 +44,22 @@
 //! — recovering batched baseline decode without the lockstep drain tail.
 //! With `fuse: false` that configuration instead runs the legacy lockstep
 //! [`batcher`](super::batcher) loop, the true pre-fusion A/B baseline.
+//! Lifecycle state reaches that path at batch *boundaries*: dead items
+//! are shed before the batch forms, requests whose options shape the
+//! decode (per-request `max_new`, stops, sampling) are peeled off onto
+//! the single-session path so typed options are never silently dropped,
+//! and cancellation of a batched request takes effect between batches.
 
+use crate::api::{FinishReason, GenOptions, SamplingMode};
 use crate::config::{DecisionMode, KernelPath, RunConfig};
+use crate::decision::SpecHints;
 use crate::hetero::{LatencyModel, Platform, PuTimelines, TimelineSnapshot};
 use crate::metrics::{Metrics, RequestRecord, RoundRecord};
 use crate::models::ModelSpec;
 use crate::runtime::Engine;
 use crate::spec::{AcceptRule, DecodeSession, DecoderSetup, StepOutcome};
 use crate::tokenizer::Tokenizer;
+use crate::util::rng::Rng;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc};
 
@@ -46,7 +67,7 @@ use super::batcher;
 use super::fuser::{self, TickEvent};
 use super::policy::Policy;
 use super::queue::{QueueItem, RequestQueue};
-use super::{EngineResponse, TokenFrame};
+use super::{CancelGuard, EngineResponse, TokenFrame};
 
 /// One live request inside the worker's scheduler.
 struct LiveSession {
@@ -55,15 +76,47 @@ struct LiveSession {
     token_tx: Option<mpsc::Sender<TokenFrame>>,
     id: u64,
     task: String,
+    /// The request's typed options (deadline/SLO accounting at retire).
+    options: GenOptions,
+    /// Advisory speculation hints extracted from the options, applied to
+    /// every policy consult.
+    hints: SpecHints,
+    /// Cancellation flag (+ registry cleanup when this session drops).
+    cancel: CancelGuard,
     /// Queue delay, measured at admission.
     queue_s: f64,
     /// Admission-time decision (reported in the final response).
     admitted_speculative: bool,
     admitted_gamma: usize,
     rounds: usize,
+    /// Streaming hold-back (longest stop sequence − 1): trailing tokens
+    /// that could still become part of a stop-sequence match are withheld
+    /// from frames, so a cross-round match never truncates tokens a
+    /// client has already seen — streamed frames always reassemble the
+    /// final response exactly. 0 when the request has no stop sequences.
+    stream_holdback: usize,
+    /// Output tokens streamed so far (frames carry `tokens[streamed..]`
+    /// up to the hold-back horizon).
+    streamed: usize,
     /// Simulated timeline position at admission (per-PU timeline mode):
     /// per-request timeline latency = session finish − this.
     tl_admit_s: f64,
+}
+
+impl LiveSession {
+    /// Why this session must abort at the next round boundary (None =
+    /// keep decoding). Cancellation outranks deadline expiry.
+    fn abort_reason(&self) -> Option<FinishReason> {
+        if self.cancel.cancelled() {
+            return Some(FinishReason::Cancelled);
+        }
+        if let Some(d) = self.options.deadline_s {
+            if self.queue_s + self.session.outcome().sim_s >= d {
+                return Some(FinishReason::DeadlineExceeded);
+            }
+        }
+        None
+    }
 }
 
 /// Worker main loop (runs on its own thread).
@@ -142,9 +195,32 @@ pub fn run_worker(
     // batches decode in lockstep, drained before the next admit).
     if !cfg.fuse && cfg.max_batch > 1 && !cfg.speculative {
         while !shutdown.load(Ordering::SeqCst) {
-            let batch = queue.pop_batch(cfg.max_batch);
-            if batch.is_empty() {
+            let popped = queue.pop_batch(cfg.max_batch);
+            if popped.is_empty() {
                 break; // queue closed
+            }
+            // Shed items whose request died while queued before spending
+            // a whole lockstep decode on them, and peel off requests
+            // whose options shape the decode itself (max_new / stops /
+            // sampling): the shared lockstep loop can't honor those, so
+            // they run on the session path where every option applies —
+            // strictly-validated options must never be silently dropped.
+            let mut batch = Vec::with_capacity(popped.len());
+            for item in popped {
+                if let Some(reason) = shed_reason(&item) {
+                    respond_shed(&metrics, item, reason);
+                } else if has_decode_options(&item.request.options) {
+                    let ls = admit(&cfg, &engine, &lat, &policy, &metrics, &tokenizer,
+                                   &d_spec, &t_spec, item, drafter, target,
+                                   cfg.kernel_path);
+                    serve_single(&engine, &policy, &metrics, &tokenizer,
+                                 &d_spec, &t_spec, ls);
+                } else {
+                    batch.push(item);
+                }
+            }
+            if batch.is_empty() {
+                continue;
             }
             if batch.len() == 1 {
                 // Lone request under low traffic: the session path on the
@@ -152,8 +228,8 @@ pub fn run_worker(
                 // streaming/metrics behavior — exactly as before batching
                 // kicks in.
                 let item = batch.into_iter().next().unwrap();
-                let ls = admit(&cfg, &engine, &lat, &policy, &metrics, &d_spec, &t_spec,
-                               item, drafter, target, cfg.kernel_path);
+                let ls = admit(&cfg, &engine, &lat, &policy, &metrics, &tokenizer,
+                               &d_spec, &t_spec, item, drafter, target, cfg.kernel_path);
                 serve_single(&engine, &policy, &metrics, &tokenizer,
                              &d_spec, &t_spec, ls);
             } else {
@@ -190,6 +266,31 @@ pub fn run_worker(
     let calibrating = policy.decision_mode() == DecisionMode::Calibrated;
 
     loop {
+        // ---- reap: abort dead sessions at round boundaries ------------
+        // Cancelled / deadline-expired sessions leave *before* admission
+        // tops the set up, so their slots go to queued work this very
+        // iteration — the "cancel frees the slot" contract.
+        let mut i = 0;
+        while i < live.len() {
+            let abort = if live[i].session.mid_round() {
+                None // only ever abort between rounds
+            } else {
+                live[i].abort_reason()
+            };
+            match abort {
+                Some(reason) => {
+                    let ls = live.remove(i);
+                    let tl_s = if cfg.fuse {
+                        Some((ls.session.ready_s() - ls.tl_admit_s).max(0.0))
+                    } else {
+                        None
+                    };
+                    abort_session(&tokenizer, &metrics, &policy, ls, tl_s, reason);
+                }
+                None => i += 1,
+            }
+        }
+
         // ---- admit: top up the in-flight set -------------------------
         // On shutdown, stop admitting but finish the (bounded) in-flight
         // set — "complete the current requests" semantics.
@@ -209,8 +310,14 @@ pub fn run_worker(
                     None => break,
                 }
             };
-            let mut ls = admit(&cfg, &engine, &lat, &policy, &metrics, &d_spec, &t_spec,
-                               item, drafter, target, serving_kernel);
+            // Deadline-based admission shedding (and cancelled-in-queue):
+            // answer immediately, never occupy a slot.
+            if let Some(reason) = shed_reason(&item) {
+                respond_shed(&metrics, item, reason);
+                continue;
+            }
+            let mut ls = admit(&cfg, &engine, &lat, &policy, &metrics, &tokenizer,
+                               &d_spec, &t_spec, item, drafter, target, serving_kernel);
             // A session admitted mid-stream starts at the worker's
             // current simulated "now" (the earliest frontier among PUs
             // the workload actually uses): its first dispatch cannot
@@ -234,10 +341,12 @@ pub fn run_worker(
             }
             // Priced at the session's admission-frozen mapping: an online
             // re-partition must not re-score in-flight sessions against
-            // routes they are not running on.
-            let dec = policy.route_round(
+            // routes they are not running on. Clamped against the
+            // request's advisory hints every round.
+            let dec = policy.route_round_with(
                 &ls.task, &d_spec, &t_spec, ls.session.mapping(),
                 ls.session.seq_len(), ls.session.n_drafted(), ls.session.alpha_so_far(),
+                ls.hints,
             );
             if dec.used_prior {
                 metrics.record_prior_decision();
@@ -315,12 +424,62 @@ pub fn run_worker(
                         } else {
                             None
                         };
-                        retire(&tokenizer, &metrics, &policy, ls, tl_s);
+                        retire(&tokenizer, &metrics, &policy, ls, tl_s, None);
                     }
                 }
             }
         }
     }
+}
+
+/// Whether a request's options change the decode itself (vs only its
+/// scheduling), i.e. whether the shared lockstep loop — which decodes
+/// every lane under the server defaults — would silently drop them.
+fn has_decode_options(o: &GenOptions) -> bool {
+    o.max_new.is_some()
+        || o.sampling != SamplingMode::Greedy
+        || !o.stop_sequences.is_empty()
+        || !o.stop_tokens.is_empty()
+}
+
+/// Why a still-queued item must be shed instead of admitted.
+fn shed_reason(item: &QueueItem) -> Option<FinishReason> {
+    if item.cancelled() {
+        Some(FinishReason::Cancelled)
+    } else if item.deadline_expired() {
+        Some(FinishReason::DeadlineExceeded)
+    } else {
+        None
+    }
+}
+
+/// Answer a request that never reached a session (cancelled in the queue,
+/// or deadline-expired before admission): typed response, no tokens, no
+/// latency-population pollution — only the lifecycle counters move.
+fn respond_shed(metrics: &Metrics, item: QueueItem, reason: FinishReason) {
+    let queue_s = item.enqueued.elapsed().as_secs_f64();
+    metrics.record_finish(reason);
+    metrics.record_slo(item.request.options.slo);
+    if item.request.options.deadline_s.is_some() {
+        // A cancelled item whose deadline had also already expired still
+        // missed its deadline — don't let the cancel mask the miss.
+        metrics.record_deadline(
+            reason == FinishReason::DeadlineExceeded || item.deadline_expired(),
+        );
+    }
+    if let Some(tx) = &item.token_tx {
+        let _ = tx.send(TokenFrame {
+            id: item.request.id,
+            round: 1,
+            tokens: Vec::new(),
+            drafted: 0,
+            accepted: 0,
+            done: true,
+        });
+    }
+    let _ = item
+        .respond
+        .send(EngineResponse::shed(item.request.id, queue_s, reason));
 }
 
 /// Account one completed round: per-round metrics and streamed tokens.
@@ -346,11 +505,25 @@ fn finish_round(
         });
     }
     if let Some(tx) = &ls.token_tx {
-        if !step.committed.is_empty() || step.done {
+        // Stream from the session's authoritative output, withholding
+        // the hold-back tail while stop sequences are still in play (see
+        // `stream_holdback`); the final frame flushes everything that
+        // survived truncation. Without stop sequences this is exactly
+        // the per-round committed delta.
+        let out = &ls.session.outcome().tokens;
+        let visible = if step.done {
+            out.len()
+        } else {
+            out.len().saturating_sub(ls.stream_holdback)
+        };
+        let from = ls.streamed.min(visible);
+        let tokens = out[from..visible].to_vec();
+        if !tokens.is_empty() || step.done {
+            ls.streamed = visible;
             let _ = tx.send(TokenFrame {
                 id: ls.id,
                 round: ls.rounds,
-                tokens: step.committed,
+                tokens,
                 drafted: step.drafted,
                 accepted: step.accepted,
                 done: step.done,
@@ -360,9 +533,16 @@ fn finish_round(
     step.done
 }
 
-/// Route one queue item and wrap it into a live session. The mapping the
-/// decision carries is frozen into the session's setup here — an online
-/// re-partition switch therefore only affects *future* admissions.
+/// Route one queue item and wrap it into a live session, applying the
+/// request's [`GenOptions`]: per-request `max_new` (clamped to the
+/// server's `max_new_limit`), sampling mode (stochastic gets the
+/// request's seed + temperature), stop token ids and stop sequences
+/// (encoded with the serving tokenizer — a sequence whose characters the
+/// vocabulary cannot express can never be generated, so it is dropped),
+/// and advisory speculation hints clamped over the admission decision.
+/// The mapping the decision carries is frozen into the session's setup
+/// here — an online re-partition switch therefore only affects *future*
+/// admissions.
 #[allow(clippy::too_many_arguments)]
 fn admit(
     cfg: &RunConfig,
@@ -370,6 +550,7 @@ fn admit(
     lat: &LatencyModel,
     policy: &Policy,
     metrics: &Metrics,
+    tokenizer: &Tokenizer,
     d_spec: &ModelSpec,
     t_spec: &ModelSpec,
     item: QueueItem,
@@ -379,32 +560,67 @@ fn admit(
 ) -> LiveSession {
     let queue_s = item.enqueued.elapsed().as_secs_f64();
     let req = item.request;
-    let decision = policy.route(&req.task, d_spec, t_spec, req.prompt.len());
+    let options = req.options.clone();
+    let hints = SpecHints::from_options(&options);
+    let decision = policy.route_with(&req.task, d_spec, t_spec, req.prompt.len(), hints);
     if decision.used_prior {
         metrics.record_prior_decision();
     }
+    let max_new = options
+        .max_new
+        .map(|m| m.clamp(1, cfg.max_new_limit))
+        .unwrap_or(cfg.max_new_tokens);
+    let rule = match options.sampling {
+        SamplingMode::Greedy => AcceptRule::Greedy,
+        SamplingMode::Stochastic { .. } => AcceptRule::Stochastic,
+    };
     let setup = DecoderSetup {
         drafter,
         target,
         kernel,
         mapping: decision.mapping,
         gamma: decision.gamma.max(1),
-        rule: AcceptRule::Greedy,
+        rule,
         exec: cfg.exec_mode,
-        max_new: cfg.max_new_tokens,
+        max_new,
     };
-    let session =
+    let mut session =
         DecodeSession::new(engine, lat.clone(), setup, decision.speculative, &req.prompt);
+    if let SamplingMode::Stochastic { temperature, seed } = options.sampling {
+        session = session.with_rng(Rng::new(seed));
+        session.set_temperature(temperature as f32);
+    }
+    if !options.stop_tokens.is_empty() {
+        session.set_stop_tokens(options.stop_tokens.clone());
+    }
+    let mut stream_holdback = 0;
+    if !options.stop_sequences.is_empty() {
+        let encoded: Vec<Vec<u32>> = options
+            .stop_sequences
+            .iter()
+            .filter_map(|s| tokenizer.encode(s, false).ok())
+            .collect();
+        // A match can reach back at most (longest stop − 1) tokens past
+        // the one that completes it; withholding that many from the
+        // stream keeps frames truncation-exact.
+        stream_holdback = encoded.iter().map(Vec::len).max().unwrap_or(1).saturating_sub(1);
+        session.set_stop_sequences(encoded);
+    }
     LiveSession {
         session,
         respond: item.respond,
         token_tx: item.token_tx,
         id: req.id,
         task: req.task,
+        options,
+        hints,
+        cancel: item.cancel,
         queue_s,
         admitted_speculative: decision.speculative,
         admitted_gamma: decision.gamma,
         rounds: 0,
+        stream_holdback,
+        streamed: 0,
         tl_admit_s: 0.0,
     }
 }
@@ -414,7 +630,9 @@ fn admit(
 /// uses it for lone requests, so low traffic keeps the normal
 /// kernel/streaming/metrics behavior). This legacy A/B path steps the
 /// session directly and does **not** feed the calibration loop — only
-/// the fused tick executor reports dispatch observations.
+/// the fused tick executor reports dispatch observations. Cancellation
+/// and deadline expiry abort at round boundaries exactly like the tick
+/// scheduler.
 fn serve_single(
     engine: &Engine,
     policy: &Policy,
@@ -425,10 +643,15 @@ fn serve_single(
     mut ls: LiveSession,
 ) {
     loop {
+        if let Some(reason) = ls.abort_reason() {
+            abort_session(tokenizer, metrics, policy, ls, None, reason);
+            return;
+        }
         // Round-level policy, as in the tick scheduler.
-        let dec = policy.route_round(
+        let dec = policy.route_round_with(
             &ls.task, d_spec, t_spec, ls.session.mapping(),
             ls.session.seq_len(), ls.session.n_drafted(), ls.session.alpha_so_far(),
+            ls.hints,
         );
         if dec.used_prior {
             metrics.record_prior_decision();
@@ -441,7 +664,7 @@ fn serve_single(
             Err(_) => return, // dropped senders signal the error
             Ok(out) => {
                 if finish_round(metrics, &mut ls, out, 1) {
-                    retire(tokenizer, metrics, policy, ls, None);
+                    retire(tokenizer, metrics, policy, ls, None, None);
                     return;
                 }
             }
@@ -471,6 +694,13 @@ fn serve_lockstep(
         crate::hetero::Mapping::homogeneous(cfg.design_variant)
     };
     let prompts: Vec<Vec<u32>> = batch.iter().map(|i| i.request.prompt.clone()).collect();
+    // Queue delay snapshots *before* the shared decode runs: the serving
+    // clock (and the deadline metric) charges real queueing + simulated
+    // decode, never real decode wall-time.
+    let queued_s: Vec<f64> = batch
+        .iter()
+        .map(|i| i.enqueued.elapsed().as_secs_f64())
+        .collect();
     let lat = lat.clone();
     let t_scheme = target.scheme;
     // Simulated cost of one batched forward at the *executed* lane count
@@ -485,8 +715,8 @@ fn serve_lockstep(
         Ok(o) => o,
         Err(_) => return,
     };
-    for (item, o) in batch.into_iter().zip(outcomes) {
-        let queue_s = item.enqueued.elapsed().as_secs_f64();
+    for ((item, o), queue_s) in batch.into_iter().zip(outcomes).zip(queued_s) {
+        let finish = if o.eos { FinishReason::Stop } else { FinishReason::Length };
         metrics.record(RequestRecord {
             sim_s: o.sim_s,
             real_s: o.real_s,
@@ -495,6 +725,11 @@ fn serve_lockstep(
             drafted: 0,
             accepted: 0,
         });
+        metrics.record_finish(finish);
+        metrics.record_slo(item.request.options.slo);
+        if let Some(d) = item.request.options.deadline_s {
+            metrics.record_deadline(queue_s + o.sim_s >= d);
+        }
         // Lockstep batching has no per-round commits; streaming callers
         // still get their terminating done-frame with the full output.
         if let Some(tx) = &item.token_tx {
@@ -517,22 +752,57 @@ fn serve_lockstep(
             alpha: f64::NAN,
             speculative: false,
             gamma: 0,
-            rounds: 0,
+            // The request's lockstep rounds: one per shared decode step
+            // it was live for (the seed code reported a constant 0 here).
+            rounds: o.target_calls,
+            finish,
         });
     }
 }
 
+/// Abort a live session at a round boundary (cancellation or deadline
+/// expiry): emit a terminating frame for streaming consumers — flushing
+/// any tokens the stop-sequence hold-back had withheld, so frames still
+/// reassemble the final partial output — then retire with the tokens
+/// committed so far under the typed reason.
+fn abort_session(
+    tokenizer: &Tokenizer,
+    metrics: &Metrics,
+    policy: &Policy,
+    ls: LiveSession,
+    tl_latency: Option<f64>,
+    reason: FinishReason,
+) {
+    if let Some(tx) = &ls.token_tx {
+        let out = &ls.session.outcome().tokens;
+        let tokens = out[ls.streamed.min(out.len())..].to_vec();
+        let _ = tx.send(TokenFrame {
+            id: ls.id,
+            round: ls.rounds + 1,
+            tokens,
+            drafted: 0,
+            accepted: 0,
+            done: true,
+        });
+    }
+    retire(tokenizer, metrics, policy, ls, tl_latency, Some(reason));
+}
+
 /// Account for and answer one finished session. `tl_latency` is the
 /// request's end-to-end latency on the per-PU timelines (admission →
-/// last dispatch end), when the worker tracked one.
+/// last dispatch end), when the worker tracked one. `finish_override`
+/// stamps round-boundary aborts (cancel/deadline); otherwise the
+/// session's own finish reason stands.
 fn retire(
     tokenizer: &Tokenizer,
     metrics: &Metrics,
     policy: &Policy,
     ls: LiveSession,
     tl_latency: Option<f64>,
+    finish_override: Option<FinishReason>,
 ) {
     let outcome = ls.session.into_outcome();
+    let finish = finish_override.unwrap_or(outcome.finish);
     policy.observe_alpha(&ls.task, outcome.alpha());
     if let Some(t) = tl_latency {
         metrics.record_timeline_latency(t);
@@ -545,6 +815,14 @@ fn retire(
         drafted: outcome.n_drafted,
         accepted: outcome.n_accepted,
     });
+    metrics.record_finish(finish);
+    metrics.record_slo(ls.options.slo);
+    if let Some(d) = ls.options.deadline_s {
+        // A request that completed but blew its budget still missed.
+        metrics.record_deadline(
+            finish == FinishReason::DeadlineExceeded || ls.queue_s + outcome.sim_s >= d,
+        );
+    }
     let completion = tokenizer.decode(&outcome.tokens);
     let alpha = outcome.alpha();
     let _ = ls.respond.send(EngineResponse {
@@ -558,5 +836,6 @@ fn retire(
         speculative: ls.admitted_speculative,
         gamma: ls.admitted_gamma,
         rounds: ls.rounds,
+        finish,
     });
 }

@@ -55,6 +55,44 @@ use std::sync::Mutex;
 use super::calibrated::{CalibratedModel, CalibrationReport};
 use super::model::{CostModel, DispatchObs};
 
+/// Per-request advisory speculation hints, carried on
+/// [`GenOptions`](crate::api::GenOptions): they *clamp* the engine's
+/// choice (never widen it), so a client can bound its own speculation
+/// risk without overriding the cost model's feasibility reasoning.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SpecHints {
+    /// Upper bound on the draft length γ (`Some(0)` forces baseline).
+    pub gamma_cap: Option<usize>,
+    /// Force speculation off for this request.
+    pub force_off: bool,
+}
+
+impl SpecHints {
+    /// Extract the hints a request's options carry.
+    pub fn from_options(o: &crate::api::GenOptions) -> SpecHints {
+        SpecHints { gamma_cap: o.gamma_cap, force_off: o.no_spec }
+    }
+
+    /// Clamp a route decision against the hints. Forced-off and
+    /// zero-capped requests route to baseline decode (predicted speedup
+    /// 1.0 — the prediction describes what will actually run).
+    pub fn clamp(&self, mut dec: RouteDecision) -> RouteDecision {
+        let cap_off = self.gamma_cap == Some(0);
+        if (self.force_off || cap_off) && dec.speculative {
+            dec.speculative = false;
+            dec.gamma = 0;
+            dec.predicted_speedup = 1.0;
+            return dec;
+        }
+        if let Some(cap) = self.gamma_cap {
+            if dec.speculative && dec.gamma > cap {
+                dec.gamma = cap;
+            }
+        }
+        dec
+    }
+}
+
 /// Per-request routing decision.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct RouteDecision {
@@ -252,6 +290,19 @@ impl Policy {
         self.decide(alpha, used_prior, d_spec, t_spec, self.current_mapping(), seq_len)
     }
 
+    /// [`route`](Self::route) clamped against a request's advisory
+    /// speculation hints ([`SpecHints`]).
+    pub fn route_with(
+        &self,
+        task: &str,
+        d_spec: &crate::models::ModelSpec,
+        t_spec: &crate::models::ModelSpec,
+        seq_len: usize,
+        hints: SpecHints,
+    ) -> RouteDecision {
+        hints.clamp(self.route(task, d_spec, t_spec, seq_len))
+    }
+
     /// Re-decide the plan between speculation rounds of a live session.
     ///
     /// `mapping` is the mapping *frozen into the session at admission*
@@ -294,6 +345,33 @@ impl Policy {
         let dec = self.decide(alpha, used_prior, d_spec, t_spec, mapping, seq_len);
         self.note_round(alpha, d_spec, t_spec, seq_len);
         dec
+    }
+
+    /// [`route_round`](Self::route_round) clamped against a request's
+    /// advisory speculation hints ([`SpecHints`]) — the serving worker's
+    /// per-round consult. The hints bound every round's choice, so a
+    /// γ-capped request stays capped even as its α evidence improves.
+    #[allow(clippy::too_many_arguments)]
+    pub fn route_round_with(
+        &self,
+        task: &str,
+        d_spec: &crate::models::ModelSpec,
+        t_spec: &crate::models::ModelSpec,
+        mapping: Mapping,
+        seq_len: usize,
+        session_drafted: usize,
+        session_alpha: f64,
+        hints: SpecHints,
+    ) -> RouteDecision {
+        hints.clamp(self.route_round(
+            task,
+            d_spec,
+            t_spec,
+            mapping,
+            seq_len,
+            session_drafted,
+            session_alpha,
+        ))
     }
 
     fn decide(
@@ -598,6 +676,63 @@ mod tests {
         assert_eq!(hom.predicted_overlap(&d, &t, 5, 63), 0.0);
         // No speculation, no draft/verify split.
         assert_eq!(het.predicted_overlap(&d, &t, 0, 63), 0.0);
+    }
+
+    #[test]
+    fn spec_hints_clamp_but_never_widen() {
+        let cfg = RunConfig::default();
+        let p = policy(&cfg);
+        let (d, t) = specs();
+        let free = p.route("translate", &d, &t, 63);
+        assert!(free.speculative && free.gamma >= 3);
+        // A γ cap below the engine's choice clamps it.
+        let capped = p.route_with(
+            "translate", &d, &t, 63,
+            SpecHints { gamma_cap: Some(2), force_off: false },
+        );
+        assert!(capped.speculative);
+        assert_eq!(capped.gamma, 2);
+        // A cap above the choice changes nothing.
+        let loose = p.route_with(
+            "translate", &d, &t, 63,
+            SpecHints { gamma_cap: Some(free.gamma + 3), force_off: false },
+        );
+        assert_eq!(loose.gamma, free.gamma);
+        // force_off and gamma_cap=0 both route to baseline.
+        for hints in [
+            SpecHints { gamma_cap: None, force_off: true },
+            SpecHints { gamma_cap: Some(0), force_off: false },
+        ] {
+            let off = p.route_with("translate", &d, &t, 63, hints);
+            assert!(!off.speculative, "{off:?}");
+            assert_eq!(off.gamma, 0);
+            assert!((off.predicted_speedup - 1.0).abs() < 1e-12);
+        }
+        // Hints never resurrect speculation the engine already rejected.
+        let baseline = SpecHints::default().clamp(RouteDecision {
+            speculative: false,
+            gamma: 0,
+            mapping: p.current_mapping(),
+            predicted_speedup: 1.0,
+            alpha_used: f64::NAN,
+            used_prior: false,
+        });
+        assert!(!baseline.speculative);
+    }
+
+    #[test]
+    fn spec_hints_apply_per_round() {
+        let cfg = RunConfig::default();
+        let p = policy(&cfg);
+        let (d, t) = specs();
+        let m = p.current_mapping();
+        // Even with perfect session evidence, the cap holds every round.
+        let dec = p.route_round_with(
+            "translate", &d, &t, m, 63, 64, 1.0,
+            SpecHints { gamma_cap: Some(1), force_off: false },
+        );
+        assert!(dec.speculative);
+        assert_eq!(dec.gamma, 1);
     }
 
     #[test]

@@ -39,7 +39,7 @@ pub mod engine;
 pub mod model;
 
 pub use calibrated::{CalibratedModel, CalibrationReport};
-pub use engine::{Policy, RouteDecision};
+pub use engine::{Policy, RouteDecision, SpecHints};
 pub use model::{resolve_route, CostModel, DispatchObs};
 
 // The decision layer's other two pillars, re-exported for one-stop use.

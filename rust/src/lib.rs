@@ -13,6 +13,8 @@
 //! Module map (see DESIGN.md for the full inventory):
 //!
 //! * [`util`] — substrate: JSON codec, RNG, stats, CLI, thread pool
+//! * [`api`] — the request-lifecycle API: typed [`api::GenOptions`],
+//!   [`api::GenerationRequest`] and [`api::FinishReason`]
 //! * [`config`] — typed run configuration
 //! * [`tokenizer`] — char tokenizer mirroring the Python build side
 //! * [`runtime`] — PJRT engine: artifact registry, executable cache
@@ -32,6 +34,7 @@
 //! * [`experiments`] — one driver per paper table/figure
 //! * [`bench`] — mini-criterion harness used by `cargo bench` targets
 
+pub mod api;
 pub mod bench;
 pub mod config;
 pub mod coordinator;

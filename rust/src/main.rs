@@ -52,6 +52,7 @@ fn cli() -> Cli {
         .opt("limit", "experiments: sample limit", None)
         .opt("out", "experiments: results dir", Some("results"))
         .opt("prompt", "decode: prompt text (task-prefixed, e.g. 'tr: ...')", None)
+        .opt("stop", "decode: comma-separated stop sequences", None)
         .opt("task", "decode/serve: task label", Some("translate"))
         .flag("homogeneous", "use the homogeneous CPU mapping")
         .flag("no-spec", "disable speculation (baseline decode)")
@@ -192,15 +193,26 @@ fn cmd_decode(
     };
     let lat = LatencyModel::new(platform);
     let decoder = Decoder::new(&engine, lat, setup);
-    let out = if cfg.speculative {
-        decoder.speculative(&prompt)?
-    } else {
-        decoder.baseline(&prompt)?
-    };
+    // Drive a session directly so per-request options (stop sequences)
+    // apply; without --stop this is exactly Decoder::speculative/baseline.
+    let mut session = decoder.session(&prompt, cfg.speculative);
+    if let Some(stops) = args.get("stop") {
+        let encoded: Vec<Vec<u32>> = stops
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| tokenizer.encode(s, false))
+            .collect::<anyhow::Result<Vec<Vec<u32>>>>()?;
+        session.set_stop_sequences(encoded);
+    }
+    while !session.is_done() {
+        session.step(&engine)?;
+    }
+    let out = session.into_outcome();
     println!("completion: {}", tokenizer.decode(&out.tokens));
     println!(
-        "tokens={} rounds={} drafted={} accepted={} alpha={:.3}",
-        out.tokens.len(), out.n_rounds, out.n_drafted, out.n_accepted, out.alpha()
+        "tokens={} rounds={} drafted={} accepted={} alpha={:.3} finish={}",
+        out.tokens.len(), out.n_rounds, out.n_drafted, out.n_accepted, out.alpha(),
+        out.finish.as_str()
     );
     println!(
         "simulated {:.1} ms | real {:.1} ms ({} drafter + {} target calls)",

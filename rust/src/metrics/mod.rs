@@ -22,6 +22,7 @@
 //! (serialized timelines) it stays 0 and the makespan equals the summed
 //! busy time.
 
+use crate::api::{FinishReason, SloClass, NUM_FINISH_REASONS, NUM_SLO_CLASSES};
 use crate::hetero::{PuId, TimelineSnapshot, NUM_PUS};
 use crate::util::stats::{BoxStats, Summary};
 use std::sync::Mutex;
@@ -84,6 +85,16 @@ struct Inner {
     /// Dispatch-duration observations accepted by the calibration
     /// estimator.
     calibration_obs: u64,
+    /// Requests answered, by typed [`FinishReason`] (indexed by
+    /// [`FinishReason::index`]); includes rejected/shed requests, so the
+    /// sum can exceed the `requests` latency population.
+    finish: [u64; NUM_FINISH_REASONS],
+    /// Requests answered per SLO class (indexed by [`SloClass::index`]).
+    slo: [u64; NUM_SLO_CLASSES],
+    /// Deadline-carrying requests answered, and how many missed (shed in
+    /// the queue, aborted mid-decode, or completed past budget).
+    deadline_requests: u64,
+    deadline_missed: u64,
 }
 
 /// Fixed-size uniform reservoir (Vitter's Algorithm R) for unbounded
@@ -235,6 +246,27 @@ impl Metrics {
         }
     }
 
+    /// One request answered with a typed [`FinishReason`] (every path:
+    /// normal completion, round-boundary aborts, queue sheds, rejects).
+    pub fn record_finish(&self, reason: FinishReason) {
+        self.inner.lock().unwrap().finish[reason.index()] += 1;
+    }
+
+    /// One request answered for an SLO class.
+    pub fn record_slo(&self, class: SloClass) {
+        self.inner.lock().unwrap().slo[class.index()] += 1;
+    }
+
+    /// One deadline-carrying request answered; `missed` if the deadline
+    /// was not met (shed, aborted, or finished over budget).
+    pub fn record_deadline(&self, missed: bool) {
+        let mut m = self.inner.lock().unwrap();
+        m.deadline_requests += 1;
+        if missed {
+            m.deadline_missed += 1;
+        }
+    }
+
     /// One request's simulated timeline latency (admission → finish).
     pub fn record_timeline_latency(&self, seconds: f64) {
         if seconds.is_finite() {
@@ -275,6 +307,10 @@ impl Metrics {
             tl_latency: m.tl_latency.box_stats(),
             prior_decisions: m.prior_decisions,
             calibration_obs: m.calibration_obs,
+            finish: m.finish,
+            slo_requests: m.slo,
+            deadline_requests: m.deadline_requests,
+            deadline_missed: m.deadline_missed,
         }
     }
 }
@@ -324,12 +360,35 @@ pub struct Report {
     /// Dispatch-duration observations accepted by the calibration
     /// estimator (0 under `decision: "analytic"`).
     pub calibration_obs: u64,
+    /// Requests answered per typed [`FinishReason`] (see
+    /// [`finish_count`](Report::finish_count)).
+    pub finish: [u64; NUM_FINISH_REASONS],
+    /// Requests answered per [`SloClass`].
+    pub slo_requests: [u64; NUM_SLO_CLASSES],
+    /// Deadline-carrying requests answered / missed.
+    pub deadline_requests: u64,
+    pub deadline_missed: u64,
 }
 
 impl Report {
     /// Idle seconds on one PU up to the makespan (clamped at 0).
     pub fn pu_idle(&self, pu: PuId) -> f64 {
         (self.makespan_s - self.pu_busy[pu.index()]).max(0.0)
+    }
+
+    /// Requests answered with this [`FinishReason`].
+    pub fn finish_count(&self, reason: FinishReason) -> u64 {
+        self.finish[reason.index()]
+    }
+
+    /// Fraction of deadline-carrying requests that missed their deadline
+    /// (NaN before any deadline-carrying request finished).
+    pub fn deadline_miss_rate(&self) -> f64 {
+        if self.deadline_requests > 0 {
+            self.deadline_missed as f64 / self.deadline_requests as f64
+        } else {
+            f64::NAN
+        }
     }
 
     /// Fraction of the makespan during which both PUs were busy (NaN
@@ -353,7 +412,10 @@ impl Report {
              dispatches={} fused={} batch_fill={:.2}\n\
              pu: cpu busy={:.1}ms gpu busy={:.1}ms overlap={:.1}ms \
              makespan={:.1}ms tl_latency_p50={:.1}ms\n\
-             decision: prior_decisions={} calibration_obs={}",
+             decision: prior_decisions={} calibration_obs={}\n\
+             finish: stop={} length={} stop_seq={} cancelled={} \
+             deadline={} rejected={}\n\
+             slo: interactive={} batch={} deadline_miss_rate={:.3}",
             self.requests,
             self.rejected,
             self.tokens_out,
@@ -382,6 +444,15 @@ impl Report {
             self.tl_latency.median * 1e3,
             self.prior_decisions,
             self.calibration_obs,
+            self.finish_count(FinishReason::Stop),
+            self.finish_count(FinishReason::Length),
+            self.finish_count(FinishReason::StopSequence),
+            self.finish_count(FinishReason::Cancelled),
+            self.finish_count(FinishReason::DeadlineExceeded),
+            self.finish_count(FinishReason::Rejected),
+            self.slo_requests[SloClass::Interactive.index()],
+            self.slo_requests[SloClass::Batch.index()],
+            self.deadline_miss_rate(),
         )
     }
 }
@@ -510,6 +581,38 @@ mod tests {
         let r = m.snapshot();
         assert_eq!(r.prior_decisions, 2);
         assert_eq!(r.calibration_obs, 3);
+    }
+
+    #[test]
+    fn lifecycle_counters_aggregate() {
+        let m = Metrics::new();
+        let r = m.snapshot();
+        assert_eq!(r.finish, [0; NUM_FINISH_REASONS]);
+        assert_eq!(r.slo_requests, [0; NUM_SLO_CLASSES]);
+        assert!(r.deadline_miss_rate().is_nan());
+        m.record_finish(FinishReason::Stop);
+        m.record_finish(FinishReason::Stop);
+        m.record_finish(FinishReason::Cancelled);
+        m.record_finish(FinishReason::DeadlineExceeded);
+        m.record_slo(SloClass::Interactive);
+        m.record_slo(SloClass::Batch);
+        m.record_slo(SloClass::Batch);
+        m.record_deadline(true);
+        m.record_deadline(false);
+        m.record_deadline(true);
+        let r = m.snapshot();
+        assert_eq!(r.finish_count(FinishReason::Stop), 2);
+        assert_eq!(r.finish_count(FinishReason::Cancelled), 1);
+        assert_eq!(r.finish_count(FinishReason::DeadlineExceeded), 1);
+        assert_eq!(r.finish_count(FinishReason::Rejected), 0);
+        assert_eq!(r.slo_requests, [1, 2]);
+        assert_eq!(r.deadline_requests, 3);
+        assert_eq!(r.deadline_missed, 2);
+        assert!((r.deadline_miss_rate() - 2.0 / 3.0).abs() < 1e-12);
+        // The render string mentions the new counters.
+        let s = r.render(1.0);
+        assert!(s.contains("deadline_miss_rate"), "{s}");
+        assert!(s.contains("cancelled=1"), "{s}");
     }
 
     #[test]

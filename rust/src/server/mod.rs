@@ -1,31 +1,60 @@
-//! TCP line-JSON serving front-end.
+//! TCP line-JSON serving front-end — wire protocol v1 (seed, frozen) and
+//! v2 (typed options + lifecycle).
 //!
 //! Protocol: one JSON object per line.
 //!
+//! **v1** (any line without `"v":2` — byte-identical to the seed
+//! protocol, pinned by `tests/lifecycle_e2e.rs`):
+//!
 //! ```text
-//! → {"prompt": "tr: cela vodu", "task": "translate", "max_new": 64}
+//! → {"prompt": "tr: cela vodu", "task": "translate"}
 //! ← {"ok": true, "completion": "...", "tokens": 12, "sim_ms": 31.2,
-//!    "real_ms": 8.4, "alpha": 0.83, "speculative": true, "gamma": 5}
+//!    "real_ms": 8.4, "queue_ms": 0.1, "alpha": 0.83,
+//!    "speculative": true, "gamma": 5, "rounds": 3}
 //! ```
+//!
+//! **v2** (`"v":2`): requests may carry a client-chosen numeric `req_id`
+//! and a typed `options` object (see
+//! [`GenOptions::from_json`](crate::api::GenOptions::from_json) for the
+//! full knob set):
+//!
+//! ```text
+//! → {"v":2, "req_id":7, "prompt":"tr: cela vodu", "task":"translate",
+//!    "options":{"max_new":32, "deadline_ms":250, "priority":3,
+//!               "gamma_cap":2, "stop":["."]}}
+//! ← {"v":2, "req_id":7, "ok":true, "finish":"stop", ...v1 fields...}
+//! ```
+//!
+//! v2 error replies are typed — `"kind"` is one of
+//! `bad_request | overloaded | cancelled | deadline | internal` — and
+//! carry queue-state fields (`queue_len`, `queue_capacity`) so clients
+//! can implement backoff; `cancelled`/`deadline` mark requests that died
+//! before producing any decode output (a mid-decode cancel or expiry
+//! instead returns `ok:true` with the partial tokens and the matching
+//! `finish` reason). v1 error replies stay `{"ok":false,"error":...}`,
+//! echoing the offending `req_id` when the line carried one.
 //!
 //! With `"stream": true` the reply is incremental: one
 //! `{"ok":true,"frame":"tokens","text":...,"round":r,"drafted":d,
 //! "accepted":a,"done":false}` line per speculation round as the scheduler
-//! commits tokens, terminated by the usual summary object tagged
-//! `"frame":"final"`. Clients that never ask for streaming see the
-//! single-line protocol unchanged.
+//! commits tokens (v2 frames additionally carry `req_id`), terminated by
+//! the usual summary object tagged `"frame":"final"`.
 //!
-//! `{"cmd": "metrics"}` returns a metrics snapshot; `{"cmd": "shutdown"}`
-//! stops the listener (used by tests and the E2E example).
+//! Commands: `{"cmd":"metrics"}` returns a metrics snapshot;
+//! `{"cmd":"cancel","req_id":N}` flags request N for cancellation (it
+//! aborts at its next round boundary — cancellation reaches across
+//! connections, which is how a streaming request is cancelled);
+//! `{"cmd":"shutdown"}` stops the listener.
 
+use crate::api::{FinishReason, GenOptions, GenerationRequest};
 use crate::coordinator::Coordinator;
 use crate::tokenizer::{Tokenizer, SEP_ID};
 use crate::util::json::Json;
-use crate::workload::Request;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
+use std::time::Duration;
 
 /// Running server handle.
 pub struct Server {
@@ -47,7 +76,11 @@ impl Server {
         let stop = Arc::new(AtomicBool::new(false));
         let stop2 = Arc::clone(&stop);
         let start_wall = std::time::Instant::now();
-        let next_id = Arc::new(AtomicU64::new(1));
+        // Server-assigned ids start at 2^48: far above practical
+        // client-chosen v2 req_ids (the cancellation registry is one
+        // shared namespace) yet small enough that every id stays exactly
+        // representable in the f64-backed JSON codec when echoed.
+        let next_id = Arc::new(AtomicU64::new(1 << 48));
         let handle = std::thread::Builder::new()
             .name("specedge-server".into())
             .spawn(move || {
@@ -106,69 +139,13 @@ fn handle_conn(
             continue;
         }
         let reply = match Json::parse(trimmed) {
-            Err(e) => err_json(&format!("bad json: {e}")),
+            Err(e) => err_json(&format!("bad json: {e}"), None),
             Ok(req) => {
+                let req_id = wire_req_id(&req);
                 if let Some(cmd) = req.get("cmd").and_then(Json::as_str) {
                     match cmd {
-                        "metrics" => {
-                            let r = coordinator.metrics.snapshot();
-                            let mut j = Json::obj();
-                            j.set("ok", true.into())
-                                .set("requests", (r.requests as usize).into())
-                                .set("rejected", (r.rejected as usize).into())
-                                .set("tokens", (r.tokens_out as usize).into())
-                                .set("mean_alpha", r.mean_alpha.into())
-                                .set("sim_p50_ms", (r.sim_latency.median * 1e3).into())
-                                .set("sim_p90_ms", (r.sim_latency.p90 * 1e3).into())
-                                .set("rounds", (r.rounds as usize).into())
-                                .set("mean_round_gamma", r.mean_round_gamma.into())
-                                .set("mean_inflight", r.mean_inflight.into())
-                                .set("max_inflight", r.max_inflight.into())
-                                .set("dispatches", (r.dispatches as usize).into())
-                                .set(
-                                    "fused_dispatches",
-                                    (r.fused_dispatches as usize).into(),
-                                )
-                                .set("batch_fill", r.batch_fill.into())
-                                .set("cpu_busy_s", r.pu_busy[0].into())
-                                .set("gpu_busy_s", r.pu_busy[1].into())
-                                .set("overlap_s", r.overlap_s.into())
-                                .set("makespan_s", r.makespan_s.into())
-                                .set(
-                                    "tl_latency_p50_ms",
-                                    (r.tl_latency.median * 1e3).into(),
-                                )
-                                .set("wall_s", start_wall.elapsed().as_secs_f64().into());
-                            // Decision-layer state: which cost model is
-                            // live, the mapping new admissions receive,
-                            // and the calibration/prior counters.
-                            let calib = coordinator.policy.calibration();
-                            j.set(
-                                "decision",
-                                Json::Str(
-                                    coordinator.policy.decision_mode().as_str().into(),
-                                ),
-                            )
-                            .set(
-                                "mapping",
-                                Json::Str(coordinator.policy.current_mapping().label()),
-                            )
-                            .set(
-                                "repartitions",
-                                (coordinator.policy.repartition_count() as usize).into(),
-                            )
-                            .set(
-                                "prior_decisions",
-                                (r.prior_decisions as usize).into(),
-                            )
-                            .set(
-                                "calibration_obs",
-                                (r.calibration_obs as usize).into(),
-                            )
-                            .set("calibration_tracked_keys", calib.tracked_keys.into())
-                            .set("calibration_fitted_keys", calib.fitted_keys.into());
-                            j
-                        }
+                        "metrics" => metrics_json(&coordinator, start_wall),
+                        "cancel" => cancel_json(&req, &coordinator),
                         "shutdown" => {
                             stop.store(true, Ordering::SeqCst);
                             let mut j = Json::obj();
@@ -176,7 +153,7 @@ fn handle_conn(
                             writeln!(stream, "{j}")?;
                             return Ok(());
                         }
-                        other => err_json(&format!("unknown cmd {other:?}")),
+                        other => err_json(&format!("unknown cmd {other:?}"), req_id),
                     }
                 } else {
                     handle_generate(&req, &coordinator, &tokenizer, &next_id, &mut stream)?
@@ -185,6 +162,12 @@ fn handle_conn(
         };
         writeln!(stream, "{reply}")?;
     }
+}
+
+/// The client-chosen `req_id`, when the line carries a valid one (the
+/// same strict integer rule the options parser applies).
+fn wire_req_id(req: &Json) -> Option<u64> {
+    req.get("req_id").and_then(crate::api::wire_uint)
 }
 
 /// Serve one generate request. Streaming requests write their incremental
@@ -197,9 +180,26 @@ fn handle_generate(
     next_id: &AtomicU64,
     stream: &mut TcpStream,
 ) -> anyhow::Result<Json> {
+    let version = req.get("v").and_then(Json::as_usize).unwrap_or(1);
+    let req_id = wire_req_id(req);
+    if version != 1 && version != 2 {
+        return Ok(err_v2(
+            "bad_request",
+            &format!("unsupported protocol version {version}"),
+            req_id,
+            coordinator,
+        ));
+    }
+    let v2 = version == 2;
     let prompt_text = match req.get("prompt").and_then(Json::as_str) {
         Some(p) => p,
-        None => return Ok(err_json("missing `prompt`")),
+        None => {
+            return Ok(if v2 {
+                err_v2("bad_request", "missing `prompt`", req_id, coordinator)
+            } else {
+                err_json("missing `prompt`", req_id)
+            });
+        }
     };
     let task = req
         .get("task")
@@ -207,31 +207,58 @@ fn handle_generate(
         .unwrap_or("unknown")
         .to_string();
     let streaming = req.get("stream").and_then(Json::as_bool).unwrap_or(false);
+    // v2 only: the typed options object (strictly validated — unknown
+    // knobs and wrong types come back as bad_request).
+    let options = if v2 {
+        match req.get("options") {
+            None => GenOptions::default(),
+            Some(o) => match GenOptions::from_json(o) {
+                Ok(o) => o,
+                Err(e) => {
+                    return Ok(err_v2(
+                        "bad_request",
+                        &format!("invalid options: {e}"),
+                        req_id,
+                        coordinator,
+                    ));
+                }
+            },
+        }
+    } else {
+        GenOptions::default()
+    };
     let mut prompt = match tokenizer.encode(prompt_text, true) {
         Ok(p) => p,
-        Err(e) => return Ok(err_json(&format!("{e}"))),
+        Err(e) => {
+            return Ok(if v2 {
+                err_v2("bad_request", &format!("{e}"), req_id, coordinator)
+            } else {
+                err_json(&format!("{e}"), req_id)
+            });
+        }
     };
     prompt.push(SEP_ID);
-    let request = Request {
-        id: next_id.fetch_add(1, Ordering::Relaxed),
+    // v2 clients address cancellation by their own req_id, so it becomes
+    // the coordinator-visible id; v1 keeps server-assigned ids.
+    let id = match req_id {
+        Some(id) if v2 => id,
+        _ => next_id.fetch_add(1, Ordering::Relaxed),
+    };
+    let request = GenerationRequest {
+        id,
         task,
         prompt,
         truth: String::new(),
         arrival_s: 0.0,
+        options,
     };
+    let handle = coordinator.submit(request);
     if !streaming {
-        return Ok(match coordinator.submit_blocking(request) {
-            Err(e) => err_json(&format!("{e}")),
-            Ok(r) => final_json(r, false),
-        });
+        return Ok(reply_final(handle.wait(), false, v2, req_id, coordinator));
     }
-    let (frames, final_rx) = match coordinator.submit_streaming(request) {
-        Ok(p) => p,
-        Err(e) => return Ok(err_json(&format!("{e}"))),
-    };
     // Relay each round's frame as it commits; the iterator ends when the
     // worker retires the session and drops the sender.
-    for f in frames.iter() {
+    for f in handle.frames() {
         let mut j = Json::obj();
         j.set("ok", true.into())
             .set("frame", Json::Str("tokens".into()))
@@ -241,18 +268,159 @@ fn handle_generate(
             .set("drafted", f.drafted.into())
             .set("accepted", f.accepted.into())
             .set("done", f.done.into());
+        if v2 {
+            j.set("req_id", (f.id as usize).into()).set("v", 2usize.into());
+        }
         writeln!(stream, "{j}")?;
     }
-    Ok(match final_rx.recv() {
-        Err(_) => err_json("worker dropped the request"),
-        Ok(r) => final_json(r, true),
-    })
+    Ok(reply_final(handle.wait(), true, v2, req_id, coordinator))
 }
 
-fn final_json(r: crate::coordinator::EngineResponse, tagged: bool) -> Json {
+/// Map a request's final outcome onto the wire: v1 keeps the seed reply
+/// shapes byte-for-byte; v2 adds `v`/`req_id`/`finish` and turns
+/// produced-nothing lifecycle deaths into typed errors.
+fn reply_final(
+    result: anyhow::Result<crate::coordinator::EngineResponse>,
+    tagged: bool,
+    v2: bool,
+    req_id: Option<u64>,
+    coordinator: &Coordinator,
+) -> Json {
+    let r = match result {
+        Ok(r) => r,
+        Err(_) => {
+            return if v2 {
+                err_v2("internal", "worker dropped the request", req_id, coordinator)
+            } else {
+                err_json("worker dropped the request", req_id)
+            };
+        }
+    };
+    if r.finish == FinishReason::Rejected {
+        // The seed protocol surfaced backpressure as this exact error.
+        return if v2 {
+            err_v2("overloaded", "queue full (backpressure)", req_id, coordinator)
+        } else {
+            err_json("queue full (backpressure)", req_id)
+        };
+    }
+    if v2 && r.rounds == 0 && r.tokens.is_empty() {
+        // Died before producing anything: a typed lifecycle error.
+        match r.finish {
+            FinishReason::Cancelled => {
+                return err_v2("cancelled", "cancelled before any output", req_id, coordinator);
+            }
+            FinishReason::DeadlineExceeded => {
+                return err_v2("deadline", "deadline expired before any output", req_id, coordinator);
+            }
+            _ => {}
+        }
+    }
+    final_json(r, tagged, v2)
+}
+
+fn cancel_json(req: &Json, coordinator: &Coordinator) -> Json {
+    let id = match wire_req_id(req) {
+        Some(id) => id,
+        None => {
+            return err_v2(
+                "bad_request",
+                "cancel requires a numeric `req_id`",
+                None,
+                coordinator,
+            );
+        }
+    };
+    if coordinator.cancel(id) {
+        let mut j = Json::obj();
+        j.set("ok", true.into())
+            .set("cancelled", true.into())
+            .set("req_id", (id as usize).into())
+            .set("v", 2usize.into());
+        j
+    } else {
+        err_v2(
+            "bad_request",
+            &format!("unknown req_id {id} (never submitted, or already finished)"),
+            Some(id),
+            coordinator,
+        )
+    }
+}
+
+fn metrics_json(coordinator: &Coordinator, start_wall: std::time::Instant) -> Json {
+    let r = coordinator.metrics.snapshot();
+    let mut j = Json::obj();
+    j.set("ok", true.into())
+        .set("requests", (r.requests as usize).into())
+        .set("rejected", (r.rejected as usize).into())
+        .set("tokens", (r.tokens_out as usize).into())
+        .set("mean_alpha", r.mean_alpha.into())
+        .set("sim_p50_ms", (r.sim_latency.median * 1e3).into())
+        .set("sim_p90_ms", (r.sim_latency.p90 * 1e3).into())
+        .set("rounds", (r.rounds as usize).into())
+        .set("mean_round_gamma", r.mean_round_gamma.into())
+        .set("mean_inflight", r.mean_inflight.into())
+        .set("max_inflight", r.max_inflight.into())
+        .set("dispatches", (r.dispatches as usize).into())
+        .set("fused_dispatches", (r.fused_dispatches as usize).into())
+        .set("batch_fill", r.batch_fill.into())
+        .set("cpu_busy_s", r.pu_busy[0].into())
+        .set("gpu_busy_s", r.pu_busy[1].into())
+        .set("overlap_s", r.overlap_s.into())
+        .set("makespan_s", r.makespan_s.into())
+        .set("tl_latency_p50_ms", (r.tl_latency.median * 1e3).into())
+        .set("wall_s", start_wall.elapsed().as_secs_f64().into());
+    // Request-lifecycle accounting: per-finish-reason counts, per-SLO
+    // class counts, deadline-miss rate.
+    for reason in FinishReason::all() {
+        j.set(
+            &format!("finish_{}", reason.as_str()),
+            (r.finish_count(reason) as usize).into(),
+        );
+    }
+    j.set(
+        "slo_interactive",
+        (r.slo_requests[crate::api::SloClass::Interactive.index()] as usize).into(),
+    )
+    .set(
+        "slo_batch",
+        (r.slo_requests[crate::api::SloClass::Batch.index()] as usize).into(),
+    )
+    .set("deadline_requests", (r.deadline_requests as usize).into())
+    .set("deadline_missed", (r.deadline_missed as usize).into())
+    .set("deadline_miss_rate", r.deadline_miss_rate().into());
+    // Decision-layer state: which cost model is live, the mapping new
+    // admissions receive, and the calibration/prior counters.
+    let calib = coordinator.policy.calibration();
+    j.set(
+        "decision",
+        Json::Str(coordinator.policy.decision_mode().as_str().into()),
+    )
+    .set(
+        "mapping",
+        Json::Str(coordinator.policy.current_mapping().label()),
+    )
+    .set(
+        "repartitions",
+        (coordinator.policy.repartition_count() as usize).into(),
+    )
+    .set("prior_decisions", (r.prior_decisions as usize).into())
+    .set("calibration_obs", (r.calibration_obs as usize).into())
+    .set("calibration_tracked_keys", calib.tracked_keys.into())
+    .set("calibration_fitted_keys", calib.fitted_keys.into());
+    j
+}
+
+fn final_json(r: crate::coordinator::EngineResponse, tagged: bool, v2: bool) -> Json {
     let mut j = Json::obj();
     if tagged {
         j.set("frame", Json::Str("final".into()));
+    }
+    if v2 {
+        j.set("v", 2usize.into())
+            .set("req_id", (r.id as usize).into())
+            .set("finish", Json::Str(r.finish.as_str().into()));
     }
     j.set("ok", true.into())
         .set("completion", Json::Str(r.completion))
@@ -267,13 +435,36 @@ fn final_json(r: crate::coordinator::EngineResponse, tagged: bool) -> Json {
     j
 }
 
-fn err_json(msg: &str) -> Json {
+/// The seed error shape (v1, byte-identical for seed lines), plus the
+/// offending `req_id` when the request line carried one.
+fn err_json(msg: &str, req_id: Option<u64>) -> Json {
     let mut j = Json::obj();
     j.set("ok", false.into()).set("error", Json::Str(msg.to_string()));
+    if let Some(id) = req_id {
+        j.set("req_id", (id as usize).into());
+    }
+    j
+}
+
+/// A v2 typed error: `kind` ∈ `bad_request | overloaded | cancelled |
+/// deadline | internal`, plus queue-state fields for client backoff.
+fn err_v2(kind: &str, msg: &str, req_id: Option<u64>, coordinator: &Coordinator) -> Json {
+    let mut j = err_json(msg, req_id);
+    j.set("v", 2usize.into())
+        .set("kind", Json::Str(kind.into()))
+        .set("queue_len", coordinator.queue_len().into())
+        .set("queue_capacity", coordinator.queue_capacity().into());
     j
 }
 
 /// Minimal blocking client for tests, examples and the load generator.
+/// Speaks both protocol versions: [`generate`](Client::generate) /
+/// [`generate_stream`](Client::generate_stream) emit seed-shaped v1
+/// lines, [`generate_with`](Client::generate_with) /
+/// [`generate_stream_with`](Client::generate_stream_with) the typed v2
+/// protocol, and [`cancel`](Client::cancel) the cancel command. A
+/// configurable [read timeout](Client::set_read_timeout) turns a dead
+/// server into a typed error instead of a hang.
 pub struct Client {
     reader: BufReader<TcpStream>,
     stream: TcpStream,
@@ -286,13 +477,49 @@ impl Client {
         Ok(Client { reader: BufReader::new(stream.try_clone()?), stream })
     }
 
-    pub fn call(&mut self, req: &Json) -> anyhow::Result<Json> {
+    /// Abort reads that wait longer than `timeout` (None = wait forever,
+    /// the default). An expired timeout surfaces as an
+    /// "timed out waiting for the server" error from the blocked call.
+    pub fn set_read_timeout(&mut self, timeout: Option<Duration>) -> anyhow::Result<()> {
+        // Both handles alias one socket; set through the reader's (the
+        // one reads actually go through) and keep the writer consistent.
+        self.reader.get_ref().set_read_timeout(timeout)?;
+        self.stream.set_read_timeout(timeout)?;
+        Ok(())
+    }
+
+    /// Write one request line (no reply expected yet).
+    pub fn send(&mut self, req: &Json) -> anyhow::Result<()> {
         writeln!(self.stream, "{req}")?;
+        Ok(())
+    }
+
+    /// Read one reply line, mapping closed connections and read timeouts
+    /// to typed errors.
+    pub fn read_reply(&mut self) -> anyhow::Result<Json> {
         let mut line = String::new();
-        self.reader.read_line(&mut line)?;
+        match self.reader.read_line(&mut line) {
+            Ok(0) => anyhow::bail!("server closed the connection"),
+            Ok(_) => {}
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                anyhow::bail!("timed out waiting for the server (read timeout)")
+            }
+            Err(e) => return Err(e.into()),
+        }
         Json::parse(line.trim()).map_err(|e| anyhow::anyhow!("bad reply: {e}"))
     }
 
+    pub fn call(&mut self, req: &Json) -> anyhow::Result<Json> {
+        self.send(req)?;
+        self.read_reply()
+    }
+
+    /// v1 generate (seed protocol).
     pub fn generate(&mut self, prompt: &str, task: &str) -> anyhow::Result<Json> {
         let mut j = Json::obj();
         j.set("prompt", Json::Str(prompt.into()))
@@ -300,8 +527,29 @@ impl Client {
         self.call(&j)
     }
 
-    /// Streaming generate: returns the per-round token frames and the final
-    /// summary object (which is also the only line for error replies).
+    /// v2 generate with typed options and a client-chosen `req_id` (the
+    /// id [`cancel`](Client::cancel) addresses).
+    pub fn generate_with(
+        &mut self,
+        prompt: &str,
+        task: &str,
+        req_id: u64,
+        options: &GenOptions,
+    ) -> anyhow::Result<Json> {
+        self.call(&v2_line(prompt, task, req_id, options, false))
+    }
+
+    /// Cancel a submitted request by `req_id` (from any connection).
+    pub fn cancel(&mut self, req_id: u64) -> anyhow::Result<Json> {
+        let mut j = Json::obj();
+        j.set("cmd", Json::Str("cancel".into()))
+            .set("req_id", (req_id as usize).into());
+        self.call(&j)
+    }
+
+    /// v1 streaming generate: returns the per-round token frames and the
+    /// final summary object (which is also the only line for error
+    /// replies).
     pub fn generate_stream(
         &mut self,
         prompt: &str,
@@ -311,19 +559,51 @@ impl Client {
         j.set("prompt", Json::Str(prompt.into()))
             .set("task", Json::Str(task.into()))
             .set("stream", true.into());
-        writeln!(self.stream, "{j}")?;
+        self.send(&j)?;
+        self.collect_stream()
+    }
+
+    /// v2 streaming generate with typed options.
+    pub fn generate_stream_with(
+        &mut self,
+        prompt: &str,
+        task: &str,
+        req_id: u64,
+        options: &GenOptions,
+    ) -> anyhow::Result<(Vec<Json>, Json)> {
+        self.send(&v2_line(prompt, task, req_id, options, true))?;
+        self.collect_stream()
+    }
+
+    /// Drain `frame:"tokens"` lines until the terminating non-frame line.
+    fn collect_stream(&mut self) -> anyhow::Result<(Vec<Json>, Json)> {
         let mut frames = Vec::new();
         loop {
-            let mut line = String::new();
-            if self.reader.read_line(&mut line)? == 0 {
-                anyhow::bail!("server closed mid-stream");
-            }
-            let reply = Json::parse(line.trim())
-                .map_err(|e| anyhow::anyhow!("bad reply: {e}"))?;
+            let reply = self
+                .read_reply()
+                .map_err(|e| anyhow::anyhow!("mid-stream: {e}"))?;
             match reply.get("frame").and_then(Json::as_str) {
                 Some("tokens") => frames.push(reply),
                 _ => return Ok((frames, reply)),
             }
         }
     }
+}
+
+/// Build one v2 generate line.
+fn v2_line(prompt: &str, task: &str, req_id: u64, options: &GenOptions, stream: bool) -> Json {
+    let mut j = Json::obj();
+    j.set("v", 2usize.into())
+        .set("req_id", (req_id as usize).into())
+        .set("prompt", Json::Str(prompt.into()))
+        .set("task", Json::Str(task.into()));
+    if stream {
+        j.set("stream", true.into());
+    }
+    let o = options.to_json();
+    let empty = o.as_obj().map(|m| m.is_empty()).unwrap_or(true);
+    if !empty {
+        j.set("options", o);
+    }
+    j
 }

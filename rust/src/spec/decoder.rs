@@ -8,6 +8,7 @@
 //! experiments, benches and the CLI: construct a session, step it to
 //! completion, hand back the aggregate [`DecodeOutcome`].
 
+use crate::api::FinishReason;
 use crate::config::{ExecMode, KernelPath};
 use crate::hetero::{LatencyModel, Mapping};
 use crate::models::VariantKey;
@@ -64,6 +65,10 @@ pub struct DecodeOutcome {
     pub sim_s: f64,
     /// Real PJRT wall-clock seconds on this machine.
     pub real_s: f64,
+    /// Why the decode ended ([`FinishReason::Length`] covers both the
+    /// `max_new` cap and bucket-space exhaustion; cancellation/deadline
+    /// aborts are stamped by the serving worker, not the session).
+    pub finish: FinishReason,
 }
 
 impl DecodeOutcome {

@@ -29,6 +29,29 @@ impl AcceptRule {
     }
 }
 
+/// Re-shape a probability distribution in place to temperature `t`:
+/// `p_i ← p_i^(1/t) / Σ p_j^(1/t)`. `t = 1` is the identity (skipped —
+/// the default [`crate::api::SamplingMode`] pays nothing); `t < 1`
+/// sharpens toward the argmax, `t > 1` flattens. Non-positive or
+/// non-finite temperatures are rejected upstream
+/// ([`crate::api::GenOptions::validate`]) and ignored here.
+pub fn apply_temperature(p: &mut [f32], temperature: f32) {
+    if !(temperature.is_finite() && temperature > 0.0) || (temperature - 1.0).abs() < 1e-9 {
+        return;
+    }
+    let inv_t = 1.0 / temperature;
+    let mut z = 0.0f32;
+    for v in p.iter_mut() {
+        *v = v.max(0.0).powf(inv_t);
+        z += *v;
+    }
+    if z > 0.0 {
+        for v in p.iter_mut() {
+            *v /= z;
+        }
+    }
+}
+
 /// Greedy rule: length of the leading run where drafted == target argmax.
 pub fn greedy_accept_len(drafted: &[u32], target_argmax: &[u32]) -> usize {
     debug_assert!(target_argmax.len() >= drafted.len());
@@ -183,5 +206,35 @@ mod tests {
     fn accept_rule_parse() {
         assert_eq!(AcceptRule::parse("greedy").unwrap(), AcceptRule::Greedy);
         assert!(AcceptRule::parse("x").is_err());
+    }
+
+    #[test]
+    fn temperature_one_is_identity() {
+        let orig = vec![0.1f32, 0.2, 0.3, 0.4];
+        let mut p = orig.clone();
+        apply_temperature(&mut p, 1.0);
+        assert_eq!(p, orig);
+        // Invalid temperatures are ignored (validated upstream).
+        apply_temperature(&mut p, 0.0);
+        assert_eq!(p, orig);
+        apply_temperature(&mut p, f32::NAN);
+        assert_eq!(p, orig);
+    }
+
+    #[test]
+    fn temperature_sharpens_and_flattens() {
+        let mut sharp = vec![0.1f32, 0.2, 0.3, 0.4];
+        apply_temperature(&mut sharp, 0.5);
+        let mut flat = vec![0.1f32, 0.2, 0.3, 0.4];
+        apply_temperature(&mut flat, 4.0);
+        // Still distributions.
+        let zs: f32 = sharp.iter().sum();
+        let zf: f32 = flat.iter().sum();
+        assert!((zs - 1.0).abs() < 1e-5 && (zf - 1.0).abs() < 1e-5);
+        // Cold shifts mass toward the mode; hot flattens toward uniform.
+        assert!(sharp[3] > 0.4 && sharp[0] < 0.1, "{sharp:?}");
+        assert!(flat[3] < 0.4 && flat[0] > 0.1, "{flat:?}");
+        // Argmax is temperature-invariant.
+        assert!(sharp[3] > sharp[2] && flat[3] > flat[2]);
     }
 }

@@ -30,6 +30,7 @@
 //! each session its *share* of the batched dispatch cost instead (see
 //! [`crate::hetero::LatencyModel::batched_forward_latency`]).
 
+use crate::api::FinishReason;
 use crate::config::{ExecMode, KernelPath};
 use crate::hetero::{LatencyModel, Mapping, PuAssignment, PuRoute};
 use crate::models::VariantKey;
@@ -38,7 +39,7 @@ use crate::tokenizer::EOS_ID;
 use crate::util::rng::Rng;
 
 use super::decoder::{DecodeOutcome, DecoderSetup};
-use super::sampling::{greedy_accept_len, stochastic_accept, AcceptRule};
+use super::sampling::{apply_temperature, greedy_accept_len, stochastic_accept, AcceptRule};
 
 /// Static bounds a session computes once at admission.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -259,6 +260,15 @@ pub struct DecodeSession {
     /// call's inputs — become available). Maintained by the timeline-aware
     /// executor; stays 0 on the serialized paths.
     ready_s: f64,
+    /// Sampling temperature for the stochastic accept rule (1.0 = the
+    /// raw model distributions; ignored under the greedy rule, whose
+    /// argmax is temperature-invariant).
+    temperature: f32,
+    /// Token ids treated like EOS (per-request stop tokens).
+    stop_tokens: Vec<u32>,
+    /// Token-id stop sequences: the session finishes — and truncates the
+    /// matched suffix — when the generated output ends with any of these.
+    stop_seqs: Vec<Vec<u32>>,
 }
 
 impl DecodeSession {
@@ -293,6 +303,9 @@ impl DecodeSession {
             phase: RoundPhase::Idle,
             round_base: RoundBase::default(),
             ready_s: 0.0,
+            temperature: 1.0,
+            stop_tokens: Vec::new(),
+            stop_seqs: Vec::new(),
         }
     }
 
@@ -373,6 +386,33 @@ impl DecodeSession {
     /// session at *this* mapping).
     pub fn mapping(&self) -> Mapping {
         self.setup.mapping
+    }
+
+    /// Why the session finished ([`FinishReason::Length`] until a stop
+    /// condition fires; meaningful once [`is_done`](Self::is_done)).
+    pub fn finish_reason(&self) -> FinishReason {
+        self.out.finish
+    }
+
+    /// Sampling temperature for the stochastic accept rule (per-request
+    /// option; 1.0 = raw distributions). Invalid values are ignored.
+    pub fn set_temperature(&mut self, t: f32) {
+        if t.is_finite() && t > 0.0 {
+            self.temperature = t;
+        }
+    }
+
+    /// Token ids treated like EOS for this request.
+    pub fn set_stop_tokens(&mut self, ids: Vec<u32>) {
+        self.stop_tokens = ids;
+    }
+
+    /// Token-id stop sequences; on a suffix match the session finishes
+    /// with [`FinishReason::StopSequence`] and the matched suffix is
+    /// truncated from the output (empty sequences are ignored).
+    pub fn set_stop_sequences(&mut self, seqs: Vec<Vec<u32>>) {
+        self.stop_seqs = seqs;
+        self.stop_seqs.retain(|s| !s.is_empty());
     }
 
     /// Re-decide speculation for the next round (round-level policy hook).
@@ -535,13 +575,8 @@ impl DecodeSession {
                 self.out.sim_s += r.sim_s;
                 self.out.target_calls += 1;
                 let nxt = r.fwd.argmax(r.row, self.ids.len() - 1);
-                if nxt == EOS_ID {
-                    self.done = true;
-                    return Ok(StepProgress::Round(self.round_outcome()));
-                }
-                self.ids.push(nxt);
-                self.out.tokens.push(nxt);
-                if self.out.tokens.len() >= self.limits.cap {
+                if let Some(reason) = self.push_committed(nxt) {
+                    self.out.finish = reason;
                     self.done = true;
                 }
                 Ok(StepProgress::Round(self.round_outcome()))
@@ -554,7 +589,9 @@ impl DecodeSession {
                 let cur = self.ids.len();
                 let tok = r.fwd.argmax(r.row, cur - 1);
                 if self.setup.rule == AcceptRule::Stochastic {
-                    st.draft_probs.push(r.fwd.probs(r.row, cur - 1));
+                    let mut p = r.fwd.probs(r.row, cur - 1);
+                    apply_temperature(&mut p, self.temperature);
+                    st.draft_probs.push(p);
                 }
                 st.drafted.push(tok);
                 self.ids.push(tok);
@@ -584,7 +621,11 @@ impl DecodeSession {
                     }
                     AcceptRule::Stochastic => {
                         let target_probs: Vec<Vec<f32>> = (0..=st.g)
-                            .map(|i| r.fwd.probs(r.row, st.base_len - 1 + i))
+                            .map(|i| {
+                                let mut p = r.fwd.probs(r.row, st.base_len - 1 + i);
+                                apply_temperature(&mut p, self.temperature);
+                                p
+                            })
                             .collect();
                         let o = stochastic_accept(
                             &st.drafted,
@@ -680,30 +721,57 @@ impl DecodeSession {
     /// The round-commit state transition, shared by both speculative paths
     /// (public so the edge-case tests can drive it without an engine):
     /// append the accepted draft prefix then the correction token, stopping
-    /// at EOS or the generation cap. Marks and returns session completion.
+    /// at EOS, a per-request stop condition, or the generation cap. Marks
+    /// and returns session completion; the reason lands on
+    /// [`finish_reason`](Self::finish_reason).
     pub fn commit_round(&mut self, accepted: &[u32], correction: u32) -> bool {
         for &t in accepted {
-            if t == EOS_ID {
-                self.done = true;
-                return true;
-            }
-            self.ids.push(t);
-            self.out.tokens.push(t);
-            if self.out.tokens.len() >= self.limits.cap {
+            if let Some(reason) = self.push_committed(t) {
+                self.out.finish = reason;
                 self.done = true;
                 return true;
             }
         }
-        if correction == EOS_ID {
+        if let Some(reason) = self.push_committed(correction) {
+            self.out.finish = reason;
             self.done = true;
             return true;
         }
-        self.ids.push(correction);
-        self.out.tokens.push(correction);
-        if self.out.tokens.len() >= self.limits.cap {
-            self.done = true;
-        }
         self.done
+    }
+
+    /// Commit one token to the output, returning the finish reason the
+    /// commit triggered (None = the session keeps going). EOS and stop
+    /// tokens finish *without* being emitted; a stop-sequence match
+    /// finishes with the matched suffix truncated from the output; the
+    /// generation cap finishes with the token kept. With no stops
+    /// configured this is exactly the seed commit rule.
+    fn push_committed(&mut self, t: u32) -> Option<FinishReason> {
+        if t == EOS_ID || self.stop_tokens.contains(&t) {
+            return Some(FinishReason::Stop);
+        }
+        self.ids.push(t);
+        self.out.tokens.push(t);
+        if let Some(n) = self.stop_seq_match() {
+            let keep = self.out.tokens.len() - n;
+            self.out.tokens.truncate(keep);
+            return Some(FinishReason::StopSequence);
+        }
+        if self.out.tokens.len() >= self.limits.cap {
+            return Some(FinishReason::Length);
+        }
+        None
+    }
+
+    /// Length of the longest configured stop sequence the generated
+    /// output currently ends with.
+    fn stop_seq_match(&self) -> Option<usize> {
+        let out = &self.out.tokens;
+        self.stop_seqs
+            .iter()
+            .filter(|s| s.len() <= out.len() && out.ends_with(s.as_slice()))
+            .map(|s| s.len())
+            .max()
     }
 
     fn counters(&self) -> RoundBase {
@@ -716,10 +784,20 @@ impl DecodeSession {
         }
     }
 
-    /// Per-round delta against the snapshot taken at round start.
+    /// Per-round delta against the snapshot taken at round start. A
+    /// stop-sequence match spanning a round boundary can truncate the
+    /// output *below* the snapshot; the committed delta is then empty
+    /// and [`DecodeOutcome::tokens`] is the authoritative output (the
+    /// serving worker streams from it with a stop-length hold-back, so
+    /// clients never see tokens a later match truncates).
     fn round_outcome(&self) -> StepOutcome {
         StepOutcome {
-            committed: self.out.tokens[self.round_base.tok..].to_vec(),
+            committed: self
+                .out
+                .tokens
+                .get(self.round_base.tok..)
+                .map(|s| s.to_vec())
+                .unwrap_or_default(),
             drafted: self.out.n_drafted - self.round_base.drafted,
             accepted: self.out.n_accepted - self.round_base.accepted,
             sim_s: self.out.sim_s - self.round_base.sim_s,
@@ -785,5 +863,50 @@ mod tests {
     fn fresh_session_is_at_round_boundary() {
         let s = session(8);
         assert!(!s.mid_round());
+    }
+
+    #[test]
+    fn stop_token_finishes_like_eos() {
+        let mut s = session(8);
+        s.set_stop_tokens(vec![42]);
+        assert!(s.commit_round(&[10, 42, 11], 12));
+        assert!(s.is_done());
+        assert_eq!(s.finish_reason(), crate::api::FinishReason::Stop);
+        // The stop token and everything after it are excluded.
+        assert_eq!(s.outcome().tokens, vec![10]);
+    }
+
+    #[test]
+    fn stop_sequence_truncation_is_exact() {
+        let mut s = session(16);
+        s.set_stop_sequences(vec![vec![7, 8], vec![]]); // empty seq ignored
+        assert!(s.commit_round(&[5, 6, 7, 8, 9], 10));
+        assert!(s.is_done());
+        assert_eq!(s.finish_reason(), crate::api::FinishReason::StopSequence);
+        // Output ends exactly before the matched sequence.
+        assert_eq!(s.outcome().tokens, vec![5, 6]);
+    }
+
+    #[test]
+    fn stop_sequence_matches_across_rounds() {
+        let mut s = session(16);
+        s.set_stop_sequences(vec![vec![7, 8]]);
+        assert!(!s.commit_round(&[5, 7], 9)); // ends ...7, 9 — no match yet
+        assert!(s.commit_round(&[7, 8], 10)); // ...9, 7, 8 matches
+        assert_eq!(s.outcome().tokens, vec![5, 7, 9]);
+        assert_eq!(s.finish_reason(), crate::api::FinishReason::StopSequence);
+    }
+
+    #[test]
+    fn default_session_finish_reasons_are_seed_shaped() {
+        // Cap-limited commit reports Length, exactly the seed cap rule.
+        let mut s = session(2);
+        assert!(s.commit_round(&[4, 5, 6], 7));
+        assert_eq!(s.outcome().tokens, vec![4, 5]);
+        assert_eq!(s.finish_reason(), crate::api::FinishReason::Length);
+        // EOS reports Stop.
+        let mut s = session(8);
+        assert!(s.commit_round(&[4, crate::tokenizer::EOS_ID], 7));
+        assert_eq!(s.finish_reason(), crate::api::FinishReason::Stop);
     }
 }

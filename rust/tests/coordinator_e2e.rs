@@ -42,10 +42,15 @@ fn coordinator_serves_requests() {
         return;
     }
     let coord = Coordinator::start(cfg(), Platform::imx95()).unwrap();
-    let r = coord.submit_blocking(sample_request(1)).unwrap();
+    let r = coord.submit(sample_request(1)).wait().unwrap();
     assert!(!r.tokens.is_empty());
     assert!(r.speculative);
     assert!(r.sim_s > 0.0 && r.real_s > 0.0);
+    // A natural completion carries a natural finish reason.
+    assert!(matches!(
+        r.finish,
+        specedge::api::FinishReason::Stop | specedge::api::FinishReason::Length
+    ));
     let report = coord.metrics.snapshot();
     assert_eq!(report.requests, 1);
     coord.shutdown();
@@ -57,11 +62,11 @@ fn coordinator_concurrent_submissions() {
         return;
     }
     let coord = Arc::new(Coordinator::start(cfg(), Platform::imx95()).unwrap());
-    let rxs: Vec<_> = (0..4)
-        .map(|i| coord.submit(sample_request(i)).unwrap())
+    let handles: Vec<_> = (0..4)
+        .map(|i| coord.submit(sample_request(i)))
         .collect();
-    for rx in rxs {
-        let r = rx.recv().unwrap();
+    for h in handles {
+        let r = h.wait().unwrap();
         assert!(!r.completion.is_empty());
     }
     assert_eq!(coord.metrics.snapshot().requests, 4);
@@ -78,7 +83,7 @@ fn adaptive_policy_learns_from_served_traffic() {
     let coord = Coordinator::start(c, Platform::imx95()).unwrap();
     let before = coord.policy.alpha_estimate("translate");
     for i in 0..3 {
-        coord.submit_blocking(sample_request(i)).unwrap();
+        coord.submit(sample_request(i)).wait().unwrap();
     }
     let after = coord.policy.alpha_estimate("translate");
     assert!((before - 0.90).abs() < 1e-9, "prior should be 0.90");
@@ -95,10 +100,10 @@ fn baseline_batching_path() {
     c.speculative = false;
     c.max_batch = 4;
     let coord = Arc::new(Coordinator::start(c, Platform::imx95()).unwrap());
-    let rxs: Vec<_> = (0..4)
-        .map(|i| coord.submit(sample_request(i)).unwrap())
+    let handles: Vec<_> = (0..4)
+        .map(|i| coord.submit(sample_request(i)))
         .collect();
-    let outs: Vec<_> = rxs.into_iter().map(|rx| rx.recv().unwrap()).collect();
+    let outs: Vec<_> = handles.into_iter().map(|h| h.wait().unwrap()).collect();
     // All four requests served, none speculative, identical prompts ⇒
     // identical completions.
     assert!(outs.iter().all(|o| !o.speculative));
@@ -119,10 +124,10 @@ fn legacy_lockstep_batching_matches_fused_baseline() {
         c.max_batch = 4;
         c.fuse = fuse;
         let coord = Arc::new(Coordinator::start(c, Platform::imx95()).unwrap());
-        let rxs: Vec<_> = (0..4)
-            .map(|i| coord.submit(sample_request(i)).unwrap())
+        let handles: Vec<_> = (0..4)
+            .map(|i| coord.submit(sample_request(i)))
             .collect();
-        let mut outs: Vec<_> = rxs.into_iter().map(|rx| rx.recv().unwrap()).collect();
+        let mut outs: Vec<_> = handles.into_iter().map(|h| h.wait().unwrap()).collect();
         outs.sort_by_key(|o| o.id);
         Arc::try_unwrap(coord).ok().unwrap().shutdown();
         outs
@@ -194,10 +199,10 @@ fn run_mixed_batch(max_inflight: usize) -> (Vec<specedge::coordinator::EngineRes
     c.max_inflight = max_inflight;
     let coord = Arc::new(Coordinator::start(c, Platform::imx95()).unwrap());
     poison_hard_task(&coord);
-    let rxs: Vec<_> = (0..8)
-        .map(|i| coord.submit(mixed_request(i)).unwrap())
+    let handles: Vec<_> = (0..8)
+        .map(|i| coord.submit(mixed_request(i)))
         .collect();
-    let mut outs: Vec<_> = rxs.into_iter().map(|rx| rx.recv().unwrap()).collect();
+    let mut outs: Vec<_> = handles.into_iter().map(|h| h.wait().unwrap()).collect();
     outs.sort_by_key(|o| o.id);
     let report = coord.metrics.snapshot();
     Arc::try_unwrap(coord).ok().unwrap().shutdown();
@@ -251,11 +256,11 @@ fn streaming_submission_frames_reassemble_final_tokens() {
         return;
     }
     let coord = Coordinator::start(cfg(), Platform::imx95()).unwrap();
-    let (frames, final_rx) = coord.submit_streaming(sample_request(1)).unwrap();
+    let handle = coord.submit(sample_request(1));
     let mut streamed: Vec<u32> = Vec::new();
     let mut saw_done = false;
     let mut last_round = 0;
-    for f in frames.iter() {
+    for f in handle.frames() {
         assert!(f.round > last_round, "rounds must be monotonic");
         last_round = f.round;
         streamed.extend(&f.tokens);
@@ -264,7 +269,7 @@ fn streaming_submission_frames_reassemble_final_tokens() {
         }
     }
     assert!(saw_done, "stream must end with a done frame");
-    let fin = final_rx.recv().unwrap();
+    let fin = handle.wait().unwrap();
     assert_eq!(streamed, fin.tokens, "frames must reassemble the completion");
     assert!(fin.rounds >= last_round);
     coord.shutdown();
@@ -315,7 +320,7 @@ fn workload_replay_through_coordinator() {
     let wl = Workload::from_manifest(&engine_manifest, &tok, Some("translate"), Some(3))
         .unwrap();
     for req in wl.requests {
-        let r = coord.submit_blocking(req).unwrap();
+        let r = coord.submit(req).wait().unwrap();
         assert!(!r.completion.is_empty());
     }
     let report = coord.metrics.snapshot();

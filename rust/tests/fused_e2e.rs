@@ -245,23 +245,21 @@ fn run_coord(max_inflight: usize, n: usize) -> (Vec<Vec<u32>>, specedge::metrics
         .iter()
         .filter(|s| s.task == "translate")
         .collect();
-    let rxs: Vec<_> = (0..n)
+    let handles: Vec<_> = (0..n)
         .map(|i| {
             let s = samples[i % samples.len()];
             let mut prompt = tokenizer.encode(&s.prompt, true).unwrap();
             prompt.push(SEP_ID);
-            coord
-                .submit(Request {
-                    id: i as u64,
-                    task: "translate".into(),
-                    prompt,
-                    truth: String::new(),
-                    arrival_s: 0.0,
-                })
-                .unwrap()
+            coord.submit(Request {
+                id: i as u64,
+                task: "translate".into(),
+                prompt,
+                truth: String::new(),
+                arrival_s: 0.0,
+            })
         })
         .collect();
-    let mut outs: Vec<_> = rxs.into_iter().map(|rx| rx.recv().unwrap()).collect();
+    let mut outs: Vec<_> = handles.into_iter().map(|h| h.wait().unwrap()).collect();
     outs.sort_by_key(|o| o.id);
     let report = coord.metrics.snapshot();
     Arc::try_unwrap(coord).ok().unwrap().shutdown();

@@ -1,0 +1,458 @@
+//! Request-lifecycle API v2 end-to-end tests: cancellation frees the
+//! scheduler slot, deadlines abort with partial output, stop sequences
+//! truncate exactly, priority ordering jumps the queue, and the v1 wire
+//! protocol stays byte-compatible with the seed server (skipped when
+//! `make artifacts` hasn't run).
+
+use specedge::api::{FinishReason, GenOptions, GenerationRequest};
+use specedge::config::RunConfig;
+use specedge::coordinator::Coordinator;
+use specedge::hetero::Platform;
+use specedge::server::{Client, Server};
+use specedge::tokenizer::Tokenizer;
+use specedge::util::json::Json;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+fn have_artifacts() -> bool {
+    if Path::new("artifacts/manifest.json").exists() {
+        true
+    } else {
+        eprintln!("SKIP: artifacts missing (run `make artifacts`)");
+        false
+    }
+}
+
+/// γ=1 keeps rounds small (1–2 tokens each), so mid-request lifecycle
+/// events have many round boundaries to land on.
+fn cfg() -> RunConfig {
+    RunConfig {
+        artifacts_dir: PathBuf::from("artifacts"),
+        max_new_tokens: 64,
+        gamma: Some(1),
+        max_inflight: 1,
+        ..RunConfig::default()
+    }
+}
+
+/// A real eval-set prompt with a ~57-token reference completion, so γ=1
+/// decodes span dozens of round boundaries for lifecycle events to land
+/// on.
+const LONG_PROMPT: &str = "tr: mogdi mogdi peni ture buda ture hevboco curih ture milori";
+
+fn prompt(text: &str) -> Vec<u32> {
+    let t = Tokenizer::builtin();
+    let mut p = t.encode(text, true).unwrap();
+    p.push(specedge::tokenizer::SEP_ID);
+    p
+}
+
+fn request(id: u64, options: GenOptions) -> GenerationRequest {
+    GenerationRequest::new(id, "translate", prompt(LONG_PROMPT)).with_options(options)
+}
+
+#[test]
+fn mid_stream_cancel_frees_the_slot() {
+    if !have_artifacts() {
+        return;
+    }
+    // Reference run: blocker decodes to completion while a co-scheduled
+    // request waits for the (single) slot.
+    let coord = Coordinator::start(cfg(), Platform::imx95()).unwrap();
+    let blocker = coord.submit(request(1, GenOptions::default()));
+    let waiter = coord.submit(request(2, GenOptions::default()));
+    let full = blocker.wait().unwrap();
+    let waiter_full = waiter.wait().unwrap();
+    coord.shutdown();
+    assert!(
+        full.rounds >= 4,
+        "precondition: the blocker must decode over several rounds, got {}",
+        full.rounds
+    );
+
+    // Cancel run: same pair, but the blocker is cancelled after its
+    // first streamed frame — it must abort at a round boundary with the
+    // tokens committed so far, and the waiter must reach the slot sooner.
+    let coord = Coordinator::start(cfg(), Platform::imx95()).unwrap();
+    let blocker = coord.submit(request(1, GenOptions::default()));
+    let waiter = coord.submit(request(2, GenOptions::default()));
+    let first = blocker.frames().next().expect("first frame");
+    assert!(!first.done, "a multi-round decode must not finish in one frame");
+    blocker.cancel();
+    let cancelled = blocker.wait().unwrap();
+    let waiter_cancel = waiter.wait().unwrap();
+    let report = coord.metrics.snapshot();
+    coord.shutdown();
+
+    assert_eq!(cancelled.finish, FinishReason::Cancelled, "{cancelled:?}");
+    assert!(
+        cancelled.rounds >= 1 && cancelled.rounds < full.rounds,
+        "cancel must abort mid-decode: {} vs full {}",
+        cancelled.rounds,
+        full.rounds
+    );
+    assert!(
+        cancelled.tokens.len() < full.tokens.len(),
+        "cancelled response must carry partial output"
+    );
+    // Partial output is a prefix of the full (greedy) stream.
+    assert_eq!(cancelled.tokens[..], full.tokens[..cancelled.tokens.len()]);
+    // The freed slot admits the co-scheduled request earlier: its
+    // makespan (queue wait, real clock) improves.
+    assert_eq!(waiter_cancel.tokens, waiter_full.tokens);
+    assert!(
+        waiter_cancel.queue_s < waiter_full.queue_s,
+        "cancel must free the slot sooner: {} !< {}",
+        waiter_cancel.queue_s,
+        waiter_full.queue_s
+    );
+    assert_eq!(report.finish_count(FinishReason::Cancelled), 1);
+}
+
+#[test]
+fn cancel_in_queue_sheds_without_decoding() {
+    if !have_artifacts() {
+        return;
+    }
+    let coord = Coordinator::start(cfg(), Platform::imx95()).unwrap();
+    let blocker = coord.submit(request(1, GenOptions::default()));
+    let doomed = coord.submit(request(2, GenOptions::default()));
+    doomed.cancel();
+    let r = doomed.wait().unwrap();
+    assert_eq!(r.finish, FinishReason::Cancelled);
+    assert!(r.tokens.is_empty() && r.rounds == 0);
+    // The queue-cancelled request also terminates its frame stream.
+    assert!(doomed.frames().all(|f| f.done));
+    blocker.wait().unwrap();
+    // Coordinator-level cancel by id: unknown ids report false.
+    assert!(!coord.cancel(999));
+    coord.shutdown();
+}
+
+#[test]
+fn deadline_expiry_returns_partial_tokens() {
+    if !have_artifacts() {
+        return;
+    }
+    // Reference: unconstrained decode (sim seconds are deterministic).
+    let coord = Coordinator::start(cfg(), Platform::imx95()).unwrap();
+    let full = coord.submit(request(1, GenOptions::default())).wait().unwrap();
+    coord.shutdown();
+    assert!(full.rounds >= 3, "precondition: multi-round decode");
+    assert!(full.sim_s > 0.0);
+
+    // Budget half the simulated decode: the session must abort at a
+    // round boundary partway through.
+    let coord = Coordinator::start(cfg(), Platform::imx95()).unwrap();
+    let opts = GenOptions { deadline_s: Some(full.sim_s / 2.0), ..GenOptions::default() };
+    let r = coord.submit(request(1, opts)).wait().unwrap();
+    let report = coord.metrics.snapshot();
+    coord.shutdown();
+    assert_eq!(r.finish, FinishReason::DeadlineExceeded, "{r:?}");
+    assert!(
+        !r.tokens.is_empty() && r.tokens.len() < full.tokens.len(),
+        "deadline abort must return partial output: {} of {}",
+        r.tokens.len(),
+        full.tokens.len()
+    );
+    assert_eq!(r.tokens[..], full.tokens[..r.tokens.len()]);
+    assert_eq!(report.deadline_requests, 1);
+    assert_eq!(report.deadline_missed, 1);
+    assert!((report.deadline_miss_rate() - 1.0).abs() < 1e-12);
+    assert_eq!(report.finish_count(FinishReason::DeadlineExceeded), 1);
+}
+
+#[test]
+fn expired_deadline_is_shed_at_admission() {
+    if !have_artifacts() {
+        return;
+    }
+    let coord = Coordinator::start(cfg(), Platform::imx95()).unwrap();
+    let opts = GenOptions { deadline_s: Some(0.0), ..GenOptions::default() };
+    let r = coord.submit(request(1, opts)).wait().unwrap();
+    let report = coord.metrics.snapshot();
+    coord.shutdown();
+    assert_eq!(r.finish, FinishReason::DeadlineExceeded);
+    assert!(r.tokens.is_empty() && r.rounds == 0, "{r:?}");
+    // Shed before decode: no latency-population pollution, but the
+    // lifecycle counters move.
+    assert_eq!(report.requests, 0);
+    assert_eq!(report.deadline_missed, 1);
+}
+
+#[test]
+fn stop_sequence_truncation_is_exact_end_to_end() {
+    if !have_artifacts() {
+        return;
+    }
+    let tok = Tokenizer::builtin();
+    let coord = Coordinator::start(cfg(), Platform::imx95()).unwrap();
+    let full = coord.submit(request(1, GenOptions::default())).wait().unwrap();
+    assert!(
+        full.completion.len() >= 4,
+        "precondition: completion long enough to cut, got {:?}",
+        full.completion
+    );
+    // Pick a mid-completion substring as the stop sequence; greedy
+    // decoding reproduces the same stream, so the output must be the
+    // full completion truncated exactly at that substring's first
+    // occurrence.
+    let stop = full.completion[2..4].to_string();
+    let expected = &full.completion[..full.completion.find(&stop).unwrap()];
+    let opts = GenOptions { stop_sequences: vec![stop.clone()], ..GenOptions::default() };
+    let handle = coord.submit(request(2, opts));
+    // Drain the stream too: the worker's stop-length hold-back must keep
+    // frames truncation-exact (no token a later match removes is ever
+    // streamed).
+    let mut streamed: Vec<u32> = Vec::new();
+    for f in handle.frames() {
+        streamed.extend(&f.tokens);
+    }
+    let r = handle.wait().unwrap();
+    coord.shutdown();
+    assert_eq!(r.finish, FinishReason::StopSequence, "{r:?}");
+    assert_eq!(r.completion, expected, "stop {stop:?} of {:?}", full.completion);
+    // Token-level: a prefix of the full stream, stop tokens excluded.
+    assert_eq!(r.tokens[..], full.tokens[..r.tokens.len()]);
+    assert_eq!(tok.decode(&r.tokens), expected);
+    assert_eq!(streamed, r.tokens, "streamed frames must reassemble the truncated final");
+}
+
+#[test]
+fn priority_jumps_earlier_low_priority_arrivals() {
+    if !have_artifacts() {
+        return;
+    }
+    let coord = Coordinator::start(cfg(), Platform::imx95()).unwrap();
+    // Occupy the single slot so everything below truly queues.
+    let blocker = coord.submit(request(1, GenOptions::default()));
+    let lows: Vec<_> = (10..13)
+        .map(|i| {
+            coord.submit(request(i, GenOptions { priority: -5, ..GenOptions::default() }))
+        })
+        .collect();
+    // Submitted last, admitted first among the queued set.
+    let high = coord.submit(request(2, GenOptions { priority: 5, ..GenOptions::default() }));
+    blocker.wait().unwrap();
+    let high_r = high.wait().unwrap();
+    let low_rs: Vec<_> = lows.into_iter().map(|h| h.wait().unwrap()).collect();
+    coord.shutdown();
+    // Single worker, max_inflight 1: admission order == completion
+    // order, and queue_s measures time-to-admission. The high-priority
+    // request, despite arriving after every low one, waited less than
+    // all of them.
+    for low in &low_rs {
+        assert!(
+            high_r.queue_s < low.queue_s,
+            "priority inversion: high waited {} vs low {}",
+            high_r.queue_s,
+            low.queue_s
+        );
+        assert!(!low.tokens.is_empty(), "low-priority work must not starve");
+    }
+}
+
+// ---------------------------------------------------------------------
+// Wire-protocol tests.
+// ---------------------------------------------------------------------
+
+fn start_server(c: RunConfig) -> (Arc<Coordinator>, Server) {
+    let coord = Arc::new(Coordinator::start(c, Platform::imx95()).unwrap());
+    let server = Server::start(Arc::clone(&coord), Tokenizer::builtin(), 0).unwrap();
+    (coord, server)
+}
+
+fn stop_server(coord: Arc<Coordinator>, server: Server, client: &mut Client) {
+    let mut sd = Json::obj();
+    sd.set("cmd", Json::Str("shutdown".into()));
+    let _ = client.call(&sd);
+    server.stop();
+    Arc::try_unwrap(coord).ok().unwrap().shutdown();
+}
+
+/// One raw line-level roundtrip (fresh connection, exact reply bytes).
+fn raw_roundtrip(port: u16, line: &str) -> String {
+    use std::io::{BufRead, BufReader, Write};
+    let s = std::net::TcpStream::connect(("127.0.0.1", port)).unwrap();
+    let mut w = s.try_clone().unwrap();
+    writeln!(w, "{line}").unwrap();
+    let mut reply = String::new();
+    BufReader::new(s).read_line(&mut reply).unwrap();
+    reply.trim_end().to_string()
+}
+
+/// v1 wire parity: seed-protocol lines must produce byte-identical
+/// replies. Error replies are fully deterministic and pinned
+/// byte-for-byte; generate replies carry wall-clock fields, so their
+/// *shape* (exact key set — no v2 fields) and deterministic values are
+/// pinned instead. Run in isolation by the CI `protocol-compat` step.
+#[test]
+fn v1_protocol_compat_pinned_replies() {
+    if !have_artifacts() {
+        return;
+    }
+    let (coord, server) = start_server(cfg());
+    let port = server.port;
+
+    // Seed error replies, byte-for-byte.
+    assert_eq!(
+        raw_roundtrip(port, "@"),
+        r#"{"error":"bad json: json parse error at byte 0: unexpected character","ok":false}"#
+    );
+    assert_eq!(
+        raw_roundtrip(port, r#"{"task":"x"}"#),
+        r#"{"error":"missing `prompt`","ok":false}"#
+    );
+    assert_eq!(
+        raw_roundtrip(port, r#"{"cmd":"bogus"}"#),
+        r#"{"error":"unknown cmd \"bogus\"","ok":false}"#
+    );
+
+    // Seed generate reply: exactly the seed key set (no v2 leakage), in
+    // the codec's deterministic (sorted) order.
+    let line = format!(r#"{{"prompt":"{LONG_PROMPT}","task":"translate"}}"#);
+    let reply = raw_roundtrip(port, &line);
+    let j = Json::parse(&reply).unwrap();
+    let keys: Vec<&str> = j.as_obj().unwrap().keys().map(|k| k.as_str()).collect();
+    assert_eq!(
+        keys,
+        vec![
+            "alpha", "completion", "gamma", "ok", "queue_ms", "real_ms", "rounds",
+            "sim_ms", "speculative", "tokens"
+        ],
+        "v1 reply shape drifted: {reply}"
+    );
+    assert_eq!(j.get("ok"), Some(&Json::Bool(true)));
+    assert!(j.req_f64("sim_ms").unwrap() > 0.0);
+    assert!(j.req_usize("rounds").unwrap() > 0);
+    // Identical line, identical deterministic fields (sim clock, tokens,
+    // completion are reproducible run-to-run).
+    let again = Json::parse(&raw_roundtrip(port, &line)).unwrap();
+    for k in ["completion", "tokens", "sim_ms", "alpha", "gamma", "speculative"] {
+        assert_eq!(j.get(k), again.get(k), "nondeterministic v1 field {k}");
+    }
+
+    // Default-option v2 reproduces the v1 stream bit-for-bit, adding
+    // only the typed lifecycle fields.
+    let v2line =
+        format!(r#"{{"v":2,"req_id":7,"prompt":"{LONG_PROMPT}","task":"translate"}}"#);
+    let v2 = Json::parse(&raw_roundtrip(port, &v2line)).unwrap();
+    assert_eq!(v2.get("completion"), j.get("completion"));
+    assert_eq!(v2.get("tokens"), j.get("tokens"));
+    assert_eq!(v2.get("sim_ms"), j.get("sim_ms"));
+    assert_eq!(v2.get("v"), Some(&Json::Num(2.0)));
+    assert_eq!(v2.get("req_id"), Some(&Json::Num(7.0)));
+    assert!(v2.get("finish").and_then(Json::as_str).is_some());
+
+    let mut client = Client::connect(port).unwrap();
+    stop_server(coord, server, &mut client);
+}
+
+#[test]
+fn v2_options_and_typed_errors_over_the_wire() {
+    if !have_artifacts() {
+        return;
+    }
+    let (coord, server) = start_server(cfg());
+    let mut client = Client::connect(server.port).unwrap();
+    client
+        .set_read_timeout(Some(std::time::Duration::from_secs(60)))
+        .unwrap();
+
+    // Baseline full completion for comparison.
+    let full = client.generate(LONG_PROMPT, "translate").unwrap();
+    let full_tokens = full.req_usize("tokens").unwrap();
+    assert!(full_tokens > 2);
+
+    // max_new override truncates and reports Length.
+    let opts = GenOptions { max_new: Some(2), ..GenOptions::default() };
+    let r = client
+        .generate_with(LONG_PROMPT, "translate", 11, &opts)
+        .unwrap();
+    assert_eq!(r.get("ok"), Some(&Json::Bool(true)), "{r}");
+    assert_eq!(r.req_usize("tokens").unwrap(), 2);
+    assert_eq!(r.get("finish").and_then(Json::as_str), Some("length"));
+    assert_eq!(r.req_usize("req_id").unwrap(), 11);
+
+    // Typed bad_request taxonomy: unknown option, with queue state.
+    let mut bad = Json::obj();
+    bad.set("v", 2usize.into())
+        .set("prompt", Json::Str("tr: a".into()))
+        .set("options", Json::parse(r#"{"max_mew":3}"#).unwrap());
+    let e = client.call(&bad).unwrap();
+    assert_eq!(e.get("ok"), Some(&Json::Bool(false)));
+    assert_eq!(e.get("kind").and_then(Json::as_str), Some("bad_request"));
+    assert!(e.get("queue_len").is_some() && e.get("queue_capacity").is_some());
+
+    // Cancel command for an unknown id: typed bad_request echoing it.
+    let e = client.cancel(424242).unwrap();
+    assert_eq!(e.get("ok"), Some(&Json::Bool(false)));
+    assert_eq!(e.get("kind").and_then(Json::as_str), Some("bad_request"));
+    assert_eq!(e.req_usize("req_id").unwrap(), 424242);
+
+    // v2 streaming: frames carry req_id, the final is tagged and typed.
+    let (frames, fin) = client
+        .generate_stream_with(LONG_PROMPT, "translate", 12, &GenOptions::default())
+        .unwrap();
+    assert!(!frames.is_empty());
+    for f in &frames {
+        assert_eq!(f.req_usize("req_id").unwrap(), 12);
+    }
+    assert_eq!(fin.get("frame").and_then(Json::as_str), Some("final"));
+    assert!(fin.get("finish").and_then(Json::as_str).is_some());
+
+    // Lifecycle metrics made it to the wire.
+    let mut m = Json::obj();
+    m.set("cmd", Json::Str("metrics".into()));
+    let metrics = client.call(&m).unwrap();
+    assert!(metrics.get("finish_stop").is_some());
+    assert!(metrics.get("deadline_miss_rate").is_some());
+    assert!(metrics.get("slo_interactive").and_then(Json::as_usize).unwrap_or(0) >= 3);
+
+    stop_server(coord, server, &mut client);
+}
+
+#[test]
+fn wire_cancel_reaches_a_streaming_request() {
+    if !have_artifacts() {
+        return;
+    }
+    let (coord, server) = start_server(cfg());
+    let mut a = Client::connect(server.port).unwrap();
+    let mut b = Client::connect(server.port).unwrap();
+
+    // A opens a v2 streaming request; after its first frame, B cancels
+    // it by req_id from a different connection.
+    let line = format!(
+        r#"{{"v":2,"req_id":77,"stream":true,"prompt":"{LONG_PROMPT}","task":"translate"}}"#
+    );
+    a.send(&Json::parse(&line).unwrap()).unwrap();
+    let first = a.read_reply().unwrap();
+    assert_eq!(first.get("frame").and_then(Json::as_str), Some("tokens"), "{first}");
+    let cancel_reply = b.cancel(77).unwrap();
+    // Drain A's stream to its terminating line.
+    let fin = loop {
+        let line = a.read_reply().unwrap();
+        if line.get("frame").and_then(Json::as_str) != Some("tokens") {
+            break line;
+        }
+    };
+    // The cancel either caught the live request (ok reply, and A's
+    // final reports cancelled unless the decode finished in the race
+    // window) or arrived after completion (typed bad_request). Either
+    // way both sides see a coherent, typed story.
+    if cancel_reply.get("ok") == Some(&Json::Bool(true)) {
+        let finish = fin.get("finish").and_then(Json::as_str);
+        assert!(
+            finish == Some("cancelled")
+                || fin.get("kind").and_then(Json::as_str) == Some("cancelled")
+                || finish == Some("stop")
+                || finish == Some("length"),
+            "unexpected final after cancel: {fin}"
+        );
+    } else {
+        assert_eq!(cancel_reply.get("kind").and_then(Json::as_str), Some("bad_request"));
+    }
+
+    stop_server(coord, server, &mut a);
+}

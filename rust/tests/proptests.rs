@@ -258,18 +258,18 @@ fn prop_queue_never_exceeds_capacity() {
         let mut pushed = 0usize;
         for i in 0..40 {
             let (tx, _rx) = std::sync::mpsc::channel();
-            let item = QueueItem {
-                request: Request {
+            let item = QueueItem::new(
+                Request {
                     id: i,
                     task: "t".into(),
                     prompt: vec![1],
                     truth: String::new(),
                     arrival_s: 0.0,
-                },
-                enqueued: std::time::Instant::now(),
-                respond: tx,
-                token_tx: None,
-            };
+                }
+                .into(),
+                tx,
+                None,
+            );
             if q.push(item).is_ok() {
                 pushed += 1;
             }
