@@ -89,5 +89,39 @@ fn main() {
         std::hint::black_box(dse::explore_variant(&calib, &pair, 1, 0.9, 63));
     });
 
+    // The tree-aware search the `tree: auto` knob runs: every candidate
+    // mapping additionally scored against the TREE_SHAPES set. Low α is
+    // the regime where trees matter, so that's the point benched.
+    b.bench("explore_variant_tree_shapes_analytic", || {
+        std::hint::black_box(dse::explore_variant_with_shapes(
+            &lat,
+            &pair,
+            1,
+            0.15,
+            63,
+            &dse::TREE_SHAPES,
+        ));
+    });
+    b.bench("explore_variant_tree_shapes_calibrated", || {
+        std::hint::black_box(dse::explore_variant_with_shapes(
+            &calib,
+            &pair,
+            1,
+            0.15,
+            63,
+            &dse::TREE_SHAPES,
+        ));
+    });
+    b.bench("tree_speedup_single_shape", || {
+        std::hint::black_box(dse::tree_speedup(
+            &lat,
+            &pair,
+            mapping,
+            0.15,
+            63,
+            specedge::costmodel::TreeShape::new(4, 1),
+        ));
+    });
+
     b.finish();
 }

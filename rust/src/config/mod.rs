@@ -5,6 +5,7 @@
 //! platform calibration (the simulated i.MX95) lives in its own file,
 //! `configs/imx95.json`, parsed by `hetero::platform`.
 
+use crate::costmodel::TreeShape;
 use crate::util::json::Json;
 use std::path::{Path, PathBuf};
 
@@ -112,6 +113,41 @@ impl DecisionMode {
     }
 }
 
+/// Speculation-*tree* mode (the `tree` knob). `off` (the default) keeps
+/// the linear γ-chain and is bit-identical to the historical behavior;
+/// `auto` lets the decision layer score a small set of `(branching,
+/// depth)` shapes against the chain per decision (chain wins keep the
+/// chain); an explicit `KxD` shape pins tree speculation to that shape
+/// whenever the engine speculates at all. Trees run only under the
+/// modular exec mode — the monolithic spec-step HLO has the chain baked
+/// into the graph — and a pinned `1xD` shape *is* the chain.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TreeChoice {
+    Off,
+    Auto,
+    Fixed(TreeShape),
+}
+
+impl TreeChoice {
+    pub fn parse(s: &str) -> anyhow::Result<TreeChoice> {
+        match s {
+            "off" => Ok(TreeChoice::Off),
+            "auto" => Ok(TreeChoice::Auto),
+            _ => TreeShape::parse(s).map(TreeChoice::Fixed).map_err(|e| {
+                anyhow::anyhow!("tree must be off|auto|KxD (e.g. 2x3): {e}")
+            }),
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            TreeChoice::Off => "off".to_string(),
+            TreeChoice::Auto => "auto".to_string(),
+            TreeChoice::Fixed(shape) => shape.label(),
+        }
+    }
+}
+
 /// Complete engine + serving configuration.
 #[derive(Debug, Clone)]
 pub struct RunConfig {
@@ -178,6 +214,10 @@ pub struct RunConfig {
     /// rounds and adopt the winner at the next session admission
     /// (0 = never re-partition). Ignored under `decision: "analytic"`.
     pub repartition_every: usize,
+    /// Speculation-tree mode: `off` (chain only, the default), `auto`
+    /// (decision layer searches tree shapes against the chain), or a
+    /// pinned `KxD` shape. See [`TreeChoice`].
+    pub tree: TreeChoice,
     /// Variant key of the drafter model (must name a `drafter_*` variant
     /// present in the artifact manifest).
     pub drafter_variant: String,
@@ -211,6 +251,7 @@ impl Default for RunConfig {
             hetero_overlap: true,
             decision: DecisionMode::Analytic,
             repartition_every: 64,
+            tree: TreeChoice::Off,
             drafter_variant: "drafter_fp".to_string(),
             target_variant: "target_w8a8".to_string(),
             seed: 0xC0FFEE,
@@ -290,6 +331,9 @@ impl RunConfig {
         if let Some(v) = j.get("repartition_every").and_then(Json::as_usize) {
             self.repartition_every = v;
         }
+        if let Some(v) = j.get("tree").and_then(Json::as_str) {
+            self.tree = TreeChoice::parse(v)?;
+        }
         if let Some(v) = j.get("drafter_variant").and_then(Json::as_str) {
             self.drafter_variant = v.to_string();
         }
@@ -313,6 +357,24 @@ impl RunConfig {
         anyhow::ensure!(self.max_inflight >= 1, "max_inflight must be >= 1");
         if let Some(g) = self.gamma {
             anyhow::ensure!((1..=8).contains(&g), "gamma must be 1..=8");
+        }
+        if let TreeChoice::Fixed(shape) = self.tree {
+            anyhow::ensure!(
+                (1..=4).contains(&shape.branching),
+                "tree branching must be 1..=4, got {}",
+                shape.branching
+            );
+            anyhow::ensure!(
+                (1..=8).contains(&shape.depth),
+                "tree depth must be 1..=8, got {}",
+                shape.depth
+            );
+            anyhow::ensure!(
+                shape.leaves() <= 64,
+                "tree shape {} has {} leaves (> 64 verification lanes)",
+                shape.label(),
+                shape.leaves()
+            );
         }
         self.variant_keys()?;
         Ok(())
@@ -431,6 +493,31 @@ mod tests {
         let mut c = RunConfig::default();
         let j = Json::parse(r#"{"target_variant":"nonsense"}"#).unwrap();
         assert!(c.apply_json(&j).is_err());
+    }
+
+    #[test]
+    fn tree_knob_defaults_off_and_parses() {
+        assert_eq!(RunConfig::default().tree, TreeChoice::Off);
+        let mut c = RunConfig::default();
+        c.apply_json(&Json::parse(r#"{"tree":"auto"}"#).unwrap()).unwrap();
+        assert_eq!(c.tree, TreeChoice::Auto);
+        let mut c = RunConfig::default();
+        c.apply_json(&Json::parse(r#"{"tree":"2x3"}"#).unwrap()).unwrap();
+        assert_eq!(c.tree, TreeChoice::Fixed(TreeShape { branching: 2, depth: 3 }));
+        assert_eq!(c.tree.label(), "2x3");
+        assert_eq!(TreeChoice::parse("off").unwrap().label(), "off");
+        assert!(TreeChoice::parse("sideways").is_err());
+        // Bounds: branching 1..=4, depth 1..=8, ≤ 64 verification lanes.
+        let mut c = RunConfig::default();
+        assert!(c.apply_json(&Json::parse(r#"{"tree":"5x2"}"#).unwrap()).is_err());
+        let mut c = RunConfig::default();
+        assert!(c.apply_json(&Json::parse(r#"{"tree":"2x9"}"#).unwrap()).is_err());
+        let mut c = RunConfig::default();
+        assert!(c.apply_json(&Json::parse(r#"{"tree":"4x4"}"#).unwrap()).is_err());
+        // 1xD is the chain — legal, and normalized away at the session.
+        let mut c = RunConfig::default();
+        c.apply_json(&Json::parse(r#"{"tree":"1x5"}"#).unwrap()).unwrap();
+        assert_eq!(c.tree, TreeChoice::Fixed(TreeShape { branching: 1, depth: 5 }));
     }
 
     #[test]

@@ -314,22 +314,50 @@ fn run_single(
     match session.execute(engine, req) {
         Ok(progress) => {
             stats.dispatches += 1;
-            stats.lanes_real += 1;
-            stats.lanes_executed += 1;
+            // A tree dispatch fills its own lanes (the session batches its
+            // tree-node prefixes itself); padding to the compiled batch
+            // sizes is accounted per round via StepOutcome's tree lane
+            // counters, so the tick stats count the real lanes here.
+            let kind_lanes = match req.kind {
+                RequestKind::TreeForward { lanes, .. } => lanes,
+                _ => 1,
+            };
+            stats.lanes_real += kind_lanes;
+            stats.lanes_executed += kind_lanes;
             let duration = (session.outcome().sim_s - sim_before).max(0.0);
             if collect_obs {
-                if let RequestKind::Forward { variant, kernel, bucket } = req.kind {
-                    if let Ok(spec) = engine.manifest.model_for(variant) {
-                        stats.observations.push(DispatchObs {
-                            variant,
-                            kernel,
-                            bucket,
-                            pu: req.route.primary,
-                            lanes: 1,
-                            flops: spec.forward_flops(bucket),
-                            duration_s: duration,
-                        });
+                match req.kind {
+                    RequestKind::Forward { variant, kernel, bucket } => {
+                        if let Ok(spec) = engine.manifest.model_for(variant) {
+                            stats.observations.push(DispatchObs {
+                                variant,
+                                kernel,
+                                bucket,
+                                pu: req.route.primary,
+                                lanes: 1,
+                                flops: spec.forward_flops(bucket),
+                                duration_s: duration,
+                            });
+                        }
                     }
+                    // Tree dispatches feed the calibration too: the whole
+                    // (possibly chunked) multi-lane duration against the
+                    // lanes × flops feature, so the online model prices
+                    // tree shapes from what actually ran.
+                    RequestKind::TreeForward { variant, kernel, bucket, lanes } => {
+                        if let Ok(spec) = engine.manifest.model_for(variant) {
+                            stats.observations.push(DispatchObs {
+                                variant,
+                                kernel,
+                                bucket,
+                                pu: req.route.primary,
+                                lanes,
+                                flops: spec.forward_flops(bucket),
+                                duration_s: duration,
+                            });
+                        }
+                    }
+                    RequestKind::MonoStep { .. } => {}
                 }
             }
             if let Some(tl) = timelines.as_deref_mut() {

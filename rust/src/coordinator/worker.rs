@@ -357,6 +357,9 @@ pub fn run_worker(
                 // the γs the AOT build lowered, so the serving path clamps.
                 ls.session.set_gamma_checked(&engine, dec.gamma);
             }
+            // Chain vs tree is re-decided at every round boundary too; the
+            // session normalizes (None / 1xD → chain, bit-identical).
+            ls.session.set_tree(if dec.speculative { dec.tree } else { None });
         }
 
         // ---- tick: advance every session one engine call --------------
@@ -502,6 +505,8 @@ fn finish_round(
             sim_s: step.sim_s,
             real_s: step.real_s,
             inflight: inflight_now,
+            tree_lanes_executed: step.tree_lanes_executed,
+            tree_lanes_real: step.tree_lanes_real,
         });
     }
     if let Some(tx) = &ls.token_tx {
@@ -586,6 +591,9 @@ fn admit(
     };
     let mut session =
         DecodeSession::new(engine, lat.clone(), setup, decision.speculative, &req.prompt);
+    // Admission decision's tree shape (None under `tree: off` — chain,
+    // bit-identical); round-boundary consults keep it current after this.
+    session.set_tree(decision.tree);
     if let SamplingMode::Stochastic { temperature, seed } = options.sampling {
         session = session.with_rng(Rng::new(seed));
         session.set_temperature(temperature as f32);
@@ -660,6 +668,7 @@ fn serve_single(
         if dec.speculative {
             ls.session.set_gamma_checked(engine, dec.gamma);
         }
+        ls.session.set_tree(if dec.speculative { dec.tree } else { None });
         match ls.session.step(engine) {
             Err(_) => return, // dropped senders signal the error
             Ok(out) => {

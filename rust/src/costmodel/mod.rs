@@ -48,10 +48,117 @@
 //! top of Eq. (1) that exists only for heterogeneous mappings, which is
 //! precisely the paper's joint-benefit claim. The `overlap` experiment
 //! compares this bound against the simulated timelines.
+//!
+//! **Tree speculation.** A [`TreeShape`] `(k, d)` round drafts the top-k
+//! candidates per node for `d` levels and verifies all `k^d`
+//! root-to-leaf paths as the lanes of **one** batched target forward. A
+//! level survives when *any* of its k candidates is accepted, so with
+//! per-candidate acceptance α the per-level acceptance is
+//! [`tree_level_acceptance`] `β = 1 − (1−α)^k` and the expected committed
+//! tokens per round are [`expected_tree_tokens_per_round`]
+//! `= 1 + Σ_{i=1..d} β^i` — at k = 1 exactly
+//! [`expected_tokens_per_round`] (the chain). What the wider tree *buys*
+//! (β ≫ α at low α) it *pays* in lanes: the level-i drafter expansion
+//! runs [`tree_draft_lanes`] `= k^(i−1)` lanes and the verify
+//! [`tree_verify_lanes`] `= k^d`, each priced lane-linear with one
+//! dispatch boundary by
+//! [`crate::hetero::LatencyModel::batched_forward_latency`]. The decision
+//! layer ([`crate::dse::tree_speedup`]) scores that trade per
+//! (α, mapping, shape) and picks chain vs tree and the shape; the `tree`
+//! config knob (`off | auto | KxD`) selects the search mode.
 
 /// Maximum draft length the search considers (the paper sweeps 0..=5; we
 /// allow a little headroom for the extension experiments).
 pub const GAMMA_MAX: usize = 8;
+
+/// Shape of a speculation tree: `branching` candidates drafted per node,
+/// for `depth` levels. `(1, d)` *is* the linear chain with γ = d — the
+/// session routes it through the chain code path, so branching 1
+/// reproduces chain streams bit-for-bit by construction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct TreeShape {
+    pub branching: usize,
+    pub depth: usize,
+}
+
+impl TreeShape {
+    /// Both dimensions are clamped to ≥ 1.
+    pub fn new(branching: usize, depth: usize) -> TreeShape {
+        TreeShape { branching: branching.max(1), depth: depth.max(1) }
+    }
+
+    /// Parse the `KxD` knob syntax, e.g. `"2x3"`.
+    pub fn parse(s: &str) -> anyhow::Result<TreeShape> {
+        let (k, d) = s
+            .split_once(['x', 'X'])
+            .ok_or_else(|| anyhow::anyhow!("tree shape must be KxD (e.g. 2x3), got {s:?}"))?;
+        let branching: usize = k
+            .trim()
+            .parse()
+            .map_err(|_| anyhow::anyhow!("bad tree branching {k:?} in {s:?}"))?;
+        let depth: usize = d
+            .trim()
+            .parse()
+            .map_err(|_| anyhow::anyhow!("bad tree depth {d:?} in {s:?}"))?;
+        anyhow::ensure!(branching >= 1 && depth >= 1, "tree shape {s:?} must be ≥ 1x1");
+        Ok(TreeShape { branching, depth })
+    }
+
+    /// The `KxD` label (inverse of [`TreeShape::parse`]).
+    pub fn label(&self) -> String {
+        format!("{}x{}", self.branching, self.depth)
+    }
+
+    /// Verification lanes: one per root-to-leaf path, `k^depth`.
+    pub fn leaves(&self) -> usize {
+        tree_verify_lanes(self.branching, self.depth)
+    }
+
+    /// Total drafted nodes across all levels: Σ_{i=1..depth} k^i.
+    pub fn nodes(&self) -> usize {
+        (1..=self.depth).map(|i| tree_verify_lanes(self.branching, i)).sum()
+    }
+
+    /// Whether the shape actually branches; a 1-wide tree is the chain.
+    pub fn branches(&self) -> bool {
+        self.branching >= 2
+    }
+}
+
+/// Per-level acceptance of a k-wide tree: the level survives when *any*
+/// of its k candidates is accepted, so with i.i.d. per-candidate
+/// acceptance α this is `β = 1 − (1−α)^k`. k = 1 degenerates to α.
+pub fn tree_level_acceptance(alpha: f64, branching: usize) -> f64 {
+    let a = alpha.clamp(0.0, 1.0);
+    1.0 - (1.0 - a).powi(branching.max(1) as i32)
+}
+
+/// Expected tokens committed per (k, d)-tree round:
+/// `1 + Σ_{i=1..d} β^i` with β = [`tree_level_acceptance`] — the accepted
+/// root path plus the always-emitted correction/bonus token. At k = 1
+/// this is exactly [`expected_tokens_per_round`] (geometric sum of α).
+pub fn expected_tree_tokens_per_round(alpha: f64, branching: usize, depth: usize) -> f64 {
+    let beta = tree_level_acceptance(alpha, branching);
+    let mut e = 1.0;
+    let mut p = 1.0;
+    for _ in 0..depth {
+        p *= beta;
+        e += p;
+    }
+    e
+}
+
+/// Lanes of the flattened verification dispatch: `k^d` leaves.
+pub fn tree_verify_lanes(branching: usize, depth: usize) -> usize {
+    branching.max(1).saturating_pow(depth as u32)
+}
+
+/// Lanes of the drafter expansion dispatch producing level `level`
+/// (1-based): `k^(level−1)` — one lane per node being expanded, starting
+/// from a single root lane.
+pub fn tree_draft_lanes(branching: usize, level: usize) -> usize {
+    branching.max(1).saturating_pow(level.saturating_sub(1) as u32)
+}
 
 /// Predicted speedup S(α, γ, c) over non-speculative decoding.
 ///
@@ -279,5 +386,60 @@ mod tests {
         for g in 1..=GAMMA_MAX {
             assert!(speedup(0.8, g, 0.2) >= speedup(0.8, g, 0.6));
         }
+    }
+
+    #[test]
+    fn tree_shape_parse_and_counts() {
+        let s = TreeShape::parse("2x3").unwrap();
+        assert_eq!(s, TreeShape { branching: 2, depth: 3 });
+        assert_eq!(s.label(), "2x3");
+        assert_eq!(s.leaves(), 8);
+        assert_eq!(s.nodes(), 2 + 4 + 8);
+        assert!(s.branches());
+        assert!(!TreeShape::new(1, 5).branches());
+        assert!(TreeShape::parse("2x").is_err());
+        assert!(TreeShape::parse("0x3").is_err());
+        assert!(TreeShape::parse("chain").is_err());
+        // Lane schedule: level-i expansion runs k^(i−1) lanes.
+        assert_eq!(tree_draft_lanes(2, 1), 1);
+        assert_eq!(tree_draft_lanes(2, 3), 4);
+        assert_eq!(tree_verify_lanes(3, 2), 9);
+    }
+
+    #[test]
+    fn tree_width_one_is_the_chain() {
+        // β(α, 1) = α and the expected-token formula collapses to Eq. (1)'s
+        // numerator, the chain's geometric sum.
+        for i in 0..=10 {
+            let a = i as f64 / 10.0;
+            assert!((tree_level_acceptance(a, 1) - a).abs() < 1e-12);
+            for d in 1..=6 {
+                let t = expected_tree_tokens_per_round(a, 1, d);
+                let chain = expected_tokens_per_round(a, d);
+                assert!((t - chain).abs() < 1e-9, "a={a} d={d}: {t} vs {chain}");
+            }
+        }
+    }
+
+    #[test]
+    fn tree_tokens_monotone_in_branching_and_bounded() {
+        for i in 1..10 {
+            let a = i as f64 / 10.0;
+            for d in 1..=4 {
+                let mut prev = 0.0;
+                for k in 1..=4 {
+                    let e = expected_tree_tokens_per_round(a, k, d);
+                    // Wider trees only raise per-level acceptance.
+                    assert!(e >= prev - 1e-12, "a={a} k={k} d={d}");
+                    assert!(e >= 1.0 - 1e-12 && e <= d as f64 + 1.0 + 1e-12);
+                    prev = e;
+                }
+            }
+        }
+        // At low α the widening matters most: k=4 more than doubles the
+        // per-level acceptance at α = 0.3.
+        let b1 = tree_level_acceptance(0.3, 1);
+        let b4 = tree_level_acceptance(0.3, 4);
+        assert!(b4 > 2.0 * b1, "{b1} -> {b4}");
     }
 }

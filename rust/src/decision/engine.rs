@@ -43,8 +43,8 @@
 //! returned [`RouteDecision`] (`used_prior`), logged once per task, and
 //! counted by the coordinator into the metrics report.
 
-use crate::config::{DecisionMode, RunConfig};
-use crate::costmodel;
+use crate::config::{DecisionMode, ExecMode, RunConfig, TreeChoice};
+use crate::costmodel::{self, TreeShape};
 use crate::dse::{self, PairConfig};
 use crate::hetero::{LatencyModel, Mapping, Platform};
 use crate::models::VariantKey;
@@ -81,12 +81,18 @@ impl SpecHints {
         if (self.force_off || cap_off) && dec.speculative {
             dec.speculative = false;
             dec.gamma = 0;
+            dec.tree = None;
             dec.predicted_speedup = 1.0;
             return dec;
         }
         if let Some(cap) = self.gamma_cap {
             if dec.speculative && dec.gamma > cap {
                 dec.gamma = cap;
+                // A γ cap bounds *drafted depth*, so a tree shrinks to the
+                // capped depth (never widens, never deepens).
+                if let Some(shape) = dec.tree {
+                    dec.tree = Some(TreeShape::new(shape.branching, cap));
+                }
             }
         }
         dec
@@ -98,6 +104,10 @@ impl SpecHints {
 pub struct RouteDecision {
     pub speculative: bool,
     pub gamma: usize,
+    /// Speculate as a token *tree* of this shape (γ = its depth) rather
+    /// than a linear chain. `None` = chain (the historical behavior);
+    /// always `None` when not speculating.
+    pub tree: Option<TreeShape>,
     pub mapping: Mapping,
     /// Predicted speedup at decision time (diagnostics).
     pub predicted_speedup: f64,
@@ -122,6 +132,11 @@ pub struct Policy {
     fixed_gamma: Option<usize>,
     speculative_enabled: bool,
     adaptive: bool,
+    /// Tree-speculation mode (`tree` config knob), normalized at
+    /// construction: trees run only under the modular exec mode (the
+    /// monolithic spec-step HLO has the chain baked in), so a monolithic
+    /// configuration pins this to `Off`.
+    tree_choice: TreeChoice,
     /// Current mapping — boot-frozen under analytic, re-partitioned online
     /// under calibrated. Admission reads it; in-flight sessions keep the
     /// copy frozen into their setup.
@@ -180,6 +195,11 @@ impl Policy {
             fixed_gamma: cfg.gamma,
             speculative_enabled: cfg.speculative,
             adaptive: cfg.gamma.is_none(),
+            tree_choice: if cfg.exec_mode == ExecMode::Modular {
+                cfg.tree
+            } else {
+                TreeChoice::Off
+            },
             mapping: Mutex::new(mapping),
             drafter,
             target,
@@ -387,6 +407,7 @@ impl Policy {
             return RouteDecision {
                 speculative: false,
                 gamma: 0,
+                tree: None,
                 mapping,
                 predicted_speedup: 1.0,
                 alpha_used: f64::NAN,
@@ -399,25 +420,89 @@ impl Policy {
             mapping,
             seq_len,
         );
-        if let Some(g) = self.fixed_gamma {
+        let mut dec = if let Some(g) = self.fixed_gamma {
             // Fixed-γ mode: still predict the speedup for diagnostics.
-            return RouteDecision {
+            RouteDecision {
                 speculative: true,
                 gamma: g,
+                tree: None,
                 mapping,
                 predicted_speedup: costmodel::speedup(alpha, g, c),
                 alpha_used: alpha,
                 used_prior,
-            };
+            }
+        } else {
+            let choice = costmodel::optimal_gamma(alpha, c);
+            RouteDecision {
+                speculative: choice.gamma > 0,
+                gamma: choice.gamma,
+                tree: None,
+                mapping,
+                predicted_speedup: choice.speedup,
+                alpha_used: alpha,
+                used_prior,
+            }
+        };
+        self.consider_tree(&mut dec, alpha, d_spec, t_spec, mapping, seq_len);
+        dec
+    }
+
+    /// Apply the `tree` knob on top of the chain decision. `Fixed` is an
+    /// operator override like fixed γ: speculate as a tree of that shape
+    /// whenever speculation is enabled at all (its predicted speedup is
+    /// still scored honestly for diagnostics; a 1-wide shape is the chain
+    /// and the session normalizes it away). `Auto` scores the candidate
+    /// shapes ([`dse::TREE_SHAPES`]) against the chain through the active
+    /// cost model — analytic or online-calibrated — and adopts a shape
+    /// only on a strict predicted win; it defers to an operator-pinned γ.
+    fn consider_tree(
+        &self,
+        dec: &mut RouteDecision,
+        alpha: f64,
+        d_spec: &crate::models::ModelSpec,
+        t_spec: &crate::models::ModelSpec,
+        mapping: Mapping,
+        seq_len: usize,
+    ) {
+        if self.tree_choice == TreeChoice::Off {
+            return;
         }
-        let choice = costmodel::optimal_gamma(alpha, c);
-        RouteDecision {
-            speculative: choice.gamma > 0,
-            gamma: choice.gamma,
-            mapping,
-            predicted_speedup: choice.speedup,
-            alpha_used: alpha,
-            used_prior,
+        let pair = PairConfig {
+            target: t_spec.clone(),
+            target_scheme: self.target.scheme,
+            drafter: d_spec.clone(),
+            drafter_scheme: self.drafter.scheme,
+        };
+        match self.tree_choice {
+            TreeChoice::Off => {}
+            TreeChoice::Fixed(shape) => {
+                dec.speculative = true;
+                dec.gamma = shape.depth;
+                dec.tree = Some(shape).filter(TreeShape::branches);
+                dec.predicted_speedup =
+                    dse::tree_speedup(self.cost_model(), &pair, mapping, alpha, seq_len, shape);
+            }
+            TreeChoice::Auto => {
+                if self.fixed_gamma.is_some() {
+                    return;
+                }
+                for &shape in dse::TREE_SHAPES.iter() {
+                    let s = dse::tree_speedup(
+                        self.cost_model(),
+                        &pair,
+                        mapping,
+                        alpha,
+                        seq_len,
+                        shape,
+                    );
+                    if s > 1.0 && s > dec.predicted_speedup {
+                        dec.speculative = true;
+                        dec.gamma = shape.depth;
+                        dec.tree = Some(shape);
+                        dec.predicted_speedup = s;
+                    }
+                }
+            }
         }
     }
 
@@ -495,8 +580,23 @@ impl Policy {
             drafter: d_spec.clone(),
             drafter_scheme: self.drafter.scheme,
         };
-        let decision =
-            dse::explore_variant(self.cost_model(), &pair, self.design_variant, alpha, seq);
+        // Under `tree: auto` the re-partition search scores the enlarged
+        // (mapping × shape) candidate space, so the calibrated model's
+        // observed dispatch durations feed the same chain-vs-tree choice
+        // the per-round consults make. Otherwise this is bit-identical to
+        // the historical chain-only search.
+        let shapes: &[TreeShape] = match self.tree_choice {
+            TreeChoice::Auto => &dse::TREE_SHAPES,
+            _ => &[],
+        };
+        let decision = dse::explore_variant_with_shapes(
+            self.cost_model(),
+            &pair,
+            self.design_variant,
+            alpha,
+            seq,
+            shapes,
+        );
         let new_mapping = decision.best.mapping;
         let mut cur = self.mapping.lock().unwrap();
         if new_mapping != *cur {
@@ -712,6 +812,7 @@ mod tests {
         let baseline = SpecHints::default().clamp(RouteDecision {
             speculative: false,
             gamma: 0,
+            tree: None,
             mapping: p.current_mapping(),
             predicted_speedup: 1.0,
             alpha_used: f64::NAN,
@@ -733,6 +834,139 @@ mod tests {
         );
         assert!(dec.speculative);
         assert_eq!(dec.gamma, 1);
+    }
+
+    /// Boundary-bound platform (fast compute, expensive CPU dispatch):
+    /// the regime where a wide shallow tree beats the chain at low α.
+    fn boundary_bound_platform() -> Platform {
+        let mut p = Platform::imx95();
+        p.name = "imx95-npu-sim".into();
+        p.cpu.peak_gflops_per_core *= 200.0;
+        p.cpu.dispatch_overhead_s = 2e-3;
+        p.gpu.peak_gflops *= 200.0;
+        p.gpu.dispatch_overhead_s = 100e-6;
+        p
+    }
+
+    #[test]
+    fn tree_off_is_the_default_and_decisions_stay_chain() {
+        let p = policy(&RunConfig::default());
+        let (d, t) = specs();
+        let dec = p.route("translate", &d, &t, 63);
+        assert!(dec.speculative);
+        assert_eq!(dec.tree, None);
+    }
+
+    #[test]
+    fn fixed_tree_shape_forces_tree_speculation() {
+        let cfg = RunConfig {
+            tree: TreeChoice::Fixed(TreeShape::new(2, 3)),
+            ..RunConfig::default()
+        };
+        let p = policy(&cfg);
+        let (d, t) = specs();
+        let dec = p.route("translate", &d, &t, 63);
+        assert!(dec.speculative);
+        assert_eq!(dec.tree, Some(TreeShape::new(2, 3)));
+        assert_eq!(dec.gamma, 3);
+        // A pinned 1-wide shape is the chain: γ = depth, no tree.
+        let cfg = RunConfig {
+            tree: TreeChoice::Fixed(TreeShape::new(1, 4)),
+            ..RunConfig::default()
+        };
+        let p = policy(&cfg);
+        let dec = p.route("translate", &d, &t, 63);
+        assert!(dec.speculative);
+        assert_eq!(dec.tree, None);
+        assert_eq!(dec.gamma, 4);
+    }
+
+    #[test]
+    fn monolithic_exec_pins_tree_off() {
+        let cfg = RunConfig {
+            tree: TreeChoice::Fixed(TreeShape::new(2, 3)),
+            exec_mode: crate::config::ExecMode::Monolithic,
+            ..RunConfig::default()
+        };
+        let p = policy(&cfg);
+        let (d, t) = specs();
+        let dec = p.route("translate", &d, &t, 63);
+        assert_eq!(dec.tree, None);
+    }
+
+    #[test]
+    fn auto_tree_picks_chain_on_compute_bound_platform() {
+        // Stock i.MX95 lane compute dominates: auto must not pay k^d
+        // lanes, and the decision is identical to tree: off.
+        let cfg = RunConfig { tree: TreeChoice::Auto, ..RunConfig::default() };
+        let auto = policy(&cfg);
+        let off = policy(&RunConfig::default());
+        let (d, t) = specs();
+        for alpha_obs in [0.9, 0.3] {
+            for p in [&auto, &off] {
+                for _ in 0..40 {
+                    p.observe_alpha("task", alpha_obs);
+                }
+            }
+            let a = auto.route("task", &d, &t, 63);
+            let o = off.route("task", &d, &t, 63);
+            assert_eq!(a.tree, None, "alpha={alpha_obs}: {a:?}");
+            assert_eq!(a.gamma, o.gamma);
+            assert_eq!(a.speculative, o.speculative);
+        }
+    }
+
+    #[test]
+    fn auto_tree_speculates_where_the_chain_cannot() {
+        // Boundary-bound platform at low α: the chain's best is weak, the
+        // wide shallow tree's per-level acceptance β = 1−(1−α)^k wins.
+        let cfg = RunConfig { tree: TreeChoice::Auto, ..RunConfig::default() };
+        let p = Policy::new(&cfg, boundary_bound_platform()).unwrap();
+        let chain =
+            Policy::new(&RunConfig::default(), boundary_bound_platform()).unwrap();
+        let (d, t) = specs();
+        for pol in [&p, &chain] {
+            for _ in 0..60 {
+                pol.observe_alpha("hard", 0.15);
+            }
+        }
+        let tree_dec = p.route("hard", &d, &t, 63);
+        let chain_dec = chain.route("hard", &d, &t, 63);
+        assert!(tree_dec.speculative, "{tree_dec:?}");
+        let shape = tree_dec.tree.expect("expected a tree shape");
+        assert!(shape.branches());
+        assert_eq!(tree_dec.gamma, shape.depth);
+        assert!(
+            tree_dec.predicted_speedup > chain_dec.predicted_speedup + 1e-9,
+            "tree {} vs chain {}",
+            tree_dec.predicted_speedup,
+            chain_dec.predicted_speedup
+        );
+    }
+
+    #[test]
+    fn hints_clamp_trees_too() {
+        let cfg = RunConfig {
+            tree: TreeChoice::Fixed(TreeShape::new(3, 3)),
+            ..RunConfig::default()
+        };
+        let p = policy(&cfg);
+        let (d, t) = specs();
+        // force_off beats the pinned shape.
+        let off = p.route_with(
+            "translate", &d, &t, 63,
+            SpecHints { gamma_cap: None, force_off: true },
+        );
+        assert!(!off.speculative);
+        assert_eq!(off.tree, None);
+        // A γ cap shrinks the tree's depth, never its width.
+        let capped = p.route_with(
+            "translate", &d, &t, 63,
+            SpecHints { gamma_cap: Some(2), force_off: false },
+        );
+        assert!(capped.speculative);
+        assert_eq!(capped.gamma, 2);
+        assert_eq!(capped.tree, Some(TreeShape::new(3, 2)));
     }
 
     #[test]

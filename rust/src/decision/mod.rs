@@ -33,6 +33,23 @@
 //! token streams and dispatch counts to the pre-decision-layer code.
 //! `decision: "calibrated"` turns on the feedback loop and online
 //! re-partitioning (`repartition_every` rounds between searches).
+//!
+//! **Chain vs tree** (`tree` config knob: `off | auto | KxD`). The engine
+//! can speculate a token *tree* instead of a linear chain: `(k, d)` shapes
+//! draft the top-k candidates per node and verify all `k^d` root-to-leaf
+//! paths as the lanes of one batched target dispatch. The trade is priced
+//! by [`tree_speedup`]: per-level acceptance rises to
+//! `β = 1 − (1−α)^k` ([`tree_level_acceptance`]) while every level and the
+//! verification pay lane-linear compute with a single dispatch boundary
+//! ([`CostModel::batched_forward_latency`]). Under `auto` every routing
+//! decision — and, in calibrated mode, the periodic re-partition search
+//! ([`explore_variant_with_shapes`]) — scores the [`TREE_SHAPES`]
+//! candidates against the chain and adopts a shape only on a strict
+//! predicted win, so compute-bound platforms keep the chain and
+//! boundary-bound platforms switch to wide shallow trees at low α. The
+//! winning shape rides [`RouteDecision::tree`] into the session
+//! ([`crate::spec::DecodeSession::set_tree`]). `off` (default) is
+//! bit-identical to the historical chain-only behavior.
 
 pub mod calibrated;
 pub mod engine;
@@ -43,5 +60,11 @@ pub use engine::{Policy, RouteDecision, SpecHints};
 pub use model::{resolve_route, CostModel, DispatchObs};
 
 // The decision layer's other two pillars, re-exported for one-stop use.
-pub use crate::costmodel::{expected_tokens_per_round, optimal_gamma, speedup};
-pub use crate::dse::{explore_all, explore_variant, Candidate, PairConfig, VariantDecision};
+pub use crate::costmodel::{
+    expected_tokens_per_round, expected_tree_tokens_per_round, optimal_gamma, speedup,
+    tree_level_acceptance, TreeShape,
+};
+pub use crate::dse::{
+    explore_all, explore_variant, explore_variant_with_shapes, tree_speedup, Candidate,
+    PairConfig, VariantDecision, TREE_SHAPES,
+};

@@ -70,6 +70,30 @@ pub trait CostModel: Send + Sync {
         let tt = self.forward_latency(target.0, target.1, mapping.target, seq_len);
         td / tt
     }
+
+    /// Predicted seconds for one `batch`-lane dispatch: lane-linear
+    /// compute with a *single* dispatch boundary, derived from the
+    /// single-forward prediction and the platform's per-PU boundary cost —
+    /// the quantity the tree-shape search prices level expansions and the
+    /// flattened verification with. [`LatencyModel`] overrides this with
+    /// its inherent (bit-identical) implementation; the calibrated model
+    /// inherits the default, so its online-refit forward latencies feed
+    /// the same tree-vs-chain choice.
+    fn batched_forward_latency(
+        &self,
+        spec: &ModelSpec,
+        scheme: Scheme,
+        pu: PuAssignment,
+        seq_len: usize,
+        batch: usize,
+    ) -> f64 {
+        let single = self.forward_latency(spec, scheme, pu, seq_len);
+        let oh = match pu {
+            PuAssignment::Gpu => self.platform().gpu.dispatch_overhead_s,
+            PuAssignment::Cpu { .. } => self.platform().cpu.dispatch_overhead_s,
+        };
+        (single - oh) * batch.max(1) as f64 + oh
+    }
 }
 
 /// The analytic model is the canonical implementation: the trait methods
@@ -92,6 +116,17 @@ impl CostModel for LatencyModel {
         seq_len: usize,
     ) -> f64 {
         LatencyModel::forward_latency(self, spec, scheme, pu, seq_len)
+    }
+
+    fn batched_forward_latency(
+        &self,
+        spec: &ModelSpec,
+        scheme: Scheme,
+        pu: PuAssignment,
+        seq_len: usize,
+        batch: usize,
+    ) -> f64 {
+        LatencyModel::batched_forward_latency(self, spec, scheme, pu, seq_len, batch)
     }
 }
 
@@ -123,10 +158,12 @@ pub struct DispatchObs {
 /// that is a different device.
 pub fn resolve_route(mapping: Mapping, kind: &RequestKind) -> PuRoute {
     match kind {
-        RequestKind::Forward { variant, .. } => PuRoute::single(match variant.role {
-            Role::Drafter => mapping.drafter,
-            Role::Target => mapping.target,
-        }),
+        RequestKind::Forward { variant, .. } | RequestKind::TreeForward { variant, .. } => {
+            PuRoute::single(match variant.role {
+                Role::Drafter => mapping.drafter,
+                Role::Target => mapping.target,
+            })
+        }
         RequestKind::MonoStep { .. } => PuRoute::mono(mapping),
     }
 }
@@ -163,6 +200,11 @@ mod tests {
             let a = lat.cost_coefficient((&d, Scheme::Fp), (&t, Scheme::W8a8), m, seq);
             let b = as_trait.cost_coefficient((&d, Scheme::Fp), (&t, Scheme::W8a8), m, seq);
             assert_eq!(a.to_bits(), b.to_bits());
+            for lanes in [1usize, 4, 9] {
+                let a = lat.batched_forward_latency(&t, Scheme::W8a8, m.target, seq, lanes);
+                let b = as_trait.batched_forward_latency(&t, Scheme::W8a8, m.target, seq, lanes);
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
         }
         assert_eq!(as_trait.name(), "analytic");
         assert_eq!(as_trait.platform().name, "imx95-sim");
@@ -186,6 +228,14 @@ mod tests {
             resolve_route(m, &fwd_t),
             PuRoute::single(PuAssignment::Cpu { cores: 2 })
         );
+        // Tree dispatches route exactly like plain forwards of their role.
+        let tree_t = RequestKind::TreeForward {
+            variant: VariantKey::parse("target_w8a8").unwrap(),
+            kernel: KernelPath::Ref,
+            bucket: 64,
+            lanes: 8,
+        };
+        assert_eq!(resolve_route(m, &tree_t), resolve_route(m, &fwd_t));
         assert_eq!(resolve_route(m, &RequestKind::MonoStep { gamma: 3 }), PuRoute::mono(m));
     }
 }

@@ -16,11 +16,25 @@
 //! the decision engine re-partitions a live deployment
 //! ([`crate::decision::Policy`]).
 
-use crate::costmodel;
+use crate::costmodel::{self, TreeShape};
 use crate::decision::CostModel;
 use crate::hetero::{Mapping, PuAssignment};
 use crate::models::{ModelSpec, Scheme};
 use crate::util::json::Json;
+
+/// The shape candidates the `tree: auto` search scores, alongside the
+/// plain chain. Kept tiny: leaves stay ≤ 16 (the session pads lanes up to
+/// compiled batch sizes, so wider trees mostly buy padding), and the
+/// depth-1 rows matter — on boundary-dominated platforms a wide shallow
+/// tree is often the only shape that beats the chain.
+pub const TREE_SHAPES: [TreeShape; 6] = [
+    TreeShape { branching: 2, depth: 1 },
+    TreeShape { branching: 4, depth: 1 },
+    TreeShape { branching: 2, depth: 2 },
+    TreeShape { branching: 3, depth: 2 },
+    TreeShape { branching: 4, depth: 2 },
+    TreeShape { branching: 2, depth: 3 },
+];
 
 /// Why a candidate mapping was rejected (NA rows in Tables II/III).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -46,6 +60,9 @@ pub struct Candidate {
     pub gamma: usize,
     /// Predicted speedup vs the non-speculative baseline on this variant.
     pub speedup: f64,
+    /// `Some(shape)` when the winning rate came from a speculation *tree*
+    /// rather than the linear chain (then `gamma == shape.depth`).
+    pub tree: Option<TreeShape>,
     pub infeasible: Option<Infeasibility>,
 }
 
@@ -62,6 +79,9 @@ impl Candidate {
             .set("c", self.c.into())
             .set("gamma", self.gamma.into())
             .set("speedup", self.speedup.into());
+        if let Some(t) = self.tree {
+            j.set("tree", Json::Str(t.label()));
+        }
         if let Some(inf) = self.infeasible {
             j.set("infeasible", Json::Str(format!("{inf:?}")));
         }
@@ -98,6 +118,24 @@ pub fn explore_variant<M: CostModel + ?Sized>(
     alpha: f64,
     seq_len: usize,
 ) -> VariantDecision {
+    explore_variant_with_shapes(model, pair, variant, alpha, seq_len, &[])
+}
+
+/// [`explore_variant`] with an enlarged candidate space: every mapping is
+/// additionally scored at each speculation-tree `shape`, and a tree
+/// candidate replaces the chain row when it predicts a strictly higher
+/// speedup. Tree rows skip the `c < α` filter — per-level acceptance
+/// `β = 1 − (1−α)^k` can clear a bar α itself cannot — but keep the hard
+/// memory / quantization feasibility gates. An empty `shapes` slice is
+/// exactly the historical chain-only search.
+pub fn explore_variant_with_shapes<M: CostModel + ?Sized>(
+    model: &M,
+    pair: &PairConfig,
+    variant: usize,
+    alpha: f64,
+    seq_len: usize,
+    shapes: &[TreeShape],
+) -> VariantDecision {
     let assignments = [
         PuAssignment::Cpu { cores: variant },
         PuAssignment::Gpu,
@@ -106,7 +144,31 @@ pub fn explore_variant<M: CostModel + ?Sized>(
     for d_pu in assignments {
         for t_pu in assignments {
             let mapping = Mapping { drafter: d_pu, target: t_pu };
-            all.push(score_mapping(model, pair, variant, mapping, alpha, seq_len));
+            let mut cand = score_mapping(model, pair, variant, mapping, alpha, seq_len);
+            let hard_infeasible = matches!(
+                cand.infeasible,
+                Some(Infeasibility::Memory) | Some(Infeasibility::QuantOnGpu)
+            );
+            if !hard_infeasible {
+                for &shape in shapes {
+                    if !shape.branches() {
+                        continue; // a 1-wide tree is the chain row already scored
+                    }
+                    let s = tree_speedup(model, pair, mapping, alpha, seq_len, shape);
+                    if s > 1.0 && s > cand.speedup {
+                        cand = Candidate {
+                            variant,
+                            mapping,
+                            c: cand.c,
+                            gamma: shape.depth,
+                            speedup: s,
+                            tree: Some(shape),
+                            infeasible: None,
+                        };
+                    }
+                }
+            }
+            all.push(cand);
         }
     }
     // Best = highest predicted speedup among feasible candidates; ties break
@@ -136,8 +198,48 @@ fn no_speculation(variant: usize) -> Candidate {
         c: f64::NAN,
         gamma: 0,
         speedup: 1.0,
+        tree: None,
         infeasible: None,
     }
+}
+
+/// Predicted speedup of (k, d)-tree speculation over the non-speculative
+/// baseline on `mapping`: expected committed tokens per round
+/// ([`costmodel::expected_tree_tokens_per_round`]) priced against the
+/// round's dispatch schedule — `d` drafter expansions of `k^(level−1)`
+/// lanes plus one `k^d`-lane target verification, each lane-linear with a
+/// single dispatch boundary ([`CostModel::batched_forward_latency`]).
+/// At k = 1 the lane prices collapse to single forwards and this is
+/// exactly Eq. (1)'s S(α, d, c); at k ≥ 2 the shape only wins where the
+/// β − α acceptance gain outruns the lane-linear compute — in practice on
+/// boundary-dominated platforms at low α.
+pub fn tree_speedup<M: CostModel + ?Sized>(
+    model: &M,
+    pair: &PairConfig,
+    mapping: Mapping,
+    alpha: f64,
+    seq_len: usize,
+    shape: TreeShape,
+) -> f64 {
+    let tt = model.forward_latency(&pair.target, pair.target_scheme, mapping.target, seq_len);
+    let mut cost = model.batched_forward_latency(
+        &pair.target,
+        pair.target_scheme,
+        mapping.target,
+        seq_len,
+        shape.leaves(),
+    );
+    for level in 1..=shape.depth {
+        cost += model.batched_forward_latency(
+            &pair.drafter,
+            pair.drafter_scheme,
+            mapping.drafter,
+            seq_len,
+            costmodel::tree_draft_lanes(shape.branching, level),
+        );
+    }
+    let tokens = costmodel::expected_tree_tokens_per_round(alpha, shape.branching, shape.depth);
+    tokens * tt / cost
 }
 
 /// Score one mapping: feasibility filters, then Eq. (1) with γ* search.
@@ -154,6 +256,7 @@ pub fn score_mapping<M: CostModel + ?Sized>(
     if !mem.pair_fits(pair.target_scheme, pair.drafter_scheme) {
         return Candidate {
             variant, mapping, c: f64::NAN, gamma: 0, speedup: 1.0,
+            tree: None,
             infeasible: Some(Infeasibility::Memory),
         };
     }
@@ -164,6 +267,7 @@ pub fn score_mapping<M: CostModel + ?Sized>(
     if quant_on_gpu && !model.platform().gpu.supports_int8 {
         return Candidate {
             variant, mapping, c: f64::NAN, gamma: 0, speedup: 1.0,
+            tree: None,
             infeasible: Some(Infeasibility::QuantOnGpu),
         };
     }
@@ -176,6 +280,7 @@ pub fn score_mapping<M: CostModel + ?Sized>(
     if !costmodel::feasible(alpha, c) {
         return Candidate {
             variant, mapping, c, gamma: 0, speedup: 1.0,
+            tree: None,
             infeasible: Some(Infeasibility::CostExceedsAlpha),
         };
     }
@@ -184,6 +289,7 @@ pub fn score_mapping<M: CostModel + ?Sized>(
         variant, mapping, c,
         gamma: choice.gamma,
         speedup: choice.speedup,
+        tree: None,
         infeasible: None,
     }
 }
@@ -286,6 +392,100 @@ mod tests {
         for c in &d.all {
             if c.mapping.target.is_gpu() {
                 assert!(c.infeasible.is_some());
+            }
+        }
+    }
+
+    /// A platform where compute is fast but dispatch boundaries are not:
+    /// a 200× throughput bump with a 2 ms CPU boundary (an offload-runtime
+    /// submit) and a cheap 100 µs GPU queue. Forward latency is then
+    /// mostly boundary, which is the regime where paying k× lane compute
+    /// to widen per-level acceptance is nearly free.
+    fn boundary_bound() -> LatencyModel {
+        let mut p = Platform::imx95();
+        p.name = "imx95-npu-sim".into();
+        p.cpu.peak_gflops_per_core *= 200.0;
+        p.cpu.dispatch_overhead_s = 2e-3;
+        p.gpu.peak_gflops *= 200.0;
+        p.gpu.dispatch_overhead_s = 100e-6;
+        LatencyModel::new(p)
+    }
+
+    #[test]
+    fn tree_width_one_is_eq1() {
+        // A (1, d) tree prices exactly like the γ = d chain: lane counts
+        // collapse to 1, so tree_speedup must agree with Eq. (1).
+        let l = lat();
+        let p = pair();
+        let m = Mapping::heterogeneous(1);
+        let c = l.cost_coefficient(
+            (&p.drafter, p.drafter_scheme),
+            (&p.target, p.target_scheme),
+            m,
+            63,
+        );
+        for alpha in [0.17, 0.5, 0.9] {
+            for d in 1..=5 {
+                let tree = tree_speedup(&l, &p, m, alpha, 63, TreeShape::new(1, d));
+                let chain = costmodel::speedup(alpha, d, c);
+                assert!(
+                    (tree - chain).abs() < 1e-9 * chain.max(1.0),
+                    "alpha={alpha} d={d}: {tree} vs {chain}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn compute_bound_platform_keeps_the_chain() {
+        // Stock i.MX95: lane compute is the whole latency, so every tree
+        // shape pays k^d × compute for a sub-(d+1)× token gain — the
+        // enlarged search must still land on the chain (or no speculation).
+        for alpha in [0.3, 0.9] {
+            let d = explore_variant_with_shapes(&lat(), &pair(), 1, alpha, 63, &TREE_SHAPES);
+            assert!(d.best.tree.is_none(), "alpha={alpha}: {:?}", d.best);
+            let chain = explore_variant(&lat(), &pair(), 1, alpha, 63);
+            assert_eq!(d.best.gamma, chain.best.gamma);
+            assert!((d.best.speedup - chain.best.speedup).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn boundary_bound_platform_picks_a_tree_at_low_alpha() {
+        let l = boundary_bound();
+        let p = pair();
+        // Low α: the chain barely pays (c ≈ 0.06 → S ≈ 1.08 at γ = 1),
+        // but a wide shallow tree lifts per-level acceptance enough to
+        // beat it despite the k× verify lanes.
+        let low = explore_variant_with_shapes(&l, &p, 1, 0.15, 63, &TREE_SHAPES);
+        let chain = explore_variant(&l, &p, 1, 0.15, 63);
+        assert!(low.best.tree.is_some(), "{:?}", low.best);
+        assert!(
+            low.best.speedup > chain.best.speedup + 1e-9,
+            "tree {} vs chain {}",
+            low.best.speedup,
+            chain.best.speedup
+        );
+        let shape = low.best.tree.unwrap();
+        assert_eq!(low.best.gamma, shape.depth);
+        // High α on the same platform: deep chains dominate again.
+        let high = explore_variant_with_shapes(&l, &p, 1, 0.9, 63, &TREE_SHAPES);
+        assert!(high.best.tree.is_none(), "{:?}", high.best);
+    }
+
+    #[test]
+    fn empty_shape_list_is_bit_identical_to_chain_search() {
+        let l = lat();
+        let p = pair();
+        for alpha in [0.17, 0.9] {
+            let a = explore_variant(&l, &p, 1, alpha, 63);
+            let b = explore_variant_with_shapes(&l, &p, 1, alpha, 63, &[]);
+            assert_eq!(a.all.len(), b.all.len());
+            for (x, y) in a.all.iter().zip(&b.all) {
+                assert_eq!(x.gamma, y.gamma);
+                assert_eq!(x.tree, y.tree);
+                assert_eq!(x.infeasible, y.infeasible);
+                assert_eq!(x.speedup.to_bits(), y.speedup.to_bits());
             }
         }
     }

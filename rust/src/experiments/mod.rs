@@ -11,6 +11,7 @@ pub mod fig7;
 pub mod overlap;
 pub mod repartition;
 pub mod tables;
+pub mod tree;
 
 use crate::config::RunConfig;
 use crate::hetero::{LatencyModel, Platform};
@@ -68,10 +69,11 @@ pub fn run(ctx: &Ctx, which: &str) -> anyhow::Result<()> {
         "alpha" => alpha::run(ctx),
         "overlap" => overlap::run(ctx),
         "repartition" => repartition::run(ctx),
+        "tree" => tree::run(ctx),
         "all" => {
             for id in [
                 "table2", "table3", "fig6a", "fig6b", "fig7a", "fig5a", "fig5b",
-                "fig7b", "deviation", "overlap", "repartition",
+                "fig7b", "deviation", "overlap", "repartition", "tree",
             ] {
                 println!("\n=== experiment {id} ===");
                 run(ctx, id)?;
@@ -80,7 +82,7 @@ pub fn run(ctx: &Ctx, which: &str) -> anyhow::Result<()> {
         }
         other => anyhow::bail!(
             "unknown experiment {other:?} (fig5a fig5b fig6a fig6b table2 table3 \
-             fig7a fig7b deviation alpha overlap repartition all)"
+             fig7a fig7b deviation alpha overlap repartition tree all)"
         ),
     }
 }

@@ -1,0 +1,203 @@
+//! Chain vs tree speculation — the tree-aware DSE sweep (`experiment tree`).
+//!
+//! Speculating a token *tree* (top-k children per node, all k^d
+//! root-to-leaf paths verified as the lanes of one batched target
+//! dispatch) trades lane-linear compute for per-level acceptance
+//! β = 1 − (1−α)^k. On a compute-dominated platform the extra lanes cost
+//! exactly what they would save, so the chain always wins; when the
+//! per-dispatch boundary dominates the forward time, wide shallow trees
+//! amortize it across lanes and win precisely in the low-α regime where
+//! the chain collapses to γ* = 1 or gives up speculating altogether.
+//!
+//! The driver sweeps α on two platforms — the stock calibration and a
+//! boundary-dominated variant of it (NPU-class arithmetic throughput, so
+//! a forward is dispatch overhead, not FLOPs) — comparing the chain-only
+//! DSE against the tree-aware search at every point. It then replays a
+//! few greedy decodes end-to-end to pin the executor: greedy tree
+//! decoding must reproduce the chain's token stream exactly (both follow
+//! the target argmax), while reporting tree rounds and lane fill.
+//!
+//! Fails loudly unless (a) the tree-aware DSE strictly beats the chain's
+//! per-token latency at low α on the boundary-bound platform, (b) it
+//! keeps the chain at every α on the compute-bound stock platform (lane
+//! cost dominates there), and (c) it returns to the chain at high α even
+//! where trees win at low α.
+
+use crate::config::{ExecMode, KernelPath};
+use crate::costmodel::TreeShape;
+use crate::dse::{self, Candidate, PairConfig, TREE_SHAPES};
+use crate::hetero::{LatencyModel, Mapping, Platform};
+use crate::models::{Scheme, VariantKey};
+use crate::spec::{AcceptRule, DecodeSession, DecoderSetup};
+use crate::workload::prompt_ids;
+
+use super::Ctx;
+
+/// Operating sequence length (the paper's S_L = 63 point).
+const SEQ: usize = 63;
+/// Design variant scored by the sweep (CPU cores for the target).
+const VARIANT: usize = 1;
+
+/// The boundary-dominated platform: same board, NPU-class arithmetic
+/// throughput. Compute shrinks 200×, so a forward is almost entirely the
+/// per-dispatch boundary — the regime where lanes are nearly free and the
+/// per-level acceptance boost β = 1 − (1−α)^k is worth buying.
+fn boundary_bound(stock: &Platform) -> Platform {
+    let mut p = stock.clone();
+    p.name = "imx95-npu-sim".to_string();
+    p.cpu.peak_gflops_per_core *= 200.0;
+    p.cpu.dispatch_overhead_s = 2e-3;
+    p.gpu.peak_gflops *= 200.0;
+    p.gpu.dispatch_overhead_s = 100e-6;
+    p
+}
+
+/// Per-committed-token latency of a DSE winner: the baseline forward at
+/// the candidate's own mapping divided by its predicted speedup (chain
+/// and tree speedups are both normalized against that same baseline).
+fn ms_per_tok(lat: &LatencyModel, pair: &PairConfig, cand: &Candidate) -> f64 {
+    let tt = lat.forward_latency(&pair.target, pair.target_scheme, cand.mapping.target, SEQ);
+    tt * 1e3 / cand.speedup.max(1e-12)
+}
+
+pub fn run(ctx: &Ctx) -> anyhow::Result<()> {
+    let d_key = VariantKey::parse("drafter_fp").unwrap();
+    let t_key = VariantKey::parse("target_w8a8").unwrap();
+    let pair = PairConfig {
+        target: ctx.engine.manifest.model_for(t_key)?.clone(),
+        target_scheme: Scheme::W8a8,
+        drafter: ctx.engine.manifest.model_for(d_key)?.clone(),
+        drafter_scheme: Scheme::Fp,
+    };
+
+    // ---- analytic α sweep: chain-only vs tree-aware DSE ---------------
+    let alphas = [0.05, 0.10, 0.15, 0.20, 0.30, 0.40, 0.50, 0.60, 0.70, 0.80, 0.90, 0.95];
+    let stock_name = ctx.lat.platform.name.clone();
+    let platforms = [ctx.lat.platform.clone(), boundary_bound(&ctx.lat.platform)];
+
+    let mut csv = String::from(
+        "platform,alpha,chain_gamma,chain_speedup,chain_ms_per_tok,\
+         tree,tree_gamma,tree_speedup,tree_ms_per_tok,tree_wins\n",
+    );
+    let mut boundary_low_alpha_win = false;
+    let mut boundary_high_alpha_chain = false;
+    println!(
+        "Tree speculation vs chain — tree-aware DSE (variant {VARIANT}, S_L = {SEQ}, \
+         shapes {:?}):",
+        TREE_SHAPES.iter().map(TreeShape::label).collect::<Vec<_>>()
+    );
+    for p in &platforms {
+        let lat = LatencyModel::new(p.clone());
+        let on_stock = p.name == stock_name;
+        for &alpha in &alphas {
+            let chain = dse::explore_variant(&lat, &pair, VARIANT, alpha, SEQ).best;
+            let tree =
+                dse::explore_variant_with_shapes(&lat, &pair, VARIANT, alpha, SEQ, &TREE_SHAPES)
+                    .best;
+            let chain_ms = ms_per_tok(&lat, &pair, &chain);
+            let tree_ms = ms_per_tok(&lat, &pair, &tree);
+            let wins = tree.tree.is_some() && tree_ms < chain_ms;
+            let label = tree.tree.map_or_else(|| "chain".to_string(), |s| s.label());
+            println!(
+                "  {:<14} alpha={alpha:.2}  chain gamma={} S={:.3} {:.3}ms/tok | \
+                 tree {label} S={:.3} {:.3}ms/tok{}",
+                p.name, chain.gamma, chain.speedup, chain_ms, tree.speedup, tree_ms,
+                if wins { "  <- tree wins" } else { "" }
+            );
+            csv.push_str(&format!(
+                "{},{alpha:.2},{},{:.4},{chain_ms:.4},{label},{},{:.4},{tree_ms:.4},{}\n",
+                p.name, chain.gamma, chain.speedup, tree.gamma, tree.speedup, wins as u8
+            ));
+            if on_stock {
+                // Compute-dominated: lane cost eats the β gain exactly, so
+                // the tree-aware search must come back bit-identical.
+                anyhow::ensure!(
+                    tree.tree.is_none() && tree.speedup.to_bits() == chain.speedup.to_bits(),
+                    "tree-aware DSE left the chain on the compute-bound platform \
+                     (alpha {alpha}: {label} S={:.3} vs chain S={:.3})",
+                    tree.speedup, chain.speedup
+                );
+            } else {
+                if alpha <= 0.20 && wins {
+                    boundary_low_alpha_win = true;
+                }
+                if alpha >= 0.90 && tree.tree.is_none() {
+                    boundary_high_alpha_chain = true;
+                }
+            }
+        }
+    }
+    ctx.write_csv("tree.csv", &csv)?;
+    anyhow::ensure!(
+        boundary_low_alpha_win,
+        "no strict tree per-token-latency win at low alpha on the boundary-bound platform"
+    );
+    anyhow::ensure!(
+        boundary_high_alpha_chain,
+        "tree-aware DSE failed to return to the chain at high alpha"
+    );
+
+    // ---- end-to-end: greedy tree decode ≡ greedy chain decode ---------
+    // Both follow the target argmax token-for-token; the tree only changes
+    // how many candidates each round shows the target, never what greedy
+    // acceptance commits. Same γ = tree depth, so the per-round lookahead
+    // (and bucket-edge termination) matches too.
+    let shape = TreeShape::new(2, 2);
+    let n = ctx.limit.unwrap_or(4).clamp(1, 8);
+    let samples: Vec<_> = ctx
+        .engine
+        .manifest
+        .eval_samples
+        .iter()
+        .filter(|s| s.task == "translate")
+        .take(n)
+        .cloned()
+        .collect();
+    let setup = DecoderSetup {
+        drafter: d_key,
+        target: t_key,
+        kernel: KernelPath::Pallas,
+        mapping: Mapping::heterogeneous(VARIANT),
+        gamma: shape.depth,
+        rule: AcceptRule::Greedy,
+        exec: ExecMode::Modular,
+        max_new: 32,
+    };
+    let (mut same, mut tree_rounds, mut lanes_real, mut lanes_executed) = (0usize, 0, 0, 0);
+    for s in &samples {
+        let prompt = prompt_ids(&ctx.tokenizer, s)?;
+        let mut chain =
+            DecodeSession::new(&ctx.engine, ctx.lat.clone(), setup.clone(), true, &prompt);
+        while !chain.is_done() {
+            chain.step(&ctx.engine)?;
+        }
+        let chain_out = chain.into_outcome();
+        let mut tree =
+            DecodeSession::new(&ctx.engine, ctx.lat.clone(), setup.clone(), true, &prompt);
+        tree.set_tree(Some(shape));
+        while !tree.is_done() {
+            tree.step(&ctx.engine)?;
+        }
+        let tree_out = tree.into_outcome();
+        same += (chain_out.tokens == tree_out.tokens) as usize;
+        tree_rounds += tree_out.tree_rounds;
+        lanes_real += tree_out.tree_lanes_real;
+        lanes_executed += tree_out.tree_lanes_executed;
+    }
+    println!(
+        "  e2e greedy {} ({} samples): identical token streams {same}/{}, \
+         tree rounds {tree_rounds}, lane fill {:.2}",
+        shape.label(),
+        samples.len(),
+        samples.len(),
+        lanes_real as f64 / lanes_executed.max(1) as f64
+    );
+    anyhow::ensure!(
+        same == samples.len(),
+        "greedy tree decode diverged from the chain on {}/{} samples",
+        samples.len() - same,
+        samples.len()
+    );
+    anyhow::ensure!(tree_rounds > 0, "tree sessions never ran a tree round");
+    Ok(())
+}

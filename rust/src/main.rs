@@ -9,7 +9,7 @@
 //!   alpha       quick per-task acceptance-rate check
 //!   info        print manifest / platform summary
 
-use specedge::config::{DecisionMode, ExecMode, KernelPath, RunConfig, Timing};
+use specedge::config::{DecisionMode, ExecMode, KernelPath, RunConfig, Timing, TreeChoice};
 use specedge::coordinator::Coordinator;
 use specedge::dse::{self, PairConfig};
 use specedge::experiments;
@@ -43,6 +43,7 @@ fn cli() -> Cli {
         .opt("timing", "simulated|real", Some("simulated"))
         .opt("decision", "decision cost model: analytic|calibrated", None)
         .opt("repartition-every", "calibrated: re-run mapping search every K rounds", None)
+        .opt("tree", "tree speculation: off|auto|KxD (e.g. 2x3)", None)
         .opt("alpha", "alpha for explore", Some("0.90"))
         .opt("seq", "operating sequence length", Some("63"))
         .opt("max-new", "max new tokens", Some("64"))
@@ -90,6 +91,9 @@ fn build_config(args: &specedge::util::cli::Args) -> anyhow::Result<RunConfig> {
     }
     if let Some(k) = args.get_usize("repartition-every")? {
         cfg.repartition_every = k;
+    }
+    if let Some(t) = args.get("tree") {
+        cfg.tree = TreeChoice::parse(t)?;
     }
     if let Some(m) = args.get_usize("max-new")? {
         cfg.max_new_tokens = m;
@@ -204,6 +208,11 @@ fn cmd_decode(
             .collect::<anyhow::Result<Vec<Vec<u32>>>>()?;
         session.set_stop_sequences(encoded);
     }
+    // `auto` needs the serving policy's online α estimate, so the one-shot
+    // CLI decode honors an explicit fixed shape only (`serve` does both).
+    if let TreeChoice::Fixed(shape) = cfg.tree {
+        session.set_tree(Some(shape));
+    }
     while !session.is_done() {
         session.step(&engine)?;
     }
@@ -218,6 +227,13 @@ fn cmd_decode(
         "simulated {:.1} ms | real {:.1} ms ({} drafter + {} target calls)",
         out.sim_s * 1e3, out.real_s * 1e3, out.drafter_calls, out.target_calls
     );
+    if out.tree_rounds > 0 {
+        println!(
+            "tree rounds={} lane_fill={:.2}",
+            out.tree_rounds,
+            out.tree_lanes_real as f64 / out.tree_lanes_executed.max(1) as f64
+        );
+    }
     Ok(())
 }
 

@@ -68,6 +68,16 @@ struct Inner {
     /// Σ real session lanes / Σ executed (padded) lanes over dispatches.
     lanes_real: u64,
     lanes_executed: u64,
+    /// Rounds that speculated a token tree (flattened multi-lane verify).
+    tree_rounds: u64,
+    /// Σ accepted root-path depth over tree rounds (mean accepted depth =
+    /// sum / tree_rounds).
+    tree_depth_sum: f64,
+    /// Σ real / executed verification lanes over tree rounds only (the
+    /// tree-lane utilization observable; distinct from the fused-dispatch
+    /// fill above, which also counts chain and baseline lanes).
+    tree_lanes_real: u64,
+    tree_lanes_executed: u64,
     /// Per-PU timeline accounting (indexed by [`PuId::index`]): Σ busy
     /// seconds and dispatch counts across workers.
     pu_busy: [f64; NUM_PUS],
@@ -157,6 +167,12 @@ pub struct RoundRecord {
     pub real_s: f64,
     /// Live sessions on this worker when the round ran.
     pub inflight: usize,
+    /// Executed (padded) verification lanes when the round speculated a
+    /// token tree; 0 marks a chain or baseline round. For tree rounds
+    /// `accepted` is the accepted root-path depth.
+    pub tree_lanes_executed: usize,
+    /// Verification lanes that carried live tree nodes (≤ executed).
+    pub tree_lanes_real: usize,
 }
 
 impl Metrics {
@@ -191,6 +207,12 @@ impl Metrics {
         }
         m.inflight_sum += r.inflight as f64;
         m.max_inflight = m.max_inflight.max(r.inflight);
+        if r.tree_lanes_executed > 0 {
+            m.tree_rounds += 1;
+            m.tree_depth_sum += r.accepted as f64;
+            m.tree_lanes_real += r.tree_lanes_real as u64;
+            m.tree_lanes_executed += r.tree_lanes_executed as u64;
+        }
     }
 
     /// Account one scheduler tick's engine-dispatch activity (fused
@@ -300,6 +322,17 @@ impl Metrics {
             } else {
                 f64::NAN
             },
+            tree_rounds: m.tree_rounds,
+            mean_tree_depth: if m.tree_rounds > 0 {
+                m.tree_depth_sum / m.tree_rounds as f64
+            } else {
+                f64::NAN
+            },
+            tree_lane_fill: if m.tree_lanes_executed > 0 {
+                m.tree_lanes_real as f64 / m.tree_lanes_executed as f64
+            } else {
+                f64::NAN
+            },
             pu_busy: m.pu_busy,
             pu_dispatches: m.pu_dispatches,
             overlap_s: m.overlap_s,
@@ -341,6 +374,13 @@ pub struct Report {
     /// Real lanes / executed lanes across all dispatches (1.0 = every
     /// executed lane carried a live session; NaN before any dispatch).
     pub batch_fill: f64,
+    /// Rounds that speculated a token tree (flattened multi-lane verify).
+    pub tree_rounds: u64,
+    /// Mean accepted root-path depth per tree round (NaN before any).
+    pub mean_tree_depth: f64,
+    /// Real / executed verification lanes over tree rounds only (NaN
+    /// before any tree round) — the tree lane-utilization observable.
+    pub tree_lane_fill: f64,
     /// Per-PU timeline accounting (index 0 = CPU cluster, 1 = GPU; see
     /// [`PuId::index`]): Σ busy seconds and dispatches across workers.
     pub pu_busy: [f64; NUM_PUS],
@@ -410,6 +450,7 @@ impl Report {
              rounds={} mean_gamma={:.2} round_alpha_p50={:.3} \
              inflight mean={:.2} max={}\n\
              dispatches={} fused={} batch_fill={:.2}\n\
+             tree: rounds={} mean_accepted_depth={:.2} lane_fill={:.2}\n\
              pu: cpu busy={:.1}ms gpu busy={:.1}ms overlap={:.1}ms \
              makespan={:.1}ms tl_latency_p50={:.1}ms\n\
              decision: prior_decisions={} calibration_obs={}\n\
@@ -437,6 +478,9 @@ impl Report {
             self.dispatches,
             self.fused_dispatches,
             self.batch_fill,
+            self.tree_rounds,
+            self.mean_tree_depth,
+            self.tree_lane_fill,
             self.pu_busy[PuId::Cpu.index()] * 1e3,
             self.pu_busy[PuId::Gpu.index()] * 1e3,
             self.overlap_s * 1e3,
@@ -488,12 +532,15 @@ mod tests {
         let m = Metrics::new();
         m.record_round(RoundRecord {
             drafted: 5, accepted: 4, sim_s: 0.01, real_s: 0.01, inflight: 3,
+            tree_lanes_executed: 0, tree_lanes_real: 0,
         });
         m.record_round(RoundRecord {
             drafted: 3, accepted: 3, sim_s: 0.01, real_s: 0.01, inflight: 1,
+            tree_lanes_executed: 0, tree_lanes_real: 0,
         });
         m.record_round(RoundRecord {
             drafted: 0, accepted: 0, sim_s: 0.01, real_s: 0.01, inflight: 2,
+            tree_lanes_executed: 0, tree_lanes_real: 0,
         });
         let r = m.snapshot();
         assert_eq!(r.rounds, 3);
@@ -503,6 +550,37 @@ mod tests {
         // The baseline round (drafted=0) must not dilute the α trajectory.
         assert_eq!(r.round_alpha.n, 2);
         assert!((r.round_alpha.mean - (0.8 + 1.0) / 2.0).abs() < 1e-12);
+        // No tree rounds recorded: counters stay inert.
+        assert_eq!(r.tree_rounds, 0);
+        assert!(r.mean_tree_depth.is_nan());
+        assert!(r.tree_lane_fill.is_nan());
+    }
+
+    #[test]
+    fn tree_rounds_aggregate_depth_and_lane_fill() {
+        let m = Metrics::new();
+        // A 2x2 tree round: 6 executed lanes, 5 live, accepted depth 2.
+        m.record_round(RoundRecord {
+            drafted: 2, accepted: 2, sim_s: 0.01, real_s: 0.01, inflight: 1,
+            tree_lanes_executed: 6, tree_lanes_real: 5,
+        });
+        // A second tree round that accepted only depth 1.
+        m.record_round(RoundRecord {
+            drafted: 2, accepted: 1, sim_s: 0.01, real_s: 0.01, inflight: 1,
+            tree_lanes_executed: 6, tree_lanes_real: 6,
+        });
+        // Interleaved chain round must not contaminate tree accounting.
+        m.record_round(RoundRecord {
+            drafted: 4, accepted: 4, sim_s: 0.01, real_s: 0.01, inflight: 1,
+            tree_lanes_executed: 0, tree_lanes_real: 0,
+        });
+        let r = m.snapshot();
+        assert_eq!(r.rounds, 3);
+        assert_eq!(r.tree_rounds, 2);
+        assert!((r.mean_tree_depth - 1.5).abs() < 1e-12);
+        assert!((r.tree_lane_fill - 11.0 / 12.0).abs() < 1e-12);
+        let s = r.render(1.0);
+        assert!(s.contains("mean_accepted_depth=1.50"), "{s}");
     }
 
     #[test]

@@ -242,13 +242,19 @@ impl Engine {
         let exe = self.forward_exe(variant, kernel, 1, bucket)?;
         let w = self.weights_for(variant)?;
 
+        // Shares the monotonically-grown pad scratch with forward_batch
+        // (fill a bucket-sized prefix, upload just that slice).
         let mut scratch = self.pad_scratch.borrow_mut();
-        scratch.clear();
-        scratch.extend(tokens.iter().map(|&t| t as i32));
-        scratch.resize(bucket, PAD_ID as i32);
+        if scratch.len() < bucket {
+            scratch.resize(bucket, PAD_ID as i32);
+        }
+        for (dst, &t) in scratch.iter_mut().zip(tokens.iter()) {
+            *dst = t as i32;
+        }
+        scratch[tokens.len()..bucket].fill(PAD_ID as i32);
         let tok_buf = self
             .client
-            .buffer_from_host_buffer::<i32>(&scratch, &[bucket], None)
+            .buffer_from_host_buffer::<i32>(&scratch[..bucket], &[bucket], None)
             .map_err(|e| anyhow::anyhow!("token upload: {e:?}"))?;
         drop(scratch);
 
@@ -295,14 +301,21 @@ impl Engine {
         anyhow::ensure!(batch >= 1, "empty batch");
         let exe = self.forward_exe(variant, kernel, batch, bucket)?;
         let w = self.weights_for(variant)?;
+        // The pad scratch grows monotonically and is never shrunk, so a
+        // burst of wide tree-lane dispatches allocates at most once for the
+        // largest lane count seen and every later call reuses that buffer.
+        let need = batch * bucket;
         let mut scratch = self.pad_scratch.borrow_mut();
-        scratch.clear();
-        scratch.reserve(batch * bucket);
-        for s in seqs {
+        if scratch.len() < need {
+            scratch.resize(need, PAD_ID as i32);
+        }
+        for (b, s) in seqs.iter().enumerate() {
             anyhow::ensure!(s.len() <= bucket, "{} > bucket {bucket}", s.len());
-            scratch.extend(s.iter().map(|&t| t as i32));
-            let padded = scratch.len() + (bucket - s.len());
-            scratch.resize(padded, PAD_ID as i32);
+            let row = &mut scratch[b * bucket..(b + 1) * bucket];
+            for (dst, &t) in row.iter_mut().zip(s.iter()) {
+                *dst = t as i32;
+            }
+            row[s.len()..].fill(PAD_ID as i32);
         }
         // The batch-1 artifact takes rank-1 tokens (aot.py lowers
         // `(bucket,)` for batch 1, `(batch, bucket)` otherwise).
@@ -310,7 +323,7 @@ impl Engine {
         let shape: &[usize] = if batch == 1 { &rank2[1..] } else { &rank2 };
         let tok_buf = self
             .client
-            .buffer_from_host_buffer::<i32>(&scratch, shape, None)
+            .buffer_from_host_buffer::<i32>(&scratch[..need], shape, None)
             .map_err(|e| anyhow::anyhow!("token upload: {e:?}"))?;
         drop(scratch);
         let mut args: Vec<&xla::PjRtBuffer> = w.iter().collect();

@@ -365,6 +365,9 @@ fn metrics_json(coordinator: &Coordinator, start_wall: std::time::Instant) -> Js
         .set("dispatches", (r.dispatches as usize).into())
         .set("fused_dispatches", (r.fused_dispatches as usize).into())
         .set("batch_fill", r.batch_fill.into())
+        .set("tree_rounds", (r.tree_rounds as usize).into())
+        .set("mean_tree_depth", r.mean_tree_depth.into())
+        .set("tree_lane_fill", r.tree_lane_fill.into())
         .set("cpu_busy_s", r.pu_busy[0].into())
         .set("gpu_busy_s", r.pu_busy[1].into())
         .set("overlap_s", r.overlap_s.into())

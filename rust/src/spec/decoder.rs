@@ -65,6 +65,12 @@ pub struct DecodeOutcome {
     pub sim_s: f64,
     /// Real PJRT wall-clock seconds on this machine.
     pub real_s: f64,
+    /// Tree-speculation accounting: rounds run as a (k, d) tree, and the
+    /// real vs executed-after-padding lane totals across their dispatches
+    /// (lane utilization = real/executed). All 0 on chain-only decodes.
+    pub tree_rounds: usize,
+    pub tree_lanes_real: usize,
+    pub tree_lanes_executed: usize,
     /// Why the decode ended ([`FinishReason::Length`] covers both the
     /// `max_new` cap and bucket-space exhaustion; cancellation/deadline
     /// aborts are stamped by the serving worker, not the session).

@@ -18,7 +18,10 @@ pub mod sampling;
 pub mod session;
 
 pub use decoder::{DecodeOutcome, Decoder, DecoderSetup};
-pub use sampling::{greedy_accept_len, stochastic_accept, AcceptRule};
+pub use sampling::{
+    greedy_accept_len, stochastic_accept, top1, top_k_into, tree_verify_node, AcceptRule,
+    NodeVerdict,
+};
 pub use session::{
     DecodeSession, EngineReply, EngineRequest, ForwardReply, FuseKey, RequestKind,
     SessionLimits, SessionPlan, StepOutcome, StepProgress,

@@ -32,6 +32,7 @@
 
 use crate::api::FinishReason;
 use crate::config::{ExecMode, KernelPath};
+use crate::costmodel::TreeShape;
 use crate::hetero::{LatencyModel, Mapping, PuAssignment, PuRoute};
 use crate::models::VariantKey;
 use crate::runtime::{Engine, ForwardOut, MonoStepOut};
@@ -39,7 +40,10 @@ use crate::tokenizer::EOS_ID;
 use crate::util::rng::Rng;
 
 use super::decoder::{DecodeOutcome, DecoderSetup};
-use super::sampling::{apply_temperature, greedy_accept_len, stochastic_accept, AcceptRule};
+use super::sampling::{
+    apply_temperature, greedy_accept_len, sample_from, stochastic_accept, top_k_into,
+    tree_verify_node, AcceptRule, NodeVerdict,
+};
 
 /// Static bounds a session computes once at admission.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -81,6 +85,13 @@ pub struct StepOutcome {
     /// Clock increments for this step.
     pub sim_s: f64,
     pub real_s: f64,
+    /// Tree-round lane accounting: real tree-node lanes dispatched this
+    /// round vs lanes actually executed after padding to the compiled
+    /// batch sizes. Both 0 on chain/baseline rounds, so
+    /// `tree_lanes_executed > 0` identifies a tree round (its accepted
+    /// root-path depth is then `accepted`).
+    pub tree_lanes_real: usize,
+    pub tree_lanes_executed: usize,
     /// The session finished (EOS, cap reached, or out of bucket space).
     pub done: bool,
 }
@@ -119,7 +130,9 @@ impl EngineRequest {
             RequestKind::Forward { variant, kernel, bucket } => {
                 Some((variant, kernel, bucket, self.route.primary))
             }
-            RequestKind::MonoStep { .. } => None,
+            // A tree dispatch already fills its own lanes; the session
+            // executes it as one batched call, never cross-fused.
+            RequestKind::TreeForward { .. } | RequestKind::MonoStep { .. } => None,
         }
     }
 }
@@ -135,6 +148,19 @@ pub enum RequestKind {
         variant: VariantKey,
         kernel: KernelPath,
         bucket: usize,
+    },
+    /// One multi-lane forward over `lanes` tree-node prefixes held by the
+    /// session's in-flight speculation tree (a drafter level expansion or
+    /// the flattened leaf verification). The session executes it as one
+    /// batched dispatch itself — chunked over the compiled
+    /// [`crate::runtime::Manifest::batch_sizes_for`] sizes and priced by
+    /// [`LatencyModel::batched_forward_latency`] — so the whole tree
+    /// verifies in one target forward on the mapped PU timeline.
+    TreeForward {
+        variant: VariantKey,
+        kernel: KernelPath,
+        bucket: usize,
+        lanes: usize,
     },
     /// One fused monolithic spec-step graph (paper Fig. 3); always a
     /// singleton dispatch.
@@ -206,6 +232,10 @@ enum RoundPhase {
     Drafting(DraftState),
     /// All `g` drafts issued; awaiting the target verify forward.
     Verifying(DraftState),
+    /// Tree drafting: `levels.len()` of `depth` level expansions applied.
+    TreeDrafting(TreeState),
+    /// All levels drafted; awaiting the one flattened leaf verification.
+    TreeVerifying(TreeState),
     /// Awaiting the fused monolithic spec-step.
     Mono { gamma: usize },
 }
@@ -220,6 +250,93 @@ struct DraftState {
     draft_probs: Vec<Vec<f32>>,
 }
 
+/// One node of the in-flight speculation tree.
+#[derive(Debug)]
+struct TreeNode {
+    tok: u32,
+    /// Drafter distribution *at* this node — the proposal its children
+    /// were selected from (stochastic rule only; filled by the level
+    /// expansion that drafted them).
+    q: Option<Vec<f32>>,
+}
+
+/// Tree-round scratch: the partially-built speculation tree. Requires
+/// branching ≥ 2 — a 1-wide tree routes through the chain path instead.
+#[derive(Debug)]
+struct TreeState {
+    base_len: usize,
+    branching: usize,
+    /// Effective depth this round (the configured depth clamped at the
+    /// bucket edge, like the chain's γ → g clamp).
+    depth: usize,
+    /// `levels[j][m]` = node m at tree level j, i.e. the token candidate
+    /// at sequence position `base_len + j`. Parent pointers are implicit:
+    /// every node expands exactly `branching` children in order, so the
+    /// children of `levels[j][m]` are `levels[j+1][m·k .. m·k+k]`.
+    levels: Vec<Vec<TreeNode>>,
+    /// Drafter distribution over the root prefix (proposal for level 0;
+    /// stochastic rule only).
+    root_q: Option<Vec<f32>>,
+    /// Reused top-k selection scratch — with it, per-level expansion is
+    /// allocation-free in steady state (satellite: single-allocation
+    /// partial top-k).
+    topk: Vec<u32>,
+    /// Lane accounting across this round's dispatches: real tree lanes vs
+    /// executed-after-padding lanes (per-round utilization metrics).
+    lanes_real: usize,
+    lanes_executed: usize,
+}
+
+impl TreeState {
+    fn new(base_len: usize, branching: usize, depth: usize) -> TreeState {
+        TreeState {
+            base_len,
+            branching,
+            depth,
+            levels: Vec::with_capacity(depth),
+            root_q: None,
+            topk: Vec::with_capacity(branching),
+            lanes_real: 0,
+            lanes_executed: 0,
+        }
+    }
+
+    /// Lanes of the next level expansion: one per node being expanded.
+    fn next_draft_lanes(&self) -> usize {
+        self.levels.last().map_or(1, |l| l.len())
+    }
+
+    /// Token prefixes (base + root path) for the next level expansion.
+    fn draft_lane_prefixes(&self, base: &[u32]) -> Vec<Vec<u32>> {
+        match self.levels.len() {
+            0 => vec![base.to_vec()],
+            j => (0..self.levels[j - 1].len())
+                .map(|m| self.path_prefix(base, j - 1, m))
+                .collect(),
+        }
+    }
+
+    /// Token prefixes for the flattened verification: one lane per leaf.
+    fn verify_lane_prefixes(&self, base: &[u32]) -> Vec<Vec<u32>> {
+        let last = self.levels.len() - 1;
+        (0..self.levels[last].len())
+            .map(|m| self.path_prefix(base, last, m))
+            .collect()
+    }
+
+    /// `base` extended with the tokens along the root path ending at node
+    /// `m` of `level` (ancestor at level l is `m / k^(level−l)`).
+    fn path_prefix(&self, base: &[u32], level: usize, m: usize) -> Vec<u32> {
+        let mut seq = Vec::with_capacity(base.len() + level + 1);
+        seq.extend_from_slice(base);
+        for l in 0..=level {
+            let idx = m / self.branching.pow((level - l) as u32);
+            seq.push(self.levels[l][idx].tok);
+        }
+        seq
+    }
+}
+
 /// Counter snapshot taken at round start so per-round [`StepOutcome`]
 /// deltas can't drift from the aggregate totals.
 #[derive(Debug, Clone, Copy, Default)]
@@ -227,6 +344,8 @@ struct RoundBase {
     tok: usize,
     drafted: usize,
     accepted: usize,
+    tree_lanes_real: usize,
+    tree_lanes_executed: usize,
     sim_s: f64,
     real_s: f64,
 }
@@ -252,6 +371,9 @@ pub struct DecodeSession {
     rng: Rng,
     /// Whether the *next* round speculates (re-decidable between rounds).
     speculative: bool,
+    /// Speculation-tree shape for the next round (`None` = linear chain;
+    /// kept `None` for 1-wide shapes, which *are* the chain).
+    tree: Option<TreeShape>,
     phase: RoundPhase,
     round_base: RoundBase,
     done: bool,
@@ -300,6 +422,7 @@ impl DecodeSession {
             limits,
             rng: Rng::new(0x5EED),
             speculative,
+            tree: None,
             phase: RoundPhase::Idle,
             round_base: RoundBase::default(),
             ready_s: 0.0,
@@ -420,6 +543,22 @@ impl DecodeSession {
         self.speculative = on;
     }
 
+    /// Re-decide the speculation-tree shape for the next round
+    /// (round-level policy hook). `None` — and any 1-wide shape, which
+    /// *is* the chain — selects the linear γ-chain path, so branching
+    /// factor 1 reproduces today's chain streams bit-for-bit by
+    /// construction. Tree rounds need the modular exec mode (the
+    /// monolithic graphs are chain-shaped); under monolithic execution
+    /// the shape is ignored.
+    pub fn set_tree(&mut self, shape: Option<TreeShape>) {
+        self.tree = shape.filter(|s| s.branches());
+    }
+
+    /// The tree shape the next speculative round will use (`None` = chain).
+    pub fn tree(&self) -> Option<TreeShape> {
+        self.tree
+    }
+
     /// Re-decide γ for the next round (round-level policy hook). The
     /// generation cap stays as computed at admission; γ only shapes the
     /// next draft window.
@@ -513,19 +652,35 @@ impl DecodeSession {
             } else {
                 match self.setup.exec {
                     ExecMode::Modular => {
-                        let gamma = self.setup.gamma.max(1);
                         let base_len = self.ids.len();
-                        let g = gamma.min(self.limits.max_total.saturating_sub(base_len + 1));
-                        if g == 0 {
-                            self.done = true;
-                            return Ok(PlannedKind::Done(self.round_outcome()));
+                        let window = self.limits.max_total.saturating_sub(base_len + 1);
+                        if let Some(shape) = self.tree {
+                            // Tree round: depth clamps at the bucket edge
+                            // exactly like the chain's γ → g clamp.
+                            let d = shape.depth.min(window);
+                            if d == 0 {
+                                self.done = true;
+                                return Ok(PlannedKind::Done(self.round_outcome()));
+                            }
+                            self.phase = RoundPhase::TreeDrafting(TreeState::new(
+                                base_len,
+                                shape.branching,
+                                d,
+                            ));
+                        } else {
+                            let gamma = self.setup.gamma.max(1);
+                            let g = gamma.min(window);
+                            if g == 0 {
+                                self.done = true;
+                                return Ok(PlannedKind::Done(self.round_outcome()));
+                            }
+                            self.phase = RoundPhase::Drafting(DraftState {
+                                base_len,
+                                g,
+                                drafted: Vec::with_capacity(g),
+                                draft_probs: Vec::new(),
+                            });
                         }
-                        self.phase = RoundPhase::Drafting(DraftState {
-                            base_len,
-                            g,
-                            drafted: Vec::with_capacity(g),
-                            draft_probs: Vec::new(),
-                        });
                     }
                     ExecMode::Monolithic => {
                         let gamma = self.setup.gamma.max(1);
@@ -554,6 +709,19 @@ impl DecodeSession {
                 variant: self.setup.drafter,
                 kernel: self.setup.kernel,
                 bucket: engine.bucket_for(self.ids.len())?,
+            },
+            RoundPhase::TreeDrafting(st) => RequestKind::TreeForward {
+                variant: self.setup.drafter,
+                kernel: self.setup.kernel,
+                // Every lane of the level-j expansion is base + j tokens.
+                bucket: engine.bucket_for(st.base_len + st.levels.len())?,
+                lanes: st.next_draft_lanes(),
+            },
+            RoundPhase::TreeVerifying(st) => RequestKind::TreeForward {
+                variant: self.setup.target,
+                kernel: self.setup.kernel,
+                bucket: engine.bucket_for(st.base_len + st.depth)?,
+                lanes: st.levels.last().map_or(1, |l| l.len()),
             },
             RoundPhase::Mono { gamma } => RequestKind::MonoStep { gamma: *gamma },
         };
@@ -644,6 +812,75 @@ impl DecodeSession {
                 self.done = self.commit_round(&st.drafted[..n_acc], correction);
                 Ok(StepProgress::Round(self.round_outcome()))
             }
+            // ---- tree draft phase: one level expansion per dispatch ----
+            (RoundPhase::TreeDrafting(mut st), EngineReply::Forward(r)) => {
+                self.out.real_s += r.real_s;
+                self.out.sim_s += r.sim_s;
+                self.out.drafter_calls += 1;
+                anyhow::ensure!(r.row == 0, "a tree dispatch owns its whole batch");
+                let j = st.levels.len();
+                let lanes = st.next_draft_lanes();
+                anyhow::ensure!(r.fwd.batch >= lanes, "tree expansion lanes missing");
+                // The proposal for position base_len + j is the drafter's
+                // distribution at the last real token of each lane.
+                let pos = st.base_len + j - 1;
+                let k = st.branching;
+                let mut level = Vec::with_capacity(lanes * k);
+                for m in 0..lanes {
+                    if self.setup.rule == AcceptRule::Stochastic {
+                        let mut q = r.fwd.probs(m, pos);
+                        apply_temperature(&mut q, self.temperature);
+                        // Temperature is a monotone re-shaping, so the
+                        // top-k order matches the raw logits' order.
+                        top_k_into(&q, k, &mut st.topk);
+                        for &t in &st.topk {
+                            level.push(TreeNode { tok: t, q: None });
+                        }
+                        if j == 0 {
+                            st.root_q = Some(q);
+                        } else {
+                            st.levels[j - 1][m].q = Some(q);
+                        }
+                    } else {
+                        top_k_into(r.fwd.row(m, pos), k, &mut st.topk);
+                        for &t in &st.topk {
+                            level.push(TreeNode { tok: t, q: None });
+                        }
+                    }
+                }
+                st.levels.push(level);
+                self.phase = if st.levels.len() == st.depth {
+                    RoundPhase::TreeVerifying(st)
+                } else {
+                    RoundPhase::TreeDrafting(st)
+                };
+                Ok(StepProgress::Pending)
+            }
+            // ---- tree verify phase: one flattened leaf dispatch --------
+            (RoundPhase::TreeVerifying(st), EngineReply::Forward(r)) => {
+                self.out.real_s += r.real_s;
+                self.out.sim_s += r.sim_s;
+                self.out.target_calls += 1;
+                self.out.n_rounds += 1;
+                // The draft window is the tree depth — per-round α keeps
+                // its chain meaning of accepted-path-fraction.
+                self.out.n_drafted += st.depth;
+                self.out.tree_rounds += 1;
+                self.out.tree_lanes_real += st.lanes_real;
+                self.out.tree_lanes_executed += st.lanes_executed;
+                anyhow::ensure!(r.row == 0, "a tree dispatch owns its whole batch");
+                anyhow::ensure!(
+                    r.fwd.batch >= st.levels[st.depth - 1].len(),
+                    "tree verification lanes missing"
+                );
+
+                let (path, correction) = self.tree_walk(&st, r.fwd);
+                self.out.n_accepted += path.len();
+                // ids never held the drafts (lanes are built off-line), so
+                // there is nothing to roll back before committing.
+                self.done = self.commit_round(&path, correction);
+                Ok(StepProgress::Round(self.round_outcome()))
+            }
             // ---- monolithic round (paper Fig. 3): one fused graph ------
             (RoundPhase::Mono { gamma }, EngineReply::Mono(step)) => {
                 let mono_seq = engine
@@ -710,12 +947,164 @@ impl DecodeSession {
                     EngineReply::Forward(ForwardReply { fwd: &fwd, row: 0, sim_s, real_s }),
                 )
             }
+            RequestKind::TreeForward { variant, kernel, bucket, lanes } => {
+                let seqs: Vec<Vec<u32>> = match &self.phase {
+                    RoundPhase::TreeDrafting(st) => st.draft_lane_prefixes(&self.ids),
+                    RoundPhase::TreeVerifying(st) => st.verify_lane_prefixes(&self.ids),
+                    _ => anyhow::bail!("tree dispatch without a tree phase"),
+                };
+                anyhow::ensure!(seqs.len() == lanes, "tree lane count drifted");
+                let spec = engine.manifest.model_for(variant)?;
+                let pu = self.role_pu(variant.role);
+
+                // Chunk the lanes over the compiled batch sizes (smallest
+                // compiled size that fits the remainder; largest on
+                // overflow), padding short chunks by replicating their
+                // first lane — same policy as the fuser's plan_chunks.
+                let mut sizes = engine.manifest.batch_sizes_for(variant, kernel, bucket);
+                if sizes.is_empty() {
+                    sizes.push(1);
+                }
+                sizes.sort_unstable();
+                let largest = *sizes.last().unwrap();
+
+                let mut logits: Vec<f32> = Vec::with_capacity(lanes * bucket * spec.vocab);
+                let mut sim_s = 0.0;
+                let mut real_s = 0.0;
+                let mut executed = 0usize;
+                let mut off = 0usize;
+                while off < lanes {
+                    let remaining = lanes - off;
+                    let exec_b = sizes
+                        .iter()
+                        .copied()
+                        .find(|&s| s >= remaining)
+                        .unwrap_or(largest);
+                    let m = remaining.min(exec_b);
+                    let batched = if exec_b > 1 {
+                        let mut views: Vec<&[u32]> =
+                            seqs[off..off + m].iter().map(|s| s.as_slice()).collect();
+                        while views.len() < exec_b {
+                            views.push(seqs[off].as_slice());
+                        }
+                        engine.forward_batch(variant, kernel, &views, bucket).ok()
+                    } else {
+                        None
+                    };
+                    match batched {
+                        Some(fwd) => {
+                            sim_s += self.lat.batched_forward_latency(
+                                spec,
+                                variant.scheme,
+                                pu,
+                                bucket,
+                                exec_b,
+                            );
+                            real_s += fwd.elapsed_s;
+                            logits.extend_from_slice(&fwd.logits[..m * bucket * fwd.vocab]);
+                            executed += exec_b;
+                        }
+                        // No batched artifact (e.g. the Pallas lowering is
+                        // batch-1 only) or it failed: degrade this chunk to
+                        // per-lane single dispatches.
+                        None => {
+                            for s in &seqs[off..off + m] {
+                                let fwd = engine.forward(variant, kernel, s, bucket)?;
+                                sim_s +=
+                                    self.lat.forward_latency(spec, variant.scheme, pu, bucket);
+                                real_s += fwd.elapsed_s;
+                                logits.extend_from_slice(&fwd.logits);
+                                executed += 1;
+                            }
+                        }
+                    }
+                    off += m;
+                }
+                let vocab = spec.vocab;
+                let combined =
+                    ForwardOut { logits, batch: lanes, seq: bucket, vocab, elapsed_s: real_s };
+                if let RoundPhase::TreeDrafting(st) | RoundPhase::TreeVerifying(st) =
+                    &mut self.phase
+                {
+                    st.lanes_real += lanes;
+                    st.lanes_executed += executed;
+                }
+                self.apply(
+                    engine,
+                    EngineReply::Forward(ForwardReply { fwd: &combined, row: 0, sim_s, real_s }),
+                )
+            }
             RequestKind::MonoStep { gamma } => {
                 let cur_len = self.ids.len();
                 let step = engine.mono_step(gamma, &self.ids, cur_len)?;
                 self.apply(engine, EngineReply::Mono(&step))
             }
         }
+    }
+
+    /// Longest-valid-root-path acceptance over the verified tree: walk
+    /// from the root, at each node judging its k children against the
+    /// target distribution read from a descendant lane of the verify
+    /// dispatch (rows under a shared prefix agree, causality). Greedy
+    /// descends into the child matching the target argmax; stochastic
+    /// applies the residual rule ([`tree_verify_node`]) in proposal order
+    /// — with k = 1 both degenerate to the chain's accept rules. Returns
+    /// the accepted path and the correction/bonus token.
+    fn tree_walk(&mut self, st: &TreeState, fwd: &ForwardOut) -> (Vec<u32>, u32) {
+        let k = st.branching;
+        let d = st.depth;
+        let mut path = Vec::with_capacity(d);
+        let mut node = 0usize; // accepted node's index in levels[j]
+        for j in 0..d {
+            let first_child = if j == 0 { 0 } else { node * k };
+            let children = &st.levels[j][first_child..first_child + k];
+            // Leftmost leaf descending from the parent — its lane holds
+            // the target distribution judging position base_len + j.
+            let row = first_child * k.pow((d - 1 - j) as u32);
+            let pos = st.base_len + j - 1;
+            match self.setup.rule {
+                AcceptRule::Greedy => {
+                    let t_arg = fwd.argmax(row, pos);
+                    match children.iter().position(|n| n.tok == t_arg) {
+                        Some(ci) => {
+                            node = first_child + ci;
+                            path.push(t_arg);
+                        }
+                        None => return (path, t_arg),
+                    }
+                }
+                AcceptRule::Stochastic => {
+                    let q = if j == 0 {
+                        st.root_q.as_deref()
+                    } else {
+                        st.levels[j - 1][node].q.as_deref()
+                    }
+                    .expect("stochastic tree level drafted without its proposal");
+                    let mut p = fwd.probs(row, pos);
+                    apply_temperature(&mut p, self.temperature);
+                    let toks: Vec<u32> = children.iter().map(|n| n.tok).collect();
+                    match tree_verify_node(&toks, q, &p, &mut self.rng) {
+                        NodeVerdict::Accepted(ci) => {
+                            node = first_child + ci;
+                            path.push(toks[ci]);
+                        }
+                        NodeVerdict::Rejected(c) => return (path, c),
+                    }
+                }
+            }
+        }
+        // Full depth accepted: bonus token from the target's distribution
+        // at the accepted leaf's last position (the leaf's own lane).
+        let pos = st.base_len + d - 1;
+        let bonus = match self.setup.rule {
+            AcceptRule::Greedy => fwd.argmax(node, pos),
+            AcceptRule::Stochastic => {
+                let mut p = fwd.probs(node, pos);
+                apply_temperature(&mut p, self.temperature);
+                sample_from(&p, &mut self.rng)
+            }
+        };
+        (path, bonus)
     }
 
     /// The round-commit state transition, shared by both speculative paths
@@ -779,6 +1168,8 @@ impl DecodeSession {
             tok: self.out.tokens.len(),
             drafted: self.out.n_drafted,
             accepted: self.out.n_accepted,
+            tree_lanes_real: self.out.tree_lanes_real,
+            tree_lanes_executed: self.out.tree_lanes_executed,
             sim_s: self.out.sim_s,
             real_s: self.out.real_s,
         }
@@ -800,6 +1191,9 @@ impl DecodeSession {
                 .unwrap_or_default(),
             drafted: self.out.n_drafted - self.round_base.drafted,
             accepted: self.out.n_accepted - self.round_base.accepted,
+            tree_lanes_real: self.out.tree_lanes_real - self.round_base.tree_lanes_real,
+            tree_lanes_executed: self.out.tree_lanes_executed
+                - self.round_base.tree_lanes_executed,
             sim_s: self.out.sim_s - self.round_base.sim_s,
             real_s: self.out.real_s - self.round_base.real_s,
             done: self.done,
@@ -863,6 +1257,48 @@ mod tests {
     fn fresh_session_is_at_round_boundary() {
         let s = session(8);
         assert!(!s.mid_round());
+    }
+
+    #[test]
+    fn one_wide_tree_is_the_chain() {
+        // A branching-1 shape is normalised away: the session keeps the
+        // chain code path (and therefore its exact token/sim_s streams).
+        let mut s = session(8);
+        s.set_tree(Some(TreeShape::new(1, 5)));
+        assert_eq!(s.tree(), None);
+        s.set_tree(Some(TreeShape::new(2, 3)));
+        assert_eq!(s.tree(), Some(TreeShape { branching: 2, depth: 3 }));
+        s.set_tree(None);
+        assert_eq!(s.tree(), None);
+    }
+
+    #[test]
+    fn tree_path_prefixes_follow_implicit_parents() {
+        // Hand-build a (2, 2) tree and check the lane reconstruction:
+        // ancestor of leaf m at level l is m / k^(level−l).
+        let mut st = TreeState::new(3, 2, 2);
+        st.levels.push(vec![
+            TreeNode { tok: 10, q: None },
+            TreeNode { tok: 11, q: None },
+        ]);
+        assert_eq!(st.next_draft_lanes(), 2);
+        st.levels.push(vec![
+            TreeNode { tok: 20, q: None },
+            TreeNode { tok: 21, q: None },
+            TreeNode { tok: 22, q: None },
+            TreeNode { tok: 23, q: None },
+        ]);
+        let base = [1, 2, 3];
+        let lanes = st.verify_lane_prefixes(&base);
+        assert_eq!(
+            lanes,
+            vec![
+                vec![1, 2, 3, 10, 20],
+                vec![1, 2, 3, 10, 21],
+                vec![1, 2, 3, 11, 22],
+                vec![1, 2, 3, 11, 23],
+            ]
+        );
     }
 
     #[test]

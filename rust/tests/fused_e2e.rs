@@ -10,8 +10,9 @@
 //! * the coordinator's fused serving path matches `max_inflight = 1`;
 //! * the lockstep batcher reference charges the executed batch size.
 
-use specedge::config::{ExecMode, KernelPath, RunConfig};
+use specedge::config::{DecisionMode, ExecMode, KernelPath, RunConfig, TreeChoice};
 use specedge::coordinator::fuser::{self, TickEvent};
+use specedge::costmodel::TreeShape;
 use specedge::coordinator::{batcher, Coordinator};
 use specedge::hetero::{LatencyModel, Mapping, Platform};
 use specedge::models::VariantKey;
@@ -236,8 +237,11 @@ fn coord_cfg(max_inflight: usize) -> RunConfig {
 }
 
 fn run_coord(max_inflight: usize, n: usize) -> (Vec<Vec<u32>>, specedge::metrics::Report) {
-    let coord =
-        Arc::new(Coordinator::start(coord_cfg(max_inflight), Platform::imx95()).unwrap());
+    run_coord_with(coord_cfg(max_inflight), n)
+}
+
+fn run_coord_with(cfg: RunConfig, n: usize) -> (Vec<Vec<u32>>, specedge::metrics::Report) {
+    let coord = Arc::new(Coordinator::start(cfg, Platform::imx95()).unwrap());
     let manifest = specedge::runtime::Manifest::load(Path::new("artifacts")).unwrap();
     let tokenizer = Tokenizer::from_manifest(&manifest.tokenizer_spec).unwrap();
     let samples: Vec<_> = manifest
@@ -292,6 +296,99 @@ fn coordinator_fused_serving_matches_single_inflight_token_streams() {
     );
     let fill = fused_report.batch_fill;
     assert!(fill > 0.0 && fill <= 1.0, "batch fill {fill} out of range");
+}
+
+// ---- tree speculation parity --------------------------------------------
+
+/// Width-1 trees ARE the chain: for both accept rules, a session handed a
+/// `1xD` shape must produce bit-identical tokens and simulated seconds to
+/// the plain chain session (the session normalizes branching ≤ 1 away, so
+/// this pins that contract end-to-end, RNG draw pattern included).
+#[test]
+fn tree_width_one_is_bit_identical_to_chain_sessions() {
+    let Some(engine) = engine() else { return };
+    let lat = LatencyModel::new(Platform::imx95());
+    for rule in [AcceptRule::Greedy, AcceptRule::Stochastic] {
+        for p in prompts(&engine, 2) {
+            let mk = || DecoderSetup { rule, ..setup(3, 12, KernelPath::Ref) };
+            let mut chain =
+                DecodeSession::new(&engine, lat.clone(), mk(), true, &p).with_rng(Rng::new(7));
+            while !chain.is_done() {
+                chain.step(&engine).unwrap();
+            }
+            let chain_out = chain.into_outcome();
+            let mut tree =
+                DecodeSession::new(&engine, lat.clone(), mk(), true, &p).with_rng(Rng::new(7));
+            tree.set_tree(Some(TreeShape::new(1, 3)));
+            while !tree.is_done() {
+                tree.step(&engine).unwrap();
+            }
+            let tree_out = tree.into_outcome();
+            assert_eq!(tree_out.tokens, chain_out.tokens, "{rule:?}: tokens diverged");
+            assert_eq!(
+                tree_out.sim_s.to_bits(),
+                chain_out.sim_s.to_bits(),
+                "{rule:?}: simulated charge diverged"
+            );
+            assert_eq!(tree_out.tree_rounds, 0, "1-wide shape must not run tree rounds");
+        }
+    }
+}
+
+/// A real (branching ≥ 2) greedy tree decode commits exactly the chain's
+/// token stream — both follow the target argmax — while actually running
+/// multi-lane tree rounds.
+#[test]
+fn tree_greedy_decode_matches_chain_stream_with_tree_rounds() {
+    let Some(engine) = engine() else { return };
+    let lat = LatencyModel::new(Platform::imx95());
+    for p in prompts(&engine, 3) {
+        let mut chain = DecodeSession::new(&engine, lat.clone(), setup(2, 12, KernelPath::Ref), true, &p);
+        while !chain.is_done() {
+            chain.step(&engine).unwrap();
+        }
+        let chain_out = chain.into_outcome();
+        let mut tree = DecodeSession::new(&engine, lat.clone(), setup(2, 12, KernelPath::Ref), true, &p);
+        tree.set_tree(Some(TreeShape::new(2, 2)));
+        while !tree.is_done() {
+            tree.step(&engine).unwrap();
+        }
+        let tree_out = tree.into_outcome();
+        assert_eq!(tree_out.tokens, chain_out.tokens, "greedy tree diverged from chain");
+        assert!(tree_out.tree_rounds > 0, "no tree rounds ran");
+        assert!(tree_out.tree_lanes_real <= tree_out.tree_lanes_executed);
+        assert!(tree_out.tree_lanes_executed > 0);
+    }
+}
+
+/// Coordinator-level chain parity across decision modes: `tree: 1x3`
+/// (the chain written as a degenerate tree) serves byte-identical token
+/// streams to the default chain configuration under both the analytic
+/// and the calibrated decision models, and never runs a tree round.
+#[test]
+fn tree_width_one_reproduces_chain_serving_across_decision_modes() {
+    if !Path::new("artifacts/manifest.json").exists() {
+        eprintln!("SKIP: artifacts missing (run `make artifacts`)");
+        return;
+    }
+    for decision in [DecisionMode::Analytic, DecisionMode::Calibrated] {
+        let chain_cfg = RunConfig { decision, ..coord_cfg(4) };
+        let tree_cfg = RunConfig {
+            decision,
+            tree: TreeChoice::Fixed(TreeShape::new(1, 3)),
+            ..coord_cfg(4)
+        };
+        let (chain_tokens, _) = run_coord_with(chain_cfg, 4);
+        let (tree_tokens, tree_report) = run_coord_with(tree_cfg, 4);
+        assert_eq!(
+            tree_tokens, chain_tokens,
+            "{decision:?}: 1-wide tree serving diverged from the chain"
+        );
+        assert_eq!(
+            tree_report.tree_rounds, 0,
+            "{decision:?}: 1-wide shape must never run tree rounds"
+        );
+    }
 }
 
 // ---- lockstep batcher reference accounting ------------------------------

@@ -6,7 +6,9 @@ use specedge::costmodel;
 use specedge::coordinator::queue::{QueueItem, RequestQueue};
 use specedge::hetero::{LatencyModel, Mapping, Platform, PuAssignment};
 use specedge::models::{ModelSpec, Scheme};
-use specedge::spec::sampling::{greedy_accept_len, stochastic_accept};
+use specedge::spec::sampling::{
+    greedy_accept_len, stochastic_accept, top1, top_k_into, tree_verify_node, NodeVerdict,
+};
 use specedge::tokenizer::Tokenizer;
 use specedge::util::json::Json;
 use specedge::util::rng::Rng;
@@ -184,6 +186,79 @@ fn prop_stochastic_accept_count_in_range() {
         let out = stochastic_accept(&drafted, &dp, &tp, rng);
         assert!(out.n_accepted <= gamma);
         assert!((out.correction as usize) < vocab);
+    });
+}
+
+#[test]
+fn prop_top_k_matches_full_sort() {
+    // Partial top-k must equal the full stable sort truncated to k:
+    // descending score, earlier index first on ties, out[0] == top1.
+    forall("top-k vs full sort", 300, |rng, _| {
+        let n = 1 + rng.below(64);
+        // Quantized scores force heavy ties; a few exact duplicates more.
+        let p: Vec<f32> = (0..n).map(|_| (rng.below(8) as f32) / 8.0).collect();
+        let mut reference: Vec<u32> = (0..n as u32).collect();
+        reference.sort_by(|&a, &b| {
+            p[b as usize].partial_cmp(&p[a as usize]).unwrap().then(a.cmp(&b))
+        });
+        let mut out = Vec::new();
+        for k in 0..=6usize {
+            top_k_into(&p, k, &mut out);
+            assert_eq!(out, &reference[..k.min(n)], "k={k} p={p:?}");
+            if k >= 1 {
+                assert_eq!(out[0], top1(&p));
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_tree_verify_node_width_one_is_the_chain_rule() {
+    // With one child, the per-node residual rule degenerates to the chain
+    // accept rule: accept iff u < min(1, t(x)/q(x)) with the same single
+    // uniform draw.
+    forall("tree node width-1 chain rule", 300, |rng, _| {
+        let vocab = 8;
+        let mut mk_dist = |rng: &mut Rng| {
+            let mut v: Vec<f32> = (0..vocab).map(|_| rng.f64() as f32 + 0.01).collect();
+            let z: f32 = v.iter().sum();
+            v.iter_mut().for_each(|x| *x /= z);
+            v
+        };
+        let q = mk_dist(rng);
+        let t = mk_dist(rng);
+        let x = rng.below(vocab);
+        let accept_p = (t[x].max(0.0) / q[x].max(1e-30)).min(1.0);
+        let mut probe = rng.clone();
+        let u = probe.f64();
+        let verdict = tree_verify_node(&[x as u32], &q, &t, rng);
+        if u < accept_p as f64 {
+            assert_eq!(verdict, NodeVerdict::Accepted(0), "u={u} p={accept_p}");
+        } else {
+            let NodeVerdict::Rejected(corr) = verdict else {
+                panic!("u={u} >= p={accept_p} but the node accepted");
+            };
+            // The correction must come from the positive residual t − q
+            // (unless it is empty everywhere and the rule falls back).
+            let resid_ok = (t[corr as usize] - q[corr as usize]) > 0.0
+                || t.iter().zip(&q).all(|(a, b)| a - b <= 0.0);
+            assert!(resid_ok, "correction {corr} has no residual mass");
+        }
+    });
+}
+
+#[test]
+fn prop_tree_tokens_collapse_to_chain_at_width_one() {
+    forall("tree tokens width-1 chain", 300, |rng, _| {
+        let alpha = rng.f64() * 0.999;
+        let depth = 1 + rng.below(8);
+        let chain = costmodel::expected_tokens_per_round(alpha, depth);
+        let tree = costmodel::expected_tree_tokens_per_round(alpha, 1, depth);
+        assert!((chain - tree).abs() < 1e-12, "a={alpha} d={depth}: {chain} vs {tree}");
+        // Widening strictly helps expected tokens (never the chain's cost).
+        let wider = costmodel::expected_tree_tokens_per_round(alpha, 3, depth);
+        assert!(wider + 1e-12 >= tree);
+        assert!(tree >= 1.0 && tree <= 1.0 + depth as f64 + 1e-12);
     });
 }
 
