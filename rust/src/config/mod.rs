@@ -148,6 +148,40 @@ impl TreeChoice {
     }
 }
 
+/// Paged KV-cache mode (the `kv_cache` knob). `off` (the default) keeps
+/// the historical full-recompute engine bit-for-bit: no manager is
+/// constructed, every forward is priced by the plain latency model and
+/// admission never consults page pools. `on` enables the
+/// [`crate::kvcache`] subsystem: per-session page reservation at
+/// admission (exhaustion sheds the request), cross-request prefix
+/// sharing, incremental forward pricing, and memory-aware DSE filtering.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KvCacheMode {
+    Off,
+    On,
+}
+
+impl KvCacheMode {
+    pub fn parse(s: &str) -> anyhow::Result<KvCacheMode> {
+        match s {
+            "off" => Ok(KvCacheMode::Off),
+            "on" => Ok(KvCacheMode::On),
+            _ => anyhow::bail!("kv_cache must be off|on, got {s:?}"),
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            KvCacheMode::Off => "off",
+            KvCacheMode::On => "on",
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        matches!(self, KvCacheMode::On)
+    }
+}
+
 /// Complete engine + serving configuration.
 #[derive(Debug, Clone)]
 pub struct RunConfig {
@@ -218,6 +252,9 @@ pub struct RunConfig {
     /// (decision layer searches tree shapes against the chain), or a
     /// pinned `KxD` shape. See [`TreeChoice`].
     pub tree: TreeChoice,
+    /// Paged KV-cache + prefix sharing: `off` (bit-identical historical
+    /// engine, the default) or `on`. See [`KvCacheMode`].
+    pub kv_cache: KvCacheMode,
     /// Variant key of the drafter model (must name a `drafter_*` variant
     /// present in the artifact manifest).
     pub drafter_variant: String,
@@ -252,6 +289,7 @@ impl Default for RunConfig {
             decision: DecisionMode::Analytic,
             repartition_every: 64,
             tree: TreeChoice::Off,
+            kv_cache: KvCacheMode::Off,
             drafter_variant: "drafter_fp".to_string(),
             target_variant: "target_w8a8".to_string(),
             seed: 0xC0FFEE,
@@ -333,6 +371,9 @@ impl RunConfig {
         }
         if let Some(v) = j.get("tree").and_then(Json::as_str) {
             self.tree = TreeChoice::parse(v)?;
+        }
+        if let Some(v) = j.get("kv_cache").and_then(Json::as_str) {
+            self.kv_cache = KvCacheMode::parse(v)?;
         }
         if let Some(v) = j.get("drafter_variant").and_then(Json::as_str) {
             self.drafter_variant = v.to_string();
@@ -518,6 +559,19 @@ mod tests {
         let mut c = RunConfig::default();
         c.apply_json(&Json::parse(r#"{"tree":"1x5"}"#).unwrap()).unwrap();
         assert_eq!(c.tree, TreeChoice::Fixed(TreeShape { branching: 1, depth: 5 }));
+    }
+
+    #[test]
+    fn kv_cache_knob_defaults_off_and_parses() {
+        assert_eq!(RunConfig::default().kv_cache, KvCacheMode::Off);
+        assert!(!RunConfig::default().kv_cache.enabled());
+        let mut c = RunConfig::default();
+        c.apply_json(&Json::parse(r#"{"kv_cache":"on"}"#).unwrap()).unwrap();
+        assert_eq!(c.kv_cache, KvCacheMode::On);
+        assert!(c.kv_cache.enabled());
+        assert_eq!(c.kv_cache.as_str(), "on");
+        let mut c = RunConfig::default();
+        assert!(c.apply_json(&Json::parse(r#"{"kv_cache":"paged"}"#).unwrap()).is_err());
     }
 
     #[test]

@@ -249,8 +249,25 @@ pub fn tick(
             // occupied for its entire duration; each of the m sharing
             // sessions is charged an even share of it (padding lanes are
             // overhead the sharers absorb; no simulated time vanishes).
-            let duration =
-                lat.batched_forward_latency(&spec, variant.scheme, pu, bucket, exec_b);
+            //
+            // Lanes with resident KV pay the incremental per-lane cost
+            // over their own cached extent (padding lanes replicate lane
+            // 0's, matching the replicated tokens). All-cold chunks take
+            // the historical batched pricing path so `kv_cache: off`
+            // stays bit-identical by construction.
+            let any_cached = chunk.iter().any(|(_, req)| req.kv_cached > 0);
+            let duration = if any_cached {
+                let mut d = lat.dispatch_overhead(pu);
+                for lane in 0..exec_b {
+                    let cached = chunk
+                        .get(lane)
+                        .map_or(chunk[0].1.kv_cached, |(_, req)| req.kv_cached);
+                    d += lat.incremental_lane_cost(&spec, variant.scheme, pu, bucket, cached);
+                }
+                d
+            } else {
+                lat.batched_forward_latency(&spec, variant.scheme, pu, bucket, exec_b)
+            };
             if collect_obs {
                 stats.observations.push(DispatchObs {
                     variant,

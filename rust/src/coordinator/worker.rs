@@ -53,8 +53,10 @@
 use crate::api::{FinishReason, GenOptions, SamplingMode};
 use crate::config::{DecisionMode, KernelPath, RunConfig};
 use crate::decision::SpecHints;
-use crate::hetero::{LatencyModel, Platform, PuTimelines, TimelineSnapshot};
-use crate::metrics::{Metrics, RequestRecord, RoundRecord};
+use crate::dse::KvLoad;
+use crate::hetero::{LatencyModel, Platform, PuId, PuTimelines, TimelineSnapshot};
+use crate::kvcache::{KvManager, KvStats, SessionKv};
+use crate::metrics::{KvRecord, Metrics, RequestRecord, RoundRecord};
 use crate::models::ModelSpec;
 use crate::runtime::Engine;
 use crate::spec::{AcceptRule, DecodeSession, DecoderSetup, StepOutcome};
@@ -101,6 +103,10 @@ struct LiveSession {
     /// Simulated timeline position at admission (per-PU timeline mode):
     /// per-request timeline latency = session finish − this.
     tl_admit_s: f64,
+    /// Paged KV-cache reservation (`kv_cache: on` tick scheduler only):
+    /// the session's shared-prefix path + private pages, released back to
+    /// the worker's manager on retire and immediately on reap.
+    kv: Option<SessionKv>,
 }
 
 impl LiveSession {
@@ -188,6 +194,21 @@ pub fn run_worker(
         let _ = engine.warmup(&[drafter, target], cfg.kernel_path, &buckets);
     }
 
+    // Paged KV cache (tick scheduler only): one manager per worker with
+    // page pools sized from the platform memory model. `kv_cache: off`
+    // (the default) never constructs one — admission, pricing and the
+    // decision layer all stay bit-identical to the historical engine.
+    let mut kv_mgr = if cfg.kv_cache.enabled() {
+        Some(KvManager::new(
+            &platform.memory,
+            (&d_spec, drafter.scheme),
+            (&t_spec, target.scheme),
+        ))
+    } else {
+        None
+    };
+    let mut kv_reported = KvStats::default();
+
     let lat = LatencyModel::new(platform);
 
     // With fusion off, the batched-baseline configuration keeps the
@@ -249,6 +270,16 @@ pub fn run_worker(
     let mut live: Vec<LiveSession> = Vec::new();
     let mut queue_open = true;
 
+    // Declare the deployment's KV load point so re-partition searches
+    // treat page capacity as a feasibility filter: the full in-flight
+    // set, each session budgeted at the largest compiled context.
+    if kv_mgr.is_some() {
+        policy.set_kv_load(KvLoad {
+            inflight: max_inflight,
+            budget_tokens: buckets.last().copied().unwrap_or(cfg.max_new_tokens).max(1),
+        });
+    }
+
     // Per-PU timelines for the tick scheduler: overlapped when the knob is
     // on (dispatches routed to different PUs of the mapping proceed
     // concurrently), single-clock serialized otherwise — identical
@@ -279,7 +310,14 @@ pub fn run_worker(
             };
             match abort {
                 Some(reason) => {
-                    let ls = live.remove(i);
+                    let mut ls = live.remove(i);
+                    // Reaped pages come back *now* — the freed slot is
+                    // only useful if the next admission can also reserve
+                    // KV — and the reap walk drops the session's
+                    // now-unreferenced prefix nodes too.
+                    if let (Some(mgr), Some(kv)) = (kv_mgr.as_mut(), ls.kv.take()) {
+                        mgr.release(kv, true);
+                    }
                     let tl_s = if cfg.fuse {
                         Some((ls.session.ready_s() - ls.tl_admit_s).max(0.0))
                     } else {
@@ -316,8 +354,40 @@ pub fn run_worker(
                 respond_shed(&metrics, item, reason);
                 continue;
             }
+            // Memory-aware admission: reserve the session's whole KV
+            // budget (prompt + generation window) before it occupies a
+            // scheduler slot. The prompt is snapshotted first — admit()
+            // consumes the queue item.
+            let kv_prompt = if kv_mgr.is_some() {
+                item.request.prompt.clone()
+            } else {
+                Vec::new()
+            };
+            let kv_max_new = item
+                .request
+                .options
+                .max_new
+                .map(|m| m.clamp(1, cfg.max_new_limit))
+                .unwrap_or(cfg.max_new_tokens);
             let mut ls = admit(&cfg, &engine, &lat, &policy, &metrics, &tokenizer,
                                &d_spec, &t_spec, item, drafter, target, serving_kernel);
+            if let Some(mgr) = kv_mgr.as_mut() {
+                let budget = kv_prompt.len() + kv_max_new;
+                match mgr.admit(&kv_prompt, ls.session.mapping(), budget) {
+                    Some(kv) => {
+                        // Prompt tokens the prefix cache already holds:
+                        // the session's forwards price them as resident.
+                        ls.session.set_kv_prefix(kv.shared_tokens());
+                        ls.kv = Some(kv);
+                    }
+                    None => {
+                        // Pools exhausted even after eviction: typed
+                        // overload rejection instead of thrashing.
+                        shed_overloaded(&metrics, ls);
+                        continue;
+                    }
+                }
+            }
             // A session admitted mid-stream starts at the worker's
             // current simulated "now" (the earliest frontier among PUs
             // the workload actually uses): its first dispatch cannot
@@ -415,13 +485,22 @@ pub fn run_worker(
                 TickEvent::Pending => {}
                 TickEvent::Failed => {
                     // Dropping the sender(s) signals the error to the caller.
-                    live.remove(idx);
+                    let mut ls = live.remove(idx);
+                    if let (Some(mgr), Some(kv)) = (kv_mgr.as_mut(), ls.kv.take()) {
+                        mgr.release(kv, false);
+                    }
                 }
                 TickEvent::Round(out) => {
                     let done =
                         finish_round(&metrics, &mut live[idx], out, inflight_now);
                     if done {
-                        let ls = live.remove(idx);
+                        let mut ls = live.remove(idx);
+                        // Retire release keeps the session's prefix nodes
+                        // cached (zero-ref retention) for the next
+                        // request sharing the prompt.
+                        if let (Some(mgr), Some(kv)) = (kv_mgr.as_mut(), ls.kv.take()) {
+                            mgr.release(kv, false);
+                        }
                         let tl_s = if cfg.fuse {
                             Some((ls.session.ready_s() - ls.tl_admit_s).max(0.0))
                         } else {
@@ -432,7 +511,63 @@ pub fn run_worker(
                 }
             }
         }
+
+        // ---- sync: fold this worker's KV accounting into the report ----
+        if let Some(mgr) = kv_mgr.as_ref() {
+            sync_kv(&metrics, wid, mgr, &mut kv_reported);
+        }
     }
+    if let Some(mgr) = kv_mgr.as_ref() {
+        sync_kv(&metrics, wid, mgr, &mut kv_reported);
+    }
+}
+
+/// Push one worker's [`KvManager`] counter growth since the last sync —
+/// plus its current per-PU page gauges — into the shared metrics sink.
+fn sync_kv(metrics: &Metrics, wid: usize, mgr: &KvManager, reported: &mut KvStats) {
+    let s = mgr.stats();
+    let occ = |pu: PuId| {
+        let (used, peak, cap) = mgr.occupancy(pu);
+        [used as u64, peak as u64, cap as u64]
+    };
+    let rec = KvRecord {
+        lookups: s.lookups - reported.lookups,
+        prefix_probe_tokens: s.prefix_probe_tokens - reported.prefix_probe_tokens,
+        prefix_hit_tokens: s.prefix_hit_tokens - reported.prefix_hit_tokens,
+        prefill_tokens_saved: s.prefill_tokens_saved - reported.prefill_tokens_saved,
+        memory_shed: s.memory_shed - reported.memory_shed,
+        reap_reclaimed_pages: s.reap_reclaimed_pages - reported.reap_reclaimed_pages,
+        occupancy: [occ(PuId::Cpu), occ(PuId::Gpu)],
+    };
+    *reported = s;
+    metrics.record_kv(wid, rec);
+}
+
+/// Answer a session the paged KV cache could not reserve pages for even
+/// after eviction: typed overload rejection — no decode ever ran, so only
+/// the lifecycle counters move (mirrors [`respond_shed`] for items that
+/// made it past routing).
+fn shed_overloaded(metrics: &Metrics, ls: LiveSession) {
+    metrics.record_rejected();
+    metrics.record_finish(FinishReason::Rejected);
+    metrics.record_slo(ls.options.slo);
+    if ls.options.deadline_s.is_some() {
+        // A rejected deadline-carrying request can never meet it.
+        metrics.record_deadline(true);
+    }
+    if let Some(tx) = &ls.token_tx {
+        let _ = tx.send(TokenFrame {
+            id: ls.id,
+            round: 1,
+            tokens: Vec::new(),
+            drafted: 0,
+            accepted: 0,
+            done: true,
+        });
+    }
+    let _ = ls
+        .respond
+        .send(EngineResponse::shed(ls.id, ls.queue_s, FinishReason::Rejected));
 }
 
 /// Whether a request's options change the decode itself (vs only its
@@ -630,6 +765,7 @@ fn admit(
         stream_holdback,
         streamed: 0,
         tl_admit_s: 0.0,
+        kv: None,
     }
 }
 

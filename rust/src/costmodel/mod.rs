@@ -66,6 +66,22 @@
 //! layer ([`crate::dse::tree_speedup`]) scores that trade per
 //! (α, mapping, shape) and picks chain vs tree and the shape; the `tree`
 //! config knob (`off | auto | KxD`) selects the search mode.
+//!
+//! **Incremental pricing with a paged KV cache** (`kv_cache: on`). The
+//! latencies above charge every forward for the *whole* bucketed sequence
+//! — correct for a cache-less engine that re-runs prefill each dispatch.
+//! With the paged KV cache ([`crate::kvcache`]) a session's resident
+//! prefix is not recomputed: a dispatch with `cached` resident tokens is
+//! priced as compute over only the `seq_len − cached` new tokens plus a
+//! DRAM re-read of the resident KV
+//! ([`crate::decision::CostModel::kv_read_latency`], sized by
+//! `kv_bytes_per_token × cached / dram_gbps`) plus the usual single
+//! dispatch boundary —
+//! [`crate::decision::CostModel::incremental_forward_latency`] and the
+//! per-lane [`crate::hetero::LatencyModel::incremental_lane_cost`] under
+//! the fuser. Cold dispatches (`cached = 0`) and `kv_cache: off` route
+//! through the historical full-sequence formulas unchanged, which is what
+//! keeps the off mode bit-identical.
 
 /// Maximum draft length the search considers (the paper sweeps 0..=5; we
 /// allow a little headroom for the extension experiments).

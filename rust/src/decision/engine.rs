@@ -170,6 +170,12 @@ pub struct Policy {
     /// session must not be able to flip the fleet-wide mapping by landing
     /// on the cadence boundary.
     alpha_mix: Mutex<f64>,
+    /// Memory-aware load point for the re-partition search: set by workers
+    /// when the paged KV cache is on, so re-partitioning rejects mappings
+    /// whose in-flight KV working set does not fit the per-PU page pools
+    /// ([`dse::kv_feasible`]). `None` (cache off) keeps the historical
+    /// search bit-identical.
+    kv_load: Mutex<Option<dse::KvLoad>>,
 }
 
 impl Policy {
@@ -214,6 +220,7 @@ impl Policy {
             repartitions: AtomicU64::new(0),
             seq_mix: Mutex::new(0.0),
             alpha_mix: Mutex::new(f64::NAN),
+            kv_load: Mutex::new(None),
         })
     }
 
@@ -248,6 +255,14 @@ impl Policy {
     /// Completed online re-partition switches.
     pub fn repartition_count(&self) -> u64 {
         self.repartitions.load(Ordering::Relaxed)
+    }
+
+    /// Declare the KV working-set load the deployment must sustain (the
+    /// worker calls this once when the paged cache is on). Subsequent
+    /// re-partition searches treat page capacity as a hard feasibility
+    /// filter at this load point.
+    pub fn set_kv_load(&self, kv: dse::KvLoad) {
+        *self.kv_load.lock().unwrap() = Some(kv);
     }
 
     /// Calibration state (zeroes under the analytic model).
@@ -589,13 +604,15 @@ impl Policy {
             TreeChoice::Auto => &dse::TREE_SHAPES,
             _ => &[],
         };
-        let decision = dse::explore_variant_with_shapes(
+        let kv = *self.kv_load.lock().unwrap();
+        let decision = dse::explore_variant_with_shapes_kv(
             self.cost_model(),
             &pair,
             self.design_variant,
             alpha,
             seq,
             shapes,
+            kv.as_ref(),
         );
         let new_mapping = decision.best.mapping;
         let mut cur = self.mapping.lock().unwrap();

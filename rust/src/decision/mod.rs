@@ -65,6 +65,7 @@ pub use crate::costmodel::{
     tree_level_acceptance, TreeShape,
 };
 pub use crate::dse::{
-    explore_all, explore_variant, explore_variant_with_shapes, tree_speedup, Candidate,
+    explore_all, explore_variant, explore_variant_with_shapes,
+    explore_variant_with_shapes_kv, kv_feasible, tree_speedup, Candidate, KvLoad,
     PairConfig, VariantDecision, TREE_SHAPES,
 };

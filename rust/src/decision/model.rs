@@ -94,6 +94,44 @@ pub trait CostModel: Send + Sync {
         };
         (single - oh) * batch.max(1) as f64 + oh
     }
+
+    /// Memory-traffic term of a KV-cache hit: seconds to re-read `cached`
+    /// resident tokens of `spec`'s K/V at the platform's DRAM bandwidth.
+    /// The default derives it purely from the platform description —
+    /// predictors refit compute latencies online, but KV bytes are
+    /// geometry, not something the dispatch feed observes — so analytic
+    /// and calibrated models price residency identically.
+    fn kv_read_latency(&self, spec: &ModelSpec, scheme: Scheme, cached: usize) -> f64 {
+        let mem = &self.platform().memory;
+        let bytes = crate::kvcache::kv_bytes_per_token(spec, scheme, mem) * cached as f64;
+        bytes / (mem.dram_gbps * 1e9)
+    }
+
+    /// Predicted seconds of one *incremental* forward at `seq_len` with
+    /// `cached` tokens of resident KV: compute scales to the new fraction
+    /// of positions, the resident fraction pays the DRAM re-read term, one
+    /// dispatch boundary. The cache-hit counterpart of
+    /// [`forward_latency`](CostModel::forward_latency), used by the fuser
+    /// and session pricing whenever `kv_cache: on` sessions carry resident
+    /// prefixes (cache-off and cache-cold dispatches never route through
+    /// here, keeping `kv_cache: off` bit-identical by construction).
+    fn incremental_forward_latency(
+        &self,
+        spec: &ModelSpec,
+        scheme: Scheme,
+        pu: PuAssignment,
+        seq_len: usize,
+        cached: usize,
+    ) -> f64 {
+        let single = self.forward_latency(spec, scheme, pu, seq_len);
+        let oh = match pu {
+            PuAssignment::Gpu => self.platform().gpu.dispatch_overhead_s,
+            PuAssignment::Cpu { .. } => self.platform().cpu.dispatch_overhead_s,
+        };
+        let cached = cached.min(seq_len);
+        let new_frac = (seq_len - cached) as f64 / seq_len.max(1) as f64;
+        (single - oh) * new_frac + self.kv_read_latency(spec, scheme, cached) + oh
+    }
 }
 
 /// The analytic model is the canonical implementation: the trait methods
@@ -127,6 +165,21 @@ impl CostModel for LatencyModel {
         batch: usize,
     ) -> f64 {
         LatencyModel::batched_forward_latency(self, spec, scheme, pu, seq_len, batch)
+    }
+
+    fn kv_read_latency(&self, spec: &ModelSpec, scheme: Scheme, cached: usize) -> f64 {
+        LatencyModel::kv_read_latency(self, spec, scheme, cached)
+    }
+
+    fn incremental_forward_latency(
+        &self,
+        spec: &ModelSpec,
+        scheme: Scheme,
+        pu: PuAssignment,
+        seq_len: usize,
+        cached: usize,
+    ) -> f64 {
+        LatencyModel::incremental_forward_latency(self, spec, scheme, pu, seq_len, cached)
     }
 }
 
@@ -203,6 +256,15 @@ mod tests {
             for lanes in [1usize, 4, 9] {
                 let a = lat.batched_forward_latency(&t, Scheme::W8a8, m.target, seq, lanes);
                 let b = as_trait.batched_forward_latency(&t, Scheme::W8a8, m.target, seq, lanes);
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+            for cached in [0usize, 16, seq] {
+                let a = lat.kv_read_latency(&t, Scheme::W8a8, cached);
+                let b = as_trait.kv_read_latency(&t, Scheme::W8a8, cached);
+                assert_eq!(a.to_bits(), b.to_bits());
+                let a = lat.incremental_forward_latency(&t, Scheme::W8a8, m.target, seq, cached);
+                let b =
+                    as_trait.incremental_forward_latency(&t, Scheme::W8a8, m.target, seq, cached);
                 assert_eq!(a.to_bits(), b.to_bits());
             }
         }

@@ -15,10 +15,22 @@
 //! [`CalibratedModel`](crate::decision::CalibratedModel) — which is how
 //! the decision engine re-partitions a live deployment
 //! ([`crate::decision::Policy`]).
+//!
+//! **Memory feasibility under `kv_cache: on`.** When the caller supplies a
+//! [`KvLoad`] (the live in-flight count × per-session token budget), every
+//! candidate mapping must additionally hold the fleet's KV working set:
+//! for each PU, the pages the drafter and target roles mapped there would
+//! reserve at admission ([`kv_feasible`]) must fit that PU's page pool
+//! ([`crate::hetero::platform::MemoryModel::kv_pages`]). A mapping that
+//! fails is [`Infeasibility::KvMemory`] — hard-infeasible, because
+//! speculation gains cannot rescue a deployment whose sessions the
+//! admission controller would shed. Without a `KvLoad` (historical
+//! callers, `kv_cache: off`) the search is bit-identical to before.
 
 use crate::costmodel::{self, TreeShape};
 use crate::decision::CostModel;
-use crate::hetero::{Mapping, PuAssignment};
+use crate::hetero::{Mapping, Platform, PuAssignment, PuId, NUM_PUS};
+use crate::kvcache;
 use crate::models::{ModelSpec, Scheme};
 use crate::util::json::Json;
 
@@ -46,6 +58,39 @@ pub enum Infeasibility {
     QuantOnGpu,
     /// Paper-scale weights exceed the device memory budget (§IV-A fn. 2).
     Memory,
+    /// The KV working set at the live in-flight count does not fit the
+    /// mapping's per-PU page pools ([`kv_feasible`]) — only produced when
+    /// the search is given a [`KvLoad`] (`kv_cache: on`).
+    KvMemory,
+}
+
+/// The live KV working-set the memory-aware search sizes mappings against:
+/// every in-flight session reserves its whole token budget (prompt +
+/// generation window) on the PUs its role mapping names at admission, so a
+/// mapping is only usable when `inflight × pages(budget)` fits each pool.
+/// Prefix sharing can only shrink the real reservation below this, so the
+/// filter is conservative in the safe direction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KvLoad {
+    /// Concurrent sessions the deployment must sustain.
+    pub inflight: usize,
+    /// Per-session token budget (prompt + max new tokens).
+    pub budget_tokens: usize,
+}
+
+/// Whether `mapping`'s per-PU KV page pools can hold `kv.inflight`
+/// sessions of `kv.budget_tokens` tokens each: drafter-role pages land on
+/// the drafter's PU, target-role pages on the target's (summed when the
+/// mapping is homogeneous), compared against the platform's
+/// `kv_pages_cpu` / `kv_pages_gpu` capacities.
+pub fn kv_feasible(platform: &Platform, pair: &PairConfig, mapping: Mapping, kv: &KvLoad) -> bool {
+    let mem = &platform.memory;
+    let mut need = [0usize; NUM_PUS];
+    need[mapping.drafter.id().index()] +=
+        kv.inflight * kvcache::pages_required(&pair.drafter, pair.drafter_scheme, mem, kv.budget_tokens);
+    need[mapping.target.id().index()] +=
+        kv.inflight * kvcache::pages_required(&pair.target, pair.target_scheme, mem, kv.budget_tokens);
+    PuId::all().iter().all(|&pu| need[pu.index()] <= mem.kv_pages(pu))
 }
 
 /// One evaluated point of the design space.
@@ -136,6 +181,25 @@ pub fn explore_variant_with_shapes<M: CostModel + ?Sized>(
     seq_len: usize,
     shapes: &[TreeShape],
 ) -> VariantDecision {
+    explore_variant_with_shapes_kv(model, pair, variant, alpha, seq_len, shapes, None)
+}
+
+/// [`explore_variant_with_shapes`] with the memory-aware feasibility
+/// filter: when a [`KvLoad`] is given, every mapping whose in-flight KV
+/// working set exceeds its per-PU page pools is rejected
+/// ([`Infeasibility::KvMemory`]) *before* γ or tree scoring — a hard gate
+/// like the weight-memory and quantization exclusions (tree shapes cannot
+/// rescue a mapping that doesn't fit). `kv: None` takes the identical
+/// code path as the historical search.
+pub fn explore_variant_with_shapes_kv<M: CostModel + ?Sized>(
+    model: &M,
+    pair: &PairConfig,
+    variant: usize,
+    alpha: f64,
+    seq_len: usize,
+    shapes: &[TreeShape],
+    kv: Option<&KvLoad>,
+) -> VariantDecision {
     let assignments = [
         PuAssignment::Cpu { cores: variant },
         PuAssignment::Gpu,
@@ -145,9 +209,33 @@ pub fn explore_variant_with_shapes<M: CostModel + ?Sized>(
         for t_pu in assignments {
             let mapping = Mapping { drafter: d_pu, target: t_pu };
             let mut cand = score_mapping(model, pair, variant, mapping, alpha, seq_len);
-            let hard_infeasible = matches!(
+            // The KV filter outranks the soft c-vs-α verdict (trees skip
+            // that filter, but nothing rescues a working set that doesn't
+            // fit); the weight-memory / quantization reasons, checked
+            // first, are kept as the reported cause.
+            if !matches!(
                 cand.infeasible,
                 Some(Infeasibility::Memory) | Some(Infeasibility::QuantOnGpu)
+            ) {
+                if let Some(kv) = kv {
+                    if !kv_feasible(model.platform(), pair, mapping, kv) {
+                        cand = Candidate {
+                            variant,
+                            mapping,
+                            c: cand.c,
+                            gamma: 0,
+                            speedup: 1.0,
+                            tree: None,
+                            infeasible: Some(Infeasibility::KvMemory),
+                        };
+                    }
+                }
+            }
+            let hard_infeasible = matches!(
+                cand.infeasible,
+                Some(Infeasibility::Memory)
+                    | Some(Infeasibility::QuantOnGpu)
+                    | Some(Infeasibility::KvMemory)
             );
             if !hard_infeasible {
                 for &shape in shapes {
@@ -488,6 +576,57 @@ mod tests {
                 assert_eq!(x.speedup.to_bits(), y.speedup.to_bits());
             }
         }
+    }
+
+    #[test]
+    fn kv_load_rejects_mappings_that_do_not_fit() {
+        let l = lat();
+        let p = pair();
+        // Huge pools: the filter is inert and the decision matches the
+        // filterless search bit-for-bit.
+        let roomy = KvLoad { inflight: 4, budget_tokens: 128 };
+        let a = explore_variant_with_shapes_kv(&l, &p, 1, 0.9, 63, &[], Some(&roomy));
+        let b = explore_variant(&l, &p, 1, 0.9, 63);
+        assert_eq!(a.best.gamma, b.best.gamma);
+        assert_eq!(a.best.speedup.to_bits(), b.best.speedup.to_bits());
+        assert!(a.all.iter().all(|c| c.infeasible != Some(Infeasibility::KvMemory)));
+
+        // Starve the CPU pool: every mapping needs target pages on the
+        // CPU (quant target can't go to the GPU), so all four candidates
+        // become KvMemory-infeasible and the best falls back to baseline.
+        let mut plat = Platform::imx95();
+        plat.memory.kv_pages_cpu = 2;
+        let tight = LatencyModel::new(plat);
+        let d = explore_variant_with_shapes_kv(
+            &tight, &p, 1, 0.9, 63, &TREE_SHAPES, Some(&roomy));
+        let rejected = d.all.iter()
+            .filter(|c| c.infeasible == Some(Infeasibility::KvMemory))
+            .count();
+        assert!(rejected >= 1, "{:?}", d.all);
+        assert_eq!(d.best.gamma, 0);
+        // The GPU-target rows keep their original (earlier-checked) cause.
+        for c in &d.all {
+            if c.mapping.target.is_gpu() {
+                assert_eq!(c.infeasible, Some(Infeasibility::QuantOnGpu));
+            }
+        }
+    }
+
+    #[test]
+    fn kv_feasibility_sums_roles_on_shared_pus() {
+        let p = pair();
+        let mut plat = Platform::imx95();
+        // Exactly the heterogeneous demand at inflight=2, budget=64:
+        // target w8a8 needs ceil(64/16)=4 pages/session on the CPU,
+        // drafter fp needs ceil(64/21)=4 pages/session on the GPU.
+        plat.memory.kv_pages_cpu = 8;
+        plat.memory.kv_pages_gpu = 8;
+        let kv = KvLoad { inflight: 2, budget_tokens: 64 };
+        assert!(kv_feasible(&plat, &p, Mapping::heterogeneous(1), &kv));
+        // Homogeneous folds both roles onto the CPU pool: 8 + 8 > 8.
+        assert!(!kv_feasible(&plat, &p, Mapping::homogeneous(1), &kv));
+        plat.memory.kv_pages_cpu = 16;
+        assert!(kv_feasible(&plat, &p, Mapping::homogeneous(1), &kv));
     }
 
     #[test]

@@ -1,0 +1,260 @@
+//! Paged KV cache with cross-request prefix sharing (`experiment kvcache`).
+//!
+//! Two sweeps, one CSV (`kvcache.csv`, tagged by the `section` column):
+//!
+//! **serve** — a fleet of requests sharing one long system-prompt prefix
+//! (the canonical edge-assistant shape) decodes twice: `kv_cache: off`
+//! (every forward priced cold over the whole bucketed sequence, exactly
+//! the historical engine) and `kv_cache: on` (a [`KvManager`] admits each
+//! request, the prefix trie carries the shared prompt chunks, and every
+//! dispatch after the first prices only its *new* tokens plus the DRAM
+//! re-read of the resident KV). The driver fails loudly unless the token
+//! streams are bit-identical, the cache-on run saves prefill tokens where
+//! the cache-off run saves none, and cache-on ms/token is *strictly*
+//! lower.
+//!
+//! **dse** — the memory-aware feasibility filter: the same mapping search
+//! that produced the paper's Tables II/III re-runs under a [`KvLoad`]
+//! (4 concurrent sessions × 128-token budgets) while the platform's page
+//! pools sweep from starved to roomy, under the analytic *and* the
+//! calibrated cost model. Starved pools must reject every mapping
+//! ([`Infeasibility::KvMemory`] — speculation cannot rescue a working set
+//! that does not fit); roomy pools must reject none and reproduce the
+//! unfiltered winner.
+
+use crate::config::{ExecMode, KernelPath};
+use crate::decision::{CalibratedModel, CostModel};
+use crate::dse::{self, Infeasibility, KvLoad, PairConfig};
+use crate::hetero::{LatencyModel, Mapping};
+use crate::kvcache::KvManager;
+use crate::models::{Scheme, VariantKey};
+use crate::spec::{AcceptRule, DecodeSession, DecoderSetup};
+
+use super::Ctx;
+
+/// Design variant for both sweeps (CPU cores for the target).
+const VARIANT: usize = 1;
+/// Concurrent sessions the DSE feasibility filter must sustain.
+const DSE_INFLIGHT: usize = 4;
+/// Per-session token budget (prompt + generation window) for the filter.
+const DSE_BUDGET: usize = 128;
+
+pub fn run(ctx: &Ctx) -> anyhow::Result<()> {
+    let d_key = VariantKey::parse("drafter_fp").unwrap();
+    let t_key = VariantKey::parse("target_w8a8").unwrap();
+    let d_spec = ctx.engine.manifest.model_for(d_key)?.clone();
+    let t_spec = ctx.engine.manifest.model_for(t_key)?.clone();
+    let mapping = Mapping::heterogeneous(VARIANT);
+    let mem = &ctx.lat.platform.memory;
+
+    let mut csv = String::from(
+        "section,model,kv_pages_cpu,kv_pages_gpu,kv_on,requests,tokens,\
+         ms_per_tok,prefill_tokens_saved,prefix_hit_rate,kv_rejected\n",
+    );
+
+    // ---- serve: shared-system-prompt fleet, cache off vs on -----------
+    let n = ctx.limit.unwrap_or(6).clamp(2, 8);
+    let samples: Vec<_> = ctx
+        .engine
+        .manifest
+        .eval_samples
+        .iter()
+        .filter(|s| s.task == "translate")
+        .take(n)
+        .cloned()
+        .collect();
+    anyhow::ensure!(samples.len() >= 2, "need >= 2 eval samples to share a prefix");
+
+    // One system prompt every request carries, long enough to span
+    // multiple trie chunks (chunk size is pair-derived; see KvLayout).
+    let mgr_probe = KvManager::new(mem, (&d_spec, d_key.scheme), (&t_spec, t_key.scheme));
+    let chunk = mgr_probe.layout().chunk_tokens;
+    let mut sys = ctx.tokenizer.encode(&samples[0].prompt.repeat(8), true)?;
+    sys.truncate((2 * chunk + chunk / 2).max(2 * chunk));
+    anyhow::ensure!(sys.len() >= 2 * chunk, "system prompt spans < 2 chunks");
+
+    let prompts: Vec<Vec<u32>> = samples
+        .iter()
+        .map(|s| -> anyhow::Result<Vec<u32>> {
+            let mut p = sys.clone();
+            p.extend(ctx.tokenizer.encode(&s.prompt, false)?);
+            p.truncate(ctx.engine.manifest.largest_bucket() - 24);
+            Ok(p)
+        })
+        .collect::<anyhow::Result<_>>()?;
+
+    let setup = DecoderSetup {
+        drafter: d_key,
+        target: t_key,
+        kernel: KernelPath::Pallas,
+        mapping,
+        gamma: 4,
+        rule: AcceptRule::Greedy,
+        exec: ExecMode::Modular,
+        max_new: 16,
+    };
+
+    // Cache off: the historical engine, every request pays full prefill.
+    let mut off_tokens: Vec<Vec<u32>> = Vec::new();
+    let (mut off_sim, mut off_count) = (0.0f64, 0usize);
+    for p in &prompts {
+        let mut s = DecodeSession::new(&ctx.engine, ctx.lat.clone(), setup.clone(), true, p);
+        while !s.is_done() {
+            s.step(&ctx.engine)?;
+        }
+        let out = s.into_outcome();
+        off_sim += out.sim_s;
+        off_count += out.tokens.len();
+        off_tokens.push(out.tokens);
+    }
+
+    // Cache on: one manager for the fleet; sessions run sequentially but
+    // retire-released prefix chunks persist, so every request after the
+    // first inherits the system prompt's prefill.
+    let mut mgr = KvManager::new(mem, (&d_spec, d_key.scheme), (&t_spec, t_key.scheme));
+    let mut on_tokens: Vec<Vec<u32>> = Vec::new();
+    let (mut on_sim, mut on_count) = (0.0f64, 0usize);
+    for p in &prompts {
+        let kv = mgr
+            .admit(p, mapping, p.len() + setup.max_new)
+            .ok_or_else(|| anyhow::anyhow!("experiment pools sized to never shed"))?;
+        let mut s = DecodeSession::new(&ctx.engine, ctx.lat.clone(), setup.clone(), true, p);
+        s.set_kv_prefix(kv.shared_tokens());
+        while !s.is_done() {
+            s.step(&ctx.engine)?;
+        }
+        let out = s.into_outcome();
+        on_sim += out.sim_s;
+        on_count += out.tokens.len();
+        on_tokens.push(out.tokens);
+        mgr.release(kv, false);
+    }
+
+    let stats = mgr.stats();
+    let hit_rate = stats.prefix_hit_tokens as f64 / stats.prefix_probe_tokens.max(1) as f64;
+    let off_ms = off_sim * 1e3 / off_count.max(1) as f64;
+    let on_ms = on_sim * 1e3 / on_count.max(1) as f64;
+    println!(
+        "KV cache serve sweep ({} requests, {}-token shared prefix, chunk {}):",
+        prompts.len(),
+        sys.len(),
+        chunk
+    );
+    println!(
+        "  off: {off_count} tokens  {off_ms:.3} ms/tok   (prefill saved: 0)\n  \
+         on:  {on_count} tokens  {on_ms:.3} ms/tok   (prefill saved: {}, hit rate {:.3})",
+        stats.prefill_tokens_saved, hit_rate
+    );
+    csv.push_str(&format!(
+        "serve,-,{},{},0,{},{off_count},{off_ms:.4},0,0.000,0\n",
+        mem.kv_pages_cpu,
+        mem.kv_pages_gpu,
+        prompts.len()
+    ));
+    csv.push_str(&format!(
+        "serve,-,{},{},1,{},{on_count},{on_ms:.4},{},{hit_rate:.3},0\n",
+        mem.kv_pages_cpu,
+        mem.kv_pages_gpu,
+        prompts.len(),
+        stats.prefill_tokens_saved
+    ));
+
+    anyhow::ensure!(
+        off_tokens == on_tokens,
+        "kv_cache on changed the token streams — pricing must never touch decoding"
+    );
+    anyhow::ensure!(
+        stats.prefill_tokens_saved > 0,
+        "shared system prompt produced no prefill savings"
+    );
+    anyhow::ensure!(
+        on_ms < off_ms,
+        "cache-on ms/token ({on_ms:.4}) not strictly below cache-off ({off_ms:.4})"
+    );
+    anyhow::ensure!(stats.memory_shed == 0, "roomy pools shed an admission");
+
+    // ---- dse: page capacity as a feasibility filter --------------------
+    let pair = PairConfig {
+        target: t_spec.clone(),
+        target_scheme: Scheme::W8a8,
+        drafter: d_spec.clone(),
+        drafter_scheme: Scheme::Fp,
+    };
+    let kv = KvLoad { inflight: DSE_INFLIGHT, budget_tokens: DSE_BUDGET };
+    let alpha = 0.8;
+    // Pages each PU would need in the worst single-pool case: both roles'
+    // working sets landing on one pool (the homogeneous mapping).
+    let need_both = DSE_INFLIGHT
+        * (crate::kvcache::pages_required(&d_spec, Scheme::Fp, mem, DSE_BUDGET)
+            + crate::kvcache::pages_required(&t_spec, Scheme::W8a8, mem, DSE_BUDGET));
+    println!(
+        "KV-aware DSE sweep (inflight {DSE_INFLIGHT} x {DSE_BUDGET} tokens => \
+         worst-case {need_both} pages on one pool):"
+    );
+    for pages in [2usize, need_both, 4 * need_both] {
+        let mut p = ctx.lat.platform.clone();
+        p.memory.kv_pages_cpu = pages;
+        p.memory.kv_pages_gpu = pages;
+        let lat = LatencyModel::new(p);
+        let calibrated = CalibratedModel::new(lat.clone());
+        let models: [(&str, &dyn CostModel); 2] =
+            [("analytic", &lat), ("calibrated", &calibrated)];
+        for (name, model) in models {
+            let dec = dse::explore_variant_with_shapes_kv(
+                model, &pair, VARIANT, alpha, 63, &[], Some(&kv),
+            );
+            let rejected = dec
+                .all
+                .iter()
+                .filter(|c| c.infeasible == Some(Infeasibility::KvMemory))
+                .count();
+            let best_ms = if dec.best.gamma > 0 {
+                let tt = model.forward_latency(
+                    &pair.target,
+                    pair.target_scheme,
+                    dec.best.mapping.target,
+                    63,
+                );
+                tt * 1e3 / dec.best.speedup.max(1e-12)
+            } else {
+                f64::NAN
+            };
+            println!(
+                "  {name:<10} pages/pool={pages:<5} kv_rejected={rejected}  \
+                 best: {} gamma={} S={:.3}",
+                dec.best.mapping.label(),
+                dec.best.gamma,
+                dec.best.speedup
+            );
+            csv.push_str(&format!(
+                "dse,{name},{pages},{pages},1,0,0,{best_ms:.4},0,0.000,{rejected}\n"
+            ));
+            if pages < need_both / DSE_INFLIGHT {
+                // Starved: not even one session fits anywhere.
+                anyhow::ensure!(
+                    rejected >= 1,
+                    "{name}: starved pools ({pages} pages) rejected no mapping"
+                );
+                anyhow::ensure!(
+                    dec.best.gamma == 0 && dec.best.infeasible.is_some(),
+                    "{name}: starved pools still produced a feasible mapping"
+                );
+            }
+            if pages >= 4 * need_both {
+                anyhow::ensure!(
+                    rejected == 0,
+                    "{name}: roomy pools ({pages} pages) still rejected {rejected} mappings"
+                );
+            }
+        }
+    }
+    // The serving pools themselves must also pass the filter the search
+    // applies — the deployment the serve sweep just ran is DSE-feasible.
+    anyhow::ensure!(
+        dse::kv_feasible(&ctx.lat.platform, &pair, mapping, &kv),
+        "stock platform pools fail the DSE feasibility filter at the serve load"
+    );
+
+    ctx.write_csv("kvcache.csv", &csv)?;
+    Ok(())
+}

@@ -8,6 +8,7 @@ pub mod deviation;
 pub mod fig5;
 pub mod fig6;
 pub mod fig7;
+pub mod kvcache;
 pub mod overlap;
 pub mod repartition;
 pub mod tables;
@@ -70,10 +71,11 @@ pub fn run(ctx: &Ctx, which: &str) -> anyhow::Result<()> {
         "overlap" => overlap::run(ctx),
         "repartition" => repartition::run(ctx),
         "tree" => tree::run(ctx),
+        "kvcache" => kvcache::run(ctx),
         "all" => {
             for id in [
                 "table2", "table3", "fig6a", "fig6b", "fig7a", "fig5a", "fig5b",
-                "fig7b", "deviation", "overlap", "repartition", "tree",
+                "fig7b", "deviation", "overlap", "repartition", "tree", "kvcache",
             ] {
                 println!("\n=== experiment {id} ===");
                 run(ctx, id)?;
@@ -82,7 +84,7 @@ pub fn run(ctx: &Ctx, which: &str) -> anyhow::Result<()> {
         }
         other => anyhow::bail!(
             "unknown experiment {other:?} (fig5a fig5b fig6a fig6b table2 table3 \
-             fig7a fig7b deviation alpha overlap repartition tree all)"
+             fig7a fig7b deviation alpha overlap repartition tree kvcache all)"
         ),
     }
 }

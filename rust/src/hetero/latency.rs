@@ -99,6 +99,54 @@ impl LatencyModel {
         (single - oh) * batch.max(1) as f64 + oh
     }
 
+    /// Memory-traffic term of a KV-cache hit: seconds to stream `cached`
+    /// tokens' worth of resident K/V tensors of `spec` back through the
+    /// attention kernels, at the platform's effective DRAM bandwidth.
+    /// Zero cached tokens cost exactly 0.0 seconds.
+    pub fn kv_read_latency(&self, spec: &ModelSpec, scheme: Scheme, cached: usize) -> f64 {
+        let mem = &self.platform.memory;
+        let bytes = crate::kvcache::kv_bytes_per_token(spec, scheme, mem) * cached as f64;
+        bytes / (mem.dram_gbps * 1e9)
+    }
+
+    /// Compute cost of one lane of an *incremental* forward — `cached` of
+    /// the `seq_len` bucketed positions already have resident KV, so the
+    /// lane pays compute only for the new fraction plus the memory-traffic
+    /// term for re-reading the cached KV. No dispatch boundary included
+    /// (the caller owns boundary accounting, fused or single).
+    pub fn incremental_lane_cost(
+        &self,
+        spec: &ModelSpec,
+        scheme: Scheme,
+        pu: PuAssignment,
+        seq_len: usize,
+        cached: usize,
+    ) -> f64 {
+        let single = self.forward_latency(spec, scheme, pu, seq_len);
+        let oh = self.dispatch_overhead(pu);
+        let cached = cached.min(seq_len);
+        let new_frac = (seq_len - cached) as f64 / seq_len.max(1) as f64;
+        (single - oh) * new_frac + self.kv_read_latency(spec, scheme, cached)
+    }
+
+    /// One incremental forward including its dispatch boundary: the
+    /// cache-hit counterpart of [`Self::forward_latency`]. At `cached = 0`
+    /// this is *numerically* the plain forward; the engine still routes
+    /// cache-off (and cache-cold) dispatches through
+    /// [`Self::forward_latency`] directly so the `kv_cache: off` clock is
+    /// bit-identical by construction, not by arithmetic coincidence.
+    pub fn incremental_forward_latency(
+        &self,
+        spec: &ModelSpec,
+        scheme: Scheme,
+        pu: PuAssignment,
+        seq_len: usize,
+        cached: usize,
+    ) -> f64 {
+        self.incremental_lane_cost(spec, scheme, pu, seq_len, cached)
+            + self.dispatch_overhead(pu)
+    }
+
     /// Cost coefficient c = t_draft / t_target for a mapping at seq_len
     /// (the paper's Fig. 6 quantity).
     pub fn cost_coefficient(
@@ -235,6 +283,32 @@ mod tests {
                 // ... by exactly the b-1 saved boundaries.
                 assert!((single * b as f64 - tb - (b - 1) as f64 * oh).abs() < 1e-12);
             }
+        }
+    }
+
+    #[test]
+    fn incremental_latency_prices_cache_hits_below_full_forwards() {
+        let (t, _) = specs();
+        let m = model();
+        for pu in [PuAssignment::Cpu { cores: 2 }, PuAssignment::Gpu] {
+            let full = m.forward_latency(&t, Scheme::W8a8, pu, 64);
+            // No resident KV: numerically the plain forward.
+            let cold = m.incremental_forward_latency(&t, Scheme::W8a8, pu, 64, 0);
+            assert!((cold - full).abs() < 1e-15, "{cold} vs {full}");
+            assert_eq!(m.kv_read_latency(&t, Scheme::W8a8, 0), 0.0);
+            // More resident KV -> strictly cheaper forwards (the DRAM
+            // read must undercut the compute it replaces at these sizes).
+            let mut prev = full;
+            for cached in [16usize, 32, 48, 63] {
+                let inc = m.incremental_forward_latency(&t, Scheme::W8a8, pu, 64, cached);
+                assert!(inc < prev, "cached={cached}: {inc} !< {prev}");
+                assert!(inc > m.dispatch_overhead(pu));
+                prev = inc;
+            }
+            // cached is clamped to the bucket.
+            let a = m.incremental_forward_latency(&t, Scheme::W8a8, pu, 64, 64);
+            let b = m.incremental_forward_latency(&t, Scheme::W8a8, pu, 64, 999);
+            assert_eq!(a.to_bits(), b.to_bits());
         }
     }
 

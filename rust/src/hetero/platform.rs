@@ -60,19 +60,39 @@ pub struct MemoryModel {
     pub bytes_w8a8: f64,
     /// Device memory budget for model weights + runtime, bytes.
     pub budget_bytes: f64,
+    /// Fixed size of one KV-cache page, bytes ([`crate::kvcache`]).
+    pub kv_page_bytes: f64,
+    /// KV page-pool capacity carved out of the DRAM partition each PU's
+    /// runtime arena owns (pages, per worker).
+    pub kv_pages_cpu: usize,
+    pub kv_pages_gpu: usize,
+    /// Effective DRAM bandwidth for streaming cached KV back through the
+    /// attention kernels, GB/s (the memory-traffic latency term).
+    pub dram_gbps: f64,
 }
 
 impl MemoryModel {
+    /// Bytes/element under a quantization scheme.
+    pub fn scheme_bytes(&self, scheme: Scheme) -> f64 {
+        match scheme {
+            Scheme::Fp => self.bytes_fp,
+            Scheme::W8a8 => self.bytes_w8a8,
+        }
+    }
+
+    /// KV page-pool capacity of a physical PU (pages, per worker).
+    pub fn kv_pages(&self, pu: super::pu::PuId) -> usize {
+        match pu {
+            super::pu::PuId::Cpu => self.kv_pages_cpu,
+            super::pu::PuId::Gpu => self.kv_pages_gpu,
+        }
+    }
     pub fn role_bytes(&self, role: Role, scheme: Scheme) -> f64 {
         let params = match role {
             Role::Target => self.scaled_params_target,
             Role::Drafter => self.scaled_params_drafter,
         };
-        let b = match scheme {
-            Scheme::Fp => self.bytes_fp,
-            Scheme::W8a8 => self.bytes_w8a8,
-        };
-        params * b
+        params * self.scheme_bytes(scheme)
     }
 
     /// Can a (target scheme, drafter scheme) pair be resident together?
@@ -130,6 +150,10 @@ impl Platform {
                 bytes_fp: 2.0,   // fp16 at paper scale
                 bytes_w8a8: 1.0, // int8 weights
                 budget_bytes: 5.5e9,
+                kv_page_bytes: 16.0 * 1024.0,
+                kv_pages_cpu: 2048,
+                kv_pages_gpu: 512,
+                dram_gbps: 12.8, // LPDDR5 partition effectively available
             },
         }
     }
@@ -195,6 +219,18 @@ impl Platform {
             if let Some(v) = mem.get("budget_gb").and_then(Json::as_f64) {
                 m.budget_bytes = v * 1e9;
             }
+            if let Some(v) = mem.get("kv_page_bytes").and_then(Json::as_f64) {
+                m.kv_page_bytes = v;
+            }
+            if let Some(v) = mem.get("kv_pages_cpu").and_then(Json::as_usize) {
+                m.kv_pages_cpu = v;
+            }
+            if let Some(v) = mem.get("kv_pages_gpu").and_then(Json::as_usize) {
+                m.kv_pages_gpu = v;
+            }
+            if let Some(v) = mem.get("dram_gbps").and_then(Json::as_f64) {
+                m.dram_gbps = v;
+            }
         }
         p.validate()?;
         Ok(p)
@@ -222,6 +258,14 @@ impl Platform {
         anyhow::ensure!(
             self.gpu.shaders >= 1,
             "gpu.shaders must be >= 1 (it scales the design-variant count)"
+        );
+        anyhow::ensure!(
+            self.memory.kv_page_bytes >= 1024.0,
+            "memory.kv_page_bytes must be >= 1024 (one page must hold >= 1 token of KV)"
+        );
+        anyhow::ensure!(
+            self.memory.dram_gbps > 0.0,
+            "memory.dram_gbps must be positive"
         );
         Ok(())
     }
@@ -276,6 +320,27 @@ mod tests {
         assert_eq!(p.cpu.peak_gflops_per_core, 10.0);
         assert_eq!(p.gpu.peak_gflops, 7.0);
         assert!(p.memory.pair_fits(Scheme::Fp, Scheme::Fp)); // 16 GB fits all
+    }
+
+    #[test]
+    fn kv_memory_fields_default_and_override() {
+        let m = Platform::imx95().memory;
+        assert_eq!(m.kv_pages(super::super::pu::PuId::Cpu), 2048);
+        assert_eq!(m.kv_pages(super::super::pu::PuId::Gpu), 512);
+        assert!(m.kv_page_bytes > 0.0 && m.dram_gbps > 0.0);
+        let j = Json::parse(
+            r#"{"memory":{"kv_page_bytes":8192,"kv_pages_cpu":64,
+                "kv_pages_gpu":16,"dram_gbps":25.6}}"#,
+        )
+        .unwrap();
+        let p = Platform::from_json(&j).unwrap();
+        assert_eq!(p.memory.kv_page_bytes, 8192.0);
+        assert_eq!(p.memory.kv_pages_cpu, 64);
+        assert_eq!(p.memory.kv_pages_gpu, 16);
+        assert_eq!(p.memory.dram_gbps, 25.6);
+        // A page too small to hold a single token's KV is rejected.
+        let j = Json::parse(r#"{"memory":{"kv_page_bytes":64}}"#).unwrap();
+        assert!(Platform::from_json(&j).is_err());
     }
 
     #[test]

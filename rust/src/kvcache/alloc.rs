@@ -1,0 +1,146 @@
+//! Fixed-size page allocator over the per-PU KV pools.
+//!
+//! One pool per physical PU ([`PuId`]), capacity taken from the platform's
+//! [`crate::hetero::platform::MemoryModel`] (`kv_pages_cpu` /
+//! `kv_pages_gpu`). Pages are identified, not just counted: the free list
+//! holds explicit [`PageId`]s and a liveness bitmap shadows it, so a
+//! double free or a foreign id is a detected error instead of silent pool
+//! corruption — the property the allocator proptests pin.
+
+use crate::hetero::{PuId, NUM_PUS};
+
+/// Index of one fixed-size page within its PU's pool.
+pub type PageId = u32;
+
+#[derive(Debug, Clone)]
+struct Pool {
+    /// LIFO free list of page ids (all of `0..capacity` when empty).
+    free: Vec<PageId>,
+    /// `live[p]` = page `p` is currently allocated.
+    live: Vec<bool>,
+    used: usize,
+    peak: usize,
+}
+
+impl Pool {
+    fn new(capacity: usize) -> Pool {
+        Pool {
+            // Reversed so pages hand out in ascending id order (cosmetic,
+            // but it makes test failures readable).
+            free: (0..capacity as PageId).rev().collect(),
+            live: vec![false; capacity],
+            used: 0,
+            peak: 0,
+        }
+    }
+}
+
+/// Per-PU page pools with explicit page identity.
+#[derive(Debug, Clone)]
+pub struct PageAllocator {
+    pools: [Pool; NUM_PUS],
+}
+
+impl PageAllocator {
+    /// Pools sized `pages_cpu` / `pages_gpu` (the per-worker capacities
+    /// from the platform memory model).
+    pub fn new(pages_cpu: usize, pages_gpu: usize) -> PageAllocator {
+        PageAllocator { pools: [Pool::new(pages_cpu), Pool::new(pages_gpu)] }
+    }
+
+    pub fn capacity(&self, pu: PuId) -> usize {
+        self.pools[pu.index()].live.len()
+    }
+
+    /// Pages currently allocated on `pu`.
+    pub fn used(&self, pu: PuId) -> usize {
+        self.pools[pu.index()].used
+    }
+
+    /// High-water mark of [`used`](Self::used).
+    pub fn peak(&self, pu: PuId) -> usize {
+        self.pools[pu.index()].peak
+    }
+
+    /// Pages still available on `pu`.
+    pub fn available(&self, pu: PuId) -> usize {
+        self.pools[pu.index()].free.len()
+    }
+
+    /// Allocate `n` pages on `pu`, all-or-nothing: `None` leaves the pool
+    /// untouched (the caller decides whether to evict and retry or shed).
+    pub fn alloc(&mut self, pu: PuId, n: usize) -> Option<Vec<PageId>> {
+        let pool = &mut self.pools[pu.index()];
+        if pool.free.len() < n {
+            return None;
+        }
+        let at = pool.free.len() - n;
+        let pages = pool.free.split_off(at);
+        for &p in &pages {
+            debug_assert!(!pool.live[p as usize]);
+            pool.live[p as usize] = true;
+        }
+        pool.used += n;
+        pool.peak = pool.peak.max(pool.used);
+        Some(pages)
+    }
+
+    /// Return pages to `pu`'s pool. A page not currently live (double
+    /// free) or outside the pool is an error; pages preceding the bad one
+    /// in `pages` are still freed.
+    pub fn release(&mut self, pu: PuId, pages: &[PageId]) -> anyhow::Result<()> {
+        let pool = &mut self.pools[pu.index()];
+        for &p in pages {
+            let slot = pool
+                .live
+                .get_mut(p as usize)
+                .ok_or_else(|| anyhow::anyhow!("page {p} outside the {} pool", pu.label()))?;
+            anyhow::ensure!(*slot, "double free of page {p} on {}", pu.label());
+            *slot = false;
+            pool.free.push(p);
+            pool.used -= 1;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_is_all_or_nothing() {
+        let mut a = PageAllocator::new(4, 2);
+        let got = a.alloc(PuId::Cpu, 3).unwrap();
+        assert_eq!(got.len(), 3);
+        assert_eq!(a.used(PuId::Cpu), 3);
+        // 2 > 1 remaining: refused, nothing consumed.
+        assert!(a.alloc(PuId::Cpu, 2).is_none());
+        assert_eq!(a.used(PuId::Cpu), 3);
+        assert_eq!(a.available(PuId::Cpu), 1);
+        // Pools are independent.
+        assert!(a.alloc(PuId::Gpu, 2).is_some());
+        assert!(a.alloc(PuId::Gpu, 1).is_none());
+    }
+
+    #[test]
+    fn release_returns_pages_and_detects_double_free() {
+        let mut a = PageAllocator::new(2, 0);
+        let pages = a.alloc(PuId::Cpu, 2).unwrap();
+        a.release(PuId::Cpu, &pages).unwrap();
+        assert_eq!(a.used(PuId::Cpu), 0);
+        assert_eq!(a.peak(PuId::Cpu), 2);
+        // Double free and foreign ids are loud errors.
+        assert!(a.release(PuId::Cpu, &pages[..1]).is_err());
+        assert!(a.release(PuId::Cpu, &[99]).is_err());
+        // The pool is usable again at full capacity.
+        assert_eq!(a.alloc(PuId::Cpu, 2).unwrap().len(), 2);
+    }
+
+    #[test]
+    fn zero_page_requests_always_succeed() {
+        let mut a = PageAllocator::new(0, 0);
+        assert_eq!(a.alloc(PuId::Cpu, 0).unwrap().len(), 0);
+        assert!(a.alloc(PuId::Cpu, 1).is_none());
+    }
+}

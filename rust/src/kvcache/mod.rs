@@ -1,0 +1,409 @@
+//! Paged KV-cache with cross-request prefix sharing.
+//!
+//! Today's engine recomputes attention over the whole bucketed sequence on
+//! every forward; this subsystem makes the KV working set a first-class,
+//! *bounded* resource so the serving stack can (a) price draft/verify
+//! rounds incrementally — only *new* tokens pay compute, resident KV pays
+//! a DRAM-read term ([`crate::hetero::LatencyModel::incremental_lane_cost`])
+//! — and (b) pay prefill once across requests sharing a prompt prefix.
+//!
+//! Three layers:
+//!
+//! * [`PageAllocator`] — fixed-size pages in per-PU pools whose capacities
+//!   come from the platform JSON (`memory.kv_pages_cpu` / `kv_pages_gpu`);
+//!   explicit page identity, so double frees are detected.
+//! * [`PrefixCache`] — a copy-on-write trie over full token chunks,
+//!   refcounted per attached session, with zero-ref retention and
+//!   deepest-first eviction under pressure.
+//! * [`KvManager`] — one per worker: admission-time reservation of the
+//!   whole session budget (prompt + generation window), prefix attach,
+//!   release on retire/cancel/deadline-reap, and the [`KvStats`] the
+//!   metrics registry aggregates.
+//!
+//! Sizing rule: one trie chunk is [`KvLayout::chunk_tokens`] tokens,
+//! chosen as the *largest* token count whose K/V fits one page for **both**
+//! models of the serving pair — so every chunk owns exactly one page per
+//! role and page accounting stays integral. The per-token KV footprint is
+//! `2 × n_layers × d_model × bytes(scheme)` ([`kv_bytes_per_token`]),
+//! using the engine's real (simulation-scale) model dimensions — the
+//! *paper-scale* weight footprints in
+//! [`MemoryModel`](crate::hetero::platform::MemoryModel) gate weight
+//! residency, while KV pages gate the live working set.
+//!
+//! The design-space search treats page capacity as a feasibility filter
+//! ([`crate::dse::KvLoad`]): mappings whose in-flight KV working set
+//! exceeds a PU's pool are rejected like the paper's weight-memory
+//! exclusions. Everything here is gated behind the `kv_cache: off|on`
+//! config knob; `off` (the default) never constructs a manager and is
+//! bit-identical to the historical engine.
+
+pub mod alloc;
+pub mod prefix;
+
+pub use alloc::{PageAllocator, PageId};
+pub use prefix::{Attach, NodeId, PrefixCache};
+
+use crate::hetero::platform::MemoryModel;
+use crate::hetero::{Mapping, PuId, NUM_PUS};
+use crate::models::{ModelSpec, Scheme};
+
+/// Bytes of K + V one token occupies for `spec` under `scheme`:
+/// `2 × n_layers × d_model × bytes_per_element`.
+pub fn kv_bytes_per_token(spec: &ModelSpec, scheme: Scheme, mem: &MemoryModel) -> f64 {
+    2.0 * spec.n_layers as f64 * spec.d_model as f64 * mem.scheme_bytes(scheme)
+}
+
+/// Tokens of `spec`'s KV that fit one page (at least 1; the platform
+/// validator rejects pages smaller than one token's KV at sane dims).
+pub fn tokens_per_page(spec: &ModelSpec, scheme: Scheme, mem: &MemoryModel) -> usize {
+    ((mem.kv_page_bytes / kv_bytes_per_token(spec, scheme, mem)).floor() as usize).max(1)
+}
+
+/// Pages needed to hold `tokens` tokens of `spec`'s KV.
+pub fn pages_required(spec: &ModelSpec, scheme: Scheme, mem: &MemoryModel, tokens: usize) -> usize {
+    let per_page = tokens_per_page(spec, scheme, mem);
+    tokens.div_ceil(per_page)
+}
+
+/// Chunking layout for one serving pair (drafter, target).
+#[derive(Debug, Clone, Copy)]
+pub struct KvLayout {
+    /// Tokens per trie chunk — one page per role per chunk.
+    pub chunk_tokens: usize,
+}
+
+impl KvLayout {
+    /// Chunk size: the largest token count one page covers for *both*
+    /// models, so a chunk is exactly one drafter page + one target page.
+    pub fn for_pair(
+        mem: &MemoryModel,
+        drafter: (&ModelSpec, Scheme),
+        target: (&ModelSpec, Scheme),
+    ) -> KvLayout {
+        let d = tokens_per_page(drafter.0, drafter.1, mem);
+        let t = tokens_per_page(target.0, target.1, mem);
+        KvLayout { chunk_tokens: d.min(t).max(1) }
+    }
+
+    /// Chunks covering `tokens` tokens (ceiling).
+    pub fn chunks(&self, tokens: usize) -> usize {
+        tokens.div_ceil(self.chunk_tokens)
+    }
+}
+
+/// One session's slice of the cache: the attached shared-prefix path plus
+/// its private pages, all released together when the session leaves.
+#[derive(Debug, Clone)]
+pub struct SessionKv {
+    mapping: Mapping,
+    /// Trie nodes this session holds references on (root-first).
+    path: Vec<NodeId>,
+    /// Prompt tokens covered by `path` — prefill the session skips.
+    shared_tokens: usize,
+    /// Session-private pages per physical PU (partial prompt tail +
+    /// generation window).
+    private: [Vec<PageId>; NUM_PUS],
+    /// Token budget reserved at admission (prompt + generation cap).
+    budget_tokens: usize,
+}
+
+impl SessionKv {
+    /// Prompt tokens whose prefill this session inherited from the cache.
+    pub fn shared_tokens(&self) -> usize {
+        self.shared_tokens
+    }
+
+    pub fn budget_tokens(&self) -> usize {
+        self.budget_tokens
+    }
+
+    pub fn mapping(&self) -> Mapping {
+        self.mapping
+    }
+
+    /// Total pages this session holds privately (excludes shared nodes).
+    pub fn private_pages(&self) -> usize {
+        self.private.iter().map(Vec::len).sum()
+    }
+}
+
+/// Cumulative manager counters (the worker snapshots these into the
+/// metrics registry as deltas).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct KvStats {
+    /// Prefix-cache probes (one per admission).
+    pub lookups: u64,
+    /// Prompt tokens examined across probes.
+    pub prefix_probe_tokens: u64,
+    /// Prompt tokens matched by the prefix cache.
+    pub prefix_hit_tokens: u64,
+    /// Prefill tokens sessions did not recompute (== hit tokens; kept as
+    /// its own counter because it is the experiment's headline metric).
+    pub prefill_tokens_saved: u64,
+    /// Admissions shed because the page pools were exhausted.
+    pub memory_shed: u64,
+    /// Pages reclaimed by cancel/deadline reaps (immediate releases).
+    pub reap_reclaimed_pages: u64,
+}
+
+/// Per-worker KV-cache manager: allocator + prefix trie + accounting.
+#[derive(Debug, Clone)]
+pub struct KvManager {
+    layout: KvLayout,
+    alloc: PageAllocator,
+    cache: PrefixCache,
+    stats: KvStats,
+}
+
+impl KvManager {
+    /// Pools sized from the platform memory model; chunking from the
+    /// serving pair's model dimensions.
+    pub fn new(
+        mem: &MemoryModel,
+        drafter: (&ModelSpec, Scheme),
+        target: (&ModelSpec, Scheme),
+    ) -> KvManager {
+        let layout = KvLayout::for_pair(mem, drafter, target);
+        KvManager {
+            layout,
+            alloc: PageAllocator::new(mem.kv_pages_cpu, mem.kv_pages_gpu),
+            cache: PrefixCache::new(layout.chunk_tokens),
+            stats: KvStats::default(),
+        }
+    }
+
+    pub fn layout(&self) -> KvLayout {
+        self.layout
+    }
+
+    pub fn stats(&self) -> KvStats {
+        self.stats
+    }
+
+    /// (used, peak, capacity) pages on one PU's pool.
+    pub fn occupancy(&self, pu: PuId) -> (usize, usize, usize) {
+        (self.alloc.used(pu), self.alloc.peak(pu), self.alloc.capacity(pu))
+    }
+
+    /// Admit one session: probe the prefix cache for the prompt, then
+    /// reserve pages for the *whole* budget (prompt + generation window)
+    /// on the mapping's PUs — evicting cached zero-ref prefixes under
+    /// pressure — and publish the prompt's uncovered full chunks as new
+    /// shared nodes. `None` = pools exhausted even after eviction; the
+    /// caller sheds the request (`memory_shed` is counted here).
+    pub fn admit(
+        &mut self,
+        prompt: &[u32],
+        mapping: Mapping,
+        budget_tokens: usize,
+    ) -> Option<SessionKv> {
+        let c = self.layout.chunk_tokens;
+        let budget = budget_tokens.max(prompt.len()).max(1);
+        let hit = self.cache.attach(prompt, mapping);
+        self.stats.lookups += 1;
+        self.stats.prefix_probe_tokens += prompt.len() as u64;
+
+        let prompt_chunks = prompt.len() / c; // full chunks only
+        let new_shared = prompt_chunks - hit.path.len();
+        let private_chunks = self.layout.chunks(budget) - prompt_chunks;
+        let need = new_shared + private_chunks;
+
+        let d_pu = mapping.drafter.id();
+        let t_pu = mapping.target.id();
+        let Some(d_pages) = self.alloc_evicting(d_pu, need) else {
+            self.cache.detach(&hit.path);
+            self.stats.memory_shed += 1;
+            return None;
+        };
+        let Some(t_pages) = self.alloc_evicting(t_pu, need) else {
+            self.alloc.release(d_pu, &d_pages).expect("fresh pages");
+            self.cache.detach(&hit.path);
+            self.stats.memory_shed += 1;
+            return None;
+        };
+        // The reservation holds; only now do the hit counters move, so a
+        // shed admission never reports phantom savings.
+        self.stats.prefix_hit_tokens += hit.tokens as u64;
+        self.stats.prefill_tokens_saved += hit.tokens as u64;
+
+        // Publish the prompt's uncovered full chunks so the *next*
+        // request sharing this prefix attaches to them.
+        let mut path = hit.path;
+        let mut parent = path.last().copied();
+        let mut d_pages = d_pages.into_iter();
+        let mut t_pages = t_pages.into_iter();
+        for k in path.len()..prompt_chunks {
+            let id = self.cache.insert(
+                parent,
+                &prompt[k * c..(k + 1) * c],
+                mapping,
+                d_pages.next().expect("reserved above"),
+                t_pages.next().expect("reserved above"),
+            );
+            parent = Some(id);
+            path.push(id);
+        }
+        let mut private: [Vec<PageId>; NUM_PUS] = Default::default();
+        private[d_pu.index()].extend(d_pages);
+        private[t_pu.index()].extend(t_pages);
+        Some(SessionKv { mapping, path, shared_tokens: hit.tokens, private, budget_tokens: budget })
+    }
+
+    /// Release a session's cache state: private pages go back to the
+    /// pools, shared-path references drop. A `reaped` release
+    /// (cancel/deadline) additionally evicts the session's now-unreferenced
+    /// path nodes immediately — a reaped prompt is the one prefix we know
+    /// nobody is waiting on — and counts everything it reclaimed. Returns
+    /// pages freed.
+    pub fn release(&mut self, kv: SessionKv, reaped: bool) -> usize {
+        let mut freed = 0;
+        for pu in PuId::all() {
+            let pages = &kv.private[pu.index()];
+            if !pages.is_empty() {
+                self.alloc.release(pu, pages).expect("session pages are live");
+                freed += pages.len();
+            }
+        }
+        self.cache.detach(&kv.path);
+        if reaped {
+            for &id in kv.path.iter().rev() {
+                match self.cache.evict_if_unused(id, &mut self.alloc) {
+                    Ok(Some(n)) => freed += n,
+                    // Still referenced/parented (or an internal error —
+                    // nothing more to reclaim either way): stop walking up.
+                    _ => break,
+                }
+            }
+            self.stats.reap_reclaimed_pages += freed as u64;
+        }
+        freed
+    }
+
+    /// Allocate with evict-and-retry: under pressure, cached zero-ref
+    /// prefixes are dropped (deepest-first) until the request fits or
+    /// nothing evictable remains.
+    fn alloc_evicting(&mut self, pu: PuId, n: usize) -> Option<Vec<PageId>> {
+        loop {
+            if let Some(pages) = self.alloc.alloc(pu, n) {
+                return Some(pages);
+            }
+            match self.cache.evict_one(&mut self.alloc) {
+                Ok(Some(_)) => continue,
+                _ => return None,
+            }
+        }
+    }
+
+    /// Direct trie/allocator access for tests and the COW surface.
+    pub fn parts_mut(&mut self) -> (&mut PrefixCache, &mut PageAllocator) {
+        (&mut self.cache, &mut self.alloc)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hetero::Platform;
+
+    fn specs() -> (ModelSpec, ModelSpec) {
+        (
+            ModelSpec {
+                name: "drafter".into(), n_layers: 2, d_model: 96, n_heads: 4,
+                ffn_dim: 256, vocab: 48, param_count: 230_880,
+            },
+            ModelSpec {
+                name: "target".into(), n_layers: 4, d_model: 128, n_heads: 4,
+                ffn_dim: 352, vocab: 48, param_count: 816_256,
+            },
+        )
+    }
+
+    fn manager(pages_cpu: usize, pages_gpu: usize) -> KvManager {
+        let (d, t) = specs();
+        let mut mem = Platform::imx95().memory;
+        mem.kv_pages_cpu = pages_cpu;
+        mem.kv_pages_gpu = pages_gpu;
+        KvManager::new(&mem, (&d, Scheme::Fp), (&t, Scheme::W8a8))
+    }
+
+    #[test]
+    fn sizing_is_integral_and_pair_bounded() {
+        let (d, t) = specs();
+        let mem = Platform::imx95().memory;
+        // 16 KiB page / (2·4·128·1 B) = 16 target-w8a8 tokens; the fp
+        // drafter fits more, so the pair chunk is target-bound.
+        assert_eq!(tokens_per_page(&t, Scheme::W8a8, &mem), 16);
+        let layout = KvLayout::for_pair(&mem, (&d, Scheme::Fp), (&t, Scheme::W8a8));
+        assert_eq!(layout.chunk_tokens, 16);
+        assert!(tokens_per_page(&d, Scheme::Fp, &mem) >= layout.chunk_tokens);
+        assert_eq!(pages_required(&t, Scheme::W8a8, &mem, 0), 0);
+        assert_eq!(pages_required(&t, Scheme::W8a8, &mem, 17), 2);
+        assert_eq!(layout.chunks(33), 3);
+    }
+
+    #[test]
+    fn second_admission_shares_the_prompt_prefix() {
+        let mut kv = manager(64, 64);
+        let m = Mapping::heterogeneous(1);
+        let c = kv.layout().chunk_tokens;
+        let prompt: Vec<u32> = (0..(2 * c + 3) as u32).collect();
+
+        let a = kv.admit(&prompt, m, prompt.len() + 8).unwrap();
+        assert_eq!(a.shared_tokens(), 0);
+        let used0 = kv.occupancy(PuId::Cpu).0;
+        let b = kv.admit(&prompt, m, prompt.len() + 8).unwrap();
+        // The two full prompt chunks came from the cache.
+        assert_eq!(b.shared_tokens(), 2 * c);
+        // B allocated strictly fewer new pages than A did.
+        assert!(kv.occupancy(PuId::Cpu).0 - used0 < used0);
+        let s = kv.stats();
+        assert_eq!(s.prefill_tokens_saved, (2 * c) as u64);
+        assert_eq!(s.lookups, 2);
+        kv.release(a, false);
+        kv.release(b, false);
+        // Retention: shared nodes stay cached after both sessions leave.
+        let c3 = kv.admit(&prompt, m, prompt.len()).unwrap();
+        assert_eq!(c3.shared_tokens(), 2 * c);
+    }
+
+    #[test]
+    fn exhaustion_sheds_and_reap_reclaims() {
+        // Room for one session only (per-PU pools sized to the budget).
+        let m = Mapping::heterogeneous(1);
+        let mut kv = manager(4, 4);
+        let c = kv.layout().chunk_tokens;
+        let prompt: Vec<u32> = (0..(2 * c) as u32).collect();
+        let budget = 4 * c;
+        let a = kv.admit(&prompt, m, budget).unwrap();
+        assert!(kv.admit(&[900, 901, 902], m, budget).is_none());
+        assert_eq!(kv.stats().memory_shed, 1);
+        // Reap: everything comes back, including the shared prompt nodes.
+        let freed = kv.release(a, true);
+        assert_eq!(freed, 8);
+        assert_eq!(kv.stats().reap_reclaimed_pages, 8);
+        assert_eq!(kv.occupancy(PuId::Cpu).0, 0);
+        assert_eq!(kv.occupancy(PuId::Gpu).0, 0);
+        // ... and the next admission fits again.
+        assert!(kv.admit(&[900, 901, 902], m, budget).is_some());
+    }
+
+    #[test]
+    fn pressure_evicts_cached_prefixes_for_new_admissions() {
+        let m = Mapping::homogeneous(1);
+        let mut kv = manager(4, 0);
+        let c = kv.layout().chunk_tokens;
+        let prompt_a: Vec<u32> = (0..(2 * c) as u32).collect();
+        // Homogeneous: both roles on the CPU pool -> 2 pages per chunk,
+        // and the 2-chunk prompt fills the 4-page pool exactly.
+        let a = kv.admit(&prompt_a, m, 2 * c).unwrap();
+        assert_eq!(kv.occupancy(PuId::Cpu).0, 4);
+        kv.release(a, false); // cached, not freed
+        assert_eq!(kv.occupancy(PuId::Cpu).0, 4);
+        // A different prompt needs the pool: cached chunks are evicted.
+        let prompt_b: Vec<u32> = (1000..1000 + (2 * c) as u32).collect();
+        let b = kv.admit(&prompt_b, m, 2 * c).unwrap();
+        assert_eq!(b.shared_tokens(), 0);
+        assert_eq!(kv.occupancy(PuId::Cpu).0, 4);
+        kv.release(b, false);
+    }
+}

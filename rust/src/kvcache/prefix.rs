@@ -1,0 +1,393 @@
+//! Copy-on-write prefix cache: a refcounted trie over token-chunk keys.
+//!
+//! Nodes are keyed on *full chunks* of [`chunk_tokens`] prompt tokens plus
+//! the session's frozen PU [`Mapping`] — a prefix cached for one mapping
+//! is never attached to a session whose KV pages must live on different
+//! PUs (online re-partitioning changes the mapping between admissions, so
+//! the mapping is part of the key, not an invariant). Each node owns one
+//! drafter page (on the mapping's drafter PU) and one target page (on the
+//! target PU); `chunk_tokens` is sized so one page per role covers one
+//! chunk for both models ([`super::KvLayout`]).
+//!
+//! Refcounts are session-level: `attach` bumps every node on the matched
+//! path, `detach` drops them. A node at zero refs stays *cached* — its
+//! pages remain allocated so the next request sharing the prefix attaches
+//! for free — until allocation pressure evicts it (deepest-first, leaves
+//! before ancestors, via [`PrefixCache::evict_one`]). Writes into a
+//! shared node's pages go through [`PrefixCache::cow_page`], which hands
+//! back a private copy whenever the node is shared — the original page id
+//! is never surrendered to a writer, the invariant the trie proptests pin
+//! ("COW never mutates a shared page").
+//!
+//! [`chunk_tokens`]: PrefixCache::chunk_tokens
+
+use crate::hetero::{Mapping, PuId};
+use crate::models::Role;
+
+use super::alloc::{PageAllocator, PageId};
+
+/// Arena index of a trie node.
+pub type NodeId = usize;
+
+#[derive(Debug, Clone)]
+struct Node {
+    chunk: Vec<u32>,
+    mapping: Mapping,
+    parent: Option<NodeId>,
+    children: Vec<NodeId>,
+    /// KV pages for this chunk: drafter-role page on
+    /// `mapping.drafter.id()`, target-role page on `mapping.target.id()`.
+    page_d: PageId,
+    page_t: PageId,
+    /// Sessions currently attached through this node.
+    refs: usize,
+    /// Root = 1 (depth in chunks; eviction prefers deeper nodes).
+    depth: usize,
+}
+
+/// Result of [`PrefixCache::attach`].
+#[derive(Debug, Clone, Default)]
+pub struct Attach {
+    /// Matched nodes, root-first; refcounts already bumped.
+    pub path: Vec<NodeId>,
+    /// Tokens covered by the matched path (`path.len() × chunk_tokens`).
+    pub tokens: usize,
+}
+
+/// The prefix trie. Pages are owned by nodes; the allocator is passed in
+/// only where pages change hands (eviction, COW copies).
+#[derive(Debug, Clone)]
+pub struct PrefixCache {
+    chunk_tokens: usize,
+    nodes: Vec<Option<Node>>,
+    free_slots: Vec<NodeId>,
+    roots: Vec<NodeId>,
+}
+
+impl PrefixCache {
+    pub fn new(chunk_tokens: usize) -> PrefixCache {
+        assert!(chunk_tokens >= 1, "chunk_tokens must be >= 1");
+        PrefixCache { chunk_tokens, nodes: Vec::new(), free_slots: Vec::new(), roots: Vec::new() }
+    }
+
+    /// Tokens per trie chunk (= per node, = per page-pair).
+    pub fn chunk_tokens(&self) -> usize {
+        self.chunk_tokens
+    }
+
+    /// Live (non-evicted) node count.
+    pub fn len(&self) -> usize {
+        self.nodes.iter().filter(|n| n.is_some()).count()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    fn node(&self, id: NodeId) -> &Node {
+        self.nodes[id].as_ref().expect("evicted node id")
+    }
+
+    fn node_mut(&mut self, id: NodeId) -> &mut Node {
+        self.nodes[id].as_mut().expect("evicted node id")
+    }
+
+    /// Session refcount of a node (test/metrics surface).
+    pub fn refs(&self, id: NodeId) -> usize {
+        self.node(id).refs
+    }
+
+    /// The node's (drafter, target) page pair (test surface).
+    pub fn pages(&self, id: NodeId) -> (PageId, PageId) {
+        let n = self.node(id);
+        (n.page_d, n.page_t)
+    }
+
+    /// Walk `tokens`' full chunks down the trie, matching children by
+    /// (chunk, mapping); bump refcounts along the match. The partial tail
+    /// chunk never matches (pages cover whole chunks only).
+    pub fn attach(&mut self, tokens: &[u32], mapping: Mapping) -> Attach {
+        let mut out = Attach::default();
+        let mut level: &[NodeId] = &self.roots;
+        for chunk in tokens.chunks_exact(self.chunk_tokens) {
+            let hit = level.iter().copied().find(|&id| {
+                let n = self.node(id);
+                n.mapping == mapping && n.chunk == chunk
+            });
+            match hit {
+                Some(id) => {
+                    out.path.push(id);
+                    level = &self.node(id).children;
+                }
+                None => break,
+            }
+        }
+        for &id in &out.path {
+            self.node_mut(id).refs += 1;
+        }
+        out.tokens = out.path.len() * self.chunk_tokens;
+        out
+    }
+
+    /// Insert one chunk node under `parent` (`None` = a new root) holding
+    /// the given page pair, with one session reference. Returns its id.
+    /// The caller guarantees no equal (chunk, mapping) sibling exists —
+    /// i.e. it ran [`attach`](Self::attach) first and is inserting the
+    /// unmatched remainder.
+    pub fn insert(
+        &mut self,
+        parent: Option<NodeId>,
+        chunk: &[u32],
+        mapping: Mapping,
+        page_d: PageId,
+        page_t: PageId,
+    ) -> NodeId {
+        debug_assert_eq!(chunk.len(), self.chunk_tokens);
+        let depth = parent.map_or(1, |p| self.node(p).depth + 1);
+        let node = Node {
+            chunk: chunk.to_vec(),
+            mapping,
+            parent,
+            children: Vec::new(),
+            page_d,
+            page_t,
+            refs: 1,
+            depth,
+        };
+        let id = match self.free_slots.pop() {
+            Some(slot) => {
+                self.nodes[slot] = Some(node);
+                slot
+            }
+            None => {
+                self.nodes.push(Some(node));
+                self.nodes.len() - 1
+            }
+        };
+        match parent {
+            Some(p) => self.node_mut(p).children.push(id),
+            None => self.roots.push(id),
+        }
+        id
+    }
+
+    /// Drop one session reference from every node on `path`. Nodes
+    /// reaching zero refs stay cached (retention) until evicted.
+    pub fn detach(&mut self, path: &[NodeId]) {
+        for &id in path {
+            let n = self.node_mut(id);
+            debug_assert!(n.refs > 0, "detach of an unreferenced node");
+            n.refs = n.refs.saturating_sub(1);
+        }
+    }
+
+    /// Evict one cached (refs = 0, childless) node — the deepest such
+    /// node, so subtrees drain leaves-first and shared short prefixes
+    /// survive longest. Its pages are returned to `alloc`. `Some(pages)`
+    /// when a node was evicted, `None` when nothing is evictable.
+    pub fn evict_one(&mut self, alloc: &mut PageAllocator) -> anyhow::Result<Option<usize>> {
+        let victim = self
+            .nodes
+            .iter()
+            .enumerate()
+            .filter_map(|(id, n)| n.as_ref().map(|n| (id, n)))
+            .filter(|(_, n)| n.refs == 0 && n.children.is_empty())
+            .max_by_key(|(id, n)| (n.depth, *id))
+            .map(|(id, _)| id);
+        let Some(id) = victim else { return Ok(None) };
+        let node = self.nodes[id].take().expect("victim just observed live");
+        match node.parent {
+            Some(p) => self.node_mut(p).children.retain(|&c| c != id),
+            None => self.roots.retain(|&r| r != id),
+        }
+        self.free_slots.push(id);
+        alloc.release(node.mapping.drafter.id(), &[node.page_d])?;
+        alloc.release(node.mapping.target.id(), &[node.page_t])?;
+        Ok(Some(2))
+    }
+
+    /// Targeted eviction for reap paths: evict `id` *if* it is cached
+    /// (refs = 0) and childless, returning the page count freed. `None`
+    /// when the node is still referenced, still a parent, or already
+    /// evicted — the caller stops reclaiming there.
+    pub fn evict_if_unused(
+        &mut self,
+        id: NodeId,
+        alloc: &mut PageAllocator,
+    ) -> anyhow::Result<Option<usize>> {
+        let evictable = matches!(
+            self.nodes.get(id).and_then(Option::as_ref),
+            Some(n) if n.refs == 0 && n.children.is_empty()
+        );
+        if !evictable {
+            return Ok(None);
+        }
+        let node = self.nodes[id].take().expect("checked live above");
+        match node.parent {
+            Some(p) => self.node_mut(p).children.retain(|&c| c != id),
+            None => self.roots.retain(|&r| r != id),
+        }
+        self.free_slots.push(id);
+        alloc.release(node.mapping.drafter.id(), &[node.page_d])?;
+        alloc.release(node.mapping.target.id(), &[node.page_t])?;
+        Ok(Some(2))
+    }
+
+    /// Copy-on-write entry for writing into a node's `role` page: a node
+    /// held by at most one session hands out its own page (in-place write
+    /// is safe); a *shared* node never does — the writer gets a freshly
+    /// allocated private copy on the same PU and owns it. Returns
+    /// `(page, copied)`; `Err` when the pool can't supply the copy.
+    pub fn cow_page(
+        &mut self,
+        id: NodeId,
+        role: Role,
+        alloc: &mut PageAllocator,
+    ) -> anyhow::Result<(PageId, bool)> {
+        let n = self.node(id);
+        let (pu, page) = match role {
+            Role::Drafter => (n.mapping.drafter.id(), n.page_d),
+            Role::Target => (n.mapping.target.id(), n.page_t),
+        };
+        if n.refs <= 1 {
+            return Ok((page, false));
+        }
+        let copy = alloc
+            .alloc(pu, 1)
+            .ok_or_else(|| anyhow::anyhow!("no page for COW copy on {}", pu.label()))?;
+        Ok((copy[0], true))
+    }
+
+    /// Pages currently held by trie nodes on `pu` (occupancy accounting /
+    /// proptest conservation checks).
+    pub fn pages_held(&self, pu: PuId) -> usize {
+        self.nodes
+            .iter()
+            .flatten()
+            .map(|n| {
+                usize::from(n.mapping.drafter.id() == pu) + usize::from(n.mapping.target.id() == pu)
+            })
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hetero::PuId;
+
+    fn cache_and_alloc() -> (PrefixCache, PageAllocator) {
+        (PrefixCache::new(4), PageAllocator::new(32, 32))
+    }
+
+    /// Allocate a page pair for one chunk under `m`.
+    fn pair(alloc: &mut PageAllocator, m: Mapping) -> (PageId, PageId) {
+        let d = alloc.alloc(m.drafter.id(), 1).unwrap()[0];
+        let t = alloc.alloc(m.target.id(), 1).unwrap()[0];
+        (d, t)
+    }
+
+    #[test]
+    fn attach_matches_full_chunks_for_the_same_mapping_only() {
+        let (mut c, mut a) = cache_and_alloc();
+        let het = Mapping::heterogeneous(1);
+        let hom = Mapping::homogeneous(1);
+        let toks: Vec<u32> = (0..8).collect();
+        let (d0, t0) = pair(&mut a, het);
+        let root = c.insert(None, &toks[..4], het, d0, t0);
+        let (d1, t1) = pair(&mut a, het);
+        c.insert(Some(root), &toks[4..8], het, d1, t1);
+
+        // Same mapping: both chunks match; the partial tail (2 tokens)
+        // does not.
+        let hit = c.attach(&(0..10).collect::<Vec<u32>>(), het);
+        assert_eq!(hit.path.len(), 2);
+        assert_eq!(hit.tokens, 8);
+        assert_eq!(c.refs(root), 2); // inserter + attacher
+        // Different mapping: no match at all.
+        let miss = c.attach(&toks, hom);
+        assert!(miss.path.is_empty());
+        // Diverging second chunk: only the shared root matches.
+        let mut fork = toks.clone();
+        fork[5] = 99;
+        let part = c.attach(&fork, het);
+        assert_eq!(part.path.len(), 1);
+        c.detach(&hit.path);
+        c.detach(&part.path);
+        assert_eq!(c.refs(root), 1);
+    }
+
+    #[test]
+    fn eviction_is_deepest_first_and_returns_pages() {
+        let (mut c, mut a) = cache_and_alloc();
+        let m = Mapping::heterogeneous(1);
+        let toks: Vec<u32> = (0..8).collect();
+        let (d0, t0) = pair(&mut a, m);
+        let root = c.insert(None, &toks[..4], m, d0, t0);
+        let (d1, t1) = pair(&mut a, m);
+        let leaf = c.insert(Some(root), &toks[4..8], m, d1, t1);
+        c.detach(&[root, leaf]);
+        let used_before = a.used(m.drafter.id()) + a.used(m.target.id());
+
+        // First eviction takes the leaf (deeper), not the root.
+        assert_eq!(c.evict_one(&mut a).unwrap(), Some(2));
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.refs(root), 0); // root survives, still cached
+        assert_eq!(c.evict_one(&mut a).unwrap(), Some(2));
+        assert!(c.is_empty());
+        assert!(c.evict_one(&mut a).unwrap().is_none());
+        let used_after = a.used(m.drafter.id()) + a.used(m.target.id());
+        assert_eq!(used_before - used_after, 4);
+    }
+
+    #[test]
+    fn referenced_or_parent_nodes_are_not_evictable() {
+        let (mut c, mut a) = cache_and_alloc();
+        let m = Mapping::homogeneous(2);
+        let (d0, t0) = pair(&mut a, m);
+        let root = c.insert(None, &[1, 2, 3, 4], m, d0, t0);
+        let (d1, t1) = pair(&mut a, m);
+        let leaf = c.insert(Some(root), &[5, 6, 7, 8], m, d1, t1);
+        // Leaf still referenced, root has a child: nothing evictable.
+        c.detach(&[root]);
+        // root refs=0 but has a live child; leaf refs=1.
+        assert!(c.evict_one(&mut a).unwrap().is_none());
+        c.detach(&[leaf]);
+        assert_eq!(c.evict_one(&mut a).unwrap(), Some(2));
+    }
+
+    #[test]
+    fn cow_never_surrenders_a_shared_page() {
+        let (mut c, mut a) = cache_and_alloc();
+        let m = Mapping::heterogeneous(1);
+        let (d0, t0) = pair(&mut a, m);
+        let root = c.insert(None, &[1, 2, 3, 4], m, d0, t0);
+        // Sole owner: in-place write, same page.
+        let (p, copied) = c.cow_page(root, Role::Target, &mut a).unwrap();
+        assert_eq!((p, copied), (t0, false));
+        // Shared (second attacher): the writer gets a fresh page and the
+        // node keeps its own.
+        let hit = c.attach(&[1, 2, 3, 4], m);
+        assert_eq!(c.refs(root), 2);
+        let (p, copied) = c.cow_page(root, Role::Target, &mut a).unwrap();
+        assert!(copied && p != t0);
+        assert_eq!(c.pages(root), (d0, t0));
+        let (pd, copied) = c.cow_page(root, Role::Drafter, &mut a).unwrap();
+        assert!(copied && pd != d0);
+        c.detach(&hit.path);
+    }
+
+    #[test]
+    fn pages_held_counts_both_roles_per_pu() {
+        let (mut c, mut a) = cache_and_alloc();
+        let het = Mapping::heterogeneous(1);
+        let (d0, t0) = pair(&mut a, het);
+        c.insert(None, &[1, 2, 3, 4], het, d0, t0);
+        assert_eq!(c.pages_held(PuId::Gpu), 1); // drafter page
+        assert_eq!(c.pages_held(PuId::Cpu), 1); // target page
+        let hom = Mapping::homogeneous(1);
+        let (d1, t1) = pair(&mut a, hom);
+        c.insert(None, &[9, 9, 9, 9], hom, d1, t1);
+        assert_eq!(c.pages_held(PuId::Cpu), 3);
+    }
+}

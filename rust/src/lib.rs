@@ -26,6 +26,8 @@
 //!   trait (analytic + calibrated impls), online routing engine,
 //!   calibration feed and online re-partitioning
 //! * [`profiler`] — cost-coefficient measurement (paper Fig. 6)
+//! * [`kvcache`] — paged KV-cache: page allocator, COW prefix trie,
+//!   per-worker manager with memory-aware admission
 //! * [`spec`] — the speculative sampling engine (modular + monolithic)
 //! * [`workload`] — Spec-Bench-shaped workload and arrival processes
 //! * [`coordinator`] — router, batcher, queue, worker lifecycle
@@ -43,6 +45,7 @@ pub mod decision;
 pub mod dse;
 pub mod experiments;
 pub mod hetero;
+pub mod kvcache;
 pub mod metrics;
 pub mod models;
 pub mod profiler;

@@ -9,7 +9,9 @@
 //!   alpha       quick per-task acceptance-rate check
 //!   info        print manifest / platform summary
 
-use specedge::config::{DecisionMode, ExecMode, KernelPath, RunConfig, Timing, TreeChoice};
+use specedge::config::{
+    DecisionMode, ExecMode, KernelPath, KvCacheMode, RunConfig, Timing, TreeChoice,
+};
 use specedge::coordinator::Coordinator;
 use specedge::dse::{self, PairConfig};
 use specedge::experiments;
@@ -44,6 +46,7 @@ fn cli() -> Cli {
         .opt("decision", "decision cost model: analytic|calibrated", None)
         .opt("repartition-every", "calibrated: re-run mapping search every K rounds", None)
         .opt("tree", "tree speculation: off|auto|KxD (e.g. 2x3)", None)
+        .opt("kv-cache", "paged KV cache + prefix sharing: off|on", None)
         .opt("alpha", "alpha for explore", Some("0.90"))
         .opt("seq", "operating sequence length", Some("63"))
         .opt("max-new", "max new tokens", Some("64"))
@@ -94,6 +97,9 @@ fn build_config(args: &specedge::util::cli::Args) -> anyhow::Result<RunConfig> {
     }
     if let Some(t) = args.get("tree") {
         cfg.tree = TreeChoice::parse(t)?;
+    }
+    if let Some(k) = args.get("kv-cache") {
+        cfg.kv_cache = KvCacheMode::parse(k)?;
     }
     if let Some(m) = args.get_usize("max-new")? {
         cfg.max_new_tokens = m;

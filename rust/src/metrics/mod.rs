@@ -105,6 +105,17 @@ struct Inner {
     /// the queue, aborted mid-decode, or completed past budget).
     deadline_requests: u64,
     deadline_missed: u64,
+    /// Paged KV-cache counters (`kv_cache: on` only; all zero when off).
+    kv_lookups: u64,
+    kv_prefix_probe_tokens: u64,
+    kv_prefix_hit_tokens: u64,
+    kv_prefill_tokens_saved: u64,
+    kv_memory_shed: u64,
+    kv_reap_reclaimed_pages: u64,
+    /// Per-worker per-PU page gauges `[used, peak, capacity]` at the
+    /// worker's last sync (indexed by worker id; workers own independent
+    /// managers, so the report sums across them).
+    kv_workers: Vec<[[u64; 3]; NUM_PUS]>,
 }
 
 /// Fixed-size uniform reservoir (Vitter's Algorithm R) for unbounded
@@ -155,6 +166,23 @@ pub struct RequestRecord {
     pub tokens: usize,
     pub drafted: usize,
     pub accepted: usize,
+}
+
+/// One worker's paged KV-cache sync: counter *deltas* since its previous
+/// sync plus its current per-PU page gauges (the worker snapshots its
+/// [`KvManager`](crate::kvcache::KvManager) stats every tick and reports
+/// the growth, so restating is safe and cheap).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct KvRecord {
+    pub lookups: u64,
+    pub prefix_probe_tokens: u64,
+    pub prefix_hit_tokens: u64,
+    pub prefill_tokens_saved: u64,
+    pub memory_shed: u64,
+    pub reap_reclaimed_pages: u64,
+    /// Per-PU `[used, peak, capacity]` pages at sync time (gauges, not
+    /// deltas — each sync replaces the worker's previous value).
+    pub occupancy: [[u64; 3]; NUM_PUS],
 }
 
 /// One scheduler round's contribution. The draft window the round ran
@@ -289,6 +317,23 @@ impl Metrics {
         }
     }
 
+    /// Fold one worker's paged KV-cache sync into the shared sink:
+    /// counters are deltas (added), occupancy gauges replace the worker's
+    /// previous report and are summed across workers at snapshot time.
+    pub fn record_kv(&self, wid: usize, r: KvRecord) {
+        let mut m = self.inner.lock().unwrap();
+        m.kv_lookups += r.lookups;
+        m.kv_prefix_probe_tokens += r.prefix_probe_tokens;
+        m.kv_prefix_hit_tokens += r.prefix_hit_tokens;
+        m.kv_prefill_tokens_saved += r.prefill_tokens_saved;
+        m.kv_memory_shed += r.memory_shed;
+        m.kv_reap_reclaimed_pages += r.reap_reclaimed_pages;
+        if m.kv_workers.len() <= wid {
+            m.kv_workers.resize(wid + 1, [[0; 3]; NUM_PUS]);
+        }
+        m.kv_workers[wid] = r.occupancy;
+    }
+
     /// One request's simulated timeline latency (admission → finish).
     pub fn record_timeline_latency(&self, seconds: f64) {
         if seconds.is_finite() {
@@ -344,8 +389,28 @@ impl Metrics {
             slo_requests: m.slo,
             deadline_requests: m.deadline_requests,
             deadline_missed: m.deadline_missed,
+            kv_lookups: m.kv_lookups,
+            kv_prefix_probe_tokens: m.kv_prefix_probe_tokens,
+            kv_prefix_hit_tokens: m.kv_prefix_hit_tokens,
+            kv_prefill_tokens_saved: m.kv_prefill_tokens_saved,
+            kv_memory_shed: m.kv_memory_shed,
+            kv_reap_reclaimed_pages: m.kv_reap_reclaimed_pages,
+            kv_pages_used: sum_occupancy(&m.kv_workers, 0),
+            kv_pages_peak: sum_occupancy(&m.kv_workers, 1),
+            kv_pages_capacity: sum_occupancy(&m.kv_workers, 2),
         }
     }
+}
+
+/// Sum one column of the per-worker `[used, peak, capacity]` gauges.
+fn sum_occupancy(workers: &[[[u64; 3]; NUM_PUS]], col: usize) -> [u64; NUM_PUS] {
+    let mut out = [0u64; NUM_PUS];
+    for w in workers {
+        for p in 0..NUM_PUS {
+            out[p] += w[p][col];
+        }
+    }
+    out
 }
 
 /// Point-in-time metrics report.
@@ -408,6 +473,20 @@ pub struct Report {
     /// Deadline-carrying requests answered / missed.
     pub deadline_requests: u64,
     pub deadline_missed: u64,
+    /// Paged KV-cache counters (all zero under `kv_cache: off`): prefix
+    /// probes, probe/hit token totals, prefill tokens sessions skipped,
+    /// admissions shed on page exhaustion, pages reclaimed by reaps.
+    pub kv_lookups: u64,
+    pub kv_prefix_probe_tokens: u64,
+    pub kv_prefix_hit_tokens: u64,
+    pub kv_prefill_tokens_saved: u64,
+    pub kv_memory_shed: u64,
+    pub kv_reap_reclaimed_pages: u64,
+    /// Per-PU page gauges summed across workers (indexed by
+    /// [`PuId::index`]): in-use at last sync, high-water mark, pool size.
+    pub kv_pages_used: [u64; NUM_PUS],
+    pub kv_pages_peak: [u64; NUM_PUS],
+    pub kv_pages_capacity: [u64; NUM_PUS],
 }
 
 impl Report {
@@ -426,6 +505,16 @@ impl Report {
     pub fn deadline_miss_rate(&self) -> f64 {
         if self.deadline_requests > 0 {
             self.deadline_missed as f64 / self.deadline_requests as f64
+        } else {
+            f64::NAN
+        }
+    }
+
+    /// Fraction of probed prompt tokens the prefix cache already held
+    /// (NaN before any probe — including the whole `kv_cache: off` world).
+    pub fn kv_prefix_hit_rate(&self) -> f64 {
+        if self.kv_prefix_probe_tokens > 0 {
+            self.kv_prefix_hit_tokens as f64 / self.kv_prefix_probe_tokens as f64
         } else {
             f64::NAN
         }
@@ -456,7 +545,10 @@ impl Report {
              decision: prior_decisions={} calibration_obs={}\n\
              finish: stop={} length={} stop_seq={} cancelled={} \
              deadline={} rejected={}\n\
-             slo: interactive={} batch={} deadline_miss_rate={:.3}",
+             slo: interactive={} batch={} deadline_miss_rate={:.3}\n\
+             kv: lookups={} prefix_hit_rate={:.3} prefill_tokens_saved={} \
+             memory_shed={} reap_reclaimed_pages={}\n\
+             kv pages: cpu used={} peak={} cap={} | gpu used={} peak={} cap={}",
             self.requests,
             self.rejected,
             self.tokens_out,
@@ -497,6 +589,17 @@ impl Report {
             self.slo_requests[SloClass::Interactive.index()],
             self.slo_requests[SloClass::Batch.index()],
             self.deadline_miss_rate(),
+            self.kv_lookups,
+            self.kv_prefix_hit_rate(),
+            self.kv_prefill_tokens_saved,
+            self.kv_memory_shed,
+            self.kv_reap_reclaimed_pages,
+            self.kv_pages_used[PuId::Cpu.index()],
+            self.kv_pages_peak[PuId::Cpu.index()],
+            self.kv_pages_capacity[PuId::Cpu.index()],
+            self.kv_pages_used[PuId::Gpu.index()],
+            self.kv_pages_peak[PuId::Gpu.index()],
+            self.kv_pages_capacity[PuId::Gpu.index()],
         )
     }
 }
@@ -691,6 +794,43 @@ mod tests {
         let s = r.render(1.0);
         assert!(s.contains("deadline_miss_rate"), "{s}");
         assert!(s.contains("cancelled=1"), "{s}");
+    }
+
+    #[test]
+    fn kv_records_sum_deltas_and_replace_gauges() {
+        let m = Metrics::new();
+        let r = m.snapshot();
+        assert_eq!(r.kv_lookups, 0);
+        assert!(r.kv_prefix_hit_rate().is_nan(), "off = never probed");
+        // Worker 0 syncs twice: counters accumulate, gauges replace.
+        m.record_kv(0, KvRecord {
+            lookups: 2, prefix_probe_tokens: 40, prefix_hit_tokens: 16,
+            prefill_tokens_saved: 16, memory_shed: 0, reap_reclaimed_pages: 0,
+            occupancy: [[6, 6, 32], [2, 2, 8]],
+        });
+        m.record_kv(0, KvRecord {
+            lookups: 1, prefix_probe_tokens: 10, prefix_hit_tokens: 4,
+            prefill_tokens_saved: 4, memory_shed: 1, reap_reclaimed_pages: 8,
+            occupancy: [[4, 8, 32], [1, 3, 8]],
+        });
+        // Worker 1's gauges sum with worker 0's latest.
+        m.record_kv(1, KvRecord {
+            lookups: 1, prefix_probe_tokens: 5, prefix_hit_tokens: 0,
+            prefill_tokens_saved: 0, memory_shed: 0, reap_reclaimed_pages: 0,
+            occupancy: [[2, 2, 32], [0, 0, 8]],
+        });
+        let r = m.snapshot();
+        assert_eq!(r.kv_lookups, 4);
+        assert_eq!(r.kv_prefill_tokens_saved, 20);
+        assert_eq!(r.kv_memory_shed, 1);
+        assert_eq!(r.kv_reap_reclaimed_pages, 8);
+        assert!((r.kv_prefix_hit_rate() - 20.0 / 55.0).abs() < 1e-12);
+        assert_eq!(r.kv_pages_used, [6, 1]);
+        assert_eq!(r.kv_pages_peak, [10, 3]);
+        assert_eq!(r.kv_pages_capacity, [64, 16]);
+        let s = r.render(1.0);
+        assert!(s.contains("prefill_tokens_saved=20"), "{s}");
+        assert!(s.contains("cpu used=6 peak=10 cap=64"), "{s}");
     }
 
     #[test]

@@ -224,7 +224,10 @@ impl Engine {
     pub fn bucket_for(&self, len: usize) -> anyhow::Result<usize> {
         self.manifest.bucket_for(len).ok_or_else(|| {
             anyhow::anyhow!(
-                "sequence length {len} exceeds the largest bucket {}",
+                "requested sequence length {len} does not fit any compiled \
+                 seq bucket (manifest has {:?}; largest is {}) — re-run the \
+                 AOT build with a bucket ≥ {len} or shorten the request",
+                self.manifest.seq_buckets,
                 self.manifest.largest_bucket()
             )
         })

@@ -412,6 +412,25 @@ fn metrics_json(coordinator: &Coordinator, start_wall: std::time::Instant) -> Js
     .set("calibration_obs", (r.calibration_obs as usize).into())
     .set("calibration_tracked_keys", calib.tracked_keys.into())
     .set("calibration_fitted_keys", calib.fitted_keys.into());
+    // Paged-KV-cache state (all-zero when `kv_cache: off`): prefix-trie
+    // effectiveness, admission sheds, and per-PU page-pool occupancy.
+    j.set("kv_lookups", (r.kv_lookups as usize).into())
+        .set("kv_prefix_hit_rate", r.kv_prefix_hit_rate().into())
+        .set(
+            "kv_prefill_tokens_saved",
+            (r.kv_prefill_tokens_saved as usize).into(),
+        )
+        .set("kv_memory_shed", (r.kv_memory_shed as usize).into())
+        .set(
+            "kv_reap_reclaimed_pages",
+            (r.kv_reap_reclaimed_pages as usize).into(),
+        )
+        .set("kv_pages_used_cpu", (r.kv_pages_used[0] as usize).into())
+        .set("kv_pages_used_gpu", (r.kv_pages_used[1] as usize).into())
+        .set("kv_pages_peak_cpu", (r.kv_pages_peak[0] as usize).into())
+        .set("kv_pages_peak_gpu", (r.kv_pages_peak[1] as usize).into())
+        .set("kv_pages_cap_cpu", (r.kv_pages_capacity[0] as usize).into())
+        .set("kv_pages_cap_gpu", (r.kv_pages_capacity[1] as usize).into());
     j
 }
 

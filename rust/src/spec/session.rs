@@ -34,7 +34,7 @@ use crate::api::FinishReason;
 use crate::config::{ExecMode, KernelPath};
 use crate::costmodel::TreeShape;
 use crate::hetero::{LatencyModel, Mapping, PuAssignment, PuRoute};
-use crate::models::VariantKey;
+use crate::models::{Role, VariantKey};
 use crate::runtime::{Engine, ForwardOut, MonoStepOut};
 use crate::tokenizer::EOS_ID;
 use crate::util::rng::Rng;
@@ -112,6 +112,14 @@ pub struct EngineRequest {
     /// timeline executor charges the dispatch here; requests routed to
     /// different PUs can proceed concurrently.
     pub route: PuRoute,
+    /// Tokens of the planned variant's prefix whose KV is already resident
+    /// for this session (`kv_cache: on` only; always 0 when the cache is
+    /// off). Executors price the dispatch incrementally when this is
+    /// non-zero — compute for the new fraction plus the DRAM re-read term
+    /// ([`LatencyModel::incremental_lane_cost`]) — and fall through to the
+    /// historical full-forward pricing when it is 0, so the off mode never
+    /// touches the new arithmetic.
+    pub kv_cached: usize,
 }
 
 /// Fusion key: requests with equal keys can share one batched dispatch.
@@ -391,6 +399,16 @@ pub struct DecodeSession {
     /// Token-id stop sequences: the session finishes — and truncates the
     /// matched suffix — when the generated output ends with any of these.
     stop_seqs: Vec<Vec<u32>>,
+    /// Per-role resident-KV extent, indexed [drafter, target]: how many
+    /// leading positions of `ids` each role has valid cached K/V for.
+    /// `None` = `kv_cache: off` — every plan stamps `kv_cached: 0` and no
+    /// incremental pricing path is ever taken. Seeded by
+    /// [`set_kv_prefix`](Self::set_kv_prefix) at admission (the shared
+    /// prompt prefix), grown as the round's forwards compute fresh KV, and
+    /// clamped back to the committed extent after each verify (KV computed
+    /// for rejected drafts — and for the correction position, whose token
+    /// changed — is invalid).
+    kv: Option<[usize; 2]>,
 }
 
 impl DecodeSession {
@@ -429,6 +447,7 @@ impl DecodeSession {
             temperature: 1.0,
             stop_tokens: Vec::new(),
             stop_seqs: Vec::new(),
+            kv: None,
         }
     }
 
@@ -538,6 +557,78 @@ impl DecodeSession {
         self.stop_seqs.retain(|s| !s.is_empty());
     }
 
+    /// Enable KV-cache accounting for this session, seeding both roles'
+    /// resident extent with the `shared` prompt-prefix tokens the cache
+    /// manager matched at admission (0 = enabled but cold). Never calling
+    /// this (`kv_cache: off`) keeps every plan at `kv_cached: 0` and the
+    /// session bit-identical to the historical engine.
+    pub fn set_kv_prefix(&mut self, shared: usize) {
+        let shared = shared.min(self.ids.len());
+        self.kv = Some([shared; 2]);
+    }
+
+    /// Per-role resident-KV extents `[drafter, target]` (`None` = cache
+    /// accounting off). Test/metrics surface.
+    pub fn kv_resident(&self) -> Option<[usize; 2]> {
+        self.kv
+    }
+
+    /// Resident tokens usable by a `role` forward whose input prefix is
+    /// `len` tokens: the role's extent, clamped to the prefix.
+    fn kv_cached_for(&self, role: Role, len: usize) -> usize {
+        match self.kv {
+            Some(c) => c[Self::kv_role_index(role)].min(len),
+            None => 0,
+        }
+    }
+
+    fn kv_role_index(role: Role) -> usize {
+        match role {
+            Role::Drafter => 0,
+            Role::Target => 1,
+        }
+    }
+
+    /// A `role` forward just computed KV for the first `len` positions.
+    fn note_kv_computed(&mut self, role: Role, len: usize) {
+        if let Some(c) = &mut self.kv {
+            let i = Self::kv_role_index(role);
+            c[i] = c[i].max(len);
+        }
+    }
+
+    /// Invalidate resident KV beyond `len` committed positions (rejected
+    /// drafts and the correction position were computed with tokens that
+    /// are no longer in `ids`).
+    fn clamp_kv(&mut self, len: usize) {
+        if let Some(c) = &mut self.kv {
+            for x in c.iter_mut() {
+                *x = (*x).min(len);
+            }
+        }
+    }
+
+    /// Resident tokens the *pending* plan's dispatch can reuse — what
+    /// `plan` stamps on the request and the executors price with. Derived
+    /// from the live phase so plan-time stamps and execute-time pricing
+    /// can never disagree.
+    fn kv_cached_for_pending(&self, kind: &RequestKind) -> usize {
+        match (kind, &self.phase) {
+            (RequestKind::Forward { variant, .. }, _) => {
+                self.kv_cached_for(variant.role, self.ids.len())
+            }
+            // Tree lanes share the session's base prefix; per-lane path
+            // tokens are fresh every round.
+            (RequestKind::TreeForward { variant, .. }, RoundPhase::TreeDrafting(st))
+            | (RequestKind::TreeForward { variant, .. }, RoundPhase::TreeVerifying(st)) => {
+                self.kv_cached_for(variant.role, st.base_len)
+            }
+            // Monolithic spec-steps run the fused graph end-to-end; the
+            // paged cache never prices them incrementally.
+            _ => 0,
+        }
+    }
+
     /// Re-decide speculation for the next round (round-level policy hook).
     pub fn set_speculative(&mut self, on: bool) {
         self.speculative = on;
@@ -627,7 +718,8 @@ impl DecodeSession {
                 // Route resolution lives behind the decision API: the one
                 // mapping → PU-route rule shared by every session.
                 let route = crate::decision::resolve_route(self.setup.mapping, &kind);
-                SessionPlan::Need(EngineRequest { kind, tokens: self.ids.clone(), route })
+                let kv_cached = self.kv_cached_for_pending(&kind);
+                SessionPlan::Need(EngineRequest { kind, tokens: self.ids.clone(), route, kv_cached })
             }
         })
     }
@@ -742,6 +834,7 @@ impl DecodeSession {
                 self.out.real_s += r.real_s;
                 self.out.sim_s += r.sim_s;
                 self.out.target_calls += 1;
+                self.note_kv_computed(Role::Target, self.ids.len());
                 let nxt = r.fwd.argmax(r.row, self.ids.len() - 1);
                 if let Some(reason) = self.push_committed(nxt) {
                     self.out.finish = reason;
@@ -755,6 +848,7 @@ impl DecodeSession {
                 self.out.sim_s += r.sim_s;
                 self.out.drafter_calls += 1;
                 let cur = self.ids.len();
+                self.note_kv_computed(Role::Drafter, cur);
                 let tok = r.fwd.argmax(r.row, cur - 1);
                 if self.setup.rule == AcceptRule::Stochastic {
                     let mut p = r.fwd.probs(r.row, cur - 1);
@@ -807,7 +901,12 @@ impl DecodeSession {
                 self.out.n_accepted += n_acc;
 
                 // Roll back unaccepted drafts, then commit accepted +
-                // correction.
+                // correction. Resident KV follows: the verify computed the
+                // whole window, but only the accepted extent stays valid
+                // (rejected drafts and the correction position were
+                // computed with tokens no longer in `ids`).
+                self.note_kv_computed(Role::Target, st.base_len + st.g);
+                self.clamp_kv(st.base_len + n_acc);
                 self.ids.truncate(st.base_len);
                 self.done = self.commit_round(&st.drafted[..n_acc], correction);
                 Ok(StepProgress::Round(self.round_outcome()))
@@ -817,6 +916,9 @@ impl DecodeSession {
                 self.out.real_s += r.real_s;
                 self.out.sim_s += r.sim_s;
                 self.out.drafter_calls += 1;
+                // Every lane recomputes the shared base prefix; the
+                // per-lane path tokens are round-local, never resident.
+                self.note_kv_computed(Role::Drafter, st.base_len);
                 anyhow::ensure!(r.row == 0, "a tree dispatch owns its whole batch");
                 let j = st.levels.len();
                 let lanes = st.next_draft_lanes();
@@ -876,6 +978,11 @@ impl DecodeSession {
 
                 let (path, correction) = self.tree_walk(&st, r.fwd);
                 self.out.n_accepted += path.len();
+                // The verify lanes computed base + full-depth paths; only
+                // the base + accepted-path extent stays valid (the
+                // accepted leaf's lane prefix is exactly that sequence).
+                self.note_kv_computed(Role::Target, st.base_len + path.len());
+                self.clamp_kv(st.base_len + path.len());
                 // ids never held the drafts (lanes are built off-line), so
                 // there is nothing to roll back before committing.
                 self.done = self.commit_round(&path, correction);
@@ -940,7 +1047,16 @@ impl DecodeSession {
                 let fwd = engine.forward(variant, kernel, &self.ids, bucket)?;
                 let spec = engine.manifest.model_for(variant)?;
                 let pu = self.role_pu(variant.role);
-                let sim_s = self.lat.forward_latency(spec, variant.scheme, pu, bucket);
+                // Cache-off and cache-cold dispatches take the historical
+                // pricing path — `kv_cache: off` stays bit-identical by
+                // never entering the incremental arithmetic.
+                let cached = self.kv_cached_for(variant.role, self.ids.len());
+                let sim_s = if cached > 0 {
+                    self.lat
+                        .incremental_forward_latency(spec, variant.scheme, pu, bucket, cached)
+                } else {
+                    self.lat.forward_latency(spec, variant.scheme, pu, bucket)
+                };
                 let real_s = fwd.elapsed_s;
                 self.apply(
                     engine,
@@ -956,6 +1072,9 @@ impl DecodeSession {
                 anyhow::ensure!(seqs.len() == lanes, "tree lane count drifted");
                 let spec = engine.manifest.model_for(variant)?;
                 let pu = self.role_pu(variant.role);
+                // Every tree lane shares the session's resident base
+                // prefix; 0 when the cache is off/cold (historical path).
+                let cached = self.kv_cached_for_pending(&kind);
 
                 // Chunk the lanes over the compiled batch sizes (smallest
                 // compiled size that fits the remainder; largest on
@@ -993,13 +1112,28 @@ impl DecodeSession {
                     };
                     match batched {
                         Some(fwd) => {
-                            sim_s += self.lat.batched_forward_latency(
-                                spec,
-                                variant.scheme,
-                                pu,
-                                bucket,
-                                exec_b,
-                            );
+                            sim_s += if cached > 0 {
+                                // Per-lane incremental compute (each lane
+                                // reuses the resident base prefix), one
+                                // dispatch boundary for the chunk.
+                                self.lat.dispatch_overhead(pu)
+                                    + exec_b as f64
+                                        * self.lat.incremental_lane_cost(
+                                            spec,
+                                            variant.scheme,
+                                            pu,
+                                            bucket,
+                                            cached,
+                                        )
+                            } else {
+                                self.lat.batched_forward_latency(
+                                    spec,
+                                    variant.scheme,
+                                    pu,
+                                    bucket,
+                                    exec_b,
+                                )
+                            };
                             real_s += fwd.elapsed_s;
                             logits.extend_from_slice(&fwd.logits[..m * bucket * fwd.vocab]);
                             executed += exec_b;
@@ -1010,8 +1144,17 @@ impl DecodeSession {
                         None => {
                             for s in &seqs[off..off + m] {
                                 let fwd = engine.forward(variant, kernel, s, bucket)?;
-                                sim_s +=
-                                    self.lat.forward_latency(spec, variant.scheme, pu, bucket);
+                                sim_s += if cached > 0 {
+                                    self.lat.incremental_forward_latency(
+                                        spec,
+                                        variant.scheme,
+                                        pu,
+                                        bucket,
+                                        cached,
+                                    )
+                                } else {
+                                    self.lat.forward_latency(spec, variant.scheme, pu, bucket)
+                                };
                                 real_s += fwd.elapsed_s;
                                 logits.extend_from_slice(&fwd.logits);
                                 executed += 1;
@@ -1240,6 +1383,29 @@ mod tests {
     // The commit/cap/EOS edge-case coverage lives in
     // rust/tests/session_edge.rs (driven through the public surface);
     // plan/apply round equivalence against step() in rust/tests/fused_e2e.rs.
+
+    #[test]
+    fn kv_prefix_seeds_both_roles_and_is_clamped_to_the_prompt() {
+        let mut s = session(8);
+        assert_eq!(s.kv_resident(), None);
+        let fwd = RequestKind::Forward {
+            variant: s.setup.target,
+            kernel: s.setup.kernel,
+            bucket: 64,
+        };
+        // No seeded prefix: every dispatch is priced cold.
+        assert_eq!(s.kv_cached_for_pending(&fwd), 0);
+        // Prompt is 3 tokens; a claimed 100-token prefix clamps to 3.
+        s.set_kv_prefix(100);
+        assert_eq!(s.kv_resident(), Some([3, 3]));
+        assert_eq!(s.kv_cached_for_pending(&fwd), 3);
+        // Verification clamps residency back to the accepted extent.
+        s.note_kv_computed(Role::Target, 7);
+        s.clamp_kv(4);
+        assert_eq!(s.kv_resident(), Some([3, 4]));
+        // Mono steps run the fused graph end-to-end: never incremental.
+        assert_eq!(s.kv_cached_for_pending(&RequestKind::MonoStep { gamma: 4 }), 0);
+    }
 
     #[test]
     fn round_policy_hooks_update_next_round() {

@@ -10,7 +10,7 @@
 //! * the coordinator's fused serving path matches `max_inflight = 1`;
 //! * the lockstep batcher reference charges the executed batch size.
 
-use specedge::config::{DecisionMode, ExecMode, KernelPath, RunConfig, TreeChoice};
+use specedge::config::{DecisionMode, ExecMode, KernelPath, KvCacheMode, RunConfig, TreeChoice};
 use specedge::coordinator::fuser::{self, TickEvent};
 use specedge::costmodel::TreeShape;
 use specedge::coordinator::{batcher, Coordinator};
@@ -389,6 +389,73 @@ fn tree_width_one_reproduces_chain_serving_across_decision_modes() {
             "{decision:?}: 1-wide shape must never run tree rounds"
         );
     }
+}
+
+// ---- paged KV cache A/B parity ------------------------------------------
+
+/// `kv_cache: on` only changes *pricing*, never decoding: the coordinator
+/// serves byte-identical token streams with the cache off (the default —
+/// the historical engine) and on, under both decision models, while the
+/// cache-on run provably routes admissions through the KV manager and the
+/// stock pools never shed.
+#[test]
+fn kv_cache_on_serves_identical_token_streams_across_decision_modes() {
+    if !Path::new("artifacts/manifest.json").exists() {
+        eprintln!("SKIP: artifacts missing (run `make artifacts`)");
+        return;
+    }
+    for decision in [DecisionMode::Analytic, DecisionMode::Calibrated] {
+        let off_cfg = RunConfig { decision, ..coord_cfg(4) };
+        let on_cfg = RunConfig {
+            decision,
+            kv_cache: KvCacheMode::On,
+            ..coord_cfg(4)
+        };
+        let (off_tokens, off_report) = run_coord_with(off_cfg, 6);
+        let (on_tokens, on_report) = run_coord_with(on_cfg, 6);
+        assert_eq!(
+            on_tokens, off_tokens,
+            "{decision:?}: kv_cache on changed the token streams"
+        );
+        assert_eq!(
+            off_report.kv_lookups, 0,
+            "{decision:?}: cache-off run touched the KV manager"
+        );
+        assert_eq!(on_report.kv_lookups, 6, "{decision:?}: one probe per admission");
+        assert_eq!(on_report.kv_memory_shed, 0, "{decision:?}: stock pools shed");
+        assert_eq!(on_report.tokens_out, off_report.tokens_out);
+        // The gauges saw real occupancy somewhere, within capacity.
+        let peak: u64 = on_report.kv_pages_peak.iter().sum();
+        assert!(peak > 0, "{decision:?}: no pages ever allocated");
+        for pu in 0..2 {
+            assert!(on_report.kv_pages_peak[pu] <= on_report.kv_pages_capacity[pu]);
+        }
+    }
+}
+
+/// Same pin with tree speculation live: a branching `2x2` tree fleet
+/// decodes the same greedy streams with the cache on as off, and still
+/// runs real multi-lane tree rounds.
+#[test]
+fn kv_cache_on_matches_off_under_tree_speculation() {
+    if !Path::new("artifacts/manifest.json").exists() {
+        eprintln!("SKIP: artifacts missing (run `make artifacts`)");
+        return;
+    }
+    let shape = TreeShape::new(2, 2);
+    let off_cfg = RunConfig { tree: TreeChoice::Fixed(shape), ..coord_cfg(4) };
+    let on_cfg = RunConfig {
+        tree: TreeChoice::Fixed(shape),
+        kv_cache: KvCacheMode::On,
+        ..coord_cfg(4)
+    };
+    let (off_tokens, off_report) = run_coord_with(off_cfg, 4);
+    let (on_tokens, on_report) = run_coord_with(on_cfg, 4);
+    assert_eq!(on_tokens, off_tokens, "kv_cache on diverged under tree speculation");
+    assert_eq!(on_report.tree_rounds, off_report.tree_rounds);
+    assert!(on_report.tree_rounds > 0, "tree config ran no tree rounds");
+    assert_eq!(on_report.kv_lookups, 4);
+    assert_eq!(on_report.kv_memory_shed, 0);
 }
 
 // ---- lockstep batcher reference accounting ------------------------------

@@ -252,6 +252,104 @@ fn priority_jumps_earlier_low_priority_arrivals() {
     }
 }
 
+#[test]
+fn kv_pages_shed_under_pressure_and_are_reusable_after_cancel() {
+    if !have_artifacts() {
+        return;
+    }
+    use specedge::config::KvCacheMode;
+    use specedge::models::VariantKey;
+
+    let kv_cfg = || RunConfig {
+        kv_cache: KvCacheMode::On,
+        max_inflight: 2,
+        ..cfg()
+    };
+    // Same token count as LONG_PROMPT (char-for-char swaps in the first
+    // chunk), so every request reserves the identical page budget while
+    // sharing no prefix.
+    let p1 = prompt(LONG_PROMPT);
+    let p2 = prompt("tr: nugat nugat peni ture buda ture hevboco curih ture milori");
+    let p3 = prompt("tr: bilop bilop peni ture buda ture hevboco curih ture milori");
+    assert_eq!(p1.len(), p2.len());
+    assert_eq!(p1.len(), p3.len());
+
+    // Discover the mapping admissions receive, then size the page pools
+    // to hold exactly one session's reservation under it.
+    let probe = Coordinator::start(kv_cfg(), Platform::imx95()).unwrap();
+    let mapping = probe.policy.current_mapping();
+    probe.shutdown();
+
+    let engine = specedge::runtime::Engine::load(Path::new("artifacts")).unwrap();
+    let d_key = VariantKey::parse("drafter_fp").unwrap();
+    let t_key = VariantKey::parse("target_w8a8").unwrap();
+    let d_spec = engine.manifest.model_for(d_key).unwrap().clone();
+    let t_spec = engine.manifest.model_for(t_key).unwrap().clone();
+    let mut platform = Platform::imx95();
+    let layout = specedge::kvcache::KvManager::new(
+        &platform.memory,
+        (&d_spec, d_key.scheme),
+        (&t_spec, t_key.scheme),
+    )
+    .layout();
+    let need = layout.chunks(p1.len() + kv_cfg().max_new_tokens);
+    let mut demand = [0usize; 2];
+    demand[mapping.drafter.id().index()] += need;
+    demand[mapping.target.id().index()] += need;
+    platform.memory.kv_pages_cpu = demand[0];
+    platform.memory.kv_pages_gpu = demand[1];
+
+    let coord = Coordinator::start(kv_cfg(), platform).unwrap();
+    let metrics = Arc::clone(&coord.metrics);
+
+    // The blocker takes the whole pool; wait for its first frame so it is
+    // provably admitted and mid-decode.
+    let blocker =
+        coord.submit(GenerationRequest::new(1, "translate", p1).with_options(GenOptions::default()));
+    let first = blocker.frames().next().expect("first frame");
+    assert!(!first.done);
+
+    // Second session: no free pages, the blocker's nodes are referenced
+    // (unevictable), so admission must shed with a typed rejection.
+    let starved =
+        coord.submit(GenerationRequest::new(2, "translate", p2).with_options(GenOptions::default()));
+    let r2 = starved.wait().unwrap();
+    assert_eq!(r2.finish, FinishReason::Rejected, "{r2:?}");
+    assert!(r2.tokens.is_empty() && r2.rounds == 0, "{r2:?}");
+
+    // Cancel the blocker: the reap must release its pages immediately
+    // (private pages AND its now-unreferenced prefix nodes).
+    blocker.cancel();
+    let r1 = blocker.wait().unwrap();
+    assert_eq!(r1.finish, FinishReason::Cancelled);
+
+    // The freed pool admits a fresh session that decodes to completion.
+    let third =
+        coord.submit(GenerationRequest::new(3, "translate", p3).with_options(GenOptions::default()));
+    let r3 = third.wait().unwrap();
+    coord.shutdown();
+    assert!(
+        !r3.tokens.is_empty() && r3.rounds >= 1,
+        "post-reap admission must decode normally: {r3:?}"
+    );
+    assert_ne!(r3.finish, FinishReason::Rejected);
+
+    let report = metrics.snapshot();
+    assert_eq!(report.finish_count(FinishReason::Rejected), 1);
+    assert!(report.kv_memory_shed >= 1, "shed not counted: {report:?}");
+    assert!(
+        report.kv_reap_reclaimed_pages > 0,
+        "cancel reap reclaimed no pages: {report:?}"
+    );
+    assert!(report.kv_lookups >= 3);
+    // Occupancy gauges stay within the configured pools.
+    for pu in 0..2 {
+        assert!(report.kv_pages_used[pu] <= report.kv_pages_capacity[pu]);
+        assert!(report.kv_pages_peak[pu] <= report.kv_pages_capacity[pu]);
+        assert_eq!(report.kv_pages_capacity[pu], demand[pu] as u64);
+    }
+}
+
 // ---------------------------------------------------------------------
 // Wire-protocol tests.
 // ---------------------------------------------------------------------

@@ -4,8 +4,9 @@
 
 use specedge::costmodel;
 use specedge::coordinator::queue::{QueueItem, RequestQueue};
-use specedge::hetero::{LatencyModel, Mapping, Platform, PuAssignment};
-use specedge::models::{ModelSpec, Scheme};
+use specedge::hetero::{LatencyModel, Mapping, Platform, PuAssignment, PuId};
+use specedge::kvcache::{NodeId, PageAllocator, PageId, PrefixCache};
+use specedge::models::{ModelSpec, Role, Scheme};
 use specedge::spec::sampling::{
     greedy_accept_len, stochastic_accept, top1, top_k_into, tree_verify_node, NodeVerdict,
 };
@@ -373,6 +374,155 @@ fn prop_rng_shuffle_uniform_enough() {
         let frac = c as f64 / n as f64;
         assert!((frac - 0.2).abs() < 0.02, "{counts:?}");
     }
+}
+
+// ---------- paged KV cache properties -----------------------------------
+
+#[test]
+fn prop_page_allocator_conserves_pages() {
+    // Under any interleaving of all-or-nothing allocs and releases:
+    // used + available == capacity, no page id is handed out twice, a
+    // refusal really meant the pool was short, and a drained pool returns
+    // to full capacity (double frees stay loud errors, not corruption).
+    forall("allocator conservation", 200, |rng, _| {
+        let cap = [1 + rng.below(24), rng.below(16)];
+        let mut a = PageAllocator::new(cap[0], cap[1]);
+        let mut held: [Vec<PageId>; 2] = [Vec::new(), Vec::new()];
+        for _ in 0..60 {
+            let pu = if rng.f64() < 0.5 { PuId::Cpu } else { PuId::Gpu };
+            let i = pu.index();
+            if rng.f64() < 0.55 {
+                let n = rng.below(5);
+                match a.alloc(pu, n) {
+                    Some(pages) => {
+                        assert_eq!(pages.len(), n);
+                        held[i].extend(pages);
+                    }
+                    None => assert!(
+                        a.available(pu) < n,
+                        "refused a satisfiable {n}-page request"
+                    ),
+                }
+            } else if !held[i].is_empty() {
+                let k = 1 + rng.below(held[i].len());
+                let give: Vec<PageId> = held[i].split_off(held[i].len() - k);
+                a.release(pu, &give).unwrap();
+            }
+            for (pu, slot) in [(PuId::Cpu, 0), (PuId::Gpu, 1)] {
+                assert_eq!(a.used(pu), held[slot].len());
+                assert_eq!(a.used(pu) + a.available(pu), cap[slot]);
+                assert!(a.peak(pu) <= cap[slot]);
+                let mut ids = held[slot].clone();
+                ids.sort_unstable();
+                ids.dedup();
+                assert_eq!(ids.len(), held[slot].len(), "duplicate page handed out");
+            }
+        }
+        a.release(PuId::Cpu, &held[0]).unwrap();
+        a.release(PuId::Gpu, &held[1]).unwrap();
+        assert_eq!(a.available(PuId::Cpu), cap[0]);
+        assert_eq!(a.available(PuId::Gpu), cap[1]);
+        if !held[0].is_empty() {
+            assert!(a.release(PuId::Cpu, &held[0][..1]).is_err(), "double free accepted");
+            assert_eq!(a.available(PuId::Cpu), cap[0]);
+        }
+    });
+}
+
+#[test]
+fn prop_prefix_trie_refcounts_and_page_conservation() {
+    // Interleaved admissions (attach + insert of the unmatched tail) and
+    // detaches over a 2-symbol alphabet (maximal prefix collisions). At
+    // every step: each node's refcount equals the number of live session
+    // paths holding it, and every allocated page is owned by exactly one
+    // trie node. Draining all sessions and evicting to empty returns every
+    // page to the pools.
+    forall("trie refcounts + conservation", 100, |rng, _| {
+        let chunk = 1 + rng.below(4);
+        let mut c = PrefixCache::new(chunk);
+        let mut a = PageAllocator::new(256, 256);
+        let m = if rng.f64() < 0.5 {
+            Mapping::heterogeneous(1)
+        } else {
+            Mapping::homogeneous(2)
+        };
+        let mut paths: Vec<Vec<NodeId>> = Vec::new();
+        let mut created: Vec<NodeId> = Vec::new();
+        for _ in 0..40 {
+            if rng.f64() < 0.6 || paths.is_empty() {
+                // Admit: match what we can, insert the unmatched remainder.
+                let len = chunk * (1 + rng.below(3)) + rng.below(chunk);
+                let toks: Vec<u32> = (0..len).map(|_| rng.below(2) as u32).collect();
+                let hit = c.attach(&toks, m);
+                let mut path = hit.path.clone();
+                let mut parent = path.last().copied();
+                for ch in toks[hit.tokens..].chunks_exact(chunk) {
+                    let d = a.alloc(m.drafter.id(), 1).unwrap()[0];
+                    let t = a.alloc(m.target.id(), 1).unwrap()[0];
+                    let id = c.insert(parent, ch, m, d, t);
+                    created.push(id);
+                    path.push(id);
+                    parent = Some(id);
+                }
+                paths.push(path);
+            } else {
+                let k = rng.below(paths.len());
+                let path = paths.swap_remove(k);
+                c.detach(&path);
+            }
+            for pu in [PuId::Cpu, PuId::Gpu] {
+                assert_eq!(a.used(pu), c.pages_held(pu), "page leaked or double-owned");
+            }
+            for &id in &created {
+                let expect = paths.iter().filter(|p| p.contains(&id)).count();
+                assert_eq!(c.refs(id), expect, "refcount drift on node {id}");
+            }
+        }
+        for p in paths.drain(..) {
+            c.detach(&p);
+        }
+        while c.evict_one(&mut a).unwrap().is_some() {}
+        assert!(c.is_empty());
+        assert_eq!(a.used(PuId::Cpu), 0);
+        assert_eq!(a.used(PuId::Gpu), 0);
+    });
+}
+
+#[test]
+fn prop_cow_copies_iff_shared_and_never_mutates_the_node() {
+    // cow_page hands the writer a private copy exactly when the node is
+    // shared (refs > 1), and the node's own page pair is never replaced —
+    // a later reader through the shared prefix still sees the original.
+    forall("cow shared-page safety", 200, |rng, _| {
+        let mut c = PrefixCache::new(2);
+        let mut a = PageAllocator::new(16, 16);
+        let m = Mapping::heterogeneous(1);
+        let d = a.alloc(m.drafter.id(), 1).unwrap()[0];
+        let t = a.alloc(m.target.id(), 1).unwrap()[0];
+        let root = c.insert(None, &[7, 7], m, d, t);
+        let extra = rng.below(4);
+        let mut paths = Vec::new();
+        for _ in 0..extra {
+            paths.push(c.attach(&[7, 7], m).path);
+        }
+        let role = if rng.f64() < 0.5 { Role::Drafter } else { Role::Target };
+        let before = c.pages(root);
+        let own = match role {
+            Role::Drafter => before.0,
+            Role::Target => before.1,
+        };
+        let (page, copied) = c.cow_page(root, role, &mut a).unwrap();
+        assert_eq!(copied, extra >= 1, "copied must track sharing (refs {})", 1 + extra);
+        assert_eq!(c.pages(root), before, "COW replaced a node page");
+        if copied {
+            assert_ne!(page, own, "writer got the shared page");
+        } else {
+            assert_eq!(page, own);
+        }
+        for p in paths {
+            c.detach(&p);
+        }
+    });
 }
 
 #[test]

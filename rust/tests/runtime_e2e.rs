@@ -236,7 +236,13 @@ fn stochastic_rule_runs_and_accounts() {
 fn oversized_prompt_rejected() {
     let Some(engine) = engine() else { return };
     let tokens: Vec<u32> = vec![5; 200]; // > largest bucket (128)
-    assert!(engine.bucket_for(tokens.len()).is_err());
+    let err = engine.bucket_for(tokens.len()).unwrap_err().to_string();
+    // The error is actionable: it names the requested length and lists
+    // the manifest's compiled buckets.
+    assert!(err.contains("200"), "{err}");
+    for b in &engine.manifest.seq_buckets {
+        assert!(err.contains(&b.to_string()), "bucket {b} missing: {err}");
+    }
     let v = VariantKey::parse("drafter_fp").unwrap();
     assert!(engine.forward(v, KernelPath::Pallas, &tokens, 128).is_err());
 }
