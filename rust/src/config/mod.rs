@@ -182,6 +182,43 @@ impl KvCacheMode {
     }
 }
 
+/// Per-request verify placement under a fleet's cloud tier (the
+/// `cloud_verify` knob). Only consulted when a fleet file declares a
+/// `cloud` section ([`crate::fleet`]); without one every request verifies
+/// locally and the knob is inert. `auto` (the default) compares the
+/// predicted pipelined cloud-verify round latency against the local round
+/// at the device's live (α, c) per request; `local` / `cloud` pin the
+/// route for A/B runs; `off` disables the cloud tier even when the fleet
+/// file declares one.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CloudVerifyMode {
+    Off,
+    Auto,
+    Local,
+    Cloud,
+}
+
+impl CloudVerifyMode {
+    pub fn parse(s: &str) -> anyhow::Result<CloudVerifyMode> {
+        match s {
+            "off" => Ok(CloudVerifyMode::Off),
+            "auto" => Ok(CloudVerifyMode::Auto),
+            "local" => Ok(CloudVerifyMode::Local),
+            "cloud" => Ok(CloudVerifyMode::Cloud),
+            _ => anyhow::bail!("cloud_verify must be off|auto|local|cloud, got {s:?}"),
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            CloudVerifyMode::Off => "off",
+            CloudVerifyMode::Auto => "auto",
+            CloudVerifyMode::Local => "local",
+            CloudVerifyMode::Cloud => "cloud",
+        }
+    }
+}
+
 /// Complete engine + serving configuration.
 #[derive(Debug, Clone)]
 pub struct RunConfig {
@@ -189,8 +226,16 @@ pub struct RunConfig {
     pub artifacts_dir: PathBuf,
     /// Platform calibration file (None -> built-in i.MX95 defaults).
     pub platform_file: Option<PathBuf>,
+    /// How drafter and target compose: separate compiled modules
+    /// (`modular`) or one fused spec-step graph (`monolithic`). See
+    /// [`ExecMode`].
     pub exec_mode: ExecMode,
+    /// Which clock reported latencies come from: the calibrated simulated
+    /// platform (`simulated`, the default) or the real PJRT wall clock
+    /// (`real`). See [`Timing`].
     pub timing: Timing,
+    /// Kernel lowering baked into the loaded artifacts: `pallas` or the
+    /// pure-jnp `ref` ablation. See [`KernelPath`].
     pub kernel_path: KernelPath,
     /// Draft length; None = let the cost model pick γ* per request.
     pub gamma: Option<usize>,
@@ -255,6 +300,23 @@ pub struct RunConfig {
     /// Paged KV-cache + prefix sharing: `off` (bit-identical historical
     /// engine, the default) or `on`. See [`KvCacheMode`].
     pub kv_cache: KvCacheMode,
+    /// Fleet topology file (JSON: a `devices` array — each with its own
+    /// platform — plus an optional `cloud` tier; see [`crate::fleet`]).
+    /// `None` (the default) serves through the plain single-device
+    /// coordinator exactly as before; when set, `serve` fronts one
+    /// coordinator per device with the fleet placement router.
+    pub fleet_file: Option<PathBuf>,
+    /// Verify placement under a fleet cloud tier: `auto` (predicted
+    /// round-latency choice, the default), `local`/`cloud` (pinned), or
+    /// `off` (ignore the cloud tier). Inert without a fleet file that
+    /// declares a `cloud` section. See [`CloudVerifyMode`].
+    pub cloud_verify: CloudVerifyMode,
+    /// Default cloud-link round-trip time in milliseconds for the fleet
+    /// network model (a fleet file's `cloud.rtt_ms` overrides it).
+    pub cloud_rtt_ms: f64,
+    /// Default cloud-link bandwidth in megabits/second for the fleet
+    /// network model (a fleet file's `cloud.mbps` overrides it).
+    pub cloud_mbps: f64,
     /// Variant key of the drafter model (must name a `drafter_*` variant
     /// present in the artifact manifest).
     pub drafter_variant: String,
@@ -290,6 +352,10 @@ impl Default for RunConfig {
             repartition_every: 64,
             tree: TreeChoice::Off,
             kv_cache: KvCacheMode::Off,
+            fleet_file: None,
+            cloud_verify: CloudVerifyMode::Auto,
+            cloud_rtt_ms: 20.0,
+            cloud_mbps: 100.0,
             drafter_variant: "drafter_fp".to_string(),
             target_variant: "target_w8a8".to_string(),
             seed: 0xC0FFEE,
@@ -375,6 +441,18 @@ impl RunConfig {
         if let Some(v) = j.get("kv_cache").and_then(Json::as_str) {
             self.kv_cache = KvCacheMode::parse(v)?;
         }
+        if let Some(v) = j.get("fleet_file").and_then(Json::as_str) {
+            self.fleet_file = Some(PathBuf::from(v));
+        }
+        if let Some(v) = j.get("cloud_verify").and_then(Json::as_str) {
+            self.cloud_verify = CloudVerifyMode::parse(v)?;
+        }
+        if let Some(v) = j.get("cloud_rtt_ms").and_then(Json::as_f64) {
+            self.cloud_rtt_ms = v;
+        }
+        if let Some(v) = j.get("cloud_mbps").and_then(Json::as_f64) {
+            self.cloud_mbps = v;
+        }
         if let Some(v) = j.get("drafter_variant").and_then(Json::as_str) {
             self.drafter_variant = v.to_string();
         }
@@ -399,6 +477,14 @@ impl RunConfig {
         if let Some(g) = self.gamma {
             anyhow::ensure!((1..=8).contains(&g), "gamma must be 1..=8");
         }
+        anyhow::ensure!(
+            self.cloud_rtt_ms.is_finite() && self.cloud_rtt_ms >= 0.0,
+            "cloud_rtt_ms must be finite and >= 0"
+        );
+        anyhow::ensure!(
+            self.cloud_mbps.is_finite() && self.cloud_mbps > 0.0,
+            "cloud_mbps must be finite and > 0"
+        );
         if let TreeChoice::Fixed(shape) = self.tree {
             anyhow::ensure!(
                 (1..=4).contains(&shape.branching),
@@ -572,6 +658,35 @@ mod tests {
         assert_eq!(c.kv_cache.as_str(), "on");
         let mut c = RunConfig::default();
         assert!(c.apply_json(&Json::parse(r#"{"kv_cache":"paged"}"#).unwrap()).is_err());
+    }
+
+    #[test]
+    fn fleet_knobs_default_and_parse() {
+        let c = RunConfig::default();
+        assert_eq!(c.fleet_file, None);
+        assert_eq!(c.cloud_verify, CloudVerifyMode::Auto);
+        assert!((c.cloud_rtt_ms - 20.0).abs() < 1e-12);
+        assert!((c.cloud_mbps - 100.0).abs() < 1e-12);
+        let mut c = RunConfig::default();
+        let j = Json::parse(
+            r#"{"fleet_file":"configs/fleet.json","cloud_verify":"cloud",
+                "cloud_rtt_ms":5.5,"cloud_mbps":250}"#,
+        )
+        .unwrap();
+        c.apply_json(&j).unwrap();
+        assert_eq!(c.fleet_file, Some(PathBuf::from("configs/fleet.json")));
+        assert_eq!(c.cloud_verify, CloudVerifyMode::Cloud);
+        assert!((c.cloud_rtt_ms - 5.5).abs() < 1e-12);
+        assert!((c.cloud_mbps - 250.0).abs() < 1e-12);
+        assert_eq!(CloudVerifyMode::parse("auto").unwrap().as_str(), "auto");
+        assert_eq!(CloudVerifyMode::parse("local").unwrap(), CloudVerifyMode::Local);
+        assert_eq!(CloudVerifyMode::parse("off").unwrap(), CloudVerifyMode::Off);
+        assert!(CloudVerifyMode::parse("remote").is_err());
+        // Degenerate link parameters fail at config load, not mid-serve.
+        let mut c = RunConfig::default();
+        assert!(c.apply_json(&Json::parse(r#"{"cloud_mbps":0}"#).unwrap()).is_err());
+        let mut c = RunConfig::default();
+        assert!(c.apply_json(&Json::parse(r#"{"cloud_rtt_ms":-1}"#).unwrap()).is_err());
     }
 
     #[test]

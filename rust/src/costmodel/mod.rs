@@ -248,6 +248,64 @@ pub fn predicted_pipeline_speedup(gamma: f64, c: f64) -> f64 {
     (gc + 1.0) / gc.max(1.0)
 }
 
+/// Latency of one *collaborative* (edge-draft / cloud-verify) round.
+///
+/// The edge drafts γ tokens locally (`draft_round_s`, boundaries
+/// included), ships them over the link and waits for the remote verdict
+/// (`remote_round_s` = uplink payload + cloud verify + downlink verdict,
+/// RTT included — see [`crate::fleet::NetworkModel`]). Pipelined (the
+/// deployment the fleet tier models — round r+1's drafting overlaps round
+/// r's ship/verify, PipeSD-style), the steady-state round costs the
+/// *slower* of the two stages; serial execution pays their sum. The
+/// pipelined bound is what the decision layer compares against the local
+/// round when it places a request's verify.
+pub fn collaborative_round_latency(
+    draft_round_s: f64,
+    remote_round_s: f64,
+    pipelined: bool,
+) -> f64 {
+    if pipelined {
+        draft_round_s.max(remote_round_s)
+    } else {
+        draft_round_s + remote_round_s
+    }
+}
+
+/// Result of the collaborative γ search: the draft length minimizing the
+/// pipelined per-token latency `round_s / E[tokens/round]`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CollabChoice {
+    /// Draft length (≥ 1 — a collaborative round with nothing drafted has
+    /// nothing to ship).
+    pub gamma: usize,
+    /// Pipelined steady-state round latency at that γ (seconds).
+    pub round_s: f64,
+    /// `round_s / E[tokens/round]` — the figure compared against the local
+    /// per-token latency.
+    pub per_token_s: f64,
+}
+
+/// γ* search for the collaborative round: `round(γ)` returns the round's
+/// `(draft_round_s, remote_round_s)` pair (both γ-dependent — more drafts
+/// mean more edge compute *and* a bigger shipped payload), and the search
+/// minimizes the pipelined per-token latency over `1..=gamma_max`.
+pub fn optimal_gamma_collaborative(
+    alpha: f64,
+    gamma_max: usize,
+    round: impl Fn(usize) -> (f64, f64),
+) -> CollabChoice {
+    let mut best: Option<CollabChoice> = None;
+    for g in 1..=gamma_max.max(1) {
+        let (draft_s, remote_s) = round(g);
+        let round_s = collaborative_round_latency(draft_s, remote_s, true);
+        let per_token_s = round_s / expected_tokens_per_round(alpha, g);
+        if best.map_or(true, |b| per_token_s < b.per_token_s) {
+            best = Some(CollabChoice { gamma: g, round_s, per_token_s });
+        }
+    }
+    best.expect("gamma_max >= 1 guarantees a candidate")
+}
+
 /// Result of the γ search for one (α, c) operating point.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct GammaChoice {
@@ -405,7 +463,47 @@ mod tests {
     }
 
     #[test]
-    fn tree_shape_parse_and_counts() {
+    fn collaborative_round_pipelined_bound() {
+        // Pipelined = max of the stages; serial = their sum; the pipeline
+        // never loses and hides the smaller stage entirely.
+        assert_eq!(collaborative_round_latency(0.03, 0.01, true), 0.03);
+        assert_eq!(collaborative_round_latency(0.03, 0.01, false), 0.04);
+        assert_eq!(collaborative_round_latency(0.01, 0.05, true), 0.05);
+        for (d, r) in [(0.0, 0.2), (0.1, 0.1), (0.5, 0.02)] {
+            let p = collaborative_round_latency(d, r, true);
+            let s = collaborative_round_latency(d, r, false);
+            assert!(p <= s + 1e-15);
+            assert!(p >= d.max(r) - 1e-15);
+        }
+    }
+
+    #[test]
+    fn collaborative_gamma_search_is_argmin() {
+        // Edge draft step 3 ms/token; remote = 6 ms link floor + 0.5 ms
+        // per shipped token + 2 ms cloud verify.
+        let round = |g: usize| (0.003 * g as f64, 0.006 + 0.0005 * g as f64 + 0.002);
+        for alpha in [0.1, 0.5, 0.9] {
+            let best = optimal_gamma_collaborative(alpha, GAMMA_MAX, round);
+            assert!(best.gamma >= 1 && best.gamma <= GAMMA_MAX);
+            for g in 1..=GAMMA_MAX {
+                let (d, r) = round(g);
+                let per_tok = collaborative_round_latency(d, r, true)
+                    / expected_tokens_per_round(alpha, g);
+                assert!(per_tok >= best.per_token_s - 1e-12, "gamma {g} beats optimum");
+            }
+            assert!(
+                (best.per_token_s
+                    - best.round_s / expected_tokens_per_round(alpha, best.gamma))
+                .abs()
+                    < 1e-15
+            );
+        }
+        // A high-α point drafts deeper than a low-α point: more of the
+        // window survives verification, so the link floor amortizes.
+        let lo = optimal_gamma_collaborative(0.2, GAMMA_MAX, round);
+        let hi = optimal_gamma_collaborative(0.95, GAMMA_MAX, round);
+        assert!(hi.gamma >= lo.gamma, "{} < {}", hi.gamma, lo.gamma);
+    }
         let s = TreeShape::parse("2x3").unwrap();
         assert_eq!(s, TreeShape { branching: 2, depth: 3 });
         assert_eq!(s.label(), "2x3");

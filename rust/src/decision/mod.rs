@@ -57,7 +57,7 @@ pub mod model;
 
 pub use calibrated::{CalibratedModel, CalibrationReport};
 pub use engine::{Policy, RouteDecision, SpecHints};
-pub use model::{resolve_route, CostModel, DispatchObs};
+pub use model::{resolve_route, round_latency, CostModel, DispatchObs};
 
 // The decision layer's other two pillars, re-exported for one-stop use.
 pub use crate::costmodel::{

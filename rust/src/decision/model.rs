@@ -183,6 +183,29 @@ impl CostModel for LatencyModel {
     }
 }
 
+/// Predicted seconds of one *local* modular speculation round under
+/// `mapping`: γ drafter forwards plus one target verification, each with
+/// its dispatch boundary — the quantity the fleet tier compares against
+/// the pipelined cloud-verify round
+/// ([`crate::costmodel::collaborative_round_latency`]) when it places a
+/// request's verify, and the service-time term of its device placement
+/// score. γ = 0 prices one baseline (non-speculative) target step.
+pub fn round_latency(
+    cost: &dyn CostModel,
+    drafter: (&ModelSpec, Scheme),
+    target: (&ModelSpec, Scheme),
+    mapping: Mapping,
+    gamma: usize,
+    seq_len: usize,
+) -> f64 {
+    let draft = if gamma > 0 {
+        gamma as f64 * cost.forward_latency(drafter.0, drafter.1, mapping.drafter, seq_len)
+    } else {
+        0.0
+    };
+    draft + cost.forward_latency(target.0, target.1, mapping.target, seq_len)
+}
+
 /// One executed dispatch, as observed by the executor — the calibration
 /// feed. `duration_s` is the full dispatch duration (all `lanes` executed
 /// lanes, one boundary), `flops` the single-lane FLOPs at `bucket`, so the
@@ -270,6 +293,25 @@ mod tests {
         }
         assert_eq!(as_trait.name(), "analytic");
         assert_eq!(as_trait.platform().name, "imx95-sim");
+    }
+
+    #[test]
+    fn round_latency_is_gamma_drafts_plus_one_verify() {
+        let lat = LatencyModel::new(Platform::imx95());
+        let (d, t) = specs();
+        let m = Mapping::heterogeneous(2);
+        let seq = 64;
+        let draft = lat.forward_latency(&d, Scheme::Fp, m.drafter, seq);
+        let verify = lat.forward_latency(&t, Scheme::W8a8, m.target, seq);
+        for gamma in 0..=6usize {
+            let got = round_latency(&lat, (&d, Scheme::Fp), (&t, Scheme::W8a8), m, gamma, seq);
+            let want = gamma as f64 * draft + verify;
+            assert!((got - want).abs() < 1e-12, "gamma={gamma}: {got} vs {want}");
+        }
+        // Monotone in gamma: each extra draft step costs real time.
+        let r1 = round_latency(&lat, (&d, Scheme::Fp), (&t, Scheme::W8a8), m, 1, seq);
+        let r4 = round_latency(&lat, (&d, Scheme::Fp), (&t, Scheme::W8a8), m, 4, seq);
+        assert!(r4 > r1);
     }
 
     #[test]

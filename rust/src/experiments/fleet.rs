@@ -1,0 +1,331 @@
+//! Multi-device fleet and cloud-edge collaborative speculation
+//! (`experiment fleet`). Four parts, one CSV (`fleet.csv`, tagged by the
+//! `section` column):
+//!
+//! **scale** — the same closed-loop request batch decodes through a
+//! [`FleetRouter`] of 1, 2 and 3 identical devices. Aggregate throughput
+//! (total tokens / fleet makespan, where the fleet makespan is the
+//! *maximum* per-device simulated makespan) must scale *strictly* as
+//! devices are added, and with ≥ 2 devices the placement policy must use
+//! every device.
+//!
+//! **route** — the local-verify vs cloud-verify decision across an α
+//! sweep on two links whose parameters are *derived from the edge model
+//! itself* so the assertions are platform-robust: a fast link
+//! (RTT = edge verify latency / 50, 1 Gbit/s) must produce a **strict
+//! cloud-verify win** at low α (and in fact at every swept α — the
+//! pipelined round `max(draft, rtt + payload/bw + cloud_verify)` beats
+//! `draft + edge_verify` whenever the whole remote leg undercuts the edge
+//! verify forward), and a slow link (RTT = 200× the worst local per-token
+//! latency) must produce a **strict local-verify win** at every α.
+//!
+//! **collab** — a real pipelined collaborative decode
+//! ([`CloudTier::collaborative_replay`]): the session executes the true
+//! draft/verify forwards while the collaborative clock re-prices rounds.
+//! The committed tokens must be **bit-identical** to the plain local
+//! decode of the same prompt (verification is the same computation, only
+//! placed elsewhere), and on the fast link the collaborative clock must
+//! strictly beat the local clock.
+//!
+//! **parity** — a fleet of exactly one device (no cloud tier) serves the
+//! scale batch; its token streams must be bit-identical to a plain
+//! [`Coordinator`] given the same requests, pinning that the routing tier
+//! adds no behavior at N = 1.
+
+use crate::api::GenerationRequest;
+use crate::config::{CloudVerifyMode, ExecMode, KernelPath, RunConfig};
+use crate::coordinator::Coordinator;
+use crate::decision::CostModel;
+use crate::dse::PairConfig;
+use crate::fleet::{CloudTier, FleetRouter, FleetSpec, NetworkModel, VerifyRoute};
+use crate::hetero::Mapping;
+use crate::models::VariantKey;
+use crate::spec::{AcceptRule, DecodeSession, DecoderSetup};
+use crate::tokenizer::SEP_ID;
+
+use super::Ctx;
+
+/// Design variant (CPU cores for the target role).
+const VARIANT: usize = 1;
+/// Fleet sizes the scale sweep walks through.
+const FLEET_SIZES: [usize; 3] = [1, 2, 3];
+/// α points for the verify-routing sweep.
+const ALPHAS: [f64; 5] = [0.05, 0.2, 0.5, 0.8, 0.95];
+/// Operating sequence length for the routing sweep.
+const SEQ: usize = 64;
+
+/// Run the scale batch through a router of `n` devices; returns
+/// (per-request token streams, total tokens, fleet makespan seconds,
+/// requests placed per device).
+fn run_fleet(
+    cfg: &RunConfig,
+    ctx: &Ctx,
+    n: usize,
+    prompts: &[Vec<u32>],
+) -> anyhow::Result<(Vec<Vec<u32>>, usize, f64, Vec<u64>)> {
+    let fleet = FleetRouter::start(cfg, FleetSpec::homogeneous(n, ctx.lat.platform.clone()))?;
+    let mut handles = Vec::new();
+    for (i, p) in prompts.iter().enumerate() {
+        let req = GenerationRequest::new(1 + i as u64, "translate", p.clone());
+        handles.push(fleet.submit(req).handle);
+    }
+    let mut streams = Vec::new();
+    let mut tokens = 0usize;
+    for h in handles {
+        let r = h.wait()?;
+        anyhow::ensure!(
+            !r.tokens.is_empty(),
+            "fleet({n}) request {} produced no tokens (finish {:?})",
+            r.id,
+            r.finish
+        );
+        tokens += r.tokens.len();
+        streams.push(r.tokens);
+    }
+    // Fleet makespan: the slowest device's simulated timeline.
+    let makespan = fleet
+        .devices()
+        .iter()
+        .map(|d| d.coordinator.metrics.snapshot().makespan_s)
+        .fold(0.0f64, f64::max);
+    let placements = fleet.metrics().snapshot().placements;
+    fleet.shutdown();
+    Ok((streams, tokens, makespan, placements))
+}
+
+pub fn run(ctx: &Ctx) -> anyhow::Result<()> {
+    let d_key = VariantKey::parse("drafter_fp").unwrap();
+    let t_key = VariantKey::parse("target_w8a8").unwrap();
+    let pair = PairConfig {
+        target: ctx.engine.manifest.model_for(t_key)?.clone(),
+        target_scheme: t_key.scheme,
+        drafter: ctx.engine.manifest.model_for(d_key)?.clone(),
+        drafter_scheme: d_key.scheme,
+    };
+    let mapping = Mapping::heterogeneous(VARIANT);
+    let edge: &dyn CostModel = &ctx.lat;
+    let drafter = (&pair.drafter, pair.drafter_scheme);
+    let target = (&pair.target, pair.target_scheme);
+
+    let mut csv = String::from(
+        "section,devices,alpha,rtt_ms,mbps,requests,tokens,makespan_s,tok_per_s,\
+         route,local_ms_per_tok,cloud_ms_per_tok,net_ms\n",
+    );
+
+    // ---- scale: aggregate throughput vs device count -------------------
+    // Divisible by every swept fleet size, so a balanced placement makes
+    // the max per-device load — and with it the fleet makespan — strictly
+    // drop at each size step. (`--limit` doesn't shrink this: 6 short
+    // requests already are the smoke-scale batch.)
+    let k: usize = 6;
+    let samples: Vec<_> = ctx
+        .engine
+        .manifest
+        .eval_samples
+        .iter()
+        .filter(|s| s.task == "translate")
+        .cloned()
+        .collect();
+    anyhow::ensure!(!samples.is_empty(), "no translate eval samples in the manifest");
+    let prompts: Vec<Vec<u32>> = (0..k)
+        .map(|i| -> anyhow::Result<Vec<u32>> {
+            let mut p = ctx.tokenizer.encode(&samples[i % samples.len()].prompt, true)?;
+            p.push(SEP_ID);
+            Ok(p)
+        })
+        .collect::<anyhow::Result<_>>()?;
+
+    let mut cfg = ctx.cfg.clone();
+    cfg.workers = 1;
+    cfg.max_inflight = 2;
+    cfg.max_new_tokens = 16;
+    cfg.fleet_file = None;
+
+    println!("Fleet scaling ({k} requests, devices {FLEET_SIZES:?}):");
+    let mut throughputs: Vec<f64> = Vec::new();
+    let mut one_device_streams: Vec<Vec<u32>> = Vec::new();
+    for &n in &FLEET_SIZES {
+        let (streams, tokens, makespan, placements) = run_fleet(&cfg, ctx, n, &prompts)?;
+        anyhow::ensure!(makespan > 0.0, "fleet({n}): zero makespan");
+        let tps = tokens as f64 / makespan;
+        println!(
+            "  {n} device(s): {tokens} tokens  makespan {:.1} ms  {tps:.1} tok/s  \
+             placements {placements:?}",
+            makespan * 1e3
+        );
+        csv.push_str(&format!(
+            "scale,{n},,,,{k},{tokens},{makespan:.6},{tps:.2},,,,\n"
+        ));
+        if n >= 2 {
+            anyhow::ensure!(
+                placements.iter().all(|&p| p > 0),
+                "fleet({n}): placement starved a device ({placements:?})"
+            );
+        }
+        anyhow::ensure!(
+            placements.iter().map(|&p| p as usize).sum::<usize>() == k,
+            "fleet({n}): placements {placements:?} do not sum to {k}"
+        );
+        throughputs.push(tps);
+        if n == 1 {
+            one_device_streams = streams;
+        }
+    }
+    for w in throughputs.windows(2) {
+        anyhow::ensure!(
+            w[1] > w[0],
+            "aggregate throughput did not scale strictly: {throughputs:?}"
+        );
+    }
+
+    // ---- parity: fleet-of-1 is bit-identical to the plain coordinator --
+    let plain = Coordinator::start(cfg.clone(), ctx.lat.platform.clone())?;
+    let mut handles = Vec::new();
+    for (i, p) in prompts.iter().enumerate() {
+        handles.push(plain.submit(GenerationRequest::new(1 + i as u64, "translate", p.clone())));
+    }
+    let mut plain_streams = Vec::new();
+    let mut plain_tokens = 0usize;
+    for h in handles {
+        let r = h.wait()?;
+        plain_tokens += r.tokens.len();
+        plain_streams.push(r.tokens);
+    }
+    plain.shutdown();
+    anyhow::ensure!(
+        plain_streams == one_device_streams,
+        "fleet-of-1 token streams differ from the plain coordinator"
+    );
+    println!("  parity: fleet-of-1 == plain coordinator ({plain_tokens} tokens) OK");
+    csv.push_str(&format!("parity,1,,,,{k},{plain_tokens},,,,,,\n"));
+
+    // ---- route: local vs cloud verify across alpha x link --------------
+    // Link parameters derived from the edge model so the regime
+    // assertions hold on any calibration (see module docs).
+    let edge_verify_s = edge.forward_latency(&pair.target, pair.target_scheme, mapping.target, SEQ);
+    let c = edge.cost_coefficient(drafter, target, mapping, SEQ);
+    anyhow::ensure!(
+        c < 1.0,
+        "drafter is not cheaper than the target (c = {c:.3}); link derivation invalid"
+    );
+    let fast = NetworkModel::from_cfg(edge_verify_s * 1e3 / 50.0, 1000.0);
+    let fast_tier = CloudTier::new(crate::hetero::Platform::cloud(), fast, CloudVerifyMode::Auto);
+    // Precondition for the cloud-win argument: the whole remote leg
+    // undercuts one edge verify forward.
+    let remote_leg = fast_tier.remote_round_s(&pair, crate::costmodel::GAMMA_MAX, SEQ);
+    anyhow::ensure!(
+        remote_leg < edge_verify_s,
+        "fast-link remote leg ({remote_leg:.6}s) not below edge verify ({edge_verify_s:.6}s)"
+    );
+    // Worst local per-token latency over the sweep sizes the slow link.
+    let worst_local = ALPHAS
+        .iter()
+        .map(|&a| {
+            fast_tier
+                .verify_route(edge, &pair, mapping, a, SEQ)
+                .local_per_token_s
+        })
+        .fold(0.0f64, f64::max);
+    let slow = NetworkModel::from_cfg(worst_local * 200.0 * 1e3, 1.0);
+    let slow_tier = CloudTier::new(crate::hetero::Platform::cloud(), slow, CloudVerifyMode::Auto);
+
+    println!(
+        "Verify routing (edge verify {:.2} ms, fast RTT {:.3} ms, slow RTT {:.1} ms):",
+        edge_verify_s * 1e3,
+        fast.rtt_s * 1e3,
+        slow.rtt_s * 1e3
+    );
+    for (link_name, tier) in [("fast", &fast_tier), ("slow", &slow_tier)] {
+        for &alpha in &ALPHAS {
+            let r = tier.verify_route(edge, &pair, mapping, alpha, SEQ);
+            let route = match r.route {
+                VerifyRoute::Cloud => "cloud",
+                VerifyRoute::Local => "local",
+            };
+            println!(
+                "  {link_name} link  alpha={alpha:.2}  -> {route:<5} \
+                 (local {:.2} ms/tok, cloud {:.2} ms/tok)",
+                r.local_per_token_s * 1e3,
+                r.cloud.per_token_s * 1e3
+            );
+            csv.push_str(&format!(
+                "route,,{alpha},{:.4},{:.1},,,,,{route},{:.4},{:.4},\n",
+                tier.net.rtt_s * 1e3,
+                tier.net.bytes_per_s * 8.0 / 1e6,
+                r.local_per_token_s * 1e3,
+                r.cloud.per_token_s * 1e3
+            ));
+            match link_name {
+                "fast" => anyhow::ensure!(
+                    r.route == VerifyRoute::Cloud && r.cloud.per_token_s < r.local_per_token_s,
+                    "fast link at alpha {alpha}: cloud-verify did not strictly win"
+                ),
+                _ => anyhow::ensure!(
+                    r.route == VerifyRoute::Local && r.local_per_token_s < r.cloud.per_token_s,
+                    "slow link at alpha {alpha}: local-verify did not strictly win"
+                ),
+            }
+        }
+    }
+
+    // ---- collab: real pipelined collaborative decode -------------------
+    let setup = DecoderSetup {
+        drafter: d_key,
+        target: t_key,
+        kernel: KernelPath::Pallas,
+        mapping,
+        gamma: 4,
+        rule: AcceptRule::Greedy,
+        exec: ExecMode::Modular,
+        max_new: 16,
+    };
+    let n_collab = prompts.len().min(3);
+    let (mut collab_s, mut local_s, mut net_s, mut collab_tokens) = (0.0f64, 0.0f64, 0.0f64, 0usize);
+    for p in prompts.iter().take(n_collab) {
+        let collab = fast_tier.collaborative_replay(&ctx.engine, &ctx.lat, &pair, setup.clone(), p)?;
+        // The plain local decode of the same prompt.
+        let mut s = DecodeSession::new(&ctx.engine, ctx.lat.clone(), setup.clone(), true, p);
+        while !s.is_done() {
+            s.step(&ctx.engine)?;
+        }
+        let local = s.into_outcome();
+        anyhow::ensure!(
+            collab.tokens == local.tokens,
+            "collaborative decode changed the token stream"
+        );
+        anyhow::ensure!(
+            (collab.local_sim_s - local.sim_s).abs() < 1e-9,
+            "replay local clock ({:.6}) != session clock ({:.6})",
+            collab.local_sim_s,
+            local.sim_s
+        );
+        anyhow::ensure!(
+            collab.collab_sim_s < collab.local_sim_s,
+            "fast-link collaborative clock ({:.4}s) not strictly below local ({:.4}s)",
+            collab.collab_sim_s,
+            collab.local_sim_s
+        );
+        collab_s += collab.collab_sim_s;
+        local_s += collab.local_sim_s;
+        net_s += collab.net_s;
+        collab_tokens += collab.tokens.len();
+    }
+    println!(
+        "Collaborative replay ({n_collab} prompts): local {:.1} ms, pipelined cloud {:.1} ms, \
+         link {:.1} ms serial — bit-identical streams",
+        local_s * 1e3,
+        collab_s * 1e3,
+        net_s * 1e3
+    );
+    csv.push_str(&format!(
+        "collab,,,{:.4},{:.1},{n_collab},{collab_tokens},,,cloud,{:.4},{:.4},{:.2}\n",
+        fast.rtt_s * 1e3,
+        fast.bytes_per_s * 8.0 / 1e6,
+        local_s * 1e3 / collab_tokens.max(1) as f64,
+        collab_s * 1e3 / collab_tokens.max(1) as f64,
+        net_s * 1e3
+    ));
+
+    ctx.write_csv("fleet.csv", &csv)?;
+    Ok(())
+}

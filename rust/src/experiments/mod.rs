@@ -8,6 +8,7 @@ pub mod deviation;
 pub mod fig5;
 pub mod fig6;
 pub mod fig7;
+pub mod fleet;
 pub mod kvcache;
 pub mod overlap;
 pub mod repartition;
@@ -29,6 +30,9 @@ pub struct Ctx {
     /// Per-task / total sample limits (trim for quick runs).
     pub limit: Option<usize>,
     pub seed: u64,
+    /// The run configuration the experiment was launched with (drivers
+    /// that start coordinators — e.g. `fleet` — clone and adjust it).
+    pub cfg: RunConfig,
 }
 
 impl Ctx {
@@ -44,6 +48,7 @@ impl Ctx {
             out_dir,
             limit,
             seed: cfg.seed,
+            cfg: cfg.clone(),
         })
     }
 
@@ -72,10 +77,12 @@ pub fn run(ctx: &Ctx, which: &str) -> anyhow::Result<()> {
         "repartition" => repartition::run(ctx),
         "tree" => tree::run(ctx),
         "kvcache" => kvcache::run(ctx),
+        "fleet" => fleet::run(ctx),
         "all" => {
             for id in [
                 "table2", "table3", "fig6a", "fig6b", "fig7a", "fig5a", "fig5b",
                 "fig7b", "deviation", "overlap", "repartition", "tree", "kvcache",
+                "fleet",
             ] {
                 println!("\n=== experiment {id} ===");
                 run(ctx, id)?;
@@ -84,7 +91,7 @@ pub fn run(ctx: &Ctx, which: &str) -> anyhow::Result<()> {
         }
         other => anyhow::bail!(
             "unknown experiment {other:?} (fig5a fig5b fig6a fig6b table2 table3 \
-             fig7a fig7b deviation alpha overlap repartition tree kvcache all)"
+             fig7a fig7b deviation alpha overlap repartition tree kvcache fleet all)"
         ),
     }
 }

@@ -1,0 +1,271 @@
+//! Cloud verification tier: the edge device runs the drafter, ships draft
+//! tokens over the modeled link ([`NetworkModel`]), and a server-class
+//! platform runs the target verification — the PipeSD-style collaborative
+//! regime. Drafting for round *r+1* overlaps round *r*'s ship+verify, so
+//! the steady-state round costs
+//! `max(draft_s, rtt + payload/bw + cloud_verify_s)`
+//! ([`costmodel::collaborative_round_latency`]); only the first round pays
+//! the serial pipeline-fill sum.
+//!
+//! The tier makes one decision per request — **local-verify vs
+//! cloud-verify** — by comparing predicted per-token latency of the best
+//! local configuration (γ* from Eq. (1) at the device's cost coefficient)
+//! against the best pipelined collaborative configuration
+//! ([`costmodel::optimal_gamma_collaborative`]). Low edge α favors the
+//! cloud: rounds are short (early rejections), so the round is
+//! link-latency-bound and a fast link plus a ~100× faster verifier beats
+//! paying the slow local target forward every round. High α or a slow
+//! link favors local verification.
+//!
+//! Token streams are *identical* either way: verification runs the same
+//! target model with the same accept rule, only faster — which is what
+//! makes the bit-parity assertions in `experiment fleet` possible.
+
+use super::network::NetworkModel;
+use crate::config::CloudVerifyMode;
+use crate::costmodel::{self, CollabChoice};
+use crate::decision::{round_latency, CostModel};
+use crate::dse::PairConfig;
+use crate::hetero::{LatencyModel, Mapping, Platform, PuAssignment};
+use crate::runtime::Engine;
+use crate::spec::{DecodeSession, DecoderSetup};
+
+/// Where a request's verification runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum VerifyRoute {
+    Local,
+    Cloud,
+}
+
+/// The routing decision with its audit trail: both predicted per-token
+/// latencies and the γ each side would run.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RouteChoice {
+    pub route: VerifyRoute,
+    /// Best local configuration: (γ*, per-token seconds).
+    pub local_gamma: usize,
+    pub local_per_token_s: f64,
+    /// Best pipelined collaborative configuration.
+    pub cloud: CollabChoice,
+}
+
+/// Per-replay accounting of a cloud-verified collaborative decode.
+#[derive(Debug, Clone, Default)]
+pub struct CollabOutcome {
+    /// The committed tokens — bit-identical to a local decode.
+    pub tokens: Vec<u32>,
+    pub rounds: u64,
+    /// What the same rounds cost under purely local pricing (the
+    /// session's own simulated clock).
+    pub local_sim_s: f64,
+    /// Pipelined collaborative cost of the same rounds.
+    pub collab_sim_s: f64,
+    /// Modeled link seconds paid (serial sum over rounds; the pipelined
+    /// clock hides most of it behind drafting).
+    pub net_s: f64,
+    /// Draft tokens shipped uplink.
+    pub tokens_shipped: u64,
+}
+
+/// The cloud verifier: a server-class [`Platform`] priced by its own
+/// [`LatencyModel`], behind a [`NetworkModel`] link.
+pub struct CloudTier {
+    lat: LatencyModel,
+    pub net: NetworkModel,
+    pub mode: CloudVerifyMode,
+}
+
+impl CloudTier {
+    pub fn new(platform: Platform, net: NetworkModel, mode: CloudVerifyMode) -> CloudTier {
+        CloudTier { lat: LatencyModel::new(platform), net, mode }
+    }
+
+    pub fn platform(&self) -> &Platform {
+        &self.lat.platform
+    }
+
+    /// Seconds the cloud verifier spends on one γ-token verification
+    /// forward. The cloud runs only the target role, on its accelerator.
+    pub fn verify_s(&self, pair: &PairConfig, seq_len: usize) -> f64 {
+        self.lat
+            .forward_latency(&pair.target, pair.target_scheme, PuAssignment::Gpu, seq_len)
+    }
+
+    /// Full remote leg of one cloud-verified round: ship γ drafts up,
+    /// verify on the cloud, ship the verdict down.
+    pub fn remote_round_s(&self, pair: &PairConfig, gamma: usize, seq_len: usize) -> f64 {
+        self.net.round_link_s(gamma) + self.verify_s(pair, seq_len)
+    }
+
+    /// Edge draft leg of one round: γ sequential drafter forwards on the
+    /// edge device (its own cost model, its current mapping).
+    pub fn draft_s(
+        &self,
+        edge: &dyn CostModel,
+        pair: &PairConfig,
+        mapping: Mapping,
+        gamma: usize,
+        seq_len: usize,
+    ) -> f64 {
+        if gamma == 0 {
+            return 0.0;
+        }
+        gamma as f64
+            * edge.forward_latency(&pair.drafter, pair.drafter_scheme, mapping.drafter, seq_len)
+    }
+
+    /// The per-request routing decision: best-local vs best-collaborative
+    /// predicted per-token latency, honoring the configured
+    /// [`CloudVerifyMode`] pin. `Off` and `Local` both produce a Local
+    /// route (the audit fields still carry both predictions).
+    pub fn verify_route(
+        &self,
+        edge: &dyn CostModel,
+        pair: &PairConfig,
+        mapping: Mapping,
+        alpha: f64,
+        seq_len: usize,
+    ) -> RouteChoice {
+        let drafter = (&pair.drafter, pair.drafter_scheme);
+        let target = (&pair.target, pair.target_scheme);
+        let c = edge.cost_coefficient(drafter, target, mapping, seq_len);
+        let local_gamma = costmodel::optimal_gamma(alpha, c).gamma;
+        let local_round_s =
+            round_latency(edge, drafter, target, mapping, local_gamma, seq_len);
+        let local_per_token_s =
+            local_round_s / costmodel::expected_tokens_per_round(alpha, local_gamma);
+        let cloud = costmodel::optimal_gamma_collaborative(alpha, costmodel::GAMMA_MAX, |g| {
+            (
+                self.draft_s(edge, pair, mapping, g, seq_len),
+                self.remote_round_s(pair, g, seq_len),
+            )
+        });
+        let route = match self.mode {
+            CloudVerifyMode::Off | CloudVerifyMode::Local => VerifyRoute::Local,
+            CloudVerifyMode::Cloud => VerifyRoute::Cloud,
+            CloudVerifyMode::Auto => {
+                if cloud.per_token_s < local_per_token_s {
+                    VerifyRoute::Cloud
+                } else {
+                    VerifyRoute::Local
+                }
+            }
+        };
+        RouteChoice { route, local_gamma, local_per_token_s, cloud }
+    }
+
+    /// Run one prompt to completion as a cloud-verified collaborative
+    /// decode: the session executes the real draft/verify forwards (so the
+    /// committed tokens are exactly the local stream), while the
+    /// collaborative clock re-prices each round as pipeline-fill for round
+    /// 0 and `max(draft, ship+verify+verdict)` after
+    /// ([`costmodel::collaborative_round_latency`]).
+    pub fn collaborative_replay(
+        &self,
+        engine: &Engine,
+        edge: &LatencyModel,
+        pair: &PairConfig,
+        setup: DecoderSetup,
+        prompt: &[u32],
+    ) -> anyhow::Result<CollabOutcome> {
+        let mapping = setup.mapping;
+        let mut session = DecodeSession::new(engine, edge.clone(), setup, true, prompt);
+        let mut out = CollabOutcome::default();
+        while !session.is_done() {
+            let seq_len = session.seq_len();
+            let step = session.step(engine)?;
+            let draft_s = self.draft_s(edge, pair, mapping, step.drafted, seq_len);
+            let remote_s = self.remote_round_s(pair, step.drafted, seq_len);
+            out.collab_sim_s += if out.rounds == 0 {
+                // Pipeline fill: nothing overlaps the first round.
+                costmodel::collaborative_round_latency(draft_s, remote_s, false)
+            } else {
+                costmodel::collaborative_round_latency(draft_s, remote_s, true)
+            };
+            out.local_sim_s += step.sim_s;
+            out.net_s += self.net.round_link_s(step.drafted);
+            out.tokens_shipped += step.drafted as u64;
+            out.rounds += 1;
+            out.tokens.extend_from_slice(&step.committed);
+            if step.done {
+                break;
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::{ModelSpec, Scheme};
+
+    fn pair() -> PairConfig {
+        PairConfig {
+            target: ModelSpec {
+                name: "target".into(),
+                n_layers: 12,
+                d_model: 768,
+                n_heads: 12,
+                ffn_dim: 3072,
+                vocab: 16000,
+                param_count: 124_000_000,
+            },
+            target_scheme: Scheme::W8a8,
+            drafter: ModelSpec {
+                name: "drafter".into(),
+                n_layers: 4,
+                d_model: 256,
+                n_heads: 4,
+                ffn_dim: 1024,
+                vocab: 16000,
+                param_count: 7_000_000,
+            },
+            drafter_scheme: Scheme::Fp,
+        }
+    }
+
+    fn tier(rtt_ms: f64, mbps: f64, mode: CloudVerifyMode) -> CloudTier {
+        CloudTier::new(Platform::cloud(), NetworkModel::from_cfg(rtt_ms, mbps), mode)
+    }
+
+    #[test]
+    fn cloud_verify_is_much_faster_than_edge_verify() {
+        let t = tier(20.0, 100.0, CloudVerifyMode::Auto);
+        let edge = LatencyModel::new(Platform::imx95());
+        let p = pair();
+        let m = Mapping::heterogeneous(2);
+        let edge_verify = edge.forward_latency(&p.target, p.target_scheme, m.target, 64);
+        assert!(t.verify_s(&p, 64) < edge_verify / 10.0);
+        // The remote round still pays the link at least once.
+        assert!(t.remote_round_s(&p, 4, 64) > t.net.rtt_s);
+    }
+
+    #[test]
+    fn low_alpha_fast_link_routes_cloud_slow_link_routes_local() {
+        let edge = LatencyModel::new(Platform::imx95());
+        let p = pair();
+        let m = Mapping::heterogeneous(2);
+        // Link regimes sized off the edge verify forward itself, so the
+        // assertions survive any recalibration of the platform constants.
+        let edge_verify = edge.forward_latency(&p.target, p.target_scheme, m.target, 64);
+        // Fast: RTT a small fraction of one edge verify — the whole
+        // remote leg undercuts the local verify, so cloud wins strictly.
+        let fast = tier(edge_verify * 1e3 / 50.0, 1000.0, CloudVerifyMode::Auto);
+        let r = fast.verify_route(&edge, &p, m, 0.2, 64);
+        assert_eq!(r.route, VerifyRoute::Cloud);
+        assert!(r.cloud.per_token_s < r.local_per_token_s);
+        // Slow: RTT = 20 edge verifies. Even at the maximal E[tokens] per
+        // round (< γ+1 ≤ 9), the cloud per-token cost ≥ rtt/9 > 2× the
+        // edge verify ≥ the best local per-token — local wins strictly.
+        let slow = tier(edge_verify * 1e3 * 20.0, 1.0, CloudVerifyMode::Auto);
+        let r = slow.verify_route(&edge, &p, m, 0.2, 64);
+        assert_eq!(r.route, VerifyRoute::Local);
+        assert!(r.local_per_token_s < r.cloud.per_token_s);
+        // Pins override the comparison but keep the audit predictions.
+        let pinned = tier(edge_verify * 1e3 * 20.0, 1.0, CloudVerifyMode::Cloud);
+        assert_eq!(pinned.verify_route(&edge, &p, m, 0.2, 64).route, VerifyRoute::Cloud);
+        let off = tier(1.0, 1000.0, CloudVerifyMode::Off);
+        assert_eq!(off.verify_route(&edge, &p, m, 0.2, 64).route, VerifyRoute::Local);
+    }
+}

@@ -1,0 +1,414 @@
+//! Multi-device fleet tier: a routing layer that fronts N per-device
+//! [`Coordinator`]s — each running its own engine, decision policy, and
+//! metrics against its *own* [`Platform`] calibration — plus an optional
+//! cloud verification tier for cloud-edge collaborative speculation.
+//!
+//! Submission flow: [`FleetRouter::submit`] scores every device with the
+//! [`placement`] policy (load from the fleet [`DeviceTimelines`] and live
+//! queue depths, SLO/deadline headroom, calibrated per-device cost at the
+//! device's live α estimate), reserves the predicted service time on the
+//! winner's timeline lane, decides local-verify vs cloud-verify when a
+//! cloud tier is configured ([`cloud::CloudTier::verify_route`]), and
+//! delegates to the winning device's coordinator — returning that
+//! coordinator's ordinary [`RequestHandle`], so fleet clients stream
+//! frames and wait exactly like single-device clients. A fleet of one
+//! device with no cloud tier is therefore *bit-identical* to the plain
+//! coordinator: same submission path, same worker, same RNG streams.
+//!
+//! Fleet topology comes from a JSON file (the `fleet_file` knob):
+//!
+//! ```json
+//! {
+//!   "devices": [
+//!     { "name": "edge0", "platform": "imx95" },
+//!     { "name": "edge1", "platform": "calib/orin.json" },
+//!     { "name": "edge2", "platform": { "name": "custom", "gpu": { "peak_gflops": 80.0 } } }
+//!   ],
+//!   "cloud": { "platform": "cloud", "rtt_ms": 20.0, "mbps": 100.0 }
+//! }
+//! ```
+//!
+//! A `platform` entry is a built-in name ([`Platform::builtin`]), a path
+//! to a calibration JSON, or an inline object (merged over the i.MX95
+//! defaults like any platform file). The optional `cloud` section enables
+//! the collaborative tier; `rtt_ms`/`mbps` default to the run config's
+//! `cloud_rtt_ms`/`cloud_mbps` knobs when omitted.
+
+pub mod cloud;
+pub mod network;
+pub mod placement;
+pub mod timeline;
+
+pub use cloud::{CloudTier, CollabOutcome, RouteChoice, VerifyRoute};
+pub use network::NetworkModel;
+pub use placement::{place, DeviceView, Placement, PlacementRequest};
+pub use timeline::{DeviceSpan, DeviceTimelines};
+
+use crate::api::GenerationRequest;
+use crate::config::{CloudVerifyMode, KvCacheMode, RunConfig};
+use crate::coordinator::{Coordinator, RequestHandle};
+use crate::dse::{KvLoad, PairConfig};
+use crate::hetero::Platform;
+use crate::metrics::FleetMetrics;
+use crate::runtime::Manifest;
+use crate::util::json::Json;
+use std::path::Path;
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// One device of the fleet topology, as parsed from the fleet file.
+#[derive(Debug, Clone)]
+pub struct DeviceSpec {
+    pub name: String,
+    pub platform: Platform,
+}
+
+/// The optional cloud section of the fleet file.
+#[derive(Debug, Clone)]
+pub struct CloudSpec {
+    pub platform: Platform,
+    /// Link parameters; `None` falls back to the run-config knobs.
+    pub rtt_ms: Option<f64>,
+    pub mbps: Option<f64>,
+}
+
+/// Parsed fleet topology.
+#[derive(Debug, Clone)]
+pub struct FleetSpec {
+    pub devices: Vec<DeviceSpec>,
+    pub cloud: Option<CloudSpec>,
+}
+
+/// Resolve one `platform` entry: built-in name, calibration-file path, or
+/// inline object. `base_dir` anchors relative paths (the fleet file's own
+/// directory).
+fn resolve_platform(j: &Json, base_dir: &Path) -> anyhow::Result<Platform> {
+    if let Some(name) = j.as_str() {
+        if let Some(p) = Platform::builtin(name) {
+            return Ok(p);
+        }
+        let path = base_dir.join(name);
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            anyhow::anyhow!("platform {name:?}: not a built-in and unreadable as {path:?}: {e}")
+        })?;
+        let parsed = Json::parse(&text).map_err(|e| anyhow::anyhow!("{path:?}: {e}"))?;
+        return Platform::from_json(&parsed);
+    }
+    if j.as_obj().is_some() {
+        return Platform::from_json(j);
+    }
+    anyhow::bail!("platform must be a built-in name, a file path, or an object")
+}
+
+impl FleetSpec {
+    /// Parse the fleet topology JSON. Strict where it matters: at least
+    /// one device, unique device names, every platform valid.
+    pub fn from_json(j: &Json, base_dir: &Path) -> anyhow::Result<FleetSpec> {
+        let devices_json = j.req_arr("devices")?;
+        anyhow::ensure!(!devices_json.is_empty(), "fleet needs at least one device");
+        let mut devices = Vec::with_capacity(devices_json.len());
+        for (i, d) in devices_json.iter().enumerate() {
+            let name = match d.get("name").and_then(Json::as_str) {
+                Some(n) => n.to_string(),
+                None => format!("device{i}"),
+            };
+            let platform = d
+                .get("platform")
+                .map(|p| resolve_platform(p, base_dir))
+                .transpose()?
+                .unwrap_or_else(Platform::imx95);
+            devices.push(DeviceSpec { name, platform });
+        }
+        for i in 1..devices.len() {
+            anyhow::ensure!(
+                !devices[..i].iter().any(|d| d.name == devices[i].name),
+                "duplicate device name {:?}",
+                devices[i].name
+            );
+        }
+        let cloud = match j.get("cloud") {
+            None => None,
+            Some(c) => Some(CloudSpec {
+                platform: c
+                    .get("platform")
+                    .map(|p| resolve_platform(p, base_dir))
+                    .transpose()?
+                    .unwrap_or_else(Platform::cloud),
+                rtt_ms: c.get("rtt_ms").and_then(Json::as_f64),
+                mbps: c.get("mbps").and_then(Json::as_f64),
+            }),
+        };
+        Ok(FleetSpec { devices, cloud })
+    }
+
+    /// Load and parse a fleet file; relative platform paths resolve
+    /// against the fleet file's directory.
+    pub fn load(path: &Path) -> anyhow::Result<FleetSpec> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("fleet file {path:?}: {e}"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("fleet file {path:?}: {e}"))?;
+        let base = path.parent().unwrap_or_else(|| Path::new("."));
+        FleetSpec::from_json(&j, base)
+    }
+
+    /// A homogeneous N-device fleet of one platform (experiments, tests).
+    pub fn homogeneous(n: usize, platform: Platform) -> FleetSpec {
+        FleetSpec {
+            devices: (0..n)
+                .map(|i| DeviceSpec { name: format!("edge{i}"), platform: platform.clone() })
+                .collect(),
+            cloud: None,
+        }
+    }
+}
+
+/// One started fleet device.
+pub struct FleetDevice {
+    pub name: String,
+    pub coordinator: Coordinator,
+}
+
+/// Result of one fleet submission: which device got it, how verification
+/// was routed (when a cloud tier exists), and the device coordinator's
+/// ordinary handle.
+pub struct FleetSubmission {
+    pub device: usize,
+    pub verify: Option<RouteChoice>,
+    pub handle: RequestHandle,
+}
+
+/// The routing tier. See the module docs for the submission flow.
+pub struct FleetRouter {
+    devices: Vec<FleetDevice>,
+    cloud: Option<CloudTier>,
+    pair: PairConfig,
+    kv_cache: KvCacheMode,
+    max_new_tokens: usize,
+    metrics: FleetMetrics,
+    timelines: Mutex<DeviceTimelines>,
+    /// Wall-clock origin for the timeline "now": device lanes hold
+    /// predicted *simulated* service seconds, drained against real elapsed
+    /// time — a deliberate approximation (sim and wall clocks run at the
+    /// same millisecond scale) that only steers load balancing, never
+    /// correctness.
+    started: Instant,
+}
+
+impl FleetRouter {
+    /// Start one coordinator per device (same run config, per-device
+    /// platform) and the cloud tier if the spec carries one.
+    pub fn start(cfg: &RunConfig, spec: FleetSpec) -> anyhow::Result<FleetRouter> {
+        anyhow::ensure!(!spec.devices.is_empty(), "fleet needs at least one device");
+        let manifest = Manifest::load(&cfg.artifacts_dir)?;
+        let (d_key, t_key) = cfg.variant_keys()?;
+        let pair = PairConfig {
+            target: manifest.model_for(t_key)?.clone(),
+            target_scheme: t_key.scheme,
+            drafter: manifest.model_for(d_key)?.clone(),
+            drafter_scheme: d_key.scheme,
+        };
+        let mut devices = Vec::with_capacity(spec.devices.len());
+        for d in spec.devices {
+            devices.push(FleetDevice {
+                name: d.name,
+                coordinator: Coordinator::start(cfg.clone(), d.platform)?,
+            });
+        }
+        let cloud = match spec.cloud {
+            Some(c) if cfg.cloud_verify != CloudVerifyMode::Off => Some(CloudTier::new(
+                c.platform,
+                NetworkModel::from_cfg(
+                    c.rtt_ms.unwrap_or(cfg.cloud_rtt_ms),
+                    c.mbps.unwrap_or(cfg.cloud_mbps),
+                ),
+                cfg.cloud_verify,
+            )),
+            _ => None,
+        };
+        let n = devices.len();
+        Ok(FleetRouter {
+            devices,
+            cloud,
+            pair,
+            kv_cache: cfg.kv_cache,
+            max_new_tokens: cfg.max_new_tokens,
+            metrics: FleetMetrics::new(n),
+            timelines: Mutex::new(DeviceTimelines::new(n)),
+            started: Instant::now(),
+        })
+    }
+
+    /// Place `req` on the best device and delegate to its coordinator.
+    pub fn submit(&self, req: impl Into<GenerationRequest>) -> FleetSubmission {
+        let req: GenerationRequest = req.into();
+        let max_new = req.options.max_new.unwrap_or(self.max_new_tokens);
+        let preq = PlacementRequest {
+            pair: &self.pair,
+            // Operating point: prompt plus half the budget — the mean
+            // sequence length over the decode.
+            seq_len: req.prompt.len() + max_new / 2,
+            max_new,
+            slo: req.options.slo,
+            deadline_s: req.options.deadline_s,
+        };
+        let now = self.started.elapsed().as_secs_f64();
+        let placement = {
+            let tl = self.timelines.lock().unwrap();
+            let views: Vec<DeviceView> = self
+                .devices
+                .iter()
+                .enumerate()
+                .map(|(i, d)| {
+                    let policy = &d.coordinator.policy;
+                    DeviceView {
+                        platform: &policy.latency_model().platform,
+                        cost: policy.cost_model(),
+                        mapping: policy.current_mapping(),
+                        queue_len: d.coordinator.queue_len(),
+                        backlog_s: tl.backlog(i, now),
+                        alpha: policy.alpha_estimate(&req.task),
+                        kv_probe: match self.kv_cache {
+                            KvCacheMode::Off => None,
+                            KvCacheMode::On => Some(KvLoad {
+                                // Admission probe: everything queued ahead
+                                // plus this request, each at full budget.
+                                inflight: d.coordinator.queue_len() + 1,
+                                budget_tokens: req.prompt.len() + max_new,
+                            }),
+                        },
+                    }
+                })
+                .collect();
+            place(&views, &preq)
+        };
+        let device = &self.devices[placement.device];
+        // Reserve the predicted service time on the winner's lane.
+        {
+            let policy = &device.coordinator.policy;
+            let view = DeviceView {
+                platform: &policy.latency_model().platform,
+                cost: policy.cost_model(),
+                mapping: policy.current_mapping(),
+                queue_len: 0,
+                backlog_s: 0.0,
+                alpha: policy.alpha_estimate(&req.task),
+                kv_probe: None,
+            };
+            let service_s = placement::predicted_service_s(&view, &preq);
+            self.timelines
+                .lock()
+                .unwrap()
+                .reserve(placement.device, now, service_s);
+        }
+        self.metrics
+            .record_placement(placement.device, placement.kv_filtered);
+        // Verify routing: predicted local vs pipelined-collaborative
+        // per-token latency on the *placed* device.
+        let verify = self.cloud.as_ref().map(|cloud| {
+            let policy = &device.coordinator.policy;
+            let choice = cloud.verify_route(
+                policy.cost_model(),
+                &self.pair,
+                policy.current_mapping(),
+                policy.alpha_estimate(&req.task),
+                preq.seq_len,
+            );
+            if choice.route == VerifyRoute::Cloud {
+                self.metrics.record_cloud_request();
+            }
+            choice
+        });
+        FleetSubmission {
+            device: placement.device,
+            verify,
+            handle: device.coordinator.submit(req),
+        }
+    }
+
+    pub fn device_count(&self) -> usize {
+        self.devices.len()
+    }
+
+    pub fn devices(&self) -> &[FleetDevice] {
+        &self.devices
+    }
+
+    pub fn cloud(&self) -> Option<&CloudTier> {
+        self.cloud.as_ref()
+    }
+
+    pub fn pair(&self) -> &PairConfig {
+        &self.pair
+    }
+
+    pub fn metrics(&self) -> &FleetMetrics {
+        &self.metrics
+    }
+
+    /// Cancel a request by id on whichever device holds it.
+    pub fn cancel(&self, id: u64) -> bool {
+        self.devices.iter().any(|d| d.coordinator.cancel(id))
+    }
+
+    pub fn shutdown(self) {
+        for d in self.devices {
+            d.coordinator.shutdown();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fleet_spec_parses_builtins_inline_and_cloud() {
+        let j = Json::parse(
+            r#"{
+              "devices": [
+                { "name": "a", "platform": "imx95" },
+                { "platform": { "name": "tweaked", "gpu": { "peak_gflops": 99.0 } } },
+                { "name": "c" }
+              ],
+              "cloud": { "rtt_ms": 5.0 }
+            }"#,
+        )
+        .unwrap();
+        let spec = FleetSpec::from_json(&j, Path::new(".")).unwrap();
+        assert_eq!(spec.devices.len(), 3);
+        assert_eq!(spec.devices[0].name, "a");
+        assert_eq!(spec.devices[0].platform.name, "imx95-sim");
+        assert_eq!(spec.devices[1].name, "device1");
+        assert_eq!(spec.devices[1].platform.name, "tweaked");
+        assert!((spec.devices[1].platform.gpu.peak_gflops - 99.0).abs() < 1e-12);
+        // Platform omitted entirely: the i.MX95 default.
+        assert_eq!(spec.devices[2].platform.name, "imx95-sim");
+        let cloud = spec.cloud.unwrap();
+        assert_eq!(cloud.platform.name, "cloud-sim");
+        assert_eq!(cloud.rtt_ms, Some(5.0));
+        assert_eq!(cloud.mbps, None);
+    }
+
+    #[test]
+    fn fleet_spec_rejects_empty_and_duplicate_names() {
+        let empty = Json::parse(r#"{ "devices": [] }"#).unwrap();
+        assert!(FleetSpec::from_json(&empty, Path::new(".")).is_err());
+        let dup = Json::parse(
+            r#"{ "devices": [ { "name": "x" }, { "name": "x" } ] }"#,
+        )
+        .unwrap();
+        let err = FleetSpec::from_json(&dup, Path::new(".")).unwrap_err();
+        assert!(err.to_string().contains("duplicate"), "{err}");
+        let bad = Json::parse(r#"{ "devices": [ { "platform": 7 } ] }"#).unwrap();
+        assert!(FleetSpec::from_json(&bad, Path::new(".")).is_err());
+    }
+
+    #[test]
+    fn homogeneous_helper_names_devices_sequentially() {
+        let spec = FleetSpec::homogeneous(3, Platform::imx95());
+        assert_eq!(spec.devices.len(), 3);
+        assert_eq!(spec.devices[0].name, "edge0");
+        assert_eq!(spec.devices[2].name, "edge2");
+        assert!(spec.cloud.is_none());
+    }
+}

@@ -1,0 +1,119 @@
+//! Network-latency model for the cloud tier: a fixed round-trip time plus
+//! a bandwidth term on token payloads. This is the `c_net` of the
+//! cloud-edge collaborative regime — one speculation round ships γ draft
+//! token ids (plus per-token draft metadata for the accept rule) up to the
+//! verifier and receives the accept count plus one corrected token back,
+//! so the per-round link charge is
+//! `rtt + payload_up/bw + payload_down/bw`.
+//!
+//! The model is deliberately two-parameter (RTT, bandwidth): the
+//! experiments sweep exactly these two axes, matching how the PipeSD-style
+//! analyses parameterize the edge↔cloud link.
+
+/// Wire bytes per draft token shipped uplink: a `u32` token id plus an
+/// `f64` draft probability for the stochastic accept rule (greedy ignores
+/// it, but the wire format carries it so the rule is a verifier choice),
+/// plus framing.
+pub const BYTES_PER_DRAFT_TOKEN: f64 = 16.0;
+
+/// Wire bytes of a verification verdict: accept count + bonus token +
+/// framing. One per round, regardless of γ.
+pub const VERDICT_BYTES: f64 = 64.0;
+
+/// Edge↔cloud link: RTT plus bandwidth term on token payloads.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NetworkModel {
+    /// Full round-trip time, seconds (both propagation directions).
+    pub rtt_s: f64,
+    /// Link bandwidth, bytes per second (symmetric).
+    pub bytes_per_s: f64,
+}
+
+impl NetworkModel {
+    /// Build from the config-level units: milliseconds and megabits/s.
+    pub fn from_cfg(rtt_ms: f64, mbps: f64) -> NetworkModel {
+        NetworkModel {
+            rtt_s: rtt_ms * 1e-3,
+            bytes_per_s: mbps * 1e6 / 8.0,
+        }
+    }
+
+    /// One propagation direction, seconds (half the RTT).
+    pub fn one_way_s(&self) -> f64 {
+        self.rtt_s / 2.0
+    }
+
+    /// Serialization time for a `bytes` payload on the link.
+    pub fn transfer_s(&self, bytes: f64) -> f64 {
+        bytes / self.bytes_per_s
+    }
+
+    /// Seconds to ship `gamma` draft tokens up to the verifier
+    /// (one-way propagation + payload serialization).
+    pub fn ship_drafts_s(&self, gamma: usize) -> f64 {
+        self.one_way_s() + self.transfer_s(gamma as f64 * BYTES_PER_DRAFT_TOKEN)
+    }
+
+    /// Seconds for the verdict to come back down (one-way + verdict
+    /// payload).
+    pub fn ship_verdict_s(&self) -> f64 {
+        self.one_way_s() + self.transfer_s(VERDICT_BYTES)
+    }
+
+    /// Total link seconds of one cloud-verified round: γ drafts up,
+    /// verdict down. Excludes the verifier's compute — callers add the
+    /// cloud forward latency between the two legs.
+    pub fn round_link_s(&self, gamma: usize) -> f64 {
+        self.ship_drafts_s(gamma) + self.ship_verdict_s()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unit_conversion_from_cfg() {
+        let n = NetworkModel::from_cfg(20.0, 100.0);
+        assert!((n.rtt_s - 0.020).abs() < 1e-15);
+        // 100 Mbit/s = 12.5 MB/s.
+        assert!((n.bytes_per_s - 12.5e6).abs() < 1e-6);
+        assert!((n.one_way_s() - 0.010).abs() < 1e-15);
+    }
+
+    #[test]
+    fn rtt_and_bandwidth_terms_compose() {
+        let n = NetworkModel::from_cfg(10.0, 8.0); // 8 Mbit/s = 1 MB/s
+        // transfer_s is linear in bytes at 1 byte/µs.
+        assert!((n.transfer_s(1e6) - 1.0).abs() < 1e-12);
+        assert!((n.transfer_s(0.0) - 0.0).abs() < 1e-15);
+        // γ=4: up leg = 5ms + 64B/1MBps; verdict = 5ms + 64B/1MBps.
+        let up = n.ship_drafts_s(4);
+        assert!((up - (0.005 + 64.0 / 1e6)).abs() < 1e-12);
+        let down = n.ship_verdict_s();
+        assert!((down - (0.005 + 64.0 / 1e6)).abs() < 1e-12);
+        // The full round pays the RTT exactly once.
+        let round = n.round_link_s(4);
+        assert!((round - (up + down)).abs() < 1e-15);
+        assert!(round > n.rtt_s);
+    }
+
+    #[test]
+    fn round_link_grows_with_gamma_but_rtt_dominates_small_payloads() {
+        let fast = NetworkModel::from_cfg(2.0, 1000.0);
+        // Monotone in γ.
+        let mut prev = fast.round_link_s(0);
+        for g in 1..=8 {
+            let cur = fast.round_link_s(g);
+            assert!(cur > prev);
+            prev = cur;
+        }
+        // At 1 Gbit/s, 8 tokens × 16 B is ~1µs — RTT dominates by 1000×.
+        let payload = fast.round_link_s(8) - fast.rtt_s;
+        assert!(payload < fast.rtt_s / 100.0, "payload={payload}");
+        // On a 0.1 Mbit/s link the bandwidth term is no longer noise.
+        let slow = NetworkModel::from_cfg(2.0, 0.1);
+        let slow_payload = slow.round_link_s(8) - slow.rtt_s;
+        assert!(slow_payload > slow.rtt_s, "slow_payload={slow_payload}");
+    }
+}

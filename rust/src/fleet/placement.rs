@@ -1,0 +1,316 @@
+//! Device placement policy: score every device of the fleet for an
+//! incoming request and pick the argmin. The score combines the three
+//! signals the issue names:
+//!
+//! 1. **Load** — the device's predicted backlog seconds (its
+//!    [`super::DeviceTimelines`] lane extent past now) plus its live admission
+//!    queue depth, each queued request priced at the device's predicted
+//!    round latency.
+//! 2. **SLO class / deadline headroom** — interactive requests weight the
+//!    wait term (they feel queueing, batch requests amortize it), and a
+//!    request carrying a deadline adds a soft penalty proportional to the
+//!    predicted overshoot on devices that would miss it.
+//! 3. **Calibrated per-device cost** — predicted service seconds from the
+//!    device's own [`CostModel`] (its calibrated [`crate::decision::Policy`]
+//!    model under `decision: calibrated`, analytic otherwise) at the
+//!    device's live per-task α estimate: γ* from the paper's Eq. (1)
+//!    speedup at the device's cost coefficient, rounds priced by
+//!    [`crate::decision::round_latency`].
+//!
+//! Devices whose paged-KV admission probe says this request would
+//! *immediately shed* ([`dse::kv_feasible`] is false for the post-admission
+//! [`dse::KvLoad`]) are filtered out before scoring whenever at least one
+//! feasible device exists; if none is feasible the whole fleet is scored
+//! anyway (the per-device admission layer sheds by its own policy — a
+//! guaranteed-shed placement still beats rejecting outright). Ties break
+//! to the lowest device index, so placement is deterministic.
+
+use crate::api::SloClass;
+use crate::costmodel;
+use crate::decision::{round_latency, CostModel};
+use crate::dse::{self, PairConfig};
+use crate::hetero::{Mapping, Platform};
+
+/// Everything placement may consult about one device, assembled by the
+/// router from live coordinator state (queue depth, policy α/cost model,
+/// KV gauges) — placement itself is a pure function of these views.
+pub struct DeviceView<'a> {
+    pub platform: &'a Platform,
+    /// The device's cost model (calibrated or analytic).
+    pub cost: &'a dyn CostModel,
+    /// The device's current drafter/target mapping.
+    pub mapping: Mapping,
+    /// Live admission-queue depth (requests not yet picked up).
+    pub queue_len: usize,
+    /// Predicted backlog seconds from the fleet timelines.
+    pub backlog_s: f64,
+    /// The device's live α estimate for this request's task.
+    pub alpha: f64,
+    /// Post-admission KV load probe: the [`dse::KvLoad`] the device would
+    /// carry *with this request admitted*. `None` when the paged KV cache
+    /// is off (no admission shedding exists to predict).
+    pub kv_probe: Option<dse::KvLoad>,
+}
+
+/// The request facts placement scores against.
+pub struct PlacementRequest<'a> {
+    pub pair: &'a PairConfig,
+    /// Operating sequence length (prompt + budget midpoint).
+    pub seq_len: usize,
+    /// Token budget (for rounds-to-finish service estimate).
+    pub max_new: usize,
+    pub slo: SloClass,
+    pub deadline_s: Option<f64>,
+}
+
+/// Placement decision: chosen device plus the audit trail.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Placement {
+    pub device: usize,
+    /// The winning score (predicted weighted completion seconds).
+    pub score: f64,
+    /// Devices removed by the KV-admission probe for this request.
+    pub kv_filtered: usize,
+    /// Per-device scores (`f64::INFINITY` for filtered devices) — the
+    /// experiment CSV and metrics endpoint expose these for audit.
+    pub scores: Vec<f64>,
+}
+
+/// Interactive requests feel every queued second; batch requests amortize
+/// them. The wait term is scaled by this factor for interactive SLOs.
+const INTERACTIVE_WAIT_WEIGHT: f64 = 2.0;
+
+/// Soft-penalty slope on predicted deadline overshoot: a device predicted
+/// to miss by Δ seconds scores as if Δ·SLOPE extra seconds of latency —
+/// steep enough that any deadline-meeting device wins, without making
+/// misses infinitely bad (every device may miss).
+const DEADLINE_MISS_SLOPE: f64 = 4.0;
+
+/// Predicted service seconds for the request on one device: γ* from the
+/// device's cost coefficient at its live α, rounds-to-budget at the
+/// expected tokens per round, each round priced by the device model.
+pub fn predicted_service_s(view: &DeviceView, req: &PlacementRequest) -> f64 {
+    let drafter = (&req.pair.drafter, req.pair.drafter_scheme);
+    let target = (&req.pair.target, req.pair.target_scheme);
+    let c = view
+        .cost
+        .cost_coefficient(drafter, target, view.mapping, req.seq_len);
+    let gamma = costmodel::optimal_gamma(view.alpha, c).gamma;
+    let round_s = round_latency(view.cost, drafter, target, view.mapping, gamma, req.seq_len);
+    let per_round = costmodel::expected_tokens_per_round(view.alpha, gamma);
+    let rounds = (req.max_new as f64 / per_round).ceil().max(1.0);
+    rounds * round_s
+}
+
+/// Score one device (lower is better). Exposed for the experiment's audit
+/// columns; [`place`] is the argmin over feasible devices.
+pub fn score_device(view: &DeviceView, req: &PlacementRequest) -> f64 {
+    let service_s = predicted_service_s(view, req);
+    // Queue depth priced at this device's own per-round rate: a queued
+    // request occupies the device for roughly one request's service time,
+    // but we only know the *count*, so charge each at this request's
+    // predicted service (self-similar traffic assumption).
+    let wait_s = view.backlog_s + view.queue_len as f64 * service_s;
+    let wait_weight = match req.slo {
+        SloClass::Interactive => INTERACTIVE_WAIT_WEIGHT,
+        SloClass::Batch => 1.0,
+    };
+    let mut score = wait_weight * wait_s + service_s;
+    if let Some(deadline_s) = req.deadline_s {
+        let overshoot = (wait_s + service_s - deadline_s).max(0.0);
+        score += DEADLINE_MISS_SLOPE * overshoot;
+    }
+    score
+}
+
+/// Pick the device for `req`: filter KV-infeasible devices (unless that
+/// empties the fleet), score the rest, take the argmin with lowest-index
+/// tie-break. Panics on an empty device slice — the router never has zero
+/// devices (config validation rejects an empty fleet).
+pub fn place(devices: &[DeviceView], req: &PlacementRequest) -> Placement {
+    assert!(!devices.is_empty(), "placement over an empty fleet");
+    let feasible: Vec<bool> = devices
+        .iter()
+        .map(|v| match &v.kv_probe {
+            Some(kv) => dse::kv_feasible(v.platform, req.pair, v.mapping, kv),
+            None => true,
+        })
+        .collect();
+    let kv_filtered = feasible.iter().filter(|&&f| !f).count();
+    // Only honor the filter when it leaves at least one device.
+    let use_filter = kv_filtered < devices.len();
+    let scores: Vec<f64> = devices
+        .iter()
+        .zip(&feasible)
+        .map(|(v, &ok)| {
+            if use_filter && !ok {
+                f64::INFINITY
+            } else {
+                score_device(v, req)
+            }
+        })
+        .collect();
+    let device = scores
+        .iter()
+        .enumerate()
+        .min_by(|(_, a), (_, b)| a.partial_cmp(b).unwrap())
+        .map(|(i, _)| i)
+        .unwrap();
+    Placement { device, score: scores[device], kv_filtered, scores }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hetero::LatencyModel;
+    use crate::models::{ModelSpec, Scheme};
+
+    fn pair() -> PairConfig {
+        PairConfig {
+            target: ModelSpec {
+                name: "target".into(),
+                n_layers: 12,
+                d_model: 768,
+                n_heads: 12,
+                ffn_dim: 3072,
+                vocab: 16000,
+                param_count: 124_000_000,
+            },
+            target_scheme: Scheme::W8a8,
+            drafter: ModelSpec {
+                name: "drafter".into(),
+                n_layers: 4,
+                d_model: 256,
+                n_heads: 4,
+                ffn_dim: 1024,
+                vocab: 16000,
+                param_count: 7_000_000,
+            },
+            drafter_scheme: Scheme::Fp,
+        }
+    }
+
+    fn req(pair: &PairConfig) -> PlacementRequest<'_> {
+        PlacementRequest {
+            pair,
+            seq_len: 64,
+            max_new: 32,
+            slo: SloClass::Batch,
+            deadline_s: None,
+        }
+    }
+
+    #[test]
+    fn idle_fast_device_beats_backlogged_one() {
+        let p = Platform::imx95();
+        let lat = LatencyModel::new(p.clone());
+        let pair = pair();
+        let m = Mapping::heterogeneous(2);
+        let mk = |backlog_s: f64, queue_len: usize| DeviceView {
+            platform: &p,
+            cost: &lat,
+            mapping: m,
+            queue_len,
+            backlog_s,
+            alpha: 0.8,
+            kv_probe: None,
+        };
+        let views = [mk(5.0, 3), mk(0.0, 0)];
+        let got = place(&views, &req(&pair));
+        assert_eq!(got.device, 1);
+        assert!(got.scores[0] > got.scores[1]);
+        assert_eq!(got.kv_filtered, 0);
+        // Identical devices tie-break to the lowest index.
+        let tied = [mk(1.0, 1), mk(1.0, 1)];
+        assert_eq!(place(&tied, &req(&pair)).device, 0);
+    }
+
+    #[test]
+    fn interactive_slo_weights_the_wait_term() {
+        let p = Platform::imx95();
+        let lat = LatencyModel::new(p.clone());
+        let pair = pair();
+        let m = Mapping::heterogeneous(2);
+        let view = DeviceView {
+            platform: &p,
+            cost: &lat,
+            mapping: m,
+            queue_len: 0,
+            backlog_s: 1.0,
+            alpha: 0.8,
+            kv_probe: None,
+        };
+        let mut r = req(&pair);
+        let batch = score_device(&view, &r);
+        r.slo = SloClass::Interactive;
+        let interactive = score_device(&view, &r);
+        let service = predicted_service_s(&view, &r);
+        assert!((batch - (1.0 + service)).abs() < 1e-9);
+        assert!((interactive - (2.0 + service)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn deadline_overshoot_penalizes_slow_devices() {
+        let p = Platform::imx95();
+        let lat = LatencyModel::new(p.clone());
+        let pair = pair();
+        let m = Mapping::heterogeneous(2);
+        let mk = |backlog_s: f64| DeviceView {
+            platform: &p,
+            cost: &lat,
+            mapping: m,
+            queue_len: 0,
+            backlog_s,
+            alpha: 0.8,
+            kv_probe: None,
+        };
+        // Device 0 idles but is about to be beaten: give it a backlog
+        // just over the deadline so only device 1 can meet it.
+        let views = [mk(10.0), mk(11.0)];
+        let mut r = req(&pair);
+        r.deadline_s = Some(10.5);
+        // Without a deadline the lower-backlog device wins...
+        r.deadline_s = None;
+        assert_eq!(place(&views, &r).device, 0);
+        // ...and the deadline cannot flip an ordering where the winner
+        // also overshoots less, but the penalty widens the gap.
+        r.deadline_s = Some(5.0);
+        let with = place(&views, &r);
+        assert_eq!(with.device, 0);
+        assert!(with.scores[1] - with.scores[0] > views[1].backlog_s - views[0].backlog_s);
+    }
+
+    #[test]
+    fn kv_infeasible_device_is_filtered_unless_fleet_empties() {
+        let p = Platform::imx95();
+        let lat = LatencyModel::new(p.clone());
+        let pair = pair();
+        let m = Mapping::heterogeneous(2);
+        let pages = p.memory.kv_pages(crate::hetero::PuId::Cpu);
+        // A probe load that cannot fit: more in-flight budget tokens than
+        // the page pool could ever hold.
+        let shed = dse::KvLoad { inflight: pages + 1, budget_tokens: 1 << 20 };
+        let fits = dse::KvLoad { inflight: 1, budget_tokens: 128 };
+        let mk = |kv: dse::KvLoad, backlog_s: f64| DeviceView {
+            platform: &p,
+            cost: &lat,
+            mapping: m,
+            queue_len: 0,
+            backlog_s,
+            alpha: 0.8,
+            kv_probe: Some(kv),
+        };
+        // The infeasible device is *better* on load, but must lose.
+        let views = [mk(shed, 0.0), mk(fits, 3.0)];
+        let got = place(&views, &req(&pair));
+        assert_eq!(got.device, 1);
+        assert_eq!(got.kv_filtered, 1);
+        assert!(got.scores[0].is_infinite());
+        // When every device would shed, the filter is waived.
+        let all_shed = [mk(shed, 1.0), mk(shed, 0.0)];
+        let got = place(&all_shed, &req(&pair));
+        assert_eq!(got.device, 1);
+        assert_eq!(got.kv_filtered, 2);
+        assert!(got.scores.iter().all(|s| s.is_finite()));
+    }
+}

@@ -1,0 +1,139 @@
+//! Per-*device* simulated timelines — the fleet-tier generalization of
+//! [`crate::hetero::PuTimelines`] from 2 fixed processing units to N
+//! devices. One lane per device; the same **readiness rule** applies: a
+//! request placed on device *d* with its inputs (arrival) available at
+//! `arrival_s` starts at `max(ready[d], arrival_s)` and occupies *d* for
+//! its predicted service seconds. Lanes on different devices overlap
+//! freely — devices are independent machines, so unlike the intra-device
+//! PU model there is no cross-lane blocking mode.
+//!
+//! The router uses this as its *predicted-backlog* load signal: at
+//! placement time, `backlog(d, now)` is how far device *d*'s lane already
+//! extends past the present, and a placement reserves the request's
+//! predicted service time on the chosen lane. The fleet makespan
+//! (`makespan()`) is the latest lane end — the quantity the scaling
+//! experiment divides tokens by.
+
+/// One reserved interval on a device lane.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DeviceSpan {
+    pub device: usize,
+    pub start_s: f64,
+    pub end_s: f64,
+}
+
+/// N independent device lanes with per-lane busy accounting.
+#[derive(Debug, Clone)]
+pub struct DeviceTimelines {
+    /// Earliest time each device can start its next reservation.
+    ready: Vec<f64>,
+    /// Σ reserved service seconds per device.
+    busy: Vec<f64>,
+    /// Reservations per device.
+    reservations: Vec<u64>,
+}
+
+impl DeviceTimelines {
+    pub fn new(devices: usize) -> DeviceTimelines {
+        DeviceTimelines {
+            ready: vec![0.0; devices],
+            busy: vec![0.0; devices],
+            reservations: vec![0; devices],
+        }
+    }
+
+    pub fn devices(&self) -> usize {
+        self.ready.len()
+    }
+
+    /// Reserve `service_s` on `device` for work whose inputs are available
+    /// at `arrival_s`. Readiness rule: starts at
+    /// `max(ready[device], arrival_s)`.
+    pub fn reserve(&mut self, device: usize, arrival_s: f64, service_s: f64) -> DeviceSpan {
+        let start_s = self.ready[device].max(arrival_s);
+        let end_s = start_s + service_s;
+        self.ready[device] = end_s;
+        self.busy[device] += service_s;
+        self.reservations[device] += 1;
+        DeviceSpan { device, start_s, end_s }
+    }
+
+    /// Earliest time `device` can start new work (0 before any
+    /// reservation).
+    pub fn ready(&self, device: usize) -> f64 {
+        self.ready[device]
+    }
+
+    /// How far `device`'s lane extends past `now_s` — the predicted queue
+    /// seconds a request placed now would wait before starting (0 when the
+    /// lane is idle).
+    pub fn backlog(&self, device: usize, now_s: f64) -> f64 {
+        (self.ready[device] - now_s).max(0.0)
+    }
+
+    /// Σ reserved service seconds on `device`.
+    pub fn busy(&self, device: usize) -> f64 {
+        self.busy[device]
+    }
+
+    /// Reservations placed on `device`.
+    pub fn reservations(&self, device: usize) -> u64 {
+        self.reservations[device]
+    }
+
+    /// Latest lane end across all devices — the fleet-level makespan
+    /// (0 before any reservation).
+    pub fn makespan(&self) -> f64 {
+        self.ready.iter().fold(0.0f64, |a, &b| a.max(b))
+    }
+
+    /// Index of the device whose lane frees up first (deterministic
+    /// lowest-index tie-break). `None` for an empty fleet.
+    pub fn least_loaded(&self, now_s: f64) -> Option<usize> {
+        (0..self.ready.len()).min_by(|&a, &b| {
+            self.backlog(a, now_s)
+                .partial_cmp(&self.backlog(b, now_s))
+                .unwrap()
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn readiness_rule_matches_pu_timelines_semantics() {
+        let mut tl = DeviceTimelines::new(3);
+        // Idle lane: starts at arrival.
+        let a = tl.reserve(0, 0.5, 1.0);
+        assert_eq!(a, DeviceSpan { device: 0, start_s: 0.5, end_s: 1.5 });
+        // Same lane serializes: arrival 0.0 but lane busy until 1.5.
+        let b = tl.reserve(0, 0.0, 0.25);
+        assert_eq!(b.start_s, 1.5);
+        assert_eq!(b.end_s, 1.75);
+        // A different lane overlaps freely.
+        let c = tl.reserve(1, 0.0, 2.0);
+        assert_eq!(c.start_s, 0.0);
+        assert_eq!(tl.makespan(), 2.0);
+        assert_eq!(tl.busy(0), 1.25);
+        assert_eq!(tl.busy(1), 2.0);
+        assert_eq!(tl.busy(2), 0.0);
+        assert_eq!(tl.reservations(0), 2);
+    }
+
+    #[test]
+    fn backlog_and_least_loaded_track_lane_ends() {
+        let mut tl = DeviceTimelines::new(2);
+        tl.reserve(0, 0.0, 3.0);
+        tl.reserve(1, 0.0, 1.0);
+        assert_eq!(tl.backlog(0, 0.5), 2.5);
+        assert_eq!(tl.backlog(1, 0.5), 0.5);
+        // Past the lane end, backlog clamps to 0.
+        assert_eq!(tl.backlog(1, 5.0), 0.0);
+        assert_eq!(tl.least_loaded(0.5), Some(1));
+        // Tie (both idle far in the future) breaks to the lowest index.
+        assert_eq!(tl.least_loaded(10.0), Some(0));
+        assert_eq!(DeviceTimelines::new(0).least_loaded(0.0), None);
+    }
+}

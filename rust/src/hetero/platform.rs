@@ -158,6 +158,56 @@ impl Platform {
         }
     }
 
+    /// Built-in datacenter-class verifier stand-in for the fleet's cloud
+    /// tier ([`crate::fleet`]): a server accelerator orders of magnitude
+    /// past the Mali, negligible per-call overhead relative to the link,
+    /// and enough memory that no pairing is excluded. Deliberately coarse
+    /// — the cloud side of collaborative speculation is dominated by the
+    /// network model, not by single-percent compute calibration.
+    pub fn cloud() -> Platform {
+        Platform {
+            name: "cloud-sim".to_string(),
+            cpu: CpuSpec {
+                name: "server-x86".to_string(),
+                cores: 16,
+                peak_gflops_per_core: 80.0,
+                eff_target: vec![0.85; 16],
+                eff_drafter: vec![0.70; 16],
+                dispatch_overhead_s: 20e-6,
+                int8_speedup: 2.0,
+            },
+            gpu: GpuSpec {
+                name: "server-accelerator".to_string(),
+                shaders: 1,
+                peak_gflops: 2000.0,
+                dispatch_overhead_s: 30e-6,
+                int8_promotion_penalty: 1.0,
+                supports_int8: true,
+            },
+            memory: MemoryModel {
+                scaled_params_target: 3.0e9,
+                scaled_params_drafter: 1.0e9,
+                bytes_fp: 2.0,
+                bytes_w8a8: 1.0,
+                budget_bytes: 80.0e9,
+                kv_page_bytes: 16.0 * 1024.0,
+                kv_pages_cpu: 65536,
+                kv_pages_gpu: 65536,
+                dram_gbps: 900.0,
+            },
+        }
+    }
+
+    /// Resolve a built-in calibration by name (fleet files name device
+    /// platforms as `"imx95"` / `"cloud"` instead of repeating JSON).
+    pub fn builtin(name: &str) -> Option<Platform> {
+        match name {
+            "imx95" | "imx95-sim" => Some(Platform::imx95()),
+            "cloud" | "cloud-sim" => Some(Platform::cloud()),
+            _ => None,
+        }
+    }
+
     pub fn from_json(j: &Json) -> anyhow::Result<Platform> {
         let mut p = Platform::imx95();
         if let Some(v) = j.get("name").and_then(Json::as_str) {
@@ -306,6 +356,20 @@ mod tests {
         // Deployed configs fit: semi (target quant) and full quant.
         assert!(m.pair_fits(Scheme::W8a8, Scheme::Fp));
         assert!(m.pair_fits(Scheme::W8a8, Scheme::W8a8));
+    }
+
+    #[test]
+    fn cloud_builtin_valid_and_resolvable() {
+        let c = Platform::cloud();
+        c.validate().unwrap();
+        // The cloud verifier must actually be fast relative to the edge:
+        // a datacenter accelerator, not another Mali.
+        assert!(c.gpu.peak_gflops > 100.0 * Platform::imx95().gpu.peak_gflops);
+        // Nothing is memory-excluded in the cloud.
+        assert!(c.memory.pair_fits(Scheme::Fp, Scheme::Fp));
+        assert_eq!(Platform::builtin("imx95").unwrap().name, "imx95-sim");
+        assert_eq!(Platform::builtin("cloud").unwrap().name, "cloud-sim");
+        assert!(Platform::builtin("tpu-pod").is_none());
     }
 
     #[test]

@@ -31,6 +31,9 @@
 //! * [`spec`] — the speculative sampling engine (modular + monolithic)
 //! * [`workload`] — Spec-Bench-shaped workload and arrival processes
 //! * [`coordinator`] — router, batcher, queue, worker lifecycle
+//! * [`fleet`] — multi-device routing tier: per-device coordinators,
+//!   placement policy, device timelines, cloud-edge collaborative
+//!   speculation over a modeled network link
 //! * [`server`] — TCP line-JSON serving front-end
 //! * [`metrics`] — latency/acceptance recording
 //! * [`experiments`] — one driver per paper table/figure
@@ -44,6 +47,7 @@ pub mod costmodel;
 pub mod decision;
 pub mod dse;
 pub mod experiments;
+pub mod fleet;
 pub mod hetero;
 pub mod kvcache;
 pub mod metrics;

@@ -10,16 +10,18 @@
 //!   info        print manifest / platform summary
 
 use specedge::config::{
-    DecisionMode, ExecMode, KernelPath, KvCacheMode, RunConfig, Timing, TreeChoice,
+    CloudVerifyMode, DecisionMode, ExecMode, KernelPath, KvCacheMode, RunConfig, Timing,
+    TreeChoice,
 };
 use specedge::coordinator::Coordinator;
 use specedge::dse::{self, PairConfig};
 use specedge::experiments;
+use specedge::fleet::{FleetRouter, FleetSpec};
 use specedge::hetero::{LatencyModel, Mapping, Platform};
 use specedge::models::VariantKey;
 use specedge::profiler;
 use specedge::runtime::Engine;
-use specedge::server::Server;
+use specedge::server::{Backend, Server};
 use specedge::spec::{AcceptRule, Decoder, DecoderSetup};
 use specedge::tokenizer::{Tokenizer, SEP_ID};
 use specedge::util::cli::Cli;
@@ -47,6 +49,10 @@ fn cli() -> Cli {
         .opt("repartition-every", "calibrated: re-run mapping search every K rounds", None)
         .opt("tree", "tree speculation: off|auto|KxD (e.g. 2x3)", None)
         .opt("kv-cache", "paged KV cache + prefix sharing: off|on", None)
+        .opt("fleet", "serve: fleet topology JSON (multi-device routing)", None)
+        .opt("cloud-verify", "fleet: cloud verification off|auto|local|cloud", None)
+        .opt("cloud-rtt-ms", "fleet: cloud link round-trip, milliseconds", None)
+        .opt("cloud-mbps", "fleet: cloud link bandwidth, megabits/s", None)
         .opt("alpha", "alpha for explore", Some("0.90"))
         .opt("seq", "operating sequence length", Some("63"))
         .opt("max-new", "max new tokens", Some("64"))
@@ -100,6 +106,18 @@ fn build_config(args: &specedge::util::cli::Args) -> anyhow::Result<RunConfig> {
     }
     if let Some(k) = args.get("kv-cache") {
         cfg.kv_cache = KvCacheMode::parse(k)?;
+    }
+    if let Some(f) = args.get("fleet") {
+        cfg.fleet_file = Some(PathBuf::from(f));
+    }
+    if let Some(c) = args.get("cloud-verify") {
+        cfg.cloud_verify = CloudVerifyMode::parse(c)?;
+    }
+    if let Some(r) = args.get_f64("cloud-rtt-ms")? {
+        cfg.cloud_rtt_ms = r;
+    }
+    if let Some(b) = args.get_f64("cloud-mbps")? {
+        cfg.cloud_mbps = b;
     }
     if let Some(m) = args.get_usize("max-new")? {
         cfg.max_new_tokens = m;
@@ -329,9 +347,28 @@ fn cmd_experiment_named(
 
 fn cmd_serve(cfg: RunConfig, platform: Platform) -> anyhow::Result<()> {
     let port = cfg.port;
-    let coordinator = Arc::new(Coordinator::start(cfg, platform)?);
     let tokenizer = Tokenizer::builtin();
-    let server = Server::start(Arc::clone(&coordinator), tokenizer, port)?;
+    let server = match &cfg.fleet_file {
+        Some(path) => {
+            // Fleet mode: one coordinator per device from the topology
+            // file; the per-device platforms come from the fleet file, so
+            // the CLI-level platform is ignored.
+            let spec = FleetSpec::load(path)?;
+            let n = spec.devices.len();
+            let fleet = Arc::new(FleetRouter::start(&cfg, spec)?);
+            let s = Server::start_with(Backend::Fleet(Arc::clone(&fleet)), tokenizer, port)?;
+            println!(
+                "specedge fleet: {} device(s){}",
+                n,
+                if fleet.cloud().is_some() { " + cloud verify tier" } else { "" }
+            );
+            s
+        }
+        None => {
+            let coordinator = Arc::new(Coordinator::start(cfg, platform)?);
+            Server::start(Arc::clone(&coordinator), tokenizer, port)?
+        }
+    };
     println!("specedge serving on 127.0.0.1:{}", server.port);
     println!("protocol: one JSON per line; {{\"cmd\":\"shutdown\"}} to stop");
     // Blocks until a shutdown command flips the stop flag.

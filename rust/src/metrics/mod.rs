@@ -604,6 +604,131 @@ impl Report {
     }
 }
 
+/// Fleet-tier metrics sink: the router records where each request was
+/// placed and why candidates were skipped; the cloud tier records how
+/// verification was routed and the modeled network seconds it paid.
+/// Per-device serving metrics stay in each device's own [`Metrics`] — this
+/// sink only holds what exists *above* a single coordinator.
+#[derive(Debug, Default)]
+pub struct FleetMetrics {
+    inner: Mutex<FleetInner>,
+}
+
+#[derive(Debug, Default)]
+struct FleetInner {
+    placements: Vec<u64>,
+    kv_filtered: u64,
+    local_verify_rounds: u64,
+    cloud_verify_rounds: u64,
+    cloud_requests: u64,
+    net_s: f64,
+    cloud_tokens_shipped: u64,
+}
+
+impl FleetMetrics {
+    pub fn new(devices: usize) -> FleetMetrics {
+        FleetMetrics {
+            inner: Mutex::new(FleetInner {
+                placements: vec![0; devices],
+                ..FleetInner::default()
+            }),
+        }
+    }
+
+    /// One routed request: placed on `device`, after `kv_filtered`
+    /// candidate devices were rejected by the KV-admission probe.
+    pub fn record_placement(&self, device: usize, kv_filtered: usize) {
+        let mut g = self.inner.lock().unwrap();
+        if device < g.placements.len() {
+            g.placements[device] += 1;
+        }
+        g.kv_filtered += kv_filtered as u64;
+    }
+
+    /// One request whose verification was routed to the cloud tier.
+    pub fn record_cloud_request(&self) {
+        self.inner.lock().unwrap().cloud_requests += 1;
+    }
+
+    /// Verify-routing round counters plus the modeled link seconds and
+    /// token payloads shipped for the cloud-verified share.
+    pub fn record_verify_rounds(&self, local: u64, cloud: u64, net_s: f64, tokens_shipped: u64) {
+        let mut g = self.inner.lock().unwrap();
+        g.local_verify_rounds += local;
+        g.cloud_verify_rounds += cloud;
+        g.net_s += net_s;
+        g.cloud_tokens_shipped += tokens_shipped;
+    }
+
+    pub fn snapshot(&self) -> FleetReport {
+        let g = self.inner.lock().unwrap();
+        FleetReport {
+            placements: g.placements.clone(),
+            kv_filtered: g.kv_filtered,
+            local_verify_rounds: g.local_verify_rounds,
+            cloud_verify_rounds: g.cloud_verify_rounds,
+            cloud_requests: g.cloud_requests,
+            net_s: g.net_s,
+            cloud_tokens_shipped: g.cloud_tokens_shipped,
+        }
+    }
+}
+
+/// Point-in-time snapshot of [`FleetMetrics`].
+#[derive(Debug, Clone, Default)]
+pub struct FleetReport {
+    /// Requests placed per device, indexed like the fleet's device list.
+    pub placements: Vec<u64>,
+    /// Candidate devices skipped because the KV-admission probe predicted
+    /// an immediate memory shed (summed over all placements).
+    pub kv_filtered: u64,
+    /// Speculation rounds verified on the placed device itself.
+    pub local_verify_rounds: u64,
+    /// Speculation rounds verified on the cloud tier.
+    pub cloud_verify_rounds: u64,
+    /// Requests whose verify was routed to the cloud at admission.
+    pub cloud_requests: u64,
+    /// Modeled network seconds paid shipping draft/verdict payloads.
+    pub net_s: f64,
+    /// Draft tokens shipped over the modeled link.
+    pub cloud_tokens_shipped: u64,
+}
+
+impl FleetReport {
+    /// Fraction of verify rounds routed to the cloud (NaN before any
+    /// round completed).
+    pub fn cloud_verify_frac(&self) -> f64 {
+        let total = self.local_verify_rounds + self.cloud_verify_rounds;
+        if total > 0 {
+            self.cloud_verify_rounds as f64 / total as f64
+        } else {
+            f64::NAN
+        }
+    }
+
+    pub fn render(&self) -> String {
+        let placed: Vec<String> = self
+            .placements
+            .iter()
+            .enumerate()
+            .map(|(i, n)| format!("d{i}={n}"))
+            .collect();
+        format!(
+            "fleet: placements [{}] kv_filtered={}\n\
+             fleet verify: local_rounds={} cloud_rounds={} cloud_frac={:.3} \
+             cloud_requests={} net={:.1}ms tokens_shipped={}",
+            placed.join(" "),
+            self.kv_filtered,
+            self.local_verify_rounds,
+            self.cloud_verify_rounds,
+            self.cloud_verify_frac(),
+            self.cloud_requests,
+            self.net_s * 1e3,
+            self.cloud_tokens_shipped,
+        )
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -841,5 +966,34 @@ mod tests {
             tokens: 5, drafted: 0, accepted: 0,
         });
         assert!(m.snapshot().mean_alpha.is_nan());
+    }
+
+    #[test]
+    fn fleet_metrics_aggregate_and_render() {
+        let f = FleetMetrics::new(3);
+        let empty = f.snapshot();
+        assert_eq!(empty.placements, vec![0, 0, 0]);
+        assert!(empty.cloud_verify_frac().is_nan());
+
+        f.record_placement(0, 0);
+        f.record_placement(2, 1);
+        f.record_placement(2, 0);
+        f.record_placement(9, 0); // out-of-range device is ignored, not a panic
+        f.record_cloud_request();
+        f.record_verify_rounds(3, 1, 0.004, 12);
+        f.record_verify_rounds(0, 1, 0.002, 5);
+
+        let r = f.snapshot();
+        assert_eq!(r.placements, vec![1, 0, 2]);
+        assert_eq!(r.kv_filtered, 1);
+        assert_eq!(r.local_verify_rounds, 3);
+        assert_eq!(r.cloud_verify_rounds, 2);
+        assert_eq!(r.cloud_requests, 1);
+        assert_eq!(r.cloud_tokens_shipped, 17);
+        assert!((r.net_s - 0.006).abs() < 1e-12);
+        assert!((r.cloud_verify_frac() - 0.4).abs() < 1e-12);
+        let s = r.render();
+        assert!(s.contains("d0=1 d1=0 d2=2"), "{s}");
+        assert!(s.contains("cloud_frac=0.400"), "{s}");
     }
 }

@@ -47,7 +47,8 @@
 //! `{"cmd":"shutdown"}` stops the listener.
 
 use crate::api::{FinishReason, GenOptions, GenerationRequest};
-use crate::coordinator::Coordinator;
+use crate::coordinator::{Coordinator, RequestHandle};
+use crate::fleet::FleetRouter;
 use crate::tokenizer::{Tokenizer, SEP_ID};
 use crate::util::json::Json;
 use std::io::{BufRead, BufReader, Write};
@@ -55,6 +56,49 @@ use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
+
+/// What the server fronts: one coordinator (the historical shape) or a
+/// multi-device [`FleetRouter`] (`serve --fleet topo.json`). Generate
+/// lines, cancellation and backpressure fields all go through this seam;
+/// the single-coordinator wire behavior is unchanged.
+pub enum Backend {
+    Single(Arc<Coordinator>),
+    Fleet(Arc<FleetRouter>),
+}
+
+impl Backend {
+    fn submit(&self, req: GenerationRequest) -> RequestHandle {
+        match self {
+            Backend::Single(c) => c.submit(req),
+            Backend::Fleet(f) => f.submit(req).handle,
+        }
+    }
+
+    fn cancel(&self, id: u64) -> bool {
+        match self {
+            Backend::Single(c) => c.cancel(id),
+            Backend::Fleet(f) => f.cancel(id),
+        }
+    }
+
+    /// Admission-queue depth (summed across fleet devices).
+    fn queue_len(&self) -> usize {
+        match self {
+            Backend::Single(c) => c.queue_len(),
+            Backend::Fleet(f) => f.devices().iter().map(|d| d.coordinator.queue_len()).sum(),
+        }
+    }
+
+    /// Admission-queue capacity (summed across fleet devices).
+    fn queue_capacity(&self) -> usize {
+        match self {
+            Backend::Single(c) => c.queue_capacity(),
+            Backend::Fleet(f) => {
+                f.devices().iter().map(|d| d.coordinator.queue_capacity()).sum()
+            }
+        }
+    }
+}
 
 /// Running server handle.
 pub struct Server {
@@ -70,6 +114,16 @@ impl Server {
         tokenizer: Tokenizer,
         port: u16,
     ) -> anyhow::Result<Server> {
+        Server::start_with(Backend::Single(coordinator), tokenizer, port)
+    }
+
+    /// Bind and serve an explicit [`Backend`] (fleet-aware entry point).
+    pub fn start_with(
+        backend: Backend,
+        tokenizer: Tokenizer,
+        port: u16,
+    ) -> anyhow::Result<Server> {
+        let backend = Arc::new(backend);
         let listener = TcpListener::bind(("127.0.0.1", port))?;
         let port = listener.local_addr()?.port();
         listener.set_nonblocking(true)?;
@@ -88,7 +142,7 @@ impl Server {
                 while !stop2.load(Ordering::SeqCst) {
                     match listener.accept() {
                         Ok((stream, _)) => {
-                            let c = Arc::clone(&coordinator);
+                            let c = Arc::clone(&backend);
                             let t = tokenizer.clone();
                             let s = Arc::clone(&stop2);
                             let ids = Arc::clone(&next_id);
@@ -119,7 +173,7 @@ impl Server {
 
 fn handle_conn(
     stream: TcpStream,
-    coordinator: Arc<Coordinator>,
+    coordinator: Arc<Backend>,
     tokenizer: Tokenizer,
     stop: Arc<AtomicBool>,
     next_id: Arc<AtomicU64>,
@@ -175,7 +229,7 @@ fn wire_req_id(req: &Json) -> Option<u64> {
 /// writes last (the final summary, or an error object).
 fn handle_generate(
     req: &Json,
-    coordinator: &Coordinator,
+    coordinator: &Backend,
     tokenizer: &Tokenizer,
     next_id: &AtomicU64,
     stream: &mut TcpStream,
@@ -284,7 +338,7 @@ fn reply_final(
     tagged: bool,
     v2: bool,
     req_id: Option<u64>,
-    coordinator: &Coordinator,
+    coordinator: &Backend,
 ) -> Json {
     let r = match result {
         Ok(r) => r,
@@ -319,7 +373,7 @@ fn reply_final(
     final_json(r, tagged, v2)
 }
 
-fn cancel_json(req: &Json, coordinator: &Coordinator) -> Json {
+fn cancel_json(req: &Json, coordinator: &Backend) -> Json {
     let id = match wire_req_id(req) {
         Some(id) => id,
         None => {
@@ -348,7 +402,44 @@ fn cancel_json(req: &Json, coordinator: &Coordinator) -> Json {
     }
 }
 
-fn metrics_json(coordinator: &Coordinator, start_wall: std::time::Instant) -> Json {
+fn metrics_json(backend: &Backend, start_wall: std::time::Instant) -> Json {
+    match backend {
+        Backend::Single(c) => coordinator_metrics_json(c, start_wall),
+        Backend::Fleet(f) => fleet_metrics_json(f, start_wall),
+    }
+}
+
+/// Fleet metrics: one full per-device metrics object per device (keyed by
+/// device name, same shape as the single-coordinator snapshot) plus the
+/// fleet-tier placement/verify-routing counters.
+fn fleet_metrics_json(fleet: &FleetRouter, start_wall: std::time::Instant) -> Json {
+    let mut j = Json::obj();
+    j.set("ok", true.into())
+        .set("fleet_devices", fleet.device_count().into())
+        .set("wall_s", start_wall.elapsed().as_secs_f64().into());
+    let mut devices = Vec::new();
+    for d in fleet.devices() {
+        let mut dj = coordinator_metrics_json(&d.coordinator, start_wall);
+        dj.set("device", Json::Str(d.name.clone()));
+        devices.push(dj);
+    }
+    j.set("devices", Json::Arr(devices));
+    let fr = fleet.metrics().snapshot();
+    j.set(
+        "placements",
+        Json::Arr(fr.placements.iter().map(|&n| (n as usize).into()).collect()),
+    )
+    .set("kv_filtered", (fr.kv_filtered as usize).into())
+    .set("cloud_requests", (fr.cloud_requests as usize).into())
+    .set("local_verify_rounds", (fr.local_verify_rounds as usize).into())
+    .set("cloud_verify_rounds", (fr.cloud_verify_rounds as usize).into())
+    .set("cloud_verify_frac", fr.cloud_verify_frac().into())
+    .set("net_s", fr.net_s.into())
+    .set("cloud_tokens_shipped", (fr.cloud_tokens_shipped as usize).into());
+    j
+}
+
+fn coordinator_metrics_json(coordinator: &Coordinator, start_wall: std::time::Instant) -> Json {
     let r = coordinator.metrics.snapshot();
     let mut j = Json::obj();
     j.set("ok", true.into())
@@ -470,7 +561,7 @@ fn err_json(msg: &str, req_id: Option<u64>) -> Json {
 
 /// A v2 typed error: `kind` ∈ `bad_request | overloaded | cancelled |
 /// deadline | internal`, plus queue-state fields for client backoff.
-fn err_v2(kind: &str, msg: &str, req_id: Option<u64>, coordinator: &Coordinator) -> Json {
+fn err_v2(kind: &str, msg: &str, req_id: Option<u64>, coordinator: &Backend) -> Json {
     let mut j = err_json(msg, req_id);
     j.set("v", 2usize.into())
         .set("kind", Json::Str(kind.into()))

@@ -1,0 +1,117 @@
+//! Fleet-routing end-to-end tests over the real artifacts (skipped when
+//! `make artifacts` hasn't run): a fleet of one device must be
+//! bit-identical to a plain coordinator, and a multi-device fleet must
+//! spread load while serving every request.
+
+use specedge::config::RunConfig;
+use specedge::coordinator::Coordinator;
+use specedge::fleet::{FleetRouter, FleetSpec};
+use specedge::hetero::Platform;
+use specedge::tokenizer::Tokenizer;
+use specedge::workload::Request;
+use std::path::{Path, PathBuf};
+
+fn have_artifacts() -> bool {
+    if Path::new("artifacts/manifest.json").exists() {
+        true
+    } else {
+        eprintln!("SKIP: artifacts missing (run `make artifacts`)");
+        false
+    }
+}
+
+fn cfg() -> RunConfig {
+    RunConfig {
+        artifacts_dir: PathBuf::from("artifacts"),
+        max_new_tokens: 16,
+        gamma: Some(3),
+        workers: 1,
+        ..RunConfig::default()
+    }
+}
+
+fn sample_request(id: u64, text: &str) -> Request {
+    let t = Tokenizer::builtin();
+    let mut prompt = t.encode(text, true).unwrap();
+    prompt.push(specedge::tokenizer::SEP_ID);
+    Request { id, task: "translate".into(), prompt, truth: String::new(), arrival_s: 0.0 }
+}
+
+const PROMPTS: [&str; 3] = ["tr: nene caka", "tr: bobo lulu", "tr: kaka nene didi"];
+
+/// A fleet of exactly one device is the plain coordinator with a routing
+/// tier in front — token streams must be bit-identical.
+#[test]
+fn fleet_of_one_matches_plain_coordinator() {
+    if !have_artifacts() {
+        return;
+    }
+    let fleet = FleetRouter::start(&cfg(), FleetSpec::homogeneous(1, Platform::imx95())).unwrap();
+    let fleet_handles: Vec<_> = PROMPTS
+        .iter()
+        .enumerate()
+        .map(|(i, p)| fleet.submit(sample_request(1 + i as u64, p)).handle)
+        .collect();
+    let fleet_streams: Vec<Vec<u32>> = fleet_handles
+        .into_iter()
+        .map(|h| h.wait().unwrap().tokens)
+        .collect();
+    let report = fleet.metrics().snapshot();
+    assert_eq!(report.placements, vec![PROMPTS.len() as u64]);
+    fleet.shutdown();
+
+    let plain = Coordinator::start(cfg(), Platform::imx95()).unwrap();
+    let plain_handles: Vec<_> = PROMPTS
+        .iter()
+        .enumerate()
+        .map(|(i, p)| plain.submit(sample_request(1 + i as u64, p)))
+        .collect();
+    let plain_streams: Vec<Vec<u32>> = plain_handles
+        .into_iter()
+        .map(|h| h.wait().unwrap().tokens)
+        .collect();
+    plain.shutdown();
+
+    assert!(fleet_streams.iter().all(|s| !s.is_empty()));
+    assert_eq!(fleet_streams, plain_streams);
+}
+
+/// Two devices: every request is served, placements cover both devices,
+/// and the streams are independent of which device served them (greedy
+/// decode is device-agnostic).
+#[test]
+fn two_device_fleet_spreads_load_and_preserves_streams() {
+    if !have_artifacts() {
+        return;
+    }
+    let single = FleetRouter::start(&cfg(), FleetSpec::homogeneous(1, Platform::imx95())).unwrap();
+    let expect: Vec<Vec<u32>> = PROMPTS
+        .iter()
+        .enumerate()
+        .map(|(i, p)| single.submit(sample_request(1 + i as u64, p)).handle)
+        .collect::<Vec<_>>()
+        .into_iter()
+        .map(|h| h.wait().unwrap().tokens)
+        .collect();
+    single.shutdown();
+
+    let fleet = FleetRouter::start(&cfg(), FleetSpec::homogeneous(2, Platform::imx95())).unwrap();
+    assert_eq!(fleet.device_count(), 2);
+    let got: Vec<Vec<u32>> = PROMPTS
+        .iter()
+        .enumerate()
+        .map(|(i, p)| fleet.submit(sample_request(1 + i as u64, p)).handle)
+        .collect::<Vec<_>>()
+        .into_iter()
+        .map(|h| h.wait().unwrap().tokens)
+        .collect();
+    let report = fleet.metrics().snapshot();
+    assert_eq!(report.placements.iter().sum::<u64>(), PROMPTS.len() as u64);
+    assert!(
+        report.placements.iter().all(|&p| p > 0),
+        "placement starved a device: {:?}",
+        report.placements
+    );
+    fleet.shutdown();
+    assert_eq!(got, expect);
+}

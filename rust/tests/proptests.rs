@@ -554,3 +554,95 @@ fn prop_dse_best_is_feasible_and_optimal() {
         }
     });
 }
+
+// ---------- fleet placement properties --------------------------------
+
+#[test]
+fn prop_placement_never_picks_a_shedding_device_when_avoidable() {
+    // The issue's placement invariant: whenever at least one device's
+    // KV-admission probe is feasible, the chosen device's probe must be
+    // feasible too — placement never knowingly routes a request onto a
+    // device that would immediately shed it.
+    let p = Platform::imx95();
+    let lat = LatencyModel::new(p.clone());
+    let pair = specedge::dse::PairConfig {
+        target: ModelSpec {
+            name: "target".into(), n_layers: 4, d_model: 128, n_heads: 4,
+            ffn_dim: 352, vocab: 48, param_count: 816_256,
+        },
+        target_scheme: Scheme::W8a8,
+        drafter: ModelSpec {
+            name: "drafter".into(), n_layers: 2, d_model: 96, n_heads: 4,
+            ffn_dim: 256, vocab: 48, param_count: 230_880,
+        },
+        drafter_scheme: Scheme::Fp,
+    };
+    let pages = p.memory.kv_pages(PuId::Cpu);
+    forall("placement avoids shed", 300, |rng, _| {
+        let n = 1 + rng.below(6);
+        let mapping = Mapping::heterogeneous(1 + rng.below(6));
+        // Random per-device probes: some loads fit, some guarantee a shed.
+        let probes: Vec<Option<specedge::dse::KvLoad>> = (0..n)
+            .map(|_| match rng.below(3) {
+                0 => None,
+                1 => Some(specedge::dse::KvLoad {
+                    inflight: 1 + rng.below(3),
+                    budget_tokens: 32 + rng.below(96),
+                }),
+                _ => Some(specedge::dse::KvLoad {
+                    inflight: pages + 1 + rng.below(8),
+                    budget_tokens: 1 << 20,
+                }),
+            })
+            .collect();
+        let loads: Vec<(usize, f64, f64)> = (0..n)
+            .map(|_| (rng.below(5), rng.f64() * 10.0, 0.05 + 0.9 * rng.f64()))
+            .collect();
+        let views: Vec<_> = (0..n)
+            .map(|i| specedge::fleet::DeviceView {
+                platform: &p,
+                cost: &lat,
+                mapping,
+                queue_len: loads[i].0,
+                backlog_s: loads[i].1,
+                alpha: loads[i].2,
+                kv_probe: probes[i],
+            })
+            .collect();
+        let req = specedge::fleet::PlacementRequest {
+            pair: &pair,
+            seq_len: 8 + rng.below(120),
+            max_new: 8 + rng.below(56),
+            slo: if rng.f64() < 0.5 { specedge::api::SloClass::Interactive }
+                 else { specedge::api::SloClass::Batch },
+            deadline_s: if rng.f64() < 0.5 { Some(rng.f64() * 20.0) } else { None },
+        };
+        let feasible: Vec<bool> = views
+            .iter()
+            .map(|v| match &v.kv_probe {
+                Some(kv) => specedge::dse::kv_feasible(v.platform, &pair, v.mapping, kv),
+                None => true,
+            })
+            .collect();
+        let got = specedge::fleet::place(&views, &req);
+        assert!(got.device < n);
+        assert_eq!(got.scores.len(), n);
+        assert!(got.score.is_finite());
+        if feasible.iter().any(|&f| f) {
+            assert!(
+                feasible[got.device],
+                "placed on a shedding device {} (feasible map {feasible:?})",
+                got.device
+            );
+        }
+        // The winner is the argmin of the reported scores, lowest index first.
+        let best = got
+            .scores
+            .iter()
+            .enumerate()
+            .min_by(|(_, a), (_, b)| a.partial_cmp(b).unwrap())
+            .map(|(i, _)| i)
+            .unwrap();
+        assert_eq!(got.device, best);
+    });
+}
