@@ -182,6 +182,37 @@ impl KvCacheMode {
     }
 }
 
+/// Serving-shell architecture (the `serve_mode` knob). `event_loop` (the
+/// default) multiplexes every connection onto one nonblocking event-loop
+/// thread over the coordinator's handle API — per-connection read/write
+/// buffers, bounded outbound queues, token-bucket rate limiting, graceful
+/// drain and config hot-reload. `threaded` keeps the legacy
+/// thread-per-connection front-end as the A/B baseline the `serve_load`
+/// experiment measures against. Both modes speak byte-identical v1/v2
+/// wire protocols.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ServeMode {
+    Threaded,
+    EventLoop,
+}
+
+impl ServeMode {
+    pub fn parse(s: &str) -> anyhow::Result<ServeMode> {
+        match s {
+            "threaded" => Ok(ServeMode::Threaded),
+            "event_loop" => Ok(ServeMode::EventLoop),
+            _ => anyhow::bail!("serve_mode must be threaded|event_loop, got {s:?}"),
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ServeMode::Threaded => "threaded",
+            ServeMode::EventLoop => "event_loop",
+        }
+    }
+}
+
 /// Per-request verify placement under a fleet's cloud tier (the
 /// `cloud_verify` knob). Only consulted when a fleet file declares a
 /// `cloud` section ([`crate::fleet`]); without one every request verifies
@@ -263,6 +294,33 @@ pub struct RunConfig {
     pub port: u16,
     /// Serving: queue capacity before backpressure rejects.
     pub queue_capacity: usize,
+    /// Serving-shell architecture: `event_loop` (nonblocking connection
+    /// multiplexing, the default) or the legacy `threaded`
+    /// thread-per-connection baseline. See [`ServeMode`].
+    pub serve_mode: ServeMode,
+    /// Per-client token-bucket rate limit in requests/second
+    /// (0 = unlimited, the default). Over-limit generate lines get a
+    /// typed `overloaded` reply carrying `retry_after_ms`.
+    pub rate_limit_rps: f64,
+    /// Token-bucket burst depth: how many requests a client may issue
+    /// back-to-back before the refill rate binds.
+    pub rate_limit_burst: usize,
+    /// Bounded per-client outbound reply queue, in lines. A consumer too
+    /// slow to drain its socket overflows the queue and is disconnected
+    /// with a typed `overloaded` error instead of blocking the loop
+    /// (event-loop mode only — threaded mode blocks per thread).
+    pub client_queue_depth: usize,
+    /// Graceful drain: seconds in-flight requests get to finish after a
+    /// `{"cmd":"drain"}` (or `Server::drain()`) before being cancelled
+    /// against their handles. Every in-flight request still receives its
+    /// final reply — drain never drops one.
+    pub drain_deadline_s: f64,
+    /// Metrics history: append one JSON-lines metrics snapshot to this
+    /// file every [`metrics_history_every_s`](Self::metrics_history_every_s)
+    /// seconds while serving (event-loop mode; `None` = off).
+    pub metrics_history_file: Option<PathBuf>,
+    /// Seconds between metrics-history snapshots.
+    pub metrics_history_every_s: f64,
     /// Batch limit for the dynamic batcher (1 = no batching).
     pub max_batch: usize,
     /// Live decode sessions each worker interleaves round-by-round
@@ -344,6 +402,13 @@ impl Default for RunConfig {
             workers: 1,
             port: 7643,
             queue_capacity: 256,
+            serve_mode: ServeMode::EventLoop,
+            rate_limit_rps: 0.0,
+            rate_limit_burst: 32,
+            client_queue_depth: 1024,
+            drain_deadline_s: 30.0,
+            metrics_history_file: None,
+            metrics_history_every_s: 5.0,
             max_batch: 1,
             max_inflight: 4,
             fuse: true,
@@ -417,6 +482,27 @@ impl RunConfig {
         if let Some(v) = j.get("queue_capacity").and_then(Json::as_usize) {
             self.queue_capacity = v;
         }
+        if let Some(v) = j.get("serve_mode").and_then(Json::as_str) {
+            self.serve_mode = ServeMode::parse(v)?;
+        }
+        if let Some(v) = j.get("rate_limit_rps").and_then(Json::as_f64) {
+            self.rate_limit_rps = v;
+        }
+        if let Some(v) = j.get("rate_limit_burst").and_then(Json::as_usize) {
+            self.rate_limit_burst = v;
+        }
+        if let Some(v) = j.get("client_queue_depth").and_then(Json::as_usize) {
+            self.client_queue_depth = v;
+        }
+        if let Some(v) = j.get("drain_deadline_s").and_then(Json::as_f64) {
+            self.drain_deadline_s = v;
+        }
+        if let Some(v) = j.get("metrics_history_file").and_then(Json::as_str) {
+            self.metrics_history_file = Some(PathBuf::from(v));
+        }
+        if let Some(v) = j.get("metrics_history_every_s").and_then(Json::as_f64) {
+            self.metrics_history_every_s = v;
+        }
         if let Some(v) = j.get("max_batch").and_then(Json::as_usize) {
             self.max_batch = v;
         }
@@ -477,6 +563,20 @@ impl RunConfig {
         if let Some(g) = self.gamma {
             anyhow::ensure!((1..=8).contains(&g), "gamma must be 1..=8");
         }
+        anyhow::ensure!(
+            self.rate_limit_rps.is_finite() && self.rate_limit_rps >= 0.0,
+            "rate_limit_rps must be finite and >= 0 (0 = unlimited)"
+        );
+        anyhow::ensure!(self.rate_limit_burst >= 1, "rate_limit_burst must be >= 1");
+        anyhow::ensure!(self.client_queue_depth >= 1, "client_queue_depth must be >= 1");
+        anyhow::ensure!(
+            self.drain_deadline_s.is_finite() && self.drain_deadline_s >= 0.0,
+            "drain_deadline_s must be finite and >= 0"
+        );
+        anyhow::ensure!(
+            self.metrics_history_every_s.is_finite() && self.metrics_history_every_s > 0.0,
+            "metrics_history_every_s must be finite and > 0"
+        );
         anyhow::ensure!(
             self.cloud_rtt_ms.is_finite() && self.cloud_rtt_ms >= 0.0,
             "cloud_rtt_ms must be finite and >= 0"
@@ -687,6 +787,58 @@ mod tests {
         assert!(c.apply_json(&Json::parse(r#"{"cloud_mbps":0}"#).unwrap()).is_err());
         let mut c = RunConfig::default();
         assert!(c.apply_json(&Json::parse(r#"{"cloud_rtt_ms":-1}"#).unwrap()).is_err());
+    }
+
+    #[test]
+    fn serve_mode_defaults_event_loop_and_parses() {
+        let c = RunConfig::default();
+        assert_eq!(c.serve_mode, ServeMode::EventLoop);
+        assert_eq!(c.serve_mode.as_str(), "event_loop");
+        let mut c = RunConfig::default();
+        c.apply_json(&Json::parse(r#"{"serve_mode":"threaded"}"#).unwrap()).unwrap();
+        assert_eq!(c.serve_mode, ServeMode::Threaded);
+        assert_eq!(ServeMode::parse("event_loop").unwrap(), ServeMode::EventLoop);
+        assert!(ServeMode::parse("async").is_err());
+        let mut c = RunConfig::default();
+        assert!(c.apply_json(&Json::parse(r#"{"serve_mode":"epoll"}"#).unwrap()).is_err());
+    }
+
+    #[test]
+    fn serving_shell_knobs_default_and_validate() {
+        let c = RunConfig::default();
+        assert!((c.rate_limit_rps - 0.0).abs() < 1e-12, "rate limit defaults off");
+        assert_eq!(c.rate_limit_burst, 32);
+        assert_eq!(c.client_queue_depth, 1024);
+        assert!((c.drain_deadline_s - 30.0).abs() < 1e-12);
+        assert_eq!(c.metrics_history_file, None);
+        assert!((c.metrics_history_every_s - 5.0).abs() < 1e-12);
+        let mut c = RunConfig::default();
+        let j = Json::parse(
+            r#"{"rate_limit_rps":100.5,"rate_limit_burst":8,"client_queue_depth":64,
+                "drain_deadline_s":2.5,"metrics_history_file":"hist.jsonl",
+                "metrics_history_every_s":1}"#,
+        )
+        .unwrap();
+        c.apply_json(&j).unwrap();
+        assert!((c.rate_limit_rps - 100.5).abs() < 1e-12);
+        assert_eq!(c.rate_limit_burst, 8);
+        assert_eq!(c.client_queue_depth, 64);
+        assert!((c.drain_deadline_s - 2.5).abs() < 1e-12);
+        assert_eq!(c.metrics_history_file, Some(PathBuf::from("hist.jsonl")));
+        assert!((c.metrics_history_every_s - 1.0).abs() < 1e-12);
+        // Degenerate values fail at config load, not mid-serve.
+        let mut c = RunConfig::default();
+        assert!(c.apply_json(&Json::parse(r#"{"rate_limit_rps":-1}"#).unwrap()).is_err());
+        let mut c = RunConfig::default();
+        assert!(c.apply_json(&Json::parse(r#"{"rate_limit_burst":0}"#).unwrap()).is_err());
+        let mut c = RunConfig::default();
+        assert!(c.apply_json(&Json::parse(r#"{"client_queue_depth":0}"#).unwrap()).is_err());
+        let mut c = RunConfig::default();
+        assert!(c.apply_json(&Json::parse(r#"{"drain_deadline_s":-0.5}"#).unwrap()).is_err());
+        let mut c = RunConfig::default();
+        assert!(c
+            .apply_json(&Json::parse(r#"{"metrics_history_every_s":0}"#).unwrap())
+            .is_err());
     }
 
     #[test]

@@ -1,5 +1,10 @@
-//! Lockstep batched decode for non-speculative (baseline) requests — the
-//! *static*-batching reference implementation.
+//! **Quarantined legacy path** — lockstep batched decode for
+//! non-speculative (baseline) requests, the *static*-batching reference
+//! implementation. Production serving never routes here: the only
+//! entries are the `fuse: false` A/B knob and the accounting tests in
+//! `tests/fused_e2e.rs`. Kept (under this deliberately unglamorous
+//! name) because the measured lockstep tail is the baseline the fused
+//! executor's win is quantified against.
 //!
 //! Without a KV cache, batching is lockstep full-sequence re-encoding:
 //! requests grouped into one `forward_batch` call advance one token each

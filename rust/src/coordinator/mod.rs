@@ -19,8 +19,9 @@
 //!   and schedules every dispatch on the worker's per-PU timelines
 //!   ([`crate::hetero::PuTimelines`]) so heterogeneous draft/verify
 //!   dispatches overlap across co-scheduled sessions
-//! * [`batcher`] — the legacy lockstep static-batching reference (the
-//!   serving path now batches through [`fuser`] instead)
+//! * [`legacy_lockstep`] — quarantined pre-fuser static-batching
+//!   reference (A/B baseline only; the serving path batches through
+//!   [`fuser`])
 //! * [`worker`] — engine worker threads (one PJRT engine each), each
 //!   running a tick-level scheduler over up to `max_inflight` resumable
 //!   [`DecodeSession`](crate::spec::DecodeSession)s
@@ -42,8 +43,8 @@
 //! and never errors: backpressure comes back through the handle as a
 //! `Rejected` response.
 
-pub mod batcher;
 pub mod fuser;
+pub mod legacy_lockstep;
 pub mod policy;
 pub mod queue;
 pub mod worker;
@@ -242,6 +243,21 @@ impl RequestHandle {
     /// Non-blocking check for the final response.
     pub fn try_wait(&self) -> Option<EngineResponse> {
         self.response.try_recv().ok()
+    }
+
+    /// Non-blocking poll that distinguishes "not yet" (`None`) from
+    /// "worker died without answering" (`Some(Err(_))`, mirroring
+    /// [`wait`](Self::wait)'s error). Event-loop callers need the
+    /// distinction: plain [`try_wait`](Self::try_wait) folds a dropped
+    /// channel into `None`, which would poll forever.
+    pub fn try_wait_done(&self) -> Option<anyhow::Result<EngineResponse>> {
+        match self.response.try_recv() {
+            Ok(r) => Some(Ok(r)),
+            Err(mpsc::TryRecvError::Empty) => None,
+            Err(mpsc::TryRecvError::Disconnected) => {
+                Some(Err(anyhow::anyhow!("worker dropped the request")))
+            }
+        }
     }
 
     /// Non-blocking poll for the next streamed [`TokenFrame`].

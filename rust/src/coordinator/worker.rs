@@ -42,8 +42,9 @@
 //! `max_batch` sessions on the ref lowering (the only kernel with batched
 //! artifacts), whose per-tick target forwards fuse into shared dispatches
 //! — recovering batched baseline decode without the lockstep drain tail.
-//! With `fuse: false` that configuration instead runs the legacy lockstep
-//! [`batcher`](super::batcher) loop, the true pre-fusion A/B baseline.
+//! With `fuse: false` that configuration instead runs the quarantined
+//! [`legacy_lockstep`](super::legacy_lockstep) loop, the true pre-fusion
+//! A/B baseline.
 //! Lifecycle state reaches that path at batch *boundaries*: dead items
 //! are shed before the batch forms, requests whose options shape the
 //! decode (per-request `max_new`, stops, sampling) are peeled off onto
@@ -65,8 +66,8 @@ use crate::util::rng::Rng;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc};
 
-use super::batcher;
 use super::fuser::{self, TickEvent};
+use super::legacy_lockstep;
 use super::policy::Policy;
 use super::queue::{QueueItem, RequestQueue};
 use super::{CancelGuard, EngineResponse, TokenFrame};
@@ -854,7 +855,7 @@ fn serve_lockstep(
         lat.batched_forward_latency(&t_spec, t_scheme, mapping.target, bucket, exec_b)
     };
     // Batched artifacts exist only for the ref lowering (see aot.py).
-    let outcomes = match batcher::batched_baseline(
+    let outcomes = match legacy_lockstep::batched_baseline(
         engine, target, KernelPath::Ref, &prompts, cfg.max_new_tokens, &sim_forward,
     ) {
         Ok(o) => o,

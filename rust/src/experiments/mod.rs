@@ -12,6 +12,7 @@ pub mod fleet;
 pub mod kvcache;
 pub mod overlap;
 pub mod repartition;
+pub mod serve_load;
 pub mod tables;
 pub mod tree;
 
@@ -78,11 +79,12 @@ pub fn run(ctx: &Ctx, which: &str) -> anyhow::Result<()> {
         "tree" => tree::run(ctx),
         "kvcache" => kvcache::run(ctx),
         "fleet" => fleet::run(ctx),
+        "serve_load" => serve_load::run(ctx),
         "all" => {
             for id in [
                 "table2", "table3", "fig6a", "fig6b", "fig7a", "fig5a", "fig5b",
                 "fig7b", "deviation", "overlap", "repartition", "tree", "kvcache",
-                "fleet",
+                "fleet", "serve_load",
             ] {
                 println!("\n=== experiment {id} ===");
                 run(ctx, id)?;
@@ -91,7 +93,8 @@ pub fn run(ctx: &Ctx, which: &str) -> anyhow::Result<()> {
         }
         other => anyhow::bail!(
             "unknown experiment {other:?} (fig5a fig5b fig6a fig6b table2 table3 \
-             fig7a fig7b deviation alpha overlap repartition tree kvcache fleet all)"
+             fig7a fig7b deviation alpha overlap repartition tree kvcache fleet \
+             serve_load all)"
         ),
     }
 }

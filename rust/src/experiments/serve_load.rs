@@ -1,0 +1,339 @@
+//! Serving-shell load benchmark (`experiment serve_load`) — the
+//! event-loop-vs-threaded comparison the server rewrite is justified by,
+//! plus open-loop SLO behavior and drain correctness. Four phases, one
+//! CSV (`serve_load.csv`, tagged by the `phase` column) and one JSON-lines
+//! file (`serve_load.jsonl`, one [`LoadReport`] per phase):
+//!
+//! **threaded_closed / event_closed** — the same closed-loop
+//! connection-churn workload (every request pays a fresh TCP connect —
+//! the regime where thread-per-connection serving pays a serialized
+//! accept + thread spawn per request) against each `serve_mode`, same
+//! seed, same prompt schedule, same engine config. Asserts:
+//! every request completes (zero shed / error / corrupt) in both modes,
+//! and the per-request completions are **byte-identical across modes**
+//! (`c{client}.r{seq}` → completion) — the shells may only differ in
+//! *when* bytes move, never in *which* bytes. At ≥ 1000 clients (and not
+//! under `SPECEDGE_BENCH_SMOKE`) additionally asserts the event-loop
+//! shell **strictly wins** on both throughput and p99 latency.
+//!
+//! **event_open** — open-loop Poisson arrivals against the event-loop
+//! shell with mixed SLO classes (half the clients interactive v2 lines
+//! with a `deadline_ms`, half batch v1) and streaming on, reporting
+//! p50/p99/p999, accept-to-first-frame and the deadline-miss rate.
+//! Asserts zero corrupt streams and zero transport errors (deadline
+//! expiries come back as *typed* replies, not drops).
+//!
+//! **event_drain** — one in-flight request per client, then
+//! [`Server::drain`] fires *while they are executing* (the experiment
+//! waits until every request is admitted first, so the race is
+//! drain-vs-execution, not drain-vs-admission). Asserts the graceful
+//! drain drops nothing: every single request still gets its `ok:true`
+//! final, and the serving thread then exits on its own
+//! ([`Server::wait`] returns).
+
+use crate::config::{RunConfig, ServeMode};
+use crate::coordinator::Coordinator;
+use crate::loadgen::{self, LoadReport, LoadSpec};
+use crate::server::{Backend, Server};
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use super::Ctx;
+
+/// Closed-loop requests per client (phases A/B).
+const REQS_PER_CLIENT: usize = 2;
+
+/// Engine + shell config shared by every phase: a deliberately light
+/// decode (the experiment measures the *front door*, not the engine) and
+/// an admission queue sized so closed-loop phases never shed.
+fn serve_cfg(ctx: &Ctx, clients: usize, mode: ServeMode) -> RunConfig {
+    let mut cfg = ctx.cfg.clone();
+    cfg.serve_mode = mode;
+    cfg.port = 0;
+    cfg.workers = 2;
+    cfg.max_inflight = 8;
+    cfg.max_new_tokens = 2;
+    cfg.queue_capacity = clients * 2 + 16;
+    cfg.rate_limit_rps = 0.0;
+    cfg.fleet_file = None;
+    cfg.metrics_history_file = None;
+    cfg
+}
+
+fn start_server(ctx: &Ctx, cfg: &RunConfig) -> anyhow::Result<(Server, Arc<Coordinator>)> {
+    let coord = Arc::new(Coordinator::start(cfg.clone(), ctx.lat.platform.clone())?);
+    let server = Server::start_cfg(
+        Backend::Single(Arc::clone(&coord)),
+        ctx.tokenizer.clone(),
+        cfg,
+    )?;
+    Ok((server, coord))
+}
+
+/// Stop the serving shell, then reclaim and shut down the engine.
+fn stop_server(server: Server, coord: Arc<Coordinator>) {
+    server.stop();
+    if let Ok(c) = Arc::try_unwrap(coord) {
+        c.shutdown();
+    }
+}
+
+/// Format a float CSV cell, empty when the metric has no samples.
+fn fm(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x:.3}")
+    } else {
+        String::new()
+    }
+}
+
+fn record(csv: &mut String, jsonl: &mut String, mode: &str, phase: &str, r: &LoadReport) {
+    println!(
+        "  {phase:<16} {mode:<10} {:>5} clients  {:>6} req  {:>6} ok  \
+         {:>4} shed  {:>3} err  {:>3} corrupt  {:>8.1} req/s  \
+         p50 {} ms  p99 {} ms  miss {:.3}",
+        r.clients,
+        r.issued,
+        r.completed,
+        r.shed,
+        r.errors,
+        r.corrupt,
+        r.throughput_rps,
+        fm(r.p50_ms),
+        fm(r.p99_ms),
+        r.deadline_miss_rate(),
+    );
+    csv.push_str(&format!(
+        "{mode},{phase},{},{},{},{},{},{},{:.3},{:.2},{},{},{},{},{},{:.4}\n",
+        r.clients,
+        r.issued,
+        r.completed,
+        r.shed,
+        r.errors,
+        r.corrupt,
+        r.wall_s,
+        r.throughput_rps,
+        fm(r.p50_ms),
+        fm(r.p99_ms),
+        fm(r.p999_ms),
+        fm(r.ttff_p50_ms),
+        fm(r.ttff_p99_ms),
+        r.deadline_miss_rate(),
+    ));
+    let mut j = r.to_json();
+    j.set("mode", crate::util::json::Json::Str(mode.into()))
+        .set("phase", crate::util::json::Json::Str(phase.into()));
+    jsonl.push_str(&j.to_string());
+    jsonl.push('\n');
+}
+
+/// A phase's requests must all complete, with no shed, error or
+/// corruption — the closed-loop phases are sized so anything else is a
+/// serving-shell bug, not load.
+fn assert_clean(phase: &str, r: &LoadReport) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        r.completed == r.issued && r.shed == 0 && r.errors == 0,
+        "{phase}: {} of {} completed ({} shed, {} errors) — requests were lost",
+        r.completed,
+        r.issued,
+        r.shed,
+        r.errors
+    );
+    anyhow::ensure!(r.corrupt == 0, "{phase}: {} corrupted reply streams", r.corrupt);
+    Ok(())
+}
+
+pub fn run(ctx: &Ctx) -> anyhow::Result<()> {
+    let smoke = std::env::var("SPECEDGE_BENCH_SMOKE").is_ok();
+    let clients = ctx.limit.unwrap_or(if smoke { 64 } else { 1200 }).max(2);
+    // The headline claim is only asserted at benchmark scale: small runs
+    // (CI smoke) check correctness and parity, not the perf ordering.
+    let strict = clients >= 1000 && !smoke;
+
+    let prompts: Vec<String> = ctx
+        .engine
+        .manifest
+        .eval_samples
+        .iter()
+        .filter(|s| s.task == "translate")
+        .take(6)
+        .map(|s| s.prompt.clone())
+        .collect();
+    anyhow::ensure!(!prompts.is_empty(), "no translate eval samples in the manifest");
+
+    let base = LoadSpec {
+        clients,
+        requests_per_client: REQS_PER_CLIENT,
+        reconnect_per_request: true,
+        record_completions: true,
+        prompts,
+        task: "translate".into(),
+        seed: ctx.seed,
+        ..LoadSpec::default()
+    };
+
+    let mut csv = String::from(
+        "mode,phase,clients,issued,completed,shed,errors,corrupt,wall_s,\
+         throughput_rps,p50_ms,p99_ms,p999_ms,ttff_p50_ms,ttff_p99_ms,\
+         deadline_miss_rate\n",
+    );
+    let mut jsonl = String::new();
+
+    println!(
+        "Serving load ({clients} clients x {REQS_PER_CLIENT} requests closed-loop, \
+         strict perf assert: {strict}):"
+    );
+
+    // ---- A: threaded shell, closed-loop churn --------------------------
+    let cfg_a = serve_cfg(ctx, clients, ServeMode::Threaded);
+    let (server_a, coord_a) = start_server(ctx, &cfg_a)?;
+    let spec_a = LoadSpec { port: server_a.port, ..base.clone() };
+    let a = loadgen::run(&spec_a)?;
+    stop_server(server_a, coord_a);
+    record(&mut csv, &mut jsonl, "threaded", "threaded_closed", &a);
+    assert_clean("threaded_closed", &a)?;
+
+    // ---- B: event-loop shell, identical workload -----------------------
+    let mut cfg_b = serve_cfg(ctx, clients, ServeMode::EventLoop);
+    let history = ctx.out_dir.join("metrics_history.jsonl");
+    let _ = std::fs::remove_file(&history);
+    cfg_b.metrics_history_file = Some(history.clone());
+    let (server_b, coord_b) = start_server(ctx, &cfg_b)?;
+    let spec_b = LoadSpec { port: server_b.port, ..base.clone() };
+    let b = loadgen::run(&spec_b)?;
+    stop_server(server_b, coord_b);
+    record(&mut csv, &mut jsonl, "event_loop", "event_closed", &b);
+    assert_clean("event_closed", &b)?;
+
+    // Wire parity: identical per-request token streams across shells.
+    anyhow::ensure!(
+        a.completions.len() == a.issued && b.completions.len() == b.issued,
+        "parity: completion records missing ({} / {} vs {} / {})",
+        a.completions.len(),
+        a.issued,
+        b.completions.len(),
+        b.issued
+    );
+    anyhow::ensure!(
+        a.completions == b.completions,
+        "event_loop and threaded shells produced different completions \
+         for the same request schedule"
+    );
+    println!(
+        "  parity: {} completions byte-identical across serve modes OK",
+        a.completions.len()
+    );
+    // The history file must have accumulated snapshots (at least the
+    // final at-exit line).
+    let hist_lines = std::fs::read_to_string(&history)
+        .map(|s| s.lines().count())
+        .unwrap_or(0);
+    anyhow::ensure!(hist_lines > 0, "metrics history {history:?} is empty");
+
+    if strict {
+        anyhow::ensure!(
+            b.throughput_rps > a.throughput_rps,
+            "event_loop throughput ({:.1} req/s) did not beat threaded ({:.1} req/s) \
+             at {clients} clients",
+            b.throughput_rps,
+            a.throughput_rps
+        );
+        anyhow::ensure!(
+            b.p99_ms < a.p99_ms,
+            "event_loop p99 ({:.1} ms) did not beat threaded ({:.1} ms) at {clients} clients",
+            b.p99_ms,
+            a.p99_ms
+        );
+        println!(
+            "  win: event_loop {:.1} req/s / p99 {:.1} ms vs threaded {:.1} req/s / \
+             p99 {:.1} ms OK",
+            b.throughput_rps,
+            b.p99_ms,
+            a.throughput_rps,
+            a.p99_ms
+        );
+    }
+
+    // ---- C: event-loop shell, open-loop Poisson, mixed SLO classes -----
+    let cfg_c = serve_cfg(ctx, clients, ServeMode::EventLoop);
+    let (server_c, coord_c) = start_server(ctx, &cfg_c)?;
+    let spec_c = LoadSpec {
+        port: server_c.port,
+        open_loop_rps: (clients as f64 * 0.5).clamp(8.0, 400.0),
+        duration_s: 3.0,
+        reconnect_per_request: false,
+        streaming: true,
+        interactive_frac: 0.5,
+        deadline_ms: 250.0,
+        record_completions: false,
+        ..base.clone()
+    };
+    let c = loadgen::run(&spec_c)?;
+    stop_server(server_c, coord_c);
+    record(&mut csv, &mut jsonl, "event_loop", "event_open", &c);
+    anyhow::ensure!(c.corrupt == 0, "event_open: {} corrupted streams", c.corrupt);
+    anyhow::ensure!(
+        c.errors == 0,
+        "event_open: {} transport errors (deadline expiries must be typed replies)",
+        c.errors
+    );
+    anyhow::ensure!(c.completed > 0, "event_open: nothing completed");
+    anyhow::ensure!(
+        c.deadline_requests > 0,
+        "event_open: no interactive-class requests were issued"
+    );
+    anyhow::ensure!(
+        c.ttff_p50_ms.is_finite(),
+        "event_open: streaming produced no first-frame samples"
+    );
+
+    // ---- D: graceful drain under in-flight load ------------------------
+    let d_clients = clients.min(128);
+    let mut cfg_d = serve_cfg(ctx, d_clients, ServeMode::EventLoop);
+    // More work per request, so the drain genuinely races execution.
+    cfg_d.max_new_tokens = 8;
+    let (mut server_d, coord_d) = start_server(ctx, &cfg_d)?;
+    let spec_d = LoadSpec {
+        port: server_d.port,
+        clients: d_clients,
+        requests_per_client: 1,
+        reconnect_per_request: false,
+        record_completions: false,
+        ..base.clone()
+    };
+    let stats = Arc::clone(&server_d.stats);
+    let gen = std::thread::spawn(move || loadgen::run(&spec_d));
+    // Wait until every request is admitted, then drain mid-execution.
+    let t0 = Instant::now();
+    while (stats.requests.load(Ordering::Relaxed) as usize) < d_clients {
+        anyhow::ensure!(
+            t0.elapsed() < Duration::from_secs(30),
+            "event_drain: only {} of {d_clients} requests admitted after 30 s",
+            stats.requests.load(Ordering::Relaxed)
+        );
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    server_d.drain();
+    let d = gen.join().map_err(|_| anyhow::anyhow!("load thread panicked"))??;
+    record(&mut csv, &mut jsonl, "event_loop", "event_drain", &d);
+    anyhow::ensure!(
+        d.issued == d_clients,
+        "event_drain: issued {} of {d_clients}",
+        d.issued
+    );
+    assert_clean("event_drain", &d)?;
+    // The drain must also terminate the serving thread on its own.
+    server_d.wait();
+    println!("  drain: all {d_clients} in-flight requests completed, server exited OK");
+    drop(server_d);
+    if let Ok(c) = Arc::try_unwrap(coord_d) {
+        c.shutdown();
+    }
+
+    ctx.write_csv("serve_load.csv", &csv)?;
+    let jsonl_path = ctx.out_dir.join("serve_load.jsonl");
+    std::fs::write(&jsonl_path, &jsonl)?;
+    println!("  -> wrote {}", jsonl_path.display());
+    Ok(())
+}

@@ -30,11 +30,15 @@
 //!   per-worker manager with memory-aware admission
 //! * [`spec`] — the speculative sampling engine (modular + monolithic)
 //! * [`workload`] — Spec-Bench-shaped workload and arrival processes
-//! * [`coordinator`] — router, batcher, queue, worker lifecycle
+//! * [`coordinator`] — router, fused batching, queue, worker lifecycle
+//!   (plus the quarantined [`coordinator::legacy_lockstep`] reference)
 //! * [`fleet`] — multi-device routing tier: per-device coordinators,
 //!   placement policy, device timelines, cloud-edge collaborative
 //!   speculation over a modeled network link
-//! * [`server`] — TCP line-JSON serving front-end
+//! * [`server`] — TCP line-JSON serving front-end: nonblocking
+//!   event-loop shell (default) + legacy thread-per-connection baseline
+//! * [`loadgen`] — many-client load harness driving the server
+//!   (open-loop Poisson + closed-loop, mixed SLO classes)
 //! * [`metrics`] — latency/acceptance recording
 //! * [`experiments`] — one driver per paper table/figure
 //! * [`bench`] — mini-criterion harness used by `cargo bench` targets
@@ -50,6 +54,7 @@ pub mod experiments;
 pub mod fleet;
 pub mod hetero;
 pub mod kvcache;
+pub mod loadgen;
 pub mod metrics;
 pub mod models;
 pub mod profiler;

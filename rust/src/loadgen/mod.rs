@@ -1,0 +1,692 @@
+//! Many-client load harness for the serving front-end.
+//!
+//! Drives a running [`server`](crate::server) port with up to tens of
+//! thousands of simulated concurrent clients without spawning a thread
+//! per client: a small pool of driver threads multiplexes nonblocking
+//! client sockets with the same sweep discipline the event-loop shell
+//! uses (partial-line reassembly on read, partial-write buffers on
+//! send). That keeps the harness itself out of the measurement — a
+//! thread-per-client loadgen would hit the exact scheduler collapse the
+//! experiment is trying to measure *in the server*.
+//!
+//! Two drive modes:
+//!
+//! - **closed-loop** (`open_loop_rps == 0`): every client keeps exactly
+//!   one request in flight, issuing the next as soon as the final reply
+//!   lands, `requests_per_client` times. With
+//!   [`LoadSpec::reconnect_per_request`] each request also pays a fresh
+//!   TCP connect — connection churn, the regime where thread-per-
+//!   connection serving pays a serialized accept+spawn per request.
+//! - **open-loop** (`open_loop_rps > 0`): arrivals follow a Poisson
+//!   process (rate split evenly across clients, independent per-client
+//!   exponential gaps) for `duration_s`, regardless of completions.
+//!   Latency is measured from the *scheduled* arrival, so server-side
+//!   queueing during overload shows up in the tail instead of slowing
+//!   the arrival process down (the open-loop property).
+//!
+//! Mixed SLO classes: the first `interactive_frac` of clients send v2
+//! lines with `slo: interactive` and a `deadline_ms`; the rest send
+//! seed-shaped v1 lines (batch class). Streaming mode records
+//! accept-to-first-frame per request and checks frame integrity (round
+//! monotonicity, `done` terminality) so a load run doubles as a
+//! corruption check.
+//!
+//! The result is a [`LoadReport`]: p50/p99/p999 latency, throughput,
+//! deadline-miss rate, accept-to-first-frame percentiles, shed/error
+//! taxonomy counts, and (optionally) per-request completions keyed by
+//! `c{client}.r{seq}` so two runs over the same prompt schedule can be
+//! asserted byte-identical (`experiment serve_load` does exactly that
+//! across `serve_mode`s).
+
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::util::stats::Summary;
+use std::collections::{BTreeMap, VecDeque};
+use std::io::{ErrorKind, Read, Write};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+/// One load scenario against an already-running server.
+#[derive(Debug, Clone)]
+pub struct LoadSpec {
+    /// Server port (localhost).
+    pub port: u16,
+    /// Concurrent simulated clients.
+    pub clients: usize,
+    /// Closed-loop: requests each client issues.
+    pub requests_per_client: usize,
+    /// Aggregate Poisson arrival rate (requests/s); 0 = closed-loop.
+    pub open_loop_rps: f64,
+    /// Open-loop: how long arrivals keep coming.
+    pub duration_s: f64,
+    /// Closed-loop: reconnect for every request (connection churn).
+    pub reconnect_per_request: bool,
+    /// Request streamed frames and record accept-to-first-frame.
+    pub streaming: bool,
+    /// Fraction of clients in the interactive SLO class (v2 lines with
+    /// `deadline_ms`); the rest send v1 batch-class lines.
+    pub interactive_frac: f64,
+    /// Deadline the interactive class requests (ms); 0 disables.
+    pub deadline_ms: f64,
+    /// Prompt schedule, cycled deterministically by (client, seq).
+    pub prompts: Vec<String>,
+    pub task: String,
+    /// Driver threads multiplexing the clients (0 = auto).
+    pub drivers: usize,
+    pub seed: u64,
+    /// TCP connect timeout per attempt.
+    pub connect_timeout_s: f64,
+    /// Per-request reply timeout (a stuck request becomes an error
+    /// instead of hanging the harness).
+    pub request_timeout_s: f64,
+    /// Keep per-request completion text for cross-run parity asserts
+    /// (costs memory at high request counts).
+    pub record_completions: bool,
+}
+
+impl Default for LoadSpec {
+    fn default() -> LoadSpec {
+        LoadSpec {
+            port: 0,
+            clients: 64,
+            requests_per_client: 4,
+            open_loop_rps: 0.0,
+            duration_s: 5.0,
+            reconnect_per_request: false,
+            streaming: false,
+            interactive_frac: 0.0,
+            deadline_ms: 0.0,
+            prompts: vec!["tr: cela vodu".into()],
+            task: "translate".into(),
+            drivers: 0,
+            seed: 17,
+            connect_timeout_s: 5.0,
+            request_timeout_s: 60.0,
+            record_completions: false,
+        }
+    }
+}
+
+impl LoadSpec {
+    fn driver_count(&self) -> usize {
+        if self.drivers > 0 {
+            return self.drivers;
+        }
+        (self.clients / 64).clamp(1, 8)
+    }
+
+    fn prompt_for(&self, client: usize, seq: usize) -> &str {
+        &self.prompts[(client * self.requests_per_client.max(1) + seq) % self.prompts.len()]
+    }
+}
+
+/// One request's fate, as the harness observed it.
+struct ReqOutcome {
+    client: usize,
+    seq: usize,
+    ok: bool,
+    /// Typed overload shed (queue full / rate limit / drain).
+    shed: bool,
+    /// Transport failure, malformed reply, or reply timeout.
+    error: bool,
+    corrupt: bool,
+    latency_ms: f64,
+    ttff_ms: Option<f64>,
+    deadline_missed: bool,
+    completion: Option<String>,
+}
+
+/// Aggregated result of one [`run`].
+#[derive(Debug, Clone)]
+pub struct LoadReport {
+    pub clients: usize,
+    /// Requests issued (sent, or scheduled and given up on).
+    pub issued: usize,
+    /// Requests that got an `ok:true` final reply.
+    pub completed: usize,
+    /// Typed overload sheds (`queue full` / rate limit / drain).
+    pub shed: usize,
+    /// Transport failures, malformed replies, reply timeouts.
+    pub errors: usize,
+    /// Streams with frame-integrity violations.
+    pub corrupt: usize,
+    pub wall_s: f64,
+    /// Completed requests per wall second.
+    pub throughput_rps: f64,
+    pub mean_ms: f64,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    pub p999_ms: f64,
+    /// Accept-to-first-frame percentiles (NaN unless streaming).
+    pub ttff_p50_ms: f64,
+    pub ttff_p99_ms: f64,
+    /// Interactive-class requests carrying a deadline, and how many
+    /// the server reported expired.
+    pub deadline_requests: usize,
+    pub deadline_missed: usize,
+    /// `c{client}.r{seq}` → completion text, when
+    /// [`LoadSpec::record_completions`] was set.
+    pub completions: BTreeMap<String, String>,
+}
+
+impl LoadReport {
+    pub fn deadline_miss_rate(&self) -> f64 {
+        if self.deadline_requests == 0 {
+            return 0.0;
+        }
+        self.deadline_missed as f64 / self.deadline_requests as f64
+    }
+
+    /// Flatten for CSV/JSONL rows (completions excluded).
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("clients", self.clients.into())
+            .set("issued", self.issued.into())
+            .set("completed", self.completed.into())
+            .set("shed", self.shed.into())
+            .set("errors", self.errors.into())
+            .set("corrupt", self.corrupt.into())
+            .set("wall_s", self.wall_s.into())
+            .set("throughput_rps", self.throughput_rps.into())
+            .set("mean_ms", self.mean_ms.into())
+            .set("p50_ms", self.p50_ms.into())
+            .set("p99_ms", self.p99_ms.into())
+            .set("p999_ms", self.p999_ms.into())
+            .set("ttff_p50_ms", self.ttff_p50_ms.into())
+            .set("ttff_p99_ms", self.ttff_p99_ms.into())
+            .set("deadline_requests", self.deadline_requests.into())
+            .set("deadline_missed", self.deadline_missed.into())
+            .set("deadline_miss_rate", self.deadline_miss_rate().into());
+        j
+    }
+}
+
+/// Client connection lifecycle within a driver sweep.
+enum Phase {
+    /// No request due yet (or between churn reconnects).
+    Idle,
+    /// Writing the request line (partial writes resume here).
+    Sending,
+    /// Reading reply lines until the final one.
+    Waiting,
+    /// Quota met / window closed.
+    Done,
+}
+
+/// One simulated client: nonblocking socket + reassembly buffers + the
+/// request state machine.
+struct Sim {
+    id: usize,
+    interactive: bool,
+    stream: Option<TcpStream>,
+    rbuf: Vec<u8>,
+    wbuf: Vec<u8>,
+    woff: usize,
+    phase: Phase,
+    /// Requests issued so far (seq of the in-flight one is `sent - 1`).
+    sent: usize,
+    rng: Rng,
+    /// Open-loop arrivals (seconds since run start) not yet issued.
+    backlog: VecDeque<f64>,
+    /// Next scheduled arrival offset (open-loop).
+    next_arrival_s: f64,
+    /// Closed-loop start jitter, so a 10k-client run doesn't open with
+    /// one synchronized thundering herd.
+    start_at_s: f64,
+    /// Latency clock origin for the in-flight request.
+    clock_from_s: f64,
+    sent_at: Instant,
+    saw_first_frame: Option<f64>,
+    last_round: i64,
+    saw_done_frame: bool,
+    frame_corrupt: bool,
+}
+
+impl Sim {
+    fn new(id: usize, spec: &LoadSpec) -> Sim {
+        let mut rng = Rng::new(spec.seed ^ (0x9e37_79b9_7f4a_7c15u64.wrapping_mul(id as u64 + 1)));
+        let start_at_s = rng.f64() * 0.01;
+        let next_arrival_s = if spec.open_loop_rps > 0.0 {
+            rng.exp(spec.open_loop_rps / spec.clients.max(1) as f64)
+        } else {
+            0.0
+        };
+        Sim {
+            id,
+            interactive: (id as f64 + 0.5) < spec.interactive_frac * spec.clients as f64,
+            stream: None,
+            rbuf: Vec::new(),
+            wbuf: Vec::new(),
+            woff: 0,
+            phase: Phase::Idle,
+            sent: 0,
+            rng,
+            backlog: VecDeque::new(),
+            next_arrival_s,
+            start_at_s,
+            clock_from_s: 0.0,
+            sent_at: Instant::now(),
+            saw_first_frame: None,
+            last_round: -1,
+            saw_done_frame: false,
+            frame_corrupt: false,
+        }
+    }
+
+    /// Build the wire line for request `seq`.
+    fn request_line(&self, spec: &LoadSpec, seq: usize) -> String {
+        let mut j = Json::obj();
+        j.set("prompt", Json::Str(spec.prompt_for(self.id, seq).into()))
+            .set("task", Json::Str(spec.task.clone()));
+        if spec.streaming {
+            j.set("stream", true.into());
+        }
+        if self.interactive && spec.deadline_ms > 0.0 {
+            // v2 interactive class: client-chosen req_id namespaced by
+            // client (well below the server's 2^48 id floor).
+            let req_id = self.id * 1_000_000 + seq + 1;
+            let mut o = Json::obj();
+            o.set("deadline_ms", spec.deadline_ms.into())
+                .set("slo", Json::Str("interactive".into()));
+            j.set("v", 2usize.into())
+                .set("req_id", req_id.into())
+                .set("options", o);
+        }
+        let mut line = j.to_string();
+        line.push('\n');
+        line
+    }
+}
+
+/// Classify one final reply line into an outcome.
+fn finish_outcome(sim: &Sim, spec: &LoadSpec, reply: &Json, now_s: f64) -> ReqOutcome {
+    let seq = sim.sent - 1;
+    let latency_ms = (now_s - sim.clock_from_s) * 1e3;
+    let ok = reply.get("ok").and_then(Json::as_bool).unwrap_or(false);
+    if !ok {
+        let msg = reply.get("error").and_then(Json::as_str).unwrap_or("");
+        let kind = reply.get("kind").and_then(Json::as_str).unwrap_or("");
+        let shed = kind == "overloaded"
+            || msg.starts_with("queue full")
+            || msg.starts_with("rate limited")
+            || msg.starts_with("draining");
+        let deadline_missed = kind == "deadline";
+        return ReqOutcome {
+            client: sim.id,
+            seq,
+            ok: false,
+            shed,
+            error: !shed && !deadline_missed,
+            corrupt: sim.frame_corrupt,
+            latency_ms,
+            ttff_ms: sim.saw_first_frame,
+            deadline_missed,
+            completion: None,
+        };
+    }
+    // Streaming integrity: the final must follow a done-frame (unless
+    // the request produced nothing at all).
+    let corrupt = sim.frame_corrupt
+        || (spec.streaming && sim.saw_first_frame.is_some() && !sim.saw_done_frame);
+    let finish = reply.get("finish").and_then(Json::as_str).unwrap_or("");
+    ReqOutcome {
+        client: sim.id,
+        seq,
+        ok: true,
+        shed: false,
+        error: false,
+        corrupt,
+        latency_ms,
+        ttff_ms: sim.saw_first_frame,
+        deadline_missed: finish.starts_with("deadline"),
+        completion: if spec.record_completions {
+            reply.get("completion").and_then(Json::as_str).map(str::to_string)
+        } else {
+            None
+        },
+    }
+}
+
+/// Drive one slice of the client population to completion.
+fn drive(spec: &LoadSpec, ids: std::ops::Range<usize>, t0: Instant) -> Vec<ReqOutcome> {
+    let mut sims: Vec<Sim> = ids.map(|i| Sim::new(i, spec)).collect();
+    let mut out: Vec<ReqOutcome> = Vec::new();
+    let open_loop = spec.open_loop_rps > 0.0;
+    let rate_per_client = spec.open_loop_rps / spec.clients.max(1) as f64;
+    // Hard stop: the arrival window (open) / quota (closed) plus a grace
+    // period for stragglers; whatever is still unanswered then is lost.
+    let grace_s = spec.request_timeout_s + 5.0;
+    let mut idle_park = Duration::from_micros(200);
+    loop {
+        let now_s = t0.elapsed().as_secs_f64();
+        let mut activity = false;
+        let mut all_done = true;
+        for sim in sims.iter_mut() {
+            // Open-loop: materialize arrivals that have come due.
+            if open_loop {
+                while sim.next_arrival_s <= now_s {
+                    if sim.next_arrival_s > spec.duration_s {
+                        break;
+                    }
+                    sim.backlog.push_back(sim.next_arrival_s);
+                    sim.next_arrival_s += sim.rng.exp(rate_per_client);
+                }
+            }
+            match sim.phase {
+                Phase::Done => continue,
+                Phase::Idle => {
+                    all_done = false;
+                    let due = if open_loop {
+                        sim.backlog.front().copied()
+                    } else if sim.sent < spec.requests_per_client && now_s >= sim.start_at_s {
+                        Some(now_s)
+                    } else {
+                        None
+                    };
+                    let closed_done = !open_loop && sim.sent >= spec.requests_per_client;
+                    let open_done = open_loop
+                        && sim.backlog.is_empty()
+                        && sim.next_arrival_s > spec.duration_s;
+                    if closed_done || open_done {
+                        sim.phase = Phase::Done;
+                        continue;
+                    }
+                    let Some(arrival_s) = due else { continue };
+                    activity = true;
+                    if open_loop {
+                        sim.backlog.pop_front();
+                    }
+                    // (Re)connect when churning or not yet connected.
+                    if sim.stream.is_none() || (!open_loop && spec.reconnect_per_request) {
+                        sim.stream = None;
+                        let addr = std::net::SocketAddr::from(([127, 0, 0, 1], spec.port));
+                        let timeout = Duration::from_secs_f64(spec.connect_timeout_s.max(0.1));
+                        match TcpStream::connect_timeout(&addr, timeout) {
+                            Ok(s) => {
+                                s.set_nodelay(true).ok();
+                                if s.set_nonblocking(true).is_err() {
+                                    continue;
+                                }
+                                sim.stream = Some(s);
+                            }
+                            Err(_) => {
+                                sim.sent += 1;
+                                out.push(ReqOutcome {
+                                    client: sim.id,
+                                    seq: sim.sent - 1,
+                                    ok: false,
+                                    shed: false,
+                                    error: true,
+                                    corrupt: false,
+                                    latency_ms: (now_s - arrival_s) * 1e3,
+                                    ttff_ms: None,
+                                    deadline_missed: false,
+                                    completion: None,
+                                });
+                                continue;
+                            }
+                        }
+                    }
+                    let line = sim.request_line(spec, sim.sent);
+                    sim.sent += 1;
+                    sim.clock_from_s = arrival_s;
+                    sim.sent_at = Instant::now();
+                    sim.saw_first_frame = None;
+                    sim.last_round = -1;
+                    sim.saw_done_frame = false;
+                    sim.frame_corrupt = false;
+                    sim.wbuf = line.into_bytes();
+                    sim.woff = 0;
+                    sim.rbuf.clear();
+                    sim.phase = Phase::Sending;
+                }
+                Phase::Sending | Phase::Waiting => {
+                    all_done = false;
+                }
+            }
+            // Progress the in-flight request (write side, then read side).
+            if matches!(sim.phase, Phase::Sending) {
+                let Some(s) = sim.stream.as_mut() else {
+                    sim.phase = Phase::Idle;
+                    continue;
+                };
+                loop {
+                    match s.write(&sim.wbuf[sim.woff..]) {
+                        Ok(0) => {
+                            fail_inflight(sim, spec, &mut out, now_s);
+                            break;
+                        }
+                        Ok(n) => {
+                            activity = true;
+                            sim.woff += n;
+                            if sim.woff == sim.wbuf.len() {
+                                sim.phase = Phase::Waiting;
+                                break;
+                            }
+                        }
+                        Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                        Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                        Err(_) => {
+                            fail_inflight(sim, spec, &mut out, now_s);
+                            break;
+                        }
+                    }
+                }
+                if matches!(sim.phase, Phase::Sending)
+                    && sim.sent_at.elapsed().as_secs_f64() > spec.request_timeout_s
+                {
+                    fail_inflight(sim, spec, &mut out, now_s);
+                }
+            }
+            if matches!(sim.phase, Phase::Waiting) {
+                activity |= pump_replies(sim, spec, &mut out, t0);
+                if matches!(sim.phase, Phase::Waiting)
+                    && sim.sent_at.elapsed().as_secs_f64() > spec.request_timeout_s
+                {
+                    fail_inflight(sim, spec, &mut out, t0.elapsed().as_secs_f64());
+                }
+            }
+        }
+        if all_done {
+            break;
+        }
+        let window_s = if open_loop {
+            spec.duration_s
+        } else {
+            // Closed-loop has no wall window; rely on per-request
+            // timeouts, bounded by quota * timeout in the worst case.
+            f64::MAX / 4.0
+        };
+        if now_s > window_s + grace_s {
+            // Straggler cutoff: everything still in flight is lost.
+            for sim in sims.iter_mut() {
+                if matches!(sim.phase, Phase::Sending | Phase::Waiting) {
+                    fail_inflight(sim, spec, &mut out, now_s);
+                }
+                sim.phase = Phase::Done;
+            }
+            break;
+        }
+        if activity {
+            idle_park = Duration::from_micros(200);
+        } else {
+            std::thread::sleep(idle_park);
+            idle_park = (idle_park * 2).min(Duration::from_millis(5));
+        }
+    }
+    out
+}
+
+/// Record the in-flight request as errored and reset the connection
+/// (the next arrival reconnects).
+fn fail_inflight(sim: &mut Sim, _spec: &LoadSpec, out: &mut Vec<ReqOutcome>, now_s: f64) {
+    out.push(ReqOutcome {
+        client: sim.id,
+        seq: sim.sent.saturating_sub(1),
+        ok: false,
+        shed: false,
+        error: true,
+        corrupt: sim.frame_corrupt,
+        latency_ms: (now_s - sim.clock_from_s) * 1e3,
+        ttff_ms: sim.saw_first_frame,
+        deadline_missed: false,
+        completion: None,
+    });
+    sim.stream = None;
+    sim.phase = Phase::Idle;
+}
+
+/// Read whatever reply bytes are available; handle frames and the final
+/// line. Returns true if bytes moved.
+fn pump_replies(sim: &mut Sim, spec: &LoadSpec, out: &mut Vec<ReqOutcome>, t0: Instant) -> bool {
+    let Some(s) = sim.stream.as_mut() else {
+        fail_inflight(sim, spec, out, t0.elapsed().as_secs_f64());
+        return false;
+    };
+    let mut any = false;
+    let mut chunk = [0u8; 4096];
+    let mut closed = false;
+    loop {
+        match s.read(&mut chunk) {
+            Ok(0) => {
+                closed = true;
+                break;
+            }
+            Ok(n) => {
+                any = true;
+                sim.rbuf.extend_from_slice(&chunk[..n]);
+                if n < chunk.len() {
+                    break;
+                }
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(_) => {
+                closed = true;
+                break;
+            }
+        }
+    }
+    // Process complete lines.
+    let mut start = 0;
+    while let Some(pos) = sim.rbuf[start..].iter().position(|&b| b == b'\n') {
+        let end = start + pos;
+        let parsed = std::str::from_utf8(&sim.rbuf[start..end])
+            .ok()
+            .and_then(|l| Json::parse(l.trim()).ok());
+        start = end + 1;
+        let now_s = t0.elapsed().as_secs_f64();
+        let Some(reply) = parsed else {
+            sim.frame_corrupt = true;
+            continue;
+        };
+        if reply.get("frame").and_then(Json::as_str) == Some("tokens") {
+            // Frame integrity: rounds strictly increase, nothing after
+            // the done frame.
+            let round = reply.get("round").and_then(Json::as_i64).unwrap_or(-1);
+            if round <= sim.last_round || sim.saw_done_frame {
+                sim.frame_corrupt = true;
+            }
+            sim.last_round = round;
+            if sim.saw_first_frame.is_none() {
+                sim.saw_first_frame = Some((now_s - sim.clock_from_s) * 1e3);
+            }
+            if reply.get("done").and_then(Json::as_bool).unwrap_or(false) {
+                sim.saw_done_frame = true;
+            }
+            continue;
+        }
+        // Final line for the in-flight request.
+        if matches!(sim.phase, Phase::Waiting) {
+            out.push(finish_outcome(sim, spec, &reply, now_s));
+            sim.phase = Phase::Idle;
+            if !spec.reconnect_per_request {
+                // Keep the connection for the next request.
+            } else {
+                sim.stream = None;
+                sim.rbuf.clear();
+                return any;
+            }
+        }
+    }
+    sim.rbuf.drain(..start);
+    if closed && matches!(sim.phase, Phase::Waiting) {
+        fail_inflight(sim, spec, out, t0.elapsed().as_secs_f64());
+    } else if closed {
+        sim.stream = None;
+    }
+    any
+}
+
+/// Run one load scenario to completion and aggregate the outcomes.
+pub fn run(spec: &LoadSpec) -> anyhow::Result<LoadReport> {
+    anyhow::ensure!(spec.port != 0, "loadgen needs a concrete server port");
+    anyhow::ensure!(spec.clients > 0, "loadgen needs at least one client");
+    anyhow::ensure!(!spec.prompts.is_empty(), "loadgen needs at least one prompt");
+    let drivers = spec.driver_count();
+    let per = spec.clients.div_ceil(drivers);
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for d in 0..drivers {
+        let lo = d * per;
+        let hi = ((d + 1) * per).min(spec.clients);
+        if lo >= hi {
+            break;
+        }
+        let spec = spec.clone();
+        handles.push(std::thread::spawn(move || drive(&spec, lo..hi, t0)));
+    }
+    let mut outcomes: Vec<ReqOutcome> = Vec::new();
+    for h in handles {
+        outcomes.extend(h.join().map_err(|_| anyhow::anyhow!("load driver panicked"))?);
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+
+    let issued = outcomes.len();
+    let completed = outcomes.iter().filter(|o| o.ok).count();
+    let shed = outcomes.iter().filter(|o| o.shed).count();
+    let errors = outcomes.iter().filter(|o| o.error).count();
+    let corrupt = outcomes.iter().filter(|o| o.corrupt).count();
+    let mut lat = Summary::from_values(
+        outcomes.iter().filter(|o| o.ok).map(|o| o.latency_ms).collect(),
+    );
+    let mut ttff = Summary::from_values(
+        outcomes.iter().filter_map(|o| o.ttff_ms).collect(),
+    );
+    // Same class rule as `Sim::new`, so the denominator matches exactly.
+    let deadline_requests = outcomes
+        .iter()
+        .filter(|o| {
+            spec.deadline_ms > 0.0
+                && (o.client as f64 + 0.5) < spec.interactive_frac * spec.clients as f64
+        })
+        .count();
+    let deadline_missed = outcomes.iter().filter(|o| o.deadline_missed).count();
+    let mut completions = BTreeMap::new();
+    if spec.record_completions {
+        for o in &outcomes {
+            if let Some(c) = &o.completion {
+                completions.insert(format!("c{}.r{}", o.client, o.seq), c.clone());
+            }
+        }
+    }
+    Ok(LoadReport {
+        clients: spec.clients,
+        issued,
+        completed,
+        shed,
+        errors,
+        corrupt,
+        wall_s,
+        throughput_rps: completed as f64 / wall_s.max(1e-9),
+        mean_ms: lat.mean(),
+        p50_ms: lat.percentile(50.0),
+        p99_ms: lat.percentile(99.0),
+        p999_ms: lat.percentile(99.9),
+        ttff_p50_ms: ttff.percentile(50.0),
+        ttff_p99_ms: ttff.percentile(99.0),
+        deadline_requests,
+        deadline_missed,
+        completions,
+    })
+}

@@ -10,8 +10,8 @@
 //!   info        print manifest / platform summary
 
 use specedge::config::{
-    CloudVerifyMode, DecisionMode, ExecMode, KernelPath, KvCacheMode, RunConfig, Timing,
-    TreeChoice,
+    CloudVerifyMode, DecisionMode, ExecMode, KernelPath, KvCacheMode, RunConfig, ServeMode,
+    Timing, TreeChoice,
 };
 use specedge::coordinator::Coordinator;
 use specedge::dse::{self, PairConfig};
@@ -59,6 +59,13 @@ fn cli() -> Cli {
         .opt("port", "serve: TCP port (0 = auto)", Some("7643"))
         .opt("workers", "serve: engine workers", Some("1"))
         .opt("max-inflight", "serve: live sessions interleaved per worker", Some("4"))
+        .opt("serve-mode", "serve: connection shell, event_loop|threaded", None)
+        .opt("rate-limit-rps", "serve: per-client admission rate (0 = off)", None)
+        .opt("rate-limit-burst", "serve: per-client token-bucket burst", None)
+        .opt("client-queue-depth", "serve: outbound lines buffered per client", None)
+        .opt("drain-deadline-s", "serve: drain grace before in-flight cancel", None)
+        .opt("metrics-history", "serve: append metrics snapshots to this JSONL file", None)
+        .opt("metrics-history-every-s", "serve: seconds between history snapshots", None)
         .opt("limit", "experiments: sample limit", None)
         .opt("out", "experiments: results dir", Some("results"))
         .opt("prompt", "decode: prompt text (task-prefixed, e.g. 'tr: ...')", None)
@@ -130,6 +137,27 @@ fn build_config(args: &specedge::util::cli::Args) -> anyhow::Result<RunConfig> {
     }
     if let Some(p) = args.get_usize("port")? {
         cfg.port = p as u16;
+    }
+    if let Some(m) = args.get("serve-mode") {
+        cfg.serve_mode = ServeMode::parse(m)?;
+    }
+    if let Some(r) = args.get_f64("rate-limit-rps")? {
+        cfg.rate_limit_rps = r;
+    }
+    if let Some(b) = args.get_usize("rate-limit-burst")? {
+        cfg.rate_limit_burst = b;
+    }
+    if let Some(d) = args.get_usize("client-queue-depth")? {
+        cfg.client_queue_depth = d;
+    }
+    if let Some(d) = args.get_f64("drain-deadline-s")? {
+        cfg.drain_deadline_s = d;
+    }
+    if let Some(p) = args.get("metrics-history") {
+        cfg.metrics_history_file = Some(PathBuf::from(p));
+    }
+    if let Some(s) = args.get_f64("metrics-history-every-s")? {
+        cfg.metrics_history_every_s = s;
     }
     cfg.heterogeneous = !args.has_flag("homogeneous");
     cfg.speculative = !args.has_flag("no-spec");
@@ -346,9 +374,8 @@ fn cmd_experiment_named(
 }
 
 fn cmd_serve(cfg: RunConfig, platform: Platform) -> anyhow::Result<()> {
-    let port = cfg.port;
     let tokenizer = Tokenizer::builtin();
-    let server = match &cfg.fleet_file {
+    let mut server = match &cfg.fleet_file {
         Some(path) => {
             // Fleet mode: one coordinator per device from the topology
             // file; the per-device platforms come from the fleet file, so
@@ -356,7 +383,7 @@ fn cmd_serve(cfg: RunConfig, platform: Platform) -> anyhow::Result<()> {
             let spec = FleetSpec::load(path)?;
             let n = spec.devices.len();
             let fleet = Arc::new(FleetRouter::start(&cfg, spec)?);
-            let s = Server::start_with(Backend::Fleet(Arc::clone(&fleet)), tokenizer, port)?;
+            let s = Server::start_cfg(Backend::Fleet(Arc::clone(&fleet)), tokenizer, &cfg)?;
             println!(
                 "specedge fleet: {} device(s){}",
                 n,
@@ -365,13 +392,22 @@ fn cmd_serve(cfg: RunConfig, platform: Platform) -> anyhow::Result<()> {
             s
         }
         None => {
-            let coordinator = Arc::new(Coordinator::start(cfg, platform)?);
-            Server::start(Arc::clone(&coordinator), tokenizer, port)?
+            let coordinator = Arc::new(Coordinator::start(cfg.clone(), platform)?);
+            Server::start_cfg(Backend::Single(coordinator), tokenizer, &cfg)?
         }
     };
-    println!("specedge serving on 127.0.0.1:{}", server.port);
-    println!("protocol: one JSON per line; {{\"cmd\":\"shutdown\"}} to stop");
-    // Blocks until a shutdown command flips the stop flag.
-    server.stop();
+    println!(
+        "specedge serving on 127.0.0.1:{} ({} shell)",
+        server.port,
+        cfg.serve_mode.as_str()
+    );
+    println!(
+        "protocol: one JSON per line; {{\"cmd\":\"drain\"}} to drain, \
+         {{\"cmd\":\"shutdown\"}} to stop"
+    );
+    // Block until a drain completes or a shutdown command stops the shell
+    // (no signal handling: the container toolchain has no libc binding, so
+    // lifecycle is driven over the wire or via Server::drain).
+    server.wait();
     Ok(())
 }

@@ -1,0 +1,294 @@
+//! Minimal blocking client for tests, examples and the load generator.
+//!
+//! Speaks both protocol versions: [`generate`](Client::generate) /
+//! [`generate_stream`](Client::generate_stream) emit seed-shaped v1
+//! lines, [`generate_with`](Client::generate_with) /
+//! [`generate_stream_with`](Client::generate_stream_with) the typed v2
+//! protocol, and [`cancel`](Client::cancel) the cancel command. A
+//! configurable [read timeout](Client::set_read_timeout) and
+//! [connect timeout](Client::connect_timeout) turn a dead or saturated
+//! server into a typed error instead of a hang, and the `try_*` variants
+//! ([`try_call`](Client::try_call), [`try_generate`](Client::try_generate),
+//! [`try_generate_with`](Client::try_generate_with)) classify `ok:false`
+//! replies into [`ClientError`] — most importantly
+//! [`ClientError::Overloaded`], which carries the server's
+//! `retry_after_ms` / queue-state hints so callers can implement backoff
+//! instead of pattern-matching error strings.
+
+use crate::api::GenOptions;
+use crate::util::json::Json;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+/// Typed client-side view of an `ok:false` reply (or a transport
+/// failure). Produced by the `try_*` calls; the plain calls keep
+/// returning raw reply objects for wire-level tests.
+#[derive(Debug, thiserror::Error)]
+pub enum ClientError {
+    /// The server shed the request (admission queue full, per-client
+    /// rate limit, drain in progress, or outbound-queue overflow). When
+    /// the server estimated a retry horizon it rides along.
+    #[error("server overloaded: {msg}")]
+    Overloaded {
+        msg: String,
+        /// Server-suggested backoff, when present (`retry_after_ms`).
+        retry_after_ms: Option<f64>,
+        /// Admission-queue state at shed time (v2 replies).
+        queue_len: Option<usize>,
+        queue_capacity: Option<usize>,
+    },
+    /// Any other error reply; `kind` is the v2 taxonomy value
+    /// (`bad_request | cancelled | deadline | internal`) or `"error"`
+    /// for untyped v1 replies.
+    #[error("server error ({kind}): {msg}")]
+    Server { kind: String, msg: String },
+    /// The request never got a well-formed reply (connect/read/write
+    /// failure, timeout, or unparseable bytes).
+    #[error("{0}")]
+    Transport(String),
+}
+
+impl ClientError {
+    /// The server-suggested backoff as a [`Duration`], when one rode
+    /// along on an overloaded reply.
+    pub fn retry_after(&self) -> Option<Duration> {
+        match self {
+            ClientError::Overloaded { retry_after_ms: Some(ms), .. } if *ms >= 0.0 => {
+                Some(Duration::from_secs_f64(ms / 1e3))
+            }
+            _ => None,
+        }
+    }
+
+    /// True for replies a client should retry later rather than treat
+    /// as a bug.
+    pub fn is_overloaded(&self) -> bool {
+        matches!(self, ClientError::Overloaded { .. })
+    }
+
+    /// Classify one reply object: `None` for `ok:true`.
+    fn classify(reply: &Json) -> Option<ClientError> {
+        if reply.get("ok").and_then(Json::as_bool).unwrap_or(false) {
+            return None;
+        }
+        let msg = reply
+            .get("error")
+            .and_then(Json::as_str)
+            .unwrap_or("malformed error reply")
+            .to_string();
+        let kind = reply.get("kind").and_then(Json::as_str).unwrap_or("error");
+        // v1 sheds carry no `kind`; recognize the two fixed shed
+        // messages so v1 callers get the typed variant too.
+        let overloaded = kind == "overloaded"
+            || msg.starts_with("queue full")
+            || msg.starts_with("rate limited")
+            || msg.starts_with("draining");
+        if overloaded {
+            Some(ClientError::Overloaded {
+                msg,
+                retry_after_ms: reply.get("retry_after_ms").and_then(Json::as_f64),
+                queue_len: reply.get("queue_len").and_then(Json::as_usize),
+                queue_capacity: reply.get("queue_capacity").and_then(Json::as_usize),
+            })
+        } else {
+            Some(ClientError::Server { kind: kind.to_string(), msg })
+        }
+    }
+}
+
+/// Blocking line-JSON client; one socket, one reply stream.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    stream: TcpStream,
+}
+
+impl Client {
+    pub fn connect(port: u16) -> anyhow::Result<Client> {
+        let stream = TcpStream::connect(("127.0.0.1", port))?;
+        Client::from_stream(stream)
+    }
+
+    /// Connect with a bound on how long the TCP handshake may take (a
+    /// saturated or dead server surfaces as an error instead of an
+    /// OS-default multi-minute hang).
+    pub fn connect_timeout(port: u16, timeout: Duration) -> anyhow::Result<Client> {
+        let addr = std::net::SocketAddr::from(([127, 0, 0, 1], port));
+        let stream = TcpStream::connect_timeout(&addr, timeout)?;
+        Client::from_stream(stream)
+    }
+
+    fn from_stream(stream: TcpStream) -> anyhow::Result<Client> {
+        stream.set_nodelay(true).ok();
+        Ok(Client { reader: BufReader::new(stream.try_clone()?), stream })
+    }
+
+    /// Abort reads that wait longer than `timeout` (None = wait forever,
+    /// the default). An expired timeout surfaces as an
+    /// "timed out waiting for the server" error from the blocked call.
+    pub fn set_read_timeout(&mut self, timeout: Option<Duration>) -> anyhow::Result<()> {
+        // Both handles alias one socket; set through the reader's (the
+        // one reads actually go through) and keep the writer consistent.
+        self.reader.get_ref().set_read_timeout(timeout)?;
+        self.stream.set_read_timeout(timeout)?;
+        Ok(())
+    }
+
+    /// Write one request line (no reply expected yet).
+    pub fn send(&mut self, req: &Json) -> anyhow::Result<()> {
+        writeln!(self.stream, "{req}")?;
+        Ok(())
+    }
+
+    /// Read one reply line, mapping closed connections and read timeouts
+    /// to typed errors.
+    pub fn read_reply(&mut self) -> anyhow::Result<Json> {
+        let mut line = String::new();
+        match self.reader.read_line(&mut line) {
+            Ok(0) => anyhow::bail!("server closed the connection"),
+            Ok(_) => {}
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                anyhow::bail!("timed out waiting for the server (read timeout)")
+            }
+            Err(e) => return Err(e.into()),
+        }
+        Json::parse(line.trim()).map_err(|e| anyhow::anyhow!("bad reply: {e}"))
+    }
+
+    pub fn call(&mut self, req: &Json) -> anyhow::Result<Json> {
+        self.send(req)?;
+        self.read_reply()
+    }
+
+    /// [`call`](Client::call), with `ok:false` replies classified into
+    /// [`ClientError`] (overload sheds become
+    /// [`ClientError::Overloaded`] with the server's backoff hints).
+    pub fn try_call(&mut self, req: &Json) -> Result<Json, ClientError> {
+        let reply = self
+            .call(req)
+            .map_err(|e| ClientError::Transport(e.to_string()))?;
+        match ClientError::classify(&reply) {
+            None => Ok(reply),
+            Some(e) => Err(e),
+        }
+    }
+
+    /// v1 generate (seed protocol).
+    pub fn generate(&mut self, prompt: &str, task: &str) -> anyhow::Result<Json> {
+        self.call(&v1_line(prompt, task))
+    }
+
+    /// [`generate`](Client::generate) with typed error classification.
+    pub fn try_generate(&mut self, prompt: &str, task: &str) -> Result<Json, ClientError> {
+        self.try_call(&v1_line(prompt, task))
+    }
+
+    /// v2 generate with typed options and a client-chosen `req_id` (the
+    /// id [`cancel`](Client::cancel) addresses).
+    pub fn generate_with(
+        &mut self,
+        prompt: &str,
+        task: &str,
+        req_id: u64,
+        options: &GenOptions,
+    ) -> anyhow::Result<Json> {
+        self.call(&v2_line(prompt, task, req_id, options, false))
+    }
+
+    /// [`generate_with`](Client::generate_with) with typed error
+    /// classification.
+    pub fn try_generate_with(
+        &mut self,
+        prompt: &str,
+        task: &str,
+        req_id: u64,
+        options: &GenOptions,
+    ) -> Result<Json, ClientError> {
+        self.try_call(&v2_line(prompt, task, req_id, options, false))
+    }
+
+    /// Cancel a submitted request by `req_id` (from any connection).
+    pub fn cancel(&mut self, req_id: u64) -> anyhow::Result<Json> {
+        let mut j = Json::obj();
+        j.set("cmd", Json::Str("cancel".into()))
+            .set("req_id", (req_id as usize).into());
+        self.call(&j)
+    }
+
+    /// v1 streaming generate: returns the per-round token frames and the
+    /// final summary object (which is also the only line for error
+    /// replies).
+    pub fn generate_stream(
+        &mut self,
+        prompt: &str,
+        task: &str,
+    ) -> anyhow::Result<(Vec<Json>, Json)> {
+        let mut j = v1_line(prompt, task);
+        j.set("stream", true.into());
+        self.send(&j)?;
+        self.collect_stream()
+    }
+
+    /// v2 streaming generate with typed options.
+    pub fn generate_stream_with(
+        &mut self,
+        prompt: &str,
+        task: &str,
+        req_id: u64,
+        options: &GenOptions,
+    ) -> anyhow::Result<(Vec<Json>, Json)> {
+        self.send(&v2_line(prompt, task, req_id, options, true))?;
+        self.collect_stream()
+    }
+
+    /// Drain `frame:"tokens"` lines until the terminating non-frame line.
+    fn collect_stream(&mut self) -> anyhow::Result<(Vec<Json>, Json)> {
+        let mut frames = Vec::new();
+        loop {
+            let reply = self
+                .read_reply()
+                .map_err(|e| anyhow::anyhow!("mid-stream: {e}"))?;
+            match reply.get("frame").and_then(Json::as_str) {
+                Some("tokens") => frames.push(reply),
+                _ => return Ok((frames, reply)),
+            }
+        }
+    }
+}
+
+/// Build one v1 generate line.
+fn v1_line(prompt: &str, task: &str) -> Json {
+    let mut j = Json::obj();
+    j.set("prompt", Json::Str(prompt.into()))
+        .set("task", Json::Str(task.into()));
+    j
+}
+
+/// Build one v2 generate line.
+pub(crate) fn v2_line(
+    prompt: &str,
+    task: &str,
+    req_id: u64,
+    options: &GenOptions,
+    stream: bool,
+) -> Json {
+    let mut j = Json::obj();
+    j.set("v", 2usize.into())
+        .set("req_id", (req_id as usize).into())
+        .set("prompt", Json::Str(prompt.into()))
+        .set("task", Json::Str(task.into()));
+    if stream {
+        j.set("stream", true.into());
+    }
+    let o = options.to_json();
+    let empty = o.as_obj().map(|m| m.is_empty()).unwrap_or(true);
+    if !empty {
+        j.set("options", o);
+    }
+    j
+}

@@ -1,0 +1,447 @@
+//! Nonblocking event-loop serving shell (the default `serve_mode`).
+//!
+//! One thread multiplexes every connection over `std::net` nonblocking
+//! sockets and the coordinator's nonblocking handle API
+//! ([`RequestHandle::try_frame`](crate::coordinator::RequestHandle::try_frame)
+//! /
+//! [`RequestHandle::try_wait_done`](crate::coordinator::RequestHandle::try_wait_done)):
+//! no per-connection threads, no per-connection stacks, no blocking
+//! reads. Each sweep the loop accepts pending connections, reads
+//! whatever bytes are available (reassembling partial lines), admits at
+//! most one generate per connection (matching the threaded shell's
+//! per-connection serialization, so reply order is identical), polls
+//! in-flight handles for frames/finals, and flushes bounded outbound
+//! queues.
+//!
+//! Scheduling is poll-based: `std::net` exposes no portable readiness
+//! API without a libc dependency, so instead of blocking in `epoll` the
+//! loop parks on an adaptive backoff — 500µs doubling to 10ms while
+//! fully idle, capped at 1ms while any request is in flight — which
+//! bounds both idle CPU burn and added response latency.
+//!
+//! Overload behavior is all shed-don't-block:
+//! - admission backpressure surfaces as the engine's `Rejected` →
+//!   `queue full (backpressure)` reply (unchanged from the seed);
+//! - per-client token buckets shed with `overloaded` + `retry_after_ms`;
+//! - a slow consumer whose outbound queue overflows gets its in-flight
+//!   request cancelled and one final typed `overloaded` error, then the
+//!   connection closes after the queue flushes — it never blocks the
+//!   loop or other connections.
+//!
+//! Winding down: `{"cmd":"drain"}` (or [`Server::drain`](super::Server::drain))
+//! stops accepting, lets in-flight requests finish until
+//! [`Tuning::drain_deadline_s`](super::Tuning::drain_deadline_s), then
+//! cancels the stragglers — every in-flight request still receives a
+//! final reply before the loop exits. `{"cmd":"shutdown"}` (or
+//! [`Server::stop`](super::Server::stop)) cancels in-flight work
+//! immediately and exits once replies are flushed (bounded by a 2s
+//! grace).
+
+use super::{
+    append_history, err_json, err_v2, frame_json, handle_cmd, reply_final, start_generate,
+    ActiveGen, CmdAction, GenOutcome, ServeCtx, TokenBucket, Tuning,
+};
+use crate::util::json::Json;
+use std::collections::VecDeque;
+use std::io::{ErrorKind, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Read chunk size per syscall.
+const READ_CHUNK: usize = 4096;
+/// Max bytes read from one connection per sweep (fairness bound).
+const SWEEP_READ_BUDGET: usize = 64 * 1024;
+/// Max bytes of a single line before the connection is dropped as
+/// malformed (the reassembly buffer is per-connection memory).
+const MAX_LINE: usize = 1 << 20;
+/// Max parsed-but-unprocessed lines per connection before the loop stops
+/// reading from it (TCP backpressure does the rest).
+const PENDING_CAP: usize = 64;
+/// Idle-park bounds: exponential backoff between these while nothing is
+/// readable, acceptable or pollable.
+const MIN_IDLE: Duration = Duration::from_micros(500);
+const MAX_IDLE: Duration = Duration::from_millis(10);
+/// Park cap while any request is in flight (bounds added reply latency).
+const ACTIVE_IDLE_CAP: Duration = Duration::from_millis(1);
+/// How long a hard stop waits for cancelled in-flight requests to
+/// answer and flush before abandoning them.
+const STOP_GRACE: Duration = Duration::from_secs(2);
+
+/// One multiplexed connection: nonblocking socket, read-side line
+/// reassembly, parsed-line queue, bounded outbound byte queue, at most
+/// one in-flight generate, and a rate-limit bucket.
+struct Conn {
+    stream: TcpStream,
+    /// Partial-line reassembly buffer (bytes read, no newline yet).
+    rbuf: Vec<u8>,
+    /// Complete lines awaiting admission.
+    pending: VecDeque<String>,
+    /// Outbound lines (serialized, newline-terminated), partially
+    /// written front first.
+    wq: VecDeque<Vec<u8>>,
+    /// Bytes of `wq[0]` already written.
+    woff: usize,
+    active: Option<ActiveGen>,
+    bucket: TokenBucket,
+    /// Peer closed its write side; finish serving what we have.
+    eof: bool,
+    /// Connection is gone; reap it.
+    dead: bool,
+    /// Stop reading/admitting, close once `wq` flushes.
+    close_after_flush: bool,
+}
+
+impl Conn {
+    fn new(stream: TcpStream, burst: usize) -> Conn {
+        Conn {
+            stream,
+            rbuf: Vec::new(),
+            pending: VecDeque::new(),
+            wq: VecDeque::new(),
+            woff: 0,
+            active: None,
+            bucket: TokenBucket::new(burst),
+            eof: false,
+            dead: false,
+            close_after_flush: false,
+        }
+    }
+
+    /// Pull whatever bytes are ready off the socket and split completed
+    /// lines into `pending`. Returns true if anything was read.
+    fn read_available(&mut self) -> bool {
+        if self.eof || self.dead || self.close_after_flush || self.pending.len() >= PENDING_CAP {
+            return false;
+        }
+        let mut any = false;
+        let mut budget = SWEEP_READ_BUDGET;
+        let mut chunk = [0u8; READ_CHUNK];
+        loop {
+            match self.stream.read(&mut chunk) {
+                Ok(0) => {
+                    self.eof = true;
+                    break;
+                }
+                Ok(n) => {
+                    any = true;
+                    self.rbuf.extend_from_slice(&chunk[..n]);
+                    if self.rbuf.len() > MAX_LINE {
+                        self.dead = true;
+                        return true;
+                    }
+                    budget = budget.saturating_sub(n);
+                    if n < chunk.len() || budget == 0 {
+                        break;
+                    }
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    self.dead = true;
+                    break;
+                }
+            }
+        }
+        // Reassembly: hand off every complete line, keep the tail.
+        let mut start = 0;
+        while let Some(pos) = self.rbuf[start..].iter().position(|&b| b == b'\n') {
+            let end = start + pos;
+            match std::str::from_utf8(&self.rbuf[start..end]) {
+                Ok(s) => self.pending.push_back(s.to_string()),
+                Err(_) => {
+                    self.dead = true;
+                    return true;
+                }
+            }
+            start = end + 1;
+        }
+        self.rbuf.drain(..start);
+        any
+    }
+
+    /// Queue one reply line, honoring the bounded-queue depth. Returns
+    /// false on overflow (slow consumer — caller sheds the connection).
+    /// Output to a connection that is already closing is dropped.
+    fn push_line(&mut self, j: &Json, depth: usize) -> bool {
+        if self.dead || self.close_after_flush {
+            return true;
+        }
+        if self.wq.len() >= depth {
+            return false;
+        }
+        self.force_line(j);
+        true
+    }
+
+    /// Queue a line past the depth bound (the final error on an
+    /// overflowing connection).
+    fn force_line(&mut self, j: &Json) {
+        if self.dead {
+            return;
+        }
+        let mut b = j.to_string().into_bytes();
+        b.push(b'\n');
+        self.wq.push_back(b);
+    }
+
+    /// Write as much queued output as the socket accepts. Returns true
+    /// if any bytes moved.
+    fn flush(&mut self) -> bool {
+        if self.dead {
+            return false;
+        }
+        let mut any = false;
+        loop {
+            if self.wq.is_empty() {
+                break;
+            }
+            let res = {
+                let front = &self.wq[0];
+                self.stream.write(&front[self.woff..])
+            };
+            match res {
+                Ok(0) => {
+                    self.dead = true;
+                    return any;
+                }
+                Ok(n) => {
+                    any = true;
+                    self.woff += n;
+                    if self.woff == self.wq[0].len() {
+                        self.wq.pop_front();
+                        self.woff = 0;
+                    }
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    self.dead = true;
+                    return any;
+                }
+            }
+        }
+        if self.wq.is_empty() && self.close_after_flush {
+            self.dead = true;
+        }
+        any
+    }
+}
+
+/// Queue `j` on `c`, shedding the connection on outbound overflow: the
+/// in-flight request (if any) is cancelled so the engine frees its slot
+/// and KV pages immediately, one typed `overloaded` error is forced out,
+/// and the connection closes once its queue flushes.
+fn send(c: &mut Conn, j: &Json, tuning: &Tuning, ctx: &ServeCtx) {
+    if !c.push_line(j, tuning.client_queue_depth) {
+        if let Some(a) = c.active.take() {
+            a.handle.cancel();
+        }
+        let err = err_v2(
+            "overloaded",
+            "slow consumer: outbound queue overflow, closing connection",
+            None,
+            &ctx.backend,
+        );
+        c.force_line(&err);
+        c.close_after_flush = true;
+        ctx.stats.overloaded_disconnects.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// The event loop itself. Runs until shutdown/stop (immediate, bounded
+/// by [`STOP_GRACE`]) or a completed drain.
+pub(crate) fn run(ctx: Arc<ServeCtx>, listener: TcpListener) {
+    let mut conns: Vec<Conn> = Vec::new();
+    let mut idle = MIN_IDLE;
+    let mut last_history = Instant::now();
+    let mut drain_started: Option<Instant> = None;
+    let mut drain_cancelled = false;
+    let mut stop_started: Option<Instant> = None;
+    let mut stop_cancelled = false;
+    loop {
+        let mut activity = false;
+        let stopping = ctx.stop.load(Ordering::SeqCst);
+        let draining = ctx.drain.load(Ordering::SeqCst);
+        let tuning = ctx.tuning.lock().unwrap().clone();
+
+        // Accept everything pending (drain/stop close the front door).
+        if !stopping && !draining {
+            loop {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        activity = true;
+                        if stream.set_nonblocking(true).is_err() {
+                            continue;
+                        }
+                        stream.set_nodelay(true).ok();
+                        ctx.stats.conns_accepted.fetch_add(1, Ordering::Relaxed);
+                        ctx.stats.conns_open.fetch_add(1, Ordering::Relaxed);
+                        conns.push(Conn::new(stream, tuning.rate_limit_burst));
+                    }
+                    Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                    // Transient accept failure (fd exhaustion, aborted
+                    // handshake): back off, don't kill the server.
+                    Err(_) => break,
+                }
+            }
+        }
+
+        for c in conns.iter_mut() {
+            if c.dead {
+                continue;
+            }
+            if !stopping {
+                activity |= c.read_available();
+
+                // Admit queued lines while no generate is in flight on
+                // this connection (per-connection serialization keeps
+                // reply order identical to the threaded shell).
+                while !c.dead && !c.close_after_flush && c.active.is_none() {
+                    let Some(line) = c.pending.pop_front() else { break };
+                    if line.trim().is_empty() {
+                        continue;
+                    }
+                    activity = true;
+                    ctx.stats.lines_in.fetch_add(1, Ordering::Relaxed);
+                    match Json::parse(line.trim()) {
+                        Err(e) => {
+                            let j = err_json(&format!("bad json: {e}"), None);
+                            send(c, &j, &tuning, &ctx);
+                        }
+                        Ok(req) => {
+                            if let Some(cmd) = req.get("cmd").and_then(Json::as_str) {
+                                match handle_cmd(cmd, &req, &ctx) {
+                                    CmdAction::Reply(j) => send(c, &j, &tuning, &ctx),
+                                    CmdAction::Shutdown(j) => {
+                                        send(c, &j, &tuning, &ctx);
+                                        break;
+                                    }
+                                }
+                            } else {
+                                match start_generate(&req, &ctx, &mut c.bucket) {
+                                    GenOutcome::Reply(j) => send(c, &j, &tuning, &ctx),
+                                    GenOutcome::Submitted(a) => c.active = Some(a),
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+
+            // Poll the in-flight request: relay frames, then the final.
+            let mut frames: Vec<Json> = Vec::new();
+            let mut fin: Option<Json> = None;
+            if let Some(a) = c.active.as_mut() {
+                loop {
+                    while let Some(f) = a.handle.try_frame() {
+                        activity = true;
+                        if a.streaming {
+                            frames.push(frame_json(&f, &ctx.tokenizer, a.v2));
+                        }
+                    }
+                    if a.resp.is_none() {
+                        if let Some(r) = a.handle.try_wait_done() {
+                            activity = true;
+                            a.resp = Some(r);
+                            // One more frame sweep: the worker sends its
+                            // last frames before the response, so they
+                            // are already buffered — drain them so the
+                            // final line really is final.
+                            continue;
+                        }
+                    }
+                    break;
+                }
+                if let Some(r) = a.resp.take() {
+                    fin = Some(reply_final(r, a.streaming, a.v2, a.req_id, &ctx.backend));
+                }
+            }
+            for j in &frames {
+                send(c, j, &tuning, &ctx);
+            }
+            if let Some(j) = fin {
+                send(c, &j, &tuning, &ctx);
+                c.active = None;
+            }
+
+            activity |= c.flush();
+        }
+
+        // Reap finished/broken connections; cancel whatever they still
+        // had in flight so the engine frees the slot (and its KV pages)
+        // immediately.
+        conns.retain_mut(|c| {
+            let gone = c.dead
+                || (c.eof && c.active.is_none() && c.pending.is_empty() && c.wq.is_empty());
+            if gone {
+                if let Some(a) = c.active.take() {
+                    a.handle.cancel();
+                }
+                ctx.stats.conns_open.fetch_sub(1, Ordering::Relaxed);
+            }
+            !gone
+        });
+
+        if ctx.metrics_history.is_some()
+            && last_history.elapsed().as_secs_f64() >= tuning.metrics_history_every_s
+        {
+            last_history = Instant::now();
+            append_history(&ctx);
+        }
+
+        if stopping {
+            // Hard stop: cancel in-flight once, deliver+flush whatever
+            // answers inside the grace window, then exit.
+            if !stop_cancelled {
+                stop_cancelled = true;
+                for c in conns.iter() {
+                    if let Some(a) = &c.active {
+                        a.handle.cancel();
+                    }
+                }
+            }
+            let started = *stop_started.get_or_insert_with(Instant::now);
+            let busy = conns
+                .iter()
+                .any(|c| !c.dead && (c.active.is_some() || !c.wq.is_empty()));
+            if !busy || started.elapsed() > STOP_GRACE {
+                break;
+            }
+        } else if draining {
+            // Graceful drain: in-flight requests run to completion until
+            // the deadline, then get cancelled — either way every one of
+            // them receives a final reply before the loop exits.
+            let started = *drain_started.get_or_insert_with(Instant::now);
+            if !drain_cancelled && started.elapsed().as_secs_f64() >= tuning.drain_deadline_s {
+                drain_cancelled = true;
+                for c in conns.iter() {
+                    if let Some(a) = &c.active {
+                        a.handle.cancel();
+                    }
+                }
+            }
+            let busy = conns
+                .iter()
+                .any(|c| !c.dead && (c.active.is_some() || !c.wq.is_empty()));
+            if !busy {
+                ctx.stop.store(true, Ordering::SeqCst);
+                break;
+            }
+        }
+
+        if activity {
+            idle = MIN_IDLE;
+        } else {
+            let cap = if conns.iter().any(|c| c.active.is_some()) {
+                ACTIVE_IDLE_CAP
+            } else {
+                MAX_IDLE
+            };
+            std::thread::sleep(idle.min(cap));
+            idle = (idle * 2).min(MAX_IDLE);
+        }
+    }
+    append_history(&ctx);
+}

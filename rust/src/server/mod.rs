@@ -1,5 +1,6 @@
 //! TCP line-JSON serving front-end — wire protocol v1 (seed, frozen) and
-//! v2 (typed options + lifecycle).
+//! v2 (typed options + lifecycle), served by one of two interchangeable
+//! shells (the `serve_mode` knob).
 //!
 //! Protocol: one JSON object per line.
 //!
@@ -32,7 +33,9 @@
 //! before producing any decode output (a mid-decode cancel or expiry
 //! instead returns `ok:true` with the partial tokens and the matching
 //! `finish` reason). v1 error replies stay `{"ok":false,"error":...}`,
-//! echoing the offending `req_id` when the line carried one.
+//! echoing the offending `req_id` when the line carried one. Admission
+//! sheds (queue full, rate limit, drain) additionally carry
+//! `retry_after_ms` when the server can estimate one.
 //!
 //! With `"stream": true` the reply is incremental: one
 //! `{"ok":true,"frame":"tokens","text":...,"round":r,"drafted":d,
@@ -40,22 +43,54 @@
 //! commits tokens (v2 frames additionally carry `req_id`), terminated by
 //! the usual summary object tagged `"frame":"final"`.
 //!
-//! Commands: `{"cmd":"metrics"}` returns a metrics snapshot;
+//! Commands: `{"cmd":"metrics"}` returns a metrics snapshot (engine
+//! counters plus the `serve_*` shell counters);
 //! `{"cmd":"cancel","req_id":N}` flags request N for cancellation (it
 //! aborts at its next round boundary — cancellation reaches across
 //! connections, which is how a streaming request is cancelled);
+//! `{"cmd":"drain"}` starts a graceful drain (stop accepting, finish
+//! in-flight against [`Tuning::drain_deadline_s`], exit);
+//! `{"cmd":"reload","config":{...}}` hot-reloads the serving-shell knobs
+//! that are safe to swap at admission boundaries;
 //! `{"cmd":"shutdown"}` stops the listener.
+//!
+//! # Serving shells
+//!
+//! [`event_loop`] (default): a single nonblocking thread multiplexes
+//! every connection over the coordinator's nonblocking handle API —
+//! per-connection read/write buffers with partial-line reassembly,
+//! bounded outbound queues (slow consumers get a typed `overloaded`
+//! error instead of blocking the loop), per-client token-bucket rate
+//! limiting, graceful drain, admission-boundary config hot-reload, and
+//! an optional JSON-lines metrics history. [`threaded`]: the legacy
+//! thread-per-connection shell, kept as the A/B baseline that
+//! `experiment serve_load` measures the event loop against. Both speak
+//! byte-identical wire protocols; per connection both serve at most one
+//! generate at a time (later lines queue behind it), so reply order per
+//! connection is identical across shells.
+//!
+//! There is no signal handling in-process (no libc dependency): drain is
+//! triggered over the wire (`{"cmd":"drain"}`) or programmatically via
+//! [`Server::drain`]; a supervisor that catches SIGTERM should do one of
+//! those and then [`Server::wait`].
+
+pub mod client;
+pub mod event_loop;
+pub mod threaded;
+
+pub use client::{Client, ClientError};
 
 use crate::api::{FinishReason, GenOptions, GenerationRequest};
-use crate::coordinator::{Coordinator, RequestHandle};
+use crate::config::{RunConfig, ServeMode};
+use crate::coordinator::{Coordinator, EngineResponse, RequestHandle, TokenFrame};
 use crate::fleet::FleetRouter;
 use crate::tokenizer::{Tokenizer, SEP_ID};
 use crate::util::json::Json;
-use std::io::{BufRead, BufReader, Write};
-use std::net::{TcpListener, TcpStream};
+use std::io::Write;
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::Arc;
-use std::time::Duration;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
 
 /// What the server fronts: one coordinator (the historical shape) or a
 /// multi-device [`FleetRouter`] (`serve --fleet topo.json`). Generate
@@ -100,15 +135,134 @@ impl Backend {
     }
 }
 
+/// Serving-shell counters, independent of the engine's [`crate::metrics`]
+/// (those count admitted requests; these count connections and lines,
+/// including ones shed before admission). All relaxed — they are
+/// monotonic telemetry, not synchronization.
+#[derive(Default)]
+pub struct ServeStats {
+    /// Connections accepted over the server's lifetime.
+    pub conns_accepted: AtomicU64,
+    /// Connections currently open.
+    pub conns_open: AtomicU64,
+    /// Non-empty request lines read.
+    pub lines_in: AtomicU64,
+    /// Generate requests submitted to the engine.
+    pub requests: AtomicU64,
+    /// Generate lines shed by the per-client token bucket.
+    pub rate_limited: AtomicU64,
+    /// Connections force-closed because their outbound queue overflowed
+    /// (slow consumer) — event-loop shell only.
+    pub overloaded_disconnects: AtomicU64,
+    /// Successful `{"cmd":"reload"}` applications.
+    pub reloads: AtomicU64,
+    /// Metrics-history lines appended.
+    pub history_lines: AtomicU64,
+}
+
+/// The hot-reloadable serving-shell knobs. Everything here binds at an
+/// admission boundary (next generate line, next queue push, next history
+/// tick), which is what makes `{"cmd":"reload"}` safe: no in-flight
+/// request ever sees a knob change mid-round. Engine knobs (decision /
+/// tree / kv / fleet) bind at [`Coordinator::start`] and are reported as
+/// `ignored` by reload; the decision layer already re-partitions online
+/// from calibration, which is the engine-side analogue.
+#[derive(Debug, Clone)]
+pub struct Tuning {
+    /// Per-client admission rate (requests/s); 0 disables the bucket.
+    pub rate_limit_rps: f64,
+    /// Token-bucket burst size (max back-to-back admissions).
+    pub rate_limit_burst: usize,
+    /// Max buffered outbound lines per connection before the slow
+    /// consumer is shed (event-loop shell).
+    pub client_queue_depth: usize,
+    /// Seconds a drain waits for in-flight requests before cancelling.
+    pub drain_deadline_s: f64,
+    /// Seconds between metrics-history snapshots.
+    pub metrics_history_every_s: f64,
+}
+
+/// Startup options for [`Server::start_opts`] — the serving-shell subset
+/// of [`RunConfig`], so embedders don't need a full config to tune the
+/// front door.
+#[derive(Debug, Clone)]
+pub struct ServeOptions {
+    /// Which shell runs the connections (default [`ServeMode::EventLoop`]).
+    pub mode: ServeMode,
+    pub rate_limit_rps: f64,
+    pub rate_limit_burst: usize,
+    pub client_queue_depth: usize,
+    pub drain_deadline_s: f64,
+    /// Append a metrics snapshot to this JSON-lines file every
+    /// `metrics_history_every_s` (plus one final line at exit).
+    pub metrics_history_file: Option<PathBuf>,
+    pub metrics_history_every_s: f64,
+}
+
+impl Default for ServeOptions {
+    fn default() -> ServeOptions {
+        ServeOptions::from_config(&RunConfig::default())
+    }
+}
+
+impl ServeOptions {
+    /// Lift the serving-shell knobs out of a full [`RunConfig`].
+    pub fn from_config(cfg: &RunConfig) -> ServeOptions {
+        ServeOptions {
+            mode: cfg.serve_mode,
+            rate_limit_rps: cfg.rate_limit_rps,
+            rate_limit_burst: cfg.rate_limit_burst,
+            client_queue_depth: cfg.client_queue_depth,
+            drain_deadline_s: cfg.drain_deadline_s,
+            metrics_history_file: cfg.metrics_history_file.clone(),
+            metrics_history_every_s: cfg.metrics_history_every_s,
+        }
+    }
+
+    fn tuning(&self) -> Tuning {
+        Tuning {
+            rate_limit_rps: self.rate_limit_rps,
+            rate_limit_burst: self.rate_limit_burst,
+            client_queue_depth: self.client_queue_depth,
+            drain_deadline_s: self.drain_deadline_s,
+            metrics_history_every_s: self.metrics_history_every_s,
+        }
+    }
+}
+
+/// Everything a serving shell needs, shared between [`event_loop`] and
+/// [`threaded`] behind one `Arc`.
+pub(crate) struct ServeCtx {
+    pub backend: Arc<Backend>,
+    pub tokenizer: Tokenizer,
+    /// Hard stop: exit as soon as in-flight replies are flushed.
+    pub stop: AtomicBool,
+    /// Graceful drain: stop accepting, finish in-flight, then stop.
+    pub drain: AtomicBool,
+    /// Server-assigned ids start at 2^48: far above practical
+    /// client-chosen v2 req_ids (the cancellation registry is one shared
+    /// namespace) yet small enough that every id stays exactly
+    /// representable in the f64-backed JSON codec when echoed.
+    pub next_id: AtomicU64,
+    pub start_wall: Instant,
+    pub stats: Arc<ServeStats>,
+    pub tuning: Mutex<Tuning>,
+    pub mode: ServeMode,
+    pub metrics_history: Option<PathBuf>,
+}
+
 /// Running server handle.
 pub struct Server {
     pub port: u16,
-    stop: Arc<AtomicBool>,
+    /// Shell counters (shared with the serving thread).
+    pub stats: Arc<ServeStats>,
+    ctx: Arc<ServeCtx>,
     handle: Option<std::thread::JoinHandle<()>>,
 }
 
 impl Server {
-    /// Bind and serve on a background thread. Port 0 picks a free port.
+    /// Bind and serve on a background thread with default options
+    /// (event-loop shell). Port 0 picks a free port.
     pub fn start(
         coordinator: Arc<Coordinator>,
         tokenizer: Tokenizer,
@@ -123,133 +277,174 @@ impl Server {
         tokenizer: Tokenizer,
         port: u16,
     ) -> anyhow::Result<Server> {
-        let backend = Arc::new(backend);
-        let listener = TcpListener::bind(("127.0.0.1", port))?;
-        let port = listener.local_addr()?.port();
-        listener.set_nonblocking(true)?;
-        let stop = Arc::new(AtomicBool::new(false));
-        let stop2 = Arc::clone(&stop);
-        let start_wall = std::time::Instant::now();
-        // Server-assigned ids start at 2^48: far above practical
-        // client-chosen v2 req_ids (the cancellation registry is one
-        // shared namespace) yet small enough that every id stays exactly
-        // representable in the f64-backed JSON codec when echoed.
-        let next_id = Arc::new(AtomicU64::new(1 << 48));
-        let handle = std::thread::Builder::new()
-            .name("specedge-server".into())
-            .spawn(move || {
-                let mut conns: Vec<std::thread::JoinHandle<()>> = Vec::new();
-                while !stop2.load(Ordering::SeqCst) {
-                    match listener.accept() {
-                        Ok((stream, _)) => {
-                            let c = Arc::clone(&backend);
-                            let t = tokenizer.clone();
-                            let s = Arc::clone(&stop2);
-                            let ids = Arc::clone(&next_id);
-                            conns.push(std::thread::spawn(move || {
-                                let _ = handle_conn(stream, c, t, s, ids, start_wall);
-                            }));
-                        }
-                        Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                            std::thread::sleep(std::time::Duration::from_millis(5));
-                        }
-                        Err(_) => break,
-                    }
-                }
-                for c in conns {
-                    let _ = c.join();
-                }
-            })?;
-        Ok(Server { port, stop, handle: Some(handle) })
+        Server::start_opts(backend, tokenizer, port, ServeOptions::default())
     }
 
-    pub fn stop(mut self) {
-        self.stop.store(true, Ordering::SeqCst);
+    /// Bind and serve with the shell knobs from a full [`RunConfig`]
+    /// (`serve_mode`, rate limit, drain deadline, metrics history…).
+    pub fn start_cfg(
+        backend: Backend,
+        tokenizer: Tokenizer,
+        cfg: &RunConfig,
+    ) -> anyhow::Result<Server> {
+        Server::start_opts(backend, tokenizer, cfg.port, ServeOptions::from_config(cfg))
+    }
+
+    /// Fully explicit entry point.
+    pub fn start_opts(
+        backend: Backend,
+        tokenizer: Tokenizer,
+        port: u16,
+        opts: ServeOptions,
+    ) -> anyhow::Result<Server> {
+        let listener = std::net::TcpListener::bind(("127.0.0.1", port))?;
+        let port = listener.local_addr()?.port();
+        listener.set_nonblocking(true)?;
+        let stats = Arc::new(ServeStats::default());
+        let ctx = Arc::new(ServeCtx {
+            backend: Arc::new(backend),
+            tokenizer,
+            stop: AtomicBool::new(false),
+            drain: AtomicBool::new(false),
+            next_id: AtomicU64::new(1 << 48),
+            start_wall: Instant::now(),
+            stats: Arc::clone(&stats),
+            tuning: Mutex::new(opts.tuning()),
+            mode: opts.mode,
+            metrics_history: opts.metrics_history_file.clone(),
+        });
+        let ctx2 = Arc::clone(&ctx);
+        let handle = std::thread::Builder::new()
+            .name("specedge-server".into())
+            .spawn(move || match ctx2.mode {
+                ServeMode::EventLoop => event_loop::run(ctx2, listener),
+                ServeMode::Threaded => threaded::run(ctx2, listener),
+            })?;
+        Ok(Server { port, stats, ctx, handle: Some(handle) })
+    }
+
+    /// Start a graceful drain (the programmatic twin of
+    /// `{"cmd":"drain"}`): stop accepting, let in-flight requests finish
+    /// against the drain deadline, then exit. [`wait`](Self::wait)
+    /// returns once the drain completes.
+    pub fn drain(&self) {
+        self.ctx.drain.store(true, Ordering::SeqCst);
+    }
+
+    /// True once a drain or shutdown has been requested.
+    pub fn draining(&self) -> bool {
+        self.ctx.drain.load(Ordering::SeqCst) || self.ctx.stop.load(Ordering::SeqCst)
+    }
+
+    /// Block until the serving thread exits (drain completed, shutdown
+    /// command, or [`stop`](Self::stop) from another handle).
+    pub fn wait(&mut self) {
         if let Some(h) = self.handle.take() {
             let _ = h.join();
         }
     }
-}
 
-fn handle_conn(
-    stream: TcpStream,
-    coordinator: Arc<Backend>,
-    tokenizer: Tokenizer,
-    stop: Arc<AtomicBool>,
-    next_id: Arc<AtomicU64>,
-    start_wall: std::time::Instant,
-) -> anyhow::Result<()> {
-    stream.set_nodelay(true).ok();
-    let mut reader = BufReader::new(stream.try_clone()?);
-    let mut stream = stream;
-    let mut line = String::new();
-    loop {
-        line.clear();
-        if reader.read_line(&mut line)? == 0 {
-            return Ok(()); // client closed
-        }
-        let trimmed = line.trim();
-        if trimmed.is_empty() {
-            continue;
-        }
-        let reply = match Json::parse(trimmed) {
-            Err(e) => err_json(&format!("bad json: {e}"), None),
-            Ok(req) => {
-                let req_id = wire_req_id(&req);
-                if let Some(cmd) = req.get("cmd").and_then(Json::as_str) {
-                    match cmd {
-                        "metrics" => metrics_json(&coordinator, start_wall),
-                        "cancel" => cancel_json(&req, &coordinator),
-                        "shutdown" => {
-                            stop.store(true, Ordering::SeqCst);
-                            let mut j = Json::obj();
-                            j.set("ok", true.into());
-                            writeln!(stream, "{j}")?;
-                            return Ok(());
-                        }
-                        other => err_json(&format!("unknown cmd {other:?}"), req_id),
-                    }
-                } else {
-                    handle_generate(&req, &coordinator, &tokenizer, &next_id, &mut stream)?
-                }
-            }
-        };
-        writeln!(stream, "{reply}")?;
+    pub fn stop(mut self) {
+        self.ctx.stop.store(true, Ordering::SeqCst);
+        self.wait();
     }
 }
 
-/// The client-chosen `req_id`, when the line carries a valid one (the
-/// same strict integer rule the options parser applies).
-fn wire_req_id(req: &Json) -> Option<u64> {
-    req.get("req_id").and_then(crate::api::wire_uint)
+/// Per-client token bucket. Holds only position state; rate and burst
+/// are read from [`Tuning`] on every take so hot-reload applies to
+/// existing connections too.
+pub(crate) struct TokenBucket {
+    tokens: f64,
+    last: Instant,
 }
 
-/// Serve one generate request. Streaming requests write their incremental
-/// frames to `stream` directly; the returned Json is the line the caller
-/// writes last (the final summary, or an error object).
-fn handle_generate(
-    req: &Json,
-    coordinator: &Backend,
-    tokenizer: &Tokenizer,
-    next_id: &AtomicU64,
-    stream: &mut TcpStream,
-) -> anyhow::Result<Json> {
+impl TokenBucket {
+    pub(crate) fn new(burst: usize) -> TokenBucket {
+        TokenBucket { tokens: burst as f64, last: Instant::now() }
+    }
+
+    /// Try to admit one request: `Err(retry_after_ms)` when the bucket
+    /// is empty. `rps <= 0` disables limiting.
+    pub(crate) fn try_take(&mut self, rps: f64, burst: usize) -> Result<(), f64> {
+        if rps <= 0.0 {
+            return Ok(());
+        }
+        let now = Instant::now();
+        let refill = now.duration_since(self.last).as_secs_f64() * rps;
+        self.tokens = (self.tokens + refill).min(burst.max(1) as f64);
+        self.last = now;
+        if self.tokens >= 1.0 {
+            self.tokens -= 1.0;
+            Ok(())
+        } else {
+            Err((1.0 - self.tokens) / rps * 1e3)
+        }
+    }
+}
+
+/// One submitted generate request as a shell tracks it: the engine
+/// handle plus the wire framing it was admitted under.
+pub(crate) struct ActiveGen {
+    pub handle: RequestHandle,
+    pub v2: bool,
+    pub req_id: Option<u64>,
+    pub streaming: bool,
+    /// Stashed final response (event loop: frames may still be queued
+    /// behind it when it first polls ready).
+    pub resp: Option<anyhow::Result<EngineResponse>>,
+}
+
+/// What a generate line turned into at admission.
+pub(crate) enum GenOutcome {
+    /// Shed or malformed: reply immediately, nothing submitted.
+    Reply(Json),
+    /// Admitted: poll/stream the handle.
+    Submitted(ActiveGen),
+}
+
+/// Parse, admission-check and submit one generate line. All admission
+/// gates (protocol, drain, rate limit, option validation) live here so
+/// both shells shed identical traffic with identical replies.
+pub(crate) fn start_generate(req: &Json, ctx: &ServeCtx, bucket: &mut TokenBucket) -> GenOutcome {
     let version = req.get("v").and_then(Json::as_usize).unwrap_or(1);
     let req_id = wire_req_id(req);
     if version != 1 && version != 2 {
-        return Ok(err_v2(
+        return GenOutcome::Reply(err_v2(
             "bad_request",
             &format!("unsupported protocol version {version}"),
             req_id,
-            coordinator,
+            &ctx.backend,
         ));
     }
     let v2 = version == 2;
+    if ctx.drain.load(Ordering::SeqCst) || ctx.stop.load(Ordering::SeqCst) {
+        let msg = "draining: not accepting new requests";
+        return GenOutcome::Reply(if v2 {
+            err_v2("overloaded", msg, req_id, &ctx.backend)
+        } else {
+            err_json(msg, req_id)
+        });
+    }
+    let (rps, burst) = {
+        let t = ctx.tuning.lock().unwrap();
+        (t.rate_limit_rps, t.rate_limit_burst)
+    };
+    if let Err(retry_ms) = bucket.try_take(rps, burst) {
+        ctx.stats.rate_limited.fetch_add(1, Ordering::Relaxed);
+        let msg = "rate limited (per-client token bucket empty)";
+        let mut j = if v2 {
+            err_v2("overloaded", msg, req_id, &ctx.backend)
+        } else {
+            err_json(msg, req_id)
+        };
+        j.set("retry_after_ms", retry_ms.into());
+        return GenOutcome::Reply(j);
+    }
     let prompt_text = match req.get("prompt").and_then(Json::as_str) {
         Some(p) => p,
         None => {
-            return Ok(if v2 {
-                err_v2("bad_request", "missing `prompt`", req_id, coordinator)
+            return GenOutcome::Reply(if v2 {
+                err_v2("bad_request", "missing `prompt`", req_id, &ctx.backend)
             } else {
                 err_json("missing `prompt`", req_id)
             });
@@ -269,11 +464,11 @@ fn handle_generate(
             Some(o) => match GenOptions::from_json(o) {
                 Ok(o) => o,
                 Err(e) => {
-                    return Ok(err_v2(
+                    return GenOutcome::Reply(err_v2(
                         "bad_request",
                         &format!("invalid options: {e}"),
                         req_id,
-                        coordinator,
+                        &ctx.backend,
                     ));
                 }
             },
@@ -281,11 +476,11 @@ fn handle_generate(
     } else {
         GenOptions::default()
     };
-    let mut prompt = match tokenizer.encode(prompt_text, true) {
+    let mut prompt = match ctx.tokenizer.encode(prompt_text, true) {
         Ok(p) => p,
         Err(e) => {
-            return Ok(if v2 {
-                err_v2("bad_request", &format!("{e}"), req_id, coordinator)
+            return GenOutcome::Reply(if v2 {
+                err_v2("bad_request", &format!("{e}"), req_id, &ctx.backend)
             } else {
                 err_json(&format!("{e}"), req_id)
             });
@@ -296,7 +491,7 @@ fn handle_generate(
     // the coordinator-visible id; v1 keeps server-assigned ids.
     let id = match req_id {
         Some(id) if v2 => id,
-        _ => next_id.fetch_add(1, Ordering::Relaxed),
+        _ => ctx.next_id.fetch_add(1, Ordering::Relaxed),
     };
     let request = GenerationRequest {
         id,
@@ -306,35 +501,169 @@ fn handle_generate(
         arrival_s: 0.0,
         options,
     };
-    let handle = coordinator.submit(request);
-    if !streaming {
-        return Ok(reply_final(handle.wait(), false, v2, req_id, coordinator));
-    }
-    // Relay each round's frame as it commits; the iterator ends when the
-    // worker retires the session and drops the sender.
-    for f in handle.frames() {
-        let mut j = Json::obj();
-        j.set("ok", true.into())
-            .set("frame", Json::Str("tokens".into()))
-            .set("round", f.round.into())
-            .set("text", Json::Str(tokenizer.decode(&f.tokens)))
-            .set("n_tokens", f.tokens.len().into())
-            .set("drafted", f.drafted.into())
-            .set("accepted", f.accepted.into())
-            .set("done", f.done.into());
-        if v2 {
-            j.set("req_id", (f.id as usize).into()).set("v", 2usize.into());
+    let handle = ctx.backend.submit(request);
+    ctx.stats.requests.fetch_add(1, Ordering::Relaxed);
+    GenOutcome::Submitted(ActiveGen { handle, v2, req_id, streaming, resp: None })
+}
+
+/// What a command line asks the shell to do after replying.
+pub(crate) enum CmdAction {
+    /// Just send the reply.
+    Reply(Json),
+    /// Send the reply, then stop the server (the stop flag is already
+    /// set; the shell must still flush this reply before exiting).
+    Shutdown(Json),
+}
+
+/// Dispatch one `{"cmd":...}` line. Shared by both shells so command
+/// behavior (and reply bytes) cannot drift between them.
+pub(crate) fn handle_cmd(cmd: &str, req: &Json, ctx: &ServeCtx) -> CmdAction {
+    match cmd {
+        "metrics" => CmdAction::Reply(serve_metrics(ctx)),
+        "cancel" => CmdAction::Reply(cancel_json(req, &ctx.backend)),
+        "drain" => {
+            ctx.drain.store(true, Ordering::SeqCst);
+            let mut j = Json::obj();
+            j.set("ok", true.into()).set("draining", true.into());
+            CmdAction::Reply(j)
         }
-        writeln!(stream, "{j}")?;
+        "reload" => CmdAction::Reply(reload_json(req, ctx)),
+        "shutdown" => {
+            ctx.stop.store(true, Ordering::SeqCst);
+            let mut j = Json::obj();
+            j.set("ok", true.into());
+            CmdAction::Shutdown(j)
+        }
+        other => CmdAction::Reply(err_json(&format!("unknown cmd {other:?}"), wire_req_id(req))),
     }
-    Ok(reply_final(handle.wait(), true, v2, req_id, coordinator))
+}
+
+/// `{"cmd":"reload","config":{...}}`: validate the override object
+/// against the full config schema, then apply the serving-shell subset
+/// that is safe to swap at admission boundaries. The reply lists which
+/// keys were `applied` and which were `ignored` (valid but bound at
+/// engine startup), so callers learn exactly what took effect.
+fn reload_json(req: &Json, ctx: &ServeCtx) -> Json {
+    let overrides = match req.get("config") {
+        Some(o) if o.as_obj().is_some() => o,
+        _ => return err_v2("bad_request", "reload requires a `config` object", None, &ctx.backend),
+    };
+    // Full-schema validation first: unknown keys, wrong types and
+    // out-of-range values are rejected atomically (nothing applied).
+    let mut probe = RunConfig::default();
+    if let Err(e) = probe.apply_json(overrides) {
+        return err_v2("bad_request", &format!("invalid config: {e}"), None, &ctx.backend);
+    }
+    if let Err(e) = probe.validate() {
+        return err_v2("bad_request", &format!("invalid config: {e}"), None, &ctx.backend);
+    }
+    const HOT: [&str; 5] = [
+        "rate_limit_rps",
+        "rate_limit_burst",
+        "client_queue_depth",
+        "drain_deadline_s",
+        "metrics_history_every_s",
+    ];
+    let mut applied = Vec::new();
+    let mut ignored = Vec::new();
+    {
+        let mut t = ctx.tuning.lock().unwrap();
+        for key in overrides.as_obj().unwrap().keys() {
+            match key.as_str() {
+                "rate_limit_rps" => t.rate_limit_rps = probe.rate_limit_rps,
+                "rate_limit_burst" => t.rate_limit_burst = probe.rate_limit_burst,
+                "client_queue_depth" => t.client_queue_depth = probe.client_queue_depth,
+                "drain_deadline_s" => t.drain_deadline_s = probe.drain_deadline_s,
+                "metrics_history_every_s" => {
+                    t.metrics_history_every_s = probe.metrics_history_every_s
+                }
+                _ => {}
+            }
+            if HOT.contains(&key.as_str()) {
+                applied.push(Json::Str(key.clone()));
+            } else {
+                ignored.push(Json::Str(key.clone()));
+            }
+        }
+    }
+    ctx.stats.reloads.fetch_add(1, Ordering::Relaxed);
+    let mut j = Json::obj();
+    j.set("ok", true.into())
+        .set("v", 2usize.into())
+        .set("applied", Json::Arr(applied))
+        .set("ignored", Json::Arr(ignored));
+    j
+}
+
+/// The engine metrics snapshot plus the serving-shell `serve_*` counters.
+pub(crate) fn serve_metrics(ctx: &ServeCtx) -> Json {
+    let mut j = metrics_json(&ctx.backend, ctx.start_wall);
+    let s = &ctx.stats;
+    j.set("serve_mode", Json::Str(ctx.mode.as_str().into()))
+        .set("serve_conns_open", (s.conns_open.load(Ordering::Relaxed) as usize).into())
+        .set(
+            "serve_conns_accepted",
+            (s.conns_accepted.load(Ordering::Relaxed) as usize).into(),
+        )
+        .set("serve_lines", (s.lines_in.load(Ordering::Relaxed) as usize).into())
+        .set("serve_requests", (s.requests.load(Ordering::Relaxed) as usize).into())
+        .set(
+            "serve_rate_limited",
+            (s.rate_limited.load(Ordering::Relaxed) as usize).into(),
+        )
+        .set(
+            "serve_overloaded_disconnects",
+            (s.overloaded_disconnects.load(Ordering::Relaxed) as usize).into(),
+        )
+        .set("serve_reloads", (s.reloads.load(Ordering::Relaxed) as usize).into())
+        .set("serve_draining", ctx.drain.load(Ordering::SeqCst).into());
+    j
+}
+
+/// Append one metrics snapshot line to the configured history file
+/// (no-op when `metrics_history_file` is unset). Each line is the
+/// `{"cmd":"metrics"}` reply plus a `t_s` offset, so histories from
+/// different runs line up by time-since-start.
+pub(crate) fn append_history(ctx: &ServeCtx) {
+    let Some(path) = &ctx.metrics_history else { return };
+    let mut j = serve_metrics(ctx);
+    j.set("t_s", ctx.start_wall.elapsed().as_secs_f64().into());
+    if let Ok(mut f) = std::fs::OpenOptions::new().create(true).append(true).open(path) {
+        if writeln!(f, "{j}").is_ok() {
+            ctx.stats.history_lines.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+}
+
+/// The client-chosen `req_id`, when the line carries a valid one (the
+/// same strict integer rule the options parser applies).
+pub(crate) fn wire_req_id(req: &Json) -> Option<u64> {
+    req.get("req_id").and_then(crate::api::wire_uint)
+}
+
+/// One streamed token frame as a wire line (shared by both shells so
+/// frame bytes are shell-independent).
+pub(crate) fn frame_json(f: &TokenFrame, tokenizer: &Tokenizer, v2: bool) -> Json {
+    let mut j = Json::obj();
+    j.set("ok", true.into())
+        .set("frame", Json::Str("tokens".into()))
+        .set("round", f.round.into())
+        .set("text", Json::Str(tokenizer.decode(&f.tokens)))
+        .set("n_tokens", f.tokens.len().into())
+        .set("drafted", f.drafted.into())
+        .set("accepted", f.accepted.into())
+        .set("done", f.done.into());
+    if v2 {
+        j.set("req_id", (f.id as usize).into()).set("v", 2usize.into());
+    }
+    j
 }
 
 /// Map a request's final outcome onto the wire: v1 keeps the seed reply
 /// shapes byte-for-byte; v2 adds `v`/`req_id`/`finish` and turns
 /// produced-nothing lifecycle deaths into typed errors.
-fn reply_final(
-    result: anyhow::Result<crate::coordinator::EngineResponse>,
+pub(crate) fn reply_final(
+    result: anyhow::Result<EngineResponse>,
     tagged: bool,
     v2: bool,
     req_id: Option<u64>,
@@ -402,7 +731,7 @@ fn cancel_json(req: &Json, coordinator: &Backend) -> Json {
     }
 }
 
-fn metrics_json(backend: &Backend, start_wall: std::time::Instant) -> Json {
+fn metrics_json(backend: &Backend, start_wall: Instant) -> Json {
     match backend {
         Backend::Single(c) => coordinator_metrics_json(c, start_wall),
         Backend::Fleet(f) => fleet_metrics_json(f, start_wall),
@@ -412,7 +741,7 @@ fn metrics_json(backend: &Backend, start_wall: std::time::Instant) -> Json {
 /// Fleet metrics: one full per-device metrics object per device (keyed by
 /// device name, same shape as the single-coordinator snapshot) plus the
 /// fleet-tier placement/verify-routing counters.
-fn fleet_metrics_json(fleet: &FleetRouter, start_wall: std::time::Instant) -> Json {
+fn fleet_metrics_json(fleet: &FleetRouter, start_wall: Instant) -> Json {
     let mut j = Json::obj();
     j.set("ok", true.into())
         .set("fleet_devices", fleet.device_count().into())
@@ -439,7 +768,7 @@ fn fleet_metrics_json(fleet: &FleetRouter, start_wall: std::time::Instant) -> Js
     j
 }
 
-fn coordinator_metrics_json(coordinator: &Coordinator, start_wall: std::time::Instant) -> Json {
+fn coordinator_metrics_json(coordinator: &Coordinator, start_wall: Instant) -> Json {
     let r = coordinator.metrics.snapshot();
     let mut j = Json::obj();
     j.set("ok", true.into())
@@ -525,7 +854,7 @@ fn coordinator_metrics_json(coordinator: &Coordinator, start_wall: std::time::In
     j
 }
 
-fn final_json(r: crate::coordinator::EngineResponse, tagged: bool, v2: bool) -> Json {
+fn final_json(r: EngineResponse, tagged: bool, v2: bool) -> Json {
     let mut j = Json::obj();
     if tagged {
         j.set("frame", Json::Str("final".into()));
@@ -550,7 +879,7 @@ fn final_json(r: crate::coordinator::EngineResponse, tagged: bool, v2: bool) -> 
 
 /// The seed error shape (v1, byte-identical for seed lines), plus the
 /// offending `req_id` when the request line carried one.
-fn err_json(msg: &str, req_id: Option<u64>) -> Json {
+pub(crate) fn err_json(msg: &str, req_id: Option<u64>) -> Json {
     let mut j = Json::obj();
     j.set("ok", false.into()).set("error", Json::Str(msg.to_string()));
     if let Some(id) = req_id {
@@ -561,162 +890,11 @@ fn err_json(msg: &str, req_id: Option<u64>) -> Json {
 
 /// A v2 typed error: `kind` ∈ `bad_request | overloaded | cancelled |
 /// deadline | internal`, plus queue-state fields for client backoff.
-fn err_v2(kind: &str, msg: &str, req_id: Option<u64>, coordinator: &Backend) -> Json {
+pub(crate) fn err_v2(kind: &str, msg: &str, req_id: Option<u64>, coordinator: &Backend) -> Json {
     let mut j = err_json(msg, req_id);
     j.set("v", 2usize.into())
         .set("kind", Json::Str(kind.into()))
         .set("queue_len", coordinator.queue_len().into())
         .set("queue_capacity", coordinator.queue_capacity().into());
-    j
-}
-
-/// Minimal blocking client for tests, examples and the load generator.
-/// Speaks both protocol versions: [`generate`](Client::generate) /
-/// [`generate_stream`](Client::generate_stream) emit seed-shaped v1
-/// lines, [`generate_with`](Client::generate_with) /
-/// [`generate_stream_with`](Client::generate_stream_with) the typed v2
-/// protocol, and [`cancel`](Client::cancel) the cancel command. A
-/// configurable [read timeout](Client::set_read_timeout) turns a dead
-/// server into a typed error instead of a hang.
-pub struct Client {
-    reader: BufReader<TcpStream>,
-    stream: TcpStream,
-}
-
-impl Client {
-    pub fn connect(port: u16) -> anyhow::Result<Client> {
-        let stream = TcpStream::connect(("127.0.0.1", port))?;
-        stream.set_nodelay(true).ok();
-        Ok(Client { reader: BufReader::new(stream.try_clone()?), stream })
-    }
-
-    /// Abort reads that wait longer than `timeout` (None = wait forever,
-    /// the default). An expired timeout surfaces as an
-    /// "timed out waiting for the server" error from the blocked call.
-    pub fn set_read_timeout(&mut self, timeout: Option<Duration>) -> anyhow::Result<()> {
-        // Both handles alias one socket; set through the reader's (the
-        // one reads actually go through) and keep the writer consistent.
-        self.reader.get_ref().set_read_timeout(timeout)?;
-        self.stream.set_read_timeout(timeout)?;
-        Ok(())
-    }
-
-    /// Write one request line (no reply expected yet).
-    pub fn send(&mut self, req: &Json) -> anyhow::Result<()> {
-        writeln!(self.stream, "{req}")?;
-        Ok(())
-    }
-
-    /// Read one reply line, mapping closed connections and read timeouts
-    /// to typed errors.
-    pub fn read_reply(&mut self) -> anyhow::Result<Json> {
-        let mut line = String::new();
-        match self.reader.read_line(&mut line) {
-            Ok(0) => anyhow::bail!("server closed the connection"),
-            Ok(_) => {}
-            Err(e)
-                if matches!(
-                    e.kind(),
-                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
-                ) =>
-            {
-                anyhow::bail!("timed out waiting for the server (read timeout)")
-            }
-            Err(e) => return Err(e.into()),
-        }
-        Json::parse(line.trim()).map_err(|e| anyhow::anyhow!("bad reply: {e}"))
-    }
-
-    pub fn call(&mut self, req: &Json) -> anyhow::Result<Json> {
-        self.send(req)?;
-        self.read_reply()
-    }
-
-    /// v1 generate (seed protocol).
-    pub fn generate(&mut self, prompt: &str, task: &str) -> anyhow::Result<Json> {
-        let mut j = Json::obj();
-        j.set("prompt", Json::Str(prompt.into()))
-            .set("task", Json::Str(task.into()));
-        self.call(&j)
-    }
-
-    /// v2 generate with typed options and a client-chosen `req_id` (the
-    /// id [`cancel`](Client::cancel) addresses).
-    pub fn generate_with(
-        &mut self,
-        prompt: &str,
-        task: &str,
-        req_id: u64,
-        options: &GenOptions,
-    ) -> anyhow::Result<Json> {
-        self.call(&v2_line(prompt, task, req_id, options, false))
-    }
-
-    /// Cancel a submitted request by `req_id` (from any connection).
-    pub fn cancel(&mut self, req_id: u64) -> anyhow::Result<Json> {
-        let mut j = Json::obj();
-        j.set("cmd", Json::Str("cancel".into()))
-            .set("req_id", (req_id as usize).into());
-        self.call(&j)
-    }
-
-    /// v1 streaming generate: returns the per-round token frames and the
-    /// final summary object (which is also the only line for error
-    /// replies).
-    pub fn generate_stream(
-        &mut self,
-        prompt: &str,
-        task: &str,
-    ) -> anyhow::Result<(Vec<Json>, Json)> {
-        let mut j = Json::obj();
-        j.set("prompt", Json::Str(prompt.into()))
-            .set("task", Json::Str(task.into()))
-            .set("stream", true.into());
-        self.send(&j)?;
-        self.collect_stream()
-    }
-
-    /// v2 streaming generate with typed options.
-    pub fn generate_stream_with(
-        &mut self,
-        prompt: &str,
-        task: &str,
-        req_id: u64,
-        options: &GenOptions,
-    ) -> anyhow::Result<(Vec<Json>, Json)> {
-        self.send(&v2_line(prompt, task, req_id, options, true))?;
-        self.collect_stream()
-    }
-
-    /// Drain `frame:"tokens"` lines until the terminating non-frame line.
-    fn collect_stream(&mut self) -> anyhow::Result<(Vec<Json>, Json)> {
-        let mut frames = Vec::new();
-        loop {
-            let reply = self
-                .read_reply()
-                .map_err(|e| anyhow::anyhow!("mid-stream: {e}"))?;
-            match reply.get("frame").and_then(Json::as_str) {
-                Some("tokens") => frames.push(reply),
-                _ => return Ok((frames, reply)),
-            }
-        }
-    }
-}
-
-/// Build one v2 generate line.
-fn v2_line(prompt: &str, task: &str, req_id: u64, options: &GenOptions, stream: bool) -> Json {
-    let mut j = Json::obj();
-    j.set("v", 2usize.into())
-        .set("req_id", (req_id as usize).into())
-        .set("prompt", Json::Str(prompt.into()))
-        .set("task", Json::Str(task.into()));
-    if stream {
-        j.set("stream", true.into());
-    }
-    let o = options.to_json();
-    let empty = o.as_obj().map(|m| m.is_empty()).unwrap_or(true);
-    if !empty {
-        j.set("options", o);
-    }
     j
 }

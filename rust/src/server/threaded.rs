@@ -1,0 +1,158 @@
+//! Thread-per-connection serving shell (`serve_mode: threaded`) — the
+//! seed architecture, kept as the A/B baseline that `experiment
+//! serve_load` measures the [`event_loop`](super::event_loop) shell
+//! against.
+//!
+//! Each accepted connection gets its own OS thread running a blocking
+//! read-dispatch-reply loop; at high connection counts the thread
+//! spawns, stacks and context switches dominate, which is exactly the
+//! regime the event loop exists for. Two fixes over the seed (wire
+//! behavior unchanged): the accept loop parks on an adaptive backoff
+//! instead of hot-looping at 5ms, and connection reads poll on a short
+//! timeout so stop/drain take effect even while peers sit silent
+//! (previously [`Server::stop`](super::Server::stop) waited for every
+//! client to disconnect).
+//!
+//! Drain semantics here are the blocking analogue of the event loop's:
+//! the accept loop closes the front door, in-flight generates run to
+//! completion on their threads (new ones are refused at admission), and
+//! each handler exits at its next between-lines poll. The
+//! `drain_deadline_s` straggler cancellation is event-loop only — a
+//! blocked `wait()` cannot be interrupted from its own thread.
+
+use super::{
+    append_history, err_json, frame_json, handle_cmd, reply_final, start_generate, CmdAction,
+    GenOutcome, ServeCtx, TokenBucket,
+};
+use crate::util::json::Json;
+use std::io::{BufRead, BufReader, ErrorKind, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Accept-loop idle backoff bounds (the seed hot-looped at a fixed 5ms).
+const MIN_IDLE: Duration = Duration::from_millis(1);
+const MAX_IDLE: Duration = Duration::from_millis(50);
+/// Between-lines read poll: how quickly a silent connection notices
+/// stop/drain.
+const READ_POLL: Duration = Duration::from_millis(100);
+
+/// Accept loop: one handler thread per connection.
+pub(crate) fn run(ctx: Arc<ServeCtx>, listener: TcpListener) {
+    let mut conns: Vec<std::thread::JoinHandle<()>> = Vec::new();
+    let mut idle = MIN_IDLE;
+    let mut last_history = Instant::now();
+    while !ctx.stop.load(Ordering::SeqCst) && !ctx.drain.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                idle = MIN_IDLE;
+                ctx.stats.conns_accepted.fetch_add(1, Ordering::Relaxed);
+                ctx.stats.conns_open.fetch_add(1, Ordering::Relaxed);
+                let c = Arc::clone(&ctx);
+                conns.push(std::thread::spawn(move || {
+                    let _ = handle_conn(stream, &c);
+                    c.stats.conns_open.fetch_sub(1, Ordering::Relaxed);
+                }));
+            }
+            Err(ref e) if e.kind() == ErrorKind::WouldBlock => {
+                std::thread::sleep(idle);
+                idle = (idle * 2).min(MAX_IDLE);
+            }
+            Err(_) => break,
+        }
+        // Reap finished handlers so a long churny run doesn't accumulate
+        // thousands of unjoined thread handles.
+        let mut i = 0;
+        while i < conns.len() {
+            if conns[i].is_finished() {
+                let _ = conns.swap_remove(i).join();
+            } else {
+                i += 1;
+            }
+        }
+        if ctx.metrics_history.is_some() {
+            let every = ctx.tuning.lock().unwrap().metrics_history_every_s;
+            if last_history.elapsed().as_secs_f64() >= every {
+                last_history = Instant::now();
+                append_history(&ctx);
+            }
+        }
+    }
+    // Drain or stop: the front door is closed; handlers exit at their
+    // next between-lines poll (in-flight generates finish first).
+    for c in conns {
+        let _ = c.join();
+    }
+    ctx.stop.store(true, Ordering::SeqCst);
+    append_history(&ctx);
+}
+
+fn handle_conn(stream: TcpStream, ctx: &ServeCtx) -> anyhow::Result<()> {
+    stream.set_nodelay(true).ok();
+    stream.set_read_timeout(Some(READ_POLL))?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut stream = stream;
+    let mut bucket = TokenBucket::new(ctx.tuning.lock().unwrap().rate_limit_burst);
+    let mut line = String::new();
+    loop {
+        line.clear();
+        // Poll-read so stop/drain are honored while the peer is silent.
+        // A timeout leaves any partial bytes in `line` (read_line keeps
+        // what it read before erroring), so reassembly is preserved
+        // across polls.
+        loop {
+            match reader.read_line(&mut line) {
+                Ok(0) => return Ok(()), // client closed
+                Ok(_) => break,
+                Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {
+                    if ctx.stop.load(Ordering::SeqCst) || ctx.drain.load(Ordering::SeqCst) {
+                        return Ok(());
+                    }
+                }
+                Err(e) => return Err(e.into()),
+            }
+        }
+        let trimmed = line.trim();
+        if trimmed.is_empty() {
+            continue;
+        }
+        ctx.stats.lines_in.fetch_add(1, Ordering::Relaxed);
+        let reply = match Json::parse(trimmed) {
+            Err(e) => err_json(&format!("bad json: {e}"), None),
+            Ok(req) => {
+                if let Some(cmd) = req.get("cmd").and_then(Json::as_str) {
+                    match handle_cmd(cmd, &req, ctx) {
+                        CmdAction::Reply(j) => j,
+                        CmdAction::Shutdown(j) => {
+                            // The stop flag is already set; flush the ack
+                            // and let the accept loop wind everything down.
+                            writeln!(stream, "{j}")?;
+                            return Ok(());
+                        }
+                    }
+                } else {
+                    match start_generate(&req, ctx, &mut bucket) {
+                        GenOutcome::Reply(j) => j,
+                        GenOutcome::Submitted(a) => {
+                            if a.streaming {
+                                // Relay each round's frame as it commits;
+                                // the iterator ends when the worker
+                                // retires the session.
+                                for f in a.handle.frames() {
+                                    writeln!(
+                                        stream,
+                                        "{}",
+                                        frame_json(&f, &ctx.tokenizer, a.v2)
+                                    )?;
+                                }
+                            }
+                            reply_final(a.handle.wait(), a.streaming, a.v2, a.req_id, &ctx.backend)
+                        }
+                    }
+                }
+            }
+        };
+        writeln!(stream, "{reply}")?;
+    }
+}

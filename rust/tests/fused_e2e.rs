@@ -8,12 +8,13 @@
 //!   per-session stepping while issuing measurably fewer engine
 //!   dispatches per committed token;
 //! * the coordinator's fused serving path matches `max_inflight = 1`;
-//! * the lockstep batcher reference charges the executed batch size.
+//! * the quarantined lockstep reference (`legacy_lockstep`) charges the
+//!   executed batch size.
 
 use specedge::config::{DecisionMode, ExecMode, KernelPath, KvCacheMode, RunConfig, TreeChoice};
 use specedge::coordinator::fuser::{self, TickEvent};
 use specedge::costmodel::TreeShape;
-use specedge::coordinator::{batcher, Coordinator};
+use specedge::coordinator::{legacy_lockstep, Coordinator};
 use specedge::hetero::{LatencyModel, Mapping, Platform};
 use specedge::models::VariantKey;
 use specedge::runtime::Engine;
@@ -479,7 +480,7 @@ fn batched_baseline_charges_executed_batch_size() {
         seen.borrow_mut().push(lanes);
         0.25
     };
-    let outs = batcher::batched_baseline(
+    let outs = legacy_lockstep::batched_baseline(
         &engine,
         target,
         KernelPath::Ref,

@@ -446,6 +446,52 @@ fn v1_protocol_compat_pinned_replies() {
     stop_server(coord, server, &mut client);
 }
 
+/// The same pinned v1 bytes under `serve_mode: threaded`: the two
+/// serving shells share every reply-building path, so the wire must be
+/// byte-identical regardless of which shell moved the bytes.
+#[test]
+fn v1_protocol_compat_pinned_replies_threaded_shell() {
+    if !have_artifacts() {
+        return;
+    }
+    use specedge::config::ServeMode;
+    use specedge::server::{Backend, ServeOptions};
+
+    let coord = Arc::new(Coordinator::start(cfg(), Platform::imx95()).unwrap());
+    let opts = ServeOptions { mode: ServeMode::Threaded, ..ServeOptions::default() };
+    let server =
+        Server::start_opts(Backend::Single(Arc::clone(&coord)), Tokenizer::builtin(), 0, opts)
+            .unwrap();
+    let port = server.port;
+
+    assert_eq!(
+        raw_roundtrip(port, "@"),
+        r#"{"error":"bad json: json parse error at byte 0: unexpected character","ok":false}"#
+    );
+    assert_eq!(
+        raw_roundtrip(port, r#"{"task":"x"}"#),
+        r#"{"error":"missing `prompt`","ok":false}"#
+    );
+    assert_eq!(
+        raw_roundtrip(port, r#"{"cmd":"bogus"}"#),
+        r#"{"error":"unknown cmd \"bogus\"","ok":false}"#
+    );
+    let line = format!(r#"{{"prompt":"{LONG_PROMPT}","task":"translate"}}"#);
+    let j = Json::parse(&raw_roundtrip(port, &line)).unwrap();
+    let keys: Vec<&str> = j.as_obj().unwrap().keys().map(|k| k.as_str()).collect();
+    assert_eq!(
+        keys,
+        vec![
+            "alpha", "completion", "gamma", "ok", "queue_ms", "real_ms", "rounds",
+            "sim_ms", "speculative", "tokens"
+        ],
+        "threaded-shell v1 reply shape drifted"
+    );
+
+    let mut client = Client::connect(port).unwrap();
+    stop_server(coord, server, &mut client);
+}
+
 #[test]
 fn v2_options_and_typed_errors_over_the_wire() {
     if !have_artifacts() {

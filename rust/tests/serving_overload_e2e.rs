@@ -1,0 +1,364 @@
+//! Overload-shedding and serving-lifecycle end-to-end tests over real
+//! TCP (skipped when `make artifacts` hasn't run): admission-queue
+//! overflow sheds with the typed `overloaded` taxonomy while survivors'
+//! frame streams stay intact and KV pages reclaim immediately; the
+//! per-client token bucket returns `retry_after_ms` the typed client
+//! surfaces as [`ClientError::Overloaded`]; graceful drain completes
+//! in-flight streams, rejects new work with a typed reply, and exits the
+//! serving thread; and `{"cmd":"reload"}` hot-applies exactly the
+//! admission-boundary-safe knobs while reporting engine knobs as ignored.
+
+use specedge::api::GenOptions;
+use specedge::config::{KvCacheMode, RunConfig, ServeMode};
+use specedge::coordinator::Coordinator;
+use specedge::server::{Backend, Client, ClientError, ServeOptions, Server};
+use specedge::tokenizer::Tokenizer;
+use specedge::util::json::Json;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::Duration;
+
+fn have_artifacts() -> bool {
+    if Path::new("artifacts/manifest.json").exists() {
+        true
+    } else {
+        eprintln!("SKIP: artifacts missing (run `make artifacts`)");
+        false
+    }
+}
+
+/// Same long eval prompt the lifecycle tests pin: γ=1 decodes span many
+/// rounds, so overload events land mid-decode, not between requests.
+const LONG_PROMPT: &str = "tr: mogdi mogdi peni ture buda ture hevboco curih ture milori";
+
+fn base_cfg() -> RunConfig {
+    RunConfig {
+        artifacts_dir: PathBuf::from("artifacts"),
+        max_new_tokens: 64,
+        gamma: Some(1),
+        max_inflight: 1,
+        workers: 1,
+        ..RunConfig::default()
+    }
+}
+
+fn start_server(c: RunConfig) -> (Arc<Coordinator>, Server) {
+    let coord = Arc::new(Coordinator::start(c, specedge::hetero::Platform::imx95()).unwrap());
+    let server = Server::start(Arc::clone(&coord), Tokenizer::builtin(), 0).unwrap();
+    (coord, server)
+}
+
+fn start_server_opts(c: RunConfig, opts: ServeOptions) -> (Arc<Coordinator>, Server) {
+    let coord = Arc::new(Coordinator::start(c, specedge::hetero::Platform::imx95()).unwrap());
+    let server =
+        Server::start_opts(Backend::Single(Arc::clone(&coord)), Tokenizer::builtin(), 0, opts)
+            .unwrap();
+    (coord, server)
+}
+
+fn stop(coord: Arc<Coordinator>, server: Server) {
+    server.stop();
+    Arc::try_unwrap(coord).ok().unwrap().shutdown();
+}
+
+/// Admission-queue overflow: with a 2-deep queue and one slot, a burst
+/// of concurrent streaming requests must split into survivors (complete,
+/// frame-intact streams) and typed `overloaded` sheds carrying the queue
+/// state — and once the burst resolves, every KV page is back in the
+/// pool and the sheds are visible in the lifecycle metrics.
+#[test]
+fn queue_overflow_sheds_typed_while_survivors_stay_intact() {
+    if !have_artifacts() {
+        return;
+    }
+    const N: usize = 6;
+    let cfg = RunConfig {
+        queue_capacity: 2,
+        kv_cache: KvCacheMode::On,
+        ..base_cfg()
+    };
+    let (coord, server) = start_server(cfg);
+    let port = server.port;
+
+    // Connect everyone first, then fire all requests in one burst so the
+    // queue genuinely overflows (connects are µs, decodes are ms+).
+    let clients: Vec<Client> = (0..N)
+        .map(|_| {
+            let mut c = Client::connect(port).unwrap();
+            c.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
+            c
+        })
+        .collect();
+    let workers: Vec<_> = clients
+        .into_iter()
+        .enumerate()
+        .map(|(i, mut c)| {
+            std::thread::spawn(move || {
+                c.generate_stream_with(
+                    LONG_PROMPT,
+                    "translate",
+                    100 + i as u64,
+                    &GenOptions::default(),
+                )
+                .unwrap()
+            })
+        })
+        .collect();
+
+    let mut survivors = 0usize;
+    let mut shed = 0usize;
+    for w in workers {
+        let (frames, fin) = w.join().unwrap();
+        if fin.get("ok") == Some(&Json::Bool(true)) {
+            survivors += 1;
+            // Zero lost or corrupted frames: rounds strictly increase,
+            // the stream terminates with done, and the frames reassemble
+            // to exactly the final's token count.
+            assert!(!frames.is_empty(), "survivor streamed nothing: {fin}");
+            let mut last_round = 0usize;
+            let mut streamed = 0usize;
+            for f in &frames {
+                let round = f.req_usize("round").unwrap();
+                assert!(round > last_round, "non-monotone rounds: {f}");
+                last_round = round;
+                streamed += f.req_usize("n_tokens").unwrap();
+            }
+            assert_eq!(frames.last().unwrap().get("done"), Some(&Json::Bool(true)));
+            assert_eq!(streamed, fin.req_usize("tokens").unwrap(), "{fin}");
+            assert_eq!(fin.get("finish").and_then(Json::as_str), Some("stop"));
+        } else {
+            shed += 1;
+            // The typed overload taxonomy, with queue state for backoff.
+            assert!(frames.is_empty(), "shed request must not stream");
+            assert_eq!(fin.get("kind").and_then(Json::as_str), Some("overloaded"), "{fin}");
+            assert!(
+                fin.req_str("error").unwrap().starts_with("queue full"),
+                "{fin}"
+            );
+            assert_eq!(fin.req_usize("queue_capacity").unwrap(), 2);
+            assert!(fin.get("queue_len").and_then(Json::as_usize).is_some());
+        }
+    }
+    // One decoding + two queued survive at minimum; with a 2-deep queue
+    // at least three of six must shed.
+    assert_eq!(survivors + shed, N);
+    assert!(survivors >= 2, "survivors {survivors}");
+    assert!(shed >= 3, "shed {shed}");
+
+    // Post-burst engine state: sheds counted, every KV page reclaimed.
+    let mut probe = Client::connect(port).unwrap();
+    let mut m = Json::obj();
+    m.set("cmd", Json::Str("metrics".into()));
+    let metrics = probe.call(&m).unwrap();
+    assert_eq!(metrics.req_usize("finish_rejected").unwrap(), shed);
+    assert_eq!(metrics.req_usize("kv_pages_used_cpu").unwrap(), 0);
+    assert_eq!(metrics.req_usize("kv_pages_used_gpu").unwrap(), 0);
+    assert!(metrics.req_usize("kv_lookups").unwrap() >= survivors);
+
+    stop(coord, server);
+}
+
+/// The per-client token bucket sheds with `retry_after_ms`, surfaced by
+/// the typed client as [`ClientError::Overloaded`] with a concrete
+/// [`ClientError::retry_after`] hint — on both v2 and v1 lines.
+#[test]
+fn rate_limit_returns_typed_retry_after() {
+    if !have_artifacts() {
+        return;
+    }
+    let opts = ServeOptions {
+        rate_limit_rps: 0.01,
+        rate_limit_burst: 1,
+        ..ServeOptions::default()
+    };
+    let (coord, server) = start_server_opts(base_cfg(), opts);
+    let mut c = Client::connect_timeout(server.port, Duration::from_secs(5)).unwrap();
+    c.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+
+    // The burst token admits the first request...
+    let r = c
+        .try_generate_with("tr: a", "translate", 1, &GenOptions::default())
+        .unwrap();
+    assert_eq!(r.get("ok"), Some(&Json::Bool(true)));
+
+    // ...and the second is shed with a usable backoff hint (~100 s at
+    // 0.01 rps).
+    let e = c
+        .try_generate_with("tr: a", "translate", 2, &GenOptions::default())
+        .unwrap_err();
+    assert!(e.is_overloaded(), "{e}");
+    let backoff = e.retry_after().expect("rate-limit shed must carry retry_after_ms");
+    assert!(backoff > Duration::from_secs(1), "{backoff:?}");
+
+    // v1 lines classify identically (message-prefix taxonomy).
+    let e = c.try_generate("tr: a", "translate").unwrap_err();
+    assert!(e.is_overloaded(), "{e}");
+    assert!(e.retry_after().is_some());
+
+    stop(coord, server);
+}
+
+/// Graceful drain: in-flight streams run to their normal completion
+/// (zero dropped frames), post-drain generates get a typed rejection,
+/// and the serving thread then exits on its own.
+#[test]
+fn drain_completes_inflight_rejects_new_and_exits() {
+    if !have_artifacts() {
+        return;
+    }
+    let (coord, mut server) = start_server(base_cfg());
+    let mut a = Client::connect(server.port).unwrap();
+    a.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
+    let mut b = Client::connect(server.port).unwrap();
+    b.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+
+    // A's stream is provably mid-decode when the drain lands.
+    let line = format!(
+        r#"{{"v":2,"req_id":9,"stream":true,"prompt":"{LONG_PROMPT}","task":"translate"}}"#
+    );
+    a.send(&Json::parse(&line).unwrap()).unwrap();
+    let first = a.read_reply().unwrap();
+    assert_eq!(first.get("frame").and_then(Json::as_str), Some("tokens"), "{first}");
+
+    // Drain over the wire (the programmatic twin is Server::drain).
+    let mut d = Json::obj();
+    d.set("cmd", Json::Str("drain".into()));
+    let ack = b.call(&d).unwrap();
+    assert_eq!(ack.get("ok"), Some(&Json::Bool(true)));
+    assert_eq!(ack.get("draining"), Some(&Json::Bool(true)));
+    assert!(server.draining());
+
+    // New work on an existing connection: typed overload rejection.
+    let e = b
+        .try_generate_with(LONG_PROMPT, "translate", 10, &GenOptions::default())
+        .unwrap_err();
+    assert!(e.is_overloaded(), "{e}");
+    match &e {
+        ClientError::Overloaded { msg, .. } => {
+            assert!(msg.starts_with("draining"), "{msg}")
+        }
+        other => panic!("expected Overloaded, got {other}"),
+    }
+
+    // The in-flight stream still runs to its natural end: frames keep
+    // coming, the final is ok:true with the normal finish.
+    let mut frames = vec![first];
+    let fin = loop {
+        let l = a.read_reply().unwrap();
+        if l.get("frame").and_then(Json::as_str) == Some("tokens") {
+            frames.push(l);
+        } else {
+            break l;
+        }
+    };
+    assert_eq!(fin.get("ok"), Some(&Json::Bool(true)), "{fin}");
+    let finish = fin.get("finish").and_then(Json::as_str).unwrap();
+    assert!(finish == "stop" || finish == "length", "{fin}");
+    assert_eq!(frames.last().unwrap().get("done"), Some(&Json::Bool(true)));
+    let streamed: usize = frames
+        .iter()
+        .map(|f| f.req_usize("n_tokens").unwrap())
+        .sum();
+    assert_eq!(streamed, fin.req_usize("tokens").unwrap());
+
+    // Drain finished -> the serving thread exits without a shutdown cmd.
+    server.wait();
+    drop(server);
+    Arc::try_unwrap(coord).ok().unwrap().shutdown();
+}
+
+/// `{"cmd":"reload"}` hot-applies the admission-boundary-safe knobs to
+/// live connections, reports engine knobs as ignored, and rejects
+/// invalid configs atomically (validated on a probe before anything is
+/// applied).
+#[test]
+fn reload_applies_shell_knobs_and_ignores_engine_knobs() {
+    if !have_artifacts() {
+        return;
+    }
+    let (coord, server) = start_server(base_cfg());
+    let mut c = Client::connect(server.port).unwrap();
+    c.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+
+    // Mixed reload: two shell knobs, one engine knob.
+    let mut r = Json::obj();
+    r.set("cmd", Json::Str("reload".into())).set(
+        "config",
+        Json::parse(r#"{"rate_limit_rps":0.01,"rate_limit_burst":1,"gamma":3}"#).unwrap(),
+    );
+    let reply = c.call(&r).unwrap();
+    assert_eq!(reply.get("ok"), Some(&Json::Bool(true)), "{reply}");
+    let applied: Vec<&str> = reply
+        .req_arr("applied")
+        .unwrap()
+        .iter()
+        .filter_map(Json::as_str)
+        .collect();
+    let ignored: Vec<&str> = reply
+        .req_arr("ignored")
+        .unwrap()
+        .iter()
+        .filter_map(Json::as_str)
+        .collect();
+    assert!(applied.contains(&"rate_limit_rps"), "{reply}");
+    assert!(applied.contains(&"rate_limit_burst"), "{reply}");
+    assert!(ignored.contains(&"gamma"), "{reply}");
+
+    // The reloaded limit binds at this connection's next admission.
+    let ok = c
+        .try_generate_with("tr: a", "translate", 1, &GenOptions::default())
+        .unwrap();
+    assert_eq!(ok.get("ok"), Some(&Json::Bool(true)));
+    let e = c
+        .try_generate_with("tr: a", "translate", 2, &GenOptions::default())
+        .unwrap_err();
+    assert!(e.is_overloaded(), "{e}");
+
+    // Invalid configs are rejected atomically with a typed bad_request.
+    let mut bad = Json::obj();
+    bad.set("cmd", Json::Str("reload".into()))
+        .set("config", Json::parse(r#"{"gamma":0}"#).unwrap());
+    let reply = c.call(&bad).unwrap();
+    assert_eq!(reply.get("ok"), Some(&Json::Bool(false)));
+    assert_eq!(reply.get("kind").and_then(Json::as_str), Some("bad_request"));
+    assert!(reply.req_str("error").unwrap().starts_with("invalid config"), "{reply}");
+
+    // Reload without a config object: pinned bad_request.
+    let mut none = Json::obj();
+    none.set("cmd", Json::Str("reload".into()));
+    let reply = c.call(&none).unwrap();
+    assert_eq!(reply.get("ok"), Some(&Json::Bool(false)));
+    assert!(reply.req_str("error").unwrap().contains("requires a `config` object"));
+
+    // The reload counter made it to the serve metrics.
+    let mut m = Json::obj();
+    m.set("cmd", Json::Str("metrics".into()));
+    let metrics = c.call(&m).unwrap();
+    assert_eq!(metrics.req_usize("serve_reloads").unwrap(), 1);
+
+    stop(coord, server);
+}
+
+/// The threaded shell serves the same protocol: a quick roundtrip under
+/// `serve_mode: threaded` (the legacy thread-per-connection baseline the
+/// event loop is benchmarked against).
+#[test]
+fn threaded_shell_still_serves_and_drains() {
+    if !have_artifacts() {
+        return;
+    }
+    let opts = ServeOptions { mode: ServeMode::Threaded, ..ServeOptions::default() };
+    let (coord, mut server) = start_server_opts(base_cfg(), opts);
+    let mut c = Client::connect(server.port).unwrap();
+    c.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
+    let r = c.generate(LONG_PROMPT, "translate").unwrap();
+    assert_eq!(r.get("ok"), Some(&Json::Bool(true)));
+    assert!(r.req_usize("tokens").unwrap() > 0);
+
+    // Programmatic drain stops the threaded shell too (its handlers exit
+    // at the next poll boundary).
+    server.drain();
+    server.wait();
+    drop(server);
+    Arc::try_unwrap(coord).ok().unwrap().shutdown();
+}
