@@ -2,9 +2,13 @@
 //! pairing changes acceptance rate AND what that does to the end-to-end
 //! decision, per the cost model.
 //!
-//! For each (drafter, target) scheme pairing that fits the paper-scale
-//! memory budget, measures α on a slice of translate samples, then runs the
-//! DSE at that measured α to show which pairings still justify speculation.
+//! The pairing grid comes from the manifest itself through
+//! [`DrafterRegistry::pairings`] — the same enumeration the per-class
+//! drafter selection scores at serving time — so a manifest that ships
+//! more quantized drafter bodies automatically widens this ablation.
+//! For each (drafter, target) pairing that fits the paper-scale memory
+//! budget, measures α on a slice of translate samples, then runs the DSE
+//! at that measured α to show which pairings still justify speculation.
 //!
 //! ```bash
 //! cargo run --release --example quant_ablation -- [samples_per_pair]
@@ -14,8 +18,8 @@ use specedge::config::KernelPath;
 use specedge::dse::{self, PairConfig};
 use specedge::experiments::alpha::measure_alpha;
 use specedge::hetero::{LatencyModel, Platform};
-use specedge::models::{Scheme, VariantKey};
 use specedge::runtime::Engine;
+use specedge::scenario::DrafterRegistry;
 use specedge::tokenizer::Tokenizer;
 use specedge::util::stats::Summary;
 use std::path::Path;
@@ -29,18 +33,14 @@ fn main() -> anyhow::Result<()> {
     let tokenizer = Tokenizer::from_manifest(&engine.manifest.tokenizer_spec)?;
     let lat = LatencyModel::new(Platform::imx95());
 
-    let pairings = [
-        ("fp/fp", "drafter_fp", "target_fp"),
-        ("semi (target q)", "drafter_fp", "target_w8a8"),
-        ("semi (drafter q)", "drafter_w8a8", "target_fp"),
-        ("full quant", "drafter_w8a8", "target_w8a8"),
-    ];
+    let registry = DrafterRegistry::from_manifest(&engine.manifest)?;
+    let pairings = registry.pairings(&engine.manifest);
 
     println!(
         "quantization ablation — {} translate samples per pairing (qmax = {})\n",
         n, engine.manifest.qmax
     );
-    println!("{:<18} {:>8} {:>8} {:>8} {:>10} {:>8} {:>9}",
+    println!("{:<26} {:>8} {:>8} {:>8} {:>10} {:>8} {:>9}",
              "pairing", "fits?", "a_med", "a_p90", "decision", "gamma", "S_pred");
 
     let samples: Vec<_> = engine
@@ -52,14 +52,13 @@ fn main() -> anyhow::Result<()> {
         .cloned()
         .collect();
 
-    for (label, dk, tk) in pairings {
-        let d = VariantKey::parse(dk)?;
-        let t = VariantKey::parse(tk)?;
+    for (d, t) in pairings {
+        let label = format!("{} + {}", d.name(), t.name());
         let fits = lat.platform.memory.pair_fits(t.scheme, d.scheme);
         if !fits {
             // Reproduces paper §IV-A footnote 2: these pairings cannot even
             // initialize on the device at Llama-3.2 scale.
-            println!("{label:<18} {:>8} {:>8} {:>8} {:>10} {:>8} {:>9}",
+            println!("{label:<26} {:>8} {:>8} {:>8} {:>10} {:>8} {:>9}",
                      "NO(mem)", "-", "-", "-", "-", "-");
             continue;
         }
@@ -80,7 +79,7 @@ fn main() -> anyhow::Result<()> {
         let decision = dse::explore_variant(&lat, &pair, 1, med, 63);
         let b = &decision.best;
         println!(
-            "{label:<18} {:>8} {:>8.2} {:>8.2} {:>10} {:>8} {:>9.2}",
+            "{label:<26} {:>8} {:>8.2} {:>8.2} {:>10} {:>8} {:>9.2}",
             "yes",
             med,
             a.percentile(90.0),

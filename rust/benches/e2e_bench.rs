@@ -17,7 +17,14 @@ fn request(id: u64) -> Request {
         .encode("tr: mogdi mogdi peni ture buda ture hevboco curih", true)
         .unwrap();
     prompt.push(SEP_ID);
-    Request { id, task: "translate".into(), prompt, truth: String::new(), arrival_s: 0.0 }
+    Request {
+        id,
+        task: "translate".into(),
+        prompt,
+        truth: String::new(),
+        arrival_s: 0.0,
+        class: None,
+    }
 }
 
 fn main() {

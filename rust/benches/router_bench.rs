@@ -40,6 +40,7 @@ fn main() {
             Request {
                 id: 0, task: "t".into(), prompt: vec![1, 2, 3],
                 truth: String::new(), arrival_s: 0.0,
+                class: None,
             }
             .into(),
             tx,

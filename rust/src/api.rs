@@ -542,6 +542,7 @@ mod tests {
             prompt: vec![1, 2, 3],
             truth: "x".into(),
             arrival_s: 1.5,
+            class: None,
         };
         let g: GenerationRequest = r.into();
         assert_eq!(g.id, 7);

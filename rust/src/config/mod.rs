@@ -213,6 +213,36 @@ impl ServeMode {
     }
 }
 
+/// Drafter-selection mode (the `drafter` knob). `fixed` (the default)
+/// always drafts with the configured `drafter_variant` — bit-identical to
+/// the historical single-drafter behavior. `auto` builds a
+/// [`crate::scenario::DrafterRegistry`] from the manifest's `drafter_*`
+/// variants and lets the decision layer choose the drafter *per request
+/// class* at session admission, scoring every (drafter variant, mapping,
+/// γ/tree) candidate through the DSE at per-drafter α estimates.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DrafterMode {
+    Fixed,
+    Auto,
+}
+
+impl DrafterMode {
+    pub fn parse(s: &str) -> anyhow::Result<DrafterMode> {
+        match s {
+            "fixed" => Ok(DrafterMode::Fixed),
+            "auto" => Ok(DrafterMode::Auto),
+            _ => anyhow::bail!("drafter must be fixed|auto, got {s:?}"),
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            DrafterMode::Fixed => "fixed",
+            DrafterMode::Auto => "auto",
+        }
+    }
+}
+
 /// Per-request verify placement under a fleet's cloud tier (the
 /// `cloud_verify` knob). Only consulted when a fleet file declares a
 /// `cloud` section ([`crate::fleet`]); without one every request verifies
@@ -381,6 +411,15 @@ pub struct RunConfig {
     /// Variant key of the target model (must name a `target_*` variant
     /// present in the artifact manifest).
     pub target_variant: String,
+    /// Drafter selection: `fixed` (always `drafter_variant`, the default)
+    /// or `auto` (per-request-class choice over the manifest's drafter
+    /// variants). See [`DrafterMode`].
+    pub drafter: DrafterMode,
+    /// Workload-trace file (JSON lines, [`crate::scenario::WorkloadTrace`]).
+    /// `None` (the default) keeps the built-in manifest workload; when
+    /// set, batch runs and the loadgen replay the trace's per-request
+    /// class/arrival/length draws bit-for-bit.
+    pub trace_file: Option<PathBuf>,
     /// RNG seed (workload, stochastic sampling).
     pub seed: u64,
 }
@@ -423,6 +462,8 @@ impl Default for RunConfig {
             cloud_mbps: 100.0,
             drafter_variant: "drafter_fp".to_string(),
             target_variant: "target_w8a8".to_string(),
+            drafter: DrafterMode::Fixed,
+            trace_file: None,
             seed: 0xC0FFEE,
         }
     }
@@ -544,6 +585,12 @@ impl RunConfig {
         }
         if let Some(v) = j.get("target_variant").and_then(Json::as_str) {
             self.target_variant = v.to_string();
+        }
+        if let Some(v) = j.get("drafter").and_then(Json::as_str) {
+            self.drafter = DrafterMode::parse(v)?;
+        }
+        if let Some(v) = j.get("trace_file").and_then(Json::as_str) {
+            self.trace_file = Some(PathBuf::from(v));
         }
         if let Some(v) = j.get("seed").and_then(Json::as_f64) {
             self.seed = v as u64;
@@ -839,6 +886,23 @@ mod tests {
         assert!(c
             .apply_json(&Json::parse(r#"{"metrics_history_every_s":0}"#).unwrap())
             .is_err());
+    }
+
+    #[test]
+    fn drafter_knob_defaults_fixed_and_parses() {
+        let c = RunConfig::default();
+        assert_eq!(c.drafter, DrafterMode::Fixed);
+        assert_eq!(c.drafter.as_str(), "fixed");
+        assert_eq!(c.trace_file, None);
+        let mut c = RunConfig::default();
+        let j = Json::parse(r#"{"drafter":"auto","trace_file":"t.jsonl"}"#).unwrap();
+        c.apply_json(&j).unwrap();
+        assert_eq!(c.drafter, DrafterMode::Auto);
+        assert_eq!(c.trace_file, Some(PathBuf::from("t.jsonl")));
+        assert_eq!(DrafterMode::parse("fixed").unwrap(), DrafterMode::Fixed);
+        assert!(DrafterMode::parse("adaptive").is_err());
+        let mut c = RunConfig::default();
+        assert!(c.apply_json(&Json::parse(r#"{"drafter":"both"}"#).unwrap()).is_err());
     }
 
     #[test]

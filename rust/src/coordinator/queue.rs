@@ -210,6 +210,7 @@ mod tests {
             prompt: vec![1],
             truth: String::new(),
             arrival_s: 0.0,
+            class: None,
         }
     }
 

@@ -52,7 +52,7 @@
 //! and cancellation of a batched request takes effect between batches.
 
 use crate::api::{FinishReason, GenOptions, SamplingMode};
-use crate::config::{DecisionMode, KernelPath, RunConfig};
+use crate::config::{DecisionMode, DrafterMode, KernelPath, RunConfig};
 use crate::decision::SpecHints;
 use crate::dse::KvLoad;
 use crate::hetero::{LatencyModel, Platform, PuId, PuTimelines, TimelineSnapshot};
@@ -60,6 +60,7 @@ use crate::kvcache::{KvManager, KvStats, SessionKv};
 use crate::metrics::{KvRecord, Metrics, RequestRecord, RoundRecord};
 use crate::models::ModelSpec;
 use crate::runtime::Engine;
+use crate::scenario::{DrafterRegistry, RequestClass};
 use crate::spec::{AcceptRule, DecodeSession, DecoderSetup, StepOutcome};
 use crate::tokenizer::Tokenizer;
 use crate::util::rng::Rng;
@@ -79,6 +80,10 @@ struct LiveSession {
     token_tx: Option<mpsc::Sender<TokenFrame>>,
     id: u64,
     task: String,
+    /// The drafter variant frozen into this session at admission (the
+    /// class-selected one under `drafter: auto`, the configured default
+    /// otherwise) — round consults and retire feedback are tagged with it.
+    drafter: crate::models::VariantKey,
     /// The request's typed options (deadline/SLO accounting at retire).
     options: GenOptions,
     /// Advisory speculation hints extracted from the options, applied to
@@ -172,6 +177,27 @@ pub fn run_worker(
             return;
         }
     };
+    // Auto drafter mode: register every manifest drafter variant with the
+    // policy so per-class selection can switch among them. A manifest with
+    // no drafter variants fails startup with a clear error, exactly like a
+    // bad `drafter_variant` key.
+    let mut warm_variants = vec![drafter, target];
+    if policy.drafter_mode() == DrafterMode::Auto {
+        match DrafterRegistry::from_manifest(&engine.manifest) {
+            Ok(reg) => {
+                for c in reg.candidates() {
+                    if !warm_variants.contains(&c.key) {
+                        warm_variants.push(c.key);
+                    }
+                }
+                policy.set_drafter_registry(reg);
+            }
+            Err(e) => {
+                let _ = ready.send(Err(anyhow::anyhow!("worker {wid}: {e}")));
+                return;
+            }
+        }
+    }
     let _ = ready.send(Ok(()));
     let tokenizer = match Tokenizer::from_manifest(&engine.manifest.tokenizer_spec) {
         Ok(t) => t,
@@ -190,9 +216,9 @@ pub fn run_worker(
     // lockstep baseline decodes batches on ref but serves lone requests
     // on the configured kernel) warm both.
     let buckets: Vec<usize> = engine.manifest.seq_buckets.clone();
-    let _ = engine.warmup(&[drafter, target], serving_kernel, &buckets);
+    let _ = engine.warmup(&warm_variants, serving_kernel, &buckets);
     if !cfg.fuse && serving_kernel != cfg.kernel_path {
-        let _ = engine.warmup(&[drafter, target], cfg.kernel_path, &buckets);
+        let _ = engine.warmup(&warm_variants, cfg.kernel_path, &buckets);
     }
 
     // Paged KV cache (tick scheduler only): one manager per worker with
@@ -410,12 +436,13 @@ pub fn run_worker(
             if ls.session.mid_round() || ls.session.is_done() {
                 continue;
             }
-            // Priced at the session's admission-frozen mapping: an online
-            // re-partition must not re-score in-flight sessions against
-            // routes they are not running on. Clamped against the
-            // request's advisory hints every round.
-            let dec = policy.route_round_with(
-                &ls.task, &d_spec, &t_spec, ls.session.mapping(),
+            // Priced at the session's admission-frozen mapping *and*
+            // drafter variant: an online re-partition (or a per-class
+            // drafter switch) must not re-score in-flight sessions
+            // against routes they are not running on. Clamped against
+            // the request's advisory hints every round.
+            let dec = policy.route_round_with_drafter(
+                &ls.task, ls.drafter, &d_spec, &t_spec, ls.session.mapping(),
                 ls.session.seq_len(), ls.session.n_drafted(), ls.session.alpha_so_far(),
                 ls.hints,
             );
@@ -703,7 +730,16 @@ fn admit(
     let req = item.request;
     let options = req.options.clone();
     let hints = SpecHints::from_options(&options);
-    let decision = policy.route_with(&req.task, d_spec, t_spec, req.prompt.len(), hints);
+    // Per-class drafter selection (`drafter: auto`): admit onto the task
+    // class's chosen variant. Fixed mode resolves to the configured
+    // default, making this exactly the historical `route_with` admission.
+    let drafter = if policy.drafter_mode() == DrafterMode::Auto {
+        policy.drafter_for(&req.task)
+    } else {
+        drafter
+    };
+    let decision =
+        policy.route_with_drafter(&req.task, drafter, d_spec, t_spec, req.prompt.len(), hints);
     if decision.used_prior {
         metrics.record_prior_decision();
     }
@@ -756,6 +792,7 @@ fn admit(
         token_tx: item.token_tx,
         id: req.id,
         task: req.task,
+        drafter,
         options,
         hints,
         cancel: item.cancel,
@@ -793,8 +830,8 @@ fn serve_single(
             return;
         }
         // Round-level policy, as in the tick scheduler.
-        let dec = policy.route_round_with(
-            &ls.task, d_spec, t_spec, ls.session.mapping(),
+        let dec = policy.route_round_with_drafter(
+            &ls.task, ls.drafter, d_spec, t_spec, ls.session.mapping(),
             ls.session.seq_len(), ls.session.n_drafted(), ls.session.alpha_so_far(),
             ls.hints,
         );
@@ -949,7 +986,10 @@ fn retire(
 ) {
     let outcome = ls.session.into_outcome();
     let finish = finish_override.unwrap_or(outcome.finish);
-    policy.observe_alpha(&ls.task, outcome.alpha());
+    // Tagged with the session's drafter so auto mode accrues per-class,
+    // per-variant evidence (fixed mode: exactly `observe_alpha`).
+    policy.observe_alpha_tagged(&ls.task, ls.drafter, outcome.alpha());
+    metrics.record_class(RequestClass::for_task(&ls.task), outcome.alpha(), &ls.drafter.name());
     if let Some(t) = tl_latency {
         metrics.record_timeline_latency(t);
     }

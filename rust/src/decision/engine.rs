@@ -42,12 +42,29 @@
 //! (`prior_alpha = 0.90`) in earlier revisions; it is now flagged on the
 //! returned [`RouteDecision`] (`used_prior`), logged once per task, and
 //! counted by the coordinator into the metrics report.
+//!
+//! **Per-class state + drafter selection** (`drafter: auto`). Under the
+//! scenario subsystem a request carries a traffic class
+//! ([`RequestClass`]); the engine then keeps α / sequence-length EWMAs
+//! *per class* and, given a [`DrafterRegistry`] of the manifest's
+//! quantized drafter variants, periodically re-scores every (drafter
+//! variant, mapping, γ/tree) candidate per class at that class's
+//! per-drafter α estimates ([`DrafterRegistry::select`]) — so a
+//! quant-tolerant class drafts with the cheap W8A8 body on the CPU while
+//! a quant-averse one keeps the fp drafter (possibly on the GPU), within
+//! one serving run. The hardware cost-coefficient calibration stays
+//! global (dispatch durations are class-independent); what is per-class
+//! is the *workload* state: α, per-drafter α, and the seq-length
+//! operating point. Under `drafter: fixed` (the default) none of this
+//! state exists and every path is bit-identical to the historical
+//! single-drafter engine.
 
-use crate::config::{DecisionMode, ExecMode, RunConfig, TreeChoice};
+use crate::config::{DecisionMode, DrafterMode, ExecMode, RunConfig, TreeChoice};
 use crate::costmodel::{self, TreeShape};
 use crate::dse::{self, PairConfig};
 use crate::hetero::{LatencyModel, Mapping, Platform};
 use crate::models::VariantKey;
+use crate::scenario::{DrafterRegistry, RequestClass};
 use std::collections::{HashMap, HashSet};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
@@ -125,6 +142,39 @@ enum ModelChoice {
     Calibrated(CalibratedModel),
 }
 
+/// Per-class decision state (`drafter: auto` only): the class-local twin
+/// of the engine's global α/seq mixes, plus per-drafter α evidence and
+/// the class's currently selected (drafter, mapping).
+struct ClassState {
+    /// EWMA of consulted α estimates for this class (NaN = unset).
+    alpha_mix: f64,
+    /// EWMA of consulted sequence lengths (0 = unset).
+    seq_mix: f64,
+    /// Consulted rounds for this class (drives the selection cadence).
+    rounds: u64,
+    /// Per-drafter observed-α EWMAs (fed by retire-time
+    /// [`Policy::observe_alpha_tagged`]). A drafter with no observations
+    /// yet is scored optimistically at the class α mix — that optimism is
+    /// the exploration that gets an untried variant its first sessions.
+    drafter_alpha: HashMap<VariantKey, f64>,
+    /// The class's current selection; `None` until the first consult
+    /// triggers a selection (admissions fall back to the configured
+    /// default drafter until then).
+    chosen: Option<(VariantKey, Mapping)>,
+}
+
+impl Default for ClassState {
+    fn default() -> ClassState {
+        ClassState {
+            alpha_mix: f64::NAN,
+            seq_mix: 0.0,
+            rounds: 0,
+            drafter_alpha: HashMap::new(),
+            chosen: None,
+        }
+    }
+}
+
 /// Shared decision engine (one per coordinator, consulted by all workers).
 pub struct Policy {
     lat: LatencyModel,
@@ -176,6 +226,14 @@ pub struct Policy {
     /// ([`dse::kv_feasible`]). `None` (cache off) keeps the historical
     /// search bit-identical.
     kv_load: Mutex<Option<dse::KvLoad>>,
+    /// Drafter-selection mode (`drafter` config knob).
+    drafter_mode: DrafterMode,
+    /// Candidate drafter variants (`drafter: auto`): the worker builds the
+    /// registry from the manifest at boot and installs it here. `None`
+    /// (fixed mode, or before boot) disables per-class selection.
+    registry: Mutex<Option<DrafterRegistry>>,
+    /// Per-class decision state (`drafter: auto` only; empty otherwise).
+    class_state: Mutex<HashMap<RequestClass, ClassState>>,
 }
 
 impl Policy {
@@ -221,6 +279,9 @@ impl Policy {
             seq_mix: Mutex::new(0.0),
             alpha_mix: Mutex::new(f64::NAN),
             kv_load: Mutex::new(None),
+            drafter_mode: cfg.drafter,
+            registry: Mutex::new(None),
+            class_state: Mutex::new(HashMap::new()),
         })
     }
 
@@ -322,7 +383,8 @@ impl Policy {
         if used_prior {
             self.note_prior(task);
         }
-        self.decide(alpha, used_prior, d_spec, t_spec, self.current_mapping(), seq_len)
+        let mapping = self.current_mapping();
+        self.decide(alpha, used_prior, self.drafter, d_spec, t_spec, mapping, seq_len)
     }
 
     /// [`route`](Self::route) clamped against a request's advisory
@@ -377,7 +439,7 @@ impl Policy {
         if used_prior {
             self.note_prior(task);
         }
-        let dec = self.decide(alpha, used_prior, d_spec, t_spec, mapping, seq_len);
+        let dec = self.decide(alpha, used_prior, self.drafter, d_spec, t_spec, mapping, seq_len);
         self.note_round(alpha, d_spec, t_spec, seq_len);
         dec
     }
@@ -409,10 +471,16 @@ impl Policy {
         ))
     }
 
+    /// Score the plan at one (α, drafter, mapping, seq) operating point —
+    /// `drafter` is the variant whose scheme prices the draft forwards
+    /// (always the configured default on the historical paths; the
+    /// class-selected variant on the `*_with_drafter` paths).
+    #[allow(clippy::too_many_arguments)]
     fn decide(
         &self,
         alpha: f64,
         used_prior: bool,
+        drafter: VariantKey,
         d_spec: &crate::models::ModelSpec,
         t_spec: &crate::models::ModelSpec,
         mapping: Mapping,
@@ -430,7 +498,7 @@ impl Policy {
             };
         }
         let c = self.cost_model().cost_coefficient(
-            (d_spec, self.drafter.scheme),
+            (d_spec, drafter.scheme),
             (t_spec, self.target.scheme),
             mapping,
             seq_len,
@@ -458,7 +526,7 @@ impl Policy {
                 used_prior,
             }
         };
-        self.consider_tree(&mut dec, alpha, d_spec, t_spec, mapping, seq_len);
+        self.consider_tree(&mut dec, alpha, drafter, d_spec, t_spec, mapping, seq_len);
         dec
     }
 
@@ -470,10 +538,12 @@ impl Policy {
     /// shapes ([`dse::TREE_SHAPES`]) against the chain through the active
     /// cost model — analytic or online-calibrated — and adopts a shape
     /// only on a strict predicted win; it defers to an operator-pinned γ.
+    #[allow(clippy::too_many_arguments)]
     fn consider_tree(
         &self,
         dec: &mut RouteDecision,
         alpha: f64,
+        drafter: VariantKey,
         d_spec: &crate::models::ModelSpec,
         t_spec: &crate::models::ModelSpec,
         mapping: Mapping,
@@ -486,7 +556,7 @@ impl Policy {
             target: t_spec.clone(),
             target_scheme: self.target.scheme,
             drafter: d_spec.clone(),
-            drafter_scheme: self.drafter.scheme,
+            drafter_scheme: drafter.scheme,
         };
         match self.tree_choice {
             TreeChoice::Off => {}
@@ -667,6 +737,290 @@ impl Policy {
         let mut m = self.alpha.lock().unwrap();
         let e = m.entry(task.to_string()).or_insert(self.prior_alpha);
         *e = (1.0 - self.ewma) * *e + self.ewma * observed;
+    }
+
+    // --- per-class drafter selection (`drafter: auto`) -------------------
+
+    /// Drafter-selection mode the engine was configured with.
+    pub fn drafter_mode(&self) -> DrafterMode {
+        self.drafter_mode
+    }
+
+    /// Install the candidate drafter registry (the worker builds it from
+    /// the artifact manifest at boot under `drafter: auto`). Without a
+    /// registry the auto mode routes exactly like fixed mode.
+    pub fn set_drafter_registry(&self, reg: DrafterRegistry) {
+        *self.registry.lock().unwrap() = Some(reg);
+    }
+
+    /// The drafter variant a new session of `task` should be admitted
+    /// with: the task's class selection under `drafter: auto` (once one
+    /// exists), the configured default otherwise.
+    pub fn drafter_for(&self, task: &str) -> VariantKey {
+        if self.drafter_mode == DrafterMode::Auto {
+            if let Some(class) = RequestClass::for_task(task) {
+                if let Some(cs) = self.class_state.lock().unwrap().get(&class) {
+                    if let Some((key, _)) = cs.chosen {
+                        return key;
+                    }
+                }
+            }
+        }
+        self.drafter
+    }
+
+    /// The class's currently selected drafter, if a selection has run.
+    pub fn chosen_drafter(&self, class: RequestClass) -> Option<VariantKey> {
+        self.class_state
+            .lock()
+            .unwrap()
+            .get(&class)
+            .and_then(|cs| cs.chosen.map(|(key, _)| key))
+    }
+
+    /// The class's α-mix EWMA (None until the class has been consulted).
+    pub fn class_alpha_mix(&self, class: RequestClass) -> Option<f64> {
+        self.class_state
+            .lock()
+            .unwrap()
+            .get(&class)
+            .map(|cs| cs.alpha_mix)
+            .filter(|a| a.is_finite())
+    }
+
+    /// α estimate for (task, drafter): the class's per-drafter EWMA when
+    /// auto mode has evidence for that variant, else the task EWMA /
+    /// prior exactly like [`alpha_lookup`](Self::alpha_lookup).
+    fn alpha_for_drafter(&self, task: &str, drafter: VariantKey) -> (f64, bool) {
+        if self.drafter_mode == DrafterMode::Auto {
+            if let Some(class) = RequestClass::for_task(task) {
+                if let Some(cs) = self.class_state.lock().unwrap().get(&class) {
+                    if let Some(&a) = cs.drafter_alpha.get(&drafter) {
+                        return (a, false);
+                    }
+                }
+            }
+        }
+        self.alpha_lookup(task)
+    }
+
+    /// The mapping a new session drafting with `drafter` should freeze:
+    /// the class's selected mapping when auto mode selected this drafter
+    /// for the task's class, the engine's current mapping otherwise.
+    fn mapping_for(&self, task: &str, drafter: VariantKey) -> Mapping {
+        if self.drafter_mode == DrafterMode::Auto {
+            if let Some(class) = RequestClass::for_task(task) {
+                if let Some(cs) = self.class_state.lock().unwrap().get(&class) {
+                    if let Some((key, mapping)) = cs.chosen {
+                        if key == drafter {
+                            return mapping;
+                        }
+                    }
+                }
+            }
+        }
+        self.current_mapping()
+    }
+
+    /// [`route_with`](Self::route_with) generalized to an explicit drafter
+    /// variant: prices draft forwards at that variant's scheme, uses the
+    /// task class's per-drafter α evidence, and admits onto the class's
+    /// selected mapping. With the configured default drafter under
+    /// `drafter: fixed` this is exactly `route_with` — same α lookup, same
+    /// mapping, same decision — so the single-drafter path stays
+    /// bit-identical.
+    pub fn route_with_drafter(
+        &self,
+        task: &str,
+        drafter: VariantKey,
+        d_spec: &crate::models::ModelSpec,
+        t_spec: &crate::models::ModelSpec,
+        seq_len: usize,
+        hints: SpecHints,
+    ) -> RouteDecision {
+        let (alpha, raw_prior) = self.alpha_for_drafter(task, drafter);
+        let used_prior = raw_prior && self.adaptive && self.speculative_enabled;
+        if used_prior {
+            self.note_prior(task);
+        }
+        let mapping = self.mapping_for(task, drafter);
+        hints.clamp(self.decide(alpha, used_prior, drafter, d_spec, t_spec, mapping, seq_len))
+    }
+
+    /// [`route_round_with`](Self::route_round_with) generalized to an
+    /// explicit drafter variant. Besides the global re-partition cadence,
+    /// each consult advances the task class's own α/seq mixes and — every
+    /// `repartition_every` class rounds (and once at the class's first
+    /// consult) — re-runs the per-class drafter selection over the
+    /// registry. Under `drafter: fixed` with the default drafter this
+    /// delegates verbatim to `route_round_with`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn route_round_with_drafter(
+        &self,
+        task: &str,
+        drafter: VariantKey,
+        d_spec: &crate::models::ModelSpec,
+        t_spec: &crate::models::ModelSpec,
+        mapping: Mapping,
+        seq_len: usize,
+        session_drafted: usize,
+        session_alpha: f64,
+        hints: SpecHints,
+    ) -> RouteDecision {
+        if self.drafter_mode == DrafterMode::Fixed && drafter == self.drafter {
+            return self.route_round_with(
+                task,
+                d_spec,
+                t_spec,
+                mapping,
+                seq_len,
+                session_drafted,
+                session_alpha,
+                hints,
+            );
+        }
+        let (task_alpha, raw_prior) = self.alpha_for_drafter(task, drafter);
+        let session_evidence =
+            self.adaptive && session_drafted > 0 && session_alpha.is_finite();
+        let alpha = if session_evidence {
+            let n = session_drafted as f64;
+            let w = (n / (n + 8.0)).min(0.9);
+            w * session_alpha + (1.0 - w) * task_alpha
+        } else {
+            task_alpha
+        };
+        let used_prior =
+            raw_prior && !session_evidence && self.adaptive && self.speculative_enabled;
+        if used_prior {
+            self.note_prior(task);
+        }
+        let dec = self.decide(alpha, used_prior, drafter, d_spec, t_spec, mapping, seq_len);
+        self.note_round(alpha, d_spec, t_spec, seq_len);
+        self.note_class_round(task, alpha, seq_len, t_spec);
+        hints.clamp(dec)
+    }
+
+    /// Retire-time feedback tagged with the drafter that produced it:
+    /// updates the task EWMA exactly like
+    /// [`observe_alpha`](Self::observe_alpha) and additionally the task
+    /// class's per-drafter α EWMA, the evidence the next per-class
+    /// selection scores that variant at.
+    pub fn observe_alpha_tagged(&self, task: &str, drafter: VariantKey, observed: f64) {
+        self.observe_alpha(task, observed);
+        if self.drafter_mode != DrafterMode::Auto || !observed.is_finite() || !self.adaptive
+        {
+            return;
+        }
+        let Some(class) = RequestClass::for_task(task) else {
+            return;
+        };
+        let mut state = self.class_state.lock().unwrap();
+        let cs = state.entry(class).or_default();
+        let e = cs.drafter_alpha.entry(drafter).or_insert(self.prior_alpha);
+        *e = (1.0 - self.ewma) * *e + self.ewma * observed;
+    }
+
+    /// Advance one class's consult state (auto mode): fold the consult's
+    /// α and seq length into the class mixes and, at the selection
+    /// cadence, re-run the per-class drafter selection.
+    fn note_class_round(
+        &self,
+        task: &str,
+        alpha: f64,
+        seq_len: usize,
+        t_spec: &crate::models::ModelSpec,
+    ) {
+        if self.drafter_mode != DrafterMode::Auto {
+            return;
+        }
+        let Some(class) = RequestClass::for_task(task) else {
+            return;
+        };
+        let select_now = {
+            let mut state = self.class_state.lock().unwrap();
+            let cs = state.entry(class).or_default();
+            cs.seq_mix = if cs.seq_mix <= 0.0 {
+                seq_len as f64
+            } else {
+                0.9 * cs.seq_mix + 0.1 * seq_len as f64
+            };
+            if alpha.is_finite() {
+                cs.alpha_mix = if cs.alpha_mix.is_nan() {
+                    alpha
+                } else {
+                    0.8 * cs.alpha_mix + 0.2 * alpha
+                };
+            }
+            cs.rounds += 1;
+            cs.rounds == 1
+                || (self.repartition_every > 0
+                    && cs.rounds % self.repartition_every as u64 == 0)
+        };
+        if select_now {
+            self.select_class_drafter(class, t_spec);
+        }
+    }
+
+    /// Re-run the per-class drafter selection: score every registered
+    /// drafter variant through the DSE ([`DrafterRegistry::select`]) at
+    /// the class's per-drafter α evidence (optimistic class-mix fallback
+    /// for unobserved variants), the class seq mix, the active tree-shape
+    /// space and the KV load point; adopt the winner for the class's
+    /// *future* admissions. `heterogeneous: false` pins the homogeneous
+    /// mapping here exactly as it does for global re-partitioning.
+    fn select_class_drafter(&self, class: RequestClass, t_spec: &crate::models::ModelSpec) {
+        let reg = self.registry.lock().unwrap();
+        let Some(reg) = reg.as_ref() else {
+            return;
+        };
+        let (seq, fallback, drafter_alpha) = {
+            let state = self.class_state.lock().unwrap();
+            let Some(cs) = state.get(&class) else {
+                return;
+            };
+            let seq = (cs.seq_mix.round() as usize).max(1);
+            let fallback = if cs.alpha_mix.is_nan() {
+                self.prior_alpha
+            } else {
+                cs.alpha_mix
+            };
+            (seq, fallback, cs.drafter_alpha.clone())
+        };
+        let shapes: &[TreeShape] = match self.tree_choice {
+            TreeChoice::Auto => &dse::TREE_SHAPES,
+            _ => &[],
+        };
+        let kv = *self.kv_load.lock().unwrap();
+        let choice = reg.select(
+            self.cost_model(),
+            t_spec,
+            self.target.scheme,
+            self.design_variant,
+            seq,
+            shapes,
+            kv.as_ref(),
+            &|k| drafter_alpha.get(&k).copied().unwrap_or(fallback),
+        );
+        let mapping = if self.allow_hetero {
+            choice.decision.mapping
+        } else {
+            Mapping::homogeneous(self.design_variant)
+        };
+        let mut state = self.class_state.lock().unwrap();
+        let cs = state.entry(class).or_default();
+        if cs.chosen != Some((choice.key, mapping)) {
+            eprintln!(
+                "[decision] class {}: drafter -> {} on {} (gamma* = {}, \
+                 predicted S = {:.3}, model = {})",
+                class.as_str(),
+                choice.key.name(),
+                mapping.label(),
+                choice.decision.gamma,
+                choice.decision.speedup,
+                self.cost_model().name()
+            );
+            cs.chosen = Some((choice.key, mapping));
+        }
     }
 }
 
@@ -1074,6 +1428,149 @@ mod tests {
         }
         assert!(!p.current_mapping().is_heterogeneous());
         assert_eq!(p.repartition_count(), 0);
+    }
+
+    /// Inline manifest with both drafter variants (the registry source
+    /// for the auto-mode tests).
+    fn registry_manifest() -> crate::runtime::manifest::Manifest {
+        let j = crate::util::json::Json::parse(
+            r#"{
+          "tokenizer": {"specials":["<pad>","<bos>","<eos>","="],
+                        "chars":" abcdefghijklmnopqrstuvwxyz.,?!-0123456789:'",
+                        "vocab_size":48},
+          "seq_buckets": [128], "batch_sizes": [1],
+          "models": {
+            "target": {"name":"target","n_layers":4,"d_model":128,"n_heads":4,
+                       "ffn_dim":352,"vocab":48,"param_count":816256},
+            "drafter": {"name":"drafter","n_layers":2,"d_model":96,"n_heads":4,
+                        "ffn_dim":256,"vocab":48,"param_count":230880}
+          },
+          "variants": {
+            "drafter_fp": {"role":"drafter","scheme":"fp","model":"drafter",
+              "weights":"w_dfp.bin","tensors":[],"artifacts":[]},
+            "drafter_w8a8": {"role":"drafter","scheme":"w8a8","model":"drafter",
+              "weights":"w_dq.bin","tensors":[],"artifacts":[]},
+            "target_w8a8": {"role":"target","scheme":"w8a8","model":"target",
+              "weights":"w_tq.bin","tensors":[],"artifacts":[]}
+          },
+          "monolithic": [], "eval_samples": []}"#,
+        )
+        .unwrap();
+        crate::runtime::manifest::Manifest::from_json(std::path::Path::new("/tmp"), &j)
+            .unwrap()
+    }
+
+    #[test]
+    fn drafter_aware_paths_match_fixed_mode_bit_for_bit() {
+        let cfg = RunConfig::default();
+        let p = policy(&cfg);
+        let (d, t) = specs();
+        let dk = p.variants().0;
+        assert_eq!(p.drafter_mode(), DrafterMode::Fixed);
+        assert_eq!(p.drafter_for("translate"), dk);
+        for _ in 0..10 {
+            p.observe_alpha_tagged("translate", dk, 0.7);
+        }
+        // Tagged feedback in fixed mode is exactly observe_alpha: compare
+        // against a twin fed through the untagged path.
+        let twin = policy(&cfg);
+        for _ in 0..10 {
+            twin.observe_alpha("translate", 0.7);
+        }
+        assert_eq!(
+            p.alpha_estimate("translate").to_bits(),
+            twin.alpha_estimate("translate").to_bits()
+        );
+        // Admission and round consults agree with the historical paths.
+        let a = p.route_with("translate", &d, &t, 63, SpecHints::default());
+        let b = p.route_with_drafter("translate", dk, &d, &t, 63, SpecHints::default());
+        assert_eq!(a, b);
+        let m = p.current_mapping();
+        let r1 =
+            p.route_round_with("translate", &d, &t, m, 63, 16, 0.6, SpecHints::default());
+        let r2 = p.route_round_with_drafter(
+            "translate", dk, &d, &t, m, 63, 16, 0.6, SpecHints::default(),
+        );
+        assert_eq!(r1, r2);
+        // Fixed mode keeps zero per-class state.
+        for class in RequestClass::all() {
+            assert_eq!(p.chosen_drafter(class), None);
+            assert_eq!(p.class_alpha_mix(class), None);
+        }
+    }
+
+    #[test]
+    fn auto_mode_settles_classes_on_different_drafters() {
+        let cfg = RunConfig {
+            drafter: DrafterMode::Auto,
+            repartition_every: 4,
+            ..RunConfig::default()
+        };
+        let p = policy(&cfg);
+        p.set_drafter_registry(
+            crate::scenario::DrafterRegistry::from_manifest(&registry_manifest()).unwrap(),
+        );
+        let (d, t) = specs();
+        let fp = VariantKey::parse("drafter_fp").unwrap();
+        let q = VariantKey::parse("drafter_w8a8").unwrap();
+        // "translate" (Translate class): fp drafts well, quantized
+        // collapses. "copy" (Chat class): the reverse.
+        for _ in 0..30 {
+            p.observe_alpha_tagged("translate", fp, 0.92);
+            p.observe_alpha_tagged("translate", q, 0.05);
+            p.observe_alpha_tagged("copy", fp, 0.05);
+            p.observe_alpha_tagged("copy", q, 0.92);
+            for task in ["translate", "copy"] {
+                let dk = p.drafter_for(task);
+                let m = p.mapping_for(task, dk);
+                p.route_round_with_drafter(
+                    task, dk, &d, &t, m, 63, 0, f64::NAN, SpecHints::default(),
+                );
+            }
+        }
+        assert_eq!(p.chosen_drafter(RequestClass::Translate), Some(fp));
+        assert_eq!(p.chosen_drafter(RequestClass::Chat), Some(q));
+        assert_eq!(p.drafter_for("translate"), fp);
+        assert_eq!(p.drafter_for("copy"), q);
+        // Unclassed tasks keep the configured default.
+        assert_eq!(p.drafter_for("not-an-eval-task"), fp);
+        // Per-class state exists for the consulted classes only.
+        assert!(p.class_alpha_mix(RequestClass::Translate).is_some());
+        assert!(p.class_alpha_mix(RequestClass::Chat).is_some());
+        assert_eq!(p.class_alpha_mix(RequestClass::Summarize), None);
+        // The two classes genuinely decide differently in one run.
+        let dec_tr = p.route_with_drafter(
+            "translate", p.drafter_for("translate"), &d, &t, 63, SpecHints::default(),
+        );
+        let dec_ch = p.route_with_drafter(
+            "copy", p.drafter_for("copy"), &d, &t, 63, SpecHints::default(),
+        );
+        assert!(dec_tr.speculative && dec_ch.speculative);
+    }
+
+    #[test]
+    fn auto_mode_without_registry_routes_like_fixed() {
+        let cfg = RunConfig { drafter: DrafterMode::Auto, ..RunConfig::default() };
+        let p = policy(&cfg);
+        let (d, t) = specs();
+        assert_eq!(p.drafter_mode(), DrafterMode::Auto);
+        assert_eq!(p.drafter_for("translate"), p.variants().0);
+        let dec = p.route_round_with_drafter(
+            "translate",
+            p.variants().0,
+            &d,
+            &t,
+            p.current_mapping(),
+            63,
+            0,
+            f64::NAN,
+            SpecHints::default(),
+        );
+        assert!(dec.speculative);
+        // Selection without candidates is a no-op; the class still tracks
+        // its consult mixes.
+        assert_eq!(p.chosen_drafter(RequestClass::Translate), None);
+        assert!(p.class_alpha_mix(RequestClass::Translate).is_some());
     }
 
     #[test]

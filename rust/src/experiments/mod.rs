@@ -12,6 +12,7 @@ pub mod fleet;
 pub mod kvcache;
 pub mod overlap;
 pub mod repartition;
+pub mod scenarios;
 pub mod serve_load;
 pub mod tables;
 pub mod tree;
@@ -80,11 +81,12 @@ pub fn run(ctx: &Ctx, which: &str) -> anyhow::Result<()> {
         "kvcache" => kvcache::run(ctx),
         "fleet" => fleet::run(ctx),
         "serve_load" => serve_load::run(ctx),
+        "scenarios" => scenarios::run(ctx),
         "all" => {
             for id in [
                 "table2", "table3", "fig6a", "fig6b", "fig7a", "fig5a", "fig5b",
                 "fig7b", "deviation", "overlap", "repartition", "tree", "kvcache",
-                "fleet", "serve_load",
+                "fleet", "serve_load", "scenarios",
             ] {
                 println!("\n=== experiment {id} ===");
                 run(ctx, id)?;
@@ -94,7 +96,7 @@ pub fn run(ctx: &Ctx, which: &str) -> anyhow::Result<()> {
         other => anyhow::bail!(
             "unknown experiment {other:?} (fig5a fig5b fig6a fig6b table2 table3 \
              fig7a fig7b deviation alpha overlap repartition tree kvcache fleet \
-             serve_load all)"
+             serve_load scenarios all)"
         ),
     }
 }

@@ -1,0 +1,335 @@
+//! `experiment scenarios` — the scenario subsystem exercised end to end at
+//! the decision level. For every built-in scenario
+//! ([`builtin_scenarios`]): generate the seeded trace, save/load it and
+//! prove the round trip is bit-identical, then decode it twice — once
+//! under the frozen global policy (`drafter: fixed`, one α state per
+//! task) and once under the per-class policy (`drafter: auto` with the
+//! manifest's [`DrafterRegistry`]). Rounds are priced on the platform
+//! latency model and acceptances drawn from each entry's true α regime
+//! (quantized drafts survive chat/translate-style continuations but
+//! collapse on the extractive classes), so the sweep shows exactly where
+//! per-class drafter selection pays.
+//!
+//! Self-asserts, per the roadmap's scenario milestone:
+//! * saved traces replay bit-for-bit (fresh policy on the loaded trace
+//!   reproduces token counts and simulated clock to the last bit),
+//! * every mixed trace drives the classes to *different* γ/drafter
+//!   decisions within one run,
+//! * the per-class policy strictly wins aggregate ms/token on at least
+//!   one scenario,
+//! * the single-class trace under `drafter: fixed` is bit-identical
+//!   through the drafter-aware route surface and the pre-registry one.
+
+use super::Ctx;
+use crate::config::{DecisionMode, DrafterMode, RunConfig, TreeChoice};
+use crate::decision::{Policy, SpecHints};
+use crate::hetero::LatencyModel;
+use crate::models::{ModelSpec, Scheme};
+use crate::scenario::{
+    builtin_scenarios, DrafterRegistry, RequestClass, TraceEntry, WorkloadTrace,
+};
+use crate::util::rng::Rng;
+
+/// Decision sequence length (mirrors the serving default bucket).
+const SEQ: usize = 63;
+
+/// The 3-core operating point: the heterogeneous mapping prices out
+/// (c ≥ 1 — GPU drafting cannot keep up with a 3-core target) and the
+/// w8a8 target keeps every GPU-target mapping quantization-filtered, so
+/// the drafter contest is fp-on-CPU vs the cheaper w8a8-on-CPU body —
+/// the regime where per-class drafter selection is the live decision.
+fn operating_cfg(base: &RunConfig) -> RunConfig {
+    let mut cfg = base.clone();
+    cfg.design_variant = 3;
+    cfg.heterogeneous = false;
+    cfg.decision = DecisionMode::Analytic;
+    cfg.tree = TreeChoice::Off;
+    cfg.speculative = true;
+    cfg.gamma = None;
+    cfg.repartition_every = 8;
+    cfg
+}
+
+fn frozen_policy(ctx: &Ctx) -> anyhow::Result<Policy> {
+    let mut cfg = operating_cfg(&ctx.cfg);
+    cfg.drafter = DrafterMode::Fixed;
+    Policy::new(&cfg, ctx.lat.platform.clone())
+}
+
+fn auto_policy(ctx: &Ctx) -> anyhow::Result<Policy> {
+    let mut cfg = operating_cfg(&ctx.cfg);
+    cfg.drafter = DrafterMode::Auto;
+    let policy = Policy::new(&cfg, ctx.lat.platform.clone())?;
+    policy.set_drafter_registry(DrafterRegistry::from_manifest(&ctx.engine.manifest)?);
+    Ok(policy)
+}
+
+/// How well each class's drafts survive quantization: the w8a8 drafter
+/// tracks the w8a8 target's rounding on the conversational classes but
+/// loses most of its acceptances on the extractive / structured ones.
+fn quant_factor(class: RequestClass) -> f64 {
+    match class {
+        RequestClass::Chat | RequestClass::Translate => 1.0,
+        RequestClass::Summarize => 0.40,
+        RequestClass::CodeComplete => 0.50,
+    }
+}
+
+/// Ground-truth acceptance rate for one entry under one drafter scheme.
+fn true_alpha(e: &TraceEntry, scheme: Scheme) -> f64 {
+    match scheme {
+        Scheme::Fp => e.alpha_regime,
+        Scheme::W8a8 => (e.alpha_regime * quant_factor(e.class)).min(0.98),
+    }
+}
+
+/// Aggregate outcome of decoding one trace under one policy.
+#[derive(Debug, Clone, Copy, Default)]
+struct Agg {
+    tokens: u64,
+    rounds: u64,
+    sim_s: f64,
+    deadline_misses: u64,
+}
+
+impl Agg {
+    fn ms_per_token(&self) -> f64 {
+        self.sim_s * 1e3 / self.tokens.max(1) as f64
+    }
+
+    /// Bit-exact fingerprint for the replay-determinism assert.
+    fn bits(&self) -> (u64, u64, u64, u64) {
+        (self.tokens, self.rounds, self.sim_s.to_bits(), self.deadline_misses)
+    }
+}
+
+/// Decode every trace entry against `policy`: admit at the policy's
+/// drafter for the entry's task, re-consult between rounds, price each
+/// round on the latency model and draw acceptances from the entry's true
+/// α (seeded per entry, so the same trace always replays bit-for-bit).
+/// `legacy` drives the pre-registry route/observe surface instead (only
+/// meaningful under `drafter: fixed`) — the parity leg's reference.
+fn simulate(
+    lat: &LatencyModel,
+    policy: &Policy,
+    d_spec: &ModelSpec,
+    t_spec: &ModelSpec,
+    trace: &WorkloadTrace,
+    legacy: bool,
+) -> Agg {
+    let (default_drafter, target) = policy.variants();
+    let hints = SpecHints::default();
+    let mut agg = Agg::default();
+    for e in &trace.entries {
+        let drafter = if legacy { default_drafter } else { policy.drafter_for(&e.task) };
+        let admit = if legacy {
+            policy.route_with(&e.task, d_spec, t_spec, SEQ, hints)
+        } else {
+            policy.route_with_drafter(&e.task, drafter, d_spec, t_spec, SEQ, hints)
+        };
+        let mapping = admit.mapping;
+        let alpha = true_alpha(e, drafter.scheme);
+        let mut rng = Rng::new(trace.seed ^ e.id.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let (mut produced, mut drafted, mut accepted) = (0usize, 0usize, 0usize);
+        let mut entry_s = 0.0;
+        while produced < e.max_new {
+            let session_alpha =
+                if drafted > 0 { accepted as f64 / drafted as f64 } else { f64::NAN };
+            let dec = if legacy {
+                policy.route_round_with(
+                    &e.task, d_spec, t_spec, mapping, SEQ, drafted, session_alpha, hints,
+                )
+            } else {
+                policy.route_round_with_drafter(
+                    &e.task,
+                    drafter,
+                    d_spec,
+                    t_spec,
+                    mapping,
+                    SEQ,
+                    drafted,
+                    session_alpha,
+                    hints,
+                )
+            };
+            let t_target = lat.forward_latency(t_spec, target.scheme, mapping.target, SEQ);
+            if dec.speculative && dec.gamma > 0 {
+                let t_draft = lat.forward_latency(d_spec, drafter.scheme, mapping.drafter, SEQ);
+                entry_s += dec.gamma as f64 * t_draft + t_target;
+                let mut acc = 0usize;
+                for _ in 0..dec.gamma {
+                    if rng.f64() < alpha {
+                        acc += 1;
+                    } else {
+                        break;
+                    }
+                }
+                drafted += dec.gamma;
+                accepted += acc;
+                produced += acc + 1;
+            } else {
+                entry_s += t_target;
+                produced += 1;
+            }
+            agg.rounds += 1;
+        }
+        let observed = if drafted > 0 { accepted as f64 / drafted as f64 } else { f64::NAN };
+        if legacy {
+            policy.observe_alpha(&e.task, observed);
+        } else {
+            policy.observe_alpha_tagged(&e.task, drafter, observed);
+        }
+        agg.tokens += produced as u64;
+        agg.sim_s += entry_s;
+        if let Some(d) = e.deadline_s {
+            if entry_s > d {
+                agg.deadline_misses += 1;
+            }
+        }
+    }
+    agg
+}
+
+pub fn run(ctx: &Ctx) -> anyhow::Result<()> {
+    println!("Scenario sweep: per-class decisions + drafter selection vs frozen policy");
+
+    let requests = ctx.limit.unwrap_or(96).clamp(16, 400);
+    let scenarios = builtin_scenarios(requests, ctx.seed);
+
+    let probe = frozen_policy(ctx)?;
+    let (dkey, tkey) = probe.variants();
+    let d_spec = ctx.engine.manifest.model_for(dkey)?.clone();
+    let t_spec = ctx.engine.manifest.model_for(tkey)?.clone();
+
+    let mut csv = String::from(
+        "scenario,policy,requests,classes,tokens,rounds,sim_s,ms_per_token,\
+         deadline_misses,chat_drafter,translate_drafter,summarize_drafter,\
+         code_complete_drafter\n",
+    );
+    let mut wins = 0usize;
+
+    for spec in &scenarios {
+        let trace = spec.generate();
+
+        // Persistence: the JSONL round trip is lossless and canonical.
+        let path = ctx.out_dir.join(format!("trace_{}.jsonl", spec.name));
+        trace.save(&path)?;
+        let loaded = WorkloadTrace::load(&path)?;
+        anyhow::ensure!(loaded == trace, "trace {} did not survive save->load", spec.name);
+        anyhow::ensure!(
+            loaded.to_jsonl() == trace.to_jsonl(),
+            "trace {} serialization is not canonical",
+            spec.name
+        );
+
+        // Frozen global policy: one drafter, task-level α state only.
+        let frozen = frozen_policy(ctx)?;
+        let agg_frozen = simulate(&ctx.lat, &frozen, &d_spec, &t_spec, &trace, false);
+
+        // Per-class policy with drafter selection over the registry.
+        let auto = auto_policy(ctx)?;
+        let agg_auto = simulate(&ctx.lat, &auto, &d_spec, &t_spec, &trace, false);
+
+        // Replay determinism: a *fresh* policy decoding the loaded trace
+        // reproduces the auto run to the last bit.
+        let replay = auto_policy(ctx)?;
+        let agg_replay = simulate(&ctx.lat, &replay, &d_spec, &t_spec, &loaded, false);
+        anyhow::ensure!(
+            agg_replay.bits() == agg_auto.bits(),
+            "scenario {}: replay of the saved trace diverged",
+            spec.name
+        );
+
+        if agg_auto.ms_per_token() < agg_frozen.ms_per_token() {
+            wins += 1;
+        }
+
+        let counts = trace.class_counts();
+        for (name, policy, agg) in
+            [("frozen", &frozen, &agg_frozen), ("auto", &auto, &agg_auto)]
+        {
+            let chosen: Vec<String> = RequestClass::all()
+                .iter()
+                .map(|c| {
+                    if counts[c.index()] == 0 {
+                        "-".to_string()
+                    } else {
+                        policy.drafter_for(c.task_pool()[0]).name()
+                    }
+                })
+                .collect();
+            csv.push_str(&format!(
+                "{},{},{},{},{},{},{:.6},{:.4},{},{},{},{},{}\n",
+                spec.name,
+                name,
+                trace.entries.len(),
+                trace.class_count(),
+                agg.tokens,
+                agg.rounds,
+                agg.sim_s,
+                agg.ms_per_token(),
+                agg.deadline_misses,
+                chosen[0],
+                chosen[1],
+                chosen[2],
+                chosen[3],
+            ));
+        }
+        println!(
+            "  {:<18} frozen {:>8.4} ms/tok | auto {:>8.4} ms/tok ({} req, {} classes)",
+            spec.name,
+            agg_frozen.ms_per_token(),
+            agg_auto.ms_per_token(),
+            trace.entries.len(),
+            trace.class_count()
+        );
+
+        // Per-class divergence: on a mixed trace the classes must settle
+        // on different drafters or different γ within the one run.
+        if trace.class_count() >= 2 {
+            let mut per_class: Vec<(String, usize)> = Vec::new();
+            for class in RequestClass::all() {
+                if counts[class.index()] == 0 {
+                    continue;
+                }
+                let task = class.task_pool()[0];
+                let key = auto.drafter_for(task);
+                let dec = auto
+                    .route_with_drafter(task, key, &d_spec, &t_spec, SEQ, SpecHints::default());
+                per_class.push((key.name(), dec.gamma));
+            }
+            let diverged = per_class
+                .iter()
+                .any(|a| per_class.iter().any(|b| a.0 != b.0 || a.1 != b.1));
+            anyhow::ensure!(
+                diverged,
+                "scenario {}: classes settled on identical drafter and gamma \
+                 despite distinct alpha regimes",
+                spec.name
+            );
+        }
+    }
+
+    // Pinned path: the single-class trace under `drafter: fixed` decodes
+    // bit-identically through the drafter-aware surface and the
+    // pre-registry surface.
+    let single = &scenarios[0];
+    anyhow::ensure!(single.mix.len() == 1, "scenarios[0] must be the single-class anchor");
+    let trace = single.generate();
+    let p_legacy = frozen_policy(ctx)?;
+    let a_legacy = simulate(&ctx.lat, &p_legacy, &d_spec, &t_spec, &trace, true);
+    let p_tagged = frozen_policy(ctx)?;
+    let a_tagged = simulate(&ctx.lat, &p_tagged, &d_spec, &t_spec, &trace, false);
+    anyhow::ensure!(
+        a_tagged.bits() == a_legacy.bits(),
+        "single-class fixed-drafter run diverged from the pre-registry path"
+    );
+
+    anyhow::ensure!(
+        wins >= 1,
+        "per-class drafter selection never strictly beat the frozen policy"
+    );
+    println!("  strict ms/token wins: {wins}/{} scenarios", scenarios.len());
+    ctx.write_csv("scenarios.csv", &csv)?;
+    Ok(())
+}

@@ -30,6 +30,9 @@
 //!   per-worker manager with memory-aware admission
 //! * [`spec`] — the speculative sampling engine (modular + monolithic)
 //! * [`workload`] — Spec-Bench-shaped workload and arrival processes
+//! * [`scenario`] — workload traces: request classes, seeded scenario
+//!   generators, JSON-lines trace replay and the drafter registry
+//!   ([`scenario::DrafterRegistry`]) for per-class drafter selection
 //! * [`coordinator`] — router, fused batching, queue, worker lifecycle
 //!   (plus the quarantined [`coordinator::legacy_lockstep`] reference)
 //! * [`fleet`] — multi-device routing tier: per-device coordinators,
@@ -59,6 +62,7 @@ pub mod metrics;
 pub mod models;
 pub mod profiler;
 pub mod runtime;
+pub mod scenario;
 pub mod server;
 pub mod spec;
 pub mod tokenizer;

@@ -24,6 +24,15 @@
 //!   queueing during overload shows up in the tail instead of slowing
 //!   the arrival process down (the open-loop property).
 //!
+//! A third mode replays a **workload trace** ([`LoadSpec::schedule`],
+//! resolved from a saved [`crate::scenario::WorkloadTrace`] via
+//! [`crate::scenario::trace_schedule`]): entry `k` goes to client
+//! `k % clients` and is issued open-loop at the entry's recorded arrival
+//! stamp, carrying the entry's task, prompt, `max_new` budget, SLO class
+//! and deadline on the v2 wire. The arrival process lives in the trace,
+//! not in the harness — two runs of the same trace issue byte-identical
+//! request lines on the same schedule.
+//!
 //! Mixed SLO classes: the first `interactive_frac` of clients send v2
 //! lines with `slo: interactive` and a `deadline_ms`; the rest send
 //! seed-shaped v1 lines (batch class). Streaming mode records
@@ -38,6 +47,7 @@
 //! asserted byte-identical (`experiment serve_load` does exactly that
 //! across `serve_mode`s).
 
+use crate::scenario::ScheduledCall;
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 use crate::util::stats::Summary;
@@ -71,6 +81,10 @@ pub struct LoadSpec {
     /// Prompt schedule, cycled deterministically by (client, seq).
     pub prompts: Vec<String>,
     pub task: String,
+    /// Trace replay: issue exactly these calls at their recorded arrival
+    /// stamps (entry `k` → client `k % clients`). Overrides the Poisson /
+    /// closed-loop drive modes; `prompts`/`task` are ignored.
+    pub schedule: Option<Vec<ScheduledCall>>,
     /// Driver threads multiplexing the clients (0 = auto).
     pub drivers: usize,
     pub seed: u64,
@@ -98,6 +112,7 @@ impl Default for LoadSpec {
             deadline_ms: 0.0,
             prompts: vec!["tr: cela vodu".into()],
             task: "translate".into(),
+            schedule: None,
             drivers: 0,
             seed: 17,
             connect_timeout_s: 5.0,
@@ -230,6 +245,10 @@ struct Sim {
     backlog: VecDeque<f64>,
     /// Next scheduled arrival offset (open-loop).
     next_arrival_s: f64,
+    /// Trace replay: this client's slice of the schedule, arrival order.
+    calls: VecDeque<ScheduledCall>,
+    /// Trace replay: the call behind the in-flight request.
+    cur_call: Option<ScheduledCall>,
     /// Closed-loop start jitter, so a 10k-client run doesn't open with
     /// one synchronized thundering herd.
     start_at_s: f64,
@@ -251,6 +270,18 @@ impl Sim {
         } else {
             0.0
         };
+        let calls: VecDeque<ScheduledCall> = spec
+            .schedule
+            .as_ref()
+            .map(|sched| {
+                sched
+                    .iter()
+                    .enumerate()
+                    .filter(|(k, _)| k % spec.clients.max(1) == id)
+                    .map(|(_, c)| c.clone())
+                    .collect()
+            })
+            .unwrap_or_default();
         Sim {
             id,
             interactive: (id as f64 + 0.5) < spec.interactive_frac * spec.clients as f64,
@@ -263,6 +294,8 @@ impl Sim {
             rng,
             backlog: VecDeque::new(),
             next_arrival_s,
+            calls,
+            cur_call: None,
             start_at_s,
             clock_from_s: 0.0,
             sent_at: Instant::now(),
@@ -275,6 +308,27 @@ impl Sim {
 
     /// Build the wire line for request `seq`.
     fn request_line(&self, spec: &LoadSpec, seq: usize) -> String {
+        if let Some(call) = &self.cur_call {
+            // Trace replay: the entry's own prompt/task/shape on the v2
+            // wire (`slo: batch` entries simply carry no deadline).
+            let mut j = Json::obj();
+            j.set("prompt", Json::Str(call.prompt.clone()))
+                .set("task", Json::Str(call.task.clone()));
+            if spec.streaming {
+                j.set("stream", true.into());
+            }
+            let mut o = Json::obj();
+            o.set("max_new", call.max_new.into())
+                .set("slo", Json::Str(call.slo.as_str().into()));
+            if let Some(d) = call.deadline_s {
+                o.set("deadline_ms", (d * 1e3).into());
+            }
+            let req_id = self.id * 1_000_000 + seq + 1;
+            j.set("v", 2usize.into()).set("req_id", req_id.into()).set("options", o);
+            let mut line = j.to_string();
+            line.push('\n');
+            return line;
+        }
         let mut j = Json::obj();
         j.set("prompt", Json::Str(spec.prompt_for(self.id, seq).into()))
             .set("task", Json::Str(spec.task.clone()));
@@ -351,8 +405,15 @@ fn finish_outcome(sim: &Sim, spec: &LoadSpec, reply: &Json, now_s: f64) -> ReqOu
 fn drive(spec: &LoadSpec, ids: std::ops::Range<usize>, t0: Instant) -> Vec<ReqOutcome> {
     let mut sims: Vec<Sim> = ids.map(|i| Sim::new(i, spec)).collect();
     let mut out: Vec<ReqOutcome> = Vec::new();
-    let open_loop = spec.open_loop_rps > 0.0;
+    let trace = spec.schedule.is_some();
+    let open_loop = spec.open_loop_rps > 0.0 && !trace;
     let rate_per_client = spec.open_loop_rps / spec.clients.max(1) as f64;
+    // Trace replay keeps arrivals coming until the last recorded stamp.
+    let trace_window_s = spec
+        .schedule
+        .as_ref()
+        .map(|s| s.iter().map(|c| c.arrival_s).fold(0.0, f64::max))
+        .unwrap_or(0.0);
     // Hard stop: the arrival window (open) / quota (closed) plus a grace
     // period for stragglers; whatever is still unanswered then is lost.
     let grace_s = spec.request_timeout_s + 5.0;
@@ -376,28 +437,36 @@ fn drive(spec: &LoadSpec, ids: std::ops::Range<usize>, t0: Instant) -> Vec<ReqOu
                 Phase::Done => continue,
                 Phase::Idle => {
                     all_done = false;
-                    let due = if open_loop {
+                    let due = if trace {
+                        sim.calls.front().map(|c| c.arrival_s).filter(|&a| a <= now_s)
+                    } else if open_loop {
                         sim.backlog.front().copied()
                     } else if sim.sent < spec.requests_per_client && now_s >= sim.start_at_s {
                         Some(now_s)
                     } else {
                         None
                     };
-                    let closed_done = !open_loop && sim.sent >= spec.requests_per_client;
+                    let trace_done = trace && sim.calls.is_empty();
+                    let closed_done =
+                        !trace && !open_loop && sim.sent >= spec.requests_per_client;
                     let open_done = open_loop
                         && sim.backlog.is_empty()
                         && sim.next_arrival_s > spec.duration_s;
-                    if closed_done || open_done {
+                    if trace_done || closed_done || open_done {
                         sim.phase = Phase::Done;
                         continue;
                     }
                     let Some(arrival_s) = due else { continue };
                     activity = true;
-                    if open_loop {
+                    if trace {
+                        sim.cur_call = sim.calls.pop_front();
+                    } else if open_loop {
                         sim.backlog.pop_front();
                     }
                     // (Re)connect when churning or not yet connected.
-                    if sim.stream.is_none() || (!open_loop && spec.reconnect_per_request) {
+                    if sim.stream.is_none()
+                        || (!open_loop && !trace && spec.reconnect_per_request)
+                    {
                         sim.stream = None;
                         let addr = std::net::SocketAddr::from(([127, 0, 0, 1], spec.port));
                         let timeout = Duration::from_secs_f64(spec.connect_timeout_s.max(0.1));
@@ -490,7 +559,9 @@ fn drive(spec: &LoadSpec, ids: std::ops::Range<usize>, t0: Instant) -> Vec<ReqOu
         if all_done {
             break;
         }
-        let window_s = if open_loop {
+        let window_s = if trace {
+            trace_window_s
+        } else if open_loop {
             spec.duration_s
         } else {
             // Closed-loop has no wall window; rely on per-request
@@ -622,7 +693,13 @@ fn pump_replies(sim: &mut Sim, spec: &LoadSpec, out: &mut Vec<ReqOutcome>, t0: I
 pub fn run(spec: &LoadSpec) -> anyhow::Result<LoadReport> {
     anyhow::ensure!(spec.port != 0, "loadgen needs a concrete server port");
     anyhow::ensure!(spec.clients > 0, "loadgen needs at least one client");
-    anyhow::ensure!(!spec.prompts.is_empty(), "loadgen needs at least one prompt");
+    anyhow::ensure!(
+        spec.schedule.is_some() || !spec.prompts.is_empty(),
+        "loadgen needs at least one prompt (or a trace schedule)"
+    );
+    if let Some(sched) = &spec.schedule {
+        anyhow::ensure!(!sched.is_empty(), "trace schedule has no entries");
+    }
     let drivers = spec.driver_count();
     let per = spec.clients.div_ceil(drivers);
     let t0 = Instant::now();
@@ -654,13 +731,18 @@ pub fn run(spec: &LoadSpec) -> anyhow::Result<LoadReport> {
         outcomes.iter().filter_map(|o| o.ttff_ms).collect(),
     );
     // Same class rule as `Sim::new`, so the denominator matches exactly.
-    let deadline_requests = outcomes
-        .iter()
-        .filter(|o| {
-            spec.deadline_ms > 0.0
-                && (o.client as f64 + 0.5) < spec.interactive_frac * spec.clients as f64
-        })
-        .count();
+    // Trace replay carries deadlines per entry instead of per client.
+    let deadline_requests = if let Some(sched) = &spec.schedule {
+        sched.iter().filter(|c| c.deadline_s.is_some()).count()
+    } else {
+        outcomes
+            .iter()
+            .filter(|o| {
+                spec.deadline_ms > 0.0
+                    && (o.client as f64 + 0.5) < spec.interactive_frac * spec.clients as f64
+            })
+            .count()
+    };
     let deadline_missed = outcomes.iter().filter(|o| o.deadline_missed).count();
     let mut completions = BTreeMap::new();
     if spec.record_completions {

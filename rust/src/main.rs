@@ -7,11 +7,12 @@
 //!   explore     run the cost-model-guided DSE (Tables II/III style)
 //!   experiment  regenerate a paper table/figure (or `all`)
 //!   alpha       quick per-task acceptance-rate check
+//!   loadgen     drive a running server (closed/open-loop or --trace)
 //!   info        print manifest / platform summary
 
 use specedge::config::{
-    CloudVerifyMode, DecisionMode, ExecMode, KernelPath, KvCacheMode, RunConfig, ServeMode,
-    Timing, TreeChoice,
+    CloudVerifyMode, DecisionMode, DrafterMode, ExecMode, KernelPath, KvCacheMode, RunConfig,
+    ServeMode, Timing, TreeChoice,
 };
 use specedge::coordinator::Coordinator;
 use specedge::dse::{self, PairConfig};
@@ -49,6 +50,8 @@ fn cli() -> Cli {
         .opt("repartition-every", "calibrated: re-run mapping search every K rounds", None)
         .opt("tree", "tree speculation: off|auto|KxD (e.g. 2x3)", None)
         .opt("kv-cache", "paged KV cache + prefix sharing: off|on", None)
+        .opt("drafter", "drafter selection: fixed|auto (per-class registry)", None)
+        .opt("trace", "workload trace JSONL (scenario replay; see loadgen)", None)
         .opt("fleet", "serve: fleet topology JSON (multi-device routing)", None)
         .opt("cloud-verify", "fleet: cloud verification off|auto|local|cloud", None)
         .opt("cloud-rtt-ms", "fleet: cloud link round-trip, milliseconds", None)
@@ -66,6 +69,10 @@ fn cli() -> Cli {
         .opt("drain-deadline-s", "serve: drain grace before in-flight cancel", None)
         .opt("metrics-history", "serve: append metrics snapshots to this JSONL file", None)
         .opt("metrics-history-every-s", "serve: seconds between history snapshots", None)
+        .opt("clients", "loadgen: concurrent simulated clients", Some("64"))
+        .opt("requests-per-client", "loadgen: closed-loop requests per client", Some("4"))
+        .opt("rps", "loadgen: open-loop aggregate arrival rate (0 = closed)", Some("0"))
+        .opt("duration-s", "loadgen: open-loop arrival window, seconds", Some("5"))
         .opt("limit", "experiments: sample limit", None)
         .opt("out", "experiments: results dir", Some("results"))
         .opt("prompt", "decode: prompt text (task-prefixed, e.g. 'tr: ...')", None)
@@ -113,6 +120,12 @@ fn build_config(args: &specedge::util::cli::Args) -> anyhow::Result<RunConfig> {
     }
     if let Some(k) = args.get("kv-cache") {
         cfg.kv_cache = KvCacheMode::parse(k)?;
+    }
+    if let Some(d) = args.get("drafter") {
+        cfg.drafter = DrafterMode::parse(d)?;
+    }
+    if let Some(t) = args.get("trace") {
+        cfg.trace_file = Some(PathBuf::from(t));
     }
     if let Some(f) = args.get("fleet") {
         cfg.fleet_file = Some(PathBuf::from(f));
@@ -190,6 +203,7 @@ fn run() -> anyhow::Result<()> {
         "explore" => cmd_explore(&cfg, platform, &args),
         "experiment" => cmd_experiment(&cfg, platform, &args),
         "alpha" => cmd_experiment_named(&cfg, platform, &args, "alpha"),
+        "loadgen" => cmd_loadgen(&cfg, &args),
         "serve" => cmd_serve(cfg, platform),
         other => anyhow::bail!("unknown command {other:?}\n\n{}", cli().usage()),
     }
@@ -371,6 +385,35 @@ fn cmd_experiment_named(
     let limit = args.get_usize("limit")?;
     let ctx = experiments::Ctx::new(cfg, platform, out, limit)?;
     experiments::run(&ctx, which)
+}
+
+fn cmd_loadgen(cfg: &RunConfig, args: &specedge::util::cli::Args) -> anyhow::Result<()> {
+    let mut spec = specedge::loadgen::LoadSpec {
+        port: cfg.port,
+        clients: args.get_usize("clients")?.unwrap_or(64),
+        requests_per_client: args.get_usize("requests-per-client")?.unwrap_or(4),
+        open_loop_rps: args.get_f64("rps")?.unwrap_or(0.0),
+        duration_s: args.get_f64("duration-s")?.unwrap_or(5.0),
+        task: args.get("task").unwrap_or("translate").to_string(),
+        seed: cfg.seed,
+        ..specedge::loadgen::LoadSpec::default()
+    };
+    if let Some(path) = &cfg.trace_file {
+        // Trace replay: resolve the saved trace against the manifest's
+        // eval set; arrivals come from the trace, not the harness.
+        let engine = Engine::load(&cfg.artifacts_dir)?;
+        let trace = specedge::scenario::WorkloadTrace::load(path)?;
+        spec.schedule = Some(specedge::scenario::trace_schedule(&trace, &engine.manifest)?);
+        println!(
+            "loadgen: replaying trace {:?} ({} requests, {} classes)",
+            trace.name,
+            trace.entries.len(),
+            trace.class_count()
+        );
+    }
+    let report = specedge::loadgen::run(&spec)?;
+    println!("{}", report.to_json());
+    Ok(())
 }
 
 fn cmd_serve(cfg: RunConfig, platform: Platform) -> anyhow::Result<()> {

@@ -24,7 +24,9 @@
 
 use crate::api::{FinishReason, SloClass, NUM_FINISH_REASONS, NUM_SLO_CLASSES};
 use crate::hetero::{PuId, TimelineSnapshot, NUM_PUS};
+use crate::scenario::{RequestClass, NUM_CLASSES};
 use crate::util::stats::{BoxStats, Summary};
+use std::collections::BTreeMap;
 use std::sync::Mutex;
 
 /// Thread-safe metrics sink shared by coordinator workers.
@@ -116,6 +118,16 @@ struct Inner {
     /// worker's last sync (indexed by worker id; workers own independent
     /// managers, so the report sums across them).
     kv_workers: Vec<[[u64; 3]; NUM_PUS]>,
+    /// Requests retired per [`RequestClass`] (indexed by
+    /// [`RequestClass::index`]; unclassed tasks are not counted here).
+    class_requests: [u64; NUM_CLASSES],
+    /// Per-class α EWMA (same 0.8/0.2 mix the decision layer runs) and
+    /// how many finite observations fed it (0 ⇒ the EWMA is unset).
+    class_alpha: [f64; NUM_CLASSES],
+    class_alpha_n: [u64; NUM_CLASSES],
+    /// Requests retired per drafter variant name (the chosen-drafter
+    /// histogram; a single bucket under `drafter: fixed`).
+    drafter_hist: BTreeMap<String, u64>,
 }
 
 /// Fixed-size uniform reservoir (Vitter's Algorithm R) for unbounded
@@ -334,6 +346,27 @@ impl Metrics {
         m.kv_workers[wid] = r.occupancy;
     }
 
+    /// One retired request's traffic-class accounting: per-class request
+    /// count, per-class α EWMA (a NaN α — the request never drafted —
+    /// leaves the mix untouched) and the chosen-drafter histogram. A
+    /// `None` class (task outside the 13-task eval set) still counts
+    /// toward the drafter histogram.
+    pub fn record_class(&self, class: Option<RequestClass>, alpha: f64, drafter: &str) {
+        let mut m = self.inner.lock().unwrap();
+        *m.drafter_hist.entry(drafter.to_string()).or_insert(0) += 1;
+        let Some(class) = class else { return };
+        let i = class.index();
+        m.class_requests[i] += 1;
+        if alpha.is_finite() {
+            m.class_alpha[i] = if m.class_alpha_n[i] == 0 {
+                alpha
+            } else {
+                0.8 * m.class_alpha[i] + 0.2 * alpha
+            };
+            m.class_alpha_n[i] += 1;
+        }
+    }
+
     /// One request's simulated timeline latency (admission → finish).
     pub fn record_timeline_latency(&self, seconds: f64) {
         if seconds.is_finite() {
@@ -398,6 +431,17 @@ impl Metrics {
             kv_pages_used: sum_occupancy(&m.kv_workers, 0),
             kv_pages_peak: sum_occupancy(&m.kv_workers, 1),
             kv_pages_capacity: sum_occupancy(&m.kv_workers, 2),
+            class_requests: m.class_requests,
+            class_alpha: {
+                let mut a = [f64::NAN; NUM_CLASSES];
+                for i in 0..NUM_CLASSES {
+                    if m.class_alpha_n[i] > 0 {
+                        a[i] = m.class_alpha[i];
+                    }
+                }
+                a
+            },
+            drafter_hist: m.drafter_hist.iter().map(|(k, &n)| (k.clone(), n)).collect(),
         }
     }
 }
@@ -487,6 +531,15 @@ pub struct Report {
     pub kv_pages_used: [u64; NUM_PUS],
     pub kv_pages_peak: [u64; NUM_PUS],
     pub kv_pages_capacity: [u64; NUM_PUS],
+    /// Requests retired per [`RequestClass`] (indexed by
+    /// [`RequestClass::index`]).
+    pub class_requests: [u64; NUM_CLASSES],
+    /// Per-class retire-time α EWMA (NaN until the class retires a
+    /// request that actually drafted).
+    pub class_alpha: [f64; NUM_CLASSES],
+    /// Requests retired per chosen drafter variant, sorted by name (one
+    /// bucket under `drafter: fixed`; empty before any retire).
+    pub drafter_hist: Vec<(String, u64)>,
 }
 
 impl Report {
@@ -531,6 +584,11 @@ impl Report {
     }
 
     pub fn render(&self, wall_s: f64) -> String {
+        let drafters: Vec<String> = self
+            .drafter_hist
+            .iter()
+            .map(|(name, n)| format!("{name}={n}"))
+            .collect();
         format!(
             "requests={} rejected={} tokens={} tok/s={:.1} mean_alpha={:.3}\n\
              sim latency  p50={:.1}ms p90={:.1}ms mean={:.1}ms\n\
@@ -546,6 +604,10 @@ impl Report {
              finish: stop={} length={} stop_seq={} cancelled={} \
              deadline={} rejected={}\n\
              slo: interactive={} batch={} deadline_miss_rate={:.3}\n\
+             class req: chat={} translate={} summarize={} code_complete={}\n\
+             class alpha: chat={:.3} translate={:.3} summarize={:.3} \
+             code_complete={:.3}\n\
+             drafters: [{}]\n\
              kv: lookups={} prefix_hit_rate={:.3} prefill_tokens_saved={} \
              memory_shed={} reap_reclaimed_pages={}\n\
              kv pages: cpu used={} peak={} cap={} | gpu used={} peak={} cap={}",
@@ -589,6 +651,15 @@ impl Report {
             self.slo_requests[SloClass::Interactive.index()],
             self.slo_requests[SloClass::Batch.index()],
             self.deadline_miss_rate(),
+            self.class_requests[RequestClass::Chat.index()],
+            self.class_requests[RequestClass::Translate.index()],
+            self.class_requests[RequestClass::Summarize.index()],
+            self.class_requests[RequestClass::CodeComplete.index()],
+            self.class_alpha[RequestClass::Chat.index()],
+            self.class_alpha[RequestClass::Translate.index()],
+            self.class_alpha[RequestClass::Summarize.index()],
+            self.class_alpha[RequestClass::CodeComplete.index()],
+            drafters.join(" "),
             self.kv_lookups,
             self.kv_prefix_hit_rate(),
             self.kv_prefill_tokens_saved,
@@ -956,6 +1027,36 @@ mod tests {
         let s = r.render(1.0);
         assert!(s.contains("prefill_tokens_saved=20"), "{s}");
         assert!(s.contains("cpu used=6 peak=10 cap=64"), "{s}");
+    }
+
+    #[test]
+    fn class_records_count_mix_and_histogram() {
+        let m = Metrics::new();
+        let r = m.snapshot();
+        assert_eq!(r.class_requests, [0; NUM_CLASSES]);
+        assert!(r.class_alpha.iter().all(|a| a.is_nan()));
+        assert!(r.drafter_hist.is_empty());
+        m.record_class(Some(RequestClass::Chat), 0.5, "drafter_fp");
+        m.record_class(Some(RequestClass::Chat), 1.0, "drafter_w8a8");
+        m.record_class(Some(RequestClass::Translate), f64::NAN, "drafter_fp");
+        m.record_class(None, 0.9, "drafter_fp"); // unclassed task
+        let r = m.snapshot();
+        assert_eq!(r.class_requests[RequestClass::Chat.index()], 2);
+        assert_eq!(r.class_requests[RequestClass::Translate.index()], 1);
+        assert_eq!(r.class_requests[RequestClass::Summarize.index()], 0);
+        // Chat EWMA: seeded at 0.5, then 0.8·0.5 + 0.2·1.0 = 0.6.
+        assert!((r.class_alpha[RequestClass::Chat.index()] - 0.6).abs() < 1e-12);
+        // Translate never drafted: its EWMA stays unset.
+        assert!(r.class_alpha[RequestClass::Translate.index()].is_nan());
+        // The histogram is name-sorted and counts every retire, even the
+        // unclassed one.
+        assert_eq!(
+            r.drafter_hist,
+            vec![("drafter_fp".to_string(), 3), ("drafter_w8a8".to_string(), 1)]
+        );
+        let s = r.render(1.0);
+        assert!(s.contains("class req: chat=2 translate=1"), "{s}");
+        assert!(s.contains("drafters: [drafter_fp=3 drafter_w8a8=1]"), "{s}");
     }
 
     #[test]

@@ -1,0 +1,1089 @@
+//! Scenario subsystem: workload traces, request classes, arrival
+//! processes, and resource-aware drafter selection.
+//!
+//! The decision layer (calibrated refit, online re-partitioning, tree
+//! shapes, KV admission) was historically exercised by one synthetic
+//! translate workload. This module is the layer between *traffic* and the
+//! decision engine:
+//!
+//! * **[`WorkloadTrace`]** — a JSON-lines trace schema: one header line
+//!   plus one [`TraceEntry`] per request (class, arrival time, task +
+//!   sample draw, output-length draw, SLO class/deadline, α regime).
+//!   Saving and re-loading a trace reproduces a run bit-for-bit
+//!   ([`WorkloadTrace::to_jsonl`] / [`WorkloadTrace::from_jsonl`] are
+//!   exact inverses, and [`materialize`] is a pure function of the
+//!   trace + manifest).
+//! * **[`ScenarioSpec`]** — seeded generators for
+//!   chat/translate/summarize/code-complete class mixes
+//!   ([`ClassMix`]) under Poisson, bursty, or diurnal arrivals
+//!   ([`ArrivalProcess`]); [`builtin_scenarios`] ships the standard set
+//!   the `scenarios` experiment sweeps.
+//! * **[`RequestClass`]** — the four traffic classes, each owning a pool
+//!   of the manifest's 13 eval tasks ([`RequestClass::task_pool`]); the
+//!   inverse map [`RequestClass::for_task`] is how serving code tags
+//!   per-class metrics and per-class decision state without carrying the
+//!   class through every request type.
+//! * **[`DrafterRegistry`]** — the manifest's `drafter_*` quantized
+//!   variants as *candidate draft models* (self-drafting via
+//!   quantization), with [`DrafterRegistry::select`] scoring every
+//!   (drafter variant, mapping, γ/tree) candidate through the DSE at
+//!   per-drafter α estimates — resource-aware drafter selection per
+//!   request class.
+//!
+//! The int8 economics make drafter choice real: W8A8 linears run
+//! *faster* on the A55 cores (dot-product extension) but are *promoted*
+//! (slower) on the Mali GPU, so the quantized drafter is only ever
+//! CPU-mapped and wins exactly where its cheaper forwards survive its
+//! (class-dependent) acceptance-rate penalty.
+
+use crate::api::SloClass;
+use crate::costmodel::TreeShape;
+use crate::decision::CostModel;
+use crate::dse::{self, KvLoad, PairConfig};
+use crate::models::{ModelSpec, Role, Scheme, VariantKey};
+use crate::runtime::manifest::Manifest;
+use crate::tokenizer::Tokenizer;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::workload::{prompt_ids, Request, Workload};
+use std::collections::HashMap;
+use std::path::Path;
+
+// ---------------------------------------------------------------------------
+// Request classes
+// ---------------------------------------------------------------------------
+
+/// Traffic class of one request — the unit per-class decision state and
+/// per-class metrics are keyed by.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum RequestClass {
+    Chat,
+    Translate,
+    Summarize,
+    CodeComplete,
+}
+
+/// Number of [`RequestClass`] variants (dense metrics arrays).
+pub const NUM_CLASSES: usize = 4;
+
+impl RequestClass {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            RequestClass::Chat => "chat",
+            RequestClass::Translate => "translate",
+            RequestClass::Summarize => "summarize",
+            RequestClass::CodeComplete => "code_complete",
+        }
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<RequestClass> {
+        match s {
+            "chat" => Ok(RequestClass::Chat),
+            "translate" => Ok(RequestClass::Translate),
+            "summarize" => Ok(RequestClass::Summarize),
+            "code_complete" => Ok(RequestClass::CodeComplete),
+            _ => anyhow::bail!(
+                "class must be chat|translate|summarize|code_complete, got {s:?}"
+            ),
+        }
+    }
+
+    /// Dense index (metrics arrays), declaration order.
+    pub fn index(&self) -> usize {
+        match self {
+            RequestClass::Chat => 0,
+            RequestClass::Translate => 1,
+            RequestClass::Summarize => 2,
+            RequestClass::CodeComplete => 3,
+        }
+    }
+
+    /// All variants, in [`index`](Self::index) order.
+    pub fn all() -> [RequestClass; NUM_CLASSES] {
+        [
+            RequestClass::Chat,
+            RequestClass::Translate,
+            RequestClass::Summarize,
+            RequestClass::CodeComplete,
+        ]
+    }
+
+    /// The eval tasks this class draws from — a partition of the
+    /// manifest's 13 Spec-Bench-shaped tasks into traffic archetypes
+    /// (echo-like tasks serve as "chat", transform-heavy ones as "code").
+    pub fn task_pool(&self) -> &'static [&'static str] {
+        match self {
+            RequestClass::Chat => &["copy", "first-word", "last-word", "second-word"],
+            RequestClass::Translate => &["translate", "translate-rev"],
+            RequestClass::Summarize => &["initials", "word-lengths", "count-words"],
+            RequestClass::CodeComplete => {
+                &["cipher", "double", "swap-ends", "reverse-words"]
+            }
+        }
+    }
+
+    /// Inverse of [`task_pool`](Self::task_pool): the class a task belongs
+    /// to (`None` for tasks outside the 13-task eval set).
+    pub fn for_task(task: &str) -> Option<RequestClass> {
+        RequestClass::all()
+            .into_iter()
+            .find(|c| c.task_pool().contains(&task))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Arrival processes
+// ---------------------------------------------------------------------------
+
+/// Open-loop arrival process of a scenario. All three are exponential
+/// inter-arrival draws; bursty/diurnal modulate the instantaneous rate by
+/// the current arrival time, so a trace's timestamps are reproducible
+/// from (process, seed) alone.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ArrivalProcess {
+    /// Constant-rate Poisson at `rate` req/s — bit-identical to the
+    /// historical [`Workload::with_poisson_arrivals`] stamps.
+    Poisson { rate: f64 },
+    /// Square-wave load: the first `burst_frac` of every `period_s`
+    /// window arrives at `burst_rate`, the rest at `base_rate`.
+    Bursty {
+        base_rate: f64,
+        burst_rate: f64,
+        period_s: f64,
+        burst_frac: f64,
+    },
+    /// Sinusoidal day/night load: rate swings `±amplitude` (relative)
+    /// around `base_rate` over `period_s`.
+    Diurnal {
+        base_rate: f64,
+        amplitude: f64,
+        period_s: f64,
+    },
+}
+
+impl ArrivalProcess {
+    /// Instantaneous rate at arrival-clock time `t` (req/s, always > 0).
+    pub fn rate_at(&self, t: f64) -> f64 {
+        match *self {
+            ArrivalProcess::Poisson { rate } => rate,
+            ArrivalProcess::Bursty { base_rate, burst_rate, period_s, burst_frac } => {
+                let phase = (t / period_s).fract();
+                if phase < burst_frac {
+                    burst_rate
+                } else {
+                    base_rate
+                }
+            }
+            ArrivalProcess::Diurnal { base_rate, amplitude, period_s } => {
+                let phase = 2.0 * std::f64::consts::PI * t / period_s;
+                (base_rate * (1.0 + amplitude * phase.sin())).max(0.05 * base_rate)
+            }
+        }
+    }
+
+    /// Draw the gap to the next arrival given the previous arrival at `t`.
+    /// For `Poisson` this consumes exactly one `rng.exp(rate)` draw — the
+    /// delegation contract [`Workload::with_arrivals`] relies on.
+    pub fn next_gap(&self, rng: &mut Rng, t: f64) -> f64 {
+        rng.exp(self.rate_at(t))
+    }
+
+    pub fn label(&self) -> String {
+        match *self {
+            ArrivalProcess::Poisson { rate } => format!("poisson@{rate}"),
+            ArrivalProcess::Bursty { burst_rate, .. } => format!("bursty@{burst_rate}"),
+            ArrivalProcess::Diurnal { base_rate, .. } => format!("diurnal@{base_rate}"),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        match *self {
+            ArrivalProcess::Poisson { rate } => {
+                j.set("kind", "poisson".into()).set("rate", rate.into());
+            }
+            ArrivalProcess::Bursty { base_rate, burst_rate, period_s, burst_frac } => {
+                j.set("kind", "bursty".into())
+                    .set("base_rate", base_rate.into())
+                    .set("burst_rate", burst_rate.into())
+                    .set("period_s", period_s.into())
+                    .set("burst_frac", burst_frac.into());
+            }
+            ArrivalProcess::Diurnal { base_rate, amplitude, period_s } => {
+                j.set("kind", "diurnal".into())
+                    .set("base_rate", base_rate.into())
+                    .set("amplitude", amplitude.into())
+                    .set("period_s", period_s.into());
+            }
+        }
+        j
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<ArrivalProcess> {
+        match j.req_str("kind")? {
+            "poisson" => Ok(ArrivalProcess::Poisson { rate: j.req_f64("rate")? }),
+            "bursty" => Ok(ArrivalProcess::Bursty {
+                base_rate: j.req_f64("base_rate")?,
+                burst_rate: j.req_f64("burst_rate")?,
+                period_s: j.req_f64("period_s")?,
+                burst_frac: j.req_f64("burst_frac")?,
+            }),
+            "diurnal" => Ok(ArrivalProcess::Diurnal {
+                base_rate: j.req_f64("base_rate")?,
+                amplitude: j.req_f64("amplitude")?,
+                period_s: j.req_f64("period_s")?,
+            }),
+            other => anyhow::bail!("arrival kind must be poisson|bursty|diurnal, got {other:?}"),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Trace schema
+// ---------------------------------------------------------------------------
+
+/// One request of a workload trace. `task`/`sample` name the prompt draw
+/// (resolved against the manifest's eval set at [`materialize`] time —
+/// `sample` indexes the task's samples modulo their count, so a trace
+/// replays against any artifact build that ships the task).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceEntry {
+    pub id: u64,
+    pub class: RequestClass,
+    pub task: String,
+    /// Prompt draw: index into the task's eval samples (modulo count).
+    pub sample: usize,
+    /// Arrival offset within the run, seconds.
+    pub arrival_s: f64,
+    /// Output-length draw (the request's `max_new` budget).
+    pub max_new: usize,
+    pub slo: SloClass,
+    /// Latency deadline in seconds (`None` = no deadline).
+    pub deadline_s: Option<f64>,
+    /// The class's true acceptance-rate regime for the fp drafter — the
+    /// scenario simulator's ground truth (serving code never reads it).
+    pub alpha_regime: f64,
+}
+
+impl TraceEntry {
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("id", (self.id as usize).into())
+            .set("class", self.class.as_str().into())
+            .set("task", self.task.as_str().into())
+            .set("sample", self.sample.into())
+            .set("arrival_s", self.arrival_s.into())
+            .set("max_new", self.max_new.into())
+            .set("slo", self.slo.as_str().into())
+            .set("alpha_regime", self.alpha_regime.into());
+        if let Some(d) = self.deadline_s {
+            j.set("deadline_ms", (d * 1e3).into());
+        }
+        j
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<TraceEntry> {
+        Ok(TraceEntry {
+            id: j.req_usize("id")? as u64,
+            class: RequestClass::parse(j.req_str("class")?)?,
+            task: j.req_str("task")?.to_string(),
+            sample: j.req_usize("sample")?,
+            arrival_s: j.req_f64("arrival_s")?,
+            max_new: j.req_usize("max_new")?,
+            slo: SloClass::parse(j.req_str("slo")?)?,
+            deadline_s: j.get("deadline_ms").and_then(Json::as_f64).map(|ms| ms / 1e3),
+            alpha_regime: j.req_f64("alpha_regime")?,
+        })
+    }
+}
+
+/// A generated (or loaded) workload trace: a header plus one
+/// [`TraceEntry`] per request, serialized as JSON lines.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkloadTrace {
+    pub name: String,
+    /// The generator seed (diagnostic — replay never re-draws).
+    pub seed: u64,
+    pub entries: Vec<TraceEntry>,
+}
+
+impl WorkloadTrace {
+    /// Serialize as JSON lines: a header line then one entry per line.
+    /// Deterministic (object keys are ordered), so equal traces always
+    /// serialize to identical bytes.
+    pub fn to_jsonl(&self) -> String {
+        let mut header = Json::obj();
+        header
+            .set("kind", "specedge-trace".into())
+            .set("version", 1usize.into())
+            .set("name", self.name.as_str().into())
+            .set("seed", (self.seed as usize).into())
+            .set("requests", self.entries.len().into());
+        let mut out = header.to_string();
+        out.push('\n');
+        for e in &self.entries {
+            out.push_str(&e.to_json().to_string());
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn from_jsonl(text: &str) -> anyhow::Result<WorkloadTrace> {
+        let mut lines = text.lines().filter(|l| !l.trim().is_empty());
+        let header_line = lines.next().ok_or_else(|| anyhow::anyhow!("empty trace"))?;
+        let header =
+            Json::parse(header_line).map_err(|e| anyhow::anyhow!("trace header: {e}"))?;
+        anyhow::ensure!(
+            header.req_str("kind")? == "specedge-trace",
+            "not a specedge trace (kind mismatch)"
+        );
+        anyhow::ensure!(
+            header.req_usize("version")? == 1,
+            "unsupported trace version"
+        );
+        let mut entries = Vec::new();
+        for (i, line) in lines.enumerate() {
+            let j = Json::parse(line).map_err(|e| anyhow::anyhow!("trace line {}: {e}", i + 2))?;
+            entries.push(TraceEntry::from_json(&j)?);
+        }
+        anyhow::ensure!(
+            entries.len() == header.req_usize("requests")?,
+            "trace header declares {} requests, found {}",
+            header.req_usize("requests")?,
+            entries.len()
+        );
+        Ok(WorkloadTrace {
+            name: header.req_str("name")?.to_string(),
+            seed: header.req_usize("seed")? as u64,
+            entries,
+        })
+    }
+
+    pub fn save(&self, path: &Path) -> anyhow::Result<()> {
+        std::fs::write(path, self.to_jsonl())
+            .map_err(|e| anyhow::anyhow!("writing trace {path:?}: {e}"))
+    }
+
+    pub fn load(path: &Path) -> anyhow::Result<WorkloadTrace> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading trace {path:?}: {e}"))?;
+        WorkloadTrace::from_jsonl(&text)
+    }
+
+    /// Requests per class, dense-indexed.
+    pub fn class_counts(&self) -> [usize; NUM_CLASSES] {
+        let mut counts = [0usize; NUM_CLASSES];
+        for e in &self.entries {
+            counts[e.class.index()] += 1;
+        }
+        counts
+    }
+
+    /// Distinct classes present in the trace.
+    pub fn class_count(&self) -> usize {
+        self.class_counts().iter().filter(|&&c| c > 0).count()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Scenario generators
+// ---------------------------------------------------------------------------
+
+/// One class's share of a scenario's traffic plus its request-shape
+/// distribution.
+#[derive(Debug, Clone)]
+pub struct ClassMix {
+    pub class: RequestClass,
+    /// Relative traffic weight (normalized over the scenario's mix).
+    pub weight: f64,
+    /// True fp-drafter acceptance rate of this class (the α regime the
+    /// scenario simulator decodes under).
+    pub alpha: f64,
+    /// Output-length draw bounds, inclusive.
+    pub max_new: (usize, usize),
+    pub slo: SloClass,
+    pub deadline_s: Option<f64>,
+}
+
+/// A seeded scenario: class mix × arrival process → [`WorkloadTrace`].
+#[derive(Debug, Clone)]
+pub struct ScenarioSpec {
+    pub name: String,
+    pub seed: u64,
+    pub requests: usize,
+    pub arrivals: ArrivalProcess,
+    pub mix: Vec<ClassMix>,
+}
+
+impl ScenarioSpec {
+    /// Generate the trace. Same spec (including seed) ⇒ identical trace;
+    /// every random draw comes from one seeded stream in entry order.
+    pub fn generate(&self) -> WorkloadTrace {
+        let mut rng = Rng::new(self.seed);
+        let total: f64 = self.mix.iter().map(|m| m.weight).sum();
+        let mut entries = Vec::with_capacity(self.requests);
+        let mut t = 0.0;
+        for id in 0..self.requests {
+            t += self.arrivals.next_gap(&mut rng, t);
+            let mut pick = rng.f64() * total;
+            let mut chosen = &self.mix[0];
+            for m in &self.mix {
+                if pick < m.weight {
+                    chosen = m;
+                    break;
+                }
+                pick -= m.weight;
+            }
+            let task = *rng.choose(chosen.class.task_pool());
+            let sample = rng.below(1 << 20);
+            let (lo, hi) = chosen.max_new;
+            let max_new = rng.range(lo as i64, hi as i64) as usize;
+            entries.push(TraceEntry {
+                id: id as u64,
+                class: chosen.class,
+                task: task.to_string(),
+                sample,
+                arrival_s: t,
+                max_new,
+                slo: chosen.slo,
+                deadline_s: chosen.deadline_s,
+                alpha_regime: chosen.alpha,
+            });
+        }
+        WorkloadTrace { name: self.name.clone(), seed: self.seed, entries }
+    }
+}
+
+/// The standard scenario set the `scenarios` experiment sweeps: a
+/// single-class parity scenario (pinned bit-identical to the pre-scenario
+/// behavior under `drafter: fixed`), plus three mixed-traffic scenarios
+/// where per-class α regimes pull the decision layer in different
+/// directions per class.
+pub fn builtin_scenarios(requests: usize, seed: u64) -> Vec<ScenarioSpec> {
+    let interactive = |class, weight, alpha, lo, hi| ClassMix {
+        class,
+        weight,
+        alpha,
+        max_new: (lo, hi),
+        slo: SloClass::Interactive,
+        deadline_s: None,
+    };
+    let batch = |class, weight, alpha, lo, hi| ClassMix {
+        class,
+        weight,
+        alpha,
+        max_new: (lo, hi),
+        slo: SloClass::Batch,
+        deadline_s: None,
+    };
+    vec![
+        // The parity anchor: one class, constant-rate Poisson — exactly
+        // the historical translate workload shape.
+        ScenarioSpec {
+            name: "translate_poisson".into(),
+            seed,
+            requests,
+            arrivals: ArrivalProcess::Poisson { rate: 8.0 },
+            mix: vec![interactive(RequestClass::Translate, 1.0, 0.90, 24, 48)],
+        },
+        // Chat-dominated bursts: two well-drafted classes plus a
+        // low-α summarize tail that should fall back per class.
+        ScenarioSpec {
+            name: "chat_bursty".into(),
+            seed: seed ^ 0x1,
+            requests,
+            arrivals: ArrivalProcess::Bursty {
+                base_rate: 4.0,
+                burst_rate: 24.0,
+                period_s: 10.0,
+                burst_frac: 0.3,
+            },
+            mix: vec![
+                interactive(RequestClass::Chat, 0.55, 0.93, 8, 24),
+                interactive(RequestClass::Translate, 0.25, 0.88, 24, 48),
+                batch(RequestClass::Summarize, 0.20, 0.40, 32, 64),
+            ],
+        },
+        // All four classes under a day/night swing — the broadest
+        // per-class divergence surface.
+        ScenarioSpec {
+            name: "mixed_diurnal".into(),
+            seed: seed ^ 0x2,
+            requests,
+            arrivals: ArrivalProcess::Diurnal {
+                base_rate: 8.0,
+                amplitude: 0.7,
+                period_s: 60.0,
+            },
+            mix: vec![
+                interactive(RequestClass::Chat, 0.30, 0.92, 8, 24),
+                interactive(RequestClass::Translate, 0.30, 0.90, 24, 48),
+                batch(RequestClass::Summarize, 0.20, 0.45, 32, 64),
+                batch(RequestClass::CodeComplete, 0.20, 0.70, 16, 48),
+            ],
+        },
+        // Code-heavy steady load: a mid-α class where drafter choice
+        // (cheap quantized forwards vs higher fp acceptance) matters.
+        ScenarioSpec {
+            name: "code_poisson".into(),
+            seed: seed ^ 0x3,
+            requests,
+            arrivals: ArrivalProcess::Poisson { rate: 12.0 },
+            mix: vec![
+                batch(RequestClass::CodeComplete, 0.60, 0.72, 16, 48),
+                interactive(RequestClass::Chat, 0.40, 0.92, 8, 24),
+            ],
+        },
+    ]
+}
+
+// ---------------------------------------------------------------------------
+// Trace replay
+// ---------------------------------------------------------------------------
+
+/// Resolve a trace against the manifest's eval set: each entry's
+/// (task, sample) draw becomes a [`Request`] with the entry's arrival
+/// stamp and class tag. Pure — the same (trace, manifest) always yields
+/// identical prompts, which is what makes saved traces replay
+/// bit-for-bit.
+pub fn materialize(
+    trace: &WorkloadTrace,
+    manifest: &Manifest,
+    tokenizer: &Tokenizer,
+) -> anyhow::Result<Workload> {
+    let by_task = samples_by_task(manifest);
+    let mut requests = Vec::with_capacity(trace.entries.len());
+    for e in &trace.entries {
+        let pool = by_task
+            .get(e.task.as_str())
+            .ok_or_else(|| anyhow::anyhow!("trace task {:?} has no eval samples", e.task))?;
+        let s = &manifest.eval_samples[pool[e.sample % pool.len()]];
+        requests.push(Request {
+            id: e.id,
+            task: e.task.clone(),
+            prompt: prompt_ids(tokenizer, s)?,
+            truth: s.completion.clone(),
+            arrival_s: e.arrival_s,
+            class: Some(e.class),
+        });
+    }
+    anyhow::ensure!(!requests.is_empty(), "trace has no entries");
+    Ok(Workload { requests })
+}
+
+/// One loadgen call resolved from a trace entry: the prompt *text* (the
+/// wire carries text, not token ids) plus the entry's arrival stamp and
+/// request options.
+#[derive(Debug, Clone)]
+pub struct ScheduledCall {
+    pub arrival_s: f64,
+    pub task: String,
+    pub prompt: String,
+    pub max_new: usize,
+    pub slo: SloClass,
+    pub deadline_s: Option<f64>,
+}
+
+/// Resolve a trace into the loadgen's wire-level schedule (same sample
+/// resolution as [`materialize`], but keeping prompt text).
+pub fn trace_schedule(
+    trace: &WorkloadTrace,
+    manifest: &Manifest,
+) -> anyhow::Result<Vec<ScheduledCall>> {
+    let by_task = samples_by_task(manifest);
+    trace
+        .entries
+        .iter()
+        .map(|e| {
+            let pool = by_task
+                .get(e.task.as_str())
+                .ok_or_else(|| anyhow::anyhow!("trace task {:?} has no eval samples", e.task))?;
+            let s = &manifest.eval_samples[pool[e.sample % pool.len()]];
+            Ok(ScheduledCall {
+                arrival_s: e.arrival_s,
+                task: e.task.clone(),
+                prompt: s.prompt.clone(),
+                max_new: e.max_new,
+                slo: e.slo,
+                deadline_s: e.deadline_s,
+            })
+        })
+        .collect()
+}
+
+fn samples_by_task(manifest: &Manifest) -> HashMap<&str, Vec<usize>> {
+    let mut by_task: HashMap<&str, Vec<usize>> = HashMap::new();
+    for (i, s) in manifest.eval_samples.iter().enumerate() {
+        by_task.entry(s.task.as_str()).or_default().push(i);
+    }
+    by_task
+}
+
+// ---------------------------------------------------------------------------
+// Drafter registry
+// ---------------------------------------------------------------------------
+
+/// One candidate draft model: a `drafter_*` variant from the manifest.
+#[derive(Debug, Clone)]
+pub struct DrafterCandidate {
+    pub key: VariantKey,
+    pub spec: ModelSpec,
+}
+
+/// A drafter variant chosen for a (class, operating point), with the DSE
+/// candidate that won it the slot.
+#[derive(Debug, Clone)]
+pub struct DrafterChoice {
+    pub key: VariantKey,
+    pub decision: dse::Candidate,
+}
+
+/// The manifest's drafter variants as selectable draft models.
+///
+/// The compile pipeline lowers every (role, scheme) variant — the
+/// `quant_matmul` kernels exercised by `examples/quant_ablation.rs` give
+/// the same drafter architecture a second, cheaper-on-CPU body. This
+/// registry is the single enumeration path over those variants: the
+/// ablation example lists pairings through it, and the decision layer
+/// scores its candidates per request class through
+/// [`select`](Self::select).
+#[derive(Debug, Clone)]
+pub struct DrafterRegistry {
+    candidates: Vec<DrafterCandidate>,
+}
+
+impl DrafterRegistry {
+    /// Every `drafter_*` variant present in the manifest, role-checked
+    /// and resolved to its architecture spec, sorted by key for
+    /// deterministic iteration. Errors when the manifest ships none.
+    pub fn from_manifest(manifest: &Manifest) -> anyhow::Result<DrafterRegistry> {
+        let mut keys: Vec<VariantKey> = manifest
+            .variants
+            .keys()
+            .filter(|k| k.role == Role::Drafter)
+            .copied()
+            .collect();
+        keys.sort();
+        let candidates = keys
+            .into_iter()
+            .map(|key| {
+                Ok(DrafterCandidate { key, spec: manifest.model_for(key)?.clone() })
+            })
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        anyhow::ensure!(
+            !candidates.is_empty(),
+            "manifest has no drafter_* variants to register"
+        );
+        Ok(DrafterRegistry { candidates })
+    }
+
+    pub fn candidates(&self) -> &[DrafterCandidate] {
+        &self.candidates
+    }
+
+    pub fn contains(&self, key: VariantKey) -> bool {
+        self.candidates.iter().any(|c| c.key == key)
+    }
+
+    /// All (drafter, target) variant pairings the manifest can actually
+    /// run, sorted — the quantization-ablation grid (fp/fp, semi, full).
+    pub fn pairings(&self, manifest: &Manifest) -> Vec<(VariantKey, VariantKey)> {
+        let mut targets: Vec<VariantKey> = manifest
+            .variants
+            .keys()
+            .filter(|k| k.role == Role::Target)
+            .copied()
+            .collect();
+        targets.sort();
+        let mut out = Vec::new();
+        for d in &self.candidates {
+            for &t in &targets {
+                out.push((d.key, t));
+            }
+        }
+        out
+    }
+
+    /// Score every (drafter variant, mapping, γ/tree) candidate for one
+    /// operating point and return the best. `alpha_for` supplies the
+    /// *per-drafter* α estimate (quantized drafters typically accept
+    /// less); every drafter is scored against the same non-speculative
+    /// target baseline, so speedups compare fairly across variants. Ties
+    /// (e.g. nothing speculates anywhere) break toward the first
+    /// registered candidate — `drafter_fp`, the historical default.
+    #[allow(clippy::too_many_arguments)]
+    pub fn select<M: CostModel + ?Sized>(
+        &self,
+        model: &M,
+        target: &ModelSpec,
+        target_scheme: Scheme,
+        design_variant: usize,
+        seq_len: usize,
+        shapes: &[TreeShape],
+        kv: Option<&KvLoad>,
+        alpha_for: &dyn Fn(VariantKey) -> f64,
+    ) -> DrafterChoice {
+        let mut best: Option<DrafterChoice> = None;
+        for cand in &self.candidates {
+            let pair = PairConfig {
+                target: target.clone(),
+                target_scheme,
+                drafter: cand.spec.clone(),
+                drafter_scheme: cand.key.scheme,
+            };
+            let alpha = alpha_for(cand.key);
+            let d = dse::explore_variant_with_shapes_kv(
+                model,
+                &pair,
+                design_variant,
+                alpha,
+                seq_len,
+                shapes,
+                kv,
+            );
+            let better = match &best {
+                None => true,
+                Some(b) => d.best.speedup > b.decision.speedup + 1e-9,
+            };
+            if better {
+                best = Some(DrafterChoice { key: cand.key, decision: d.best });
+            }
+        }
+        best.expect("registry is never empty")
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Tests
+// ---------------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hetero::{LatencyModel, Platform};
+
+    fn mini_manifest() -> Manifest {
+        let j = Json::parse(
+            r#"{
+          "tokenizer": {"specials":["<pad>","<bos>","<eos>","="],
+                        "chars":" abcdefghijklmnopqrstuvwxyz.,?!-0123456789:'",
+                        "vocab_size":48},
+          "seq_buckets": [128], "batch_sizes": [1],
+          "models": {
+            "target": {"name":"target","n_layers":4,"d_model":128,"n_heads":4,
+                       "ffn_dim":352,"vocab":48,"param_count":816256},
+            "drafter": {"name":"drafter","n_layers":2,"d_model":96,"n_heads":4,
+                        "ffn_dim":256,"vocab":48,"param_count":230880}
+          },
+          "variants": {
+            "drafter_fp": {"role":"drafter","scheme":"fp","model":"drafter",
+              "weights":"w_dfp.bin","tensors":[],"artifacts":[]},
+            "drafter_w8a8": {"role":"drafter","scheme":"w8a8","model":"drafter",
+              "weights":"w_dq.bin","tensors":[],"artifacts":[]},
+            "target_w8a8": {"role":"target","scheme":"w8a8","model":"target",
+              "weights":"w_tq.bin","tensors":[],"artifacts":[]}
+          },
+          "monolithic": [],
+          "eval_samples": [
+            {"task":"translate","prompt":"tr: abc","completion":"hij"},
+            {"task":"translate","prompt":"tr: de","completion":"kl"},
+            {"task":"copy","prompt":"cp: abc","completion":"abc"},
+            {"task":"cipher","prompt":"ci: ab","completion":"bc"},
+            {"task":"initials","prompt":"in: a b","completion":"ab"},
+            {"task":"first-word","prompt":"fw: x y","completion":"x"}
+          ]}"#,
+        )
+        .unwrap();
+        Manifest::from_json(Path::new("/tmp"), &j).unwrap()
+    }
+
+    fn mini_scenario() -> ScenarioSpec {
+        ScenarioSpec {
+            name: "t".into(),
+            seed: 7,
+            requests: 40,
+            arrivals: ArrivalProcess::Poisson { rate: 10.0 },
+            mix: vec![
+                ClassMix {
+                    class: RequestClass::Translate,
+                    weight: 0.6,
+                    alpha: 0.9,
+                    max_new: (8, 16),
+                    slo: SloClass::Interactive,
+                    deadline_s: None,
+                },
+                ClassMix {
+                    class: RequestClass::Chat,
+                    weight: 0.4,
+                    alpha: 0.8,
+                    max_new: (4, 8),
+                    slo: SloClass::Batch,
+                    deadline_s: Some(0.25),
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn classes_partition_the_13_tasks() {
+        let mut seen = std::collections::HashSet::new();
+        for c in RequestClass::all() {
+            for t in c.task_pool() {
+                assert!(seen.insert(*t), "task {t} in two pools");
+                assert_eq!(RequestClass::for_task(t), Some(c));
+            }
+        }
+        assert_eq!(seen.len(), 13);
+        assert_eq!(RequestClass::for_task("nope"), None);
+        // Dense indices are a bijection.
+        for (i, c) in RequestClass::all().into_iter().enumerate() {
+            assert_eq!(c.index(), i);
+            assert_eq!(RequestClass::parse(c.as_str()).unwrap(), c);
+        }
+        assert!(RequestClass::parse("gardening").is_err());
+    }
+
+    #[test]
+    fn generator_is_seed_deterministic() {
+        let spec = mini_scenario();
+        let a = spec.generate();
+        let b = spec.generate();
+        assert_eq!(a, b);
+        assert_eq!(a.to_jsonl(), b.to_jsonl());
+        // A different seed moves at least the arrival stamps.
+        let other = ScenarioSpec { seed: 8, ..mini_scenario() }.generate();
+        assert_ne!(a, other);
+    }
+
+    #[test]
+    fn jsonl_roundtrip_is_exact() {
+        let trace = mini_scenario().generate();
+        let text = trace.to_jsonl();
+        let back = WorkloadTrace::from_jsonl(&text).unwrap();
+        assert_eq!(back, trace);
+        // Serialization is a fixed point: save → load → save is identical.
+        assert_eq!(back.to_jsonl(), text);
+    }
+
+    #[test]
+    fn truncated_or_foreign_traces_rejected() {
+        assert!(WorkloadTrace::from_jsonl("").is_err());
+        assert!(WorkloadTrace::from_jsonl("{\"kind\":\"other\"}").is_err());
+        let trace = mini_scenario().generate();
+        let text = trace.to_jsonl();
+        // Drop the last entry line: the header count no longer matches.
+        let cut = &text[..text.trim_end().rfind('\n').unwrap() + 1];
+        assert!(WorkloadTrace::from_jsonl(cut).is_err());
+    }
+
+    #[test]
+    fn poisson_trace_arrivals_match_workload_stamps() {
+        // The delegation contract: ArrivalProcess::Poisson consumes the
+        // RNG exactly like the historical with_poisson_arrivals loop.
+        let mut rng = Rng::new(42);
+        let p = ArrivalProcess::Poisson { rate: 10.0 };
+        let mut t = 0.0;
+        let stamped: Vec<f64> = (0..20)
+            .map(|_| {
+                t += p.next_gap(&mut rng, t);
+                t
+            })
+            .collect();
+        let mut rng2 = Rng::new(42);
+        let mut t2 = 0.0;
+        let legacy: Vec<f64> = (0..20)
+            .map(|_| {
+                t2 += rng2.exp(10.0);
+                t2
+            })
+            .collect();
+        assert_eq!(
+            stamped.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            legacy.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn arrivals_increase_under_every_process() {
+        for arrivals in [
+            ArrivalProcess::Poisson { rate: 10.0 },
+            ArrivalProcess::Bursty {
+                base_rate: 2.0,
+                burst_rate: 40.0,
+                period_s: 5.0,
+                burst_frac: 0.25,
+            },
+            ArrivalProcess::Diurnal { base_rate: 8.0, amplitude: 0.9, period_s: 30.0 },
+        ] {
+            let spec = ScenarioSpec { arrivals, ..mini_scenario() };
+            let trace = spec.generate();
+            let a: Vec<f64> = trace.entries.iter().map(|e| e.arrival_s).collect();
+            assert!(a.windows(2).all(|w| w[1] > w[0]), "{arrivals:?}");
+            assert!(a[0] > 0.0);
+            // Arrival-process JSON roundtrips.
+            assert_eq!(ArrivalProcess::from_json(&arrivals.to_json()).unwrap(), arrivals);
+        }
+        assert!(ArrivalProcess::from_json(&Json::parse(r#"{"kind":"x"}"#).unwrap()).is_err());
+    }
+
+    #[test]
+    fn bursty_rate_follows_the_square_wave() {
+        let p = ArrivalProcess::Bursty {
+            base_rate: 2.0,
+            burst_rate: 20.0,
+            period_s: 10.0,
+            burst_frac: 0.3,
+        };
+        assert_eq!(p.rate_at(0.0), 20.0);
+        assert_eq!(p.rate_at(2.9), 20.0);
+        assert_eq!(p.rate_at(3.1), 2.0);
+        assert_eq!(p.rate_at(13.1), 2.0);
+        let d = ArrivalProcess::Diurnal { base_rate: 8.0, amplitude: 0.5, period_s: 60.0 };
+        assert!(d.rate_at(15.0) > 8.0); // sin peak
+        assert!(d.rate_at(45.0) < 8.0); // sin trough
+        assert!(d.rate_at(45.0) > 0.0);
+    }
+
+    #[test]
+    fn materialize_replays_bit_for_bit() {
+        let m = mini_manifest();
+        let tok = Tokenizer::builtin();
+        let trace = mini_scenario().generate();
+        let w1 = materialize(&trace, &m, &tok).unwrap();
+        let reloaded = WorkloadTrace::from_jsonl(&trace.to_jsonl()).unwrap();
+        let w2 = materialize(&reloaded, &m, &tok).unwrap();
+        assert_eq!(w1.requests.len(), w2.requests.len());
+        for (a, b) in w1.requests.iter().zip(&w2.requests) {
+            assert_eq!(a.prompt, b.prompt);
+            assert_eq!(a.task, b.task);
+            assert_eq!(a.class, b.class);
+            assert_eq!(a.arrival_s.to_bits(), b.arrival_s.to_bits());
+        }
+        // Class tags survive materialization.
+        assert!(w1.requests.iter().all(|r| r.class == RequestClass::for_task(&r.task)));
+    }
+
+    #[test]
+    fn materialize_rejects_tasks_without_samples() {
+        let m = mini_manifest();
+        let tok = Tokenizer::builtin();
+        let mut trace = mini_scenario().generate();
+        trace.entries[0].task = "swap-ends".into(); // not in the mini set
+        assert!(materialize(&trace, &m, &tok).is_err());
+        assert!(trace_schedule(&trace, &m).is_err());
+    }
+
+    #[test]
+    fn trace_schedule_carries_options() {
+        let m = mini_manifest();
+        let trace = mini_scenario().generate();
+        let sched = trace_schedule(&trace, &m).unwrap();
+        assert_eq!(sched.len(), trace.entries.len());
+        for (c, e) in sched.iter().zip(&trace.entries) {
+            assert_eq!(c.arrival_s.to_bits(), e.arrival_s.to_bits());
+            assert_eq!(c.task, e.task);
+            assert_eq!(c.max_new, e.max_new);
+            assert_eq!(c.slo, e.slo);
+            assert_eq!(c.deadline_s, e.deadline_s);
+            assert!(!c.prompt.is_empty());
+        }
+    }
+
+    #[test]
+    fn builtin_scenarios_cover_single_and_mixed_class() {
+        let scenarios = builtin_scenarios(60, 0xC0FFEE);
+        assert!(scenarios.len() >= 4);
+        let traces: Vec<WorkloadTrace> = scenarios.iter().map(|s| s.generate()).collect();
+        // One single-class parity scenario, and at least one with 3+.
+        assert!(traces.iter().any(|t| t.class_count() == 1));
+        assert!(traces.iter().any(|t| t.class_count() >= 3));
+        for t in &traces {
+            assert_eq!(t.entries.len(), 60);
+        }
+        // All three arrival processes are exercised.
+        let kinds: std::collections::HashSet<String> = scenarios
+            .iter()
+            .map(|s| s.arrivals.to_json().req_str("kind").unwrap().to_string())
+            .collect();
+        assert_eq!(kinds.len(), 3);
+    }
+
+    #[test]
+    fn registry_enumerates_sorted_drafters() {
+        let m = mini_manifest();
+        let reg = DrafterRegistry::from_manifest(&m).unwrap();
+        let keys: Vec<String> = reg.candidates().iter().map(|c| c.key.name()).collect();
+        assert_eq!(keys, vec!["drafter_fp", "drafter_w8a8"]);
+        assert!(reg.contains(VariantKey::parse("drafter_fp").unwrap()));
+        assert!(!reg.contains(VariantKey::parse("target_w8a8").unwrap()));
+        let pairings = reg.pairings(&m);
+        assert_eq!(pairings.len(), 2); // 2 drafters × 1 target
+        assert!(pairings.iter().all(|(d, t)| {
+            d.role == Role::Drafter && t.role == Role::Target
+        }));
+    }
+
+    #[test]
+    fn registry_requires_a_drafter() {
+        let j = Json::parse(
+            r#"{
+          "tokenizer": {"specials":["<pad>"],"chars":"ab","vocab_size":3},
+          "seq_buckets": [16], "batch_sizes": [1],
+          "models": {}, "variants": {}, "monolithic": [], "eval_samples": []}"#,
+        )
+        .unwrap();
+        let m = Manifest::from_json(Path::new("/tmp"), &j).unwrap();
+        assert!(DrafterRegistry::from_manifest(&m).is_err());
+    }
+
+    #[test]
+    fn select_follows_the_per_drafter_alpha() {
+        let m = mini_manifest();
+        let reg = DrafterRegistry::from_manifest(&m).unwrap();
+        let lat = LatencyModel::new(Platform::imx95());
+        let target = m.model_for(VariantKey::parse("target_w8a8").unwrap()).unwrap();
+        let fp = VariantKey::parse("drafter_fp").unwrap();
+        let q = VariantKey::parse("drafter_w8a8").unwrap();
+        // fp drafts well, the quantized drafter is useless → fp wins.
+        let pick_fp = reg.select(
+            &lat, target, Scheme::W8a8, 1, 63, &[], None,
+            &|k| if k == fp { 0.90 } else { 0.05 },
+        );
+        assert_eq!(pick_fp.key, fp);
+        assert!(pick_fp.decision.speculates());
+        // Reversed regime → the quantized drafter wins the slot, and its
+        // mapping never lands the w8a8 body on the GPU.
+        let pick_q = reg.select(
+            &lat, target, Scheme::W8a8, 1, 63, &[], None,
+            &|k| if k == q { 0.90 } else { 0.05 },
+        );
+        assert_eq!(pick_q.key, q);
+        assert!(pick_q.decision.speculates());
+        assert!(!pick_q.decision.mapping.drafter.is_gpu());
+        // Nothing drafts anywhere → tie at speedup 1.0 → the historical
+        // default (first registered, drafter_fp) keeps the slot.
+        let pick_none = reg.select(
+            &lat, target, Scheme::W8a8, 1, 63, &[], None, &|_| 0.05,
+        );
+        assert_eq!(pick_none.key, fp);
+        assert!(!pick_none.decision.speculates());
+    }
+
+    #[test]
+    fn select_respects_kv_feasibility() {
+        let m = mini_manifest();
+        let reg = DrafterRegistry::from_manifest(&m).unwrap();
+        let mut plat = Platform::imx95();
+        plat.memory.kv_pages_cpu = 1;
+        plat.memory.kv_pages_gpu = 1;
+        let lat = LatencyModel::new(plat);
+        let target = m.model_for(VariantKey::parse("target_w8a8").unwrap()).unwrap();
+        let kv = KvLoad { inflight: 8, budget_tokens: 128 };
+        // Starved pools: no drafter can field a feasible mapping, so the
+        // choice must fall back to the non-speculative default.
+        let pick = reg.select(
+            &lat, target, Scheme::W8a8, 1, 63, &[], Some(&kv), &|_| 0.95,
+        );
+        assert!(!pick.decision.speculates());
+    }
+}

@@ -832,6 +832,21 @@ fn coordinator_metrics_json(coordinator: &Coordinator, start_wall: Instant) -> J
     .set("calibration_obs", (r.calibration_obs as usize).into())
     .set("calibration_tracked_keys", calib.tracked_keys.into())
     .set("calibration_fitted_keys", calib.fitted_keys.into());
+    // Traffic-class accounting: per-class retire counts and α mixes plus
+    // the chosen-drafter histogram (one bucket under `drafter: fixed`).
+    for class in crate::scenario::RequestClass::all() {
+        j.set(
+            &format!("class_requests_{}", class.as_str()),
+            (r.class_requests[class.index()] as usize).into(),
+        );
+        j.set(
+            &format!("class_alpha_{}", class.as_str()),
+            r.class_alpha[class.index()].into(),
+        );
+    }
+    for (name, n) in &r.drafter_hist {
+        j.set(&format!("drafter_requests_{name}"), (*n as usize).into());
+    }
     // Paged-KV-cache state (all-zero when `kv_cache: off`): prefix-trie
     // effectiveness, admission sheds, and per-PU page-pool occupancy.
     j.set("kv_lookups", (r.kv_lookups as usize).into())

@@ -3,6 +3,7 @@
 //! arrival processes for the serving experiments.
 
 use crate::runtime::manifest::{EvalSample, Manifest};
+use crate::scenario::{ArrivalProcess, RequestClass};
 use crate::tokenizer::{Tokenizer, SEP_ID};
 use crate::util::rng::Rng;
 
@@ -20,6 +21,9 @@ pub struct Request {
     pub truth: String,
     /// Arrival offset within the run, seconds (0 for closed-loop).
     pub arrival_s: f64,
+    /// Traffic class of the request (`None` when the task is outside the
+    /// 13-task eval set; trace-materialized requests always carry one).
+    pub class: Option<RequestClass>,
 }
 
 /// Workload built from the manifest's eval samples.
@@ -49,6 +53,7 @@ impl Workload {
                 prompt: prompt_ids(tokenizer, s)?,
                 truth: s.completion.clone(),
                 arrival_s: 0.0,
+                class: RequestClass::for_task(&s.task),
             });
             if let Some(l) = limit {
                 if requests.len() >= l {
@@ -61,12 +66,20 @@ impl Workload {
     }
 
     /// Stamp Poisson (exponential inter-arrival) times at `rate` req/s —
-    /// the open-loop serving scenario for the E2E example.
-    pub fn with_poisson_arrivals(mut self, rate: f64, seed: u64) -> Workload {
+    /// the open-loop serving scenario for the E2E example. Delegates to
+    /// [`ArrivalProcess::Poisson`], which draws the RNG identically to the
+    /// historical inline loop (bit-for-bit arrival stamps).
+    pub fn with_poisson_arrivals(self, rate: f64, seed: u64) -> Workload {
+        self.with_arrivals(&ArrivalProcess::Poisson { rate }, seed)
+    }
+
+    /// Stamp arrival times from any [`ArrivalProcess`] (Poisson, bursty,
+    /// diurnal) — one seeded draw per request, in request order.
+    pub fn with_arrivals(mut self, process: &ArrivalProcess, seed: u64) -> Workload {
         let mut rng = Rng::new(seed);
         let mut t = 0.0;
         for r in &mut self.requests {
-            t += rng.exp(rate);
+            t += process.next_gap(&mut rng, t);
             r.arrival_s = t;
         }
         self
@@ -150,6 +163,41 @@ mod tests {
         let a: Vec<f64> = w.requests.iter().map(|r| r.arrival_s).collect();
         assert!(a.windows(2).all(|x| x[1] > x[0]));
         assert!(a[0] > 0.0);
+    }
+
+    #[test]
+    fn arrival_delegation_is_bit_identical() {
+        let m = mini_manifest();
+        let t = Tokenizer::builtin();
+        let w = Workload::from_manifest(&m, &t, None, None).unwrap();
+        let legacy: Vec<u64> = {
+            // The historical inline loop, verbatim.
+            let mut rng = Rng::new(7);
+            let mut t = 0.0;
+            w.requests
+                .iter()
+                .map(|_| {
+                    t += rng.exp(10.0);
+                    t.to_bits()
+                })
+                .collect()
+        };
+        let stamped = w.clone().with_poisson_arrivals(10.0, 7);
+        let got: Vec<u64> = stamped.requests.iter().map(|r| r.arrival_s.to_bits()).collect();
+        assert_eq!(got, legacy);
+    }
+
+    #[test]
+    fn requests_carry_class_tags() {
+        let m = mini_manifest();
+        let t = Tokenizer::builtin();
+        let w = Workload::from_manifest(&m, &t, None, None).unwrap();
+        assert!(w
+            .requests
+            .iter()
+            .all(|r| r.class == RequestClass::for_task(&r.task)));
+        assert_eq!(w.requests[0].class, Some(RequestClass::Translate));
+        assert_eq!(w.requests[1].class, Some(RequestClass::Chat)); // "copy"
     }
 
     #[test]

@@ -33,7 +33,14 @@ fn sample_request(id: u64) -> Request {
     let t = Tokenizer::builtin();
     let mut prompt = t.encode("tr: nene caka", true).unwrap();
     prompt.push(specedge::tokenizer::SEP_ID);
-    Request { id, task: "translate".into(), prompt, truth: String::new(), arrival_s: 0.0 }
+    Request {
+        id,
+        task: "translate".into(),
+        prompt,
+        truth: String::new(),
+        arrival_s: 0.0,
+        class: None,
+    }
 }
 
 #[test]
@@ -183,7 +190,7 @@ fn mixed_request(id: u64) -> Request {
     let mut prompt = t.encode("tr: nene caka", true).unwrap();
     prompt.push(specedge::tokenizer::SEP_ID);
     let task = if id % 2 == 0 { "translate" } else { "hard-task" };
-    Request { id, task: task.into(), prompt, truth: String::new(), arrival_s: 0.0 }
+    Request { id, task: task.into(), prompt, truth: String::new(), arrival_s: 0.0, class: None }
 }
 
 fn poison_hard_task(coord: &Coordinator) {

@@ -188,6 +188,7 @@ fn run_coord(cfg: RunConfig, n: usize) -> (Vec<Vec<u32>>, specedge::metrics::Rep
                 prompt,
                 truth: String::new(),
                 arrival_s: 0.0,
+                class: None,
             })
         })
         .collect();

@@ -34,7 +34,14 @@ fn sample_request(id: u64, text: &str) -> Request {
     let t = Tokenizer::builtin();
     let mut prompt = t.encode(text, true).unwrap();
     prompt.push(specedge::tokenizer::SEP_ID);
-    Request { id, task: "translate".into(), prompt, truth: String::new(), arrival_s: 0.0 }
+    Request {
+        id,
+        task: "translate".into(),
+        prompt,
+        truth: String::new(),
+        arrival_s: 0.0,
+        class: None,
+    }
 }
 
 const PROMPTS: [&str; 3] = ["tr: nene caka", "tr: bobo lulu", "tr: kaka nene didi"];

@@ -261,6 +261,7 @@ fn run_coord_with(cfg: RunConfig, n: usize) -> (Vec<Vec<u32>>, specedge::metrics
                 prompt,
                 truth: String::new(),
                 arrival_s: 0.0,
+                class: None,
             })
         })
         .collect();

@@ -191,6 +191,7 @@ fn run_coord(hetero_overlap: bool, n: usize) -> (Vec<Vec<u32>>, specedge::metric
                 prompt,
                 truth: String::new(),
                 arrival_s: 0.0,
+                class: None,
             })
         })
         .collect();

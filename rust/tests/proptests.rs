@@ -2,11 +2,16 @@
 //! offline). Each property runs over a few hundred seeded random cases;
 //! failures print the offending seed for reproduction.
 
+use specedge::api::SloClass;
 use specedge::costmodel;
 use specedge::coordinator::queue::{QueueItem, RequestQueue};
 use specedge::hetero::{LatencyModel, Mapping, Platform, PuAssignment, PuId};
 use specedge::kvcache::{NodeId, PageAllocator, PageId, PrefixCache};
 use specedge::models::{ModelSpec, Role, Scheme};
+use specedge::runtime::Manifest;
+use specedge::scenario::{
+    materialize, ArrivalProcess, ClassMix, RequestClass, ScenarioSpec, WorkloadTrace,
+};
 use specedge::spec::sampling::{
     greedy_accept_len, stochastic_accept, top1, top_k_into, tree_verify_node, NodeVerdict,
 };
@@ -341,6 +346,7 @@ fn prop_queue_never_exceeds_capacity() {
                     prompt: vec![1],
                     truth: String::new(),
                     arrival_s: 0.0,
+                    class: None,
                 }
                 .into(),
                 tx,
@@ -644,5 +650,140 @@ fn prop_placement_never_picks_a_shedding_device_when_avoidable() {
             .map(|(i, _)| i)
             .unwrap();
         assert_eq!(got.device, best);
+    });
+}
+
+// ---------- scenario trace properties ---------------------------------
+
+/// Manifest whose eval set covers every task in every class pool, so a
+/// generated trace can always be materialized regardless of which tasks
+/// the mix's classes draw.
+fn all_task_manifest() -> Manifest {
+    let mut samples = String::new();
+    for class in RequestClass::all() {
+        for task in class.task_pool() {
+            for (k, body) in ["abc def", "gh ij kl"].iter().enumerate() {
+                samples.push_str(&format!(
+                    r#"{{"task":"{task}","prompt":"{task} {k}: {body}","completion":"ok"}},"#
+                ));
+            }
+        }
+    }
+    samples.pop(); // trailing comma
+    let j = specedge::util::json::Json::parse(&format!(
+        r#"{{
+      "tokenizer": {{"specials":["<pad>","<bos>","<eos>","="],
+                    "chars":" abcdefghijklmnopqrstuvwxyz.,?!-0123456789:'",
+                    "vocab_size":48}},
+      "seq_buckets": [128], "batch_sizes": [1],
+      "models": {{
+        "target": {{"name":"target","n_layers":4,"d_model":128,"n_heads":4,
+                   "ffn_dim":352,"vocab":48,"param_count":816256}},
+        "drafter": {{"name":"drafter","n_layers":2,"d_model":96,"n_heads":4,
+                    "ffn_dim":256,"vocab":48,"param_count":230880}}
+      }},
+      "variants": {{
+        "drafter_fp": {{"role":"drafter","scheme":"fp","model":"drafter",
+          "weights":"w_dfp.bin","tensors":[],"artifacts":[]}},
+        "target_w8a8": {{"role":"target","scheme":"w8a8","model":"target",
+          "weights":"w_tq.bin","tensors":[],"artifacts":[]}}
+      }},
+      "monolithic": [],
+      "eval_samples": [{samples}]}}"#
+    ))
+    .unwrap();
+    Manifest::from_json(std::path::Path::new("/tmp"), &j).unwrap()
+}
+
+/// A randomized scenario spec: 1-4 distinct classes, random weights, α
+/// regimes, output-length bounds, SLOs and arrival process.
+fn rand_scenario(rng: &mut Rng, i: u64) -> ScenarioSpec {
+    let mut classes = RequestClass::all().to_vec();
+    rng.shuffle(&mut classes);
+    let n = 1 + rng.below(classes.len());
+    let mix = classes[..n]
+        .iter()
+        .map(|&class| {
+            let lo = 2 + rng.below(8);
+            ClassMix {
+                class,
+                weight: 0.1 + rng.f64(),
+                alpha: 0.2 + 0.7 * rng.f64(),
+                max_new: (lo, lo + rng.below(12)),
+                slo: if rng.f64() < 0.5 { SloClass::Interactive } else { SloClass::Batch },
+                deadline_s: if rng.f64() < 0.3 { Some(0.05 + rng.f64()) } else { None },
+            }
+        })
+        .collect();
+    let arrivals = match rng.below(3) {
+        0 => ArrivalProcess::Poisson { rate: 1.0 + rng.f64() * 20.0 },
+        1 => ArrivalProcess::Bursty {
+            base_rate: 1.0 + rng.f64() * 4.0,
+            burst_rate: 10.0 + rng.f64() * 30.0,
+            period_s: 2.0 + rng.f64() * 20.0,
+            burst_frac: 0.1 + rng.f64() * 0.6,
+        },
+        _ => ArrivalProcess::Diurnal {
+            base_rate: 2.0 + rng.f64() * 10.0,
+            amplitude: rng.f64() * 0.9,
+            period_s: 10.0 + rng.f64() * 60.0,
+        },
+    };
+    ScenarioSpec {
+        name: format!("prop_{i}"),
+        seed: rng.next_u64(),
+        requests: 4 + rng.below(40),
+        arrivals,
+        mix,
+    }
+}
+
+#[test]
+fn prop_scenario_generation_is_seed_deterministic() {
+    // Same spec (including seed) ⇒ byte-identical trace; a different
+    // seed moves the trace (the first arrival gap is an f64 exponential
+    // draw, so a cross-seed collision over the whole trace is ~2^-52).
+    forall("scenario generation deterministic", 150, |rng, i| {
+        let spec = rand_scenario(rng, i);
+        let a = spec.generate();
+        let b = spec.generate();
+        assert_eq!(a, b);
+        assert_eq!(a.to_jsonl(), b.to_jsonl());
+        assert_eq!(a.entries.len(), spec.requests);
+        let other = ScenarioSpec { seed: spec.seed ^ 1, ..spec.clone() }.generate();
+        assert_ne!(a, other, "seed {} and {} collided", spec.seed, spec.seed ^ 1);
+        // Every entry's class is one of the mix's, with a task from its pool.
+        for e in &a.entries {
+            assert!(spec.mix.iter().any(|m| m.class == e.class));
+            assert_eq!(RequestClass::for_task(&e.task), Some(e.class));
+        }
+    });
+}
+
+#[test]
+fn prop_trace_save_load_replays_identically() {
+    // The replay contract: save → load is the identity on traces, the
+    // serialization is a fixed point, and materializing the reloaded
+    // trace yields bit-identical prompts/arrivals to the original.
+    let m = all_task_manifest();
+    let tok = Tokenizer::builtin();
+    forall("trace save/load replay", 60, |rng, i| {
+        let trace = rand_scenario(rng, i).generate();
+        let path = std::env::temp_dir()
+            .join(format!("specedge_prop_trace_{}_{i}.jsonl", std::process::id()));
+        trace.save(&path).unwrap();
+        let loaded = WorkloadTrace::load(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(loaded, trace);
+        assert_eq!(loaded.to_jsonl(), trace.to_jsonl());
+        let w1 = materialize(&trace, &m, &tok).unwrap();
+        let w2 = materialize(&loaded, &m, &tok).unwrap();
+        assert_eq!(w1.requests.len(), w2.requests.len());
+        for (a, b) in w1.requests.iter().zip(&w2.requests) {
+            assert_eq!(a.prompt, b.prompt, "replay tokens drifted");
+            assert_eq!(a.task, b.task);
+            assert_eq!(a.class, b.class);
+            assert_eq!(a.arrival_s.to_bits(), b.arrival_s.to_bits());
+        }
     });
 }

@@ -1,0 +1,279 @@
+//! Scenario-subsystem end-to-end tests at the decision level: generated
+//! traces are decoded against a live [`Policy`] (admission consult, per
+//! round re-consults, tagged retire feedback), with acceptances drawn
+//! from each entry's true α regime. Covers the two scenario milestones
+//! the unit tests can't: a two-class trace driving one policy to
+//! *divergent* per-class drafter/γ decisions, and the single-class trace
+//! under `drafter: fixed` staying bit-identical through the
+//! drafter-aware route surface and the pre-registry one.
+
+use specedge::api::SloClass;
+use specedge::config::{DecisionMode, DrafterMode, RunConfig, TreeChoice};
+use specedge::decision::{Policy, SpecHints};
+use specedge::hetero::{Mapping, Platform};
+use specedge::models::{ModelSpec, Scheme, VariantKey};
+use specedge::runtime::Manifest;
+use specedge::scenario::{
+    ArrivalProcess, ClassMix, DrafterRegistry, RequestClass, ScenarioSpec, TraceEntry,
+    WorkloadTrace,
+};
+use specedge::util::json::Json;
+use specedge::util::rng::Rng;
+
+/// Inline manifest with both drafter bodies — the registry source.
+fn registry_manifest() -> Manifest {
+    let j = Json::parse(
+        r#"{
+      "tokenizer": {"specials":["<pad>","<bos>","<eos>","="],
+                    "chars":" abcdefghijklmnopqrstuvwxyz.,?!-0123456789:'",
+                    "vocab_size":48},
+      "seq_buckets": [128], "batch_sizes": [1],
+      "models": {
+        "target": {"name":"target","n_layers":4,"d_model":128,"n_heads":4,
+                   "ffn_dim":352,"vocab":48,"param_count":816256},
+        "drafter": {"name":"drafter","n_layers":2,"d_model":96,"n_heads":4,
+                    "ffn_dim":256,"vocab":48,"param_count":230880}
+      },
+      "variants": {
+        "drafter_fp": {"role":"drafter","scheme":"fp","model":"drafter",
+          "weights":"w_dfp.bin","tensors":[],"artifacts":[]},
+        "drafter_w8a8": {"role":"drafter","scheme":"w8a8","model":"drafter",
+          "weights":"w_dq.bin","tensors":[],"artifacts":[]},
+        "target_w8a8": {"role":"target","scheme":"w8a8","model":"target",
+          "weights":"w_tq.bin","tensors":[],"artifacts":[]}
+      },
+      "monolithic": [], "eval_samples": []}"#,
+    )
+    .unwrap();
+    Manifest::from_json(std::path::Path::new("/tmp"), &j).unwrap()
+}
+
+fn specs() -> (ModelSpec, ModelSpec) {
+    (
+        ModelSpec {
+            name: "drafter".into(),
+            n_layers: 2,
+            d_model: 96,
+            n_heads: 4,
+            ffn_dim: 256,
+            vocab: 48,
+            param_count: 230_880,
+        },
+        ModelSpec {
+            name: "target".into(),
+            n_layers: 4,
+            d_model: 128,
+            n_heads: 4,
+            ffn_dim: 352,
+            vocab: 48,
+            param_count: 816_256,
+        },
+    )
+}
+
+/// The 3-core homogeneous operating point (same as `experiment
+/// scenarios`): heterogeneous mappings price out and the w8a8 target
+/// keeps GPU mappings quantization-filtered, so drafter choice is the
+/// live decision.
+fn operating_cfg(drafter: DrafterMode) -> RunConfig {
+    RunConfig {
+        design_variant: 3,
+        heterogeneous: false,
+        decision: DecisionMode::Analytic,
+        tree: TreeChoice::Off,
+        speculative: true,
+        gamma: None,
+        repartition_every: 8,
+        drafter,
+        ..RunConfig::default()
+    }
+}
+
+/// True per-drafter acceptance rate of one entry: fp drafts at the α
+/// regime; quantized drafts keep it on the conversational classes but
+/// collapse on the extractive ones (mirrors `experiment scenarios`).
+fn true_alpha(e: &TraceEntry, scheme: Scheme) -> f64 {
+    let quant = match e.class {
+        RequestClass::Chat | RequestClass::Translate => 1.0,
+        RequestClass::Summarize => 0.40,
+        RequestClass::CodeComplete => 0.50,
+    };
+    match scheme {
+        Scheme::Fp => e.alpha_regime,
+        Scheme::W8a8 => (e.alpha_regime * quant).min(0.98),
+    }
+}
+
+/// Decode every trace entry against `policy`, drawing acceptances from
+/// the entry's true α under the session's drafter (seeded per entry, so
+/// the same trace always replays identically). `legacy` drives the
+/// pre-registry route/observe surface. Returns the full decision trail
+/// plus the produced-token total — the bit-parity fingerprint.
+fn decode(
+    policy: &Policy,
+    d: &ModelSpec,
+    t: &ModelSpec,
+    trace: &WorkloadTrace,
+    legacy: bool,
+) -> (Vec<(usize, bool, Mapping)>, u64) {
+    let hints = SpecHints::default();
+    let mut trail = Vec::new();
+    let mut tokens = 0u64;
+    for e in &trace.entries {
+        let dk = if legacy { policy.variants().0 } else { policy.drafter_for(&e.task) };
+        let adm = if legacy {
+            policy.route_with(&e.task, d, t, 63, hints)
+        } else {
+            policy.route_with_drafter(&e.task, dk, d, t, 63, hints)
+        };
+        let mapping = adm.mapping;
+        let alpha = true_alpha(e, dk.scheme);
+        let mut rng = Rng::new(trace.seed ^ e.id.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let (mut produced, mut drafted, mut accepted) = (0usize, 0usize, 0usize);
+        while produced < e.max_new {
+            let sa = if drafted == 0 {
+                f64::NAN
+            } else {
+                accepted as f64 / drafted as f64
+            };
+            let dec = if legacy {
+                policy.route_round_with(&e.task, d, t, mapping, 63, drafted, sa, hints)
+            } else {
+                policy.route_round_with_drafter(
+                    &e.task, dk, d, t, mapping, 63, drafted, sa, hints,
+                )
+            };
+            trail.push((dec.gamma, dec.speculative, dec.mapping));
+            if dec.speculative && dec.gamma > 0 {
+                let mut acc = 0;
+                for _ in 0..dec.gamma {
+                    if rng.f64() < alpha {
+                        acc += 1;
+                    } else {
+                        break;
+                    }
+                }
+                drafted += dec.gamma;
+                accepted += acc;
+                produced += acc + 1;
+                let obs = acc as f64 / dec.gamma as f64;
+                if legacy {
+                    policy.observe_alpha(&e.task, obs);
+                } else {
+                    policy.observe_alpha_tagged(&e.task, dk, obs);
+                }
+            } else {
+                produced += 1;
+            }
+        }
+        tokens += produced as u64;
+    }
+    (trail, tokens)
+}
+
+fn two_class_spec() -> ScenarioSpec {
+    let mix = |class, alpha| ClassMix {
+        class,
+        weight: 0.5,
+        alpha,
+        max_new: (12, 24),
+        slo: SloClass::Interactive,
+        deadline_s: None,
+    };
+    ScenarioSpec {
+        name: "e2e_two_class".into(),
+        seed: 0xE2E,
+        requests: 160,
+        arrivals: ArrivalProcess::Poisson { rate: 8.0 },
+        mix: vec![
+            mix(RequestClass::Translate, 0.90),
+            mix(RequestClass::Summarize, 0.45),
+        ],
+    }
+}
+
+#[test]
+fn two_class_trace_settles_classes_on_divergent_drafters() {
+    let (d, t) = specs();
+    let policy = Policy::new(&operating_cfg(DrafterMode::Auto), Platform::imx95()).unwrap();
+    policy.set_drafter_registry(DrafterRegistry::from_manifest(&registry_manifest()).unwrap());
+    let trace = two_class_spec().generate();
+    assert_eq!(trace.class_count(), 2);
+    decode(&policy, &d, &t, &trace, false);
+
+    // Translate keeps its acceptances through quantization, so the
+    // cheaper w8a8 body wins; summarize's collapse drives it back to fp.
+    let fp = VariantKey::parse("drafter_fp").unwrap();
+    let q = VariantKey::parse("drafter_w8a8").unwrap();
+    assert_eq!(policy.chosen_drafter(RequestClass::Translate), Some(q));
+    assert_eq!(policy.chosen_drafter(RequestClass::Summarize), Some(fp));
+    assert_eq!(policy.drafter_for("translate"), q);
+    assert_eq!(policy.drafter_for("initials"), fp);
+
+    // The classes genuinely decide differently within the one run:
+    // different drafter AND different γ at the settled state.
+    let hints = SpecHints::default();
+    let dec_tr = policy.route_with_drafter("translate", q, &d, &t, 63, hints);
+    let dec_su = policy.route_with_drafter("initials", fp, &d, &t, 63, hints);
+    assert!(dec_tr.speculative, "{dec_tr:?}");
+    assert_ne!(dec_tr.gamma, dec_su.gamma, "{dec_tr:?} vs {dec_su:?}");
+}
+
+#[test]
+fn single_class_fixed_trace_is_bit_identical_to_pre_registry_paths() {
+    // The parity milestone: under `drafter: fixed` the drafter-aware
+    // surface (what the worker now calls) must reproduce the historical
+    // route/observe path decision-for-decision on a single-class trace.
+    let (d, t) = specs();
+    let spec = ScenarioSpec {
+        name: "e2e_parity".into(),
+        seed: 7,
+        requests: 80,
+        arrivals: ArrivalProcess::Poisson { rate: 8.0 },
+        mix: vec![ClassMix {
+            class: RequestClass::Translate,
+            weight: 1.0,
+            alpha: 0.90,
+            max_new: (12, 24),
+            slo: SloClass::Interactive,
+            deadline_s: None,
+        }],
+    };
+    let trace = spec.generate();
+    let legacy = Policy::new(&operating_cfg(DrafterMode::Fixed), Platform::imx95()).unwrap();
+    let tagged = Policy::new(&operating_cfg(DrafterMode::Fixed), Platform::imx95()).unwrap();
+    let (trail_a, tokens_a) = decode(&legacy, &d, &t, &trace, true);
+    let (trail_b, tokens_b) = decode(&tagged, &d, &t, &trace, false);
+    assert_eq!(trail_a, trail_b);
+    assert_eq!(tokens_a, tokens_b);
+    for task in ["translate", "translate-rev"] {
+        assert_eq!(
+            legacy.alpha_estimate(task).to_bits(),
+            tagged.alpha_estimate(task).to_bits(),
+            "task {task} α estimate drifted"
+        );
+    }
+    // Fixed mode accumulated no per-class selection state on either leg.
+    for c in RequestClass::all() {
+        assert_eq!(tagged.chosen_drafter(c), None);
+    }
+}
+
+#[test]
+fn saved_trace_replays_the_same_decision_trail() {
+    // Replay determinism end to end: decoding the serialized-and-reloaded
+    // trace on a fresh policy reproduces the decision trail and token
+    // count of the original bit-for-bit.
+    let (d, t) = specs();
+    let trace = two_class_spec().generate();
+    let reloaded = WorkloadTrace::from_jsonl(&trace.to_jsonl()).unwrap();
+    let run = |tr: &WorkloadTrace| {
+        let p = Policy::new(&operating_cfg(DrafterMode::Auto), Platform::imx95()).unwrap();
+        p.set_drafter_registry(DrafterRegistry::from_manifest(&registry_manifest()).unwrap());
+        decode(&p, &d, &t, tr, false)
+    };
+    let (trail_a, tokens_a) = run(&trace);
+    let (trail_b, tokens_b) = run(&reloaded);
+    assert_eq!(trail_a, trail_b);
+    assert_eq!(tokens_a, tokens_b);
+}
